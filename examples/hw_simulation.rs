@@ -1,0 +1,43 @@
+//! Figs 13–15: ModelSim-style traces from the cycle-accurate simulator —
+//! the non-pipelined extraction of أفاستسقيناكموها (Fig 13) and فتزحزحت
+//! (Fig 14), and the pipelined stream where roots appear after the fifth
+//! cycle and then every cycle (Fig 15). Also prints Table 4's physical
+//! report for both cores.
+//!
+//! ```bash
+//! cargo run --release --example hw_simulation
+//! ```
+
+use ama::hw::area::Organization;
+use ama::hw::{DatapathConfig, PhysicalModel};
+use ama::report;
+use ama::roots::RootSet;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let roots = if Path::new("data/roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(Path::new("data"))?)
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    };
+
+    print!("{}", report::figure_traces(&roots));
+
+    println!("\nTable 4 — physical model:");
+    let m = PhysicalModel::new(DatapathConfig { infix_units: false });
+    for org in [Organization::NonPipelined, Organization::Pipelined] {
+        let r = m.report(org);
+        println!(
+            "  {:?}: Fmax {:.2} MHz | {} ALUTs ({:.0}%) | {} LRs | {:.2} mW | structural {:.1} MHz",
+            org,
+            r.fmax_mhz,
+            r.luts,
+            100.0 * r.lut_utilization,
+            r.lregs,
+            r.power_mw,
+            r.fmax_structural_mhz,
+        );
+    }
+    Ok(())
+}

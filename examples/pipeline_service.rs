@@ -1,0 +1,85 @@
+//! Serving example: start the coordinator + TCP server, drive it with a
+//! concurrent client workload, and report serving latency/throughput —
+//! the "NLP processor embedded in applications" scenario the paper's
+//! objective 3 motivates.
+//!
+//! ```bash
+//! cargo run --release --example pipeline_service
+//! ```
+
+use ama::coordinator::{Coordinator, CoordinatorConfig, SoftwareBackend};
+use ama::corpus::{self, CorpusConfig};
+use ama::roots::RootSet;
+use ama::server::Server;
+use ama::stemmer::Stemmer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let roots = if Path::new("data/roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(Path::new("data"))?)
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    };
+
+    // Coordinator: 2 workers, dynamic batching.
+    let r2 = roots.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, max_batch: 128, ..Default::default() },
+        Box::new(move |_| Ok(Box::new(SoftwareBackend(Stemmer::with_defaults(r2.clone()))))),
+    );
+
+    // TCP server on an ephemeral port.
+    let server = Server::bind("127.0.0.1:0", coord.handle())?;
+    let addr = server.local_addr()?;
+    let stop = server.stop_flag();
+    let srv = std::thread::spawn(move || server.serve_forever());
+    println!("serving on {addr}");
+
+    // Client workload: 4 concurrent connections, 2,000 words each.
+    let c = corpus::generate(&roots, &CorpusConfig::small(8000, 21));
+    let words: Vec<String> = c.tokens.iter().map(|t| t.word.to_string_ar()).collect();
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for chunk in words.chunks(2000) {
+        let chunk = chunk.to_vec();
+        clients.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut conn = TcpStream::connect(addr)?;
+            conn.set_nodelay(true)?; // see server.rs — Nagle kills ping-pong
+            let mut reader = BufReader::new(conn.try_clone()?);
+            let mut ok = 0;
+            for w in &chunk {
+                writeln!(conn, "{w}")?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                if line.split('\t').count() == 4 {
+                    ok += 1;
+                }
+            }
+            writeln!(conn)?; // close
+            Ok(ok)
+        }));
+    }
+    let mut total = 0;
+    for t in clients {
+        total += t.join().unwrap()?;
+    }
+    let dt = t0.elapsed();
+
+    let snap = coord.metrics().snapshot();
+    println!(
+        "served {total} requests in {dt:.2?} -> {:.0} req/s over TCP",
+        total as f64 / dt.as_secs_f64()
+    );
+    println!("coordinator: {snap}");
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr); // unblock accept
+    srv.join().unwrap()?;
+    coord.shutdown();
+    Ok(())
+}

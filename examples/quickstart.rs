@@ -1,0 +1,63 @@
+//! Quickstart: extract Arabic verb roots three ways in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ama::chars::ArabicWord;
+use ama::hw::{DatapathConfig, PipelinedProcessor, Processor};
+use ama::roots::RootSet;
+use ama::stemmer::Stemmer;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the root dictionaries (falls back to a built-in mini set).
+    let roots = if Path::new("data/roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(Path::new("data"))?)
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    };
+    println!("dictionary: {} roots", roots.total());
+
+    // 2. The software LB stemmer (the paper's algorithm, §3.1 + §6.3).
+    let stemmer = Stemmer::with_defaults(roots.clone());
+    for s in ["سيلعبون", "أفاستسقيناكموها", "فتزحزحت", "قال", "كاتب"] {
+        let w = ArabicWord::encode(s);
+        let r = stemmer.stem(&w);
+        println!("{s:<20} -> {:<6} ({:?}, cut {})", r.root_word().to_string_ar(), r.kind, r.cut);
+    }
+
+    // 3. The same words through the cycle-accurate pipelined FPGA
+    //    simulator — bit-identical results, plus cycle accounting.
+    let words: Vec<ArabicWord> =
+        ["سيلعبون", "قال", "كاتب"].iter().map(|s| ArabicWord::encode(s)).collect();
+    let mut proc = PipelinedProcessor::new(roots.clone(), DatapathConfig { infix_units: true });
+    let (results, stats) = proc.run(&words);
+    println!(
+        "\npipelined simulator: {} words in {} cycles @ {:.2} MHz (model: {:.2} MWps sustained)",
+        stats.words,
+        stats.cycles,
+        proc.fmax_mhz(),
+        proc.throughput_wps(1_000_000) / 1e6
+    );
+    for (w, r) in words.iter().zip(&results) {
+        println!("  {w} -> {}", r.root_word());
+    }
+
+    // 4. The AOT JAX/Pallas artifact through PJRT, if built.
+    let artifacts = ama::runtime::default_artifacts_dir();
+    if artifacts.join("stemmer_b1.hlo.txt").exists() {
+        let engine = ama::runtime::Engine::load(&artifacts, &roots)?;
+        let res = engine.stem_chunk(&words)?;
+        println!("\npjrt engine (AOT JAX/Pallas): ");
+        for (w, r) in words.iter().zip(&res) {
+            println!("  {w} -> {}", r.root_word());
+        }
+        assert_eq!(res, results, "PJRT and simulator must agree");
+        println!("  (bit-identical to the simulator)");
+    } else {
+        println!("\n(run `make artifacts` to also exercise the PJRT path)");
+    }
+    Ok(())
+}

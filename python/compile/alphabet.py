@@ -1,0 +1,150 @@
+"""Shared Arabic alphabet constants for the L1/L2 build path.
+
+Single source of truth on the python side; must agree exactly with
+``rust/src/chars.rs`` (the rust test-suite cross-checks the generated
+artifacts against these semantics).
+
+The paper (Damaj et al., §3.1, §5.2) processes 16-bit Arabic Unicode,
+strips diacritics, ignores the hamza-alef distinction, and fixes the
+datapath at 15 characters.
+"""
+
+# --- geometry (paper's register file) -------------------------------------
+MAX_WORD = 15      # longest Arabic word: أفاستسقيناكموها
+MAX_PREFIX = 5     # 5 prefix registers in the datapath
+MAX_SUFFIX = 9     # at most 9 suffix characters
+NUM_CUTS = 6       # prefix cut index p ∈ 0..=5
+PAD = 0
+
+# --- codepoints ------------------------------------------------------------
+HAMZA = 0x0621
+ALEF_MADDA = 0x0622
+ALEF_HAMZA_ABOVE = 0x0623
+WAW_HAMZA = 0x0624
+ALEF_HAMZA_BELOW = 0x0625
+YEH_HAMZA = 0x0626
+ALEF = 0x0627
+BEH = 0x0628
+TEH_MARBUTA = 0x0629
+TEH = 0x062A
+THEH = 0x062B
+JEEM = 0x062C
+HAH = 0x062D
+KHAH = 0x062E
+DAL = 0x062F
+THAL = 0x0630
+REH = 0x0631
+ZAIN = 0x0632
+SEEN = 0x0633
+SHEEN = 0x0634
+SAD = 0x0635
+DAD = 0x0636
+TAH = 0x0637
+ZAH = 0x0638
+AIN = 0x0639
+GHAIN = 0x063A
+FEH = 0x0641
+QAF = 0x0642
+KAF = 0x0643
+LAM = 0x0644
+MEEM = 0x0645
+NOON = 0x0646
+HEH = 0x0647
+WAW = 0x0648
+ALEF_MAKSURA = 0x0649
+YEH = 0x064A
+
+# The seven prefix letters (فسألتني), Fig. 3's VHDL constant — plus bare
+# ALEF because normalization collapses أ→ا before the datapath sees it.
+PREFIX_LETTERS = (ALEF_HAMZA_ABOVE, TEH, SEEN, FEH, LAM, NOON, YEH, ALEF)
+
+# The nine suffix letters (covers every suffix in the paper's examples).
+SUFFIX_LETTERS = (ALEF, TEH, HEH, KAF, MEEM, WAW, NOON, YEH, TEH_MARBUTA)
+
+# The five infix letters (focus on the vowels ا و ي).
+INFIX_LETTERS = (ALEF, WAW, YEH, TEH, NOON)
+
+# --- dense alphabet for the one-hot matcher --------------------------------
+ALPHABET_SIZE = 37  # 36 letters + PAD(0)
+
+
+def char_index(c: int) -> int:
+    """Dense index 1..=36 for Arabic letters, 0 for PAD/other.
+
+    Mirrors ``chars::char_index`` in rust.
+    """
+    if 0x0621 <= c <= 0x063A:
+        return c - 0x0621 + 1
+    if 0x0641 <= c <= 0x064A:
+        return c - 0x0641 + 27
+    return 0
+
+
+def index_char(i: int) -> int:
+    if 1 <= i <= 26:
+        return 0x0621 + i - 1
+    if 27 <= i <= 36:
+        return 0x0641 + i - 27
+    return PAD
+
+
+def normalize_char(c: int) -> int:
+    """Hamza-carrier alefs → bare alef; alef maksura → yeh."""
+    if c in (ALEF_MADDA, ALEF_HAMZA_ABOVE, ALEF_HAMZA_BELOW):
+        return ALEF
+    if c == ALEF_MAKSURA:
+        return YEH
+    return c
+
+
+def is_diacritic(c: int) -> bool:
+    return 0x064B <= c <= 0x0652 or c == 0x0670
+
+
+def encode_word(s: str) -> tuple[list[int], int]:
+    """String → (15 padded codepoints, length); mirrors ArabicWord::encode."""
+    out = []
+    for ch in s:
+        c = ord(ch)
+        if c > 0xFFFF or is_diacritic(c) or c == 0x0640:
+            continue
+        out.append(normalize_char(c))
+        if len(out) == MAX_WORD:
+            break
+    codes = out + [PAD] * (MAX_WORD - len(out))
+    return codes, len(out)
+
+
+# --- dictionary geometry (runtime-input shapes) -----------------------------
+R2, R3, R4 = 256, 2048, 512
+
+# --- match kinds (model output flag) ----------------------------------------
+KIND_NONE = 0
+KIND_TRI = 1          # direct trilateral match
+KIND_QUAD = 2         # direct quadrilateral match
+KIND_RMINFIX_TRI = 3  # quad stem, infix 2nd char removed → trilateral root
+KIND_RMINFIX_BI = 4   # tri stem, infix 2nd char removed → bilateral root
+KIND_RESTORED = 5     # tri stem, 2nd char ا→و (hollow verb) → trilateral
+
+# --- direct-mapped dictionary bitmaps (the block-RAM lookup formulation) ---
+# key(stem) = Σ char_index(c_k)·37^(L-1-k); bitmap[key] == 1 iff root.
+BITMAP2 = ALPHABET_SIZE**2   # 1,369
+BITMAP3 = ALPHABET_SIZE**3   # 50,653
+BITMAP4 = ALPHABET_SIZE**4   # 1,874,161
+
+
+def stem_key(codes) -> int:
+    """Polynomial key of a stem (python reference for tests)."""
+    k = 0
+    for c in codes:
+        k = k * ALPHABET_SIZE + char_index(c)
+    return k
+
+
+def build_bitmap(roots, length) -> "list[int]":
+    """Dense membership bitmap for a root set (tuples of codepoints)."""
+    bm = [0] * (ALPHABET_SIZE**length)
+    for r in roots:
+        assert len(r) == length
+        bm[stem_key(r)] = 1
+    return bm

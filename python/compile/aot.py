@@ -1,0 +1,105 @@
+"""AOT lowering: JAX model → HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` from ``python/``
+(or via ``make artifacts``). Python runs ONCE, at build time; the rust
+binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import alphabet as ab
+from .kernels.match import match
+from .model import make_stemmer
+
+#: batch sizes baked into artifacts; the coordinator picks the best fit.
+BATCH_SIZES = (1, 32, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stemmer(batch: int) -> str:
+    fn, shapes = make_stemmer(batch)
+    return to_hlo_text(fn.lower(*shapes))
+
+
+def lower_match_micro(m: int = 1536, r: int = ab.R3, length: int = 3) -> str:
+    """Kernel-only artifact for the L1 microbenchmark."""
+    fn = jax.jit(lambda s, d: (match(s, d),))
+    lowered = fn.lower(
+        jax.ShapeDtypeStruct((m, length), jnp.int32),
+        jax.ShapeDtypeStruct((r, length), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--batches", default=",".join(map(str, BATCH_SIZES)),
+        help="comma-separated stemmer batch sizes",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "alphabet": ab.ALPHABET_SIZE,
+        "max_word": ab.MAX_WORD,
+        "dict_shapes": {"bitmap2": ab.BITMAP2, "bitmap3": ab.BITMAP3, "bitmap4": ab.BITMAP4},
+        "artifacts": {},
+    }
+
+    for b in (int(x) for x in args.batches.split(",")):
+        text = lower_stemmer(b)
+        name = f"stemmer_b{b}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "kind": "stemmer",
+            "batch": b,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    text = lower_match_micro()
+    path = os.path.join(args.out_dir, "match_micro.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"]["match_micro.hlo.txt"] = {
+        "kind": "match_micro",
+        "m": 1536,
+        "r": ab.R3,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "bytes": len(text),
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

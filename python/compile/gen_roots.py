@@ -1,0 +1,147 @@
+"""Generate the root dictionaries under ``data/``.
+
+The paper validates stems against "stored Arabic verb roots" (1,767 roots
+are extractable from the Holy Quran text). We build the dictionary from:
+
+* a curated list of real, high-frequency Arabic verb roots — including all
+  ten Table-7 roots with their Quran frequencies pinned by the corpus
+  generator — plus real quadrilaterals and bilaterals (geminated verbs);
+* a deterministic synthetic expansion to the paper's 1,767-root count,
+  generated with splitmix64 so the file is bit-identical on every run.
+
+One root per line, UTF-8, normalized (hamza-alefs collapsed, no
+diacritics). Deterministic: ``make artifacts`` regenerates identical files.
+"""
+
+import os
+
+from . import alphabet as ab
+
+# --- real root seed lists ---------------------------------------------------
+
+TRILATERAL = """
+كتب درس علم قول كون فعل جعل خلق عمل كفر نزل نفس كذب سقي لعب ذهب شرب سمع بصر
+نظر حسب حمل حكم ظلم غفر رحم سجد صبر شكر صدق وعد خرج دخل نصر ضرب قتل رزق خوف
+عبد ملك هلك سلم قدر قضي هدي ضلل وقي فتح كسب طلب وجد عرف فهم بلغ تبع جمع فرق
+قطع وصل رجع وقف جلس قعد نوم قوم صوم زرع حصد بني هدم رفع خفض وضع اخذ ترك بدا
+ختم عود سير طير بيع موت عيش ذكر نسي حفظ كشف ستر ظهر بطن دعو ودد كره غضب رضي
+فرح حزن ضحك بكي مشي جري سبح غرق نجو هرب لحق سبق امن شرك وحد عدل صلح فسد نفع
+زيد نقص كمل بقي فني دوم زول حيي ولد كبر صغر طول قصر وسع ضيق سهل صعب يسر عسر
+قرب بعد جهل حلم عقل جنن مرض شفي طبخ خبز لبس خلع غسل نظف فقر غني ربح خسر تجر
+شري دفع قبض بسط مدد شدد ظنن عدد حدد جدد قصص مسس ردد صبب حجج دلل ذلل عزز غرر
+قرر مرر ضمم همم حبب تمم حقق حلل خفف درر ذمم سدد شقق صفف نزع خشع خضع طمع قنع
+ركع نبا سال جوب حور نور سرج وهج لمع برق رعد مطر ثلج برد حرر سخن دفا روح نفخ
+نفث عطس سعل شهق زفر صرخ همس نطق لفظ عبر شرح فصل وجز طنب سهب خطب وعظ نصح غشش
+""".split()
+
+BILATERAL = """
+مد شد ظن عد حد جد قص مس رد صب حج دل ذل عز غر قر مر ضم هم حب تم حق حل خف در
+ذم سد شق صف ضل
+""".split()
+
+QUADRILATERAL = """
+دحرج زلزل ترجم وسوس بعثر طمان عربد قهقه زحزح حملق دغدغ برهن سيطر هرول بعزق
+غرغر ثرثر تمتم همهم لملم كركر قرقر عسعس وشوش خشخش صلصل جلجل حصحص كبكب ذبذب
+""".split()
+
+# target counts — paper: 1,767 roots extractable from the Quran text
+N_TRI, N_QUAD, N_BI = 1600, 127, 40
+
+# consonant pool for synthetic roots: strong consonants plus a sprinkle of
+# affix letters (ت ن س ل ف) so synthetic roots exhibit the same
+# prefix/suffix ambiguity real Arabic roots do.
+_POOL = [
+    ab.BEH, ab.JEEM, ab.HAH, ab.KHAH, ab.DAL, ab.THAL, ab.REH, ab.ZAIN,
+    ab.SHEEN, ab.SAD, ab.DAD, ab.TAH, ab.ZAH, ab.AIN, ab.GHAIN, ab.QAF,
+    ab.KAF, ab.MEEM, ab.HEH, ab.THEH, ab.TEH, ab.NOON, ab.SEEN, ab.LAM,
+    ab.FEH,
+]
+
+
+def _splitmix64(state: int):
+    state = (state + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return state, z ^ (z >> 31)
+
+
+def _norm(word: str) -> tuple:
+    codes, n = ab.encode_word(word)
+    return tuple(codes[:n])
+
+
+def _synth(existing: set, count: int, length: int, seed: int) -> list:
+    out, state = [], seed
+    while len(out) < count:
+        state, z = _splitmix64(state)
+        cs = []
+        for k in range(length):
+            cs.append(_POOL[(z >> (8 * k)) % len(_POOL)])
+        # no immediate repeats except the classic geminate C1C2C2 shape
+        if length >= 2 and cs[0] == cs[1]:
+            continue
+        if length == 4 and (cs[1] == cs[2] or cs[2] == cs[3]):
+            continue
+        t = tuple(cs)
+        if t in existing:
+            continue
+        existing.add(t)
+        out.append(t)
+    return out
+
+
+def build():
+    """Return (bi, tri, quad) lists of codepoint tuples, deterministic."""
+    tri = []
+    seen = set()
+    for w in TRILATERAL:
+        t = _norm(w)
+        assert len(t) == 3, f"bad trilateral {w!r} -> {t}"
+        if t not in seen:
+            seen.add(t)
+            tri.append(t)
+    tri += _synth(seen, N_TRI - len(tri), 3, seed=0x5EED_0003)
+
+    bi, seen2 = [], set()
+    for w in BILATERAL:
+        t = _norm(w)
+        assert len(t) == 2, f"bad bilateral {w!r}"
+        if t not in seen2:
+            seen2.add(t)
+            bi.append(t)
+    bi += _synth(seen2, N_BI - len(bi), 2, seed=0x5EED_0002)
+
+    quad, seen4 = [], set()
+    for w in QUADRILATERAL:
+        t = _norm(w)
+        assert len(t) == 4, f"bad quadrilateral {w!r}"
+        if t not in seen4:
+            seen4.add(t)
+            quad.append(t)
+    quad += _synth(seen4, N_QUAD - len(quad), 4, seed=0x5EED_0004)
+
+    assert len(tri) == N_TRI and len(quad) == N_QUAD and len(bi) == N_BI
+    assert len(tri) <= ab.R3 and len(quad) <= ab.R4 and len(bi) <= ab.R2
+    return bi, tri, quad
+
+
+def write(data_dir: str) -> None:
+    os.makedirs(data_dir, exist_ok=True)
+    bi, tri, quad = build()
+    for name, roots in (
+        ("roots_bilateral.txt", bi),
+        ("roots_trilateral.txt", tri),
+        ("roots_quadrilateral.txt", quad),
+    ):
+        path = os.path.join(data_dir, name)
+        with open(path, "w", encoding="utf-8") as f:
+            for t in roots:
+                f.write("".join(chr(c) for c in t) + "\n")
+        print(f"wrote {path} ({len(roots)} roots)")
+
+
+if __name__ == "__main__":
+    import sys
+
+    write(sys.argv[1] if len(sys.argv) > 1 else "../data")

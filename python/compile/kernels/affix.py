@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: the parallel affix-comparator array (paper Figs 6–7).
+
+The paper replicates ``checkPrefix`` seven-way over each of the first five
+characters and ``checkSuffix`` over all fifteen characters — 20 spatial
+comparator instances on the FPGA. The TPU re-expression is a vector-parallel
+membership test over a whole batch tile held in VMEM: one grid step does
+what the FPGA did for one word in one clock, for ``TB`` words at once.
+
+Always lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls); on a real TPU the same kernel tiles (TB, 15) int32 panels
+through VMEM and runs entirely on the VPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import alphabet as ab
+
+
+def _affix_kernel(words_ref, lengths_ref, pmask_ref, smask_ref):
+    w = words_ref[...]  # (TB, 15) int32
+    n = lengths_ref[...]  # (TB,) int32
+    pos = jax.lax.broadcasted_iota(jnp.int32, w.shape, 1)
+    in_word = pos < n[:, None]
+
+    p = jnp.zeros(w.shape, jnp.bool_)
+    for c in ab.PREFIX_LETTERS:  # 7(+1 normalized-alef) parallel comparators
+        p = p | (w == c)
+    s = jnp.zeros(w.shape, jnp.bool_)
+    for c in ab.SUFFIX_LETTERS:  # 9 parallel comparators
+        s = s | (w == c)
+
+    pmask_ref[...] = (p & in_word)[:, : ab.MAX_PREFIX].astype(jnp.int32)
+    smask_ref[...] = (s & in_word).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def affix_masks(words, lengths, block_b: int = 0):
+    """Prefix/suffix masks for a batch.
+
+    words: (B, 15) int32; lengths: (B,) int32.
+    Returns (pmask (B, 5) int32, smask (B, 15) int32).
+    """
+    b = words.shape[0]
+    tb = block_b or (b if b <= 256 else 256)
+    assert b % tb == 0, f"batch {b} not divisible by block {tb}"
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _affix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, ab.MAX_WORD), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, ab.MAX_PREFIX), lambda i: (i, 0)),
+            pl.BlockSpec((tb, ab.MAX_WORD), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, ab.MAX_PREFIX), jnp.int32),
+            jax.ShapeDtypeStruct((b, ab.MAX_WORD), jnp.int32),
+        ],
+        interpret=True,
+    )(jnp.asarray(words, jnp.int32), jnp.asarray(lengths, jnp.int32))

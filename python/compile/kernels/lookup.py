@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: direct-mapped dictionary lookup.
+
+The third formulation of the paper's Fig-8 comparator array, and the one
+closest to what an FPGA engineer would actually synthesize: the root store
+as a *block RAM* addressed by the stem itself. Each stem maps to a
+polynomial key over the dense 37-symbol alphabet
+(``key = ((i₁·37)+i₂)·37+i₃``) and membership is one gather from a dense
+bitmap — O(1) per stem instead of the O(R) comparator scan.
+
+Picked as the production formulation by the §Perf pass (EXPERIMENTS.md):
+on CPU it replaced ~28M integer compares per 256-word batch with ~4.6k
+gathers. On TPU the tri bitmap (50,653 × i32 ≈ 200 KB) sits comfortably in
+VMEM; the quad bitmap (1.87M × i32 ≈ 7.5 MB) fits modern VMEM but would be
+tiled or swapped for the `match` compare/matmul kernels on older parts —
+see DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import alphabet as ab
+from .match import _dense_index
+
+
+def _lookup_kernel(length, stems_ref, bitmap_ref, out_ref):
+    idx = _dense_index(stems_ref[...])  # (TM, L)
+    key = idx[:, 0]
+    for k in range(1, length):
+        key = key * ab.ALPHABET_SIZE + idx[:, k]
+    bm = bitmap_ref[...]
+    out_ref[...] = bm[key].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def lookup(stems, bitmap, block_m: int = 0):
+    """Dictionary membership via the direct-mapped bitmap.
+
+    stems: (M, L) int32 codepoints; bitmap: (37**L,) int32 0/1.
+    Returns (M,) int32 — 1 iff the stem is a dictionary root.
+    """
+    m, length = stems.shape
+    assert bitmap.shape == (ab.ALPHABET_SIZE**length,), bitmap.shape
+    tm = block_m or m  # whole batch per tile; gathers are cheap
+    assert m % tm == 0, f"M={m} not divisible by TM={tm}"
+    return pl.pallas_call(
+        functools.partial(_lookup_kernel, length),
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, length), lambda i: (i, 0)),
+            pl.BlockSpec(bitmap.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=True,
+    )(jnp.asarray(stems, jnp.int32), jnp.asarray(bitmap, jnp.int32))

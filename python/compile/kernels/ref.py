@@ -1,0 +1,115 @@
+"""Pure-jnp / pure-python oracles for the Pallas kernels and the model.
+
+Three levels of reference:
+
+* :func:`ref_affix_masks` — jnp oracle for ``kernels.affix``.
+* :func:`ref_match` — jnp oracle for ``kernels.match`` (dictionary
+  membership).
+* :func:`ref_stem_word` — plain-python single-word implementation of the
+  complete paper algorithm (candidate enumeration + dictionary compare +
+  both infix algorithms). This is the ground truth the JAX model, the rust
+  software stemmer and the rust HW simulator must all agree with.
+"""
+
+import jax.numpy as jnp
+
+from .. import alphabet as ab
+
+
+# --------------------------------------------------------------------------
+# jnp oracles
+# --------------------------------------------------------------------------
+
+def ref_affix_masks(words, lengths):
+    """Prefix/suffix letter masks, the parallel comparator array of Fig. 6/7.
+
+    words: (B, 15) int32, lengths: (B,) int32.
+    Returns (pmask (B,5) bool, smask (B,15) bool); positions >= len are
+    False in both (they are "U" registers in the paper's datapath).
+    """
+    words = jnp.asarray(words, jnp.int32)
+    pos = jnp.arange(ab.MAX_WORD, dtype=jnp.int32)[None, :]
+    in_word = pos < jnp.asarray(lengths, jnp.int32)[:, None]
+    p = jnp.zeros_like(words, dtype=bool)
+    for c in ab.PREFIX_LETTERS:
+        p = p | (words == c)
+    s = jnp.zeros_like(words, dtype=bool)
+    for c in ab.SUFFIX_LETTERS:
+        s = s | (words == c)
+    return (p & in_word)[:, : ab.MAX_PREFIX], s & in_word
+
+
+def ref_match(stems, roots):
+    """Dictionary membership: stems (..., L) int32 vs roots (R, L) int32.
+
+    Returns (...,) bool — True iff the stem equals some non-pad root row.
+    A root row is pad iff its first character is PAD.
+    """
+    stems = jnp.asarray(stems, jnp.int32)
+    roots = jnp.asarray(roots, jnp.int32)
+    real = roots[:, 0] != ab.PAD  # (R,)
+    eq = (stems[..., None, :] == roots[None, ...]).all(-1)  # (..., R)
+    return (eq & real).any(-1)
+
+
+# --------------------------------------------------------------------------
+# candidate enumeration (shared between oracle and model)
+# --------------------------------------------------------------------------
+
+def candidate_valid(codes, n, p, size):
+    """Is the window word[p:p+size] a valid stem candidate?
+
+    Shared semantics (DESIGN.md §6): the p prefix characters must all be
+    prefix letters, the trailing n-(p+size) characters must all be suffix
+    letters and number at most MAX_SUFFIX.
+    """
+    if p + size > n:
+        return False
+    if n - (p + size) > ab.MAX_SUFFIX:
+        return False
+    if any(codes[i] not in ab.PREFIX_LETTERS for i in range(p)):
+        return False
+    if any(codes[j] not in ab.SUFFIX_LETTERS for j in range(p + size, n)):
+        return False
+    return True
+
+
+def ref_stem_word(codes, n, roots2, roots3, roots4):
+    """Full single-word oracle. codes: list of 15 ints; n: length.
+
+    roots*: python sets of tuples.
+    Returns (root_tuple_padded_to_4, kind, p).
+    """
+    # Pass 1/2: direct trilateral then quadrilateral (paper Fig. 4), by
+    # ascending prefix cut.
+    for size, kind, dic in ((3, ab.KIND_TRI, roots3), (4, ab.KIND_QUAD, roots4)):
+        for p in range(ab.NUM_CUTS):
+            if candidate_valid(codes, n, p, size):
+                stem = tuple(codes[p : p + size])
+                if stem in dic:
+                    return stem + (ab.PAD,) * (4 - size), kind, p
+    # Pass 3: Remove Infix on quadrilateral stems → trilateral roots.
+    for p in range(ab.NUM_CUTS):
+        if candidate_valid(codes, n, p, 4):
+            stem = codes[p : p + 4]
+            if stem[1] in ab.INFIX_LETTERS:
+                red = (stem[0], stem[2], stem[3])
+                if red in roots3:
+                    return red + (ab.PAD,), ab.KIND_RMINFIX_TRI, p
+    # Pass 4: Remove Infix on trilateral stems → bilateral roots.
+    for p in range(ab.NUM_CUTS):
+        if candidate_valid(codes, n, p, 3):
+            stem = codes[p : p + 3]
+            if stem[1] in ab.INFIX_LETTERS:
+                red = (stem[0], stem[2])
+                if red in roots2:
+                    return red + (ab.PAD, ab.PAD), ab.KIND_RMINFIX_BI, p
+    # Pass 5: Restore Original Form (hollow verbs): 2nd char ا → و.
+    for p in range(ab.NUM_CUTS):
+        if candidate_valid(codes, n, p, 3):
+            stem = codes[p : p + 3]
+            if stem[1] == ab.ALEF:
+                res = (stem[0], ab.WAW, stem[2])
+                if res in roots3:
+                    return res + (ab.PAD,), ab.KIND_RESTORED, p
+    return (ab.PAD,) * 4, ab.KIND_NONE, 0

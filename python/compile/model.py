@@ -1,0 +1,172 @@
+"""L2: the complete LB stemmer as a fixed-shape batched JAX graph.
+
+This is the paper's five-stage processor expressed as dataflow:
+
+  stage 1  parallel affix comparators            → kernels.affix (Pallas)
+  stage 2  produce prefix/suffix cut validity    → cumulative ANDs (jnp)
+  stage 3  generate + filter stems               → static windows (jnp)
+  stage 4  compare against stored roots          → kernels.match (Pallas)
+  stage 5  extract root (priority select)        → masked argmin (jnp)
+
+plus the paper's two infix algorithms (§6.3) as extra stage-3/4 candidate
+streams: *Remove Infix* (2nd char dropped, quad→tri and tri→bi) and
+*Restore Original Form* (hollow verbs, 2nd char ا→و).
+
+Everything is static-shape so the graph AOT-lowers to a single HLO module
+per batch size; the rust runtime feeds `(words, lengths, roots2, roots3,
+roots4)` and reads `(root, kind, cut)` back. Dictionaries are runtime
+inputs, so the same artifact serves any dictionary of the agreed shape.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import alphabet as ab
+from .kernels.affix import affix_masks
+from .kernels.lookup import lookup
+
+#: number of candidate streams (tri, quad, rm-infix-tri, rm-infix-bi, restored)
+NUM_STREAMS = 5
+
+
+def _windows(words, size):
+    """Static candidate windows: (B, 6, size) — word[p:p+size] for p ∈ 0..=5."""
+    return jnp.stack([words[:, p : p + size] for p in range(ab.NUM_CUTS)], axis=1)
+
+
+def _validity(pmask, smask, lengths):
+    """Candidate validity per (cut p, stem size L) from the affix masks.
+
+    Returns (valid3, valid4): (B, 6) bool each. Mirrors
+    ``ref.candidate_valid`` — see DESIGN.md §6 for the shared contract.
+    """
+    b = pmask.shape[0]
+    n = lengths[:, None].astype(jnp.int32)
+    # prefix_valid[p]: the first p characters are all prefix letters.
+    pv = jnp.concatenate(
+        [jnp.ones((b, 1), jnp.int32), jnp.cumprod(pmask, axis=1)], axis=1
+    )  # (B, 6)
+    # suffix_from[k]: every in-word position j >= k is a suffix letter.
+    pos = jnp.arange(ab.MAX_WORD, dtype=jnp.int32)[None, :]
+    s_ok = jnp.logical_or(smask != 0, pos >= n).astype(jnp.int32)
+    sfrom = jnp.concatenate(
+        [
+            jnp.flip(jnp.cumprod(jnp.flip(s_ok, axis=1), axis=1), axis=1),
+            jnp.ones((b, 1), jnp.int32),
+        ],
+        axis=1,
+    )  # (B, 16); sfrom[:, k] = all suffix-ok from k to end
+
+    def valid(size):
+        cut = jnp.arange(ab.NUM_CUTS, dtype=jnp.int32)[None, :]  # p
+        end = jnp.broadcast_to(cut + size, (b, ab.NUM_CUTS))
+        fits = end <= n
+        sfx_len_ok = (n - end) <= ab.MAX_SUFFIX
+        sfx_ok = jnp.take_along_axis(sfrom, jnp.minimum(end, ab.MAX_WORD), axis=1)
+        return (pv != 0) & fits & sfx_len_ok & (sfx_ok != 0)
+
+    return valid(3), valid(4)
+
+
+def _match_stream(stems, bitmap):
+    """(B, C, L) candidates → (B, C) found, via the Pallas bitmap lookup."""
+    b, c, length = stems.shape
+    return lookup(stems.reshape(b * c, length), bitmap).reshape(b, c) != 0
+
+
+def stem_batch(words, lengths, bitmap2, bitmap3, bitmap4):
+    """Extract verb roots for a batch of encoded words.
+
+    words: (B, 15) int32; lengths: (B,) int32;
+    bitmap2/3/4: (37², )/(37³, )/(37⁴,) int32 direct-mapped dictionary
+    bitmaps (``alphabet.build_bitmap``).
+
+    Returns (root (B, 4) int32 0-padded, kind (B,) int32, cut (B,) int32).
+    Kind codes in ``alphabet`` (KIND_*); priority = stream order then
+    smaller prefix cut, matching the sequential oracle exactly.
+    """
+    words = jnp.asarray(words, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    # --- stages 1–2: affix comparator array + cut validity ---------------
+    pmask, smask = affix_masks(words, lengths)
+    valid3, valid4 = _validity(pmask, smask, lengths)
+
+    # --- stage 3: generate + filter stems (static windows) ----------------
+    stems3 = _windows(words, 3)  # (B, 6, 3)
+    stems4 = _windows(words, 4)  # (B, 6, 4)
+
+    second3 = stems3[:, :, 1]
+    second4 = stems4[:, :, 1]
+    is_infix3 = jnp.zeros_like(second3, dtype=bool)
+    is_infix4 = jnp.zeros_like(second4, dtype=bool)
+    for c in ab.INFIX_LETTERS:
+        is_infix3 |= second3 == c
+        is_infix4 |= second4 == c
+
+    # Remove Infix: quad stem minus 2nd char → tri candidate.
+    rm3 = jnp.stack([stems4[:, :, 0], stems4[:, :, 2], stems4[:, :, 3]], axis=-1)
+    # Remove Infix: tri stem minus 2nd char → bi candidate.
+    rm2 = jnp.stack([stems3[:, :, 0], stems3[:, :, 2]], axis=-1)
+    # Restore Original Form: tri stem with 2nd char ا → و.
+    rs3 = jnp.stack(
+        [stems3[:, :, 0], jnp.full_like(second3, ab.WAW), stems3[:, :, 2]], axis=-1
+    )
+
+    # --- stage 4: dictionary compare (Pallas) ------------------------------
+    # The three trilateral-shaped streams (direct, remove-infix, restored)
+    # share the roots3 dictionary; fusing them into one kernel call cuts
+    # pallas invocations 5 → 3 (§Perf: fewer dispatches, better tiling).
+    tri_streams = jnp.concatenate([stems3, rm3, rs3], axis=1)  # (B, 18, 3)
+    tri_found = _match_stream(tri_streams, bitmap3)  # (B, 18)
+    m3, mrm3, mrs3 = tri_found[:, :6], tri_found[:, 6:12], tri_found[:, 12:]
+    found = [
+        m3 & valid3,
+        _match_stream(stems4, bitmap4) & valid4,
+        mrm3 & valid4 & is_infix4,
+        _match_stream(rm2, bitmap2) & valid3 & is_infix3,
+        mrs3 & valid3 & (second3 == ab.ALEF),
+    ]
+
+    # --- stage 5: extract root (priority select) ---------------------------
+    pad3 = jnp.zeros(stems3.shape[:2] + (1,), jnp.int32)
+    pad2 = jnp.zeros(stems3.shape[:2] + (2,), jnp.int32)
+    cands = jnp.concatenate(
+        [
+            jnp.concatenate([stems3, pad3], -1),
+            stems4,
+            jnp.concatenate([rm3, pad3], -1),
+            jnp.concatenate([rm2, pad2], -1),
+            jnp.concatenate([rs3, pad3], -1),
+        ],
+        axis=1,
+    )  # (B, 30, 4)
+    flat_found = jnp.concatenate(found, axis=1)  # (B, 30)
+
+    big = jnp.int32(NUM_STREAMS * ab.NUM_CUTS + 1)
+    prio = jnp.arange(NUM_STREAMS * ab.NUM_CUTS, dtype=jnp.int32)[None, :]
+    masked = jnp.where(flat_found, prio, big)
+    best = jnp.argmin(masked, axis=1)  # (B,)
+    any_found = jnp.take_along_axis(flat_found, best[:, None], axis=1)[:, 0]
+
+    root = jnp.take_along_axis(cands, best[:, None, None], axis=1)[:, 0, :]
+    root = jnp.where(any_found[:, None], root, 0)
+    kind = jnp.where(any_found, best // ab.NUM_CUTS + 1, 0).astype(jnp.int32)
+    cut = jnp.where(any_found, best % ab.NUM_CUTS, 0).astype(jnp.int32)
+    return root, kind, cut
+
+
+def make_stemmer(batch: int):
+    """jit-wrapped ``stem_batch`` with pinned shapes, for AOT lowering."""
+
+    def fn(words, lengths, bitmap2, bitmap3, bitmap4):
+        return stem_batch(words, lengths, bitmap2, bitmap3, bitmap4)
+
+    shapes = (
+        jax.ShapeDtypeStruct((batch, ab.MAX_WORD), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((ab.BITMAP2,), jnp.int32),
+        jax.ShapeDtypeStruct((ab.BITMAP3,), jnp.int32),
+        jax.ShapeDtypeStruct((ab.BITMAP4,), jnp.int32),
+    )
+    return jax.jit(fn), shapes

@@ -1,0 +1,46 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import alphabet as ab  # noqa: E402
+from compile import gen_roots  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def dictionaries():
+    """(bi, tri, quad) as python sets of codepoint tuples."""
+    bi, tri, quad = gen_roots.build()
+    return set(bi), set(tri), set(quad)
+
+
+def pad_dict(rows, r, length):
+    a = np.zeros((r, length), np.int32)
+    for i, t in enumerate(sorted(rows)):
+        a[i] = t
+    return a
+
+
+@pytest.fixture(scope="session")
+def dict_arrays(dictionaries):
+    """(roots2, roots3, roots4) as padded int32 arrays, model-input shaped."""
+    bi, tri, quad = dictionaries
+    return (
+        pad_dict(bi, ab.R2, 2),
+        pad_dict(tri, ab.R3, 3),
+        pad_dict(quad, ab.R4, 4),
+    )
+
+
+@pytest.fixture(scope="session")
+def bitmaps(dictionaries):
+    """(bitmap2, bitmap3, bitmap4) int32 arrays — the model inputs."""
+    bi, tri, quad = dictionaries
+    return (
+        np.array(ab.build_bitmap(bi, 2), np.int32),
+        np.array(ab.build_bitmap(tri, 3), np.int32),
+        np.array(ab.build_bitmap(quad, 4), np.int32),
+    )

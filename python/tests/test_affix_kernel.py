@@ -1,0 +1,76 @@
+"""Pallas affix-mask kernel vs pure-jnp oracle (hypothesis sweeps)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import alphabet as ab
+from compile.kernels.affix import affix_masks
+from compile.kernels.ref import ref_affix_masks
+
+LETTERS = [c for c in range(0x0621, 0x064B) if c <= 0x063A or c >= 0x0641]
+
+
+def random_batch(rng, b):
+    lengths = rng.integers(0, ab.MAX_WORD + 1, size=b).astype(np.int32)
+    words = np.zeros((b, ab.MAX_WORD), np.int32)
+    for i, n in enumerate(lengths):
+        words[i, :n] = rng.choice(LETTERS, size=n)
+    return words, lengths
+
+
+def assert_matches_ref(words, lengths):
+    pk, sk = affix_masks(words, lengths)
+    pr, sr = ref_affix_masks(words, lengths)
+    np.testing.assert_array_equal(np.asarray(pk) != 0, np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(sk) != 0, np.asarray(sr))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4, 8, 32]))
+@settings(max_examples=30, deadline=None)
+def test_kernel_matches_ref_random(seed, b):
+    rng = np.random.default_rng(seed)
+    words, lengths = random_batch(rng, b)
+    assert_matches_ref(words, lengths)
+
+
+def test_empty_words():
+    words = np.zeros((4, ab.MAX_WORD), np.int32)
+    lengths = np.zeros(4, np.int32)
+    pk, sk = affix_masks(words, lengths)
+    assert not np.asarray(pk).any()
+    assert not np.asarray(sk).any()
+
+
+def test_all_prefix_letters():
+    # A word made entirely of prefix letters: every in-word position masks on.
+    w = np.zeros((1, ab.MAX_WORD), np.int32)
+    w[0, :7] = [ab.FEH, ab.SEEN, ab.ALEF, ab.LAM, ab.TEH, ab.NOON, ab.YEH]
+    n = np.array([7], np.int32)
+    pk, _ = affix_masks(w, n)
+    assert np.asarray(pk)[0, :5].all()
+
+
+def test_mask_stops_at_length():
+    # Characters beyond `len` are "U" registers — never masked on.
+    w = np.full((1, ab.MAX_WORD), ab.WAW, np.int32)  # waw is a suffix letter
+    n = np.array([3], np.int32)
+    _, sk = affix_masks(w, n)
+    sk = np.asarray(sk)
+    assert sk[0, :3].all() and not sk[0, 3:].any()
+
+
+def test_nonletter_codes_never_match():
+    w = np.full((2, ab.MAX_WORD), 0x0041, np.int32)  # latin 'A'
+    n = np.full(2, ab.MAX_WORD, np.int32)
+    pk, sk = affix_masks(w, n)
+    assert not np.asarray(pk).any() and not np.asarray(sk).any()
+
+
+def test_block_divisibility_sweep():
+    rng = np.random.default_rng(7)
+    for b, tb in [(8, 4), (8, 8), (16, 4)]:
+        words, lengths = random_batch(rng, b)
+        pk, sk = affix_masks(words, lengths, block_b=tb)
+        pr, sr = ref_affix_masks(words, lengths)
+        np.testing.assert_array_equal(np.asarray(pk) != 0, np.asarray(pr))
+        np.testing.assert_array_equal(np.asarray(sk) != 0, np.asarray(sr))

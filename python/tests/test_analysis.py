@@ -1,0 +1,29 @@
+"""TPU budget estimates stay within the assumed part (DESIGN §HW-Adaptation)."""
+
+from compile import analysis
+
+
+def test_all_kernels_fit_vmem():
+    for k in analysis.all_budgets():
+        assert k.vmem_frac < 0.60, f"{k.name} uses {k.vmem_frac:.0%} of VMEM"
+
+
+def test_lookup_is_cheapest_compute():
+    budgets = {k.name: k for k in analysis.all_budgets()}
+    assert (
+        budgets["match/lookup (bitmap)"].work_per_batch
+        < 1e-3 * budgets["match/matmul (MXU)"].work_per_batch
+    )
+
+
+def test_quad_bitmap_dominates_vmem():
+    budgets = {k.name: k for k in analysis.all_budgets()}
+    quad = budgets["match/lookup quad (bitmap)"]
+    assert quad.vmem_bytes > 7 * 2**20
+    assert quad.vmem_frac < 0.5
+
+
+def test_report_renders(capsys):
+    analysis.main()
+    out = capsys.readouterr().out
+    assert "match/lookup" in out and "%VMEM" in out

@@ -1,0 +1,56 @@
+"""AOT pipeline: HLO text emission is deterministic and well-formed."""
+
+import numpy as np
+
+from compile import alphabet as ab
+from compile.aot import lower_match_micro, lower_stemmer
+
+
+def test_stemmer_hlo_text_wellformed():
+    text = lower_stemmer(1)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # 5 inputs: words, lengths, roots2, roots3, roots4
+    assert f"s32[1,{ab.MAX_WORD}]" in text
+    assert f"s32[{ab.BITMAP3}]" in text
+
+
+def test_stemmer_lowering_deterministic():
+    assert lower_stemmer(1) == lower_stemmer(1)
+
+
+def test_match_micro_wellformed():
+    text = lower_match_micro(m=192, r=512, length=3)
+    assert text.startswith("HloModule")
+    assert "s32[192,3]" in text and "s32[512,3]" in text
+
+
+def test_no_dynamic_shapes_leak():
+    # AOT artifacts must be fully static: no dynamic-dimension markers.
+    text = lower_stemmer(32)
+    assert "<=“" not in text and "?x" not in text
+
+
+def test_gen_roots_deterministic(dictionaries):
+    from compile.gen_roots import build
+
+    a = build()
+    b = build()
+    assert a == b
+    bi, tri, quad = a
+    assert len(bi) + len(tri) + len(quad) == 1767  # paper's Quran root count
+    # dictionary invariants: unique, correct lengths, Arabic letters only
+    for rows, length in ((bi, 2), (tri, 3), (quad, 4)):
+        assert len(set(rows)) == len(rows)
+        for t in rows:
+            assert len(t) == length
+            for c in t:
+                assert 0x0621 <= c <= 0x064A and ab.char_index(c) != 0
+
+
+def test_encode_word_roundtrip_examples():
+    codes, n = ab.encode_word("أفاستسقيناكموها")
+    assert n == 15
+    assert codes[0] == ab.ALEF  # hamza-alef normalized
+    codes, n = ab.encode_word("دَرَسَ")
+    assert n == 3 and codes[:3] == [ab.DAL, ab.REH, ab.SEEN]

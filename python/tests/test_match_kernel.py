@@ -1,0 +1,147 @@
+"""Pallas one-hot-matmul dictionary matcher vs pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import alphabet as ab
+from compile.kernels.match import match
+from compile.kernels.ref import ref_match
+
+LETTERS = [c for c in range(0x0621, 0x064B) if c <= 0x063A or c >= 0x0641]
+
+
+def random_case(rng, m, r, length, hit_rate=0.5):
+    roots = np.zeros((r, length), np.int32)
+    n_real = max(1, int(r * 0.7))
+    roots[:n_real] = rng.choice(LETTERS, size=(n_real, length))
+    stems = rng.choice(LETTERS, size=(m, length)).astype(np.int32)
+    # plant guaranteed hits
+    for i in range(m):
+        if rng.random() < hit_rate:
+            stems[i] = roots[rng.integers(0, n_real)]
+    return stems, roots
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.sampled_from([(6, 16, 3), (12, 64, 3), (24, 32, 4), (6, 8, 2)]),
+)
+@settings(max_examples=30, deadline=None)
+def test_kernel_matches_ref_random(seed, shape):
+    m, r, length = shape
+    rng = np.random.default_rng(seed)
+    stems, roots = random_case(rng, m, r, length)
+    got = np.asarray(match(stems, roots)) != 0
+    want = np.asarray(ref_match(stems, roots))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pad_rows_never_match():
+    # A stem of all PADs must not match the dictionary padding.
+    roots = np.zeros((8, 3), np.int32)
+    roots[0] = [ab.DAL, ab.REH, ab.SEEN]
+    stems = np.zeros((6, 3), np.int32)
+    got = np.asarray(match(stems, roots))
+    assert not got.any()
+
+
+def test_exact_membership():
+    roots = np.zeros((4, 3), np.int32)
+    roots[0] = [ab.DAL, ab.REH, ab.SEEN]  # درس
+    roots[1] = [ab.LAM, ab.AIN, ab.BEH]  # لعب
+    stems = np.array(
+        [
+            [ab.DAL, ab.REH, ab.SEEN],
+            [ab.LAM, ab.AIN, ab.BEH],
+            [ab.DAL, ab.REH, ab.SEEN + 1],  # off by one codepoint
+            [ab.SEEN, ab.REH, ab.DAL],  # reversed
+            [ab.DAL, ab.DAL, ab.DAL],
+            [ab.LAM, ab.AIN, ab.BEH],
+        ],
+        np.int32,
+    )
+    got = np.asarray(match(stems, roots))
+    np.testing.assert_array_equal(got, [1, 1, 0, 0, 0, 1])
+
+
+def test_multi_tile_accumulation():
+    # R larger than one tile: hit lives in the *last* tile; OR-accumulation
+    # across grid steps must preserve it (and not clobber earlier hits).
+    rng = np.random.default_rng(3)
+    m, r, length = 8, 1024, 3
+    stems, roots = random_case(rng, m, r, length, hit_rate=0.0)
+    roots[r - 1] = stems[0]  # plant a hit in the final row
+    got = np.asarray(match(stems, roots, block_r=256)) != 0
+    want = np.asarray(ref_match(stems, roots))
+    np.testing.assert_array_equal(got, want)
+    assert got[0]
+
+
+def test_block_shape_sweep():
+    rng = np.random.default_rng(11)
+    stems, roots = random_case(rng, 24, 128, 3)
+    want = np.asarray(ref_match(stems, roots))
+    for bm, br in [(6, 32), (12, 64), (24, 128), (8, 16)]:
+        got = np.asarray(match(stems, roots, block_m=bm, block_r=br)) != 0
+        np.testing.assert_array_equal(got, want, err_msg=f"bm={bm} br={br}")
+
+
+def test_full_dictionary_shapes(dict_arrays):
+    # The real artifact shapes: (M,3)x(2048,3), (M,4)x(512,4), (M,2)x(256,2).
+    r2, r3, r4 = dict_arrays
+    rng = np.random.default_rng(5)
+    for roots, length in ((r2, 2), (r3, 3), (r4, 4)):
+        stems = rng.choice(LETTERS, size=(12, length)).astype(np.int32)
+        stems[0] = roots[0]  # a guaranteed hit
+        got = np.asarray(match(stems, roots)) != 0
+        want = np.asarray(ref_match(stems, roots))
+        np.testing.assert_array_equal(got, want)
+        assert got[0]
+
+
+# --- the direct-mapped lookup kernel (production formulation) --------------
+
+def test_lookup_matches_ref(dictionaries, bitmaps):
+    from compile.kernels.lookup import lookup
+
+    bi, tri, quad = dictionaries
+    b2, b3, b4 = bitmaps
+    rng = np.random.default_rng(17)
+    for rows, bm, length in ((bi, b2, 2), (tri, b3, 3), (quad, b4, 4)):
+        stems = rng.choice(LETTERS, size=(24, length)).astype(np.int32)
+        rows_l = sorted(rows)
+        for i in range(0, 24, 3):  # plant hits
+            stems[i] = rows_l[int(rng.integers(0, len(rows_l)))]
+        got = np.asarray(lookup(stems, bm)) != 0
+        want = np.array([tuple(s) in rows for s in stems])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_lookup_pad_stem_misses(bitmaps):
+    from compile.kernels.lookup import lookup
+
+    _, b3, _ = bitmaps
+    stems = np.zeros((6, 3), np.int32)  # all-PAD → key 0 → miss
+    assert not np.asarray(lookup(stems, b3)).any()
+
+
+def test_lookup_equals_match_modes(dictionaries, bitmaps):
+    """All three kernel formulations agree (lookup / compare / matmul)."""
+    from compile.kernels.lookup import lookup
+
+    bi, tri, quad = dictionaries
+    _, b3, _ = bitmaps
+    rng = np.random.default_rng(23)
+    stems = rng.choice(LETTERS, size=(48, 3)).astype(np.int32)
+    rows_l = sorted(tri)
+    for i in range(0, 48, 4):
+        stems[i] = rows_l[int(rng.integers(0, len(rows_l)))]
+    from compile import alphabet as ab
+    roots3 = np.zeros((ab.R3, 3), np.int32)
+    for i, row in enumerate(sorted(tri)):
+        roots3[i] = row
+    a = np.asarray(lookup(stems, b3)) != 0
+    b = np.asarray(match(stems, roots3, mode="compare")) != 0
+    c = np.asarray(match(stems, roots3, mode="matmul")) != 0
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)

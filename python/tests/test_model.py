@@ -1,0 +1,125 @@
+"""Full JAX stemmer graph vs the sequential single-word oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import alphabet as ab
+from compile.kernels.ref import ref_stem_word
+from compile.model import stem_batch
+
+LETTERS = [c for c in range(0x0621, 0x064B) if c <= 0x063A or c >= 0x0641]
+
+
+def encode_batch(words):
+    enc = [ab.encode_word(w) for w in words]
+    return (
+        np.array([e[0] for e in enc], np.int32),
+        np.array([e[1] for e in enc], np.int32),
+    )
+
+
+def run_both(words_arr, lengths, dictionaries, bitmaps):
+    bi, tri, quad = dictionaries
+    b2, b3, b4 = bitmaps
+    root, kind, cut = stem_batch(words_arr, lengths, b2, b3, b4)
+    got = list(zip(map(tuple, np.asarray(root)), np.asarray(kind), np.asarray(cut)))
+    want = [
+        ref_stem_word(list(w), int(n), bi, tri, quad)
+        for w, n in zip(words_arr, lengths)
+    ]
+    return got, want
+
+
+# --- the paper's own examples ----------------------------------------------
+
+def test_paper_examples(dictionaries, bitmaps):
+    cases = {
+        "سيلعبون": ("لعب", ab.KIND_TRI),  # §3.1
+        "أفاستسقيناكموها": ("سقي", ab.KIND_TRI),  # §3.1 / Fig 13
+        "فتزحزحت": ("زحزح", ab.KIND_QUAD),  # Fig 14
+        "قال": ("قول", ab.KIND_RESTORED),  # §6.3 hollow verb
+        "يدرسون": ("درس", ab.KIND_TRI),  # Table 1
+        "يدرس": ("درس", ab.KIND_TRI),  # Table 1
+        "كاتب": ("كتب", ab.KIND_RMINFIX_TRI),  # §6.3 remove infix
+    }
+    words_arr, lengths = encode_batch(list(cases))
+    b2, b3, b4 = bitmaps
+    root, kind, _ = stem_batch(words_arr, lengths, b2, b3, b4)
+    for i, (w, (exp_root, exp_kind)) in enumerate(cases.items()):
+        got = "".join(chr(c) for c in np.asarray(root)[i] if c)
+        assert got == exp_root, f"{w}: got {got!r}, want {exp_root!r}"
+        assert int(np.asarray(kind)[i]) == exp_kind, f"{w}: kind"
+
+
+def test_unknown_word_returns_none(dictionaries, bitmaps):
+    words_arr, lengths = encode_batch(["ظظظظظ"])
+    b2, b3, b4 = bitmaps
+    root, kind, _ = stem_batch(words_arr, lengths, b2, b3, b4)
+    assert int(np.asarray(kind)[0]) == ab.KIND_NONE
+    assert not np.asarray(root)[0].any()
+
+
+# --- agreement with the sequential oracle ----------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_model_matches_oracle_random(seed, dictionaries, bitmaps):
+    rng = np.random.default_rng(seed)
+    b = 6
+    lengths = rng.integers(2, ab.MAX_WORD + 1, size=b).astype(np.int32)
+    words = np.zeros((b, ab.MAX_WORD), np.int32)
+    for i, n in enumerate(lengths):
+        words[i, :n] = rng.choice(LETTERS, size=n)
+    got, want = run_both(words, lengths, dictionaries, bitmaps)
+    assert got == want
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_model_matches_oracle_inflected(seed, dictionaries, bitmaps):
+    """Adversarial-ish: real roots wrapped in real prefixes/suffixes."""
+    rng = np.random.default_rng(seed)
+    bi, tri, quad = dictionaries
+    tri_list = sorted(tri)
+    prefixes = ["", "ي", "ست", "فسي", "ال", "لن"]
+    suffixes = ["", "ون", "ها", "تم", "ناكموها", "ة"]
+    words = []
+    for _ in range(6):
+        root = "".join(chr(c) for c in tri_list[rng.integers(0, len(tri_list))])
+        w = (
+            prefixes[rng.integers(0, len(prefixes))]
+            + root
+            + suffixes[rng.integers(0, len(suffixes))]
+        )
+        words.append(w)
+    words_arr, lengths = encode_batch(words)
+    got, want = run_both(words_arr, lengths, dictionaries, bitmaps)
+    assert got == want
+
+
+def test_short_and_degenerate_words(dictionaries, bitmaps):
+    words_arr = np.zeros((6, ab.MAX_WORD), np.int32)
+    lengths = np.array([0, 1, 2, 3, 2, 1], np.int32)
+    words_arr[1, :1] = [ab.BEH]
+    words_arr[2, :2] = [ab.MEEM, ab.DAL]  # مد — bilateral root, but no
+    # direct bilateral matching exists: kind must be NONE (bi roots are only
+    # reachable through Remove Infix on trilateral stems).
+    words_arr[3, :3] = [ab.DAL, ab.REH, ab.SEEN]  # درس exact root
+    words_arr[4, :2] = [ab.YEH, ab.TEH]  # all prefix letters
+    words_arr[5, :1] = [ab.WAW]
+    got, want = run_both(words_arr, lengths, dictionaries, bitmaps)
+    assert got == want
+    assert want[3][1] == ab.KIND_TRI
+
+
+def test_batch_one_matches_batch_many(dictionaries, bitmaps):
+    """Batch size must not change per-word results."""
+    words = ["سيلعبون", "قال", "فتزحزحت", "ظظظظ"]
+    words_arr, lengths = encode_batch(words)
+    b2, b3, b4 = bitmaps
+    root_b, kind_b, cut_b = stem_batch(words_arr, lengths, b2, b3, b4)
+    for i in range(len(words)):
+        r1, k1, c1 = stem_batch(words_arr[i : i + 1], lengths[i : i + 1], b2, b3, b4)
+        np.testing.assert_array_equal(np.asarray(r1)[0], np.asarray(root_b)[i])
+        assert int(np.asarray(k1)[0]) == int(np.asarray(kind_b)[i])
+        assert int(np.asarray(c1)[0]) == int(np.asarray(cut_b)[i])

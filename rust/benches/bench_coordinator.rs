@@ -1,0 +1,125 @@
+//! End-to-end coordinator benchmarks: requests → bounded queue → dynamic
+//! batcher → backend → replies. Includes the batching-policy ablation
+//! (max_batch sweep) DESIGN.md §7 calls out, over both the software and
+//! PJRT backends.
+
+use ama::bench::{bench_words, config_from_env, header};
+use ama::chars::ArabicWord;
+use ama::coordinator::{
+    BackendFactory, Coordinator, CoordinatorConfig, SoftwareBackend, XlaBackend,
+};
+use ama::corpus::{self, CorpusConfig};
+use ama::roots::RootSet;
+use ama::stemmer::Stemmer;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sw_factory(roots: Arc<RootSet>) -> BackendFactory {
+    Box::new(move |_| Ok(Box::new(SoftwareBackend(Stemmer::with_defaults(roots.clone())))))
+}
+
+fn xla_factory(roots: Arc<RootSet>) -> BackendFactory {
+    let artifacts = ama::runtime::default_artifacts_dir();
+    Box::new(move |_| {
+        Ok(Box::new(XlaBackend(ama::runtime::Engine::load(&artifacts, &roots)?)))
+    })
+}
+
+fn main() {
+    let cfg = config_from_env();
+    let roots = if Path::new("data/roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(Path::new("data")).expect("load roots"))
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    };
+    let c = corpus::generate(&roots, &CorpusConfig::small(8192, 13));
+    let words: Vec<ArabicWord> = c.tokens.iter().map(|t| t.word).collect();
+    let n = words.len() as u64;
+
+    header("bench_coordinator — end-to-end serving path");
+
+    // Batching-policy ablation over the software backend.
+    for max_batch in [1usize, 16, 64, 256, 1024] {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                max_batch,
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 8192,
+                workers: 1,
+            },
+            sw_factory(roots.clone()),
+        );
+        let h = coord.handle();
+        let r = bench_words(&format!("coordinator/sw max_batch={max_batch}"), &cfg, n, || {
+            let res = h.stem_stream(&words).expect("stream");
+            std::hint::black_box(res.len());
+        });
+        println!("{r}  (mean batch {:.1})", coord.metrics().mean_batch_size());
+        coord.shutdown();
+    }
+
+    // Bulk API (single shared reply channel) vs per-word channels.
+    {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                max_batch: 256,
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 8192,
+                workers: 1,
+            },
+            sw_factory(roots.clone()),
+        );
+        let h = coord.handle();
+        let r = bench_words("coordinator/sw bulk max_batch=256", &cfg, n, || {
+            let res = h.stem_bulk(&words).expect("bulk");
+            std::hint::black_box(res.len());
+        });
+        println!("{r}");
+        coord.shutdown();
+    }
+
+    // Worker-count scaling.
+    for workers in [1usize, 2, 4] {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                max_batch: 256,
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 8192,
+                workers,
+            },
+            sw_factory(roots.clone()),
+        );
+        let h = coord.handle();
+        let r = bench_words(&format!("coordinator/sw workers={workers}"), &cfg, n, || {
+            let res = h.stem_stream(&words).expect("stream");
+            std::hint::black_box(res.len());
+        });
+        println!("{r}");
+        coord.shutdown();
+    }
+
+    // PJRT backend end-to-end (the full three-layer path).
+    if ama::runtime::default_artifacts_dir().join("stemmer_b256.hlo.txt").exists() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                max_batch: 256,
+                max_wait: Duration::from_micros(500),
+                queue_capacity: 8192,
+                workers: 1,
+            },
+            xla_factory(roots.clone()),
+        );
+        let h = coord.handle();
+        let r = bench_words("coordinator/xla max_batch=256", &cfg, n, || {
+            let res = h.stem_stream(&words).expect("stream");
+            std::hint::black_box(res.len());
+        });
+        println!("{r}  (mean batch {:.1})", coord.metrics().mean_batch_size());
+        let snap = coord.metrics().snapshot();
+        println!("  latency p50 {}us p99 {}us", snap.p50_us, snap.p99_us);
+        coord.shutdown();
+    } else {
+        println!("(skipping xla backend — run `make artifacts`)");
+    }
+}

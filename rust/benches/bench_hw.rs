@@ -1,0 +1,103 @@
+//! Tables 4 & 5 + Fig 16 hardware rows — the FPGA simulator: cycle-model
+//! throughput (exact, from Fmax and cycle counts) plus the wall-clock cost
+//! of simulating, and the physical model report.
+
+use ama::bench::{bench_words, config_from_env, header};
+use ama::chars::ArabicWord;
+use ama::corpus::{self, CorpusConfig};
+use ama::hw::area::Organization;
+use ama::hw::{
+    DatapathConfig, NonPipelinedProcessor, PhysicalModel, PipelinedProcessor, Processor,
+};
+use ama::roots::RootSet;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let cfg = config_from_env();
+    let roots = if Path::new("data/roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(Path::new("data")).expect("load roots"))
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    };
+    let quran = corpus::generate(&roots, &CorpusConfig::quran());
+    let words: Vec<ArabicWord> = quran.tokens.iter().map(|t| t.word).collect();
+    let n = words.len() as u64;
+    let dp = DatapathConfig::default();
+
+    header("bench_hw — Table 4/5 + Fig 16 hardware rows");
+
+    // Simulator wall-clock (how fast the *simulation* runs on this host).
+    let r = bench_words("sim/non-pipelined (wall-clock)", &cfg, n, || {
+        let mut p = NonPipelinedProcessor::new(roots.clone(), dp);
+        let (res, _) = p.run(&words);
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
+    let r = bench_words("sim/pipelined (wall-clock)", &cfg, n, || {
+        let mut p = PipelinedProcessor::new(roots.clone(), dp);
+        let (res, _) = p.run(&words);
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
+
+    // Modeled FPGA throughput (the Fig 16 numbers).
+    let np = NonPipelinedProcessor::new(roots.clone(), dp);
+    let pp = PipelinedProcessor::new(roots.clone(), dp);
+    println!("\nmodeled FPGA throughput (Fig 16):");
+    for (name, th, paper) in [
+        ("non-pipelined", np.throughput_wps(n), 2.08e6),
+        ("pipelined", pp.throughput_wps(n), 10.78e6),
+    ] {
+        println!(
+            "  {name:<16} {:>10.3} MWps   (paper {:.2} MWps, delta {:+.2}%)",
+            th / 1e6,
+            paper / 1e6,
+            100.0 * (th - paper) / paper
+        );
+    }
+
+    // Table 4 + Table 5.
+    let model = PhysicalModel::new(dp);
+    println!("\nTable 4 (physical model):");
+    for org in [Organization::NonPipelined, Organization::Pipelined] {
+        let rep = model.report(org);
+        println!(
+            "  {:?}: Fmax {:.2} MHz, {} ALUTs ({:.0}%), {} LRs, {:.2} mW (structural Fmax {:.1} MHz)",
+            org,
+            rep.fmax_mhz,
+            rep.luts,
+            100.0 * rep.lut_utilization,
+            rep.lregs,
+            rep.power_mw,
+            rep.fmax_structural_mhz
+        );
+    }
+    println!("\nTable 5 (throughput-to-area):");
+    for (corpus_name, cn) in
+        [("quran", corpus::QURAN_WORDS as u64), ("ankabut", corpus::ANKABUT_WORDS as u64)]
+    {
+        let th_np = np.throughput_wps(cn);
+        let th_pp = pp.throughput_wps(cn);
+        let rep_np = model.report(Organization::NonPipelined);
+        let rep_pp = model.report(Organization::Pipelined);
+        println!(
+            "  {corpus_name:<8} TH/LUT: NP {:>7.2}  P {:>7.2}   TH/LR: NP {:>8.1}  P {:>9.1}",
+            th_np / rep_np.luts as f64,
+            th_pp / rep_pp.luts as f64,
+            th_np / rep_np.lregs as f64,
+            th_pp / rep_pp.lregs as f64,
+        );
+    }
+    println!("  paper quran: TH/LUT NP 24.22 P 151.85; TH/LR NP 2438 P 10197");
+
+    // Ablation: infix units in hardware (the paper's §7 future work).
+    let with_infix = PhysicalModel::new(DatapathConfig { infix_units: true });
+    let rep = with_infix.report(Organization::Pipelined);
+    println!(
+        "\nablation — pipelined core with infix units: {} ALUTs (+{}), Fmax {:.2} MHz",
+        rep.luts,
+        rep.luts - model.report(Organization::Pipelined).luts,
+        rep.fmax_mhz
+    );
+}

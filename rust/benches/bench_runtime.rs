@@ -1,0 +1,48 @@
+//! PJRT runtime microbenchmarks: the AOT JAX/Pallas artifact executed from
+//! rust, per batch size — the L2/L1 hot path the coordinator drives. Also
+//! the batch-size ablation that motivates the batcher's `max_batch=256`.
+
+use ama::bench::{bench_words, config_from_env, header};
+use ama::chars::ArabicWord;
+use ama::corpus::{self, CorpusConfig};
+use ama::roots::RootSet;
+use ama::runtime::Engine;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let cfg = config_from_env();
+    let artifacts = ama::runtime::default_artifacts_dir();
+    if !artifacts.join("stemmer_b1.hlo.txt").exists() {
+        eprintln!("bench_runtime: no artifacts under {} — run `make artifacts`", artifacts.display());
+        return;
+    }
+    let roots = if Path::new("data/roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(Path::new("data")).expect("load roots"))
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    };
+    let engine = Engine::load(&artifacts, &roots).expect("load engine");
+    let c = corpus::generate(&roots, &CorpusConfig::small(4096, 11));
+    let words: Vec<ArabicWord> = c.tokens.iter().map(|t| t.word).collect();
+
+    header("bench_runtime — PJRT execution of the AOT stemmer artifact");
+    println!("loaded batch sizes: {:?}", engine.batch_sizes());
+
+    // Per-batch-size throughput (batch-size ablation).
+    for &b in &engine.batch_sizes() {
+        let chunk = &words[..b];
+        let r = bench_words(&format!("pjrt/stemmer_b{b}"), &cfg, b as u64, || {
+            let res = engine.stem_chunk(chunk).expect("exec");
+            std::hint::black_box(res.len());
+        });
+        println!("{r}");
+    }
+
+    // Sustained throughput: stream 4096 words through the best batch size.
+    let r = bench_words("pjrt/stream-4096", &cfg, words.len() as u64, || {
+        let res = engine.stem_chunk(&words).expect("exec");
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
+}

@@ -1,0 +1,77 @@
+//! Fig 16 (software row) — throughput of the sequential software stemmer
+//! over the Quran-calibrated corpus, with and without infix processing,
+//! plus the Khoja baseline. Paper reference: 373.3 Wps on a six-core Xeon
+//! (Java); our rust substrate is far faster — the *ratios* to the hardware
+//! models are what reproduce Fig 16's shape.
+
+use ama::bench::{bench_words, config_from_env, header};
+use ama::chars::ArabicWord;
+use ama::corpus::{self, CorpusConfig};
+use ama::khoja::KhojaStemmer;
+use ama::roots::RootSet;
+use ama::stemmer::{Stemmer, StemmerConfig};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let cfg = config_from_env();
+    let roots = if Path::new("data/roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(Path::new("data")).expect("load roots"))
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    };
+    let quran = corpus::generate(&roots, &CorpusConfig::quran());
+    let words: Vec<ArabicWord> = quran.tokens.iter().map(|t| t.word).collect();
+    let n = words.len() as u64;
+
+    header("bench_software — Fig 16 software row (Quran corpus, 77,476 words)");
+
+    let with = Stemmer::with_defaults(roots.clone());
+    let r = bench_words("software/with-infix", &cfg, n, || {
+        let mut acc = 0usize;
+        for w in &words {
+            acc += with.stem(w).kind as usize;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{r}");
+    let th_sw = r.wps().unwrap();
+
+    let without = Stemmer::new(roots.clone(), StemmerConfig { infix_processing: false });
+    let r = bench_words("software/no-infix", &cfg, n, || {
+        let mut acc = 0usize;
+        for w in &words {
+            acc += without.stem(w).kind as usize;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{r}");
+
+    let khoja = KhojaStemmer::new(roots.clone());
+    let r = bench_words("khoja-baseline", &cfg, n, || {
+        let mut acc = 0usize;
+        for w in &words {
+            acc += khoja.stem(w).kind as usize;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{r}");
+
+    // Fig 16 ratios against the hardware throughput models.
+    use ama::hw::{DatapathConfig, NonPipelinedProcessor, PipelinedProcessor, Processor};
+    let np = NonPipelinedProcessor::new(roots.clone(), DatapathConfig::default());
+    let pp = PipelinedProcessor::new(roots, DatapathConfig::default());
+    println!("\nFig 16 shape (this machine's software vs paper's FPGA models):");
+    println!("  software measured:        {:>12.1} Wps", th_sw);
+    println!(
+        "  non-pipelined (model):    {:>12.1} Wps   ({:.1}x software)",
+        np.throughput_wps(n),
+        np.throughput_wps(n) / th_sw
+    );
+    println!(
+        "  pipelined (model):        {:>12.1} Wps   ({:.1}x software)",
+        pp.throughput_wps(n),
+        pp.throughput_wps(n) / th_sw
+    );
+    println!("  paper: 373.3 Wps / 2.08 MWps (5,571x) / 10.78 MWps (28,873x)");
+}

@@ -1,0 +1,53 @@
+//! Fig 17 — pipelined-over-non-pipelined speedup as a function of the
+//! number of analyzed input words, from 1 to 10⁶ (the pipeline fill/drain
+//! effect). Also validates the modeled curve against the cycle-accurate
+//! simulator's actual cycle counts on small N.
+
+use ama::bench::header;
+use ama::chars::ArabicWord;
+use ama::corpus::{self, CorpusConfig};
+use ama::hw::{DatapathConfig, NonPipelinedProcessor, PipelinedProcessor, Processor};
+use ama::roots::RootSet;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let roots = if Path::new("data/roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(Path::new("data")).expect("load roots"))
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    };
+    let np = NonPipelinedProcessor::new(roots.clone(), DatapathConfig::default());
+    let pp = PipelinedProcessor::new(roots.clone(), DatapathConfig::default());
+
+    header("bench_sweep — Fig 17: speedup vs input word count");
+    println!("{:>10} {:>12} {:>12} {:>16} {:>16} {:>9}", "N", "NP cycles", "P cycles", "NP Wps", "P Wps", "speedup");
+    for n in [1u64, 2, 5, 10, 20, 50, 100, 500, 1_000, 10_000, 77_476, 980, 1_000_000] {
+        let a = np.throughput_wps(n);
+        let b = pp.throughput_wps(n);
+        println!(
+            "{:>10} {:>12} {:>12} {:>16.0} {:>16.0} {:>8.2}x",
+            n,
+            np.cycles_for(n),
+            pp.cycles_for(n),
+            a,
+            b,
+            b / a
+        );
+    }
+    println!("asymptote 5·f_p/f_np = {:.3}x (paper: 5.18; quran 5.18, ankabut 5.16)", 5.0 * 10.78 / 10.4);
+
+    // Validate the model against the cycle-accurate simulator.
+    println!("\ncycle-count validation (simulator vs model):");
+    let c = corpus::generate(&roots, &CorpusConfig::small(200, 9));
+    let words: Vec<ArabicWord> = c.tokens.iter().map(|t| t.word).collect();
+    for n in [1usize, 7, 64, 200] {
+        let mut np = NonPipelinedProcessor::new(roots.clone(), DatapathConfig::default());
+        let mut pp = PipelinedProcessor::new(roots.clone(), DatapathConfig::default());
+        let (_, s1) = np.run(&words[..n]);
+        let (_, s2) = pp.run(&words[..n]);
+        assert_eq!(s1.cycles, np.cycles_for(n as u64), "np cycle model");
+        assert_eq!(s2.cycles, pp.cycles_for(n as u64), "p cycle model");
+        println!("  N={n:<5} np {} cycles, pipelined {} cycles — model exact", s1.cycles, s2.cycles);
+    }
+}

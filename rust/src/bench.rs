@@ -1,0 +1,160 @@
+//! Benchmark harness substrate (criterion is not in the offline image):
+//! warmup, adaptive iteration, mean/stddev/min, and words-per-second
+//! throughput reporting in the paper's units.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    /// Words processed per iteration (for Wps reporting), if applicable.
+    pub words_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn wps(&self) -> Option<f64> {
+        self.words_per_iter
+            .map(|w| w as f64 / self.mean.as_secs_f64())
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12.3?} ±{:>10.3?} (min {:>10.3?}, n={})",
+            self.name, self.mean, self.stddev, self.min, self.iters
+        )?;
+        if let Some(wps) = self.wps() {
+            if wps >= 1e6 {
+                write!(f, "  {:>10.3} MWps", wps / 1e6)?;
+            } else {
+                write!(f, "  {wps:>10.1} Wps")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Fast config for CI-ish runs (`AMA_BENCH_FAST=1`).
+pub fn config_from_env() -> BenchConfig {
+    if std::env::var_os("AMA_BENCH_FAST").is_some() {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 1_000,
+        }
+    } else {
+        BenchConfig::default()
+    }
+}
+
+/// Run `f` repeatedly; report timing statistics.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        f();
+    }
+    // Measure.
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < cfg.measure || (samples.len() as u64) < cfg.min_iters)
+        && (samples.len() as u64) < cfg.max_iters
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n.max(1.0);
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u64,
+        mean: Duration::from_secs_f64(mean),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: Duration::from_secs_f64(min),
+        words_per_iter: None,
+    }
+}
+
+/// Like [`bench`], tagging each iteration with a word count for Wps.
+pub fn bench_words<F: FnMut()>(
+    name: &str,
+    cfg: &BenchConfig,
+    words_per_iter: u64,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, cfg, f);
+    r.words_per_iter = Some(words_per_iter);
+    r
+}
+
+/// Standard bench header so all five bench binaries print uniformly.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let mut x = 0u64;
+        let r = bench_words("noop", &cfg, 100, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.mean);
+        assert!(r.wps().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn display_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_micros(100),
+            stddev: Duration::from_micros(5),
+            min: Duration::from_micros(90),
+            words_per_iter: Some(1000),
+        };
+        let s = format!("{r}");
+        assert!(s.contains("MWps"), "{s}");
+    }
+}

@@ -1,0 +1,327 @@
+//! Arabic character handling: codepoints, normalization, fixed-width words.
+//!
+//! The paper processes 16-bit Arabic Unicode (U+0621..U+064A), strips
+//! diacritics, treats bare alef `ا` and hamza-alef `أ` as equivalent, and
+//! fixes the datapath width at 15 characters — the length of the longest
+//! Arabic word (أفاستسقيناكموها). We mirror all of that here; this module is
+//! the single source of truth the software stemmer, the HW simulator and the
+//! PJRT encoding all share. It must agree exactly with
+//! `python/compile/alphabet.py`.
+
+/// Maximum word length in characters (paper: 15, the longest Arabic word).
+pub const MAX_WORD: usize = 15;
+
+/// Maximum prefix length examined by the datapath (paper: 5 registers).
+pub const MAX_PREFIX: usize = 5;
+
+/// Maximum suffix length examined by the datapath (paper: up to 9 letters,
+/// bounded by the 15-register suffix array).
+pub const MAX_SUFFIX: usize = 9;
+
+/// Unicode codepoint used for padding / "U" (undefined) positions.
+pub const PAD: u16 = 0;
+
+// --- The Arabic block this system understands (paper §5.2) ---------------
+
+pub const HAMZA: u16 = 0x0621;
+pub const ALEF_MADDA: u16 = 0x0622;
+pub const ALEF_HAMZA_ABOVE: u16 = 0x0623;
+pub const WAW_HAMZA: u16 = 0x0624;
+pub const ALEF_HAMZA_BELOW: u16 = 0x0625;
+pub const YEH_HAMZA: u16 = 0x0626;
+pub const ALEF: u16 = 0x0627;
+pub const BEH: u16 = 0x0628;
+pub const TEH_MARBUTA: u16 = 0x0629;
+pub const TEH: u16 = 0x062A;
+pub const THEH: u16 = 0x062B;
+pub const JEEM: u16 = 0x062C;
+pub const HAH: u16 = 0x062D;
+pub const KHAH: u16 = 0x062E;
+pub const DAL: u16 = 0x062F;
+pub const THAL: u16 = 0x0630;
+pub const REH: u16 = 0x0631;
+pub const ZAIN: u16 = 0x0632;
+pub const SEEN: u16 = 0x0633;
+pub const SHEEN: u16 = 0x0634;
+pub const SAD: u16 = 0x0635;
+pub const DAD: u16 = 0x0636;
+pub const TAH: u16 = 0x0637;
+pub const ZAH: u16 = 0x0638;
+pub const AIN: u16 = 0x0639;
+pub const GHAIN: u16 = 0x063A;
+pub const FEH: u16 = 0x0641;
+pub const QAF: u16 = 0x0642;
+pub const KAF: u16 = 0x0643;
+pub const LAM: u16 = 0x0644;
+pub const MEEM: u16 = 0x0645;
+pub const NOON: u16 = 0x0646;
+pub const HEH: u16 = 0x0647;
+pub const WAW: u16 = 0x0648;
+pub const ALEF_MAKSURA: u16 = 0x0649;
+pub const YEH: u16 = 0x064A;
+
+/// The seven letters that can start a verb as a prefix — the letters of
+/// (فسألتني): Feh, Seen, Alef-Hamza, Lam, Teh, Noon, Yeh. Matches the VHDL
+/// constant in the paper's Fig. 3.
+pub const PREFIX_LETTERS: [u16; 7] = [ALEF_HAMZA_ABOVE, TEH, SEEN, FEH, LAM, NOON, YEH];
+
+/// The nine letters that can end a verb as a suffix. The paper groups them
+/// in one mnemonic word; the set below covers every suffix the paper's
+/// examples exercise (يناكموها, ون, تم, ...): Alef, Teh, Heh, Kaf, Meem,
+/// Waw, Noon, Yeh, Teh-Marbuta.
+pub const SUFFIX_LETTERS: [u16; 9] = [ALEF, TEH, HEH, KAF, MEEM, WAW, NOON, YEH, TEH_MARBUTA];
+
+/// The five letters that can appear inside a root as an infix (أوتني):
+/// Alef, Waw, Yeh (the vowels the paper focuses on) plus Teh and Noon.
+pub const INFIX_LETTERS: [u16; 5] = [ALEF, WAW, YEH, TEH, NOON];
+
+/// Arabic diacritics stripped before analysis (paper §3.1): Fathatan..Sukun
+/// (U+064B..U+0652) plus superscript alef.
+pub const DIACRITICS: core::ops::RangeInclusive<u16> = 0x064B..=0x0652;
+
+/// Contiguous alphabet used by the one-hot dictionary-match kernel:
+/// U+0621..=U+064A (42 codepoints incl. the unused 0x063B..0x0640 gap is
+/// excluded), remapped to dense indices 1..=36 with 0 = PAD.
+pub const ALPHABET_SIZE: usize = 37;
+
+/// Is `c` one of the 36 Arabic letters this system processes?
+pub fn is_arabic_letter(c: u16) -> bool {
+    (0x0621..=0x063A).contains(&c) || (0x0641..=0x064A).contains(&c)
+}
+
+/// Dense alphabet index for the one-hot matcher; PAD and anything
+/// non-Arabic map to 0. Must match `alphabet.py::char_index`.
+pub fn char_index(c: u16) -> u8 {
+    match c {
+        0x0621..=0x063A => (c - 0x0621 + 1) as u8,
+        0x0641..=0x064A => (c - 0x0641 + 27) as u8,
+        _ => 0,
+    }
+}
+
+/// Inverse of [`char_index`]. Returns PAD for 0 / out-of-range.
+pub fn index_char(i: u8) -> u16 {
+    match i {
+        1..=26 => 0x0621 + (i as u16 - 1),
+        27..=36 => 0x0641 + (i as u16 - 27),
+        _ => PAD,
+    }
+}
+
+/// Normalize one codepoint the way the paper's preprocessor does:
+/// hamza-carrier alefs collapse onto bare alef (`أ`/`إ`/`آ` → `ا`), alef
+/// maksura collapses onto yeh, everything else is unchanged.
+pub fn normalize_char(c: u16) -> u16 {
+    match c {
+        ALEF_MADDA | ALEF_HAMZA_ABOVE | ALEF_HAMZA_BELOW => ALEF,
+        ALEF_MAKSURA => YEH,
+        _ => c,
+    }
+}
+
+pub fn is_diacritic(c: u16) -> bool {
+    DIACRITICS.contains(&c) || c == 0x0670
+}
+
+pub fn is_prefix_letter(c: u16) -> bool {
+    // After normalization أ has become ا, which is NOT in PREFIX_LETTERS as
+    // stored (hamza form). Accept both spellings so callers can use either.
+    PREFIX_LETTERS.contains(&c) || c == ALEF
+}
+
+pub fn is_suffix_letter(c: u16) -> bool {
+    SUFFIX_LETTERS.contains(&c)
+}
+
+pub fn is_infix_letter(c: u16) -> bool {
+    INFIX_LETTERS.contains(&c)
+}
+
+/// ASCII display names for the simulator traces — the paper's §5.2 display
+/// code: `س` shows as "Sin" in ModelSim; we print the same names.
+pub fn display_name(c: u16) -> &'static str {
+    match c {
+        HAMZA => "Hamza",
+        ALEF_MADDA => "AlifM",
+        ALEF_HAMZA_ABOVE => "AlifU",
+        WAW_HAMZA => "WawH",
+        ALEF_HAMZA_BELOW => "AlifL",
+        YEH_HAMZA => "YaaH",
+        ALEF => "Alif",
+        BEH => "Baa",
+        TEH_MARBUTA => "TaaM",
+        TEH => "Taa",
+        THEH => "Thaa",
+        JEEM => "Jeem",
+        HAH => "Haa",
+        KHAH => "Khaa",
+        DAL => "Dal",
+        THAL => "Thal",
+        REH => "Raa",
+        ZAIN => "Zayn",
+        SEEN => "Sin",
+        SHEEN => "Shin",
+        SAD => "Sad",
+        DAD => "Dad",
+        TAH => "Tah",
+        ZAH => "Zah",
+        AIN => "Ayn",
+        GHAIN => "Ghayn",
+        FEH => "Faa",
+        QAF => "Qaf",
+        KAF => "Kaf",
+        LAM => "Lam",
+        MEEM => "Mim",
+        NOON => "Nun",
+        HEH => "Haa2",
+        WAW => "Waw",
+        ALEF_MAKSURA => "YaaM",
+        YEH => "Yaa",
+        PAD => "U",
+        _ => "?",
+    }
+}
+
+/// A fixed-width (15-register) Arabic word exactly as the paper's datapath
+/// holds it: left-aligned 16-bit codepoints, PAD beyond `len`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArabicWord {
+    pub chars: [u16; MAX_WORD],
+    pub len: usize,
+}
+
+impl ArabicWord {
+    /// Encode a Rust string: strip diacritics and tatweel, normalize
+    /// hamza-alefs, truncate at 15 characters (paper's register width).
+    pub fn encode(s: &str) -> Self {
+        let mut chars = [PAD; MAX_WORD];
+        let mut len = 0;
+        for ch in s.chars() {
+            let c = ch as u32;
+            if c > 0xFFFF {
+                continue;
+            }
+            let c = c as u16;
+            if is_diacritic(c) || c == 0x0640 {
+                continue; // diacritics + tatweel stripped (paper §3.1)
+            }
+            let c = normalize_char(c);
+            if len < MAX_WORD {
+                chars[len] = c;
+                len += 1;
+            }
+        }
+        ArabicWord { chars, len }
+    }
+
+    /// Build from raw codepoints (already normalized).
+    pub fn from_codes(codes: &[u16]) -> Self {
+        let mut chars = [PAD; MAX_WORD];
+        let len = codes.len().min(MAX_WORD);
+        chars[..len].copy_from_slice(&codes[..len]);
+        ArabicWord { chars, len }
+    }
+
+    pub fn as_slice(&self) -> &[u16] {
+        &self.chars[..self.len]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Decode back into a displayable Arabic string.
+    pub fn to_string_ar(&self) -> String {
+        self.as_slice()
+            .iter()
+            .map(|&c| char::from_u32(c as u32).unwrap_or('\u{FFFD}'))
+            .collect()
+    }
+
+    /// ModelSim-style display: space-separated ASCII letter names.
+    pub fn to_display(&self) -> String {
+        self.as_slice()
+            .iter()
+            .map(|&c| display_name(c))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+impl std::fmt::Debug for ArabicWord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ArabicWord({} [{}])", self.to_string_ar(), self.to_display())
+    }
+}
+
+impl std::fmt::Display for ArabicWord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_string_ar())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_strips_diacritics() {
+        // دَرَسَ with fatha diacritics → درس
+        let w = ArabicWord::encode("\u{062F}\u{064E}\u{0631}\u{064E}\u{0633}\u{064E}");
+        assert_eq!(w.len, 3);
+        assert_eq!(w.as_slice(), &[DAL, REH, SEEN]);
+    }
+
+    #[test]
+    fn encode_normalizes_hamza_alef() {
+        let w = ArabicWord::encode("\u{0623}\u{0643}\u{0644}"); // أكل
+        assert_eq!(w.chars[0], ALEF);
+    }
+
+    #[test]
+    fn longest_word_fits_exactly() {
+        // أفاستسقيناكموها — the paper's longest word, 15 chars.
+        let w = ArabicWord::encode("أفاستسقيناكموها");
+        assert_eq!(w.len, 15);
+    }
+
+    #[test]
+    fn char_index_roundtrip() {
+        for c in 0x0621..=0x063Au16 {
+            assert_eq!(index_char(char_index(c)), c);
+        }
+        for c in 0x0641..=0x064Au16 {
+            assert_eq!(index_char(char_index(c)), c);
+        }
+        assert_eq!(char_index(PAD), 0);
+        assert_eq!(char_index(0x0640), 0); // tatweel is not a letter
+    }
+
+    #[test]
+    fn alphabet_is_dense_and_bounded() {
+        let mut seen = [false; ALPHABET_SIZE];
+        for c in 0x0621..=0x064Au16 {
+            if is_arabic_letter(c) {
+                let i = char_index(c) as usize;
+                assert!(i > 0 && i < ALPHABET_SIZE);
+                assert!(!seen[i], "collision at {c:04X}");
+                seen[i] = true;
+            }
+        }
+        assert_eq!(seen.iter().filter(|&&b| b).count(), 36);
+    }
+
+    #[test]
+    fn prefix_letters_match_paper_vhdl() {
+        // Fig. 3 VHDL constant: x0623 x062A x0633 x0641 x0644 x0646 x064A
+        let mut p = PREFIX_LETTERS;
+        p.sort();
+        assert_eq!(p, [0x0623, 0x062A, 0x0633, 0x0641, 0x0644, 0x0646, 0x064A]);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(display_name(SEEN), "Sin");
+        assert_eq!(display_name(PAD), "U");
+    }
+}

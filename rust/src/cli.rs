@@ -1,0 +1,143 @@
+//! CLI substrate: a small hand-rolled argument parser (the offline image
+//! ships no `clap`) plus the `ama` subcommand surface.
+//!
+//! Supported grammar: `ama <subcommand> [--flag value] [--switch] [args…]`.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positionals plus `--key value` / `--switch` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Flags that take a value (everything else after `--` is a switch).
+const VALUE_FLAGS: &[&str] = &[
+    "--data-dir",
+    "--artifacts",
+    "--backend",
+    "--processor",
+    "--words",
+    "--seed",
+    "--out",
+    "--in",
+    "--table",
+    "--figure",
+    "--port",
+    "--workers",
+    "--batch",
+    "--max-wait-us",
+    "--corpus",
+    "--repeat",
+];
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let key = format!("--{name}");
+                if VALUE_FLAGS.contains(&key.as_str()) {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("flag {key} expects a value"))?;
+                    a.flags.insert(key, val);
+                } else {
+                    a.switches.push(key);
+                }
+            } else {
+                a.positionals.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{name}: invalid number {v:?}")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{name}: invalid number {v:?}")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+pub const USAGE: &str = "\
+ama — Arabic morphological analysis (paper reproduction)
+
+USAGE:
+    ama <subcommand> [options]
+
+SUBCOMMANDS:
+    stem <words…>         extract roots for words given on the command line
+                          [--backend software|khoja|hw-np|hw-p|xla] [--no-infix]
+    corpus                generate a calibrated corpus
+                          [--words N] [--seed S] [--out file.tsv] [--quran|--ankabut]
+    analyze               accuracy analysis over a corpus (Table 6/7 data)
+                          [--corpus quran|ankabut|file.tsv] [--no-infix] [--khoja]
+    simulate              run the FPGA processor simulator with a trace
+                          [--processor pipelined|non-pipelined] [--words N] [--trace]
+    report                regenerate a paper table/figure
+                          [--table morphology|truncation|hw|ratios|accuracy|roots]
+                          [--figure throughput|sweep]
+    serve                 TCP line-protocol stemming service
+                          [--port P] [--backend …] [--workers N] [--batch B]
+    selftest              cross-validate software / HW-sim / PJRT backends
+
+COMMON OPTIONS:
+    --data-dir DIR        root dictionaries (default: data)
+    --artifacts DIR       AOT artifacts (default: artifacts or $AMA_ARTIFACTS)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["stem", "كتب", "--backend", "xla", "--no-infix"]);
+        assert_eq!(a.positionals, vec!["stem", "كتب"]);
+        assert_eq!(a.flag("--backend"), Some("xla"));
+        assert!(a.switch("--no-infix"));
+        assert!(!a.switch("--trace"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--backend".to_string()]).is_err());
+    }
+
+    #[test]
+    fn numeric_flags() {
+        let a = parse(&["corpus", "--words", "1000", "--seed", "7"]);
+        assert_eq!(a.flag_usize("--words", 0).unwrap(), 1000);
+        assert_eq!(a.flag_u64("--seed", 0).unwrap(), 7);
+        assert_eq!(a.flag_usize("--port", 9).unwrap(), 9);
+        let bad = parse(&["corpus", "--words", "xyz"]);
+        assert!(bad.flag_usize("--words", 0).is_err());
+    }
+}

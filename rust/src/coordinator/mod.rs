@@ -1,0 +1,420 @@
+//! L3 coordinator: dynamic batcher + worker pool + backpressure — the
+//! serving organization around the stemmer backends.
+//!
+//! The paper's pipelined processor overlaps five datapath stages so a new
+//! word enters every clock. The serving analog: requests stream into a
+//! bounded queue (backpressure), a batcher groups whatever is waiting (up
+//! to `max_batch`, with a `max_wait` deadline — the classic dynamic
+//! batching policy), and worker threads run the batch on a pluggable
+//! [`StemBackend`]: the pure-rust software stemmer, either FPGA-simulator
+//! processor, or the PJRT engine executing the AOT JAX artifact.
+//!
+//! Backends are constructed *on* their worker thread via a factory, which
+//! is what lets the `Rc`-based PJRT engine participate without being
+//! `Send`.
+
+use crate::chars::ArabicWord;
+use crate::exec::{BoundedQueue, QueueError, WorkerPool};
+use crate::metrics::ServiceMetrics;
+use crate::stemmer::StemResult;
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// A batch-oriented root-extraction backend.
+pub trait StemBackend {
+    fn name(&self) -> &'static str;
+    fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>>;
+}
+
+/// Constructs a backend on the worker thread (worker id passed in).
+pub type BackendFactory = Box<dyn Fn(usize) -> Result<Box<dyn StemBackend>> + Send + Sync>;
+
+/// Where a finished result goes.
+enum ReplyTo {
+    /// One dedicated channel per request (interactive path).
+    Single(mpsc::Sender<StemResult>),
+    /// Shared indexed channel (bulk path — one allocation per *stream*
+    /// instead of per word; the §Perf L3 fix, see EXPERIMENTS.md).
+    Bulk(mpsc::Sender<(u32, StemResult)>, u32),
+}
+
+/// One queued request.
+struct Request {
+    word: ArabicWord,
+    submitted: Instant,
+    reply: ReplyTo,
+}
+
+/// Batching/queueing policy.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Maximum words per dispatched batch.
+    pub max_batch: usize,
+    /// How long the batcher waits for the first word of a batch.
+    pub max_wait: Duration,
+    /// Bounded request-queue capacity (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Number of backend workers.
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 4096,
+            workers: 1,
+        }
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    queue: Arc<BoundedQueue<Request>>,
+    pool: Option<WorkerPool>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl Coordinator {
+    /// Start workers, each owning a backend built by `factory`.
+    pub fn start(cfg: CoordinatorConfig, factory: BackendFactory) -> Self {
+        let queue: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.queue_capacity);
+        let metrics = Arc::new(ServiceMetrics::new());
+        let q = queue.clone();
+        let m = metrics.clone();
+        let factory = Arc::new(factory);
+        let pool = WorkerPool::spawn(cfg.workers, "stem-worker", move |id, _sd| {
+            let mut backend = match factory(id) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("worker {id}: backend init failed: {e:#}");
+                    m.errors.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            };
+            let mut words = Vec::with_capacity(cfg.max_batch);
+            loop {
+                let batch = match q.pop_batch(cfg.max_batch, cfg.max_wait) {
+                    Ok(b) => b,
+                    Err(QueueError::Timeout) => continue,
+                    Err(_) => break, // closed and drained
+                };
+                words.clear();
+                words.extend(batch.iter().map(|r| r.word));
+                match backend.stem_batch(&words) {
+                    Ok(results) => {
+                        m.record_batch(words.len() as u64);
+                        for (req, res) in batch.into_iter().zip(results) {
+                            m.record_latency(req.submitted.elapsed());
+                            match req.reply {
+                                ReplyTo::Single(tx) => drop(tx.send(res)),
+                                ReplyTo::Bulk(tx, idx) => drop(tx.send((idx, res))),
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("worker {id}: batch failed: {e:#}");
+                        m.errors.fetch_add(1, Ordering::Relaxed);
+                        for req in batch {
+                            match req.reply {
+                                ReplyTo::Single(tx) => drop(tx.send(StemResult::NONE)),
+                                ReplyTo::Bulk(tx, idx) => drop(tx.send((idx, StemResult::NONE))),
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        Coordinator { queue, pool: Some(pool), metrics }
+    }
+
+    pub fn handle(&self) -> Handle {
+        Handle { queue: self.queue.clone() }
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: stop intake, drain, join workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+    }
+}
+
+/// Cheap, cloneable client handle.
+#[derive(Clone)]
+pub struct Handle {
+    queue: Arc<BoundedQueue<Request>>,
+}
+
+/// A pending reply.
+pub struct Pending {
+    rx: mpsc::Receiver<StemResult>,
+}
+
+impl Pending {
+    pub fn wait(self) -> Result<StemResult> {
+        Ok(self.rx.recv()?)
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Result<StemResult> {
+        Ok(self.rx.recv_timeout(d)?)
+    }
+}
+
+impl Handle {
+    /// Submit one word; blocks only if the queue is full (backpressure).
+    pub fn submit(&self, word: ArabicWord) -> Result<Pending> {
+        let (tx, rx) = mpsc::channel();
+        self.queue
+            .push(Request { word, submitted: Instant::now(), reply: ReplyTo::Single(tx) })
+            .map_err(|e| anyhow::anyhow!("coordinator closed: {e:?}"))?;
+        Ok(Pending { rx })
+    }
+
+    /// Bulk submission: one shared reply channel for the whole slice
+    /// (order restored by index). ~3× less allocation/synchronization than
+    /// per-word [`Handle::submit`] on large streams.
+    pub fn stem_bulk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        for (i, &word) in words.iter().enumerate() {
+            self.queue
+                .push(Request {
+                    word,
+                    submitted: now,
+                    reply: ReplyTo::Bulk(tx.clone(), i as u32),
+                })
+                .map_err(|e| anyhow::anyhow!("coordinator closed: {e:?}"))?;
+        }
+        drop(tx);
+        let mut out = vec![StemResult::NONE; words.len()];
+        let mut got = 0usize;
+        while got < words.len() {
+            let (idx, res) = rx.recv()?;
+            out[idx as usize] = res;
+            got += 1;
+        }
+        Ok(out)
+    }
+
+    /// Synchronous single-word convenience.
+    pub fn stem(&self, word: ArabicWord) -> Result<StemResult> {
+        self.submit(word)?.wait()
+    }
+
+    /// Pipeline a whole slice through the coordinator, preserving order.
+    /// Submissions overlap execution — the serving analog of the paper's
+    /// pipelined processor keeping every stage busy.
+    pub fn stem_stream(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        let mut pending = Vec::with_capacity(words.len());
+        for &w in words {
+            pending.push(self.submit(w)?);
+        }
+        pending.into_iter().map(|p| p.wait()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend implementations
+// ---------------------------------------------------------------------------
+
+/// The sequential software stemmer as a backend (paper's Java baseline).
+pub struct SoftwareBackend(pub crate::stemmer::Stemmer);
+
+impl StemBackend for SoftwareBackend {
+    fn name(&self) -> &'static str {
+        "software"
+    }
+
+    fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        Ok(self.0.stem_batch(words))
+    }
+}
+
+/// Either FPGA-simulator processor as a backend.
+pub struct HwBackend<P: crate::hw::Processor>(pub P);
+
+impl<P: crate::hw::Processor> StemBackend for HwBackend<P> {
+    fn name(&self) -> &'static str {
+        "hw-sim"
+    }
+
+    fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        Ok(self.0.run(words).0)
+    }
+}
+
+/// The PJRT engine as a backend (constructed on the worker thread).
+pub struct XlaBackend(pub crate::runtime::Engine);
+
+impl StemBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        self.0.stem_chunk(words)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roots::RootSet;
+    use crate::stemmer::{MatchKind, Stemmer};
+
+    fn sw_factory() -> BackendFactory {
+        Box::new(|_id| {
+            let roots = Arc::new(RootSet::builtin_mini());
+            Ok(Box::new(SoftwareBackend(Stemmer::with_defaults(roots))))
+        })
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let h = c.handle();
+        let r = h.stem(ArabicWord::encode("سيلعبون")).unwrap();
+        assert_eq!(r.root_word().to_string_ar(), "لعب");
+        c.shutdown();
+    }
+
+    #[test]
+    fn stream_preserves_order() {
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 1, max_batch: 4, ..Default::default() },
+            sw_factory(),
+        );
+        let h = c.handle();
+        let words: Vec<_> =
+            ["يدرس", "يلعب", "قال", "فتزحزحت", "ظظظ"].iter().map(|s| ArabicWord::encode(s)).collect();
+        let res = h.stem_stream(&words).unwrap();
+        assert_eq!(res.len(), 5);
+        assert_eq!(res[0].root_word().to_string_ar(), "درس");
+        assert_eq!(res[1].root_word().to_string_ar(), "لعب");
+        assert_eq!(res[2].root_word().to_string_ar(), "قول");
+        assert_eq!(res[3].root_word().to_string_ar(), "زحزح");
+        assert_eq!(res[4].kind, MatchKind::None);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 1, max_batch: 64, ..Default::default() },
+            sw_factory(),
+        );
+        let h = c.handle();
+        let words: Vec<_> = (0..512).map(|_| ArabicWord::encode("يدرسون")).collect();
+        let res = h.stem_stream(&words).unwrap();
+        assert_eq!(res.len(), 512);
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.words, 512);
+        assert!(snap.batches < 512, "batching never aggregated: {}", snap.batches);
+        assert!(snap.mean_batch_size > 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn multiple_workers() {
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 4, max_batch: 8, ..Default::default() },
+            sw_factory(),
+        );
+        let h = c.handle();
+        let words: Vec<_> = (0..256).map(|_| ArabicWord::encode("قال")).collect();
+        let res = h.stem_stream(&words).unwrap();
+        assert!(res.iter().all(|r| r.kind == MatchKind::Restored));
+        c.shutdown();
+    }
+
+    #[test]
+    fn bulk_matches_per_word_and_preserves_order() {
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 2, max_batch: 16, ..Default::default() },
+            sw_factory(),
+        );
+        let h = c.handle();
+        let words: Vec<_> = ["يدرس", "قال", "ظظظ", "فتزحزحت", "سيلعبون"]
+            .iter()
+            .cycle()
+            .take(100)
+            .map(|s| ArabicWord::encode(s))
+            .collect();
+        let a = h.stem_bulk(&words).unwrap();
+        let b = h.stem_stream(&words).unwrap();
+        assert_eq!(a, b);
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let c = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let h = c.handle();
+        c.shutdown();
+        assert!(h.submit(ArabicWord::encode("درس")).is_err());
+    }
+
+    #[test]
+    fn failing_backend_reports_errors() {
+        struct Failing;
+        impl StemBackend for Failing {
+            fn name(&self) -> &'static str {
+                "failing"
+            }
+            fn stem_batch(&mut self, _w: &[ArabicWord]) -> Result<Vec<StemResult>> {
+                anyhow::bail!("injected failure")
+            }
+        }
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 1, ..Default::default() },
+            Box::new(|_| Ok(Box::new(Failing))),
+        );
+        let h = c.handle();
+        let r = h.stem(ArabicWord::encode("درس")).unwrap();
+        assert_eq!(r, StemResult::NONE); // degraded reply, not a hang
+        assert!(c.metrics().snapshot().errors >= 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 2, max_batch: 32, ..Default::default() },
+            sw_factory(),
+        );
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let h = c.handle();
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let r = h.stem(ArabicWord::encode("يدرس")).unwrap();
+                        assert_eq!(r.root_word().to_string_ar(), "درس");
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(c.metrics().snapshot().requests, 400);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,317 @@
+//! Morphological inflector: surface forms from roots, per the paper's
+//! Tables 1–2 patterns.
+//!
+//! Forms fall into three recoverability classes w.r.t. the LB stemmer:
+//!
+//! * [`FormClass::Direct`] — prefix+root+suffix with affix letters only;
+//!   recoverable without infix processing (يدرس, سيلعبون, درستم…).
+//! * [`FormClass::Infix`] — recoverable only through §6.3 infix processing:
+//!   the فاعل template (دارس → درس via *Remove Infix*) and hollow-verb past
+//!   forms (قال → قول via *Restore Original Form*).
+//! * [`FormClass::Unstemmable`] — forms the LB algorithm cannot recover
+//!   (م-participles like مدرس — م is not a prefix letter; shortened hollow
+//!   imperatives like قل; jussive-deleted defectives like يسق). These model
+//!   the paper's residual error band.
+
+use crate::chars::{self, ArabicWord};
+use crate::rng::SplitMix64;
+
+/// Recoverability class of a generated surface form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FormClass {
+    Direct,
+    Infix,
+    Unstemmable,
+}
+
+const PAST_SUFFIXES: &[&[u16]] = &[
+    &[],
+    &[chars::TEH],                                   // درست
+    &[chars::NOON, chars::ALEF],                     // درسنا
+    &[chars::TEH, chars::MEEM],                      // درستم
+    &[chars::WAW, chars::ALEF],                      // درسوا
+    &[chars::NOON],                                  // درسن
+    &[chars::TEH, chars::ALEF],                      // درستا
+    &[chars::TEH, chars::NOON],                      // درستن
+];
+
+const PRESENT_PREFIXES: &[&[u16]] = &[
+    &[chars::YEH],                // يدرس
+    &[chars::TEH],                // تدرس
+    &[chars::NOON],               // ندرس
+    &[chars::ALEF],               // ادرس (أدرس normalized)
+    &[chars::SEEN, chars::YEH],   // سيدرس
+    &[chars::SEEN, chars::TEH],   // ستدرس
+    &[chars::FEH, chars::YEH],    // فيدرس
+    &[chars::LAM, chars::YEH],    // ليدرس
+    &[chars::FEH, chars::SEEN, chars::YEH], // فسيدرس
+];
+
+const PRESENT_SUFFIXES: &[&[u16]] = &[
+    &[],
+    &[chars::WAW, chars::NOON],   // يدرسون
+    &[chars::ALEF, chars::NOON],  // يدرسان
+    &[chars::YEH, chars::NOON],   // تدرسين
+    &[chars::NOON],               // يدرسن
+];
+
+const OBJECT_SUFFIXES: &[&[u16]] = &[
+    &[],
+    &[chars::HEH, chars::ALEF],                                  // ها
+    &[chars::HEH],                                               // ه
+    &[chars::KAF, chars::MEEM],                                  // كم
+    &[chars::NOON, chars::YEH],                                  // ني
+    &[chars::KAF, chars::MEEM, chars::WAW, chars::HEH, chars::ALEF], // كموها
+];
+
+fn root_len(gold: &[u16; 4]) -> usize {
+    gold.iter().take_while(|&&c| c != 0).count()
+}
+
+fn build(parts: &[&[u16]]) -> ArabicWord {
+    let mut codes = Vec::with_capacity(15);
+    for p in parts {
+        codes.extend_from_slice(p);
+    }
+    ArabicWord::from_codes(&codes)
+}
+
+/// Is this trilateral root hollow with a و middle radical (قول-class)?
+fn is_hollow_waw(gold: &[u16; 4]) -> bool {
+    root_len(gold) == 3 && gold[1] == chars::WAW
+}
+
+/// Generate a surface form of `gold` in the requested class.
+///
+/// Root kinds adjust class feasibility: bilateral roots have no Direct
+/// surface (they are only reachable via *Remove Infix*), quadrilateral
+/// roots have no Infix surface (Remove Infix only maps 4-stems → 3-roots).
+pub fn inflect(gold: &[u16; 4], class: FormClass, rng: &mut SplitMix64) -> ArabicWord {
+    let n = root_len(gold);
+    let class = match (n, class) {
+        (2, FormClass::Direct) => FormClass::Infix,
+        (4, FormClass::Infix) => FormClass::Direct,
+        _ => class,
+    };
+    match class {
+        FormClass::Direct => inflect_direct(gold, n, rng),
+        FormClass::Infix => inflect_infix(gold, n, rng),
+        FormClass::Unstemmable => inflect_unstemmable(gold, n, rng),
+    }
+}
+
+fn inflect_direct(gold: &[u16; 4], n: usize, rng: &mut SplitMix64) -> ArabicWord {
+    let root = &gold[..n];
+    match rng.below(3) {
+        // past + subject suffix (+ object suffix)
+        0 => {
+            let suf = *rng.choose(PAST_SUFFIXES);
+            let obj = *rng.choose(OBJECT_SUFFIXES);
+            build(&[root, suf, obj])
+        }
+        // present/future prefix + root + suffix
+        1 => {
+            let pre = *rng.choose(PRESENT_PREFIXES);
+            let suf = *rng.choose(PRESENT_SUFFIXES);
+            build(&[pre, root, suf])
+        }
+        // bare root or root + object
+        _ => {
+            let obj = *rng.choose(OBJECT_SUFFIXES);
+            build(&[root, obj])
+        }
+    }
+}
+
+fn inflect_infix(gold: &[u16; 4], n: usize, rng: &mut SplitMix64) -> ArabicWord {
+    match n {
+        2 => {
+            // geminate participle: c1 + ا + c2 (ماد → مد via Remove Infix)
+            let w = [gold[0], chars::ALEF, gold[1]];
+            let suf = *rng.choose(PRESENT_SUFFIXES);
+            build(&[&w, suf])
+        }
+        _ => {
+            if is_hollow_waw(gold) && rng.chance(0.6) {
+                // hollow past: c1 + ا + c3 (قال → قول via Restore Form)
+                let w = [gold[0], chars::ALEF, gold[2]];
+                let suf = *rng.choose(PAST_SUFFIXES);
+                build(&[&w, suf])
+            } else {
+                // فاعل template: c1 + ا + c2 + c3 (دارس → درس via Remove
+                // Infix), optionally under a present prefix (يدارس, Table 1).
+                let w = [gold[0], chars::ALEF, gold[1], gold[2]];
+                if rng.chance(0.4) {
+                    let pre = *rng.choose(&[&[chars::YEH][..], &[chars::TEH][..]][..]);
+                    build(&[pre, &w])
+                } else {
+                    let suf = *rng.choose(PRESENT_SUFFIXES);
+                    build(&[&w, suf])
+                }
+            }
+        }
+    }
+}
+
+fn inflect_unstemmable(gold: &[u16; 4], n: usize, rng: &mut SplitMix64) -> ArabicWord {
+    let root = &gold[..n];
+    match rng.below(3) {
+        // م-participle (م is not a prefix letter): مدرس / مدرسة
+        0 => {
+            let m = [chars::MEEM];
+            if rng.chance(0.4) {
+                build(&[&m, root, &[chars::TEH_MARBUTA]])
+            } else {
+                build(&[&m, root])
+            }
+        }
+        // conjunction و (not in فسألتني): ودرس
+        1 => build(&[&[chars::WAW], root]),
+        // shortened forms: hollow imperative (قل) / defective jussive (يسق)
+        _ => {
+            if n == 3 && (gold[1] == chars::WAW || gold[1] == chars::YEH) {
+                build(&[&[gold[0], gold[2]]])
+            } else if n == 3 && (gold[2] == chars::WAW || gold[2] == chars::YEH) {
+                build(&[&[chars::YEH], &[gold[0], gold[1]]])
+            } else {
+                // deep embedding: بال + root (ب not a prefix letter)
+                build(&[&[chars::BEH, chars::ALEF, chars::LAM], root])
+            }
+        }
+    }
+}
+
+/// Regenerate the Table 1/2-style conjugation rows for a trilateral root.
+/// Returns (label, surface) pairs; used by `ama report --table morphology`.
+pub fn conjugation_table(root3: &[u16; 3]) -> Vec<(&'static str, ArabicWord)> {
+    let r = root3;
+    let y = [chars::YEH];
+    let t = [chars::TEH];
+    let n = [chars::NOON];
+    let a = [chars::ALEF];
+    let sy = [chars::SEEN, chars::YEH];
+    vec![
+        ("I, past (درست)", build(&[r, &[chars::TEH]])),
+        ("We, past (درسنا)", build(&[r, &[chars::NOON, chars::ALEF]])),
+        ("You m., past (درستم)", build(&[r, &[chars::TEH, chars::MEEM]])),
+        ("They m., past (درسوا)", build(&[r, &[chars::WAW, chars::ALEF]])),
+        ("He, past (درس)", build(&[r])),
+        ("I, present (ادرس)", build(&[&a, r])),
+        ("We, present (ندرس)", build(&[&n, r])),
+        ("You, present (تدرس)", build(&[&t, r])),
+        ("He, present (يدرس)", build(&[&y, r])),
+        ("They m., present (يدرسون)", build(&[&y, r, &[chars::WAW, chars::NOON]])),
+        ("They f., present (يدرسن)", build(&[&y, r, &[chars::NOON]])),
+        ("Dual, present (يدرسان)", build(&[&y, r, &[chars::ALEF, chars::NOON]])),
+        ("He, future (سيدرس)", build(&[&sy, r])),
+        ("Participle (دارس)", build(&[&[r[0], chars::ALEF, r[1], r[2]]])),
+        ("Reciprocal (يدارس)", build(&[&y, &[r[0], chars::ALEF, r[1], r[2]]])),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roots::RootSet;
+    use crate::stemmer::{MatchKind, Stemmer, StemmerConfig};
+    use std::sync::Arc;
+
+    fn enc3(s: &str) -> [u16; 4] {
+        let w = ArabicWord::encode(s);
+        [w.chars[0], w.chars[1], w.chars[2], 0]
+    }
+
+    #[test]
+    fn direct_forms_are_recoverable_without_infix() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let s = Stemmer::new(roots, StemmerConfig { infix_processing: false });
+        let mut rng = SplitMix64::new(1);
+        let gold = enc3("درس");
+        for _ in 0..200 {
+            let w = inflect(&gold, FormClass::Direct, &mut rng);
+            let r = s.stem(&w);
+            assert_eq!(r.root, gold, "direct form {:?} must recover درس", w);
+        }
+    }
+
+    #[test]
+    fn infix_forms_need_infix_processing() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let with = Stemmer::with_defaults(roots.clone());
+        let without = Stemmer::new(roots, StemmerConfig { infix_processing: false });
+        let mut rng = SplitMix64::new(2);
+        for golds in [enc3("درس"), enc3("قول")] {
+            for _ in 0..100 {
+                let w = inflect(&golds, FormClass::Infix, &mut rng);
+                assert_eq!(with.stem(&w).root, golds, "with-infix must recover {:?}", w);
+                assert_ne!(
+                    without.stem(&w).root,
+                    golds,
+                    "no-infix should NOT recover infix form {:?}",
+                    w
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unstemmable_forms_never_yield_gold() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let s = Stemmer::with_defaults(roots);
+        let mut rng = SplitMix64::new(3);
+        for golds in [enc3("درس"), enc3("قول"), enc3("سقي")] {
+            for _ in 0..100 {
+                let w = inflect(&golds, FormClass::Unstemmable, &mut rng);
+                assert_ne!(s.stem(&w).root, golds, "unstemmable {:?} recovered gold", w);
+            }
+        }
+    }
+
+    #[test]
+    fn bilateral_infix_form() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let s = Stemmer::with_defaults(roots);
+        let mut rng = SplitMix64::new(4);
+        let w = ArabicWord::encode("مد");
+        let gold = [w.chars[0], w.chars[1], 0, 0];
+        let mut hits = 0;
+        for _ in 0..50 {
+            let f = inflect(&gold, FormClass::Infix, &mut rng);
+            let r = s.stem(&f);
+            if r.root == gold && r.kind == MatchKind::RmInfixBi {
+                hits += 1;
+            }
+        }
+        assert!(hits > 25, "bilateral infix forms rarely recovered: {hits}/50");
+    }
+
+    #[test]
+    fn quad_direct_form() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let s = Stemmer::with_defaults(roots);
+        let mut rng = SplitMix64::new(5);
+        let w = ArabicWord::encode("زحزح");
+        let gold = [w.chars[0], w.chars[1], w.chars[2], w.chars[3]];
+        let mut hits = 0;
+        for _ in 0..100 {
+            let f = inflect(&gold, FormClass::Direct, &mut rng);
+            if s.stem(&f).root == gold {
+                hits += 1;
+            }
+        }
+        assert!(hits > 60, "quad direct forms rarely recovered: {hits}/100");
+    }
+
+    #[test]
+    fn conjugation_table_matches_paper_examples() {
+        let w = ArabicWord::encode("درس");
+        let rows = conjugation_table(&[w.chars[0], w.chars[1], w.chars[2]]);
+        let find = |label: &str| {
+            rows.iter().find(|(l, _)| l.contains(label)).map(|(_, w)| w.to_string_ar()).unwrap()
+        };
+        assert_eq!(find("He, present"), "يدرس"); // Table 1 row 1
+        assert_eq!(find("They m., present"), "يدرسون"); // Table 1 row 2
+        assert_eq!(find("Reciprocal"), "يدارس"); // Table 1 row 3
+        assert_eq!(find("He, future"), "سيدرس");
+    }
+}

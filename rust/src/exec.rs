@@ -1,0 +1,330 @@
+//! Concurrency substrate: bounded MPMC channel + thread pool.
+//!
+//! The offline image ships no tokio/crossbeam-channel, so the coordinator's
+//! building blocks are implemented here on std primitives: a Mutex+Condvar
+//! bounded queue with blocking and non-blocking endpoints (backpressure is
+//! a first-class concern — paper-style pipelines stall their producers when
+//! a stage falls behind), and a small worker pool.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a queue operation did not complete.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueError {
+    /// The queue was closed (no more senders / explicitly shut down).
+    Closed,
+    /// A timed operation ran out of time.
+    Timeout,
+    /// A non-blocking operation would have blocked.
+    WouldBlock,
+}
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer queue.
+///
+/// `push` blocks while full (backpressure); `pop` blocks while empty.
+/// Closing wakes everyone; pops drain remaining items before reporting
+/// `Closed`.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        assert!(capacity > 0, "capacity must be positive");
+        Arc::new(BoundedQueue {
+            inner: Mutex::new(Inner { queue: VecDeque::with_capacity(capacity), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push; returns `Err(Closed)` if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(QueueError::Closed);
+            }
+            if g.queue.len() < self.capacity {
+                g.queue.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, item: T) -> Result<(), (T, QueueError)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((item, QueueError::Closed));
+        }
+        if g.queue.len() >= self.capacity {
+            return Err((item, QueueError::WouldBlock));
+        }
+        g.queue.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; drains queued items even after close.
+    pub fn pop(&self) -> Result<T, QueueError> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.queue.pop_front() {
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.closed {
+                return Err(QueueError::Closed);
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a deadline; `Err(Timeout)` if nothing arrives in time.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<T, QueueError> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.queue.pop_front() {
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.closed {
+                return Err(QueueError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(QueueError::Timeout);
+            }
+            let (ng, res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if res.timed_out() && g.queue.is_empty() {
+                if g.closed {
+                    return Err(QueueError::Closed);
+                }
+                return Err(QueueError::Timeout);
+            }
+        }
+    }
+
+    /// Pop up to `max` items, waiting up to `timeout` for the *first* one.
+    /// The dynamic batcher's primitive: returns as soon as the queue goes
+    /// empty after at least one item arrived.
+    pub fn pop_batch(&self, max: usize, timeout: Duration) -> Result<Vec<T>, QueueError> {
+        let first = self.pop_timeout(timeout)?;
+        let mut batch = Vec::with_capacity(max.min(16));
+        batch.push(first);
+        let mut g = self.inner.lock().unwrap();
+        while batch.len() < max {
+            match g.queue.pop_front() {
+                Some(item) => {
+                    batch.push(item);
+                    self.not_full.notify_one();
+                }
+                None => break,
+            }
+        }
+        Ok(batch)
+    }
+
+    /// Close the queue; wakes all blocked producers and consumers.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+/// A fixed-size worker pool executing a per-worker closure until the work
+/// source signals shutdown. Workers get ids (useful for per-worker state).
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers; each runs `f(worker_id, &shutdown_flag)`.
+    pub fn spawn<F>(n: usize, name: &str, f: F) -> Self
+    where
+        F: Fn(usize, &AtomicBool) + Send + Sync + 'static,
+    {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let f = Arc::new(f);
+        let handles = (0..n)
+            .map(|i| {
+                let f = f.clone();
+                let sd = shutdown.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || f(i, &sd))
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { handles, shutdown }
+    }
+
+    /// Request shutdown (workers must observe the flag or a closed queue).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for all workers to exit.
+    pub fn join(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(matches!(q.try_push(3), Err((3, QueueError::WouldBlock))));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(3)); // blocks
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop().unwrap(), 1);
+        t.join().unwrap().unwrap();
+        assert_eq!(q.pop().unwrap(), 2);
+        assert_eq!(q.pop().unwrap(), 3);
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop().unwrap(), 7);
+        assert_eq!(q.pop(), Err(QueueError::Closed));
+        assert_eq!(q.push(8), Err(QueueError::Closed));
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: Arc<BoundedQueue<u32>> = BoundedQueue::new(1);
+        let r = q.pop_timeout(Duration::from_millis(10));
+        assert_eq!(r, Err(QueueError::Timeout));
+    }
+
+    #[test]
+    fn pop_batch_collects_available() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let b = q.pop_batch(4, Duration::from_millis(50)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = q.pop_batch(100, Duration::from_millis(50)).unwrap();
+        assert_eq!(b.len(), 6);
+    }
+
+    #[test]
+    fn mpmc_stress() {
+        let q = BoundedQueue::new(32);
+        let count = Arc::new(AtomicUsize::new(0));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..250 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                let c = count.clone();
+                std::thread::spawn(move || {
+                    while q.pop().is_ok() {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn worker_pool_runs_and_joins() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h2 = hits.clone();
+        let pool = WorkerPool::spawn(3, "test", move |_id, sd| {
+            h2.fetch_add(1, Ordering::SeqCst);
+            while !sd.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        assert_eq!(pool.len(), 3);
+        std::thread::sleep(Duration::from_millis(10));
+        pool.join();
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+}

@@ -1,0 +1,285 @@
+//! Physical model: area (ALUTs, registers), timing (Fmax) and power —
+//! Table 4/5 of the paper.
+//!
+//! Per-unit costs come from [`super::units`]; this module aggregates them
+//! and adds the two organization-specific overhead terms (multicycle
+//! resource-sharing muxes + FSM decode for the non-pipelined core; the
+//! inter-stage register arrays for the pipelined core). The decomposition
+//! is a model; the *totals* are calibrated to the paper's synthesis
+//! results (Table 4) and the calibration residuals are exposed so tests
+//! can assert they stay plausible (positive, <30% of total).
+//!
+//! Timing: the units' propagation delays put the structural critical path
+//! near 11–12 ns (≈85 MHz). The paper reports 10.4/10.78 MHz, "limited
+//! due to hold checks in the synthesized circuit" (§6.2) — an extra
+//! ~84 ns of hold-fix buffering we model as `HOLD_FIX_NS`. Both numbers
+//! are exposed: `fmax_structural_mhz` (what the datapath could reach, the
+//! §7 future-work headroom) and `fmax_mhz` (Table 4, used everywhere for
+//! paper-comparable throughput).
+
+use super::units::*;
+
+/// Stratix IV GX (EP4SGX230-class) device totals used for utilization %.
+pub const DEVICE_ALUTS: u64 = 182_400;
+pub const DEVICE_REGS: u64 = 182_400;
+
+/// Paper Table 4 calibration targets.
+pub const TABLE4_NP_LUTS: u64 = 85_895;
+pub const TABLE4_NP_LREGS: u64 = 853;
+pub const TABLE4_NP_FMAX: f64 = 10.4;
+pub const TABLE4_NP_POWER_MW: f64 = 1006.26;
+pub const TABLE4_P_LUTS: u64 = 70_985;
+pub const TABLE4_P_LREGS: u64 = 1_057;
+pub const TABLE4_P_FMAX: f64 = 10.78;
+pub const TABLE4_P_POWER_MW: f64 = 1010.96;
+
+/// Static (leakage + clock-tree) power of the powered-up device, mW.
+pub const P_STATIC_MW: f64 = 900.0;
+/// Dynamic power per ALUT per MHz (mW) — solved from Table 4 (see below).
+pub const C_LUT_MW_PER_MHZ: f64 = 6.6791e-5;
+/// Dynamic power per register per MHz (mW) — solved from Table 4.
+pub const C_REG_MW_PER_MHZ: f64 = 5.2524e-3;
+
+/// Hold-fix buffering the paper's synthesis inserted (§6.2), ns.
+pub const HOLD_FIX_NS: f64 = 84.5;
+/// Register clk→q + setup overhead per pipeline stage, ns.
+pub const T_REG_NS: f64 = 1.2;
+
+/// Which processor organization the model describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Organization {
+    NonPipelined,
+    Pipelined,
+}
+
+/// Complete physical report for one core (one Table 4 column).
+#[derive(Clone, Copy, Debug)]
+pub struct AreaReport {
+    pub org: Organization,
+    pub luts: u64,
+    pub lregs: u64,
+    pub lut_utilization: f64,
+    pub lreg_utilization: f64,
+    pub fmax_mhz: f64,
+    pub fmax_structural_mhz: f64,
+    pub power_mw: f64,
+    /// Calibration residual folded into `luts` (interconnect/control).
+    pub lut_residual: u64,
+}
+
+pub struct PhysicalModel {
+    cfg: DatapathConfig,
+}
+
+impl PhysicalModel {
+    pub fn new(cfg: DatapathConfig) -> Self {
+        PhysicalModel { cfg }
+    }
+
+    /// Sum of the datapath units' ALUTs (both organizations share these).
+    pub fn datapath_luts(&self) -> u64 {
+        let mut total = CHECK_PREFIX_COST.luts * 5
+            + CHECK_SUFFIX_COST.luts * 15
+            + PRD_PREFIXES_COST.luts
+            + PRD_SUFFIXES_COST.luts
+            + GENERATE_STEMS_COST.luts
+            + STEM3_COMPARATORS_COST.luts
+            + STEM4_COMPARATORS_COST.luts
+            + EXTRACT_ROOT_COST.luts;
+        if self.cfg.infix_units {
+            total += INFIX_UNITS_COST.luts + INFIX_COMPARATORS_COST.luts;
+        }
+        total
+    }
+
+    /// Per-stage combinational delays (ns), in stage order.
+    pub fn stage_delays_ns(&self) -> [f64; 5] {
+        let mut s3 = GENERATE_STEMS_COST.pd_ns;
+        let mut s4 = STEM3_COMPARATORS_COST.pd_ns.max(STEM4_COMPARATORS_COST.pd_ns);
+        if self.cfg.infix_units {
+            s3 += INFIX_UNITS_COST.pd_ns;
+            s4 = s4.max(INFIX_COMPARATORS_COST.pd_ns);
+        }
+        [
+            CHECK_PREFIX_COST.pd_ns.max(CHECK_SUFFIX_COST.pd_ns),
+            PRD_PREFIXES_COST.pd_ns.max(PRD_SUFFIXES_COST.pd_ns),
+            s3,
+            s4,
+            EXTRACT_ROOT_COST.pd_ns,
+        ]
+    }
+
+    /// Structural Fmax (no hold-fix penalty): slowest stage + register
+    /// overhead. This is the §7 "higher frequencies" headroom.
+    pub fn fmax_structural_mhz(&self, org: Organization) -> f64 {
+        let slowest = self.stage_delays_ns().iter().cloned().fold(0.0, f64::max);
+        let control = match org {
+            Organization::NonPipelined => 1.6, // FSM decode + sharing muxes
+            Organization::Pipelined => 0.4,
+        };
+        1e3 / (slowest + control + T_REG_NS)
+    }
+
+    /// Reported Fmax: structural path plus the hold-fix buffering the
+    /// paper's synthesis inserted — calibrated to Table 4.
+    pub fn fmax_mhz(&self, org: Organization) -> f64 {
+        let slowest = self.stage_delays_ns().iter().cloned().fold(0.0, f64::max);
+        let control = match org {
+            Organization::NonPipelined => 1.6,
+            Organization::Pipelined => 0.4,
+        };
+        let hold = match org {
+            // Solved so the paper-config core lands exactly on Table 4:
+            // 1e3/10.4 − (9.3 + 1.6 + 1.2) = 84.06; 1e3/10.78 − 10.9 = 81.86.
+            Organization::NonPipelined => 1e3 / TABLE4_NP_FMAX - (9.3 + 1.6 + T_REG_NS),
+            Organization::Pipelined => 1e3 / TABLE4_P_FMAX - (9.3 + 0.4 + T_REG_NS),
+        };
+        1e3 / (slowest + control + T_REG_NS + hold)
+    }
+
+    /// Logic registers per organization.
+    pub fn lregs(&self, org: Organization) -> u64 {
+        // Shared: 15-char input register file (15×16) + length/valid (13)
+        // + output root register (4×16 + 3 kind/cut).
+        let shared = 240 + 13 + 67;
+        match org {
+            // Multicycle: one working register set + FSM state + counters.
+            Organization::NonPipelined => shared + 520 + 13, // = 853
+            // Pipelined: the five inter-stage register arrays dominate.
+            Organization::Pipelined => shared + 724 + 13, // = 1057
+        }
+    }
+
+    /// Organization overhead in ALUTs (resource-sharing muxes + FSM decode
+    /// for multicycle; pipeline control for pipelined). Calibrated so the
+    /// paper-config totals equal Table 4 exactly.
+    pub fn organization_overhead_luts(&self, org: Organization) -> u64 {
+        let datapath_paper_cfg = 63_070; // datapath_luts() with infix off
+        match org {
+            Organization::NonPipelined => TABLE4_NP_LUTS - datapath_paper_cfg, // 22,825
+            Organization::Pipelined => TABLE4_P_LUTS - datapath_paper_cfg,     // 7,915
+        }
+    }
+
+    pub fn luts(&self, org: Organization) -> u64 {
+        self.datapath_luts() + self.organization_overhead_luts(org)
+    }
+
+    /// Total power (mW): static + dynamic. The per-cell coefficients are
+    /// the unique solution of the two Table 4 power equations:
+    ///   1006.26 = 900 + C_L·85895·10.4  + C_R·853·10.4
+    ///   1010.96 = 900 + C_L·70985·10.78 + C_R·1057·10.78
+    pub fn power_mw(&self, org: Organization) -> f64 {
+        let f = self.fmax_mhz(org);
+        let luts = self.luts(org) as f64;
+        let regs = self.lregs(org) as f64;
+        P_STATIC_MW + (C_LUT_MW_PER_MHZ * luts + C_REG_MW_PER_MHZ * regs) * f
+    }
+
+    pub fn report(&self, org: Organization) -> AreaReport {
+        let luts = self.luts(org);
+        let lregs = self.lregs(org);
+        AreaReport {
+            org,
+            luts,
+            lregs,
+            lut_utilization: luts as f64 / DEVICE_ALUTS as f64,
+            lreg_utilization: lregs as f64 / DEVICE_REGS as f64,
+            fmax_mhz: self.fmax_mhz(org),
+            fmax_structural_mhz: self.fmax_structural_mhz(org),
+            power_mw: self.power_mw(org),
+            lut_residual: self.organization_overhead_luts(org),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_model() -> PhysicalModel {
+        PhysicalModel::new(DatapathConfig { infix_units: false })
+    }
+
+    #[test]
+    fn table4_luts_exact() {
+        let m = paper_model();
+        assert_eq!(m.luts(Organization::NonPipelined), TABLE4_NP_LUTS);
+        assert_eq!(m.luts(Organization::Pipelined), TABLE4_P_LUTS);
+    }
+
+    #[test]
+    fn table4_lregs_exact() {
+        let m = paper_model();
+        assert_eq!(m.lregs(Organization::NonPipelined), TABLE4_NP_LREGS);
+        assert_eq!(m.lregs(Organization::Pipelined), TABLE4_P_LREGS);
+    }
+
+    #[test]
+    fn table4_fmax_exact() {
+        let m = paper_model();
+        assert!((m.fmax_mhz(Organization::NonPipelined) - TABLE4_NP_FMAX).abs() < 1e-6);
+        assert!((m.fmax_mhz(Organization::Pipelined) - TABLE4_P_FMAX).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table4_power_close() {
+        let m = paper_model();
+        let np = m.power_mw(Organization::NonPipelined);
+        let p = m.power_mw(Organization::Pipelined);
+        assert!((np - TABLE4_NP_POWER_MW).abs() < 0.25, "np power {np}");
+        assert!((p - TABLE4_P_POWER_MW).abs() < 0.25, "p power {p}");
+    }
+
+    #[test]
+    fn utilization_matches_paper_bands() {
+        let m = paper_model();
+        let np = m.report(Organization::NonPipelined);
+        let p = m.report(Organization::Pipelined);
+        assert!((np.lut_utilization - 0.47).abs() < 0.01); // paper: 47%
+        assert!((p.lut_utilization - 0.39).abs() < 0.01); // paper: 39%
+        assert!(np.lreg_utilization < 0.01); // paper: <1%
+        assert!(p.lreg_utilization < 0.01);
+    }
+
+    #[test]
+    fn residuals_are_plausible() {
+        let m = paper_model();
+        for org in [Organization::NonPipelined, Organization::Pipelined] {
+            let resid = m.organization_overhead_luts(org);
+            let total = m.luts(org);
+            assert!(resid > 0);
+            assert!((resid as f64) < 0.30 * total as f64, "{org:?} residual {resid}");
+        }
+    }
+
+    #[test]
+    fn structural_fmax_shows_headroom() {
+        // §7: "optimization of the hardware cores that can operate on
+        // higher frequencies" — structural path is far faster than the
+        // hold-check-limited reported clock.
+        let m = paper_model();
+        for org in [Organization::NonPipelined, Organization::Pipelined] {
+            assert!(m.fmax_structural_mhz(org) > 5.0 * m.fmax_mhz(org));
+        }
+    }
+
+    #[test]
+    fn infix_units_cost_area() {
+        let with = PhysicalModel::new(DatapathConfig { infix_units: true });
+        let without = paper_model();
+        assert!(with.luts(Organization::Pipelined) > without.luts(Organization::Pipelined));
+        assert_eq!(
+            with.luts(Organization::Pipelined) - without.luts(Organization::Pipelined),
+            INFIX_UNITS_COST.luts + INFIX_COMPARATORS_COST.luts
+        );
+    }
+
+    #[test]
+    fn datapath_sum_constant_documented() {
+        // The 63,070 constant in organization_overhead_luts must equal the
+        // actual paper-config datapath sum.
+        let m = paper_model();
+        assert_eq!(m.datapath_luts(), 63_070);
+    }
+}

@@ -1,0 +1,55 @@
+//! Cycle-accurate simulator of the paper's two FPGA processors — the
+//! hardware substitute (DESIGN.md §5).
+//!
+//! The paper implements the LB stemmer as VHDL on an Altera Stratix-IV:
+//! a Datapath of parallel comparator arrays, stem generators and
+//! dictionary comparators separated by five register arrays (Fig 10), a
+//! five-state FSM control unit (Fig 11), and two control schemes —
+//! multicycle (non-pipelined, 5 cycles/word) and pipelined (one word per
+//! cycle after a 4-cycle fill). We do not have the FPGA; we preserve:
+//!
+//! * **functional semantics** — every datapath unit computes exactly what
+//!   the VHDL computes; the whole pipeline is cross-validated against the
+//!   software stemmer and the PJRT artifact word-for-word;
+//! * **cycle accounting** — 5·N cycles non-pipelined, N+4 pipelined,
+//!   observable per-cycle in ModelSim-style traces (Figs 13–15);
+//! * **physical envelope** — an analytic area/timing/power model
+//!   calibrated to the paper's Table 4 (Fmax, ALUTs, registers, mW), from
+//!   which Table 5 ratios and the Fig 16/17 throughput curves follow.
+//!
+//! Submodules: [`units`] (datapath functional units + per-unit cost
+//! annotations), [`processor`] (register arrays, FSM, both processors,
+//! traces), [`area`] (the physical model).
+
+pub mod area;
+pub mod processor;
+pub mod units;
+
+pub use area::{AreaReport, PhysicalModel};
+pub use processor::{NonPipelinedProcessor, PipelinedProcessor, ProcessorStats, TraceEvent};
+pub use units::{Candidates, DatapathConfig};
+
+use crate::chars::ArabicWord;
+use crate::stemmer::StemResult;
+
+/// Common interface of the two processor simulators.
+pub trait Processor {
+    /// Feed a stream of words; returns results plus cycle statistics.
+    fn run(&mut self, words: &[ArabicWord]) -> (Vec<StemResult>, ProcessorStats);
+
+    /// Clock frequency of the synthesized core in MHz (Table 4).
+    fn fmax_mhz(&self) -> f64;
+
+    /// Cycles needed for `n` words.
+    fn cycles_for(&self, n: u64) -> u64;
+
+    /// Modelled throughput in words/second for `n` words (Fig 16/17):
+    /// `n / (cycles(n) / fmax)`.
+    fn throughput_wps(&self, n: u64) -> f64 {
+        let cycles = self.cycles_for(n) as f64;
+        if cycles == 0.0 {
+            return 0.0;
+        }
+        n as f64 * self.fmax_mhz() * 1e6 / cycles
+    }
+}

@@ -1,0 +1,373 @@
+//! The two processors: register arrays, FSM control unit, and cycle-level
+//! execution (paper §4.2, Figs 10–11, 13–15).
+
+use super::units::{
+    self, AffixBits, Candidates, CutMasks, DatapathConfig, MatchBits,
+};
+use crate::chars::ArabicWord;
+use crate::roots::RootSet;
+use crate::stemmer::StemResult;
+use std::sync::Arc;
+
+/// FSM states of the non-pipelined control unit (Fig 11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsmState {
+    /// S0: latch input word; run the checkPrefix/checkSuffix arrays.
+    Check,
+    /// S1: produce prefix/suffix cut masks.
+    Produce,
+    /// S2: generate + filter stems.
+    Generate,
+    /// S3: compare against the stored roots.
+    Compare,
+    /// S4: extract the root; raise `done`.
+    Extract,
+}
+
+impl FsmState {
+    pub fn next(self) -> FsmState {
+        match self {
+            FsmState::Check => FsmState::Produce,
+            FsmState::Produce => FsmState::Generate,
+            FsmState::Generate => FsmState::Compare,
+            FsmState::Compare => FsmState::Extract,
+            FsmState::Extract => FsmState::Check,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            FsmState::Check => 0,
+            FsmState::Produce => 1,
+            FsmState::Generate => 2,
+            FsmState::Compare => 3,
+            FsmState::Extract => 4,
+        }
+    }
+}
+
+/// Data captured in the inter-stage register arrays (dark-gray in Fig 10).
+#[derive(Clone, Copy, Debug)]
+struct StageRegs {
+    word: ArabicWord,
+    bits: Option<AffixBits>,
+    masks: Option<CutMasks>,
+    cands: Option<Candidates>,
+    matches: Option<MatchBits>,
+}
+
+impl StageRegs {
+    fn new(word: ArabicWord) -> Self {
+        StageRegs { word, bits: None, masks: None, cands: None, matches: None }
+    }
+}
+
+/// Execution statistics for a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProcessorStats {
+    pub words: u64,
+    pub cycles: u64,
+    /// Latency, in cycles, from a word's issue to its root appearing.
+    pub latency_cycles: u64,
+}
+
+/// One row of a ModelSim-style trace (Figs 13–15): cycle number, FSM
+/// state / stage occupancy, and the visible output registers.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    pub label: String,
+    pub detail: String,
+}
+
+/// The multicycle (non-pipelined) processor: one word occupies the whole
+/// datapath for five FSM states.
+pub struct NonPipelinedProcessor {
+    roots: Arc<RootSet>,
+    cfg: DatapathConfig,
+    fmax_mhz: f64,
+    pub trace: Option<Vec<TraceEvent>>,
+}
+
+/// Paper Table 4 clock rates.
+pub const FMAX_NON_PIPELINED_MHZ: f64 = 10.4;
+pub const FMAX_PIPELINED_MHZ: f64 = 10.78;
+
+impl NonPipelinedProcessor {
+    pub fn new(roots: Arc<RootSet>, cfg: DatapathConfig) -> Self {
+        NonPipelinedProcessor { roots, cfg, fmax_mhz: FMAX_NON_PIPELINED_MHZ, trace: None }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.trace = Some(Vec::new());
+        self
+    }
+
+    fn trace_event(&mut self, cycle: u64, label: &str, detail: String) {
+        if let Some(t) = self.trace.as_mut() {
+            t.push(TraceEvent { cycle, label: label.to_string(), detail });
+        }
+    }
+
+    /// Execute one word through the five FSM states, advancing the cycle
+    /// counter once per state — exactly the Fig 11 schedule.
+    fn run_word(&mut self, word: &ArabicWord, cycle: &mut u64) -> StemResult {
+        let mut regs = StageRegs::new(*word);
+        let mut state = FsmState::Check;
+        let mut result = StemResult::NONE;
+        for _ in 0..5 {
+            match state {
+                FsmState::Check => {
+                    regs.bits = Some(units::stage1_check(&regs.word));
+                    self.trace_event(*cycle, "S0/check", regs.word.to_display());
+                }
+                FsmState::Produce => {
+                    regs.masks = Some(units::stage2_produce(&regs.word, &regs.bits.unwrap()));
+                }
+                FsmState::Generate => {
+                    regs.cands =
+                        Some(units::stage3_generate(&regs.word, &regs.masks.unwrap(), &self.cfg));
+                }
+                FsmState::Compare => {
+                    regs.matches =
+                        Some(units::stage4_compare(&regs.cands.unwrap(), &self.roots, &self.cfg));
+                }
+                FsmState::Extract => {
+                    result = units::stage5_extract(&regs.cands.unwrap(), &regs.matches.unwrap());
+                    self.trace_event(
+                        *cycle,
+                        "S4/extract",
+                        format!("{} -> {}", regs.word.to_string_ar(), result.root_word()),
+                    );
+                }
+            }
+            *cycle += 1;
+            state = state.next();
+        }
+        result
+    }
+}
+
+impl super::Processor for NonPipelinedProcessor {
+    fn run(&mut self, words: &[ArabicWord]) -> (Vec<StemResult>, ProcessorStats) {
+        let mut cycle = 0u64;
+        let results = words
+            .iter()
+            .map(|w| self.run_word(w, &mut cycle))
+            .collect::<Vec<_>>();
+        let stats =
+            ProcessorStats { words: words.len() as u64, cycles: cycle, latency_cycles: 5 };
+        (results, stats)
+    }
+
+    fn fmax_mhz(&self) -> f64 {
+        self.fmax_mhz
+    }
+
+    fn cycles_for(&self, n: u64) -> u64 {
+        5 * n
+    }
+}
+
+/// The pipelined processor: all five stages execute concurrently on
+/// different words; the register arrays shift every clock (Fig 15 — roots
+/// appear after the fifth cycle and then every cycle).
+pub struct PipelinedProcessor {
+    roots: Arc<RootSet>,
+    cfg: DatapathConfig,
+    fmax_mhz: f64,
+    pub trace: Option<Vec<TraceEvent>>,
+}
+
+impl PipelinedProcessor {
+    pub fn new(roots: Arc<RootSet>, cfg: DatapathConfig) -> Self {
+        PipelinedProcessor { roots, cfg, fmax_mhz: FMAX_PIPELINED_MHZ, trace: None }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.trace = Some(Vec::new());
+        self
+    }
+}
+
+impl super::Processor for PipelinedProcessor {
+    fn run(&mut self, words: &[ArabicWord]) -> (Vec<StemResult>, ProcessorStats) {
+        // Five pipeline latches; slot i holds the word occupying stage i+1.
+        let mut s1: Option<StageRegs> = None; // post-check
+        let mut s2: Option<StageRegs> = None; // post-produce
+        let mut s3: Option<StageRegs> = None; // post-generate
+        let mut s4: Option<StageRegs> = None; // post-compare
+        let mut results = Vec::with_capacity(words.len());
+        let mut feed = words.iter();
+        let mut cycle = 0u64;
+        let total = words.len();
+
+        while results.len() < total {
+            cycle += 1;
+            // Stage 5 drains the oldest word first (so reads see the
+            // previous cycle's latch values), then latches shift.
+            if let Some(r) = s4.take() {
+                let res = units::stage5_extract(&r.cands.unwrap(), &r.matches.unwrap());
+                if let Some(t) = self.trace.as_mut() {
+                    t.push(TraceEvent {
+                        cycle,
+                        label: "out".into(),
+                        detail: format!("{} -> {}", r.word.to_string_ar(), res.root_word()),
+                    });
+                }
+                results.push(res);
+            }
+            if let Some(mut r) = s3.take() {
+                r.matches = Some(units::stage4_compare(&r.cands.unwrap(), &self.roots, &self.cfg));
+                s4 = Some(r);
+            }
+            if let Some(mut r) = s2.take() {
+                r.cands = Some(units::stage3_generate(&r.word, &r.masks.unwrap(), &self.cfg));
+                s3 = Some(r);
+            }
+            if let Some(mut r) = s1.take() {
+                r.masks = Some(units::stage2_produce(&r.word, &r.bits.unwrap()));
+                s2 = Some(r);
+            }
+            if let Some(w) = feed.next() {
+                let mut r = StageRegs::new(*w);
+                r.bits = Some(units::stage1_check(&r.word));
+                if let Some(t) = self.trace.as_mut() {
+                    t.push(TraceEvent {
+                        cycle,
+                        label: "in".into(),
+                        detail: w.to_string_ar(),
+                    });
+                }
+                s1 = Some(r);
+            }
+        }
+
+        let stats = ProcessorStats {
+            words: total as u64,
+            cycles: cycle,
+            latency_cycles: 5,
+        };
+        (results, stats)
+    }
+
+    fn fmax_mhz(&self) -> f64 {
+        self.fmax_mhz
+    }
+
+    fn cycles_for(&self, n: u64) -> u64 {
+        if n == 0 {
+            0
+        } else {
+            n + 4
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::Processor;
+    use crate::stemmer::Stemmer;
+
+    fn words(list: &[&str]) -> Vec<ArabicWord> {
+        list.iter().map(|s| ArabicWord::encode(s)).collect()
+    }
+
+    fn roots() -> Arc<RootSet> {
+        Arc::new(RootSet::builtin_mini())
+    }
+
+    #[test]
+    fn non_pipelined_cycle_count() {
+        let mut p = NonPipelinedProcessor::new(roots(), DatapathConfig::default());
+        let ws = words(&["سيلعبون", "يدرس", "قال"]);
+        let (res, stats) = p.run(&ws);
+        assert_eq!(res.len(), 3);
+        assert_eq!(stats.cycles, 15); // 5 cycles per word (Fig 11)
+        assert_eq!(p.cycles_for(1000), 5000);
+    }
+
+    #[test]
+    fn pipelined_cycle_count() {
+        let mut p = PipelinedProcessor::new(roots(), DatapathConfig::default());
+        let ws = words(&["سيلعبون", "يدرس", "فتزحزحت", "درس", "لعب", "علم"]);
+        let (res, stats) = p.run(&ws);
+        assert_eq!(res.len(), 6);
+        // first root after 5 cycles, then one per cycle: N + 4
+        assert_eq!(stats.cycles, 10);
+        assert_eq!(p.cycles_for(1), 5);
+        assert_eq!(p.cycles_for(100), 104);
+    }
+
+    #[test]
+    fn both_processors_agree_with_each_other_and_software() {
+        let r = roots();
+        let cfg = DatapathConfig { infix_units: true };
+        let sw = Stemmer::with_defaults(r.clone());
+        let ws = words(&[
+            "سيلعبون",
+            "أفاستسقيناكموها",
+            "فتزحزحت",
+            "قال",
+            "كاتب",
+            "ماد",
+            "يدرسون",
+            "ظظظظ",
+        ]);
+        let mut np = NonPipelinedProcessor::new(r.clone(), cfg);
+        let mut pp = PipelinedProcessor::new(r.clone(), cfg);
+        let (a, _) = np.run(&ws);
+        let (b, _) = pp.run(&ws);
+        let c = sw.stem_batch(&ws);
+        assert_eq!(a, b, "np vs pipelined");
+        assert_eq!(a, c, "hw vs software");
+    }
+
+    #[test]
+    fn pipelined_preserves_order() {
+        let r = roots();
+        let ws = words(&["يدرس", "يلعب", "يعلم", "يكتب", "يقول"]);
+        let mut pp = PipelinedProcessor::new(r.clone(), DatapathConfig::default());
+        let mut np = NonPipelinedProcessor::new(r, DatapathConfig::default());
+        let (a, _) = pp.run(&ws);
+        let (b, _) = np.run(&ws);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn paper_fig13_trace() {
+        // أفاستسقيناكموها → سقي with a visible 5-state trace.
+        let mut p =
+            NonPipelinedProcessor::new(roots(), DatapathConfig::default()).with_trace();
+        let ws = words(&["أفاستسقيناكموها"]);
+        let (res, _) = p.run(&ws);
+        assert_eq!(res[0].root_word().to_string_ar(), "سقي");
+        let trace = p.trace.unwrap();
+        assert!(trace.iter().any(|e| e.label == "S0/check"));
+        assert!(trace.iter().any(|e| e.label == "S4/extract" && e.detail.contains("سقي")));
+    }
+
+    #[test]
+    fn empty_input() {
+        let mut p = PipelinedProcessor::new(roots(), DatapathConfig::default());
+        let (res, stats) = p.run(&[]);
+        assert!(res.is_empty());
+        assert_eq!(stats.cycles, 0);
+        assert_eq!(p.cycles_for(0), 0);
+    }
+
+    #[test]
+    fn throughput_model_matches_paper() {
+        // Paper: NP = 2.08 MWps; pipelined asymptote = 10.78 MWps.
+        let np = NonPipelinedProcessor::new(roots(), DatapathConfig::default());
+        let pp = PipelinedProcessor::new(roots(), DatapathConfig::default());
+        let th_np = np.throughput_wps(77_476);
+        let th_pp = pp.throughput_wps(77_476);
+        assert!((th_np - 2.08e6).abs() < 1e3, "np {th_np}");
+        assert!((th_pp - 10.78e6).abs() < 0.01e6, "pp {th_pp}");
+        // Fig 17 asymptote: 5.18× speedup of pipelined over non-pipelined.
+        let speedup = th_pp / th_np;
+        assert!((speedup - 5.18).abs() < 0.01, "speedup {speedup}");
+    }
+}

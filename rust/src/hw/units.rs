@@ -1,0 +1,366 @@
+//! Datapath functional units (paper Figs 6–10, 12) with per-unit cost
+//! annotations for the physical model.
+//!
+//! Each unit mirrors one VHDL entity: it computes the same combinational
+//! function and carries an estimated (propagation delay, ALUTs, logic
+//! registers) triple. The per-unit numbers are a decomposition model — the
+//! *totals* are calibrated against Table 4 in [`super::area`].
+
+use crate::chars::{self, ArabicWord, MAX_PREFIX, MAX_SUFFIX, MAX_WORD};
+use crate::roots::RootSet;
+use crate::stemmer::{MatchKind, StemResult};
+use std::sync::Arc;
+
+/// Cost annotation of a combinational unit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UnitCost {
+    /// Propagation delay in nanoseconds through the unit.
+    pub pd_ns: f64,
+    /// Adaptive LUTs consumed (Stratix-IV ALUTs).
+    pub luts: u64,
+    /// Logic registers consumed.
+    pub lregs: u64,
+}
+
+impl UnitCost {
+    pub const fn new(pd_ns: f64, luts: u64, lregs: u64) -> Self {
+        UnitCost { pd_ns, luts, lregs }
+    }
+}
+
+/// Datapath configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct DatapathConfig {
+    /// Include the §6.3 infix-processing units. The paper's synthesized
+    /// cores do NOT include them (listed as future work §7); enable to
+    /// model the extended processor used for the accuracy experiments.
+    pub infix_units: bool,
+}
+
+impl Default for DatapathConfig {
+    fn default() -> Self {
+        DatapathConfig { infix_units: false }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 1: checkPrefix × 5 and checkSuffix × 15 (Figs 6–7)
+// ---------------------------------------------------------------------------
+
+/// `checkPrefix`: seven parallel 16-bit comparators + OR tree (Fig 6).
+pub fn check_prefix(c: u16) -> bool {
+    chars::is_prefix_letter(c)
+}
+
+/// `checkSuffix`: nine parallel comparators + OR tree.
+pub fn check_suffix(c: u16) -> bool {
+    chars::is_suffix_letter(c)
+}
+
+/// One `checkPrefix` instance: 7 × (16-bit equality ≈ 11 ALUTs) + OR tree.
+pub const CHECK_PREFIX_COST: UnitCost = UnitCost::new(3.1, 84, 0);
+/// One `checkSuffix` instance: 9 comparators.
+pub const CHECK_SUFFIX_COST: UnitCost = UnitCost::new(3.4, 104, 0);
+
+/// Stage-1 output: the raw comparator bits, gated by word length
+/// ("U" registers in the paper's traces).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AffixBits {
+    pub pmask: [bool; MAX_PREFIX],
+    pub smask: [bool; MAX_WORD],
+}
+
+pub fn stage1_check(word: &ArabicWord) -> AffixBits {
+    let mut pmask = [false; MAX_PREFIX];
+    let mut smask = [false; MAX_WORD];
+    for i in 0..MAX_PREFIX.min(word.len) {
+        pmask[i] = check_prefix(word.chars[i]);
+    }
+    for j in 0..word.len {
+        smask[j] = check_suffix(word.chars[j]);
+    }
+    AffixBits { pmask, smask }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 2: prdPrefixes / prdSuffixes — masking beyond the first break
+// (paper §4.1: "(110111) … masked to (11UUUU)")
+// ---------------------------------------------------------------------------
+
+/// Produced cut-validity vectors. `prefix_valid[p]` ⇔ the first `p`
+/// characters are all prefix letters; `suffix_from[k]` ⇔ every in-word
+/// position ≥ `k` is a suffix letter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CutMasks {
+    pub prefix_valid: [bool; MAX_PREFIX + 1],
+    pub suffix_from: [bool; MAX_WORD + 1],
+}
+
+pub const PRD_PREFIXES_COST: UnitCost = UnitCost::new(2.2, 420, 0);
+pub const PRD_SUFFIXES_COST: UnitCost = UnitCost::new(2.9, 1310, 0);
+
+pub fn stage2_produce(word: &ArabicWord, bits: &AffixBits) -> CutMasks {
+    let n = word.len;
+    let mut prefix_valid = [false; MAX_PREFIX + 1];
+    prefix_valid[0] = true;
+    for p in 1..=MAX_PREFIX {
+        prefix_valid[p] = prefix_valid[p - 1] && p <= n && bits.pmask.get(p - 1).copied().unwrap_or(false);
+    }
+    let mut suffix_from = [false; MAX_WORD + 1];
+    suffix_from[MAX_WORD] = true;
+    for k in (0..MAX_WORD).rev() {
+        let ok = k >= n || bits.smask[k];
+        suffix_from[k] = ok && suffix_from[k + 1];
+    }
+    CutMasks { prefix_valid, suffix_from }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 3: generateStems — the substring truncation of Fig 12 / Table 3
+// ---------------------------------------------------------------------------
+
+/// Generated candidate stems, filtered by size (trilateral/quadrilateral)
+/// plus the infix-derived streams when the infix units are present.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Candidates {
+    pub stem3: [[u16; 3]; MAX_PREFIX + 1],
+    pub valid3: [bool; MAX_PREFIX + 1],
+    pub stem4: [[u16; 4]; MAX_PREFIX + 1],
+    pub valid4: [bool; MAX_PREFIX + 1],
+    /// Remove-Infix (quad → tri): stem4 minus its 2nd character.
+    pub rm3: [[u16; 3]; MAX_PREFIX + 1],
+    pub rm3_valid: [bool; MAX_PREFIX + 1],
+    /// Remove-Infix (tri → bi): stem3 minus its 2nd character.
+    pub rm2: [[u16; 2]; MAX_PREFIX + 1],
+    pub rm2_valid: [bool; MAX_PREFIX + 1],
+    /// Restore-Original-Form: stem3 with 2nd char ا→و.
+    pub rs3: [[u16; 3]; MAX_PREFIX + 1],
+    pub rs3_valid: [bool; MAX_PREFIX + 1],
+}
+
+/// The substring-truncation block dominates stage-3 area: it replicates
+/// the cut logic for all (p, s) pairs (paper §5.1 "mass replications").
+pub const GENERATE_STEMS_COST: UnitCost = UnitCost::new(9.3, 21_700, 0);
+pub const INFIX_UNITS_COST: UnitCost = UnitCost::new(2.4, 3_150, 0);
+
+pub fn stage3_generate(word: &ArabicWord, masks: &CutMasks, cfg: &DatapathConfig) -> Candidates {
+    let n = word.len;
+    let mut c = Candidates::default();
+    for p in 0..=MAX_PREFIX {
+        // Trilateral window (s_index - 1) - (p_index + 1) == 2 (Fig 12).
+        let window_valid = |size: usize| {
+            masks.prefix_valid[p]
+                && p + size <= n
+                && n - (p + size) <= MAX_SUFFIX
+                && masks.suffix_from[p + size]
+        };
+        if window_valid(3) {
+            c.valid3[p] = true;
+            c.stem3[p] = [word.chars[p], word.chars[p + 1], word.chars[p + 2]];
+        }
+        if window_valid(4) {
+            c.valid4[p] = true;
+            c.stem4[p] =
+                [word.chars[p], word.chars[p + 1], word.chars[p + 2], word.chars[p + 3]];
+        }
+        if cfg.infix_units {
+            if c.valid4[p] && chars::is_infix_letter(c.stem4[p][1]) {
+                c.rm3_valid[p] = true;
+                c.rm3[p] = [c.stem4[p][0], c.stem4[p][2], c.stem4[p][3]];
+            }
+            if c.valid3[p] && chars::is_infix_letter(c.stem3[p][1]) {
+                c.rm2_valid[p] = true;
+                c.rm2[p] = [c.stem3[p][0], c.stem3[p][2]];
+            }
+            if c.valid3[p] && c.stem3[p][1] == chars::ALEF {
+                c.rs3_valid[p] = true;
+                c.rs3[p] = [c.stem3[p][0], chars::WAW, c.stem3[p][2]];
+            }
+        }
+    }
+    c
+}
+
+// ---------------------------------------------------------------------------
+// Stage 4: compareStems — stem3/stem4 comparators against the root store
+// (Fig 8; "internally sequential" per §3.2)
+// ---------------------------------------------------------------------------
+
+/// Match bits for every candidate stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MatchBits {
+    pub m3: [bool; MAX_PREFIX + 1],
+    pub m4: [bool; MAX_PREFIX + 1],
+    pub mrm3: [bool; MAX_PREFIX + 1],
+    pub mrm2: [bool; MAX_PREFIX + 1],
+    pub mrs3: [bool; MAX_PREFIX + 1],
+}
+
+/// Six replicated `stem3_Comparator` instances + root store addressing.
+pub const STEM3_COMPARATORS_COST: UnitCost = UnitCost::new(8.9, 19_650, 0);
+/// Six replicated `stem4_Comparator` instances (wider words).
+pub const STEM4_COMPARATORS_COST: UnitCost = UnitCost::new(9.1, 16_120, 0);
+/// Comparators for the infix-reduced streams.
+pub const INFIX_COMPARATORS_COST: UnitCost = UnitCost::new(8.2, 9_800, 0);
+
+pub fn stage4_compare(cands: &Candidates, roots: &RootSet, cfg: &DatapathConfig) -> MatchBits {
+    let mut m = MatchBits::default();
+    for p in 0..=MAX_PREFIX {
+        m.m3[p] = cands.valid3[p] && roots.tri.contains(&cands.stem3[p]);
+        m.m4[p] = cands.valid4[p] && roots.quad.contains(&cands.stem4[p]);
+        if cfg.infix_units {
+            m.mrm3[p] = cands.rm3_valid[p] && roots.tri.contains(&cands.rm3[p]);
+            m.mrm2[p] = cands.rm2_valid[p] && roots.bi.contains(&cands.rm2[p]);
+            m.mrs3[p] = cands.rs3_valid[p] && roots.tri.contains(&cands.rs3[p]);
+        }
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Stage 5: extractRoot — priority encoder over all match bits
+// ---------------------------------------------------------------------------
+
+pub const EXTRACT_ROOT_COST: UnitCost = UnitCost::new(4.6, 1_890, 0);
+
+pub fn stage5_extract(cands: &Candidates, m: &MatchBits) -> StemResult {
+    for p in 0..=MAX_PREFIX {
+        if m.m3[p] {
+            let s = cands.stem3[p];
+            return StemResult { root: [s[0], s[1], s[2], 0], kind: MatchKind::Tri, cut: p as u8 };
+        }
+    }
+    for p in 0..=MAX_PREFIX {
+        if m.m4[p] {
+            return StemResult { root: cands.stem4[p], kind: MatchKind::Quad, cut: p as u8 };
+        }
+    }
+    for p in 0..=MAX_PREFIX {
+        if m.mrm3[p] {
+            let s = cands.rm3[p];
+            return StemResult {
+                root: [s[0], s[1], s[2], 0],
+                kind: MatchKind::RmInfixTri,
+                cut: p as u8,
+            };
+        }
+    }
+    for p in 0..=MAX_PREFIX {
+        if m.mrm2[p] {
+            let s = cands.rm2[p];
+            return StemResult {
+                root: [s[0], s[1], 0, 0],
+                kind: MatchKind::RmInfixBi,
+                cut: p as u8,
+            };
+        }
+    }
+    for p in 0..=MAX_PREFIX {
+        if m.mrs3[p] {
+            let s = cands.rs3[p];
+            return StemResult {
+                root: [s[0], s[1], s[2], 0],
+                kind: MatchKind::Restored,
+                cut: p as u8,
+            };
+        }
+    }
+    StemResult::NONE
+}
+
+/// The full combinational datapath, single word (used by both processors).
+pub fn datapath(word: &ArabicWord, roots: &Arc<RootSet>, cfg: &DatapathConfig) -> StemResult {
+    let bits = stage1_check(word);
+    let masks = stage2_produce(word, &bits);
+    let cands = stage3_generate(word, &masks, cfg);
+    let m = stage4_compare(&cands, roots, cfg);
+    stage5_extract(&cands, &m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stemmer::{Stemmer, StemmerConfig};
+
+    fn roots() -> Arc<RootSet> {
+        Arc::new(RootSet::builtin_mini())
+    }
+
+    #[test]
+    fn table3_truncation_of_sayalaboon() {
+        // Paper Table 3: سيلعبون → prefixes (0000011), suffixes (110000…);
+        // permitted substrings: لعب (tri), يلعب, لعبو (quad).
+        let w = ArabicWord::encode("سيلعبون");
+        let bits = stage1_check(&w);
+        // س and ي are prefix letters
+        assert!(bits.pmask[0] && bits.pmask[1]);
+        // ل is not a suffix? ل ∉ SUFFIX_LETTERS; و ن are
+        let masks = stage2_produce(&w, &bits);
+        assert!(masks.prefix_valid[2]); // cut after سي
+        let cands = stage3_generate(&w, &masks, &DatapathConfig::default());
+        assert!(cands.valid3[2]);
+        assert_eq!(cands.stem3[2], [w.chars[2], w.chars[3], w.chars[4]]); // لعب
+        // quadrilateral candidates: يلعب (p=1), لعبو (p=2)
+        assert!(cands.valid4[1] && cands.valid4[2]);
+    }
+
+    #[test]
+    fn datapath_equals_software_stemmer_no_infix() {
+        let r = roots();
+        let sw = Stemmer::new(r.clone(), StemmerConfig { infix_processing: false });
+        let cfg = DatapathConfig { infix_units: false };
+        for s in ["سيلعبون", "أفاستسقيناكموها", "فتزحزحت", "قال", "يدرسون", "ظظظ", ""] {
+            let w = ArabicWord::encode(s);
+            assert_eq!(datapath(&w, &r, &cfg), sw.stem(&w), "word {s}");
+        }
+    }
+
+    #[test]
+    fn datapath_equals_software_stemmer_with_infix() {
+        let r = roots();
+        let sw = Stemmer::with_defaults(r.clone());
+        let cfg = DatapathConfig { infix_units: true };
+        for s in ["قال", "كاتب", "ماد", "يدارس", "سيلعبون", "والدارسون"] {
+            let w = ArabicWord::encode(s);
+            assert_eq!(datapath(&w, &r, &cfg), sw.stem(&w), "word {s}");
+        }
+    }
+
+    #[test]
+    fn prd_masks_stop_at_break() {
+        // بكتبون: the paper's §4.1 masking example — the ب in the middle
+        // ends the suffix run; positions before it are "U".
+        let w = ArabicWord::encode("بكتبون");
+        let bits = stage1_check(&w);
+        let masks = stage2_produce(&w, &bits);
+        // suffix run covers only ون (positions 4,5) and beyond
+        assert!(masks.suffix_from[4]);
+        assert!(!masks.suffix_from[3]); // ب at 3 breaks the run
+        // ب is not a prefix letter → no cut past 0
+        assert!(masks.prefix_valid[0] && !masks.prefix_valid[1]);
+    }
+
+    #[test]
+    fn stage5_priority_tri_over_quad() {
+        let r = roots();
+        let w = ArabicWord::encode("درسن"); // tri درس (p=0) and maybe quad درسن
+        let cfg = DatapathConfig::default();
+        let res = datapath(&w, &r, &cfg);
+        assert_eq!(res.kind, MatchKind::Tri);
+        assert_eq!(res.cut, 0);
+    }
+
+    #[test]
+    fn infix_units_gate() {
+        let r = roots();
+        let w = ArabicWord::encode("قال");
+        assert_eq!(
+            datapath(&w, &r, &DatapathConfig { infix_units: false }).kind,
+            MatchKind::None
+        );
+        assert_eq!(
+            datapath(&w, &r, &DatapathConfig { infix_units: true }).kind,
+            MatchKind::Restored
+        );
+    }
+}

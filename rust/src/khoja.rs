@@ -1,0 +1,236 @@
+//! Khoja-stemmer baseline (Khoja & Garside 1999) — the comparator in the
+//! paper's Table 7.
+//!
+//! Reimplementation of the core pipeline: stop-word check, definite-article
+//! and conjunction stripping, iterative affix removal, then matching the
+//! remainder against morphological patterns of the same length to extract
+//! the root, validated against the dictionary.
+//!
+//! Simplifications vs the original tool (documented per DESIGN.md §5): the
+//! pattern list covers the common تفعيل/استفعال family but not every rare
+//! template, and hollow-verb normalization is omitted — which is exactly the
+//! weakness the paper observes (Khoja recovers only 32/1390 of كون).
+
+use crate::chars::{self, ArabicWord};
+use crate::roots::RootSet;
+use crate::stemmer::{MatchKind, StemResult};
+use std::sync::Arc;
+
+/// Pattern placeholders: ف=radical 1, ع=radical 2, ل=radical 3.
+const FA: u16 = chars::FEH;
+const AYN: u16 = chars::AIN;
+const LAM_R: u16 = chars::LAM;
+
+/// Morphological patterns by surface length. Each pattern is a sequence of
+/// codepoints where ف/ع/ل mark radical positions and anything else must
+/// match literally.
+fn patterns(len: usize) -> &'static [&'static str] {
+    match len {
+        4 => &[
+            "فاعل", "فعال", "فعول", "فعيل", "فعلة", "مفعل", "يفعل", "تفعل", "نفعل", "افعل",
+            "فعلت", "فعلن", "فعلا",
+        ],
+        5 => &[
+            "مفعول", "مفاعل", "تفاعل", "يفاعل", "فواعل", "فعائل", "افتعل", "انفعل", "تفعيل",
+            "مفعلة", "يفعلن", "تفعلن",
+        ],
+        6 => &["استفعل", "مستفعل", "متفاعل", "مفاعيل", "افتعال", "انفعال"],
+        7 => &["استفعال", "مستفعلة"],
+        _ => &[],
+    }
+}
+
+/// Definite articles + conjunction prefixes, longest first.
+const ARTICLES: &[&str] = &["وال", "فال", "بال", "كال", "ولل", "ال", "لل", "و", "ف"];
+
+/// Suffixes, longest first (Khoja's list, trimmed to the common core).
+const SUFFIXES: &[&str] = &[
+    "تموها", "كموها", "ناكم", "تما", "كما", "هما", "تم", "تن", "نا", "وا", "ما", "ها", "ان",
+    "ات", "ون", "ين", "كم", "كن", "هم", "هن", "ني", "وه", "ية", "ة", "ه", "ي", "ا", "ت", "ك",
+    "ن",
+];
+
+/// Single-character verbal prefixes tried during iterative stripping.
+const PREFIXES: &[u16] = &[chars::YEH, chars::TEH, chars::NOON, chars::ALEF, chars::SEEN, chars::MEEM];
+
+/// A small stop-word list (particles the stemmer passes through).
+const STOP_WORDS: &[&str] = &[
+    "من", "في", "على", "الى", "عن", "مع", "هذا", "هذه", "ذلك", "التي", "الذي", "لقد", "قد",
+    "لم", "لن", "لو", "ما", "لا", "ان", "او", "ثم", "بل", "كل", "بعض", "غير", "بين", "عند",
+];
+
+pub struct KhojaStemmer {
+    roots: Arc<RootSet>,
+    stop: Vec<ArabicWord>,
+}
+
+impl KhojaStemmer {
+    pub fn new(roots: Arc<RootSet>) -> Self {
+        let stop = STOP_WORDS.iter().map(|s| ArabicWord::encode(s)).collect();
+        KhojaStemmer { roots, stop }
+    }
+
+    fn try_root(&self, cand: &[u16]) -> Option<StemResult> {
+        match cand.len() {
+            3 => {
+                let key = [cand[0], cand[1], cand[2]];
+                self.roots.tri.contains(&key).then(|| StemResult {
+                    root: [cand[0], cand[1], cand[2], 0],
+                    kind: MatchKind::Tri,
+                    cut: 0,
+                })
+            }
+            4 => {
+                let key = [cand[0], cand[1], cand[2], cand[3]];
+                self.roots.quad.contains(&key).then(|| StemResult {
+                    root: key,
+                    kind: MatchKind::Quad,
+                    cut: 0,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Match `w` against the same-length patterns; extract radicals.
+    fn match_patterns(&self, w: &[u16]) -> Option<StemResult> {
+        for pat in patterns(w.len()) {
+            let pcs: Vec<u16> = pat.chars().map(|c| c as u16).collect();
+            debug_assert_eq!(pcs.len(), w.len(), "pattern {pat} length");
+            let mut radicals = Vec::with_capacity(3);
+            let mut ok = true;
+            for (i, &pc) in pcs.iter().enumerate() {
+                if pc == FA || pc == AYN || pc == LAM_R {
+                    radicals.push(w[i]);
+                } else if pc != w[i] {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok && radicals.len() == 3 {
+                if let Some(r) = self.try_root(&radicals) {
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+
+    /// Extract the root of `w`, Khoja-style. Returns `StemResult::NONE` for
+    /// stop words and unmatched words.
+    pub fn stem(&self, w: &ArabicWord) -> StemResult {
+        if w.len < 2 || self.stop.contains(w) {
+            return StemResult::NONE;
+        }
+        // 1. strip definite article / conjunction (once, longest first)
+        let mut cur: Vec<u16> = w.as_slice().to_vec();
+        for art in ARTICLES {
+            let a = ArabicWord::encode(art);
+            if cur.len() > a.len + 2 && cur[..a.len] == a.chars[..a.len] {
+                cur.drain(..a.len);
+                break;
+            }
+        }
+        // 2. iterative reduction: direct root, then patterns, then strip
+        //    a suffix, then a verbal prefix — until too short.
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            if guard > 16 {
+                return StemResult::NONE;
+            }
+            if cur.len() == 3 || cur.len() == 4 {
+                if let Some(r) = self.try_root(&cur) {
+                    return r;
+                }
+            }
+            if (4..=7).contains(&cur.len()) {
+                if let Some(r) = self.match_patterns(&cur) {
+                    return r;
+                }
+            }
+            // strip the longest matching suffix
+            let mut stripped = false;
+            for suf in SUFFIXES {
+                let s = ArabicWord::encode(suf);
+                if cur.len() > s.len + 2 && cur[cur.len() - s.len..] == s.chars[..s.len] {
+                    cur.truncate(cur.len() - s.len);
+                    stripped = true;
+                    break;
+                }
+            }
+            if stripped {
+                continue;
+            }
+            // strip one verbal prefix character
+            if cur.len() > 3 && PREFIXES.contains(&cur[0]) {
+                cur.remove(0);
+                continue;
+            }
+            return StemResult::NONE;
+        }
+    }
+
+    pub fn stem_batch(&self, words: &[ArabicWord]) -> Vec<StemResult> {
+        words.iter().map(|w| self.stem(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kh() -> KhojaStemmer {
+        KhojaStemmer::new(Arc::new(RootSet::builtin_mini()))
+    }
+
+    fn root_str(r: &StemResult) -> String {
+        r.root_word().to_string_ar()
+    }
+
+    #[test]
+    fn direct_root() {
+        assert_eq!(root_str(&kh().stem(&ArabicWord::encode("درس"))), "درس");
+    }
+
+    #[test]
+    fn pattern_faail() {
+        // دارس matches فاعل → درس
+        assert_eq!(root_str(&kh().stem(&ArabicWord::encode("دارس"))), "درس");
+    }
+
+    #[test]
+    fn pattern_mafool() {
+        // مدروس matches مفعول → درس
+        assert_eq!(root_str(&kh().stem(&ArabicWord::encode("مدروس"))), "درس");
+    }
+
+    #[test]
+    fn article_and_suffix() {
+        // والدارسون → strip وال → دارسون → strip ون → دارس → فاعل → درس
+        assert_eq!(root_str(&kh().stem(&ArabicWord::encode("والدارسون"))), "درس");
+    }
+
+    #[test]
+    fn present_tense() {
+        // يدرسون → strip ون → يدرس → يفعل → درس
+        assert_eq!(root_str(&kh().stem(&ArabicWord::encode("يدرسون"))), "درس");
+    }
+
+    #[test]
+    fn hollow_verb_fails() {
+        // قال: the simplified Khoja has no hollow normalization — misses قول.
+        // (This is the Table-7 كون phenomenon.)
+        assert_eq!(kh().stem(&ArabicWord::encode("قال")).kind, MatchKind::None);
+    }
+
+    #[test]
+    fn stop_word_passthrough() {
+        assert_eq!(kh().stem(&ArabicWord::encode("على")).kind, MatchKind::None);
+    }
+
+    #[test]
+    fn quadrilateral_direct() {
+        assert_eq!(root_str(&kh().stem(&ArabicWord::encode("دحرج"))), "دحرج");
+    }
+}

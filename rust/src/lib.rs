@@ -1,0 +1,41 @@
+//! # ama — Arabic Morphological Analysis, three-layer reproduction
+//!
+//! Reproduction of *"Parallel Hardware for Faster Morphological Analysis"*
+//! (Damaj, Imdoukh, Zantout — J. King Saud Univ. CIS, 2017/2019).
+//!
+//! The paper builds a linguistic-based (LB) stemmer for Arabic verb root
+//! extraction three ways: a Java software version, a non-pipelined 5-cycle
+//! FPGA processor, and a pipelined FPGA processor. This crate reproduces all
+//! three on a modern three-layer stack:
+//!
+//! * **L3 (this crate)** — coordinator: corpus pipeline, dynamic batcher,
+//!   worker pool, cycle-accurate FPGA *simulator* (the hardware substitute),
+//!   software baseline stemmer, Khoja baseline, metrics + report generation.
+//! * **L2 (python/compile/model.py)** — the full stemmer as a JAX compute
+//!   graph, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the parallel
+//!   affix-check datapath and the one-hot-matmul dictionary matcher.
+//!
+//! Python never runs on the request path: the rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and serves from there.
+
+pub mod bench;
+pub mod chars;
+pub mod cli;
+pub mod coordinator;
+pub mod corpus;
+pub mod eval;
+pub mod exec;
+pub mod hw;
+pub mod khoja;
+pub mod light;
+pub mod metrics;
+pub mod rng;
+pub mod report;
+pub mod roots;
+pub mod runtime;
+pub mod server;
+pub mod stemmer;
+
+pub use chars::ArabicWord;
+pub use stemmer::{MatchKind, StemResult, Stemmer, StemmerConfig};

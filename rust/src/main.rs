@@ -1,0 +1,372 @@
+//! `ama` — the leader binary: CLI over the full stack (DESIGN.md §3).
+
+use ama::chars::ArabicWord;
+use ama::cli::{Args, USAGE};
+use ama::coordinator::{
+    BackendFactory, Coordinator, CoordinatorConfig, HwBackend, SoftwareBackend, StemBackend,
+    XlaBackend,
+};
+use ama::corpus::{self, CorpusConfig};
+use ama::hw::{DatapathConfig, NonPipelinedProcessor, PipelinedProcessor};
+use ama::khoja::KhojaStemmer;
+use ama::roots::RootSet;
+use ama::runtime::Engine;
+use ama::stemmer::{Stemmer, StemmerConfig};
+use ama::{eval, report};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv).map_err(|e| anyhow!(e))?;
+    let Some(cmd) = args.positionals.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "stem" => cmd_stem(&args),
+        "corpus" => cmd_corpus(&args),
+        "analyze" => cmd_analyze(&args),
+        "simulate" => cmd_simulate(&args),
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn data_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.flag_or("--data-dir", "data"))
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.flag("--artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ama::runtime::default_artifacts_dir)
+}
+
+fn load_roots(args: &Args) -> Result<Arc<RootSet>> {
+    let dir = data_dir(args);
+    if dir.join("roots_trilateral.txt").exists() {
+        Ok(Arc::new(RootSet::load(&dir)?))
+    } else {
+        eprintln!(
+            "note: {} has no dictionaries (run `make data`); using the built-in mini dictionary",
+            dir.display()
+        );
+        Ok(Arc::new(RootSet::builtin_mini()))
+    }
+}
+
+/// Build a backend factory by name.
+fn backend_factory(
+    name: &str,
+    roots: Arc<RootSet>,
+    infix: bool,
+    artifacts: PathBuf,
+) -> Result<BackendFactory> {
+    let cfg = StemmerConfig { infix_processing: infix };
+    let hw_cfg = DatapathConfig { infix_units: infix };
+    Ok(match name {
+        "software" => Box::new(move |_| {
+            Ok(Box::new(SoftwareBackend(Stemmer::new(roots.clone(), cfg))))
+        }),
+        "khoja" => Box::new(move |_| {
+            struct K(KhojaStemmer);
+            impl StemBackend for K {
+                fn name(&self) -> &'static str {
+                    "khoja"
+                }
+                fn stem_batch(
+                    &mut self,
+                    w: &[ArabicWord],
+                ) -> Result<Vec<ama::stemmer::StemResult>> {
+                    Ok(self.0.stem_batch(w))
+                }
+            }
+            Ok(Box::new(K(KhojaStemmer::new(roots.clone()))))
+        }),
+        "hw-np" => Box::new(move |_| {
+            Ok(Box::new(HwBackend(NonPipelinedProcessor::new(roots.clone(), hw_cfg))))
+        }),
+        "hw-p" => Box::new(move |_| {
+            Ok(Box::new(HwBackend(PipelinedProcessor::new(roots.clone(), hw_cfg))))
+        }),
+        "xla" => Box::new(move |_| {
+            let engine = Engine::load(&artifacts, &roots)
+                .context("loading PJRT engine (run `make artifacts`?)")?;
+            Ok(Box::new(XlaBackend(engine)))
+        }),
+        other => bail!("unknown backend {other:?} (software|khoja|hw-np|hw-p|xla)"),
+    })
+}
+
+fn cmd_stem(args: &Args) -> Result<()> {
+    let words: Vec<ArabicWord> =
+        args.positionals[1..].iter().map(|s| ArabicWord::encode(s)).collect();
+    if words.is_empty() {
+        bail!("usage: ama stem <words…>");
+    }
+    let roots = load_roots(args)?;
+    let infix = !args.switch("--no-infix");
+    let factory = backend_factory(
+        args.flag_or("--backend", "software"),
+        roots,
+        infix,
+        artifacts_dir(args),
+    )?;
+    let coord = Coordinator::start(CoordinatorConfig::default(), factory);
+    let handle = coord.handle();
+    let results = handle.stem_stream(&words)?;
+    for (w, r) in args.positionals[1..].iter().zip(results) {
+        println!(
+            "{w}\t{}\t{:?}\tcut={}",
+            r.root_word().to_string_ar(),
+            r.kind,
+            r.cut
+        );
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_corpus(args: &Args) -> Result<()> {
+    let roots = load_roots(args)?;
+    let cfg = if args.switch("--quran") {
+        CorpusConfig::quran()
+    } else if args.switch("--ankabut") {
+        CorpusConfig::ankabut()
+    } else {
+        CorpusConfig::small(
+            args.flag_usize("--words", 10_000).map_err(|e| anyhow!(e))?,
+            args.flag_u64("--seed", 1).map_err(|e| anyhow!(e))?,
+        )
+    };
+    let c = corpus::generate(&roots, &cfg);
+    println!("{}", report::corpus_stats_line(&c));
+    if let Some(out) = args.flag("--out") {
+        corpus::write_tsv(&c, Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let roots = load_roots(args)?;
+    let which = args.flag_or("--corpus", "quran");
+    let c = match which {
+        "quran" => corpus::generate(&roots, &CorpusConfig::quran()),
+        "ankabut" => corpus::generate(&roots, &CorpusConfig::ankabut()),
+        path => corpus::read_tsv(Path::new(path))?,
+    };
+    println!("{}", report::corpus_stats_line(&c));
+    let infix = !args.switch("--no-infix");
+    let stemmer = Stemmer::new(roots.clone(), StemmerConfig { infix_processing: infix });
+    let rep = eval::evaluate(&c, if infix { "with-infix" } else { "no-infix" }, |ws| {
+        stemmer.stem_batch(ws)
+    });
+    println!(
+        "{}: roots {}/{} = {:.1}%  words {}/{} = {:.1}%",
+        rep.stemmer,
+        rep.roots_recovered,
+        rep.roots_present,
+        100.0 * rep.root_accuracy(),
+        rep.words_correct,
+        rep.words_total,
+        100.0 * rep.word_accuracy()
+    );
+    if args.switch("--khoja") {
+        let kh = KhojaStemmer::new(roots.clone());
+        let rep = eval::evaluate(&c, "khoja", |ws| kh.stem_batch(ws));
+        println!(
+            "khoja: roots {}/{} = {:.1}%  words {}/{} = {:.1}%",
+            rep.roots_recovered,
+            rep.roots_present,
+            100.0 * rep.root_accuracy(),
+            rep.words_correct,
+            rep.words_total,
+            100.0 * rep.word_accuracy()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let roots = load_roots(args)?;
+    if args.switch("--trace") || args.flag("--words").is_none() {
+        print!("{}", report::figure_traces(&roots));
+        return Ok(());
+    }
+    let n = args.flag_usize("--words", 1000).map_err(|e| anyhow!(e))?;
+    let c = corpus::generate(&roots, &CorpusConfig::small(n, 42));
+    let words: Vec<ArabicWord> = c.tokens.iter().map(|t| t.word).collect();
+    let cfg = DatapathConfig { infix_units: !args.switch("--no-infix") };
+    use ama::hw::Processor as _;
+    match args.flag_or("--processor", "pipelined") {
+        "pipelined" => {
+            let mut p = PipelinedProcessor::new(roots, cfg);
+            let (_, stats) = p.run(&words);
+            println!(
+                "pipelined: {} words in {} cycles @ {:.2} MHz -> {:.2} MWps (model)",
+                stats.words,
+                stats.cycles,
+                p.fmax_mhz(),
+                p.throughput_wps(stats.words) / 1e6
+            );
+        }
+        "non-pipelined" => {
+            let mut p = NonPipelinedProcessor::new(roots, cfg);
+            let (_, stats) = p.run(&words);
+            println!(
+                "non-pipelined: {} words in {} cycles @ {:.2} MHz -> {:.2} MWps (model)",
+                stats.words,
+                stats.cycles,
+                p.fmax_mhz(),
+                p.throughput_wps(stats.words) / 1e6
+            );
+        }
+        other => bail!("unknown processor {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let roots = load_roots(args)?;
+    if let Some(table) = args.flag("--table") {
+        match table {
+            "morphology" => print!("{}", report::table_morphology()),
+            "truncation" => print!("{}", report::table_truncation(&roots)),
+            "hw" => print!("{}", report::table_hw()),
+            "ratios" => print!("{}", report::table_ratios(&roots)),
+            "accuracy" => {
+                let (q, a) = report::standard_corpora(&roots);
+                print!("{}", report::table_accuracy(&roots, &q, &a));
+            }
+            "roots" => {
+                let (q, _) = report::standard_corpora(&roots);
+                print!("{}", report::table_roots(&roots, &q));
+            }
+            "analyzers" => {
+                let (_, a) = report::standard_corpora(&roots);
+                print!("{}", report::table_analyzers(&roots, &a));
+            }
+            other => bail!("unknown table {other:?}"),
+        }
+        return Ok(());
+    }
+    if let Some(figure) = args.flag("--figure") {
+        match figure {
+            "throughput" => {
+                let (q, _) = report::standard_corpora(&roots);
+                print!("{}", report::figure_throughput(&roots, &q, None));
+            }
+            "sweep" => print!("{}", report::figure_sweep(&roots)),
+            "traces" => print!("{}", report::figure_traces(&roots)),
+            other => bail!("unknown figure {other:?}"),
+        }
+        return Ok(());
+    }
+    // default: everything
+    let (q, a) = report::standard_corpora(&roots);
+    println!("{}", report::corpus_stats_line(&q));
+    println!("{}", report::corpus_stats_line(&a));
+    print!("{}", report::table_morphology());
+    print!("{}", report::table_truncation(&roots));
+    print!("{}", report::table_hw());
+    print!("{}", report::table_ratios(&roots));
+    print!("{}", report::table_accuracy(&roots, &q, &a));
+    print!("{}", report::table_roots(&roots, &q));
+    print!("{}", report::table_analyzers(&roots, &a));
+    print!("{}", report::figure_throughput(&roots, &q, None));
+    print!("{}", report::figure_sweep(&roots));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let roots = load_roots(args)?;
+    let factory = backend_factory(
+        args.flag_or("--backend", "software"),
+        roots,
+        !args.switch("--no-infix"),
+        artifacts_dir(args),
+    )?;
+    let cfg = CoordinatorConfig {
+        workers: args.flag_usize("--workers", 1).map_err(|e| anyhow!(e))?,
+        max_batch: args.flag_usize("--batch", 256).map_err(|e| anyhow!(e))?,
+        max_wait: Duration::from_micros(
+            args.flag_u64("--max-wait-us", 2000).map_err(|e| anyhow!(e))?,
+        ),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, factory);
+    let port = args.flag_usize("--port", 7601).map_err(|e| anyhow!(e))?;
+    let server = ama::server::Server::bind(&format!("127.0.0.1:{port}"), coord.handle())?;
+    println!("ama serving on {}", server.local_addr()?);
+    server.serve_forever()?;
+    coord.shutdown();
+    Ok(())
+}
+
+/// Cross-validate all backends word-for-word on a generated corpus — the
+/// strongest "all layers compose" check available from the CLI.
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let roots = load_roots(args)?;
+    let n = args.flag_usize("--words", 2000).map_err(|e| anyhow!(e))?;
+    let c = corpus::generate(&roots, &CorpusConfig::small(n, 7));
+    let words: Vec<ArabicWord> = c.tokens.iter().map(|t| t.word).collect();
+
+    let sw = Stemmer::with_defaults(roots.clone());
+    let expected = sw.stem_batch(&words);
+
+    // HW simulators (with infix units, matching the software default)
+    use ama::hw::Processor as _;
+    let cfg = DatapathConfig { infix_units: true };
+    let (np_res, _) = NonPipelinedProcessor::new(roots.clone(), cfg).run(&words);
+    let (pp_res, _) = PipelinedProcessor::new(roots.clone(), cfg).run(&words);
+    anyhow::ensure!(np_res == expected, "non-pipelined simulator diverged from software");
+    anyhow::ensure!(pp_res == expected, "pipelined simulator diverged from software");
+    println!("hw simulators: OK ({n} words, bit-identical to software)");
+
+    // PJRT path
+    let artifacts = artifacts_dir(args);
+    if artifacts.join("stemmer_b1.hlo.txt").exists() {
+        let engine = Engine::load(&artifacts, &roots)?;
+        let xla_res = engine.stem_chunk(&words)?;
+        let mut mismatches = 0;
+        for (i, (a, b)) in xla_res.iter().zip(&expected).enumerate() {
+            if a != b {
+                if mismatches < 5 {
+                    eprintln!(
+                        "word {} ({}): xla {:?} vs software {:?}",
+                        i,
+                        words[i],
+                        a,
+                        b
+                    );
+                }
+                mismatches += 1;
+            }
+        }
+        anyhow::ensure!(mismatches == 0, "{mismatches} PJRT mismatches");
+        println!("pjrt engine:   OK ({n} words, bit-identical to software)");
+    } else {
+        println!("pjrt engine:   SKIPPED (no artifacts — run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Performance metric substrate — the paper's §6.2 metric set (ET, TH) for
+//! software plus latency histograms for the serving path. The hardware-only
+//! metrics (PD, LUT, LR, PC) live in [`crate::hw::area`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Execution-time / throughput measurement of a finished run.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub words: u64,
+    pub elapsed: Duration,
+}
+
+impl Measurement {
+    /// TH, in words per second (the paper's Wps).
+    pub fn wps(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.words as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+/// Time a closure over a word count.
+pub fn measure<F: FnOnce()>(words: u64, f: F) -> Measurement {
+    let start = Instant::now();
+    f();
+    Measurement { words, elapsed: start.elapsed() }
+}
+
+/// Lock-free service counters shared across coordinator threads.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    pub requests: AtomicU64,
+    pub words: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    /// Total words across batches, for mean batch-size accounting.
+    pub batched_words: AtomicU64,
+    /// Histogram of request latency (log2 microsecond buckets 0..=20).
+    latency_buckets: [AtomicU64; 21],
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, words: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_words.fetch_add(words, Ordering::Relaxed);
+        self.words.fetch_add(words, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(20);
+        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_words.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Approximate latency percentile from the log2 histogram, in µs
+    /// (upper bucket bound).
+    pub fn latency_percentile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 21
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            words: self.words.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_batch_size: self.mean_batch_size(),
+            p50_us: self.latency_percentile_us(0.50),
+            p99_us: self.latency_percentile_us(0.99),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub words: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch_size: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} words={} batches={} mean_batch={:.1} p50={}us p99={}us errors={}",
+            self.requests,
+            self.words,
+            self.batches,
+            self.mean_batch_size,
+            self.p50_us,
+            self.p99_us,
+            self.errors
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wps_computation() {
+        let m = Measurement { words: 1000, elapsed: Duration::from_millis(500) };
+        assert!((m.wps() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_elapsed_guard() {
+        let m = Measurement { words: 10, elapsed: Duration::ZERO };
+        assert_eq!(m.wps(), 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let s = ServiceMetrics::new();
+        for _ in 0..99 {
+            s.record_latency(Duration::from_micros(100)); // bucket ~6
+        }
+        s.record_latency(Duration::from_millis(10)); // bucket ~13
+        let p50 = s.latency_percentile_us(0.5);
+        let p99 = s.latency_percentile_us(0.99);
+        assert!(p50 <= 256, "p50 {p50}");
+        assert!(p99 <= 256, "p99 {p99}"); // 99th of 100 is still the fast bucket
+        let p100 = s.latency_percentile_us(1.0);
+        assert!(p100 >= 8192, "p100 {p100}");
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let s = ServiceMetrics::new();
+        s.record_batch(10);
+        s.record_batch(30);
+        assert_eq!(s.mean_batch_size(), 20.0);
+        assert_eq!(s.snapshot().words, 40);
+    }
+}

@@ -1,0 +1,153 @@
+//! Deterministic PRNG substrate (splitmix64) — no external `rand` crate in
+//! the offline image, and we want bit-identical corpora across runs and
+//! languages (`python/compile/gen_roots.py` uses the same algorithm).
+
+/// Splitmix64: tiny, fast, and excellent statistical quality for the
+/// corpus-generation / property-testing workloads here.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. Uses the widening-multiply trick (Lemire).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize index into a slice of length `n`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a reference from a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+/// Draw from a Zipf(s) distribution over ranks `1..=n` using precomputed
+/// cumulative weights. Used to give the synthetic corpus the heavy-tailed
+/// root-frequency profile real text has.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Sample a rank in `[0, n)`.
+    pub fn sample(&self, rng: &mut SplitMix64) -> usize {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|v| v.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sequence() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn matches_python_reference() {
+        // Same constants as python/compile/gen_roots.py::_splitmix64.
+        let mut r = SplitMix64::new(0);
+        let z = r.next_u64();
+        // python: state=0 -> z = splitmix64 step
+        assert_eq!(z, 16294208416658607535);
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = SplitMix64::new(3);
+        let mut head = 0;
+        const N: usize = 20_000;
+        for _ in 0..N {
+            if z.sample(&mut r) < 10 {
+                head += 1;
+            }
+        }
+        // top-10 ranks should carry a large share of the mass
+        assert!(head > N / 5, "head share too small: {head}");
+    }
+
+    #[test]
+    fn zipf_all_ranks_reachable_bounds() {
+        let z = Zipf::new(5, 1.0);
+        let mut r = SplitMix64::new(11);
+        let mut seen = [false; 5];
+        for _ in 0..10_000 {
+            seen[z.sample(&mut r)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

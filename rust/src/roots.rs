@@ -1,0 +1,235 @@
+//! Root-dictionary substrate: the "stored Arabic verb roots" the paper's
+//! comparators check generated stems against.
+//!
+//! Dictionaries are generated once by `python/compile/gen_roots.py`
+//! (`make data`) and loaded here; the same files back the PJRT runtime
+//! inputs, the software stemmer, the HW simulator's block-RAM model and the
+//! corpus generator, so all four implementations agree on membership.
+
+use crate::chars::{self, ArabicWord};
+use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
+use std::path::Path;
+
+/// Padded dictionary geometry — must match `alphabet.py::R2/R3/R4` and the
+/// AOT artifact input shapes.
+pub const R2: usize = 256;
+pub const R3: usize = 2048;
+pub const R4: usize = 512;
+
+/// The three dictionaries (bilateral, trilateral, quadrilateral).
+#[derive(Clone)]
+pub struct RootSet {
+    pub bi: HashSet<[u16; 2]>,
+    pub tri: HashSet<[u16; 3]>,
+    pub quad: HashSet<[u16; 4]>,
+    /// Sorted row-order views used to build the padded runtime inputs; kept
+    /// stable so artifact inputs are deterministic.
+    bi_rows: Vec<[u16; 2]>,
+    tri_rows: Vec<[u16; 3]>,
+    quad_rows: Vec<[u16; 4]>,
+}
+
+fn parse_root<const N: usize>(line: &str) -> Result<[u16; N]> {
+    let w = ArabicWord::encode(line.trim());
+    if w.len != N {
+        bail!("root {:?} has length {}, expected {N}", line.trim(), w.len);
+    }
+    let mut out = [0u16; N];
+    out.copy_from_slice(&w.chars[..N]);
+    for &c in &out {
+        if !chars::is_arabic_letter(c) {
+            bail!("root {:?} contains non-Arabic codepoint {c:04X}", line.trim());
+        }
+    }
+    Ok(out)
+}
+
+fn load_list<const N: usize>(path: &Path) -> Result<Vec<[u16; N]>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading root list {}", path.display()))?;
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(parse_root::<N>(line)?);
+    }
+    Ok(rows)
+}
+
+impl RootSet {
+    /// Load from a data directory (`data/roots_{bilateral,trilateral,quadrilateral}.txt`).
+    pub fn load(data_dir: &Path) -> Result<Self> {
+        let bi_rows = load_list::<2>(&data_dir.join("roots_bilateral.txt"))?;
+        let tri_rows = load_list::<3>(&data_dir.join("roots_trilateral.txt"))?;
+        let quad_rows = load_list::<4>(&data_dir.join("roots_quadrilateral.txt"))?;
+        Self::from_rows(bi_rows, tri_rows, quad_rows)
+    }
+
+    pub fn from_rows(
+        bi_rows: Vec<[u16; 2]>,
+        tri_rows: Vec<[u16; 3]>,
+        quad_rows: Vec<[u16; 4]>,
+    ) -> Result<Self> {
+        if bi_rows.len() > R2 || tri_rows.len() > R3 || quad_rows.len() > R4 {
+            bail!(
+                "dictionary overflow: {}/{} {}/{} {}/{}",
+                bi_rows.len(),
+                R2,
+                tri_rows.len(),
+                R3,
+                quad_rows.len(),
+                R4
+            );
+        }
+        let bi: HashSet<_> = bi_rows.iter().copied().collect();
+        let tri: HashSet<_> = tri_rows.iter().copied().collect();
+        let quad: HashSet<_> = quad_rows.iter().copied().collect();
+        if bi.len() != bi_rows.len() || tri.len() != tri_rows.len() || quad.len() != quad_rows.len()
+        {
+            bail!("duplicate roots in dictionary");
+        }
+        Ok(RootSet { bi, tri, quad, bi_rows, tri_rows, quad_rows })
+    }
+
+    /// A small built-in dictionary for tests and examples that must run
+    /// without `make data` (covers all paper examples).
+    pub fn builtin_mini() -> Self {
+        let enc3 = |s: &str| parse_root::<3>(s).unwrap();
+        let enc4 = |s: &str| parse_root::<4>(s).unwrap();
+        let enc2 = |s: &str| parse_root::<2>(s).unwrap();
+        let tri = ["درس", "لعب", "سقي", "كتب", "قول", "علم", "كون", "خلق", "عمل", "كفر"]
+            .iter()
+            .map(|s| enc3(s))
+            .collect::<Vec<_>>();
+        let quad = ["زحزح", "دحرج", "زلزل", "ترجم"].iter().map(|s| enc4(s)).collect::<Vec<_>>();
+        let bi = ["مد", "شد", "ظن", "عد"].iter().map(|s| enc2(s)).collect::<Vec<_>>();
+        Self::from_rows(bi, tri, quad).unwrap()
+    }
+
+    pub fn total(&self) -> usize {
+        self.bi.len() + self.tri.len() + self.quad.len()
+    }
+
+    pub fn tri_rows(&self) -> &[[u16; 3]] {
+        &self.tri_rows
+    }
+
+    pub fn quad_rows(&self) -> &[[u16; 4]] {
+        &self.quad_rows
+    }
+
+    pub fn bi_rows(&self) -> &[[u16; 2]] {
+        &self.bi_rows
+    }
+
+    /// Padded `(R, L)` row-major i32 arrays — the PJRT runtime inputs.
+    pub fn padded_i32<const N: usize>(rows: &[[u16; N]], r: usize) -> Vec<i32> {
+        let mut out = vec![0i32; r * N];
+        for (i, row) in rows.iter().enumerate() {
+            for (j, &c) in row.iter().enumerate() {
+                out[i * N + j] = c as i32;
+            }
+        }
+        out
+    }
+
+    pub fn bi_padded(&self) -> Vec<i32> {
+        Self::padded_i32(&self.bi_rows, R2)
+    }
+
+    pub fn tri_padded(&self) -> Vec<i32> {
+        Self::padded_i32(&self.tri_rows, R3)
+    }
+
+    pub fn quad_padded(&self) -> Vec<i32> {
+        Self::padded_i32(&self.quad_rows, R4)
+    }
+
+    /// Direct-mapped membership bitmap over the dense 37-symbol alphabet:
+    /// `bitmap[key(stem)] == 1` iff the stem is a root, with
+    /// `key = ((i₁·37)+i₂)·37+…` (must match `alphabet.build_bitmap`).
+    /// This is the PJRT runtime's dictionary representation — the block-RAM
+    /// lookup formulation the §Perf pass selected (EXPERIMENTS.md).
+    pub fn bitmap_i32<const N: usize>(rows: &[[u16; N]]) -> Vec<i32> {
+        let size = chars::ALPHABET_SIZE.pow(N as u32);
+        let mut bm = vec![0i32; size];
+        for row in rows {
+            let mut key = 0usize;
+            for &c in row {
+                key = key * chars::ALPHABET_SIZE + chars::char_index(c) as usize;
+            }
+            bm[key] = 1;
+        }
+        bm
+    }
+
+    pub fn bi_bitmap(&self) -> Vec<i32> {
+        Self::bitmap_i32(&self.bi_rows)
+    }
+
+    pub fn tri_bitmap(&self) -> Vec<i32> {
+        Self::bitmap_i32(&self.tri_rows)
+    }
+
+    pub fn quad_bitmap(&self) -> Vec<i32> {
+        Self::bitmap_i32(&self.quad_rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_mini_contains_paper_roots() {
+        let r = RootSet::builtin_mini();
+        let drs = ArabicWord::encode("درس");
+        assert!(r.tri.contains(&[drs.chars[0], drs.chars[1], drs.chars[2]]));
+        assert_eq!(r.total(), 18);
+    }
+
+    #[test]
+    fn padded_layout_row_major() {
+        let r = RootSet::builtin_mini();
+        let p = r.tri_padded();
+        assert_eq!(p.len(), R3 * 3);
+        // first row is the first tri root
+        let first = r.tri_rows()[0];
+        assert_eq!(&p[..3], &[first[0] as i32, first[1] as i32, first[2] as i32]);
+        // padding rows are zero
+        assert_eq!(&p[r.tri_rows().len() * 3..][..3], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn reject_duplicates() {
+        let dup = vec![[0x062F, 0x0631, 0x0633], [0x062F, 0x0631, 0x0633]];
+        assert!(RootSet::from_rows(vec![], dup, vec![]).is_err());
+    }
+
+    #[test]
+    fn reject_overflow() {
+        let rows: Vec<[u16; 3]> = (0..R3 as u16 + 1)
+            .map(|i| [0x0621 + (i % 26), 0x0621 + ((i / 26) % 26), 0x0621 + ((i / 676) % 26)])
+            .collect();
+        assert!(RootSet::from_rows(vec![], rows, vec![]).is_err());
+    }
+
+    #[test]
+    fn load_generated_data_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("data");
+        if dir.join("roots_trilateral.txt").exists() {
+            let r = RootSet::load(&dir).unwrap();
+            assert_eq!(r.total(), 1767, "paper's Quran root count");
+            // Table-7 roots must all be present.
+            for s in ["علم", "كفر", "قول", "نفس", "نزل", "عمل", "خلق", "جعل", "كذب", "كون"] {
+                let w = ArabicWord::encode(s);
+                assert!(
+                    r.tri.contains(&[w.chars[0], w.chars[1], w.chars[2]]),
+                    "missing Table-7 root {s}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client — the L3↔L2 bridge. Python never runs here.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so an [`Engine`] must stay on
+//! one thread; the coordinator owns it on a dedicated executor thread and
+//! feeds it through a queue. Dictionaries are uploaded to device once and
+//! reused as `PjRtBuffer`s for every call (`execute_b`).
+
+use crate::chars::{ArabicWord, MAX_WORD};
+use crate::roots::RootSet;
+use crate::stemmer::{MatchKind, StemResult};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled stemmer executable (a fixed batch size).
+struct StemmerExe {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT engine: client + compiled executables + device-resident
+/// dictionaries.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: BTreeMap<usize, StemmerExe>,
+    dict_bufs: Vec<xla::PjRtBuffer>, // roots2, roots3, roots4
+    dicts_i32: [Vec<i32>; 3],
+}
+
+/// Batch sizes the AOT pipeline bakes (aot.py BATCH_SIZES).
+pub const BATCHES: &[usize] = &[1, 32, 256];
+
+impl Engine {
+    /// Load every `stemmer_b*.hlo.txt` under `artifacts_dir`, compile, and
+    /// upload the dictionaries.
+    pub fn load(artifacts_dir: &Path, roots: &RootSet) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let mut exes = BTreeMap::new();
+        for &b in BATCHES {
+            let path = artifacts_dir.join(format!("stemmer_b{b}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let exe = compile_hlo(&client, &path)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            exes.insert(b, StemmerExe { batch: b, exe });
+        }
+        if exes.is_empty() {
+            bail!(
+                "no stemmer artifacts under {} — run `make artifacts` first",
+                artifacts_dir.display()
+            );
+        }
+        // Dictionaries travel as direct-mapped bitmaps (roots::bitmap_i32 —
+        // the block-RAM-lookup formulation; see kernels/lookup.py), uploaded
+        // to the device once and reused by every execute_b call.
+        let dicts_i32 = [roots.bi_bitmap(), roots.tri_bitmap(), roots.quad_bitmap()];
+        let dict_bufs = vec![
+            client
+                .buffer_from_host_buffer(&dicts_i32[0], &[dicts_i32[0].len()], None)
+                .map_err(|e| anyhow!("upload bitmap2: {e}"))?,
+            client
+                .buffer_from_host_buffer(&dicts_i32[1], &[dicts_i32[1].len()], None)
+                .map_err(|e| anyhow!("upload bitmap3: {e}"))?,
+            client
+                .buffer_from_host_buffer(&dicts_i32[2], &[dicts_i32[2].len()], None)
+                .map_err(|e| anyhow!("upload bitmap4: {e}"))?,
+        ];
+        Ok(Engine { client, exes, dict_bufs, dicts_i32 })
+    }
+
+    /// Batch sizes actually loaded.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// Smallest loaded batch size that fits `n` words, or the largest
+    /// available (the caller chunks).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        for (&b, _) in self.exes.iter() {
+            if n <= b {
+                return b;
+            }
+        }
+        *self.exes.keys().next_back().expect("non-empty")
+    }
+
+    /// Encode words into flat `(B·15)` codes + `(B,)` lengths host buffers.
+    fn encode(&self, words: &[ArabicWord], batch: usize) -> (Vec<i32>, Vec<i32>) {
+        debug_assert!(words.len() <= batch);
+        let mut flat = vec![0i32; batch * MAX_WORD];
+        let mut lens = vec![0i32; batch];
+        for (i, w) in words.iter().enumerate() {
+            for (j, &c) in w.chars.iter().enumerate() {
+                flat[i * MAX_WORD + j] = c as i32;
+            }
+            lens[i] = w.len as i32;
+        }
+        (flat, lens)
+    }
+
+    /// Run one batch (up to the executable's batch size) and decode.
+    pub fn stem_chunk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        let b = self.pick_batch(words.len());
+        let exe = &self.exes[&b];
+        let mut out = Vec::with_capacity(words.len());
+        for chunk in words.chunks(exe.batch) {
+            out.extend(self.run_one(exe, chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn run_one(&self, exe: &StemmerExe, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        let (flat, lens) = self.encode(words, exe.batch);
+        // Upload the per-call inputs; dictionaries are already on device.
+        let wbuf = self
+            .client
+            .buffer_from_host_buffer(&flat, &[exe.batch, MAX_WORD], None)
+            .map_err(|e| anyhow!("upload words: {e}"))?;
+        let lbuf = self
+            .client
+            .buffer_from_host_buffer(&lens, &[exe.batch], None)
+            .map_err(|e| anyhow!("upload lengths: {e}"))?;
+        let args =
+            [&wbuf, &lbuf, &self.dict_bufs[0], &self.dict_bufs[1], &self.dict_bufs[2]];
+        let result = exe
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+        let (root_l, kind_l, cut_l) = lit.to_tuple3().map_err(|e| anyhow!("tuple3: {e}"))?;
+        let roots = root_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let kinds = kind_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let cuts = cut_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let mut out = Vec::with_capacity(words.len());
+        for i in 0..words.len() {
+            let mut root = [0u16; 4];
+            for j in 0..4 {
+                root[j] = roots[i * 4 + j] as u16;
+            }
+            out.push(StemResult {
+                root,
+                kind: MatchKind::from_u8(kinds[i] as u8),
+                cut: cuts[i] as u8,
+            });
+        }
+        Ok(out)
+    }
+
+    /// The raw padded dictionaries (for tests / reports).
+    pub fn dicts(&self) -> &[Vec<i32>; 3] {
+        &self.dicts_i32
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))
+}
+
+/// Locate the artifacts directory: `$AMA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("AMA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,130 @@
+//! TCP line-protocol stemming service on top of the coordinator.
+//!
+//! Protocol: one UTF-8 Arabic word per line in; one tab-separated reply
+//! line out: `word<TAB>root<TAB>kind<TAB>cut`. Empty line closes the
+//! connection. Designed for `nc`/scripts — and as the serving-path
+//! integration surface for tests.
+
+use crate::chars::ArabicWord;
+use crate::coordinator::Handle;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub struct Server {
+    listener: TcpListener,
+    handle: Handle,
+    stop: Arc<AtomicBool>,
+    pub connections: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:7601"; port 0 picks a free port).
+    pub fn bind(addr: &str, handle: Handle) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            listener,
+            handle,
+            stop: Arc::new(AtomicBool::new(false)),
+            connections: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A flag that makes `serve_forever` return after the current accept.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept loop; one thread per connection (connections are few and
+    /// long-lived in this protocol; the heavy lifting is batched behind
+    /// the coordinator anyway).
+    pub fn serve_forever(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = stream?;
+            let handle = self.handle.clone();
+            let conns = self.connections.clone();
+            conns.fetch_add(1, Ordering::SeqCst);
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, handle);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, handle: Handle) -> Result<()> {
+    // Request/response is one short line each way; without TCP_NODELAY the
+    // Nagle/delayed-ACK interaction costs ~40 ms per round-trip (measured:
+    // 45 req/s before, >20k req/s after — see EXPERIMENTS.md §Perf).
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let word_str = line.trim();
+        if word_str.is_empty() {
+            break;
+        }
+        let word = ArabicWord::encode(word_str);
+        let res = handle.stem(word)?;
+        writeln!(
+            writer,
+            "{}\t{}\t{}\t{}",
+            word_str,
+            res.root_word().to_string_ar(),
+            res.kind as u8,
+            res.cut
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SoftwareBackend};
+    use crate::roots::RootSet;
+    use crate::stemmer::Stemmer;
+
+    fn sw_factory() -> BackendFactory {
+        Box::new(|_| {
+            Ok(Box::new(SoftwareBackend(Stemmer::with_defaults(Arc::new(
+                RootSet::builtin_mini(),
+            )))))
+        })
+    }
+
+    #[test]
+    fn end_to_end_tcp_roundtrip() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let server = Server::bind("127.0.0.1:0", coord.handle()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_flag();
+        let t = std::thread::spawn(move || server.serve_forever());
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all("سيلعبون\nقال\n\n".as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("لعب"), "{line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("قول"), "{line}");
+
+        stop.store(true, Ordering::SeqCst);
+        // poke the accept loop so it observes the flag
+        let _ = TcpStream::connect(addr);
+        t.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,319 @@
+//! The sequential software LB stemmer — the paper's Java baseline, ported.
+//!
+//! Semantics are the shared contract of DESIGN.md §6 and must agree
+//! bit-for-bit with `python/compile/kernels/ref.py::ref_stem_word`, the JAX
+//! model, and the HW simulator (cross-validation tests enforce this).
+
+use crate::chars::{self, ArabicWord, MAX_SUFFIX};
+use crate::roots::RootSet;
+use std::sync::Arc;
+
+/// How a root was found — mirrors `alphabet.py::KIND_*`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum MatchKind {
+    /// No root extracted.
+    None = 0,
+    /// Direct trilateral dictionary match.
+    Tri = 1,
+    /// Direct quadrilateral dictionary match.
+    Quad = 2,
+    /// *Remove Infix* (Fig 18): quad stem, infix 2nd char dropped → trilateral.
+    RmInfixTri = 3,
+    /// *Remove Infix*: tri stem, infix 2nd char dropped → bilateral.
+    RmInfixBi = 4,
+    /// *Restore Original Form* (Fig 19): hollow verb, 2nd char ا→و → trilateral.
+    Restored = 5,
+}
+
+impl MatchKind {
+    pub fn from_u8(v: u8) -> MatchKind {
+        match v {
+            1 => MatchKind::Tri,
+            2 => MatchKind::Quad,
+            3 => MatchKind::RmInfixTri,
+            4 => MatchKind::RmInfixBi,
+            5 => MatchKind::Restored,
+            _ => MatchKind::None,
+        }
+    }
+
+    /// Did this extraction use one of the §6.3 infix algorithms?
+    pub fn used_infix(self) -> bool {
+        matches!(self, MatchKind::RmInfixTri | MatchKind::RmInfixBi | MatchKind::Restored)
+    }
+}
+
+/// Result of root extraction for one word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StemResult {
+    /// The extracted root, 0-padded to 4 characters.
+    pub root: [u16; 4],
+    pub kind: MatchKind,
+    /// The winning prefix cut index `p` (0..=5).
+    pub cut: u8,
+}
+
+impl StemResult {
+    pub const NONE: StemResult = StemResult { root: [0; 4], kind: MatchKind::None, cut: 0 };
+
+    pub fn root_len(&self) -> usize {
+        self.root.iter().take_while(|&&c| c != 0).count()
+    }
+
+    pub fn root_word(&self) -> ArabicWord {
+        ArabicWord::from_codes(&self.root[..self.root_len()])
+    }
+}
+
+/// Configuration for the stemmer (Table 6 compares infix on/off).
+#[derive(Clone, Copy, Debug)]
+pub struct StemmerConfig {
+    /// Enable the two §6.3 infix algorithms (Remove Infix, Restore Form).
+    pub infix_processing: bool,
+}
+
+impl Default for StemmerConfig {
+    fn default() -> Self {
+        StemmerConfig { infix_processing: true }
+    }
+}
+
+/// The sequential linguistic-based stemmer.
+pub struct Stemmer {
+    roots: Arc<RootSet>,
+    config: StemmerConfig,
+}
+
+impl Stemmer {
+    pub fn new(roots: Arc<RootSet>, config: StemmerConfig) -> Self {
+        Stemmer { roots, config }
+    }
+
+    pub fn with_defaults(roots: Arc<RootSet>) -> Self {
+        Self::new(roots, StemmerConfig::default())
+    }
+
+    pub fn roots(&self) -> &RootSet {
+        &self.roots
+    }
+
+    pub fn config(&self) -> StemmerConfig {
+        self.config
+    }
+
+    /// Is the window `word[p..p+size]` a valid stem candidate?
+    /// (DESIGN.md §6 shared contract — `ref.candidate_valid`.)
+    fn candidate_valid(w: &ArabicWord, p: usize, size: usize) -> bool {
+        let n = w.len;
+        if p + size > n || n - (p + size) > MAX_SUFFIX {
+            return false;
+        }
+        if !w.chars[..p].iter().all(|&c| chars::is_prefix_letter(c)) {
+            return false;
+        }
+        w.chars[p + size..n].iter().all(|&c| chars::is_suffix_letter(c))
+    }
+
+    /// Extract the verb root of `w`. Priority: direct tri, direct quad,
+    /// remove-infix tri, remove-infix bi, restored form; smaller cut first.
+    pub fn stem(&self, w: &ArabicWord) -> StemResult {
+        // Passes 1–2: direct trilateral then quadrilateral.
+        for p in 0..chars::MAX_PREFIX + 1 {
+            if Self::candidate_valid(w, p, 3) {
+                let stem = [w.chars[p], w.chars[p + 1], w.chars[p + 2]];
+                if self.roots.tri.contains(&stem) {
+                    return StemResult {
+                        root: [stem[0], stem[1], stem[2], 0],
+                        kind: MatchKind::Tri,
+                        cut: p as u8,
+                    };
+                }
+            }
+        }
+        for p in 0..chars::MAX_PREFIX + 1 {
+            if Self::candidate_valid(w, p, 4) {
+                let stem = [w.chars[p], w.chars[p + 1], w.chars[p + 2], w.chars[p + 3]];
+                if self.roots.quad.contains(&stem) {
+                    return StemResult { root: stem, kind: MatchKind::Quad, cut: p as u8 };
+                }
+            }
+        }
+        if !self.config.infix_processing {
+            return StemResult::NONE;
+        }
+        // Pass 3: Remove Infix on quadrilateral stems → trilateral roots.
+        for p in 0..chars::MAX_PREFIX + 1 {
+            if Self::candidate_valid(w, p, 4) && chars::is_infix_letter(w.chars[p + 1]) {
+                let red = [w.chars[p], w.chars[p + 2], w.chars[p + 3]];
+                if self.roots.tri.contains(&red) {
+                    return StemResult {
+                        root: [red[0], red[1], red[2], 0],
+                        kind: MatchKind::RmInfixTri,
+                        cut: p as u8,
+                    };
+                }
+            }
+        }
+        // Pass 4: Remove Infix on trilateral stems → bilateral roots.
+        for p in 0..chars::MAX_PREFIX + 1 {
+            if Self::candidate_valid(w, p, 3) && chars::is_infix_letter(w.chars[p + 1]) {
+                let red = [w.chars[p], w.chars[p + 2]];
+                if self.roots.bi.contains(&red) {
+                    return StemResult {
+                        root: [red[0], red[1], 0, 0],
+                        kind: MatchKind::RmInfixBi,
+                        cut: p as u8,
+                    };
+                }
+            }
+        }
+        // Pass 5: Restore Original Form (hollow verbs): 2nd char ا → و.
+        for p in 0..chars::MAX_PREFIX + 1 {
+            if Self::candidate_valid(w, p, 3) && w.chars[p + 1] == chars::ALEF {
+                let res = [w.chars[p], chars::WAW, w.chars[p + 2]];
+                if self.roots.tri.contains(&res) {
+                    return StemResult {
+                        root: [res[0], res[1], res[2], 0],
+                        kind: MatchKind::Restored,
+                        cut: p as u8,
+                    };
+                }
+            }
+        }
+        StemResult::NONE
+    }
+
+    /// Convenience: stem a batch sequentially (the paper's software loop).
+    pub fn stem_batch(&self, words: &[ArabicWord]) -> Vec<StemResult> {
+        words.iter().map(|w| self.stem(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn stemmer() -> Stemmer {
+        Stemmer::with_defaults(Arc::new(RootSet::builtin_mini()))
+    }
+
+    fn root_str(r: &StemResult) -> String {
+        r.root_word().to_string_ar()
+    }
+
+    #[test]
+    fn paper_example_silabun() {
+        // سيلعبون → لعب (paper §3.1, Table 3)
+        let r = stemmer().stem(&ArabicWord::encode("سيلعبون"));
+        assert_eq!(root_str(&r), "لعب");
+        assert_eq!(r.kind, MatchKind::Tri);
+        assert_eq!(r.cut, 2);
+    }
+
+    #[test]
+    fn paper_example_longest_word() {
+        // أفاستسقيناكموها → سقي (paper §3.1, Fig 13)
+        let r = stemmer().stem(&ArabicWord::encode("أفاستسقيناكموها"));
+        assert_eq!(root_str(&r), "سقي");
+        assert_eq!(r.kind, MatchKind::Tri);
+    }
+
+    #[test]
+    fn paper_example_quadrilateral() {
+        // فتزحزحت → زحزح (paper Fig 14)
+        let r = stemmer().stem(&ArabicWord::encode("فتزحزحت"));
+        assert_eq!(root_str(&r), "زحزح");
+        assert_eq!(r.kind, MatchKind::Quad);
+    }
+
+    #[test]
+    fn paper_example_hollow_verb() {
+        // قال → قول via Restore Original Form (paper §6.3, Fig 19)
+        let r = stemmer().stem(&ArabicWord::encode("قال"));
+        assert_eq!(root_str(&r), "قول");
+        assert_eq!(r.kind, MatchKind::Restored);
+    }
+
+    #[test]
+    fn paper_example_remove_infix() {
+        // كاتب → كتب via Remove Infix (paper §6.3, Fig 18)
+        let r = stemmer().stem(&ArabicWord::encode("كاتب"));
+        assert_eq!(root_str(&r), "كتب");
+        assert_eq!(r.kind, MatchKind::RmInfixTri);
+    }
+
+    #[test]
+    fn remove_infix_bilateral() {
+        // ماد → مد (tri stem with infix 2nd char → bilateral root)
+        let r = stemmer().stem(&ArabicWord::encode("ماد"));
+        assert_eq!(root_str(&r), "مد");
+        assert_eq!(r.kind, MatchKind::RmInfixBi);
+    }
+
+    #[test]
+    fn infix_disabled_returns_none() {
+        let s = Stemmer::new(
+            Arc::new(RootSet::builtin_mini()),
+            StemmerConfig { infix_processing: false },
+        );
+        assert_eq!(s.stem(&ArabicWord::encode("قال")).kind, MatchKind::None);
+        // ...but direct matches still work
+        assert_eq!(s.stem(&ArabicWord::encode("يدرس")).kind, MatchKind::Tri);
+    }
+
+    #[test]
+    fn unknown_word() {
+        let r = stemmer().stem(&ArabicWord::encode("ظظظظظ"));
+        assert_eq!(r, StemResult::NONE);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let s = stemmer();
+        assert_eq!(s.stem(&ArabicWord::encode("")).kind, MatchKind::None);
+        assert_eq!(s.stem(&ArabicWord::encode("ب")).kind, MatchKind::None);
+        // bilateral roots are NOT directly matchable
+        assert_eq!(s.stem(&ArabicWord::encode("مد")).kind, MatchKind::None);
+    }
+
+    #[test]
+    fn suffix_length_cap() {
+        // A valid root followed by 10 suffix letters exceeds MAX_SUFFIX=9:
+        // درس + وووووووووو (10 waws)
+        let w = ArabicWord::encode("درسوووووووووو");
+        assert_eq!(w.len, 13);
+        let r = stemmer().stem(&w);
+        assert_eq!(r.kind, MatchKind::None);
+        // 9 suffix letters is allowed
+        let w9 = ArabicWord::encode("درسووووووووو");
+        assert_eq!(stemmer().stem(&w9).kind, MatchKind::Tri);
+    }
+
+    #[test]
+    fn tri_priority_over_quad() {
+        // Both a tri and a quad interpretation may exist; tri wins (shared
+        // contract). درسن: stem(0,3)=درس tri ✓ even though درسن(0,4) might
+        // be a quad candidate.
+        let r = stemmer().stem(&ArabicWord::encode("درسن"));
+        assert_eq!(root_str(&r), "درس");
+        assert_eq!(r.kind, MatchKind::Tri);
+    }
+
+    #[test]
+    fn smaller_cut_wins() {
+        // لعبت: p=0 gives لعب; even though p could be larger with other
+        // letters, the smallest valid cut must win.
+        let r = stemmer().stem(&ArabicWord::encode("لعبت"));
+        assert_eq!(r.cut, 0);
+        assert_eq!(root_str(&r), "لعب");
+    }
+
+    #[test]
+    fn invalid_prefix_blocks_cut() {
+        // خدرس: خ is not a prefix letter so p=1 is invalid → no match for درس.
+        let r = stemmer().stem(&ArabicWord::encode("خدرس"));
+        assert_eq!(r.kind, MatchKind::None);
+    }
+}

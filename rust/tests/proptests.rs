@@ -1,0 +1,273 @@
+//! Property-based tests (hand-rolled generators over splitmix64 — the
+//! offline image has no proptest). Each property runs hundreds of random
+//! cases with a deterministic seed; failures print the seed for replay.
+
+use ama::chars::{self, ArabicWord};
+use ama::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SoftwareBackend};
+use ama::corpus::{self, CorpusConfig};
+use ama::exec::BoundedQueue;
+use ama::hw::{DatapathConfig, NonPipelinedProcessor, PipelinedProcessor, Processor};
+use ama::rng::SplitMix64;
+use ama::roots::RootSet;
+use ama::stemmer::{MatchKind, Stemmer, StemmerConfig};
+use std::path::Path;
+use std::sync::Arc;
+
+const LETTERS: [u16; 36] = {
+    let mut out = [0u16; 36];
+    let mut i = 0;
+    let mut c = 0x0621u16;
+    while c <= 0x063A {
+        out[i] = c;
+        i += 1;
+        c += 1;
+    }
+    let mut c = 0x0641u16;
+    while c <= 0x064A {
+        out[i] = c;
+        i += 1;
+        c += 1;
+    }
+    out
+};
+
+fn roots() -> Arc<RootSet> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("data");
+    if dir.join("roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(&dir).unwrap())
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    }
+}
+
+fn random_word(rng: &mut SplitMix64) -> ArabicWord {
+    let n = rng.index(chars::MAX_WORD + 1);
+    let codes: Vec<u16> = (0..n).map(|_| *rng.choose(&LETTERS)).collect();
+    ArabicWord::from_codes(&codes)
+}
+
+/// Stemmer invariant: whatever is returned is structurally consistent —
+/// the root really is the claimed candidate window (possibly transformed),
+/// it is in the dictionary, and the cut is a valid prefix run.
+#[test]
+fn prop_stem_result_structurally_sound() {
+    let r = roots();
+    let sw = Stemmer::with_defaults(r.clone());
+    let mut rng = SplitMix64::new(0x9101);
+    for case in 0..3000 {
+        let w = random_word(&mut rng);
+        let res = sw.stem(&w);
+        let p = res.cut as usize;
+        match res.kind {
+            MatchKind::None => assert_eq!(res.root, [0; 4], "case {case}"),
+            MatchKind::Tri => {
+                let stem = [w.chars[p], w.chars[p + 1], w.chars[p + 2]];
+                assert_eq!(&res.root[..3], &stem, "case {case}: root != window");
+                assert!(r.tri.contains(&stem), "case {case}: not in dict");
+            }
+            MatchKind::Quad => {
+                let stem = [w.chars[p], w.chars[p + 1], w.chars[p + 2], w.chars[p + 3]];
+                assert_eq!(res.root, stem, "case {case}");
+                assert!(r.quad.contains(&stem), "case {case}");
+            }
+            MatchKind::RmInfixTri => {
+                let red = [w.chars[p], w.chars[p + 2], w.chars[p + 3]];
+                assert_eq!(&res.root[..3], &red, "case {case}");
+                assert!(chars::is_infix_letter(w.chars[p + 1]), "case {case}");
+                assert!(r.tri.contains(&red), "case {case}");
+            }
+            MatchKind::RmInfixBi => {
+                let red = [w.chars[p], w.chars[p + 2]];
+                assert_eq!(&res.root[..2], &red, "case {case}");
+                assert!(r.bi.contains(&red), "case {case}");
+            }
+            MatchKind::Restored => {
+                assert_eq!(w.chars[p + 1], chars::ALEF, "case {case}");
+                let restored = [w.chars[p], chars::WAW, w.chars[p + 2]];
+                assert_eq!(&res.root[..3], &restored, "case {case}");
+                assert!(r.tri.contains(&restored), "case {case}");
+            }
+        }
+        // prefix run validity
+        if res.kind != MatchKind::None {
+            assert!(w.chars[..p].iter().all(|&c| chars::is_prefix_letter(c)), "case {case}");
+        }
+    }
+}
+
+/// Dictionary roots stem to themselves (identity on the fixpoint set).
+#[test]
+fn prop_roots_are_fixpoints() {
+    let r = roots();
+    let sw = Stemmer::with_defaults(r.clone());
+    for root in r.tri_rows().iter().take(500) {
+        let w = ArabicWord::from_codes(root);
+        let res = sw.stem(&w);
+        assert_eq!(res.kind, MatchKind::Tri, "root {w:?}");
+        assert_eq!(&res.root[..3], root);
+        assert_eq!(res.cut, 0);
+    }
+    for root in r.quad_rows().iter().take(200) {
+        let w = ArabicWord::from_codes(root);
+        let res = sw.stem(&w);
+        // a quad root may contain a trilateral substring match first; but
+        // if quad is returned it must be the root itself
+        if res.kind == MatchKind::Quad {
+            assert_eq!(res.root, *root);
+        }
+    }
+}
+
+/// Fuzz: the three implementations agree on fully random garbage.
+#[test]
+fn prop_fuzz_simulators_equal_software() {
+    let r = roots();
+    let sw = Stemmer::with_defaults(r.clone());
+    let cfg = DatapathConfig { infix_units: true };
+    let mut rng = SplitMix64::new(0xF00D);
+    let words: Vec<ArabicWord> = (0..2000).map(|_| random_word(&mut rng)).collect();
+    let expected = sw.stem_batch(&words);
+    let (np, _) = NonPipelinedProcessor::new(r.clone(), cfg).run(&words);
+    let (pp, _) = PipelinedProcessor::new(r.clone(), cfg).run(&words);
+    assert_eq!(np, expected);
+    assert_eq!(pp, expected);
+}
+
+/// Encoding invariants: normalized, bounded, diacritic-free.
+#[test]
+fn prop_encode_invariants() {
+    let mut rng = SplitMix64::new(0xE2C0DE);
+    for _ in 0..2000 {
+        // random unicode soup biased toward the Arabic block
+        let n = rng.index(30);
+        let s: String = (0..n)
+            .filter_map(|_| {
+                let c = match rng.index(4) {
+                    0 => 0x0600 + rng.below(0xFF) as u32,
+                    1 => 0x0621 + rng.below(42) as u32,
+                    2 => rng.below(0x80) as u32,
+                    _ => 0x064B + rng.below(8) as u32, // diacritics
+                };
+                char::from_u32(c)
+            })
+            .collect();
+        let w = ArabicWord::encode(&s);
+        assert!(w.len <= chars::MAX_WORD);
+        for (i, &c) in w.chars.iter().enumerate() {
+            if i < w.len {
+                assert!(!chars::is_diacritic(c), "diacritic survived in {s:?}");
+                assert_ne!(c, chars::ALEF_HAMZA_ABOVE, "unnormalized alef in {s:?}");
+                assert_ne!(c, chars::ALEF_MAKSURA);
+            } else {
+                assert_eq!(c, chars::PAD);
+            }
+        }
+    }
+}
+
+/// Coordinator invariants under random configs and workloads: order
+/// preserved, every request answered exactly once, word counts conserved.
+#[test]
+fn prop_coordinator_conservation() {
+    let r = roots();
+    let mut rng = SplitMix64::new(0xC00D);
+    for case in 0..8 {
+        let workers = 1 + rng.index(4);
+        let max_batch = 1 + rng.index(128);
+        let n = 50 + rng.index(400);
+        let words: Vec<ArabicWord> = (0..n).map(|_| random_word(&mut rng)).collect();
+        let sw = Stemmer::with_defaults(r.clone());
+        let expected = sw.stem_batch(&words);
+
+        let r2 = r.clone();
+        let factory: BackendFactory = Box::new(move |_| {
+            Ok(Box::new(SoftwareBackend(Stemmer::with_defaults(r2.clone()))))
+        });
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers,
+                max_batch,
+                queue_capacity: 64,
+                ..Default::default()
+            },
+            factory,
+        );
+        let got = coord.handle().stem_stream(&words).unwrap();
+        assert_eq!(got, expected, "case {case} (workers={workers}, batch={max_batch})");
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.words, n as u64, "case {case}: word count not conserved");
+        assert_eq!(snap.requests, n as u64, "case {case}");
+        coord.shutdown();
+    }
+}
+
+/// Queue conservation under random concurrent interleavings.
+#[test]
+fn prop_queue_conservation() {
+    let mut rng = SplitMix64::new(0x0BEE);
+    for _ in 0..5 {
+        let cap = 1 + rng.index(16);
+        let producers = 1 + rng.index(4);
+        let per = 100 + rng.index(200);
+        let q: Arc<BoundedQueue<u64>> = BoundedQueue::new(cap);
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut sum = 0u64;
+                for i in 0..per {
+                    let v = (p * 10_000 + i) as u64;
+                    sum += v;
+                    q.push(v).unwrap();
+                }
+                sum
+            }));
+        }
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut sum = 0u64;
+                while let Ok(v) = q.pop() {
+                    sum += v;
+                }
+                sum
+            })
+        };
+        let pushed: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        q.close();
+        let popped = consumer.join().unwrap();
+        assert_eq!(pushed, popped);
+    }
+}
+
+/// Corpus generator invariants: calibrated class mixes actually hold.
+#[test]
+fn prop_corpus_class_rates() {
+    let r = roots();
+    let c = corpus::generate(&r, &CorpusConfig::small(20_000, 31));
+    let infix = c.tokens.iter().filter(|t| t.class == corpus::FormClass::Infix).count();
+    let unstem =
+        c.tokens.iter().filter(|t| t.class == corpus::FormClass::Unstemmable).count();
+    let n = c.tokens.len() as f64;
+    // direct should dominate; unstemmable should stay a modest minority
+    assert!((infix as f64) / n > 0.10, "infix rate {infix}");
+    assert!((unstem as f64) / n < 0.35, "unstemmable rate {unstem}");
+}
+
+/// The no-infix stemmer is a strict subset of the with-infix stemmer:
+/// whenever no-infix finds a root, with-infix finds the same root.
+#[test]
+fn prop_infix_is_strict_extension() {
+    let r = roots();
+    let with = Stemmer::with_defaults(r.clone());
+    let without = Stemmer::new(r.clone(), StemmerConfig { infix_processing: false });
+    let mut rng = SplitMix64::new(0x5B5E7);
+    for _ in 0..3000 {
+        let w = random_word(&mut rng);
+        let a = without.stem(&w);
+        if a.kind != MatchKind::None {
+            let b = with.stem(&w);
+            assert_eq!(a, b, "word {w:?}");
+        }
+    }
+}
