@@ -1,0 +1,19 @@
+# Build entry points referenced throughout the code and docs.
+#
+#   make data       — regenerate the root dictionaries under data/
+#   make artifacts  — AOT-lower the JAX stemmer to artifacts/*.hlo.txt
+#   make verify     — tier-1 + clippy + bench smoke (scripts/verify.sh)
+
+.PHONY: data artifacts verify test
+
+data:
+	cd python && python3 -m compile.gen_roots ../data
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+verify:
+	scripts/verify.sh
+
+test:
+	cargo test -q

@@ -26,7 +26,19 @@ fn main() {
 
     header("bench_software — Fig 16 software row (Quran corpus, 77,476 words)");
 
+    // The retained scalar baseline vs the fused table-driven hot path —
+    // the PR 1 acceptance ratio (see `ama bench json` / BENCH_PR1.json).
     let with = Stemmer::with_defaults(roots.clone());
+    let r = bench_words("software/stem_reference (scalar)", &cfg, n, || {
+        let mut acc = 0usize;
+        for w in &words {
+            acc += with.stem_reference(w).kind as usize;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{r}");
+    let th_ref = r.wps().unwrap();
+
     let r = bench_words("software/with-infix", &cfg, n, || {
         let mut acc = 0usize;
         for w in &words {
@@ -36,6 +48,20 @@ fn main() {
     });
     println!("{r}");
     let th_sw = r.wps().unwrap();
+    println!("  fused stem vs stem_reference: {:.2}x", th_sw / th_ref);
+
+    let r = bench_words("software/stem_batch (SoA)", &cfg, n, || {
+        let res = with.stem_batch(&words);
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
+
+    let threads = std::thread::available_parallelism().map_or(1, |p| p.get());
+    let r = bench_words(&format!("software/stem_batch_parallel t={threads}"), &cfg, n, || {
+        let res = with.stem_batch_parallel(&words, threads);
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
 
     let without = Stemmer::new(roots.clone(), StemmerConfig { infix_processing: false });
     let r = bench_words("software/no-infix", &cfg, n, || {

@@ -91,7 +91,7 @@ pub fn is_arabic_letter(c: u16) -> bool {
 
 /// Dense alphabet index for the one-hot matcher; PAD and anything
 /// non-Arabic map to 0. Must match `alphabet.py::char_index`.
-pub fn char_index(c: u16) -> u8 {
+pub const fn char_index(c: u16) -> u8 {
     match c {
         0x0621..=0x063A => (c - 0x0621 + 1) as u8,
         0x0641..=0x064A => (c - 0x0641 + 27) as u8,
@@ -100,11 +100,110 @@ pub fn char_index(c: u16) -> u8 {
 }
 
 /// Inverse of [`char_index`]. Returns PAD for 0 / out-of-range.
-pub fn index_char(i: u8) -> u16 {
+pub const fn index_char(i: u8) -> u16 {
     match i {
         1..=26 => 0x0621 + (i as u16 - 1),
         27..=36 => 0x0641 + (i as u16 - 27),
         _ => PAD,
+    }
+}
+
+// --- Affix class bitmasks over the dense alphabet ------------------------
+//
+// The paper's datapath answers "is this character a prefix/suffix/infix
+// letter?" with banks of parallel comparators (Figs 6–7). The software
+// analog is one table load: `CHAR_CLASS[char_index(c)]` holds a bitmask of
+// the classes `c` belongs to, so every class test is O(1) and branch-free
+// instead of a linear scan over the letter arrays.
+
+/// `CHAR_CLASS` bit: the character may appear in a prefix (فسألتني + the
+/// normalized bare alef).
+pub const CLASS_PREFIX: u8 = 1 << 0;
+/// `CHAR_CLASS` bit: the character may appear in a suffix.
+pub const CLASS_SUFFIX: u8 = 1 << 1;
+/// `CHAR_CLASS` bit: the character may appear as an infix (أوتني).
+pub const CLASS_INFIX: u8 = 1 << 2;
+
+const fn build_char_class() -> [u8; ALPHABET_SIZE] {
+    let mut table = [0u8; ALPHABET_SIZE];
+    let mut i = 0;
+    while i < PREFIX_LETTERS.len() {
+        table[char_index(PREFIX_LETTERS[i]) as usize] |= CLASS_PREFIX;
+        i += 1;
+    }
+    // After normalization أ has become ا, which is NOT in PREFIX_LETTERS as
+    // stored (hamza form). Accept both spellings so callers can use either.
+    table[char_index(ALEF) as usize] |= CLASS_PREFIX;
+    let mut i = 0;
+    while i < SUFFIX_LETTERS.len() {
+        table[char_index(SUFFIX_LETTERS[i]) as usize] |= CLASS_SUFFIX;
+        i += 1;
+    }
+    let mut i = 0;
+    while i < INFIX_LETTERS.len() {
+        table[char_index(INFIX_LETTERS[i]) as usize] |= CLASS_INFIX;
+        i += 1;
+    }
+    table
+}
+
+/// Class bitmask per dense alphabet index (index 0 = PAD/non-Arabic, which
+/// belongs to no class). The single source of truth for affix classes —
+/// the letter-array constants above are retained as the human-readable
+/// definition and for the paper-facing tests.
+pub static CHAR_CLASS: [u8; ALPHABET_SIZE] = build_char_class();
+
+/// Class bitmask of a raw codepoint (0 for PAD / non-Arabic).
+#[inline]
+pub fn char_class(c: u16) -> u8 {
+    CHAR_CLASS[char_index(c) as usize]
+}
+
+/// Per-word affix profile: the two run lengths that make every
+/// `candidate_valid(p, size)` query O(1).
+///
+/// Contract (shared with `ref.candidate_valid` / DESIGN.md §6): for a word
+/// of length `n`,
+///
+/// * `prefix_run` is the largest `p ≤ min(n, MAX_PREFIX)` such that the
+///   first `p` characters are all prefix letters;
+/// * `suffix_start` is the smallest `k` such that characters `k..n` are all
+///   suffix letters (`n` when the last character is not a suffix letter).
+///
+/// A cut window `[p, p+size)` then has a valid prefix iff `p ≤ prefix_run`
+/// and a valid suffix iff `p + size ≥ suffix_start` — two integer
+/// comparisons, replacing the per-candidate rescans of the scalar stemmer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AffixProfile {
+    pub prefix_run: u8,
+    pub suffix_start: u8,
+}
+
+impl AffixProfile {
+    /// Compute the profile in one O(n) pass over dense indices.
+    #[inline]
+    pub fn from_indices(indices: &[u8]) -> AffixProfile {
+        let n = indices.len();
+        let max_p = MAX_PREFIX.min(n);
+        let mut prefix_run = 0;
+        while prefix_run < max_p
+            && CHAR_CLASS[indices[prefix_run] as usize] & CLASS_PREFIX != 0
+        {
+            prefix_run += 1;
+        }
+        let mut suffix_start = n;
+        while suffix_start > 0
+            && CHAR_CLASS[indices[suffix_start - 1] as usize] & CLASS_SUFFIX != 0
+        {
+            suffix_start -= 1;
+        }
+        AffixProfile { prefix_run: prefix_run as u8, suffix_start: suffix_start as u8 }
+    }
+
+    /// Profile of a fixed-width word (convenience for scalar callers).
+    pub fn of(w: &ArabicWord) -> AffixProfile {
+        let idx = w.to_indices();
+        Self::from_indices(&idx[..w.len])
     }
 }
 
@@ -123,18 +222,19 @@ pub fn is_diacritic(c: u16) -> bool {
     DIACRITICS.contains(&c) || c == 0x0670
 }
 
+#[inline]
 pub fn is_prefix_letter(c: u16) -> bool {
-    // After normalization أ has become ا, which is NOT in PREFIX_LETTERS as
-    // stored (hamza form). Accept both spellings so callers can use either.
-    PREFIX_LETTERS.contains(&c) || c == ALEF
+    char_class(c) & CLASS_PREFIX != 0
 }
 
+#[inline]
 pub fn is_suffix_letter(c: u16) -> bool {
-    SUFFIX_LETTERS.contains(&c)
+    char_class(c) & CLASS_SUFFIX != 0
 }
 
+#[inline]
 pub fn is_infix_letter(c: u16) -> bool {
-    INFIX_LETTERS.contains(&c)
+    char_class(c) & CLASS_INFIX != 0
 }
 
 /// ASCII display names for the simulator traces — the paper's §5.2 display
@@ -224,6 +324,22 @@ impl ArabicWord {
 
     pub fn as_slice(&self) -> &[u16] {
         &self.chars[..self.len]
+    }
+
+    /// Dense alphabet indices of the word, PAD-extended to the register
+    /// width — the encoding the direct-addressed dictionaries and the SoA
+    /// batch kernel operate on. Positions ≥ `len` and non-Arabic
+    /// codepoints map to 0, which belongs to no affix class and can never
+    /// address a stored root (all dictionary keys use indices 1..=36).
+    #[inline]
+    pub fn to_indices(&self) -> [u8; MAX_WORD] {
+        let mut idx = [0u8; MAX_WORD];
+        let mut i = 0;
+        while i < self.len {
+            idx[i] = char_index(self.chars[i]);
+            i += 1;
+        }
+        idx
     }
 
     pub fn is_empty(&self) -> bool {
@@ -323,5 +439,77 @@ mod tests {
     fn display_names() {
         assert_eq!(display_name(SEEN), "Sin");
         assert_eq!(display_name(PAD), "U");
+    }
+
+    /// The class table must agree with the letter arrays it was compiled
+    /// from, for every 16-bit codepoint (incl. PAD and non-Arabic).
+    #[test]
+    fn char_class_table_matches_letter_arrays() {
+        for c in 0u16..=0x0700 {
+            let want_prefix = PREFIX_LETTERS.contains(&c) || c == ALEF;
+            let want_suffix = SUFFIX_LETTERS.contains(&c);
+            let want_infix = INFIX_LETTERS.contains(&c);
+            assert_eq!(is_prefix_letter(c), want_prefix, "prefix class of {c:04X}");
+            assert_eq!(is_suffix_letter(c), want_suffix, "suffix class of {c:04X}");
+            assert_eq!(is_infix_letter(c), want_infix, "infix class of {c:04X}");
+        }
+        assert_eq!(CHAR_CLASS[0], 0, "PAD must belong to no class");
+    }
+
+    #[test]
+    fn to_indices_matches_char_index() {
+        let w = ArabicWord::encode("سيلعبون");
+        let idx = w.to_indices();
+        for i in 0..MAX_WORD {
+            let want = if i < w.len { char_index(w.chars[i]) } else { 0 };
+            assert_eq!(idx[i], want, "position {i}");
+        }
+    }
+
+    /// AffixProfile vs the naive per-cut rescans it replaces.
+    #[test]
+    fn affix_profile_matches_naive_scans() {
+        let words = [
+            "سيلعبون",
+            "أفاستسقيناكموها",
+            "بكتبون",
+            "درس",
+            "",
+            "ظظظظ",
+            "ستون",  // all prefix/suffix letters
+            "hello", // non-Arabic survives encode; classless
+        ];
+        for s in words {
+            let w = ArabicWord::encode(s);
+            let prof = AffixProfile::of(&w);
+            let max_p = MAX_PREFIX.min(w.len);
+            let mut want_run = 0;
+            while want_run < max_p && is_prefix_letter(w.chars[want_run]) {
+                want_run += 1;
+            }
+            assert_eq!(prof.prefix_run as usize, want_run, "prefix run of {s:?}");
+            let mut want_start = w.len;
+            while want_start > 0 && is_suffix_letter(w.chars[want_start - 1]) {
+                want_start -= 1;
+            }
+            assert_eq!(prof.suffix_start as usize, want_start, "suffix start of {s:?}");
+            // the O(1) candidate queries agree with the rescans
+            for p in 0..=MAX_PREFIX.min(w.len) {
+                let prefix_ok = w.chars[..p].iter().all(|&c| is_prefix_letter(c));
+                assert_eq!(p <= prof.prefix_run as usize, prefix_ok, "{s:?} p={p}");
+                for size in [3usize, 4] {
+                    if p + size > w.len {
+                        continue;
+                    }
+                    let suffix_ok =
+                        w.chars[p + size..w.len].iter().all(|&c| is_suffix_letter(c));
+                    assert_eq!(
+                        p + size >= prof.suffix_start as usize,
+                        suffix_ok,
+                        "{s:?} p={p} size={size}"
+                    );
+                }
+            }
+        }
     }
 }

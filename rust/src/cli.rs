@@ -31,6 +31,7 @@ const VALUE_FLAGS: &[&str] = &[
     "--max-wait-us",
     "--corpus",
     "--repeat",
+    "--pr",
 ];
 
 impl Args {
@@ -90,7 +91,9 @@ USAGE:
 
 SUBCOMMANDS:
     stem <words…>         extract roots for words given on the command line
-                          [--backend software|khoja|hw-np|hw-p|xla] [--no-infix]
+                          [--backend software|software-par|khoja|hw-np|hw-p|xla]
+                          [--no-infix]  (software-par adds intra-batch
+                          parallelism; it pays off with serve --batch ≥ 4096)
     corpus                generate a calibrated corpus
                           [--words N] [--seed S] [--out file.tsv] [--quran|--ankabut]
     analyze               accuracy analysis over a corpus (Table 6/7 data)
@@ -103,6 +106,9 @@ SUBCOMMANDS:
     serve                 TCP line-protocol stemming service
                           [--port P] [--backend …] [--workers N] [--batch B]
     selftest              cross-validate software / HW-sim / PJRT backends
+    bench json            benchmark the software + hw-sim backends and write
+                          a machine-readable report [--out BENCH_PR1.json]
+                          [--words N] [--pr K] (AMA_BENCH_FAST=1 = quick pass)
 
 COMMON OPTIONS:
     --data-dir DIR        root dictionaries (default: data)

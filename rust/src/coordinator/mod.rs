@@ -235,7 +235,9 @@ impl Handle {
 // Backend implementations
 // ---------------------------------------------------------------------------
 
-/// The sequential software stemmer as a backend (paper's Java baseline).
+/// The software stemmer as a backend — the default. Batches go through
+/// the SoA fused kernel (`Stemmer::stem_batch`): dense-index encoding,
+/// AffixProfile candidate checks, direct-addressed dictionary bitsets.
 pub struct SoftwareBackend(pub crate::stemmer::Stemmer);
 
 impl StemBackend for SoftwareBackend {
@@ -245,6 +247,25 @@ impl StemBackend for SoftwareBackend {
 
     fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
         Ok(self.0.stem_batch(words))
+    }
+}
+
+/// The software stemmer with intra-batch parallelism: large batches fan
+/// out across an internal `exec::WorkerPool`
+/// (`Stemmer::stem_batch_parallel`). Useful when the coordinator runs few
+/// workers but receives large bulk batches.
+pub struct ParallelSoftwareBackend {
+    pub stemmer: crate::stemmer::Stemmer,
+    pub threads: usize,
+}
+
+impl StemBackend for ParallelSoftwareBackend {
+    fn name(&self) -> &'static str {
+        "software-par"
+    }
+
+    fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        Ok(self.stemmer.stem_batch_parallel(words, self.threads))
     }
 }
 

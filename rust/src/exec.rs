@@ -139,9 +139,13 @@ impl<T> BoundedQueue<T> {
     /// empty after at least one item arrived.
     pub fn pop_batch(&self, max: usize, timeout: Duration) -> Result<Vec<T>, QueueError> {
         let first = self.pop_timeout(timeout)?;
-        let mut batch = Vec::with_capacity(max.min(16));
-        batch.push(first);
         let mut g = self.inner.lock().unwrap();
+        // Size the batch for what is actually drainable — `first` plus
+        // whatever is queued right now, capped at `max` — instead of a
+        // fixed guess (which under-allocated large batches and
+        // over-allocated the common small ones).
+        let mut batch = Vec::with_capacity(max.min(g.queue.len() + 1));
+        batch.push(first);
         while batch.len() < max {
             match g.queue.pop_front() {
                 Some(item) => {
@@ -275,6 +279,62 @@ mod tests {
         assert_eq!(b, vec![0, 1, 2, 3]);
         let b = q.pop_batch(100, Duration::from_millis(50)).unwrap();
         assert_eq!(b.len(), 6);
+    }
+
+    #[test]
+    fn pop_batch_capacity_is_bounded_by_queue_len() {
+        let q = BoundedQueue::new(4096);
+        for i in 0..3 {
+            q.push(i).unwrap();
+        }
+        // huge `max` must not preallocate `max` slots
+        let b = q.pop_batch(1_000_000, Duration::from_millis(50)).unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+        assert!(b.capacity() <= 8, "over-allocated: {}", b.capacity());
+    }
+
+    /// Regression: batch pops racing with `close()` must drain every item
+    /// exactly once and then report `Closed` — no losses, no duplicates,
+    /// no hangs.
+    #[test]
+    fn pop_batch_races_with_close() {
+        for round in 0..20usize {
+            let q: Arc<BoundedQueue<usize>> = BoundedQueue::new(8);
+            let n = 200 + round;
+            let producer = {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n {
+                        if q.push(i).is_err() {
+                            panic!("queue closed under producer");
+                        }
+                    }
+                    q.close();
+                })
+            };
+            let consumers: Vec<_> = (0..3)
+                .map(|_| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let mut got = Vec::new();
+                        loop {
+                            match q.pop_batch(7, Duration::from_millis(100)) {
+                                Ok(b) => got.extend(b),
+                                Err(QueueError::Timeout) => continue,
+                                Err(QueueError::Closed) => break,
+                                Err(QueueError::WouldBlock) => unreachable!(),
+                            }
+                        }
+                        got
+                    })
+                })
+                .collect();
+            producer.join().unwrap();
+            let mut all: Vec<usize> =
+                consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "round {round}");
+        }
     }
 
     #[test]

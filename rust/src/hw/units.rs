@@ -204,14 +204,19 @@ pub const STEM4_COMPARATORS_COST: UnitCost = UnitCost::new(9.1, 16_120, 0);
 pub const INFIX_COMPARATORS_COST: UnitCost = UnitCost::new(8.2, 9_800, 0);
 
 pub fn stage4_compare(cands: &Candidates, roots: &RootSet, cfg: &DatapathConfig) -> MatchBits {
+    // Membership goes through the direct-addressed RootBitmaps — the same
+    // block-RAM-lookup structure the paper's comparator banks implement
+    // (and the same bitsets the fused software stemmer probes), so the
+    // simulator models the dictionary exactly as the hardware stores it.
+    let dicts = &roots.dense;
     let mut m = MatchBits::default();
     for p in 0..=MAX_PREFIX {
-        m.m3[p] = cands.valid3[p] && roots.tri.contains(&cands.stem3[p]);
-        m.m4[p] = cands.valid4[p] && roots.quad.contains(&cands.stem4[p]);
+        m.m3[p] = cands.valid3[p] && dicts.tri.contains_chars(&cands.stem3[p]);
+        m.m4[p] = cands.valid4[p] && dicts.quad.contains_chars(&cands.stem4[p]);
         if cfg.infix_units {
-            m.mrm3[p] = cands.rm3_valid[p] && roots.tri.contains(&cands.rm3[p]);
-            m.mrm2[p] = cands.rm2_valid[p] && roots.bi.contains(&cands.rm2[p]);
-            m.mrs3[p] = cands.rs3_valid[p] && roots.tri.contains(&cands.rs3[p]);
+            m.mrm3[p] = cands.rm3_valid[p] && dicts.tri.contains_chars(&cands.rm3[p]);
+            m.mrm2[p] = cands.rm2_valid[p] && dicts.bi.contains_chars(&cands.rm2[p]);
+            m.mrs3[p] = cands.rs3_valid[p] && dicts.tri.contains_chars(&cands.rs3[p]);
         }
     }
     m

@@ -18,6 +18,39 @@
 //!
 //! Python never runs on the request path: the rust binary loads
 //! `artifacts/*.hlo.txt` through PJRT (`runtime`) and serves from there.
+//!
+//! ## Dense-index dictionary memory layout (PR 1)
+//!
+//! The stemming hot path is table-driven, mirroring the paper's hardware:
+//!
+//! * **Dense alphabet.** Every codepoint maps through
+//!   [`chars::char_index`] to an index in `0..37` (0 = PAD/non-Arabic,
+//!   1..=36 the Arabic letters). A word is encoded once into a dense-index
+//!   row ([`chars::ArabicWord::to_indices`], `MAX_WORD` = 15 bytes).
+//! * **Affix classes.** [`chars::CHAR_CLASS`] is a 37-entry bitmask table
+//!   (`CLASS_PREFIX | CLASS_SUFFIX | CLASS_INFIX`) — the software analog of
+//!   the paper's parallel comparator banks (Figs 6–7); every class test is
+//!   one table load.
+//! * **Root dictionaries.** [`roots::RootBitmap`] stores membership as a
+//!   bit array addressed by the base-37 key `((i₁·37)+i₂)·37+…` over dense
+//!   indices — 172 B (bilateral), ~6 KB (trilateral) and ~229 KB
+//!   (quadrilateral) of cache-resident "block RAM", the same key function
+//!   as the PJRT bitmaps (`roots::bitmap_i32` / `alphabet.build_bitmap`).
+//!   Index 0 never occurs in a stored key, so PAD-bearing windows cannot
+//!   false-positive. The `HashSet` views remain as the construction-time
+//!   validator and reference oracle.
+//!
+//! ## AffixProfile contract
+//!
+//! [`chars::AffixProfile`] summarizes a word in O(n): `prefix_run` (longest
+//! all-prefix-letter run from the left, capped at `MAX_PREFIX`) and
+//! `suffix_start` (start of the longest all-suffix-letter run reaching the
+//! end). The shared `candidate_valid(p, size)` predicate of DESIGN.md §6
+//! then collapses to window-fit checks plus two integer comparisons:
+//! `p ≤ prefix_run && p + size ≥ suffix_start`. [`stemmer::Stemmer::stem`]
+//! fuses all five candidate streams into one pass over the six cut
+//! positions on top of this; `stem_reference` keeps the scalar original,
+//! and a 10k-word property test pins them bit-for-bit equal.
 
 pub mod bench;
 pub mod chars;

@@ -43,6 +43,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
         "selftest" => cmd_selftest(&args),
+        "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -74,18 +75,29 @@ fn load_roots(args: &Args) -> Result<Arc<RootSet>> {
     }
 }
 
-/// Build a backend factory by name.
+/// Build a backend factory by name. `coord_workers` is the number of
+/// coordinator workers that will share the machine — intra-batch
+/// parallelism divides the cores among them instead of oversubscribing.
 fn backend_factory(
     name: &str,
     roots: Arc<RootSet>,
     infix: bool,
     artifacts: PathBuf,
+    coord_workers: usize,
 ) -> Result<BackendFactory> {
     let cfg = StemmerConfig { infix_processing: infix };
     let hw_cfg = DatapathConfig { infix_units: infix };
     Ok(match name {
         "software" => Box::new(move |_| {
             Ok(Box::new(SoftwareBackend(Stemmer::new(roots.clone(), cfg))))
+        }),
+        "software-par" => Box::new(move |_| {
+            let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+            let threads = (cores / coord_workers.max(1)).max(1);
+            Ok(Box::new(ama::coordinator::ParallelSoftwareBackend {
+                stemmer: Stemmer::new(roots.clone(), cfg),
+                threads,
+            }))
         }),
         "khoja" => Box::new(move |_| {
             struct K(KhojaStemmer);
@@ -113,7 +125,7 @@ fn backend_factory(
                 .context("loading PJRT engine (run `make artifacts`?)")?;
             Ok(Box::new(XlaBackend(engine)))
         }),
-        other => bail!("unknown backend {other:?} (software|khoja|hw-np|hw-p|xla)"),
+        other => bail!("unknown backend {other:?} (software|software-par|khoja|hw-np|hw-p|xla)"),
     })
 }
 
@@ -130,6 +142,7 @@ fn cmd_stem(args: &Args) -> Result<()> {
         roots,
         infix,
         artifacts_dir(args),
+        CoordinatorConfig::default().workers,
     )?;
     let coord = Coordinator::start(CoordinatorConfig::default(), factory);
     let handle = coord.handle();
@@ -300,14 +313,16 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let roots = load_roots(args)?;
+    let workers = args.flag_usize("--workers", 1).map_err(|e| anyhow!(e))?;
     let factory = backend_factory(
         args.flag_or("--backend", "software"),
         roots,
         !args.switch("--no-infix"),
         artifacts_dir(args),
+        workers,
     )?;
     let cfg = CoordinatorConfig {
-        workers: args.flag_usize("--workers", 1).map_err(|e| anyhow!(e))?,
+        workers,
         max_batch: args.flag_usize("--batch", 256).map_err(|e| anyhow!(e))?,
         max_wait: Duration::from_micros(
             args.flag_u64("--max-wait-us", 2000).map_err(|e| anyhow!(e))?,
@@ -320,6 +335,137 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("ama serving on {}", server.local_addr()?);
     server.serve_forever()?;
     coord.shutdown();
+    Ok(())
+}
+
+/// `ama bench json`: run the software / hw-sim benchmark suite and write a
+/// machine-readable JSON report (the `BENCH_PR*.json` perf trajectory).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mode = args.positionals.get(1).map(String::as_str).unwrap_or("json");
+    if mode != "json" {
+        bail!("usage: ama bench json [--out FILE] [--words N]");
+    }
+    let out_path = args.flag_or("--out", "BENCH_PR1.json").to_string();
+    let pr = args.flag_u64("--pr", 1).map_err(|e| anyhow!(e))?;
+    let roots = load_roots(args)?;
+    let n_words = args.flag_usize("--words", 0).map_err(|e| anyhow!(e))?;
+    let corpus = if n_words == 0 {
+        corpus::generate(&roots, &CorpusConfig::quran())
+    } else {
+        corpus::generate(&roots, &CorpusConfig::small(n_words, 11))
+    };
+    let words: Vec<ArabicWord> = corpus.tokens.iter().map(|t| t.word).collect();
+    let n = words.len() as u64;
+    let cfg = ama::bench::config_from_env();
+    let threads = std::thread::available_parallelism().map_or(1, |p| p.get());
+
+    let mut rows: Vec<ama::bench::BenchResult> = Vec::new();
+    let stemmer = Stemmer::with_defaults(roots.clone());
+
+    let r = ama::bench::bench_words("software/stem_reference", &cfg, n, || {
+        let mut acc = 0usize;
+        for w in &words {
+            acc += stemmer.stem_reference(w).kind as usize;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{r}");
+    let reference_wps = r.wps().unwrap_or(0.0);
+    rows.push(r);
+
+    let r = ama::bench::bench_words("software/stem", &cfg, n, || {
+        let mut acc = 0usize;
+        for w in &words {
+            acc += stemmer.stem(w).kind as usize;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{r}");
+    let fused_wps = r.wps().unwrap_or(0.0);
+    rows.push(r);
+
+    for batch in [64usize, 256, 1024, 8192] {
+        let r = ama::bench::bench_words(&format!("software/stem_batch/b{batch}"), &cfg, n, || {
+            let mut acc = 0usize;
+            for chunk in words.chunks(batch) {
+                for res in stemmer.stem_batch(chunk) {
+                    acc += res.kind as usize;
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        println!("{r}");
+        rows.push(r);
+    }
+
+    let r = ama::bench::bench_words(
+        &format!("software/stem_batch_parallel/t{threads}"),
+        &cfg,
+        n,
+        || {
+            let res = stemmer.stem_batch_parallel(&words, threads);
+            std::hint::black_box(res.len());
+        },
+    );
+    println!("{r}");
+    rows.push(r);
+
+    use ama::hw::Processor as _;
+    let dp = DatapathConfig { infix_units: true };
+    let r = ama::bench::bench_words("hw-sim/pipelined (wall-clock)", &cfg, n, || {
+        let mut p = PipelinedProcessor::new(roots.clone(), dp);
+        let (res, _) = p.run(&words);
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
+    rows.push(r);
+
+    let speedup = if reference_wps > 0.0 { fused_wps / reference_wps } else { 0.0 };
+    // Same datapath config as the measured rows (fmax/cycle model is
+    // config-independent, but keep the report internally consistent).
+    let np = NonPipelinedProcessor::new(roots.clone(), dp);
+    let pp = PipelinedProcessor::new(roots.clone(), dp);
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"schema\": \"ama-bench-v1\",\n");
+    json.push_str(&format!("  \"pr\": {pr},\n"));
+    json.push_str(&format!(
+        "  \"corpus\": {{\"name\": \"{}\", \"words\": {}}},\n",
+        corpus.name,
+        words.len()
+    ));
+    json.push_str(&format!("  \"dictionary_roots\": {},\n", roots.total()));
+    json.push_str(&format!("  \"threads\": {threads},\n"));
+    json.push_str(&format!(
+        "  \"fast_mode\": {},\n",
+        std::env::var_os("AMA_BENCH_FAST").is_some()
+    ));
+    json.push_str(&format!(
+        "  \"speedup_stem_vs_reference\": {speedup:.3},\n"
+    ));
+    json.push_str(&format!(
+        "  \"hw_model_wps\": {{\"non_pipelined\": {:.1}, \"pipelined\": {:.1}}},\n",
+        np.throughput_wps(n),
+        pp.throughput_wps(n)
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let wps = r.wps().unwrap_or(0.0);
+        let ns_per_word = if n > 0 { r.mean.as_nanos() as f64 / n as f64 } else { 0.0 };
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"wps\": {:.1}, \"ns_per_word\": {:.2}, \"iters\": {}}}{}\n",
+            r.name,
+            wps,
+            ns_per_word,
+            r.iters,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json).with_context(|| format!("writing {out_path}"))?;
+    println!("\nspeedup stem vs stem_reference: {speedup:.2}x");
+    println!("wrote {out_path}");
     Ok(())
 }
 

@@ -17,12 +17,127 @@ pub const R2: usize = 256;
 pub const R3: usize = 2048;
 pub const R4: usize = 512;
 
+/// A direct-addressed membership bitset over the dense 37-symbol alphabet
+/// — the software analog of the paper's block-RAM comparator banks.
+///
+/// A stem of arity `N` addresses bit
+/// `key = ((i₁·37)+i₂)·37+… ` (base-37 over [`chars::char_index`] digits),
+/// the same key function as `alphabet.build_bitmap` and
+/// [`RootSet::bitmap_i32`]. Membership is therefore one shift+mask on a
+/// cache-resident bit array: 37² = 1,369 bits (172 B) for bilaterals,
+/// 37³ = 50,653 bits (~6 KB) for trilaterals, 37⁴ = 1,874,161 bits
+/// (~229 KB) for quadrilaterals. Index 0 (PAD / non-Arabic) never occurs
+/// in a stored root, so windows containing such characters can never
+/// false-positive.
+#[derive(Clone)]
+pub struct RootBitmap {
+    words: Vec<u64>,
+    arity: u32,
+    len: usize,
+}
+
+impl RootBitmap {
+    /// An empty bitset for roots of `arity` characters.
+    pub fn new(arity: u32) -> Self {
+        let size = chars::ALPHABET_SIZE.pow(arity);
+        RootBitmap { words: vec![0u64; size.div_ceil(64)], arity, len: 0 }
+    }
+
+    /// Build from dictionary rows (raw codepoints).
+    pub fn from_rows<const N: usize>(rows: &[[u16; N]]) -> Self {
+        let mut bm = Self::new(N as u32);
+        for row in rows {
+            let mut idx = [0u8; N];
+            for (j, &c) in row.iter().enumerate() {
+                idx[j] = chars::char_index(c);
+            }
+            bm.insert_key(Self::key(&idx));
+        }
+        bm
+    }
+
+    /// Base-37 key of a dense-index stem (must have `arity` digits).
+    #[inline]
+    pub fn key(indices: &[u8]) -> usize {
+        let mut key = 0usize;
+        for &i in indices {
+            key = key * chars::ALPHABET_SIZE + i as usize;
+        }
+        key
+    }
+
+    /// Insert by precomputed key; counts only newly-set bits.
+    pub fn insert_key(&mut self, key: usize) {
+        let (w, b) = (key >> 6, key & 63);
+        if (self.words[w] >> b) & 1 == 0 {
+            self.words[w] |= 1u64 << b;
+            self.len += 1;
+        }
+    }
+
+    /// O(1) membership by precomputed key.
+    #[inline]
+    pub fn contains_key(&self, key: usize) -> bool {
+        (self.words[key >> 6] >> (key & 63)) & 1 != 0
+    }
+
+    /// Membership of a dense-index stem.
+    #[inline]
+    pub fn contains_indices(&self, indices: &[u8]) -> bool {
+        debug_assert_eq!(indices.len(), self.arity as usize);
+        self.contains_key(Self::key(indices))
+    }
+
+    /// Membership of a raw-codepoint stem (the HW simulator's view).
+    #[inline]
+    pub fn contains_chars(&self, stem: &[u16]) -> bool {
+        debug_assert_eq!(stem.len(), self.arity as usize);
+        let mut key = 0usize;
+        for &c in stem {
+            key = key * chars::ALPHABET_SIZE + chars::char_index(c) as usize;
+        }
+        self.contains_key(key)
+    }
+
+    pub fn arity(&self) -> u32 {
+        self.arity
+    }
+
+    /// Number of stored roots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Backing-store footprint in bytes (the "block-RAM" budget).
+    pub fn memory_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// The three direct-addressed dictionaries, shared by the fused software
+/// stemmer and the HW simulator's comparator stage.
+#[derive(Clone)]
+pub struct DenseDicts {
+    pub bi: RootBitmap,
+    pub tri: RootBitmap,
+    pub quad: RootBitmap,
+}
+
 /// The three dictionaries (bilateral, trilateral, quadrilateral).
+///
+/// The `HashSet` views are retained for construction-time validation and
+/// as the reference membership oracle; the hot paths probe [`Self::dense`].
 #[derive(Clone)]
 pub struct RootSet {
     pub bi: HashSet<[u16; 2]>,
     pub tri: HashSet<[u16; 3]>,
     pub quad: HashSet<[u16; 4]>,
+    /// Direct-addressed bitsets over the dense alphabet (O(1) membership).
+    pub dense: DenseDicts,
     /// Sorted row-order views used to build the padded runtime inputs; kept
     /// stable so artifact inputs are deterministic.
     bi_rows: Vec<[u16; 2]>,
@@ -90,7 +205,12 @@ impl RootSet {
         {
             bail!("duplicate roots in dictionary");
         }
-        Ok(RootSet { bi, tri, quad, bi_rows, tri_rows, quad_rows })
+        let dense = DenseDicts {
+            bi: RootBitmap::from_rows(&bi_rows),
+            tri: RootBitmap::from_rows(&tri_rows),
+            quad: RootBitmap::from_rows(&quad_rows),
+        };
+        Ok(RootSet { bi, tri, quad, dense, bi_rows, tri_rows, quad_rows })
     }
 
     /// A small built-in dictionary for tests and examples that must run
@@ -200,6 +320,62 @@ mod tests {
         assert_eq!(&p[..3], &[first[0] as i32, first[1] as i32, first[2] as i32]);
         // padding rows are zero
         assert_eq!(&p[r.tri_rows().len() * 3..][..3], &[0, 0, 0]);
+    }
+
+    /// The bit-packed dense dictionaries agree with the HashSet oracle on
+    /// every stored root and on a sweep of absent stems (incl. windows
+    /// containing PAD / non-Arabic characters, which must never match).
+    #[test]
+    fn dense_bitmaps_agree_with_hashsets() {
+        let r = RootSet::builtin_mini();
+        assert_eq!(r.dense.tri.len(), r.tri.len());
+        assert_eq!(r.dense.quad.len(), r.quad.len());
+        assert_eq!(r.dense.bi.len(), r.bi.len());
+        for row in r.tri_rows() {
+            assert!(r.dense.tri.contains_chars(row));
+        }
+        for row in r.quad_rows() {
+            assert!(r.dense.quad.contains_chars(row));
+        }
+        for row in r.bi_rows() {
+            assert!(r.dense.bi.contains_chars(row));
+        }
+        // exhaustive negative sweep over a slice of the tri key space
+        let mut rng = crate::rng::SplitMix64::new(0xB17);
+        for _ in 0..20_000 {
+            let stem = [
+                chars::index_char(1 + rng.below(36) as u8),
+                chars::index_char(1 + rng.below(36) as u8),
+                chars::index_char(1 + rng.below(36) as u8),
+            ];
+            assert_eq!(r.dense.tri.contains_chars(&stem), r.tri.contains(&stem), "{stem:04X?}");
+        }
+        // PAD and non-Arabic components can never address a stored root
+        assert!(!r.dense.tri.contains_chars(&[0, 0, 0]));
+        assert!(!r.dense.tri.contains_chars(&[0x68, 0x65, 0x6C])); // "hel"
+        let first = r.tri_rows()[0];
+        assert!(!r.dense.tri.contains_chars(&[first[0], first[1], 0]));
+    }
+
+    #[test]
+    fn bitmap_geometry_is_cache_resident() {
+        let r = RootSet::builtin_mini();
+        assert_eq!(r.dense.bi.memory_bytes(), (37 * 37 + 63) / 64 * 8);
+        assert_eq!(r.dense.tri.memory_bytes(), (37 * 37 * 37 + 63) / 64 * 8);
+        assert_eq!(r.dense.quad.memory_bytes(), (37usize.pow(4) + 63) / 64 * 8);
+        assert!(r.dense.tri.memory_bytes() <= 8 * 1024, "tri bitmap must fit L1");
+        assert!(r.dense.quad.memory_bytes() <= 256 * 1024, "quad bitmap must fit L2");
+    }
+
+    /// The bit-packed bitmaps and the i32 PJRT bitmaps use the same key
+    /// function — bit k set iff `bitmap_i32[k] == 1`.
+    #[test]
+    fn bitmap_key_matches_i32_bitmap() {
+        let r = RootSet::builtin_mini();
+        let i32_bm = r.tri_bitmap();
+        for (k, &v) in i32_bm.iter().enumerate() {
+            assert_eq!(r.dense.tri.contains_key(k), v == 1, "key {k}");
+        }
     }
 
     #[test]

@@ -9,161 +9,17 @@
 //! one thread; the coordinator owns it on a dedicated executor thread and
 //! feeds it through a queue. Dictionaries are uploaded to device once and
 //! reused as `PjRtBuffer`s for every call (`execute_b`).
+//!
+//! The `xla` bindings crate is not available in the offline build image, so
+//! the real engine is compiled only with `--features pjrt`; the default
+//! build ships the API-compatible [`Engine`] stub below, which reports a
+//! clean error at load time (see ROADMAP.md "Open items" — PJRT artifact
+//! loading).
 
-use crate::chars::{ArabicWord, MAX_WORD};
-use crate::roots::RootSet;
-use crate::stemmer::{MatchKind, StemResult};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-
-/// One compiled stemmer executable (a fixed batch size).
-struct StemmerExe {
-    batch: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The PJRT engine: client + compiled executables + device-resident
-/// dictionaries.
-pub struct Engine {
-    client: xla::PjRtClient,
-    exes: BTreeMap<usize, StemmerExe>,
-    dict_bufs: Vec<xla::PjRtBuffer>, // roots2, roots3, roots4
-    dicts_i32: [Vec<i32>; 3],
-}
+use std::path::PathBuf;
 
 /// Batch sizes the AOT pipeline bakes (aot.py BATCH_SIZES).
 pub const BATCHES: &[usize] = &[1, 32, 256];
-
-impl Engine {
-    /// Load every `stemmer_b*.hlo.txt` under `artifacts_dir`, compile, and
-    /// upload the dictionaries.
-    pub fn load(artifacts_dir: &Path, roots: &RootSet) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        let mut exes = BTreeMap::new();
-        for &b in BATCHES {
-            let path = artifacts_dir.join(format!("stemmer_b{b}.hlo.txt"));
-            if !path.exists() {
-                continue;
-            }
-            let exe = compile_hlo(&client, &path)
-                .with_context(|| format!("compiling {}", path.display()))?;
-            exes.insert(b, StemmerExe { batch: b, exe });
-        }
-        if exes.is_empty() {
-            bail!(
-                "no stemmer artifacts under {} — run `make artifacts` first",
-                artifacts_dir.display()
-            );
-        }
-        // Dictionaries travel as direct-mapped bitmaps (roots::bitmap_i32 —
-        // the block-RAM-lookup formulation; see kernels/lookup.py), uploaded
-        // to the device once and reused by every execute_b call.
-        let dicts_i32 = [roots.bi_bitmap(), roots.tri_bitmap(), roots.quad_bitmap()];
-        let dict_bufs = vec![
-            client
-                .buffer_from_host_buffer(&dicts_i32[0], &[dicts_i32[0].len()], None)
-                .map_err(|e| anyhow!("upload bitmap2: {e}"))?,
-            client
-                .buffer_from_host_buffer(&dicts_i32[1], &[dicts_i32[1].len()], None)
-                .map_err(|e| anyhow!("upload bitmap3: {e}"))?,
-            client
-                .buffer_from_host_buffer(&dicts_i32[2], &[dicts_i32[2].len()], None)
-                .map_err(|e| anyhow!("upload bitmap4: {e}"))?,
-        ];
-        Ok(Engine { client, exes, dict_bufs, dicts_i32 })
-    }
-
-    /// Batch sizes actually loaded.
-    pub fn batch_sizes(&self) -> Vec<usize> {
-        self.exes.keys().copied().collect()
-    }
-
-    /// Smallest loaded batch size that fits `n` words, or the largest
-    /// available (the caller chunks).
-    pub fn pick_batch(&self, n: usize) -> usize {
-        for (&b, _) in self.exes.iter() {
-            if n <= b {
-                return b;
-            }
-        }
-        *self.exes.keys().next_back().expect("non-empty")
-    }
-
-    /// Encode words into flat `(B·15)` codes + `(B,)` lengths host buffers.
-    fn encode(&self, words: &[ArabicWord], batch: usize) -> (Vec<i32>, Vec<i32>) {
-        debug_assert!(words.len() <= batch);
-        let mut flat = vec![0i32; batch * MAX_WORD];
-        let mut lens = vec![0i32; batch];
-        for (i, w) in words.iter().enumerate() {
-            for (j, &c) in w.chars.iter().enumerate() {
-                flat[i * MAX_WORD + j] = c as i32;
-            }
-            lens[i] = w.len as i32;
-        }
-        (flat, lens)
-    }
-
-    /// Run one batch (up to the executable's batch size) and decode.
-    pub fn stem_chunk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-        let b = self.pick_batch(words.len());
-        let exe = &self.exes[&b];
-        let mut out = Vec::with_capacity(words.len());
-        for chunk in words.chunks(exe.batch) {
-            out.extend(self.run_one(exe, chunk)?);
-        }
-        Ok(out)
-    }
-
-    fn run_one(&self, exe: &StemmerExe, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-        let (flat, lens) = self.encode(words, exe.batch);
-        // Upload the per-call inputs; dictionaries are already on device.
-        let wbuf = self
-            .client
-            .buffer_from_host_buffer(&flat, &[exe.batch, MAX_WORD], None)
-            .map_err(|e| anyhow!("upload words: {e}"))?;
-        let lbuf = self
-            .client
-            .buffer_from_host_buffer(&lens, &[exe.batch], None)
-            .map_err(|e| anyhow!("upload lengths: {e}"))?;
-        let args =
-            [&wbuf, &lbuf, &self.dict_bufs[0], &self.dict_bufs[1], &self.dict_bufs[2]];
-        let result = exe
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&args)
-            .map_err(|e| anyhow!("execute: {e}"))?;
-        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
-        let (root_l, kind_l, cut_l) = lit.to_tuple3().map_err(|e| anyhow!("tuple3: {e}"))?;
-        let roots = root_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
-        let kinds = kind_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
-        let cuts = cut_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
-        let mut out = Vec::with_capacity(words.len());
-        for i in 0..words.len() {
-            let mut root = [0u16; 4];
-            for j in 0..4 {
-                root[j] = roots[i * 4 + j] as u16;
-            }
-            out.push(StemResult {
-                root,
-                kind: MatchKind::from_u8(kinds[i] as u8),
-                cut: cuts[i] as u8,
-            });
-        }
-        Ok(out)
-    }
-
-    /// The raw padded dictionaries (for tests / reports).
-    pub fn dicts(&self) -> &[Vec<i32>; 3] {
-        &self.dicts_i32
-    }
-}
-
-fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))
-}
 
 /// Locate the artifacts directory: `$AMA_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
@@ -171,3 +27,221 @@ pub fn default_artifacts_dir() -> PathBuf {
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
+
+#[cfg(feature = "pjrt")]
+mod engine {
+    use super::BATCHES;
+    use crate::chars::{ArabicWord, MAX_WORD};
+    use crate::roots::RootSet;
+    use crate::stemmer::{MatchKind, StemResult};
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    /// One compiled stemmer executable (a fixed batch size).
+    struct StemmerExe {
+        batch: usize,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The PJRT engine: client + compiled executables + device-resident
+    /// dictionaries.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        exes: BTreeMap<usize, StemmerExe>,
+        dict_bufs: Vec<xla::PjRtBuffer>, // roots2, roots3, roots4
+        dicts_i32: [Vec<i32>; 3],
+    }
+
+    impl Engine {
+        /// Load every `stemmer_b*.hlo.txt` under `artifacts_dir`, compile,
+        /// and upload the dictionaries.
+        pub fn load(artifacts_dir: &Path, roots: &RootSet) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+            let mut exes = BTreeMap::new();
+            for &b in BATCHES {
+                let path = artifacts_dir.join(format!("stemmer_b{b}.hlo.txt"));
+                if !path.exists() {
+                    continue;
+                }
+                let exe = compile_hlo(&client, &path)
+                    .with_context(|| format!("compiling {}", path.display()))?;
+                exes.insert(b, StemmerExe { batch: b, exe });
+            }
+            if exes.is_empty() {
+                bail!(
+                    "no stemmer artifacts under {} — run `make artifacts` first",
+                    artifacts_dir.display()
+                );
+            }
+            // Dictionaries travel as direct-mapped bitmaps (roots::bitmap_i32
+            // — the block-RAM-lookup formulation; see kernels/lookup.py),
+            // uploaded to the device once and reused by every execute_b call.
+            let dicts_i32 = [roots.bi_bitmap(), roots.tri_bitmap(), roots.quad_bitmap()];
+            let dict_bufs = vec![
+                client
+                    .buffer_from_host_buffer(&dicts_i32[0], &[dicts_i32[0].len()], None)
+                    .map_err(|e| anyhow!("upload bitmap2: {e}"))?,
+                client
+                    .buffer_from_host_buffer(&dicts_i32[1], &[dicts_i32[1].len()], None)
+                    .map_err(|e| anyhow!("upload bitmap3: {e}"))?,
+                client
+                    .buffer_from_host_buffer(&dicts_i32[2], &[dicts_i32[2].len()], None)
+                    .map_err(|e| anyhow!("upload bitmap4: {e}"))?,
+            ];
+            Ok(Engine { client, exes, dict_bufs, dicts_i32 })
+        }
+
+        /// Batch sizes actually loaded.
+        pub fn batch_sizes(&self) -> Vec<usize> {
+            self.exes.keys().copied().collect()
+        }
+
+        /// Smallest loaded batch size that fits `n` words, or the largest
+        /// available (the caller chunks).
+        pub fn pick_batch(&self, n: usize) -> usize {
+            for (&b, _) in self.exes.iter() {
+                if n <= b {
+                    return b;
+                }
+            }
+            *self.exes.keys().next_back().expect("non-empty")
+        }
+
+        /// Encode words into flat `(B·15)` codes + `(B,)` lengths buffers.
+        fn encode(&self, words: &[ArabicWord], batch: usize) -> (Vec<i32>, Vec<i32>) {
+            debug_assert!(words.len() <= batch);
+            let mut flat = vec![0i32; batch * MAX_WORD];
+            let mut lens = vec![0i32; batch];
+            for (i, w) in words.iter().enumerate() {
+                for (j, &c) in w.chars.iter().enumerate() {
+                    flat[i * MAX_WORD + j] = c as i32;
+                }
+                lens[i] = w.len as i32;
+            }
+            (flat, lens)
+        }
+
+        /// Run one batch (up to the executable's batch size) and decode.
+        pub fn stem_chunk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+            let b = self.pick_batch(words.len());
+            let exe = &self.exes[&b];
+            let mut out = Vec::with_capacity(words.len());
+            for chunk in words.chunks(exe.batch) {
+                out.extend(self.run_one(exe, chunk)?);
+            }
+            Ok(out)
+        }
+
+        fn run_one(&self, exe: &StemmerExe, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+            let (flat, lens) = self.encode(words, exe.batch);
+            // Upload the per-call inputs; dictionaries are already on device.
+            let wbuf = self
+                .client
+                .buffer_from_host_buffer(&flat, &[exe.batch, MAX_WORD], None)
+                .map_err(|e| anyhow!("upload words: {e}"))?;
+            let lbuf = self
+                .client
+                .buffer_from_host_buffer(&lens, &[exe.batch], None)
+                .map_err(|e| anyhow!("upload lengths: {e}"))?;
+            let args =
+                [&wbuf, &lbuf, &self.dict_bufs[0], &self.dict_bufs[1], &self.dict_bufs[2]];
+            let result = exe
+                .exe
+                .execute_b::<&xla::PjRtBuffer>(&args)
+                .map_err(|e| anyhow!("execute: {e}"))?;
+            let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+            let (root_l, kind_l, cut_l) = lit.to_tuple3().map_err(|e| anyhow!("tuple3: {e}"))?;
+            let roots = root_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+            let kinds = kind_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+            let cuts = cut_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+            let mut out = Vec::with_capacity(words.len());
+            for i in 0..words.len() {
+                let mut root = [0u16; 4];
+                for j in 0..4 {
+                    root[j] = roots[i * 4 + j] as u16;
+                }
+                out.push(StemResult {
+                    root,
+                    kind: MatchKind::from_u8(kinds[i] as u8),
+                    cut: cuts[i] as u8,
+                });
+            }
+            Ok(out)
+        }
+
+        /// The raw padded dictionaries (for tests / reports).
+        pub fn dicts(&self) -> &[Vec<i32>; 3] {
+            &self.dicts_i32
+        }
+    }
+
+    fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::BATCHES;
+    use crate::chars::ArabicWord;
+    use crate::roots::RootSet;
+    use crate::stemmer::StemResult;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// API-compatible stand-in for the PJRT engine when the `pjrt` feature
+    /// (and the `xla` bindings it needs) is unavailable. `load` always
+    /// fails with an actionable message, so no instance ever exists; the
+    /// methods keep the same signatures for callers compiled either way.
+    pub struct Engine {
+        dicts_i32: [Vec<i32>; 3],
+    }
+
+    impl Engine {
+        pub fn load(artifacts_dir: &Path, _roots: &RootSet) -> Result<Self> {
+            let have_artifacts = BATCHES
+                .iter()
+                .any(|b| artifacts_dir.join(format!("stemmer_b{b}.hlo.txt")).exists());
+            if !have_artifacts {
+                bail!(
+                    "no stemmer artifacts under {} — run `make artifacts` first",
+                    artifacts_dir.display()
+                );
+            }
+            bail!(
+                "artifacts found under {}, but this binary was built without the \
+                 `pjrt` feature. Enabling it needs the `xla` bindings crate, which \
+                 is not in the offline image: add `xla` to [dependencies] in \
+                 Cargo.toml, then `cargo build --features pjrt` (see ROADMAP.md \
+                 \"PJRT artifact loading\")",
+                artifacts_dir.display()
+            );
+        }
+
+        pub fn batch_sizes(&self) -> Vec<usize> {
+            Vec::new()
+        }
+
+        pub fn pick_batch(&self, _n: usize) -> usize {
+            *BATCHES.last().expect("BATCHES non-empty")
+        }
+
+        pub fn stem_chunk(&self, _words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+            bail!("PJRT engine unavailable: built without the `pjrt` feature")
+        }
+
+        pub fn dicts(&self) -> &[Vec<i32>; 3] {
+            &self.dicts_i32
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;

@@ -1,11 +1,34 @@
-//! The sequential software LB stemmer — the paper's Java baseline, ported.
+//! The software LB stemmer — the paper's Java baseline, ported and then
+//! rebuilt table-driven for throughput.
 //!
 //! Semantics are the shared contract of DESIGN.md §6 and must agree
 //! bit-for-bit with `python/compile/kernels/ref.py::ref_stem_word`, the JAX
 //! model, and the HW simulator (cross-validation tests enforce this).
+//!
+//! Two implementations coexist:
+//!
+//! * [`Stemmer::stem_reference`] — the original scalar port: per-candidate
+//!   prefix/suffix rescans and SipHash `HashSet` probes. Kept as the
+//!   executable specification and the benchmark baseline.
+//! * [`Stemmer::stem`] — the fused hot path, mirroring the paper's
+//!   hardware: affix classes come from the [`chars::CHAR_CLASS`] bitmask
+//!   table (the comparator banks of Figs 6–7), per-word validity from one
+//!   O(n) [`AffixProfile`] (the prd-masks of §4.1), and dictionary
+//!   membership from the direct-addressed [`crate::roots::RootBitmap`]s
+//!   (the block-RAM comparator stage). One pass over the six cut
+//!   positions evaluates all five candidate streams; a property test
+//!   (`proptests::prop_optimized_stem_matches_reference`) pins the two
+//!   paths together on tens of thousands of inflected words.
+//!
+//! [`Stemmer::stem_batch`] runs the same kernel over a structure-of-arrays
+//! batch encoding (contiguous dense-index rows + lengths + profiles), and
+//! [`Stemmer::stem_batch_parallel`] fans chunks of that encoding out
+//! across an [`crate::exec::WorkerPool`].
 
-use crate::chars::{self, ArabicWord, MAX_SUFFIX};
+use crate::chars::{self, AffixProfile, ArabicWord, MAX_PREFIX, MAX_SUFFIX, MAX_WORD};
+use crate::exec::{BoundedQueue, WorkerPool};
 use crate::roots::RootSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// How a root was found — mirrors `alphabet.py::KIND_*`.
@@ -79,7 +102,59 @@ impl Default for StemmerConfig {
     }
 }
 
-/// The sequential linguistic-based stemmer.
+/// Structure-of-arrays encoding of a word batch: contiguous dense-index
+/// rows (`MAX_WORD` bytes per word), lengths, and per-word affix profiles.
+/// Encoded once per batch so the stemming loop touches only flat, cache-
+/// friendly buffers — the software analog of the paper's fixed-width
+/// register file feeding the datapath.
+pub struct SoaBatch {
+    /// Row-major `words.len() × MAX_WORD` dense alphabet indices.
+    pub indices: Vec<u8>,
+    /// Word lengths (≤ `MAX_WORD`).
+    pub lens: Vec<u8>,
+    /// Per-word affix profiles.
+    pub profiles: Vec<AffixProfile>,
+}
+
+impl SoaBatch {
+    pub fn encode(words: &[ArabicWord]) -> SoaBatch {
+        let mut indices = vec![0u8; words.len() * MAX_WORD];
+        let mut lens = Vec::with_capacity(words.len());
+        let mut profiles = Vec::with_capacity(words.len());
+        for (i, w) in words.iter().enumerate() {
+            let row = &mut indices[i * MAX_WORD..(i + 1) * MAX_WORD];
+            row.copy_from_slice(&w.to_indices());
+            lens.push(w.len as u8);
+            profiles.push(AffixProfile::from_indices(&row[..w.len]));
+        }
+        SoaBatch { indices, lens, profiles }
+    }
+
+    /// Dense-index row of word `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.indices[i * MAX_WORD..(i + 1) * MAX_WORD]
+    }
+}
+
+/// Minimum chunk width of the parallel batch kernel: big enough to
+/// amortize scheduling, small enough that coordinator-sized batches
+/// (hundreds of words) still fan out across several workers.
+const MIN_PARALLEL_CHUNK: usize = 256;
+
+/// How long the assembler waits for one chunk before concluding a worker
+/// died (stemming a chunk takes microseconds; this is pure deadlock
+/// insurance).
+const CHUNK_DEADLINE: std::time::Duration = std::time::Duration::from_secs(30);
+
+const IDX_ALEF: u8 = chars::char_index(chars::ALEF);
+const IDX_WAW: u8 = chars::char_index(chars::WAW);
+const A: usize = chars::ALPHABET_SIZE;
+
+/// Sentinel for "stream found no cut".
+const NO_CUT: usize = usize::MAX;
+
+/// The linguistic-based stemmer.
 pub struct Stemmer {
     roots: Arc<RootSet>,
     config: StemmerConfig,
@@ -103,7 +178,8 @@ impl Stemmer {
     }
 
     /// Is the window `word[p..p+size]` a valid stem candidate?
-    /// (DESIGN.md §6 shared contract — `ref.candidate_valid`.)
+    /// (DESIGN.md §6 shared contract — `ref.candidate_valid`.) Used by the
+    /// reference path; the fused path answers this from the AffixProfile.
     fn candidate_valid(w: &ArabicWord, p: usize, size: usize) -> bool {
         let n = w.len;
         if p + size > n || n - (p + size) > MAX_SUFFIX {
@@ -117,9 +193,132 @@ impl Stemmer {
 
     /// Extract the verb root of `w`. Priority: direct tri, direct quad,
     /// remove-infix tri, remove-infix bi, restored form; smaller cut first.
+    ///
+    /// This is the fused hot path: one pass over the cut positions with
+    /// O(1) candidate validity (two comparisons against the profile) and
+    /// O(1) bitset membership per stream. Must stay bit-for-bit equal to
+    /// [`Self::stem_reference`].
     pub fn stem(&self, w: &ArabicWord) -> StemResult {
+        let idx = w.to_indices();
+        let profile = AffixProfile::from_indices(&idx[..w.len]);
+        self.stem_encoded(w, &idx, profile)
+    }
+
+    /// The fused kernel over a pre-encoded word. `idx` must hold the
+    /// dense indices of `w` (PAD-extended to at least `MAX_WORD` entries)
+    /// and `profile` its affix profile.
+    fn stem_encoded(&self, w: &ArabicWord, idx: &[u8], profile: AffixProfile) -> StemResult {
+        debug_assert!(idx.len() >= MAX_WORD);
+        let n = w.len;
+        let dicts = &self.roots.dense;
+        let infix = self.config.infix_processing;
+        let suffix_start = profile.suffix_start as usize;
+
+        // First-hit cuts for the lower-priority streams (priority is
+        // kind-major, then smallest cut — pass order in ref_stem_word).
+        // The trilateral stream short-circuits: it is the highest priority
+        // and cuts ascend, so its first hit is the final answer.
+        let mut quad_cut = NO_CUT;
+        let mut rm3_cut = NO_CUT;
+        let mut rm2_cut = NO_CUT;
+        let mut rs3_cut = NO_CUT;
+
+        // p ≤ prefix_run ⇔ the first p characters are all prefix letters;
+        // prefix_run ≤ min(n, MAX_PREFIX) by construction.
+        for p in 0..=profile.prefix_run as usize {
+            // Window validity beyond the prefix check: fits the word, the
+            // tail is short enough, and the tail is all suffix letters.
+            let e3 = p + 3;
+            let ok3 = e3 <= n && n - e3 <= MAX_SUFFIX && e3 >= suffix_start;
+            let e4 = p + 4;
+            let ok4 = e4 <= n && n - e4 <= MAX_SUFFIX && e4 >= suffix_start;
+            if ok3 {
+                let key3 = ((idx[p] as usize * A) + idx[p + 1] as usize) * A
+                    + idx[p + 2] as usize;
+                if dicts.tri.contains_key(key3) {
+                    return StemResult {
+                        root: [w.chars[p], w.chars[p + 1], w.chars[p + 2], 0],
+                        kind: MatchKind::Tri,
+                        cut: p as u8,
+                    };
+                }
+            }
+            if ok4 && quad_cut == NO_CUT {
+                let key4 = (((idx[p] as usize * A) + idx[p + 1] as usize) * A
+                    + idx[p + 2] as usize)
+                    * A
+                    + idx[p + 3] as usize;
+                if dicts.quad.contains_key(key4) {
+                    quad_cut = p;
+                }
+            }
+            if infix {
+                let second = idx[p + 1] as usize;
+                let second_infix = chars::CHAR_CLASS[second] & chars::CLASS_INFIX != 0;
+                if ok4 && rm3_cut == NO_CUT && second_infix {
+                    let key = ((idx[p] as usize * A) + idx[p + 2] as usize) * A
+                        + idx[p + 3] as usize;
+                    if dicts.tri.contains_key(key) {
+                        rm3_cut = p;
+                    }
+                }
+                if ok3 && rm2_cut == NO_CUT && second_infix {
+                    let key = idx[p] as usize * A + idx[p + 2] as usize;
+                    if dicts.bi.contains_key(key) {
+                        rm2_cut = p;
+                    }
+                }
+                if ok3 && rs3_cut == NO_CUT && idx[p + 1] == IDX_ALEF {
+                    let key = ((idx[p] as usize * A) + IDX_WAW as usize) * A
+                        + idx[p + 2] as usize;
+                    if dicts.tri.contains_key(key) {
+                        rs3_cut = p;
+                    }
+                }
+            }
+        }
+
+        if quad_cut != NO_CUT {
+            let p = quad_cut;
+            return StemResult {
+                root: [w.chars[p], w.chars[p + 1], w.chars[p + 2], w.chars[p + 3]],
+                kind: MatchKind::Quad,
+                cut: p as u8,
+            };
+        }
+        if rm3_cut != NO_CUT {
+            let p = rm3_cut;
+            return StemResult {
+                root: [w.chars[p], w.chars[p + 2], w.chars[p + 3], 0],
+                kind: MatchKind::RmInfixTri,
+                cut: p as u8,
+            };
+        }
+        if rm2_cut != NO_CUT {
+            let p = rm2_cut;
+            return StemResult {
+                root: [w.chars[p], w.chars[p + 2], 0, 0],
+                kind: MatchKind::RmInfixBi,
+                cut: p as u8,
+            };
+        }
+        if rs3_cut != NO_CUT {
+            let p = rs3_cut;
+            return StemResult {
+                root: [w.chars[p], chars::WAW, w.chars[p + 2], 0],
+                kind: MatchKind::Restored,
+                cut: p as u8,
+            };
+        }
+        StemResult::NONE
+    }
+
+    /// The original scalar implementation — per-candidate rescans and
+    /// `HashSet` probes. Retained as the executable specification and the
+    /// benchmark baseline for [`Self::stem`]; do not optimize.
+    pub fn stem_reference(&self, w: &ArabicWord) -> StemResult {
         // Passes 1–2: direct trilateral then quadrilateral.
-        for p in 0..chars::MAX_PREFIX + 1 {
+        for p in 0..MAX_PREFIX + 1 {
             if Self::candidate_valid(w, p, 3) {
                 let stem = [w.chars[p], w.chars[p + 1], w.chars[p + 2]];
                 if self.roots.tri.contains(&stem) {
@@ -131,7 +330,7 @@ impl Stemmer {
                 }
             }
         }
-        for p in 0..chars::MAX_PREFIX + 1 {
+        for p in 0..MAX_PREFIX + 1 {
             if Self::candidate_valid(w, p, 4) {
                 let stem = [w.chars[p], w.chars[p + 1], w.chars[p + 2], w.chars[p + 3]];
                 if self.roots.quad.contains(&stem) {
@@ -143,7 +342,7 @@ impl Stemmer {
             return StemResult::NONE;
         }
         // Pass 3: Remove Infix on quadrilateral stems → trilateral roots.
-        for p in 0..chars::MAX_PREFIX + 1 {
+        for p in 0..MAX_PREFIX + 1 {
             if Self::candidate_valid(w, p, 4) && chars::is_infix_letter(w.chars[p + 1]) {
                 let red = [w.chars[p], w.chars[p + 2], w.chars[p + 3]];
                 if self.roots.tri.contains(&red) {
@@ -156,7 +355,7 @@ impl Stemmer {
             }
         }
         // Pass 4: Remove Infix on trilateral stems → bilateral roots.
-        for p in 0..chars::MAX_PREFIX + 1 {
+        for p in 0..MAX_PREFIX + 1 {
             if Self::candidate_valid(w, p, 3) && chars::is_infix_letter(w.chars[p + 1]) {
                 let red = [w.chars[p], w.chars[p + 2]];
                 if self.roots.bi.contains(&red) {
@@ -169,7 +368,7 @@ impl Stemmer {
             }
         }
         // Pass 5: Restore Original Form (hollow verbs): 2nd char ا → و.
-        for p in 0..chars::MAX_PREFIX + 1 {
+        for p in 0..MAX_PREFIX + 1 {
             if Self::candidate_valid(w, p, 3) && w.chars[p + 1] == chars::ALEF {
                 let res = [w.chars[p], chars::WAW, w.chars[p + 2]];
                 if self.roots.tri.contains(&res) {
@@ -184,15 +383,86 @@ impl Stemmer {
         StemResult::NONE
     }
 
-    /// Convenience: stem a batch sequentially (the paper's software loop).
+    /// Stem a batch through the SoA kernel: encode once into contiguous
+    /// index/length/profile buffers, then run the fused kernel per row.
     pub fn stem_batch(&self, words: &[ArabicWord]) -> Vec<StemResult> {
-        words.iter().map(|w| self.stem(w)).collect()
+        let batch = SoaBatch::encode(words);
+        words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| self.stem_encoded(w, batch.row(i), batch.profiles[i]))
+            .collect()
+    }
+
+    /// Parallel batch kernel: chunks claimed from an atomic cursor by an
+    /// [`exec::WorkerPool`], results reassembled in order. Falls back to
+    /// the sequential kernel for batches too small to amortize the
+    /// per-call thread spawn (the pool is not persistent — the big wins
+    /// are bulk workloads: benches, corpus analysis, `--batch ≥ 4096`
+    /// serving).
+    ///
+    /// [`exec::WorkerPool`]: crate::exec::WorkerPool
+    pub fn stem_batch_parallel(&self, words: &[ArabicWord], workers: usize) -> Vec<StemResult> {
+        if workers <= 1 || words.len() < 2 * MIN_PARALLEL_CHUNK {
+            return self.stem_batch(words);
+        }
+        // Adaptive chunk: every worker gets ~4 chunks for load balance,
+        // but never below the amortization floor.
+        let chunk = words.len().div_ceil(workers * 4).max(MIN_PARALLEL_CHUNK);
+        let n_chunks = words.len().div_ceil(chunk);
+        let shared: Arc<Vec<ArabicWord>> = Arc::new(words.to_vec());
+        let cursor = Arc::new(AtomicUsize::new(0));
+        // Capacity = n_chunks so producers never block; exactly n_chunks
+        // results arrive.
+        let done: Arc<BoundedQueue<(usize, Vec<StemResult>)>> = BoundedQueue::new(n_chunks);
+        let roots = self.roots.clone();
+        let config = self.config;
+        let pool = WorkerPool::spawn(workers.min(n_chunks), "stem-batch", {
+            let shared = shared.clone();
+            let cursor = cursor.clone();
+            let done = done.clone();
+            move |_id, _shutdown| {
+                let stemmer = Stemmer::new(roots.clone(), config);
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= shared.len() {
+                        break;
+                    }
+                    let end = (start + chunk).min(shared.len());
+                    let res = stemmer.stem_batch(&shared[start..end]);
+                    if done.push((start, res)).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        let mut out = vec![StemResult::NONE; words.len()];
+        let mut failure = None;
+        for _ in 0..n_chunks {
+            // The timeout is deadlock insurance: if a worker panics before
+            // delivering its claimed chunk, fail loudly instead of blocking
+            // forever on a queue nobody will ever fill.
+            match done.pop_timeout(CHUNK_DEADLINE) {
+                Ok((start, res)) => out[start..start + res.len()].copy_from_slice(&res),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        done.close();
+        pool.join();
+        if let Some(e) = failure {
+            panic!("stem_batch_parallel: worker died without delivering a chunk ({e:?})");
+        }
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::SplitMix64;
     use std::sync::Arc;
 
     fn stemmer() -> Stemmer {
@@ -315,5 +585,73 @@ mod tests {
         // خدرس: خ is not a prefix letter so p=1 is invalid → no match for درس.
         let r = stemmer().stem(&ArabicWord::encode("خدرس"));
         assert_eq!(r.kind, MatchKind::None);
+    }
+
+    /// The fused path and the reference path agree on the paper examples
+    /// and on random letter soup, in both configs. (The heavyweight
+    /// 10k-word inflected-corpus version lives in tests/proptests.rs.)
+    #[test]
+    fn fused_equals_reference() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let mut rng = SplitMix64::new(0xFA57);
+        for infix in [true, false] {
+            let s = Stemmer::new(roots.clone(), StemmerConfig { infix_processing: infix });
+            for w in [
+                "سيلعبون",
+                "أفاستسقيناكموها",
+                "فتزحزحت",
+                "قال",
+                "كاتب",
+                "ماد",
+                "درسوووووووووو",
+                "خدرس",
+                "",
+                "hello",
+            ] {
+                let w = ArabicWord::encode(w);
+                assert_eq!(s.stem(&w), s.stem_reference(&w), "word {w:?} infix={infix}");
+            }
+            for case in 0..2000 {
+                let n = rng.index(MAX_WORD + 1);
+                let codes: Vec<u16> =
+                    (0..n).map(|_| chars::index_char(1 + rng.below(36) as u8)).collect();
+                let w = ArabicWord::from_codes(&codes);
+                assert_eq!(s.stem(&w), s.stem_reference(&w), "case {case} {w:?}");
+            }
+        }
+    }
+
+    /// Batch kernels are per-word-equal to the scalar fused path.
+    #[test]
+    fn batch_kernels_match_scalar() {
+        let s = stemmer();
+        let mut rng = SplitMix64::new(0xBA7C);
+        let words: Vec<ArabicWord> = (0..4000)
+            .map(|_| {
+                let n = rng.index(MAX_WORD + 1);
+                let codes: Vec<u16> =
+                    (0..n).map(|_| chars::index_char(1 + rng.below(36) as u8)).collect();
+                ArabicWord::from_codes(&codes)
+            })
+            .collect();
+        let scalar: Vec<StemResult> = words.iter().map(|w| s.stem(w)).collect();
+        assert_eq!(s.stem_batch(&words), scalar);
+        assert_eq!(s.stem_batch_parallel(&words, 4), scalar);
+        // empty + tiny batches
+        assert!(s.stem_batch(&[]).is_empty());
+        assert!(s.stem_batch_parallel(&[], 4).is_empty());
+        assert_eq!(s.stem_batch_parallel(&words[..3], 4), &scalar[..3]);
+    }
+
+    #[test]
+    fn soa_encoding_layout() {
+        let words =
+            [ArabicWord::encode("درس"), ArabicWord::encode(""), ArabicWord::encode("سيلعبون")];
+        let b = SoaBatch::encode(&words);
+        assert_eq!(b.indices.len(), 3 * MAX_WORD);
+        assert_eq!(b.lens, vec![3, 0, 7]);
+        assert_eq!(b.row(0)[..3], words[0].to_indices()[..3]);
+        assert!(b.row(1).iter().all(|&i| i == 0));
+        assert_eq!(b.profiles[2], AffixProfile::of(&words[2]));
     }
 }

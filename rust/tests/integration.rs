@@ -257,9 +257,13 @@ fn runtime_failure_injection() {
 }
 
 /// PJRT engine agrees with software on a corpus slice (skipped when
-/// artifacts are absent). The full-corpus check lives in `ama selftest`.
+/// artifacts are absent or the engine is the non-pjrt stub). The
+/// full-corpus check lives in `ama selftest`.
 #[test]
 fn runtime_matches_software_when_artifacts_present() {
+    if !cfg!(feature = "pjrt") {
+        return; // stub Engine::load always errors, even with artifacts
+    }
     let artifacts = ama::runtime::default_artifacts_dir();
     let abs = Path::new(env!("CARGO_MANIFEST_DIR")).join(&artifacts);
     if !abs.join("stemmer_b32.hlo.txt").exists() {
@@ -276,6 +280,9 @@ fn runtime_matches_software_when_artifacts_present() {
 /// Engine batch-size selection picks the smallest artifact that fits.
 #[test]
 fn runtime_batch_selection() {
+    if !cfg!(feature = "pjrt") {
+        return; // stub Engine::load always errors, even with artifacts
+    }
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("stemmer_b256.hlo.txt").exists() {
         return;

@@ -95,6 +95,71 @@ fn prop_stem_result_structurally_sound() {
     }
 }
 
+/// PR 1 acceptance property: the optimized table-driven `stem` is
+/// bit-for-bit equal to the retained scalar `stem_reference` — `root`,
+/// `kind` and `cut` all match — on 10k randomly inflected words drawn
+/// from the dictionary through the paper's own morphological patterns,
+/// in both infix configs. This pins
+/// the MatchKind priority (tri > quad > rm-infix-tri > rm-infix-bi >
+/// restored) and the smallest-cut rule across realistic surface forms.
+#[test]
+fn prop_optimized_stem_matches_reference() {
+    let r = roots();
+    let with = Stemmer::with_defaults(r.clone());
+    let without = Stemmer::new(r.clone(), StemmerConfig { infix_processing: false });
+    let mut rng = SplitMix64::new(0x0917_0001);
+    let classes =
+        [corpus::FormClass::Direct, corpus::FormClass::Infix, corpus::FormClass::Unstemmable];
+
+    let mut lexicon: Vec<[u16; 4]> = Vec::new();
+    for t in r.tri_rows() {
+        lexicon.push([t[0], t[1], t[2], 0]);
+    }
+    for q in r.quad_rows() {
+        lexicon.push(*q);
+    }
+    for b in r.bi_rows() {
+        lexicon.push([b[0], b[1], 0, 0]);
+    }
+
+    let mut kinds_seen = std::collections::HashSet::new();
+    for case in 0..10_000 {
+        let gold = *rng.choose(&lexicon);
+        let class = *rng.choose(&classes);
+        let word = corpus::inflect(&gold, class, &mut rng);
+        let a = with.stem(&word);
+        let b = with.stem_reference(&word);
+        assert_eq!(a, b, "case {case} (with-infix): {word:?}");
+        kinds_seen.insert(a.kind);
+        let a = without.stem(&word);
+        let b = without.stem_reference(&word);
+        assert_eq!(a, b, "case {case} (no-infix): {word:?}");
+    }
+    // the corpus must actually have exercised every extraction algorithm
+    for k in [
+        MatchKind::None,
+        MatchKind::Tri,
+        MatchKind::Quad,
+        MatchKind::RmInfixTri,
+        MatchKind::RmInfixBi,
+        MatchKind::Restored,
+    ] {
+        assert!(kinds_seen.contains(&k), "inflected corpus never produced {k:?}");
+    }
+}
+
+/// The fused batch kernels agree with the scalar paths on random words.
+#[test]
+fn prop_batch_kernels_equal_reference() {
+    let r = roots();
+    let sw = Stemmer::with_defaults(r.clone());
+    let mut rng = SplitMix64::new(0x50A0);
+    let words: Vec<ArabicWord> = (0..5000).map(|_| random_word(&mut rng)).collect();
+    let expected: Vec<_> = words.iter().map(|w| sw.stem_reference(w)).collect();
+    assert_eq!(sw.stem_batch(&words), expected);
+    assert_eq!(sw.stem_batch_parallel(&words, 4), expected);
+}
+
 /// Dictionary roots stem to themselves (identity on the fixpoint set).
 #[test]
 fn prop_roots_are_fixpoints() {

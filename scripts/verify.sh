@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus lint and a bench smoke — run from the repo root.
+#
+#   scripts/verify.sh          # build + tests + clippy + 5s bench smoke
+#   scripts/verify.sh --quick  # build + tests only
+#
+# Referenced from ROADMAP.md; keep it green before merging.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--quick" ]]; then
+  echo "verify: quick mode, skipping clippy + bench smoke"
+  exit 0
+fi
+
+echo "== lint: cargo clippy -- -D warnings =="
+if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "clippy not installed; skipping (install with 'rustup component add clippy')"
+fi
+
+echo "== bench smoke (~5s, AMA_BENCH_FAST) =="
+AMA_BENCH_FAST=1 ./target/release/ama bench json \
+  --words 5000 --out /tmp/ama_bench_smoke.json
+python3 - <<'EOF' 2>/dev/null || grep -q '"schema": "ama-bench-v1"' /tmp/ama_bench_smoke.json
+import json
+with open("/tmp/ama_bench_smoke.json") as f:
+    report = json.load(f)
+assert report["schema"] == "ama-bench-v1", report
+assert report["results"], "empty bench results"
+print("bench smoke OK:", len(report["results"]), "rows")
+EOF
+
+echo "verify: all green"
