@@ -2,9 +2,11 @@
 #
 #   make data       — regenerate the root dictionaries under data/
 #   make artifacts  — AOT-lower the JAX stemmer to artifacts/*.hlo.txt
-#   make verify     — tier-1 + clippy + bench smoke (scripts/verify.sh)
+#   make verify     — tier-1 + clippy + bench + loadtest smoke (scripts/verify.sh)
+#   make loadtest   — full serving-path comparison (per-word vs pipelined,
+#                     32 conns × 5 s) writing measured rows to BENCH_PR2.json
 
-.PHONY: data artifacts verify test
+.PHONY: data artifacts verify test loadtest
 
 data:
 	cd python && python3 -m compile.gen_roots ../data
@@ -17,3 +19,8 @@ verify:
 
 test:
 	cargo test -q
+
+loadtest:
+	cargo build --release
+	./target/release/ama loadtest --conns 32 --secs 5 --depth 64 \
+		--mode both --backend software-par --out BENCH_PR2.json

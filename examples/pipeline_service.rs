@@ -15,7 +15,6 @@ use ama::stemmer::Stemmer;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::Path;
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -34,13 +33,17 @@ fn main() -> anyhow::Result<()> {
     );
 
     // TCP server on an ephemeral port.
-    let server = Server::bind("127.0.0.1:0", coord.handle())?;
+    let server = Arc::new(Server::bind("127.0.0.1:0", coord.handle())?);
     let addr = server.local_addr()?;
-    let stop = server.stop_flag();
-    let srv = std::thread::spawn(move || server.serve_forever());
+    let srv = {
+        let server = server.clone();
+        std::thread::spawn(move || server.serve_forever())
+    };
     println!("serving on {addr}");
 
-    // Client workload: 4 concurrent connections, 2,000 words each.
+    // Client workload: 4 concurrent connections, 2,000 words each, sent in
+    // pipelined bursts of 64 lines (the server folds each burst into one
+    // stem_bulk call — see server.rs module docs).
     let c = corpus::generate(&roots, &CorpusConfig::small(8000, 21));
     let words: Vec<String> = c.tokens.iter().map(|t| t.word.to_string_ar()).collect();
     let t0 = Instant::now();
@@ -52,12 +55,19 @@ fn main() -> anyhow::Result<()> {
             conn.set_nodelay(true)?; // see server.rs — Nagle kills ping-pong
             let mut reader = BufReader::new(conn.try_clone()?);
             let mut ok = 0;
-            for w in &chunk {
-                writeln!(conn, "{w}")?;
-                let mut line = String::new();
-                reader.read_line(&mut line)?;
-                if line.split('\t').count() == 4 {
-                    ok += 1;
+            for burst in chunk.chunks(64) {
+                let mut lines = String::new();
+                for w in burst {
+                    lines.push_str(w);
+                    lines.push('\n');
+                }
+                conn.write_all(lines.as_bytes())?; // whole burst before reading
+                for w in burst {
+                    let mut line = String::new();
+                    reader.read_line(&mut line)?;
+                    if line.starts_with(w.as_str()) && line.split('\t').count() == 4 {
+                        ok += 1;
+                    }
                 }
             }
             writeln!(conn)?; // close
@@ -76,9 +86,14 @@ fn main() -> anyhow::Result<()> {
         total as f64 / dt.as_secs_f64()
     );
     println!("coordinator: {snap}");
+    println!(
+        "connections: accepted={} active={} completed={}",
+        server.stats.accepted(),
+        server.stats.active(),
+        server.stats.completed()
+    );
 
-    stop.store(true, Ordering::SeqCst);
-    let _ = TcpStream::connect(addr); // unblock accept
+    server.stop(); // sets the flag and pokes the accept loop
     srv.join().unwrap()?;
     coord.shutdown();
     Ok(())

@@ -59,7 +59,8 @@ fn main() {
         coord.shutdown();
     }
 
-    // Bulk API (single shared reply channel) vs per-word channels.
+    // Reply-slab bulk path (windowed tickets, zero allocation per word)
+    // vs the per-word submit/wait ping-pong.
     {
         let coord = Coordinator::start(
             CoordinatorConfig {
@@ -71,11 +72,23 @@ fn main() {
             sw_factory(roots.clone()),
         );
         let h = coord.handle();
-        let r = bench_words("coordinator/sw bulk max_batch=256", &cfg, n, || {
+        let r = bench_words("coordinator/sw bulk (slab) max_batch=256", &cfg, n, || {
             let res = h.stem_bulk(&words).expect("bulk");
             std::hint::black_box(res.len());
         });
         println!("{r}");
+        // Per-word ping-pong: one submit → wait round-trip at a time, the
+        // latency-bound worst case the pipelined protocol exists to avoid.
+        let few = &words[..512.min(words.len())];
+        let r = bench_words("coordinator/sw submit ping-pong", &cfg, few.len() as u64, || {
+            for w in few {
+                let res = h.stem(*w).expect("stem");
+                std::hint::black_box(res.cut);
+            }
+        });
+        println!("{r}");
+        let snap = coord.metrics().snapshot();
+        println!("  saturation: queue_full={} slab_waits={}", snap.queue_full_events, snap.slab_waits);
         coord.shutdown();
     }
 

@@ -1,7 +1,13 @@
 //! Benchmark harness substrate (criterion is not in the offline image):
 //! warmup, adaptive iteration, mean/stddev/min, and words-per-second
-//! throughput reporting in the paper's units.
+//! throughput reporting in the paper's units — plus the TCP load
+//! generator behind `ama loadtest` ([`run_tcp_load`]).
 
+use crate::metrics::LatencyHistogram;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
@@ -120,6 +126,161 @@ pub fn bench_words<F: FnMut()>(
 /// Standard bench header so all five bench binaries print uniformly.
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+// ---------------------------------------------------------------------------
+// TCP load generator (the `ama loadtest` client fleet)
+// ---------------------------------------------------------------------------
+
+/// Aggregate outcome of one [`run_tcp_load`] run.
+#[derive(Clone, Debug)]
+pub struct LoadOutcome {
+    pub conns: usize,
+    /// Lines sent per write burst (1 = interactive per-word mode).
+    pub depth: usize,
+    /// Replies received and verified across all connections.
+    pub words: u64,
+    /// Client-side I/O failures (connect/read/write).
+    pub errors: u64,
+    /// Replies whose echoed word did not match the word sent at that
+    /// position — any non-zero value means the protocol reordered.
+    pub reorders: u64,
+    pub elapsed: Duration,
+    /// Client-observed round-trip latency percentiles, µs (per burst:
+    /// write `depth` lines → read `depth` replies).
+    pub rtt_p50_us: u64,
+    pub rtt_p90_us: u64,
+    pub rtt_p99_us: u64,
+}
+
+impl LoadOutcome {
+    /// Aggregate throughput in words per second.
+    pub fn wps(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.words as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for LoadOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "conns={} depth={} words={} -> {:.0} words/s  rtt p50={}us p90={}us p99={}us  \
+             errors={} reorders={}",
+            self.conns,
+            self.depth,
+            self.words,
+            self.wps(),
+            self.rtt_p50_us,
+            self.rtt_p90_us,
+            self.rtt_p99_us,
+            self.errors,
+            self.reorders
+        )
+    }
+}
+
+/// Drive the line-protocol server at `addr` from `conns` client threads
+/// for `duration`. Each thread loops: write `depth` words (one per line),
+/// read `depth` replies, verify each reply echoes the word sent at that
+/// position (order check), record the burst round-trip latency. `depth`
+/// of 1 reproduces the interactive per-word protocol; larger depths
+/// exercise the pipelined mode.
+pub fn run_tcp_load(
+    addr: SocketAddr,
+    conns: usize,
+    duration: Duration,
+    depth: usize,
+    words: &[String],
+) -> LoadOutcome {
+    assert!(!words.is_empty(), "need a word list");
+    // Cap the burst so write-whole-burst-then-read can never fill both
+    // sockets' buffers at once (client blocked writing while the server
+    // blocks writing replies = mutual deadlock). 512 words ≈ 10 KB out /
+    // ~25 KB of replies, comfortably inside default loopback buffers.
+    let depth = depth.clamp(1, 512);
+    let hist = Arc::new(LatencyHistogram::new());
+    let total_words = Arc::new(AtomicU64::new(0));
+    let total_errors = Arc::new(AtomicU64::new(0));
+    let total_reorders = Arc::new(AtomicU64::new(0));
+    let started = Instant::now();
+    let deadline = started + duration;
+    // One shared copy of the word list for the whole fleet.
+    let words: Arc<[String]> = words.to_vec().into();
+    let threads: Vec<_> = (0..conns)
+        .map(|id| {
+            let words = words.clone();
+            let hist = hist.clone();
+            let total_words = total_words.clone();
+            let total_errors = total_errors.clone();
+            let total_reorders = total_reorders.clone();
+            std::thread::spawn(move || {
+                let run = || -> std::io::Result<()> {
+                    let conn = TcpStream::connect(addr)?;
+                    conn.set_nodelay(true)?;
+                    // Backstop: a wedged server must not hang the harness.
+                    conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+                    let mut writer = conn.try_clone()?;
+                    let mut reader = BufReader::new(conn);
+                    // Decorrelate the per-connection word streams.
+                    let mut next = (id * 37) % words.len();
+                    let mut burst = String::new();
+                    let mut sent: Vec<usize> = Vec::with_capacity(depth);
+                    let mut line = String::new();
+                    while Instant::now() < deadline {
+                        burst.clear();
+                        sent.clear();
+                        for _ in 0..depth {
+                            burst.push_str(&words[next]);
+                            burst.push('\n');
+                            sent.push(next);
+                            next = (next + 1) % words.len();
+                        }
+                        let t0 = Instant::now();
+                        writer.write_all(burst.as_bytes())?;
+                        for &wi in &sent {
+                            line.clear();
+                            if reader.read_line(&mut line)? == 0 {
+                                return Err(std::io::Error::new(
+                                    std::io::ErrorKind::UnexpectedEof,
+                                    "server closed mid-burst",
+                                ));
+                            }
+                            let echoed = line.split('\t').next().unwrap_or("");
+                            if echoed != words[wi] {
+                                total_reorders.fetch_add(1, Ordering::Relaxed);
+                            }
+                            total_words.fetch_add(1, Ordering::Relaxed);
+                        }
+                        hist.record(t0.elapsed());
+                    }
+                    let _ = writer.write_all(b"\n"); // polite close
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    eprintln!("loadtest client {id}: {e}");
+                    total_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        let _ = t.join();
+    }
+    let elapsed = started.elapsed();
+    LoadOutcome {
+        conns,
+        depth,
+        words: total_words.load(Ordering::Relaxed),
+        errors: total_errors.load(Ordering::Relaxed),
+        reorders: total_reorders.load(Ordering::Relaxed),
+        elapsed,
+        rtt_p50_us: hist.percentile_us(0.50),
+        rtt_p90_us: hist.percentile_us(0.90),
+        rtt_p99_us: hist.percentile_us(0.99),
+    }
 }
 
 #[cfg(test)]

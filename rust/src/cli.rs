@@ -32,6 +32,11 @@ const VALUE_FLAGS: &[&str] = &[
     "--corpus",
     "--repeat",
     "--pr",
+    "--conns",
+    "--secs",
+    "--depth",
+    "--mode",
+    "--handlers",
 ];
 
 impl Args {
@@ -105,6 +110,13 @@ SUBCOMMANDS:
                           [--figure throughput|sweep]
     serve                 TCP line-protocol stemming service
                           [--port P] [--backend …] [--workers N] [--batch B]
+                          [--handlers H]  (fixed connection-handler pool;
+                          clients may pipeline many lines per write)
+    loadtest              drive the real TCP server from M client threads and
+                          report p50/p90/p99 + words/sec from the histogram
+                          metrics [--conns N] [--secs S] [--depth D]
+                          [--mode pipelined|per-word|both] [--backend …]
+                          [--workers N] [--batch B] [--out BENCH_PR2.json]
     selftest              cross-validate software / HW-sim / PJRT backends
     bench json            benchmark the software + hw-sim backends and write
                           a machine-readable report [--out BENCH_PR1.json]

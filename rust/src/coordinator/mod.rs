@@ -2,24 +2,43 @@
 //! serving organization around the stemmer backends.
 //!
 //! The paper's pipelined processor overlaps five datapath stages so a new
-//! word enters every clock. The serving analog: requests stream into a
-//! bounded queue (backpressure), a batcher groups whatever is waiting (up
-//! to `max_batch`, with a `max_wait` deadline — the classic dynamic
-//! batching policy), and worker threads run the batch on a pluggable
-//! [`StemBackend`]: the pure-rust software stemmer, either FPGA-simulator
-//! processor, or the PJRT engine executing the AOT JAX artifact.
+//! word enters every clock; its headline 5571× speedup comes from the
+//! *organization around* the datapath as much as the datapath itself. The
+//! serving analog keeps every stage busy with zero per-word allocation:
+//!
+//! * **Intake** — requests stream into a bounded [`BoundedQueue`]
+//!   (backpressure: producers stall when the queue fills, exactly like the
+//!   paper's pipeline stalling its front end).
+//! * **Batching** — a dynamic batcher groups whatever is waiting (up to
+//!   `max_batch`, with a `max_wait` deadline) and hands it to a worker
+//!   running a pluggable [`StemBackend`]: the pure-rust software stemmer,
+//!   either FPGA-simulator processor, or the PJRT engine executing the
+//!   AOT JAX artifact.
+//! * **Reply routing** — instead of one `mpsc::channel()` allocation per
+//!   word (PR 1's hot-path residue), every request carries a `ticket`
+//!   into a shared [`exec::ReplySlab`]: a fixed-capacity, index-addressed
+//!   slab of reusable reply slots with park/unpark wakeups. Workers
+//!   `fill(ticket, result)`; submitters `wait(ticket)`. The steady-state
+//!   submit → stem → reply cycle allocates nothing.
+//!
+//! [`Handle::stem_bulk`] / [`Handle::stem_stream`] share a *windowed*
+//! submit/collect core: up to half the slab may be in flight per call, and
+//! when the slab runs dry the submitter reaps its own oldest reply before
+//! acquiring more — so arbitrarily large streams pipeline through the
+//! fixed slab without deadlock, preserving submission order throughout.
 //!
 //! Backends are constructed *on* their worker thread via a factory, which
 //! is what lets the `Rc`-based PJRT engine participate without being
 //! `Send`.
 
 use crate::chars::ArabicWord;
-use crate::exec::{BoundedQueue, QueueError, WorkerPool};
+use crate::exec::{BoundedQueue, QueueError, ReplySlab, WorkerPool};
 use crate::metrics::ServiceMetrics;
 use crate::stemmer::StemResult;
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// A batch-oriented root-extraction backend.
@@ -31,20 +50,12 @@ pub trait StemBackend {
 /// Constructs a backend on the worker thread (worker id passed in).
 pub type BackendFactory = Box<dyn Fn(usize) -> Result<Box<dyn StemBackend>> + Send + Sync>;
 
-/// Where a finished result goes.
-enum ReplyTo {
-    /// One dedicated channel per request (interactive path).
-    Single(mpsc::Sender<StemResult>),
-    /// Shared indexed channel (bulk path — one allocation per *stream*
-    /// instead of per word; the §Perf L3 fix, see EXPERIMENTS.md).
-    Bulk(mpsc::Sender<(u32, StemResult)>, u32),
-}
-
-/// One queued request.
+/// One queued request: the word plus the reply-slab ticket its result is
+/// routed to. Plain data, no heap, no per-request channel.
 struct Request {
     word: ArabicWord,
     submitted: Instant,
-    reply: ReplyTo,
+    ticket: u32,
 }
 
 /// Batching/queueing policy.
@@ -71,9 +82,19 @@ impl Default for CoordinatorConfig {
     }
 }
 
+impl CoordinatorConfig {
+    /// Reply-slab capacity: everything that can be in flight at once —
+    /// the full request queue plus one max-size batch per worker — with
+    /// headroom for submitters between `acquire` and `push`.
+    fn reply_slots(&self) -> usize {
+        self.queue_capacity + self.workers * self.max_batch + 64
+    }
+}
+
 /// The running coordinator.
 pub struct Coordinator {
     queue: Arc<BoundedQueue<Request>>,
+    slab: Arc<ReplySlab<StemResult>>,
     pool: Option<WorkerPool>,
     metrics: Arc<ServiceMetrics>,
 }
@@ -82,16 +103,30 @@ impl Coordinator {
     /// Start workers, each owning a backend built by `factory`.
     pub fn start(cfg: CoordinatorConfig, factory: BackendFactory) -> Self {
         let queue: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.queue_capacity);
+        let slab: Arc<ReplySlab<StemResult>> = ReplySlab::new(cfg.reply_slots());
         let metrics = Arc::new(ServiceMetrics::new());
         let q = queue.clone();
+        let s = slab.clone();
         let m = metrics.clone();
         let factory = Arc::new(factory);
+        let failed_inits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let pool = WorkerPool::spawn(cfg.workers, "stem-worker", move |id, _sd| {
             let mut backend = match factory(id) {
                 Ok(b) => b,
                 Err(e) => {
                     eprintln!("worker {id}: backend init failed: {e:#}");
                     m.errors.fetch_add(1, Ordering::Relaxed);
+                    // If EVERY worker failed init, nobody will ever pop the
+                    // queue — the last worker to fail runs a reject loop so
+                    // a live serve process degrades loudly (NONE replies)
+                    // instead of parking every client forever. With any
+                    // healthy sibling, just exit and let it serve 100%.
+                    if failed_inits.fetch_add(1, Ordering::SeqCst) + 1 == cfg.workers {
+                        while let Ok(req) = q.pop() {
+                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            s.fill(req.ticket, StemResult::NONE);
+                        }
+                    }
                     return;
                 }
             };
@@ -104,35 +139,58 @@ impl Coordinator {
                 };
                 words.clear();
                 words.extend(batch.iter().map(|r| r.word));
-                match backend.stem_batch(&words) {
-                    Ok(results) => {
+                // Every popped ticket MUST be filled, whatever the backend
+                // does — a panic or a short result vector would otherwise
+                // leave waiters parked forever (the old mpsc design woke
+                // them via dropped Senders; the slab has no such tripwire).
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    backend.stem_batch(&words)
+                }));
+                let results = match outcome {
+                    Ok(Ok(results)) if results.len() == words.len() => Some(results),
+                    Ok(Ok(results)) => {
+                        eprintln!(
+                            "worker {id}: backend returned {} results for {} words",
+                            results.len(),
+                            words.len()
+                        );
+                        None
+                    }
+                    Ok(Err(e)) => {
+                        eprintln!("worker {id}: batch failed: {e:#}");
+                        None
+                    }
+                    Err(_) => {
+                        eprintln!("worker {id}: backend panicked; failing the batch");
+                        None
+                    }
+                };
+                match results {
+                    Some(results) => {
                         m.record_batch(words.len() as u64);
                         for (req, res) in batch.into_iter().zip(results) {
                             m.record_latency(req.submitted.elapsed());
-                            match req.reply {
-                                ReplyTo::Single(tx) => drop(tx.send(res)),
-                                ReplyTo::Bulk(tx, idx) => drop(tx.send((idx, res))),
-                            }
+                            s.fill(req.ticket, res);
                         }
                     }
-                    Err(e) => {
-                        eprintln!("worker {id}: batch failed: {e:#}");
+                    None => {
                         m.errors.fetch_add(1, Ordering::Relaxed);
                         for req in batch {
-                            match req.reply {
-                                ReplyTo::Single(tx) => drop(tx.send(StemResult::NONE)),
-                                ReplyTo::Bulk(tx, idx) => drop(tx.send((idx, StemResult::NONE))),
-                            }
+                            s.fill(req.ticket, StemResult::NONE);
                         }
                     }
                 }
             }
         });
-        Coordinator { queue, pool: Some(pool), metrics }
+        Coordinator { queue, slab, pool: Some(pool), metrics }
     }
 
     pub fn handle(&self) -> Handle {
-        Handle { queue: self.queue.clone() }
+        Handle {
+            queue: self.queue.clone(),
+            slab: self.slab.clone(),
+            metrics: self.metrics.clone(),
+        }
     }
 
     pub fn metrics(&self) -> &ServiceMetrics {
@@ -141,19 +199,27 @@ impl Coordinator {
 
     /// Graceful shutdown: stop intake, drain, join workers.
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         self.queue.close();
         if let Some(pool) = self.pool.take() {
             pool.join();
+        }
+        // If a worker died before draining (e.g. backend init failure),
+        // requests may be stranded in the queue with waiters parked on
+        // their tickets. Fail them instead of leaving replies in flight.
+        while let Ok(req) = self.queue.pop_timeout(Duration::ZERO) {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            self.slab.fill(req.ticket, StemResult::NONE);
         }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.queue.close();
-        if let Some(pool) = self.pool.take() {
-            pool.join();
-        }
+        self.stop();
     }
 }
 
@@ -161,57 +227,86 @@ impl Drop for Coordinator {
 #[derive(Clone)]
 pub struct Handle {
     queue: Arc<BoundedQueue<Request>>,
+    slab: Arc<ReplySlab<StemResult>>,
+    metrics: Arc<ServiceMetrics>,
 }
 
-/// A pending reply.
+/// A pending reply: a live reply-slab ticket. Dropping it un-waited
+/// abandons the ticket (the slot recycles when the worker fills it).
 pub struct Pending {
-    rx: mpsc::Receiver<StemResult>,
+    slab: Arc<ReplySlab<StemResult>>,
+    ticket: u32,
+    done: bool,
 }
 
 impl Pending {
-    pub fn wait(self) -> Result<StemResult> {
-        Ok(self.rx.recv()?)
+    pub fn wait(mut self) -> Result<StemResult> {
+        self.done = true;
+        Ok(self.slab.wait(self.ticket))
     }
 
-    pub fn wait_timeout(self, d: Duration) -> Result<StemResult> {
-        Ok(self.rx.recv_timeout(d)?)
+    pub fn wait_timeout(mut self, d: Duration) -> Result<StemResult> {
+        self.done = true;
+        self.slab
+            .wait_timeout(self.ticket, d)
+            .map_err(|e| anyhow!("reply timed out: {e:?}"))
     }
 }
 
+impl Drop for Pending {
+    fn drop(&mut self) {
+        if !self.done {
+            self.slab.abandon(self.ticket);
+        }
+    }
+}
+
+/// How long a failed bulk submission waits for already-accepted replies
+/// before abandoning them (shutdown races resolve in microseconds; this
+/// is a hang backstop, not a latency target).
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
 impl Handle {
-    /// Submit one word; blocks only if the queue is full (backpressure).
-    pub fn submit(&self, word: ArabicWord) -> Result<Pending> {
-        let (tx, rx) = mpsc::channel();
-        self.queue
-            .push(Request { word, submitted: Instant::now(), reply: ReplyTo::Single(tx) })
-            .map_err(|e| anyhow::anyhow!("coordinator closed: {e:?}"))?;
-        Ok(Pending { rx })
+    /// Acquire a reply ticket, counting slab exhaustion as saturation.
+    fn acquire_ticket(&self) -> u32 {
+        match self.slab.try_acquire() {
+            Some(t) => t,
+            None => {
+                self.metrics.slab_waits.fetch_add(1, Ordering::Relaxed);
+                self.slab.acquire()
+            }
+        }
     }
 
-    /// Bulk submission: one shared reply channel for the whole slice
-    /// (order restored by index). ~3× less allocation/synchronization than
-    /// per-word [`Handle::submit`] on large streams.
-    pub fn stem_bulk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-        let (tx, rx) = mpsc::channel();
-        let now = Instant::now();
-        for (i, &word) in words.iter().enumerate() {
-            self.queue
-                .push(Request {
-                    word,
-                    submitted: now,
-                    reply: ReplyTo::Bulk(tx.clone(), i as u32),
-                })
-                .map_err(|e| anyhow::anyhow!("coordinator closed: {e:?}"))?;
+    /// Enqueue a request, counting a full queue as saturation.
+    fn enqueue(&self, word: ArabicWord, submitted: Instant, ticket: u32) -> Result<(), QueueError> {
+        match self.queue.try_push(Request { word, submitted, ticket }) {
+            Ok(()) => Ok(()),
+            Err((req, QueueError::WouldBlock)) => {
+                self.metrics.queue_full_events.fetch_add(1, Ordering::Relaxed);
+                self.queue.push(req)
+            }
+            Err((_, e)) => Err(e),
         }
-        drop(tx);
-        let mut out = vec![StemResult::NONE; words.len()];
-        let mut got = 0usize;
-        while got < words.len() {
-            let (idx, res) = rx.recv()?;
-            out[idx as usize] = res;
-            got += 1;
+    }
+
+    /// Service metrics shared with the coordinator that issued this handle.
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// Submit one word; blocks only if the queue or reply slab is full
+    /// (backpressure). Allocation-free on the steady-state path.
+    pub fn submit(&self, word: ArabicWord) -> Result<Pending> {
+        let ticket = self.acquire_ticket();
+        match self.enqueue(word, Instant::now(), ticket) {
+            Ok(()) => Ok(Pending { slab: self.slab.clone(), ticket, done: false }),
+            Err(e) => {
+                // The request never reached a worker; recycle directly.
+                self.slab.release_unused(ticket);
+                Err(anyhow!("coordinator closed: {e:?}"))
+            }
         }
-        Ok(out)
     }
 
     /// Synchronous single-word convenience.
@@ -219,15 +314,75 @@ impl Handle {
         self.submit(word)?.wait()
     }
 
+    /// Bulk submission through the windowed core: submissions overlap
+    /// execution and replies route through reusable slab slots — zero
+    /// allocation per word, order preserved.
+    pub fn stem_bulk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        self.stem_windowed(words)
+    }
+
     /// Pipeline a whole slice through the coordinator, preserving order.
-    /// Submissions overlap execution — the serving analog of the paper's
-    /// pipelined processor keeping every stage busy.
+    /// Same windowed core as [`Handle::stem_bulk`] — the serving analog of
+    /// the paper's pipelined processor keeping every stage busy.
     pub fn stem_stream(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-        let mut pending = Vec::with_capacity(words.len());
-        for &w in words {
-            pending.push(self.submit(w)?);
+        self.stem_windowed(words)
+    }
+
+    /// Windowed submit/collect: keep up to `window` tickets in flight;
+    /// when the slab runs dry, reap our own oldest reply (guaranteed to be
+    /// filled eventually, since it was accepted by the queue) instead of
+    /// deadlocking on capacity we ourselves are holding.
+    fn stem_windowed(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        let window = (self.slab.capacity() / 2).max(1);
+        let submitted = Instant::now();
+        let mut out: Vec<StemResult> = Vec::with_capacity(words.len());
+        let mut inflight: VecDeque<u32> = VecDeque::with_capacity(window.min(words.len()));
+        for &word in words {
+            if inflight.len() >= window {
+                let t = inflight.pop_front().expect("window non-empty");
+                out.push(self.slab.wait(t));
+            }
+            let ticket = loop {
+                if let Some(t) = self.slab.try_acquire() {
+                    break t;
+                }
+                match inflight.pop_front() {
+                    // Slab exhausted but we hold in-flight tickets: reap
+                    // the oldest to free a slot.
+                    Some(t) => out.push(self.slab.wait(t)),
+                    // Nothing of ours in flight: block on other clients.
+                    None => {
+                        self.metrics.slab_waits.fetch_add(1, Ordering::Relaxed);
+                        break self.slab.acquire();
+                    }
+                }
+            };
+            if let Err(e) = self.enqueue(word, submitted, ticket) {
+                self.slab.release_unused(ticket);
+                // Partial-submit fix: the queue closed mid-stream. Drain
+                // every already-accepted reply (workers drain the queue
+                // even after close) so nothing is left in flight, then
+                // report how far we got.
+                let accepted = out.len() + inflight.len();
+                for t in inflight.drain(..) {
+                    if let Ok(r) = self.slab.wait_timeout(t, DRAIN_GRACE) {
+                        out.push(r);
+                    }
+                }
+                bail!(
+                    "coordinator closed mid-stream ({e:?}): {}/{} words accepted, \
+                     {} replies drained",
+                    accepted,
+                    words.len(),
+                    out.len()
+                );
+            }
+            inflight.push_back(ticket);
         }
-        pending.into_iter().map(|p| p.wait()).collect()
+        for t in inflight.drain(..) {
+            out.push(self.slab.wait(t));
+        }
+        Ok(out)
     }
 }
 
@@ -385,12 +540,75 @@ mod tests {
         c.shutdown();
     }
 
+    /// Streams far larger than the reply slab pipeline through the
+    /// windowed core without deadlock, preserving order.
+    #[test]
+    fn stream_larger_than_reply_slab() {
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            max_batch: 16,
+            queue_capacity: 32, // slab = 32 + 2*16 + 64 = 128 slots
+            ..Default::default()
+        };
+        let slab_cap = cfg.reply_slots();
+        let c = Coordinator::start(cfg, sw_factory());
+        let h = c.handle();
+        let vocab = ["يدرس", "قال", "ظظظ", "فتزحزحت", "سيلعبون"];
+        let n = slab_cap * 8; // far past slab capacity
+        let words: Vec<_> =
+            vocab.iter().cycle().take(n).map(|s| ArabicWord::encode(s)).collect();
+        let res = h.stem_bulk(&words).unwrap();
+        assert_eq!(res.len(), n);
+        // order check: every word's reply matches a direct stem
+        let stemmer = Stemmer::with_defaults(Arc::new(RootSet::builtin_mini()));
+        let expected = stemmer.stem_batch(&words);
+        assert_eq!(res, expected);
+        c.shutdown();
+    }
+
     #[test]
     fn submit_after_shutdown_errors() {
         let c = Coordinator::start(CoordinatorConfig::default(), sw_factory());
         let h = c.handle();
         c.shutdown();
         assert!(h.submit(ArabicWord::encode("درس")).is_err());
+    }
+
+    /// Partial-submit fix: a bulk call against a closed coordinator fails
+    /// fast with a clean error — no hang, no stranded replies.
+    #[test]
+    fn bulk_after_shutdown_errors_without_hanging() {
+        let c = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let h = c.handle();
+        c.shutdown();
+        let words: Vec<_> = (0..64).map(|_| ArabicWord::encode("يدرس")).collect();
+        let err = h.stem_bulk(&words).unwrap_err();
+        assert!(format!("{err:#}").contains("closed"), "{err:#}");
+        // The slab is fully recycled: a fresh coordinator-sized burst of
+        // tickets is still acquirable.
+        let pending_err = h.submit(ArabicWord::encode("قال"));
+        assert!(pending_err.is_err());
+    }
+
+    /// Dropping a Pending un-waited abandons its ticket; the slot recycles
+    /// once the worker fills it, so capacity is never leaked.
+    #[test]
+    fn dropped_pending_recycles_ticket() {
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 1, max_batch: 8, ..Default::default() },
+            sw_factory(),
+        );
+        let h = c.handle();
+        for _ in 0..10_000 {
+            let p = h.submit(ArabicWord::encode("يدرس")).unwrap();
+            drop(p); // abandon every reply
+        }
+        // If abandoned tickets leaked, the slab (~4096+ slots) would be
+        // exhausted by now and this stream would deadlock.
+        let words: Vec<_> = (0..128).map(|_| ArabicWord::encode("قال")).collect();
+        let res = h.stem_stream(&words).unwrap();
+        assert_eq!(res.len(), 128);
+        c.shutdown();
     }
 
     #[test]
@@ -412,6 +630,47 @@ mod tests {
         let r = h.stem(ArabicWord::encode("درس")).unwrap();
         assert_eq!(r, StemResult::NONE); // degraded reply, not a hang
         assert!(c.metrics().snapshot().errors >= 1);
+        c.shutdown();
+    }
+
+    /// A panicking backend degrades to NONE replies instead of stranding
+    /// parked waiters (slab tickets must always be filled).
+    #[test]
+    fn panicking_backend_degrades_instead_of_hanging() {
+        struct Panicking;
+        impl StemBackend for Panicking {
+            fn name(&self) -> &'static str {
+                "panicking"
+            }
+            fn stem_batch(&mut self, _w: &[ArabicWord]) -> Result<Vec<StemResult>> {
+                panic!("injected panic")
+            }
+        }
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 1, ..Default::default() },
+            Box::new(|_| Ok(Box::new(Panicking))),
+        );
+        let h = c.handle();
+        let r = h.stem(ArabicWord::encode("درس")).unwrap();
+        assert_eq!(r, StemResult::NONE); // degraded reply, not a hang
+        assert!(c.metrics().snapshot().errors >= 1);
+        c.shutdown();
+    }
+
+    /// Backend init failure: the dead worker's reject loop fails requests
+    /// with NONE immediately — a live serve process degrades loudly
+    /// instead of parking every client forever.
+    #[test]
+    fn init_failure_rejects_requests_instead_of_hanging() {
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 1, ..Default::default() },
+            Box::new(|_| anyhow::bail!("no backend for you")),
+        );
+        let h = c.handle();
+        // Resolves without any shutdown: the reject loop answers it.
+        let r = h.stem(ArabicWord::encode("درس")).unwrap();
+        assert_eq!(r, StemResult::NONE);
+        assert!(c.metrics().snapshot().errors >= 2); // init + rejected request
         c.shutdown();
     }
 

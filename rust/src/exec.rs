@@ -1,14 +1,18 @@
-//! Concurrency substrate: bounded MPMC channel + thread pool.
+//! Concurrency substrate: bounded MPMC channel, reply slab, thread pool.
 //!
 //! The offline image ships no tokio/crossbeam-channel, so the coordinator's
 //! building blocks are implemented here on std primitives: a Mutex+Condvar
 //! bounded queue with blocking and non-blocking endpoints (backpressure is
 //! a first-class concern — paper-style pipelines stall their producers when
-//! a stage falls behind), and a small worker pool.
+//! a stage falls behind), a lock-free [`ReplySlab`] that routes replies
+//! back to submitters without a per-request channel allocation, and a small
+//! worker pool.
 
+use std::cell::UnsafeCell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::thread::Thread;
 use std::time::{Duration, Instant};
 
 /// Why a queue operation did not complete.
@@ -168,6 +172,312 @@ impl<T> BoundedQueue<T> {
 
     pub fn is_closed(&self) -> bool {
         self.inner.lock().unwrap().closed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reply slab
+// ---------------------------------------------------------------------------
+
+/// Freelist terminator for [`ReplySlab`].
+const NIL: u32 = u32::MAX;
+
+/// Slot is on the freelist.
+const SLOT_FREE: u8 = 0;
+/// Slot is acquired; a reply may arrive at any time.
+const SLOT_ARMED: u8 = 1;
+/// Reply value written; the waiter owns the slot contents.
+const SLOT_FILLED: u8 = 2;
+/// Waiter renounced the slot before the reply landed; the filler recycles.
+const SLOT_ABANDONED: u8 = 3;
+
+struct ReplySlot<T> {
+    /// `SLOT_*` state machine. All transitions use `SeqCst`: the
+    /// waiter-registration handshake below is a store/load (Dekker-style)
+    /// protocol that needs a single total order.
+    state: AtomicU8,
+    /// Next free slot index while this slot sits on the freelist.
+    next: AtomicU32,
+    /// The reply value. Never aliased: written only by the filler while
+    /// ARMED, taken only by the waiter after observing FILLED, or taken
+    /// back by the filler after its fill raced an ABANDONED waiter.
+    value: UnsafeCell<Option<T>>,
+    /// Thread to unpark when the value lands (registered by the waiter).
+    waiter: Mutex<Option<Thread>>,
+    /// Set by the filler as its *last* touch of the slot after an
+    /// ARMED→FILLED fill. The consumer spins on it before freeing, so a
+    /// fast waiter can never recycle the slot while the filler is still
+    /// between its state swap and its unpark (which would let the filler
+    /// steal the next owner's waiter registration).
+    fill_done: AtomicBool,
+}
+
+// SAFETY: the `state` protocol above guarantees exclusive access to
+// `value` at every point (see the field comment); everything else is
+// atomics or a Mutex.
+unsafe impl<T: Send> Sync for ReplySlot<T> {}
+
+/// A fixed-capacity, index-addressed pool of single-use reply slots — the
+/// serving path's answer to "one `mpsc::channel()` allocation per word".
+///
+/// A submitter [`acquire`](ReplySlab::acquire)s a ticket (a slot index),
+/// threads it through the work queue, and [`wait`](ReplySlab::wait)s on
+/// it; the worker [`fill`](ReplySlab::fill)s the ticket with the result.
+/// Slots are recycled through a tagged Treiber-stack freelist, so the
+/// steady-state acquire/fill/wait/release cycle allocates nothing and
+/// takes no locks (the per-slot `waiter` mutex is touched only when a
+/// waiter actually parks, and the slab-exhausted slow path is the only
+/// place a Condvar appears).
+///
+/// Wakeups are `thread::park`/`unpark`: the waiter registers its handle,
+/// re-checks the slot state (unpark tokens make the store/check/park
+/// sequence race-free), and parks; the filler stores the value, flips the
+/// state, and unparks. A waiter that gives up ([`wait_timeout`]
+/// (ReplySlab::wait_timeout) expiring, or a dropped `Pending`) marks the
+/// slot ABANDONED and the eventual fill recycles it, so timed-out tickets
+/// never leak capacity.
+pub struct ReplySlab<T> {
+    slots: Box<[ReplySlot<T>]>,
+    /// Treiber freelist head: `(aba_tag << 32) | slot_index`.
+    free_head: AtomicU64,
+    /// Producers parked on an exhausted slab (slow path only).
+    starving: AtomicUsize,
+    gate: Mutex<()>,
+    gate_cv: Condvar,
+}
+
+impl<T> ReplySlab<T> {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        assert!(capacity > 0, "capacity must be positive");
+        assert!(capacity < NIL as usize, "capacity must fit in u32");
+        let slots: Box<[ReplySlot<T>]> = (0..capacity)
+            .map(|i| ReplySlot {
+                state: AtomicU8::new(SLOT_FREE),
+                next: AtomicU32::new(if i + 1 < capacity { (i + 1) as u32 } else { NIL }),
+                value: UnsafeCell::new(None),
+                waiter: Mutex::new(None),
+                fill_done: AtomicBool::new(false),
+            })
+            .collect();
+        Arc::new(ReplySlab {
+            slots,
+            free_head: AtomicU64::new(0), // tag 0, index 0
+            starving: AtomicUsize::new(0),
+            gate: Mutex::new(()),
+            gate_cv: Condvar::new(),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn pop_free(&self) -> Option<u32> {
+        let mut head = self.free_head.load(Ordering::SeqCst);
+        loop {
+            let idx = (head & u64::from(NIL)) as u32;
+            if idx == NIL {
+                return None;
+            }
+            // A stale `next` read is harmless: the tag CAS below fails if
+            // the head moved underneath us.
+            let next = self.slots[idx as usize].next.load(Ordering::SeqCst);
+            let tag = (head >> 32).wrapping_add(1);
+            let new = (tag << 32) | u64::from(next);
+            match self
+                .free_head
+                .compare_exchange_weak(head, new, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => return Some(idx),
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    fn push_free(&self, idx: u32) {
+        let slot = &self.slots[idx as usize];
+        debug_assert!(unsafe { (*slot.value.get()).is_none() }, "freed slot still holds a value");
+        slot.state.store(SLOT_FREE, Ordering::SeqCst);
+        let mut head = self.free_head.load(Ordering::SeqCst);
+        loop {
+            slot.next.store((head & u64::from(NIL)) as u32, Ordering::SeqCst);
+            let tag = (head >> 32).wrapping_add(1);
+            let new = (tag << 32) | u64::from(idx);
+            match self
+                .free_head
+                .compare_exchange_weak(head, new, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => break,
+                Err(h) => head = h,
+            }
+        }
+        // Wake producers parked on exhaustion. The SeqCst push above and
+        // the SeqCst increment in `acquire` guarantee: either we observe
+        // `starving > 0` here (and notify under the gate), or the starving
+        // producer's retry-pop observes the slot we just pushed.
+        if self.starving.load(Ordering::SeqCst) > 0 {
+            let _g = self.gate.lock().unwrap();
+            self.gate_cv.notify_all();
+        }
+    }
+
+    fn arm(&self, idx: u32) {
+        let slot = &self.slots[idx as usize];
+        debug_assert_eq!(slot.state.load(Ordering::SeqCst), SLOT_FREE);
+        slot.state.store(SLOT_ARMED, Ordering::SeqCst);
+    }
+
+    /// Acquire a ticket without blocking; `None` when the slab is full.
+    pub fn try_acquire(&self) -> Option<u32> {
+        let idx = self.pop_free()?;
+        self.arm(idx);
+        Some(idx)
+    }
+
+    /// Acquire a ticket, parking on the slow path while the slab is
+    /// exhausted (backpressure, exactly like a full [`BoundedQueue`]).
+    pub fn acquire(&self) -> u32 {
+        if let Some(idx) = self.pop_free() {
+            self.arm(idx);
+            return idx;
+        }
+        let mut g = self.gate.lock().unwrap();
+        self.starving.fetch_add(1, Ordering::SeqCst);
+        let idx = loop {
+            if let Some(idx) = self.pop_free() {
+                break idx;
+            }
+            g = self.gate_cv.wait(g).unwrap();
+        };
+        self.starving.fetch_sub(1, Ordering::SeqCst);
+        drop(g);
+        self.arm(idx);
+        idx
+    }
+
+    /// Return a ticket that was never exposed to any filler (e.g. the work
+    /// queue rejected the request). Must not be called once the ticket has
+    /// been handed to a worker — use [`abandon`](ReplySlab::abandon) then.
+    pub fn release_unused(&self, ticket: u32) {
+        let prev = self.slots[ticket as usize].state.swap(SLOT_ARMED, Ordering::SeqCst);
+        debug_assert_eq!(prev, SLOT_ARMED, "release_unused on a live ticket");
+        self.push_free(ticket);
+    }
+
+    /// Deliver the reply for `ticket`. Never blocks; called exactly once
+    /// per acquired-and-submitted ticket (by the worker that owns it).
+    pub fn fill(&self, ticket: u32, value: T) {
+        let slot = &self.slots[ticket as usize];
+        // SAFETY: state is ARMED or ABANDONED here; in both, the filler
+        // has exclusive access to `value` (the waiter touches it only
+        // after observing FILLED).
+        unsafe {
+            *slot.value.get() = Some(value);
+        }
+        match slot.state.swap(SLOT_FILLED, Ordering::SeqCst) {
+            SLOT_ARMED => {
+                let waiter = slot.waiter.lock().unwrap().take();
+                if let Some(t) = waiter {
+                    t.unpark();
+                }
+                // Last touch: hands the slot over to the consumer side.
+                slot.fill_done.store(true, Ordering::SeqCst);
+            }
+            SLOT_ABANDONED => {
+                // The waiter gave up; nobody will collect — recycle.
+                // SAFETY: abandoned waiters never touch `value`.
+                unsafe {
+                    (*slot.value.get()).take();
+                }
+                self.push_free(ticket);
+            }
+            s => unreachable!("fill on slot in state {s}"),
+        }
+    }
+
+    /// Consume a slot observed FILLED: wait out the filler's final touch
+    /// (`fill_done`, a few instructions at most), take the value, and
+    /// recycle the slot.
+    fn consume_filled(&self, ticket: u32) -> T {
+        let slot = &self.slots[ticket as usize];
+        // The window is a few instructions, but the filler may be
+        // descheduled inside it — fall back to yielding instead of
+        // burning its whole timeslice on spin_loop.
+        let mut spins = 0u32;
+        while !slot.fill_done.load(Ordering::SeqCst) {
+            spins += 1;
+            if spins < 128 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        slot.fill_done.store(false, Ordering::SeqCst);
+        // SAFETY: we observed FILLED and the filler signalled done, so the
+        // write happened-before and nobody else touches the cell.
+        let v = unsafe { (*slot.value.get()).take() }.expect("FILLED slot holds a value");
+        slot.waiter.lock().unwrap().take(); // drop any stale registration
+        self.push_free(ticket);
+        v
+    }
+
+    /// Block until the reply for `ticket` arrives, consuming the ticket.
+    pub fn wait(&self, ticket: u32) -> T {
+        let slot = &self.slots[ticket as usize];
+        if slot.state.load(Ordering::SeqCst) != SLOT_FILLED {
+            *slot.waiter.lock().unwrap() = Some(std::thread::current());
+            while slot.state.load(Ordering::SeqCst) != SLOT_FILLED {
+                std::thread::park();
+            }
+        }
+        self.consume_filled(ticket)
+    }
+
+    /// [`wait`](ReplySlab::wait) with a deadline. On timeout the ticket is
+    /// abandoned: the slot is recycled when (if ever) the fill lands, and
+    /// the caller must not touch the ticket again.
+    pub fn wait_timeout(&self, ticket: u32, timeout: Duration) -> Result<T, QueueError> {
+        let slot = &self.slots[ticket as usize];
+        let deadline = Instant::now() + timeout;
+        if slot.state.load(Ordering::SeqCst) != SLOT_FILLED {
+            *slot.waiter.lock().unwrap() = Some(std::thread::current());
+            loop {
+                if slot.state.load(Ordering::SeqCst) == SLOT_FILLED {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    // Deregister BEFORE renouncing: once the swap lands,
+                    // a racing fill may recycle the slot and a new owner
+                    // may register its waiter — which we must not steal.
+                    slot.waiter.lock().unwrap().take();
+                    return match slot.state.swap(SLOT_ABANDONED, Ordering::SeqCst) {
+                        // The reply landed on the wire — take it anyway.
+                        SLOT_FILLED => Ok(self.consume_filled(ticket)),
+                        _ => Err(QueueError::Timeout),
+                    };
+                }
+                std::thread::park_timeout(deadline - now);
+            }
+        }
+        Ok(self.consume_filled(ticket))
+    }
+
+    /// Renounce a ticket whose reply is no longer wanted (dropped
+    /// `Pending`). The eventual fill recycles the slot.
+    pub fn abandon(&self, ticket: u32) {
+        let slot = &self.slots[ticket as usize];
+        // Deregister BEFORE renouncing (see wait_timeout): after the swap
+        // a racing fill may recycle the slot for a new owner.
+        slot.waiter.lock().unwrap().take();
+        match slot.state.swap(SLOT_ABANDONED, Ordering::SeqCst) {
+            // Reply already delivered: discard it and recycle ourselves.
+            SLOT_FILLED => {
+                let _ = self.consume_filled(ticket);
+            }
+            SLOT_ARMED => {} // filler recycles on arrival
+            s => unreachable!("abandon on slot in state {s}"),
+        }
     }
 }
 
@@ -370,6 +680,130 @@ mod tests {
             c.join().unwrap();
         }
         assert_eq!(count.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn reply_slab_roundtrip() {
+        let slab: Arc<ReplySlab<u32>> = ReplySlab::new(4);
+        let t = slab.try_acquire().unwrap();
+        slab.fill(t, 99);
+        assert_eq!(slab.wait(t), 99);
+        // slot recycled: four more acquires succeed
+        let ts: Vec<u32> = (0..4).map(|_| slab.try_acquire().unwrap()).collect();
+        assert!(slab.try_acquire().is_none(), "slab should be exhausted");
+        for (i, &t) in ts.iter().enumerate() {
+            slab.fill(t, i as u32);
+        }
+        for (i, &t) in ts.iter().enumerate() {
+            assert_eq!(slab.wait(t), i as u32);
+        }
+    }
+
+    #[test]
+    fn reply_slab_cross_thread_parked_wait() {
+        let slab: Arc<ReplySlab<usize>> = ReplySlab::new(2);
+        let t = slab.acquire();
+        let s2 = slab.clone();
+        let filler = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            s2.fill(t, 7);
+        });
+        assert_eq!(slab.wait(t), 7); // parks until the fill lands
+        filler.join().unwrap();
+    }
+
+    #[test]
+    fn reply_slab_wait_timeout_and_recycle() {
+        let slab: Arc<ReplySlab<u8>> = ReplySlab::new(1);
+        let t = slab.acquire();
+        assert_eq!(slab.wait_timeout(t, Duration::from_millis(20)), Err(QueueError::Timeout));
+        // The abandoned slot is returned to capacity by the late fill.
+        assert!(slab.try_acquire().is_none(), "abandoned slot free before fill");
+        slab.fill(t, 1);
+        let t2 = slab.try_acquire().expect("late fill must recycle the slot");
+        slab.fill(t2, 2);
+        assert_eq!(slab.wait(t2), 2);
+    }
+
+    #[test]
+    fn reply_slab_release_unused_returns_capacity() {
+        let slab: Arc<ReplySlab<u8>> = ReplySlab::new(1);
+        let t = slab.acquire();
+        slab.release_unused(t);
+        let t2 = slab.try_acquire().expect("released slot reusable");
+        slab.fill(t2, 3);
+        assert_eq!(slab.wait(t2), 3);
+    }
+
+    #[test]
+    fn reply_slab_abandon_after_fill_recycles() {
+        let slab: Arc<ReplySlab<u8>> = ReplySlab::new(1);
+        let t = slab.acquire();
+        slab.fill(t, 9);
+        slab.abandon(t); // value dropped, slot freed
+        assert!(slab.try_acquire().is_some());
+    }
+
+    #[test]
+    fn reply_slab_exhaustion_blocks_then_wakes() {
+        let slab: Arc<ReplySlab<u32>> = ReplySlab::new(1);
+        let t = slab.acquire();
+        let s2 = slab.clone();
+        let blocked = std::thread::spawn(move || {
+            let t2 = s2.acquire(); // parks: slab exhausted
+            s2.fill(t2, 5);
+            s2.wait(t2)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        slab.fill(t, 1);
+        assert_eq!(slab.wait(t), 1); // frees the slot → wakes `blocked`
+        assert_eq!(blocked.join().unwrap(), 5);
+    }
+
+    /// MPMC stress: many submitters round-trip values through a small slab
+    /// while a worker pool fills; every reply routes to its own submitter.
+    #[test]
+    fn reply_slab_stress() {
+        let slab: Arc<ReplySlab<u64>> = ReplySlab::new(8);
+        let work: Arc<BoundedQueue<(u32, u64)>> = BoundedQueue::new(8);
+        let fillers: Vec<_> = (0..2)
+            .map(|_| {
+                let slab = slab.clone();
+                let work = work.clone();
+                std::thread::spawn(move || {
+                    while let Ok((ticket, v)) = work.pop() {
+                        slab.fill(ticket, v * 3);
+                    }
+                })
+            })
+            .collect();
+        let submitters: Vec<_> = (0..4u64)
+            .map(|s| {
+                let slab = slab.clone();
+                let work = work.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        let v = s * 1000 + i;
+                        let ticket = slab.acquire();
+                        work.push((ticket, v)).unwrap();
+                        assert_eq!(slab.wait(ticket), v * 3, "cross-routed reply");
+                    }
+                })
+            })
+            .collect();
+        for t in submitters {
+            t.join().unwrap();
+        }
+        work.close();
+        for t in fillers {
+            t.join().unwrap();
+        }
+        // all capacity restored
+        let ts: Vec<_> = (0..8).map(|_| slab.try_acquire().unwrap()).collect();
+        assert!(slab.try_acquire().is_none());
+        for t in ts {
+            slab.release_unused(t);
+        }
     }
 
     #[test]

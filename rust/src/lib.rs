@@ -51,6 +51,32 @@
 //! fuses all five candidate streams into one pass over the six cut
 //! positions on top of this; `stem_reference` keeps the scalar original,
 //! and a 10k-word property test pins them bit-for-bit equal.
+//!
+//! ## Serving pipeline (PR 2)
+//!
+//! The paper's pipelined processor accepts a new word every clock because
+//! every stage between fetch and write-back stays busy. The serving path
+//! mirrors that organization end to end, so the branch-free kernel's
+//! throughput survives the trip through a socket:
+//!
+//! * **Socket stage** ([`server`]) — a fixed handler pool (not
+//!   thread-per-connection) serves the TCP line protocol; clients may
+//!   pipeline many lines per write and the handler folds every buffered
+//!   complete line into one `stem_bulk` call (connection-level batching).
+//!   One-line-at-a-time `nc` usage is unchanged.
+//! * **Batching stage** ([`coordinator`]) — a bounded queue plus dynamic
+//!   batcher groups requests across connections (up to `max_batch`,
+//!   `max_wait` deadline) for the pluggable backends.
+//! * **Reply routing** ([`exec::ReplySlab`]) — replies travel through a
+//!   lock-free slab of reusable, index-addressed reply slots
+//!   (park/unpark wakeups) instead of a per-request `mpsc` channel: the
+//!   steady-state submit → stem → reply cycle allocates nothing.
+//! * **Measurement** ([`metrics`]) — a log₂-bucketed
+//!   [`metrics::LatencyHistogram`] (p50/p90/p99) plus saturation
+//!   counters (queue-full, slab-exhausted) feed
+//!   `ServiceMetrics::snapshot`; `ama loadtest` drives the real TCP
+//!   server from a client fleet in per-word vs pipelined mode and writes
+//!   the `BENCH_PR*.json` trajectory rows.
 
 pub mod bench;
 pub mod chars;

@@ -42,6 +42,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "selftest" => cmd_selftest(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
@@ -331,10 +332,142 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let coord = Coordinator::start(cfg, factory);
     let port = args.flag_usize("--port", 7601).map_err(|e| anyhow!(e))?;
-    let server = ama::server::Server::bind(&format!("127.0.0.1:{port}"), coord.handle())?;
-    println!("ama serving on {}", server.local_addr()?);
+    let srv_cfg = ama::server::ServerConfig {
+        handlers: args.flag_usize("--handlers", 8).map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+    let server =
+        ama::server::Server::bind_with(&format!("127.0.0.1:{port}"), coord.handle(), srv_cfg)?;
+    println!("ama serving on {} ({} handlers)", server.local_addr()?, srv_cfg.handlers);
     server.serve_forever()?;
     coord.shutdown();
+    Ok(())
+}
+
+/// `ama loadtest`: stand up the full coordinator + TCP server in-process,
+/// drive it with a client fleet in per-word and/or pipelined mode, and
+/// report p50/p90/p99 + words/sec (optionally as a BENCH_PR*.json row).
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    let conns = args.flag_usize("--conns", 32).map_err(|e| anyhow!(e))?;
+    let secs = args.flag_u64("--secs", 5).map_err(|e| anyhow!(e))?;
+    let depth = args.flag_usize("--depth", 64).map_err(|e| anyhow!(e))?;
+    let mode = args.flag_or("--mode", "both");
+    let backend = args.flag_or("--backend", "software-par");
+    let workers = args.flag_usize("--workers", 1).map_err(|e| anyhow!(e))?;
+    let pr = args.flag_u64("--pr", 2).map_err(|e| anyhow!(e))?;
+    let roots = load_roots(args)?;
+    let n_words = args.flag_usize("--words", 4096).map_err(|e| anyhow!(e))?;
+    let corpus = corpus::generate(&roots, &CorpusConfig::small(n_words, 29));
+    let words: Vec<String> = corpus.tokens.iter().map(|t| t.word.to_string_ar()).collect();
+
+    let depths: Vec<(&str, usize)> = match mode {
+        "per-word" => vec![("per-word", 1)],
+        "pipelined" => vec![("pipelined", depth)],
+        "both" => vec![("per-word", 1), ("pipelined", depth)],
+        other => bail!("unknown mode {other:?} (per-word|pipelined|both)"),
+    };
+
+    let mut rows: Vec<(String, ama::bench::LoadOutcome, ama::metrics::MetricsSnapshot)> =
+        Vec::new();
+    for (mode_name, depth) in depths {
+        // Fresh stack per mode so metrics and batching state don't bleed.
+        let factory =
+            backend_factory(backend, roots.clone(), true, artifacts_dir(args), workers)?;
+        let cfg = CoordinatorConfig {
+            workers,
+            max_batch: args.flag_usize("--batch", 256).map_err(|e| anyhow!(e))?,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg, factory);
+        let srv_cfg = ama::server::ServerConfig {
+            // one handler per connection: the pool never gates the fleet
+            handlers: conns,
+            ..Default::default()
+        };
+        let server =
+            Arc::new(ama::server::Server::bind_with("127.0.0.1:0", coord.handle(), srv_cfg)?);
+        let addr = server.local_addr()?;
+        let srv = server.clone();
+        let serve_thread = std::thread::spawn(move || srv.serve_forever());
+
+        println!("loadtest[{mode_name}]: {conns} conns × {secs}s against {addr} ({backend})…");
+        let outcome =
+            ama::bench::run_tcp_load(addr, conns, Duration::from_secs(secs), depth, &words);
+        let snap = coord.metrics().snapshot();
+        println!("  client: {outcome}");
+        println!("  server: {snap}");
+
+        server.stop();
+        serve_thread.join().expect("serve thread")?;
+        coord.shutdown();
+        anyhow::ensure!(outcome.reorders == 0, "protocol reordered {} replies", outcome.reorders);
+        // A degraded fleet must not produce the headline speedup or the
+        // BENCH_PR*.json row as if the run were healthy.
+        anyhow::ensure!(
+            outcome.errors == 0 && snap.errors == 0,
+            "loadtest not clean: {} client I/O errors, {} server errors",
+            outcome.errors,
+            snap.errors
+        );
+        rows.push((mode_name.to_string(), outcome, snap));
+    }
+
+    if rows.len() == 2 {
+        let per_word = rows[0].1.wps();
+        let pipelined = rows[1].1.wps();
+        if per_word > 0.0 {
+            println!(
+                "\npipelined vs per-word: {:.2}x words/sec ({:.0} vs {:.0})",
+                pipelined / per_word,
+                pipelined,
+                per_word
+            );
+        }
+    }
+
+    if let Some(out_path) = args.flag("--out") {
+        let mut json = String::new();
+        json.push_str("{\n");
+        json.push_str("  \"schema\": \"ama-loadtest-v1\",\n");
+        json.push_str(&format!("  \"pr\": {pr},\n"));
+        json.push_str(&format!("  \"backend\": \"{backend}\",\n"));
+        json.push_str(&format!("  \"conns\": {conns},\n"));
+        json.push_str(&format!("  \"secs\": {secs},\n"));
+        json.push_str(&format!("  \"coordinator_workers\": {workers},\n"));
+        if rows.len() == 2 && rows[0].1.wps() > 0.0 {
+            json.push_str(&format!(
+                "  \"speedup_pipelined_vs_per_word\": {:.3},\n",
+                rows[1].1.wps() / rows[0].1.wps()
+            ));
+        }
+        json.push_str("  \"results\": [\n");
+        for (i, (name, o, snap)) in rows.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"name\": \"{name}\", \"depth\": {}, \"words\": {}, \"wps\": {:.1}, \
+                 \"rtt_p50_us\": {}, \"rtt_p90_us\": {}, \"rtt_p99_us\": {}, \
+                 \"server_p50_us\": {}, \"server_p90_us\": {}, \"server_p99_us\": {}, \
+                 \"mean_batch\": {:.2}, \"queue_full\": {}, \"slab_waits\": {}, \
+                 \"errors\": {}}}{}\n",
+                o.depth,
+                o.words,
+                o.wps(),
+                o.rtt_p50_us,
+                o.rtt_p90_us,
+                o.rtt_p99_us,
+                snap.p50_us,
+                snap.p90_us,
+                snap.p99_us,
+                snap.mean_batch_size,
+                snap.queue_full_events,
+                snap.slab_waits,
+                o.errors + snap.errors,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
+        println!("wrote {out_path}");
+    }
     Ok(())
 }
 

@@ -1,6 +1,13 @@
 //! Performance metric substrate — the paper's §6.2 metric set (ET, TH) for
 //! software plus latency histograms for the serving path. The hardware-only
 //! metrics (PD, LUT, LR, PC) live in [`crate::hw::area`].
+//!
+//! The serving-path metrics are built on [`LatencyHistogram`], a lock-free
+//! log₂-bucketed microsecond histogram: one atomic increment per sample,
+//! percentiles read from bucket upper bounds. [`ServiceMetrics`] bundles it
+//! with request/batch/saturation counters; the same histogram type is
+//! reused standalone by the `ama loadtest` client fleet for client-side
+//! round-trip latency.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -29,6 +36,69 @@ pub fn measure<F: FnOnce()>(words: u64, f: F) -> Measurement {
     Measurement { words, elapsed: start.elapsed() }
 }
 
+/// Number of log₂ microsecond buckets: bucket `i` counts samples in
+/// `[2^i, 2^(i+1))` µs, with the last bucket absorbing everything larger
+/// (≈ 2 s and up).
+pub const LATENCY_BUCKETS: usize = 21;
+
+/// Lock-free log₂-bucketed latency histogram (microsecond resolution).
+///
+/// Recording is one relaxed atomic increment; percentile reads return the
+/// upper bound of the bucket containing the requested quantile (i.e. a
+/// ≤2× overestimate, which is the right bias for tail-latency reporting).
+#[derive(Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros().max(1) as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let us = us.max(1);
+        let bucket = (63 - us.leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-bucket counts (index `i` covers `[2^i, 2^(i+1))` µs).
+    pub fn counts(&self) -> [u64; LATENCY_BUCKETS] {
+        let mut out = [0u64; LATENCY_BUCKETS];
+        for (o, b) in out.iter_mut().zip(&self.buckets) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+
+    /// Approximate latency percentile, in µs (upper bucket bound);
+    /// 0 when the histogram is empty.
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        let counts = self.counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << LATENCY_BUCKETS
+    }
+}
+
 /// Lock-free service counters shared across coordinator threads.
 #[derive(Default)]
 pub struct ServiceMetrics {
@@ -38,8 +108,14 @@ pub struct ServiceMetrics {
     pub errors: AtomicU64,
     /// Total words across batches, for mean batch-size accounting.
     pub batched_words: AtomicU64,
-    /// Histogram of request latency (log2 microsecond buckets 0..=20).
-    latency_buckets: [AtomicU64; 21],
+    /// Saturation counter: submissions that found the request queue full
+    /// and had to block (backpressure engaged).
+    pub queue_full_events: AtomicU64,
+    /// Saturation counter: submissions that found the reply slab exhausted
+    /// (every reply slot in flight) and had to wait for capacity.
+    pub slab_waits: AtomicU64,
+    /// Histogram of request latency (submit → reply fill).
+    latency: LatencyHistogram,
 }
 
 impl ServiceMetrics {
@@ -54,10 +130,14 @@ impl ServiceMetrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let bucket = (63 - us.leading_zeros() as usize).min(20);
-        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency.record(d);
         self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The request-latency histogram (shared shape with client-side
+    /// histograms in the load harness).
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.latency
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -71,21 +151,7 @@ impl ServiceMetrics {
     /// Approximate latency percentile from the log2 histogram, in µs
     /// (upper bucket bound).
     pub fn latency_percentile_us(&self, q: f64) -> u64 {
-        let counts: Vec<u64> =
-            self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (total as f64 * q).ceil() as u64;
-        let mut acc = 0;
-        for (i, c) in counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        1u64 << 21
+        self.latency.percentile_us(q)
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -94,9 +160,12 @@ impl ServiceMetrics {
             words: self.words.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            queue_full_events: self.queue_full_events.load(Ordering::Relaxed),
+            slab_waits: self.slab_waits.load(Ordering::Relaxed),
             mean_batch_size: self.mean_batch_size(),
-            p50_us: self.latency_percentile_us(0.50),
-            p99_us: self.latency_percentile_us(0.99),
+            p50_us: self.latency.percentile_us(0.50),
+            p90_us: self.latency.percentile_us(0.90),
+            p99_us: self.latency.percentile_us(0.99),
         }
     }
 }
@@ -107,8 +176,11 @@ pub struct MetricsSnapshot {
     pub words: u64,
     pub batches: u64,
     pub errors: u64,
+    pub queue_full_events: u64,
+    pub slab_waits: u64,
     pub mean_batch_size: f64,
     pub p50_us: u64,
+    pub p90_us: u64,
     pub p99_us: u64,
 }
 
@@ -116,13 +188,17 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "requests={} words={} batches={} mean_batch={:.1} p50={}us p99={}us errors={}",
+            "requests={} words={} batches={} mean_batch={:.1} p50={}us p90={}us p99={}us \
+             queue_full={} slab_waits={} errors={}",
             self.requests,
             self.words,
             self.batches,
             self.mean_batch_size,
             self.p50_us,
+            self.p90_us,
             self.p99_us,
+            self.queue_full_events,
+            self.slab_waits,
             self.errors
         )
     }
@@ -160,11 +236,38 @@ mod tests {
     }
 
     #[test]
+    fn standalone_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(0.5), 0); // empty
+        h.record_us(3);
+        h.record_us(3_000_000); // past the last bucket bound (2^21 µs)
+        assert_eq!(h.total(), 2);
+        assert!(h.percentile_us(0.5) <= 4);
+        assert!(h.percentile_us(1.0) >= 1 << 20);
+        // the last bucket absorbs out-of-range samples
+        h.record_us(u64::MAX);
+        assert_eq!(h.counts()[LATENCY_BUCKETS - 1], 2);
+    }
+
+    #[test]
     fn batch_accounting() {
         let s = ServiceMetrics::new();
         s.record_batch(10);
         s.record_batch(30);
         assert_eq!(s.mean_batch_size(), 20.0);
         assert_eq!(s.snapshot().words, 40);
+    }
+
+    #[test]
+    fn snapshot_saturation_counters_roundtrip() {
+        let s = ServiceMetrics::new();
+        s.queue_full_events.fetch_add(3, Ordering::Relaxed);
+        s.slab_waits.fetch_add(2, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.queue_full_events, 3);
+        assert_eq!(snap.slab_waits, 2);
+        let line = format!("{snap}");
+        assert!(line.contains("queue_full=3"), "{line}");
+        assert!(line.contains("slab_waits=2"), "{line}");
     }
 }

@@ -1,34 +1,123 @@
 //! TCP line-protocol stemming service on top of the coordinator.
 //!
-//! Protocol: one UTF-8 Arabic word per line in; one tab-separated reply
-//! line out: `word<TAB>root<TAB>kind<TAB>cut`. Empty line closes the
-//! connection. Designed for `nc`/scripts — and as the serving-path
-//! integration surface for tests.
+//! ## Protocol
+//!
+//! One UTF-8 Arabic word per line in; one tab-separated reply line out:
+//! `word<TAB>root<TAB>kind<TAB>cut`, replies in request order. An empty
+//! line closes the connection. Designed for `nc`/scripts — send a line,
+//! read a line — and that interactive mode is unchanged.
+//!
+//! **Pipelined mode** needs no negotiation: a client may write any number
+//! of lines before reading. The handler folds every complete line already
+//! buffered on the connection into a single [`Handle::stem_bulk`] call
+//! (up to [`ServerConfig::max_pipeline`] words) and writes all replies as
+//! one contiguous buffer. A one-line-at-a-time client therefore gets a
+//! batch of one, while a pipelining load generator gets connection-level
+//! batching for free — the socket-layer analog of the coordinator's
+//! dynamic batcher, and the outermost stage of the paper's pipeline
+//! organization (fetch many words per "clock" instead of one).
+//!
+//! ## Threading
+//!
+//! Accepted connections are pushed onto a bounded queue and served by a
+//! **fixed handler pool** ([`ServerConfig::handlers`] threads) instead of
+//! thread-per-connection: connection count no longer dictates thread
+//! count, and `serve_forever` joins every handler before returning.
+//! Handler reads poll at [`ServerConfig::poll`] so a stop request is
+//! observed promptly even on idle keep-alive connections. [`ConnStats`]
+//! tracks accepted / active / completed connections (active decrements on
+//! disconnect).
 
 use crate::chars::ArabicWord;
 use crate::coordinator::Handle;
+use crate::exec::{BoundedQueue, QueueError};
 use anyhow::Result;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Serving-path policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Fixed handler-pool size: how many connections are served
+    /// concurrently (additional accepted connections queue).
+    pub handlers: usize,
+    /// Maximum words folded into one `stem_bulk` call per read cycle.
+    pub max_pipeline: usize,
+    /// Read poll interval — bounds how long a stop request can go
+    /// unnoticed by a handler blocked on an idle connection.
+    pub poll: Duration,
+    /// Accepted connections waiting for a free handler (accept blocks
+    /// beyond this — backpressure at the socket layer).
+    pub accept_backlog: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            handlers: 8,
+            max_pipeline: 1024,
+            poll: Duration::from_millis(50),
+            accept_backlog: 64,
+        }
+    }
+}
+
+/// Connection accounting: `active` is incremented when a handler picks a
+/// connection up and decremented on disconnect, so `accepted` vs
+/// `completed` vs `active` always reconciles.
+#[derive(Default)]
+pub struct ConnStats {
+    pub accepted: AtomicU64,
+    pub active: AtomicU64,
+    pub completed: AtomicU64,
+}
+
+impl ConnStats {
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    pub fn active(&self) -> u64 {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::SeqCst)
+    }
+}
 
 pub struct Server {
     listener: TcpListener,
     handle: Handle,
+    cfg: ServerConfig,
     stop: Arc<AtomicBool>,
-    pub connections: Arc<AtomicU64>,
+    pub stats: Arc<ConnStats>,
 }
 
 impl Server {
-    /// Bind to `addr` (e.g. "127.0.0.1:7601"; port 0 picks a free port).
+    /// Bind to `addr` (e.g. "127.0.0.1:7601"; port 0 picks a free port)
+    /// with the default [`ServerConfig`].
     pub fn bind(addr: &str, handle: Handle) -> Result<Self> {
+        Self::bind_with(addr, handle, ServerConfig::default())
+    }
+
+    pub fn bind_with(addr: &str, handle: Handle, mut cfg: ServerConfig) -> Result<Self> {
+        // Clamp degenerate configs: zero read timeouts are rejected by
+        // std, and zero-capacity pools/queues cannot serve anything.
+        cfg.poll = cfg.poll.max(Duration::from_millis(1));
+        cfg.handlers = cfg.handlers.max(1);
+        cfg.max_pipeline = cfg.max_pipeline.max(1);
+        cfg.accept_backlog = cfg.accept_backlog.max(1);
         let listener = TcpListener::bind(addr)?;
         Ok(Server {
             listener,
             handle,
+            cfg,
             stop: Arc::new(AtomicBool::new(false)),
-            connections: Arc::new(AtomicU64::new(0)),
+            stats: Arc::new(ConnStats::default()),
         })
     }
 
@@ -41,51 +130,192 @@ impl Server {
         self.stop.clone()
     }
 
-    /// Accept loop; one thread per connection (connections are few and
-    /// long-lived in this protocol; the heavy lifting is batched behind
-    /// the coordinator anyway).
-    pub fn serve_forever(&self) -> Result<()> {
-        for stream in self.listener.incoming() {
-            if self.stop.load(Ordering::SeqCst) {
-                break;
-            }
-            let stream = stream?;
-            let handle = self.handle.clone();
-            let conns = self.connections.clone();
-            conns.fetch_add(1, Ordering::SeqCst);
-            std::thread::spawn(move || {
-                let _ = handle_conn(stream, handle);
-            });
+    /// Request shutdown and poke the accept loop so it observes the flag.
+    /// `serve_forever` then drains the handler pool before returning.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Ok(addr) = self.listener.local_addr() {
+            let _ = TcpStream::connect(addr);
         }
-        Ok(())
+    }
+
+    /// Accept loop: accepted connections are dispatched to the fixed
+    /// handler pool through a bounded queue. Returns only after every
+    /// handler thread has been joined (live connections observe the stop
+    /// within one poll interval).
+    pub fn serve_forever(&self) -> Result<()> {
+        let conn_q: Arc<BoundedQueue<TcpStream>> = BoundedQueue::new(self.cfg.accept_backlog);
+        let pool = {
+            let conn_q = conn_q.clone();
+            let stats = self.stats.clone();
+            let handle = self.handle.clone();
+            let cfg = self.cfg;
+            crate::exec::WorkerPool::spawn(self.cfg.handlers.max(1), "conn-handler", move |_id, sd| {
+                while let Ok(stream) = conn_q.pop() {
+                    stats.active.fetch_add(1, Ordering::SeqCst);
+                    if let Err(e) = handle_conn(stream, &handle, sd, &cfg) {
+                        eprintln!("connection error: {e:#}");
+                    }
+                    stats.active.fetch_sub(1, Ordering::SeqCst);
+                    stats.completed.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+        };
+        let accept_result = (|| -> Result<()> {
+            for stream in self.listener.incoming() {
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = stream?;
+                self.stats.accepted.fetch_add(1, Ordering::SeqCst);
+                // Stop-aware hand-off: a plain blocking push could wedge
+                // here with a full backlog while every handler is busy —
+                // and handlers only exit after this loop returns.
+                let mut item = stream;
+                loop {
+                    match conn_q.try_push(item) {
+                        Ok(()) => break,
+                        Err((back, QueueError::WouldBlock)) => {
+                            if self.stop.load(Ordering::SeqCst) {
+                                drop(back); // shed the connection; stopping
+                                break;
+                            }
+                            item = back;
+                            std::thread::sleep(self.cfg.poll);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Ok(())
+        })();
+        // Drain: no more intake, finish queued connections, join handlers.
+        conn_q.close();
+        pool.join();
+        accept_result
     }
 }
 
-fn handle_conn(stream: TcpStream, handle: Handle) -> Result<()> {
-    // Request/response is one short line each way; without TCP_NODELAY the
-    // Nagle/delayed-ACK interaction costs ~40 ms per round-trip (measured:
-    // 45 req/s before, >20k req/s after — see EXPERIMENTS.md §Perf).
+/// Serve one connection until EOF, an empty line, or server stop.
+fn handle_conn(
+    stream: TcpStream,
+    handle: &Handle,
+    shutdown: &AtomicBool,
+    cfg: &ServerConfig,
+) -> Result<()> {
+    // Request/response is one short line each way in interactive mode;
+    // without TCP_NODELAY the Nagle/delayed-ACK interaction costs ~40 ms
+    // per round-trip (measured: 45 req/s before, >20k req/s after — see
+    // EXPERIMENTS.md §Perf).
     stream.set_nodelay(true)?;
+    // Poll reads so a stopped server reclaims handlers from idle
+    // connections within `cfg.poll`.
+    stream.set_read_timeout(Some(cfg.poll))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        let word_str = line.trim();
-        if word_str.is_empty() {
-            break;
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::with_capacity(64);
+    // Batch state, all reused across read cycles: words are stored as
+    // spans into one contiguous text buffer — no per-word allocation on
+    // the steady-state path.
+    let mut batch_text = String::new();
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut words: Vec<ArabicWord> = Vec::new();
+    let mut reply = String::new();
+    loop {
+        // A continuously-sending client never hits the timeout branch
+        // below, so the stop flag must also be polled between batches.
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
         }
-        let word = ArabicWord::encode(word_str);
-        let res = handle.stem(word)?;
-        writeln!(
-            writer,
-            "{}\t{}\t{}\t{}",
-            word_str,
-            res.root_word().to_string_ar(),
-            res.kind as u8,
-            res.cut
-        )?;
+        // Wait (poll-blocking) for the next line. On a timeout tick any
+        // partial bytes stay accumulated in `buf` (read_until appends).
+        buf.clear();
+        let mut eof = false;
+        loop {
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => {
+                    eof = true;
+                    break;
+                }
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        if eof && buf.is_empty() {
+            return Ok(()); // clean EOF between requests
+        }
+        batch_text.clear();
+        spans.clear();
+        let mut closing = eof;
+        closing |= push_line(&mut batch_text, &mut spans, &buf);
+        // Pipelined mode: fold every complete line already buffered on the
+        // connection into this batch — one linear pass over the buffer, no
+        // extra read syscalls, never blocks. A one-line-at-a-time client
+        // simply gets a batch of 1.
+        while !closing && spans.len() < cfg.max_pipeline {
+            let consumed = {
+                let buffered = reader.buffer();
+                match buffered.iter().position(|&b| b == b'\n') {
+                    Some(nl) => {
+                        closing = push_line(&mut batch_text, &mut spans, &buffered[..nl]);
+                        Some(nl + 1)
+                    }
+                    None => None, // only a partial line (or nothing) left
+                }
+            };
+            match consumed {
+                Some(n) => reader.consume(n),
+                None => break,
+            }
+        }
+        if !spans.is_empty() {
+            words.clear();
+            words.extend(spans.iter().map(|&(s, e)| ArabicWord::encode(&batch_text[s..e])));
+            let results = handle.stem_bulk(&words)?;
+            reply.clear();
+            for (&(s, e), r) in spans.iter().zip(&results) {
+                use std::fmt::Write as _;
+                let _ = writeln!(
+                    reply,
+                    "{}\t{}\t{}\t{}",
+                    &batch_text[s..e],
+                    r.root_word().to_string_ar(),
+                    r.kind as u8,
+                    r.cut
+                );
+            }
+            writer.write_all(reply.as_bytes())?;
+        }
+        if closing {
+            return Ok(());
+        }
     }
-    Ok(())
+}
+
+/// Append one raw protocol line to the batch (trimmed, stored as a span
+/// into `batch_text`). Returns `true` when the line is the empty
+/// close-connection marker.
+fn push_line(batch_text: &mut String, spans: &mut Vec<(usize, usize)>, raw: &[u8]) -> bool {
+    let text = String::from_utf8_lossy(raw);
+    let w = text.trim();
+    if w.is_empty() {
+        return true;
+    }
+    let start = batch_text.len();
+    batch_text.push_str(w);
+    spans.push((start, batch_text.len()));
+    false
 }
 
 #[cfg(test)]
@@ -103,6 +333,7 @@ mod tests {
         })
     }
 
+    /// The `nc`-friendly one-line-at-a-time protocol, unchanged.
     #[test]
     fn end_to_end_tcp_roundtrip() {
         let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
@@ -112,19 +343,104 @@ mod tests {
         let t = std::thread::spawn(move || server.serve_forever());
 
         let mut conn = TcpStream::connect(addr).unwrap();
-        conn.write_all("سيلعبون\nقال\n\n".as_bytes()).unwrap();
+        conn.write_all("سيلعبون\n".as_bytes()).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("لعب"), "{line}");
+        conn.write_all("قال\n".as_bytes()).unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("قول"), "{line}");
+        conn.write_all(b"\n").unwrap(); // empty line closes
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server should close");
 
         stop.store(true, Ordering::SeqCst);
         // poke the accept loop so it observes the flag
         let _ = TcpStream::connect(addr);
         t.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    /// Pipelined mode: many lines written before any read; replies come
+    /// back in order, and the whole burst lands in few stem_bulk batches.
+    #[test]
+    fn pipelined_burst_preserves_order() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 2, max_batch: 64, ..Default::default() },
+            sw_factory(),
+        );
+        let server = Server::bind("127.0.0.1:0", coord.handle()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_flag();
+        let t = std::thread::spawn(move || server.serve_forever());
+
+        let vocab = ["يدرس", "قال", "سيلعبون", "فتزحزحت", "ظظظ"];
+        let sent: Vec<&str> = vocab.iter().cycle().take(200).copied().collect();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let mut burst = String::new();
+        for w in &sent {
+            burst.push_str(w);
+            burst.push('\n');
+        }
+        conn.write_all(burst.as_bytes()).unwrap(); // entire burst before reading
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        for w in &sent {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let echoed = line.split('\t').next().unwrap();
+            assert_eq!(&echoed, w, "reply out of order: {line}");
+        }
+        conn.write_all(b"\n").unwrap();
+
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr);
+        t.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    /// Connection accounting: active returns to zero on disconnect and
+    /// accepted/completed reconcile; stop drains the handler pool.
+    #[test]
+    fn connection_accounting_and_drain() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let server = Arc::new(
+            Server::bind_with(
+                "127.0.0.1:0",
+                coord.handle(),
+                ServerConfig { handlers: 4, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let addr = server.local_addr().unwrap();
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+
+        let mut conns: Vec<TcpStream> = (0..3).map(|_| TcpStream::connect(addr).unwrap()).collect();
+        for c in &mut conns {
+            c.write_all("قال\n".as_bytes()).unwrap();
+            let mut r = BufReader::new(c.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(line.contains("قول"), "{line}");
+        }
+        assert_eq!(server.stats.accepted(), 3);
+        assert_eq!(server.stats.active(), 3);
+        drop(conns); // disconnect all
+        for _ in 0..100 {
+            if server.stats.active() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(server.stats.active(), 0, "active never decremented");
+        assert_eq!(server.stats.completed(), 3);
+
+        server.stop();
+        t.join().unwrap().unwrap(); // serve_forever returns ⇒ handlers joined
         coord.shutdown();
     }
 }

@@ -1,0 +1,240 @@
+//! Sustained-load serving-path tests: many real TCP connections driving
+//! the coordinator through the server's handler pool, asserting zero
+//! lost/reordered replies and exact metrics accounting — the ROADMAP
+//! "server load test" item.
+
+use ama::chars::ArabicWord;
+use ama::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SoftwareBackend};
+use ama::roots::RootSet;
+use ama::server::{Server, ServerConfig};
+use ama::stemmer::Stemmer;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn roots() -> Arc<RootSet> {
+    Arc::new(RootSet::builtin_mini())
+}
+
+fn sw_factory(r: Arc<RootSet>) -> BackendFactory {
+    Box::new(move |_| Ok(Box::new(SoftwareBackend(Stemmer::with_defaults(r.clone())))))
+}
+
+/// 32 connections × 320 words = 10,240 words through real TCP in
+/// pipelined bursts. Every reply must echo its word in order, carry the
+/// same root the stemmer computes directly, and the server-side request
+/// counter must land exactly on the total.
+#[test]
+fn sustained_load_no_loss_no_reorder_exact_metrics() {
+    const CONNS: usize = 32;
+    const WORDS_PER_CONN: usize = 320;
+    const BURST: usize = 64;
+
+    let r = roots();
+    let vocab: Vec<&str> =
+        vec!["يدرس", "قال", "سيلعبون", "فتزحزحت", "ظظظ", "يلعب", "درس", "كتب"];
+    // expected root (by direct stemming) for each vocab word
+    let stemmer = Stemmer::with_defaults(r.clone());
+    let expected: HashMap<String, String> = vocab
+        .iter()
+        .map(|w| {
+            let res = stemmer.stem(&ArabicWord::encode(w));
+            (w.to_string(), res.root_word().to_string_ar())
+        })
+        .collect();
+
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, max_batch: 128, ..Default::default() },
+        sw_factory(r.clone()),
+    );
+    let server = Arc::new(
+        Server::bind_with(
+            "127.0.0.1:0",
+            coord.handle(),
+            ServerConfig { handlers: CONNS, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let addr = server.local_addr().unwrap();
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve_forever());
+
+    let clients: Vec<_> = (0..CONNS)
+        .map(|id| {
+            let vocab: Vec<String> = vocab.iter().map(|s| s.to_string()).collect();
+            let expected = expected.clone();
+            std::thread::spawn(move || -> u64 {
+                let conn = TcpStream::connect(addr).unwrap();
+                conn.set_nodelay(true).unwrap();
+                conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let mut writer = conn.try_clone().unwrap();
+                let mut reader = BufReader::new(conn);
+                let mut got = 0u64;
+                let mut next = id % vocab.len();
+                let mut line = String::new();
+                for _ in 0..(WORDS_PER_CONN / BURST) {
+                    // pipelined burst: BURST lines before any read
+                    let mut sent = Vec::with_capacity(BURST);
+                    let mut burst = String::new();
+                    for _ in 0..BURST {
+                        burst.push_str(&vocab[next]);
+                        burst.push('\n');
+                        sent.push(vocab[next].clone());
+                        next = (next + 1) % vocab.len();
+                    }
+                    writer.write_all(burst.as_bytes()).unwrap();
+                    for w in &sent {
+                        line.clear();
+                        assert!(
+                            reader.read_line(&mut line).unwrap() > 0,
+                            "conn {id}: server closed mid-burst"
+                        );
+                        let mut fields = line.trim_end().split('\t');
+                        let echoed = fields.next().unwrap();
+                        let root = fields.next().unwrap();
+                        assert_eq!(echoed, w, "conn {id}: reply out of order");
+                        assert_eq!(&expected[w], root, "conn {id}: wrong root for {w}");
+                        got += 1;
+                    }
+                }
+                writer.write_all(b"\n").unwrap(); // close
+                got
+            })
+        })
+        .collect();
+
+    let total: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(total, (CONNS * WORDS_PER_CONN) as u64, "lost replies");
+
+    // Exact accounting: every word stemmed exactly once, no errors.
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.requests, (CONNS * WORDS_PER_CONN) as u64, "snapshot().requests inexact");
+    assert_eq!(snap.words, (CONNS * WORDS_PER_CONN) as u64);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.p99_us > 0, "latency histogram never populated");
+    // Pipelined bursts must actually aggregate at the connection level:
+    // far fewer backend batches than words.
+    assert!(
+        snap.batches < snap.words / 4,
+        "no connection-level batching: {} batches for {} words",
+        snap.batches,
+        snap.words
+    );
+
+    assert_eq!(server.stats.accepted(), CONNS as u64);
+    server.stop();
+    serve_thread.join().unwrap().unwrap();
+    assert_eq!(server.stats.active(), 0, "handlers drained");
+    assert_eq!(server.stats.completed(), CONNS as u64);
+    coord.shutdown();
+}
+
+/// The interactive protocol and the pipelined protocol return identical
+/// results, and both match the coordinator's bulk/stream APIs.
+#[test]
+fn pipelined_and_interactive_agree_with_bulk_apis() {
+    let r = roots();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, max_batch: 32, ..Default::default() },
+        sw_factory(r.clone()),
+    );
+    let handle = coord.handle();
+    let vocab = ["يدرس", "قال", "سيلعبون", "فتزحزحت", "ظظظ"];
+    let sent: Vec<String> =
+        vocab.iter().cycle().take(60).map(|s| s.to_string()).collect();
+    let words: Vec<ArabicWord> = sent.iter().map(|s| ArabicWord::encode(s)).collect();
+
+    // API-level order preservation (acceptance: bulk == stream)
+    let bulk = handle.stem_bulk(&words).unwrap();
+    let stream = handle.stem_stream(&words).unwrap();
+    assert_eq!(bulk, stream);
+
+    let server = Arc::new(Server::bind("127.0.0.1:0", coord.handle()).unwrap());
+    let addr = server.local_addr().unwrap();
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve_forever());
+
+    // Interactive: one line at a time.
+    let conn = TcpStream::connect(addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut interactive = Vec::new();
+    let mut line = String::new();
+    for w in &sent {
+        writeln!(writer, "{w}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        interactive.push(line.trim_end().to_string());
+    }
+    writer.write_all(b"\n").unwrap();
+
+    // Pipelined: the whole burst at once.
+    let conn = TcpStream::connect(addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut burst = String::new();
+    for w in &sent {
+        burst.push_str(w);
+        burst.push('\n');
+    }
+    writer.write_all(burst.as_bytes()).unwrap();
+    let mut pipelined = Vec::new();
+    for _ in &sent {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        pipelined.push(line.trim_end().to_string());
+    }
+    writer.write_all(b"\n").unwrap();
+
+    assert_eq!(interactive, pipelined, "the two protocol modes diverged");
+    // And the wire replies carry the same roots as the direct API.
+    for (reply, res) in pipelined.iter().zip(&bulk) {
+        let root = reply.split('\t').nth(1).unwrap();
+        assert_eq!(root, res.root_word().to_string_ar(), "{reply}");
+    }
+
+    server.stop();
+    serve_thread.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+/// The in-crate load generator drives a real server end to end (a
+/// seconds-long smoke of what `ama loadtest` does).
+#[test]
+fn load_generator_smoke() {
+    let r = roots();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, max_batch: 128, ..Default::default() },
+        sw_factory(r.clone()),
+    );
+    let server = Arc::new(
+        Server::bind_with(
+            "127.0.0.1:0",
+            coord.handle(),
+            ServerConfig { handlers: 8, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let addr = server.local_addr().unwrap();
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve_forever());
+
+    let words: Vec<String> =
+        ["يدرس", "قال", "سيلعبون", "فتزحزحت"].iter().map(|s| s.to_string()).collect();
+    let outcome =
+        ama::bench::run_tcp_load(addr, 8, Duration::from_millis(500), 32, &words);
+    assert_eq!(outcome.errors, 0, "client errors");
+    assert_eq!(outcome.reorders, 0, "reordered replies");
+    assert!(outcome.words > 0, "no traffic flowed");
+    assert!(outcome.rtt_p50_us > 0);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.requests, outcome.words, "server/client word counts diverge");
+
+    server.stop();
+    serve_thread.join().unwrap().unwrap();
+    coord.shutdown();
+}

@@ -39,4 +39,10 @@ assert report["results"], "empty bench results"
 print("bench smoke OK:", len(report["results"]), "rows")
 EOF
 
+echo "== loadtest smoke (2 modes × 2s, 8 conns) =="
+./target/release/ama loadtest --conns 8 --secs 2 --depth 32 --mode both \
+  --words 1000 --out /tmp/ama_loadtest_smoke.json
+grep -q '"schema": "ama-loadtest-v1"' /tmp/ama_loadtest_smoke.json
+echo "loadtest smoke OK"
+
 echo "verify: all green"
