@@ -2,11 +2,14 @@
 #
 #   make data       — regenerate the root dictionaries under data/
 #   make artifacts  — AOT-lower the JAX stemmer to artifacts/*.hlo.txt
-#   make verify     — tier-1 + clippy + bench + loadtest smoke (scripts/verify.sh)
+#   make verify     — tier-1 + clippy + bench + loadtest + protocol smoke
+#                     (scripts/verify.sh)
 #   make loadtest   — full serving-path comparison (per-word vs pipelined,
 #                     32 conns × 5 s) writing measured rows to BENCH_PR2.json
+#   make protocol-check — AMA/1 + legacy-line conformance smoke against a
+#                     real `ama serve` process (scripts/protocol_check.sh)
 
-.PHONY: data artifacts verify test loadtest
+.PHONY: data artifacts verify test loadtest protocol-check
 
 data:
 	cd python && python3 -m compile.gen_roots ../data
@@ -24,3 +27,7 @@ loadtest:
 	cargo build --release
 	./target/release/ama loadtest --conns 32 --secs 5 --depth 64 \
 		--mode both --backend software-par --out BENCH_PR2.json
+
+protocol-check:
+	cargo build --release
+	scripts/protocol_check.sh

@@ -1,17 +1,21 @@
 //! Serving example: start the coordinator + TCP server, drive it with a
-//! concurrent client workload, and report serving latency/throughput —
-//! the "NLP processor embedded in applications" scenario the paper's
-//! objective 3 motivates.
+//! concurrent client workload over BOTH wire protocols — legacy
+//! bare-line bursts and typed AMA/1 envelopes (per-request algorithm,
+//! infix override, pipeline trace) — and report serving
+//! latency/throughput. The "NLP processor embedded in applications"
+//! scenario the paper's objective 3 motivates.
 //!
 //! ```bash
 //! cargo run --release --example pipeline_service
 //! ```
 
-use ama::coordinator::{Coordinator, CoordinatorConfig, SoftwareBackend};
+use ama::analysis::{Algorithm, AnalyzeOptions};
+use ama::client::Client;
+use ama::coordinator::{Coordinator, CoordinatorConfig};
 use ama::corpus::{self, CorpusConfig};
 use ama::roots::RootSet;
 use ama::server::Server;
-use ama::stemmer::Stemmer;
+use ama::stemmer::StemmerConfig;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::Path;
@@ -25,11 +29,12 @@ fn main() -> anyhow::Result<()> {
         Arc::new(RootSet::builtin_mini())
     };
 
-    // Coordinator: 2 workers, dynamic batching.
-    let r2 = roots.clone();
-    let coord = Coordinator::start(
+    // Coordinator: 2 workers, dynamic batching, the PR-3 registry backend
+    // (all four engines answer per-request options on one port).
+    let coord = Coordinator::start_registry(
         CoordinatorConfig { workers: 2, max_batch: 128, ..Default::default() },
-        Box::new(move |_| Ok(Box::new(SoftwareBackend(Stemmer::with_defaults(r2.clone()))))),
+        roots.clone(),
+        StemmerConfig::default(),
     );
 
     // TCP server on an ephemeral port.
@@ -79,6 +84,37 @@ fn main() -> anyhow::Result<()> {
         total += t.join().unwrap()?;
     }
     let dt = t0.elapsed();
+
+    // The same port also speaks AMA/1 (first-line sniffing): one typed
+    // batch per algorithm, plus a traced request — the unified analyzer
+    // API over the wire.
+    println!("\nAMA/1 on the same port:");
+    let mut typed = Client::connect(addr)?;
+    for algo in Algorithm::ALL {
+        let results = typed.analyze(
+            &["سيلعبون", "دارس", "قال"],
+            &AnalyzeOptions::with_algorithm(algo),
+        )?;
+        let rendered: Vec<String> = results
+            .iter()
+            .map(|r| {
+                format!(
+                    "{}→{}",
+                    r.word,
+                    if r.root.is_empty() { "∅" } else { &r.root }
+                )
+            })
+            .collect();
+        println!("  {algo:<10} {}", rendered.join("  "));
+    }
+    let traced = typed.analyze(
+        &["أفاستسقيناكموها"],
+        &AnalyzeOptions { want_trace: true, ..Default::default() },
+    )?;
+    println!("  trace of {}:", traced[0].word);
+    for (stage, detail) in traced[0].trace.as_ref().unwrap() {
+        println!("    [{stage:>10}] {detail}");
+    }
 
     let snap = coord.metrics().snapshot();
     println!(

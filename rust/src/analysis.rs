@@ -1,0 +1,787 @@
+//! The unified analyzer API (PR 3): one object-safe [`Analyzer`] trait
+//! over every stemming engine, typed request options, and rich typed
+//! results.
+//!
+//! The paper frames the LB stemmer as one pluggable analysis engine among
+//! several (LB vs Khoja in Table 7, infix units on/off in Table 6); this
+//! module is that framing made concrete:
+//!
+//! * [`Algorithm`] — the four engines: the paper's linguistic-based
+//!   stemmer, the Khoja baseline, the light10-style stemmer, and the
+//!   Sawalha–Atwell-style voting analyzer.
+//! * [`AnalyzeOptions`] — per-*request* knobs: algorithm, infix
+//!   processing override, and a diagnostics trace. What used to be
+//!   compile-time wiring (`BackendFactory` choice, `StemmerConfig`) is
+//!   now data on the request path.
+//! * [`EngineOpts`] — the options packed into one byte: the "options
+//!   word" carried by every `coordinator::Request` through the bounded
+//!   queue and reply slab with zero extra allocation.
+//! * [`Analysis`] — supersedes the bare [`StemResult`]: root +
+//!   [`MatchKind`] + cut as before, plus which algorithm answered,
+//!   vote/confidence metadata, and an optional per-stage [`Trace`]
+//!   mirroring the paper's five pipeline stages
+//!   (fetch → affix → candidate → compare → write-back).
+//! * [`Analyzer`] — the trait itself. `analyze` is the only required
+//!   method; `analyze_batch` and `stem_batch` are provided, which is
+//!   where the four copy-pasted `stem_batch` loops of the pre-PR-3 tree
+//!   went (the SoA-kernel [`Stemmer`] overrides `analyze_batch`, the
+//!   scalar engines inherit the default).
+//! * [`AnalyzerRegistry`] — all four engines behind one lookup, used by
+//!   the coordinator's registry backend and the CLI.
+//! * [`ErrorCode`] / [`ServeError`] — the typed serving errors shared
+//!   with the AMA/1 wire protocol (`QUEUE_FULL`, `SHUTDOWN`, `BAD_WORD`,
+//!   …) replacing stringly `anyhow` errors on the request path.
+
+use crate::chars::{AffixProfile, ArabicWord, MAX_SUFFIX};
+use crate::khoja::KhojaStemmer;
+use crate::light::{LightStemmer, VotingAnalyzer};
+use crate::roots::RootSet;
+use crate::stemmer::{MatchKind, StemResult, Stemmer, StemmerConfig};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Algorithm + options
+// ---------------------------------------------------------------------------
+
+/// Which analysis engine answers a request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Algorithm {
+    /// The paper's linguistic-based stemmer (the default engine).
+    #[default]
+    Linguistic = 0,
+    /// Khoja & Garside 1999 baseline (Table 7 comparator).
+    Khoja = 1,
+    /// Larkey light10-style stemmer (§6.3 comparison set).
+    Light = 2,
+    /// Majority vote over the three engines above (Sawalha & Atwell 2008).
+    Voting = 3,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 4] =
+        [Algorithm::Linguistic, Algorithm::Khoja, Algorithm::Light, Algorithm::Voting];
+
+    /// Stable wire name (`opts.algo` in AMA/1 envelopes, `--algo` in the
+    /// CLI).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Algorithm::Linguistic => "linguistic",
+            Algorithm::Khoja => "khoja",
+            Algorithm::Light => "light",
+            Algorithm::Voting => "voting",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Algorithm> {
+        match s {
+            "linguistic" | "lb" => Some(Algorithm::Linguistic),
+            "khoja" => Some(Algorithm::Khoja),
+            "light" => Some(Algorithm::Light),
+            "voting" => Some(Algorithm::Voting),
+            _ => None,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Algorithm {
+        match v {
+            1 => Algorithm::Khoja,
+            2 => Algorithm::Light,
+            3 => Algorithm::Voting,
+            _ => Algorithm::Linguistic,
+        }
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // `pad`, not `write_str`: honor width/alignment ({:<10} etc.)
+        f.pad(self.as_str())
+    }
+}
+
+/// Per-request analysis options.
+///
+/// `infix: None` means "whatever the engine was constructed with" — that
+/// keeps a directly-constructed no-infix [`Stemmer`] behaving identically
+/// through the trait at default options (the conformance tests pin this).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AnalyzeOptions {
+    pub algorithm: Algorithm,
+    /// Override the engine's infix-processing config for this request
+    /// (`None` = engine default). Only the linguistic engine (and the
+    /// voting analyzer's linguistic member) has infix processing.
+    pub infix: Option<bool>,
+    /// Attach a per-stage pipeline trace to every result (diagnostics —
+    /// allocates, so off by default).
+    pub want_trace: bool,
+}
+
+impl AnalyzeOptions {
+    pub fn with_algorithm(algorithm: Algorithm) -> AnalyzeOptions {
+        AnalyzeOptions { algorithm, ..Default::default() }
+    }
+}
+
+/// [`AnalyzeOptions`] packed into one byte — the "options word" every
+/// `coordinator::Request` carries through the queue/slab machinery.
+///
+/// Layout: bits 0–1 algorithm, bits 2–3 infix (0 = engine default,
+/// 1 = forced on, 2 = forced off), bit 4 trace. `EngineOpts::default()`
+/// is the all-zero word: linguistic engine, default infix, no trace —
+/// i.e. exactly the pre-PR-3 request semantics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct EngineOpts(u8);
+
+impl EngineOpts {
+    pub fn new(opts: &AnalyzeOptions) -> EngineOpts {
+        let infix_bits = match opts.infix {
+            None => 0u8,
+            Some(true) => 1,
+            Some(false) => 2,
+        };
+        EngineOpts(
+            (opts.algorithm as u8) | (infix_bits << 2) | ((opts.want_trace as u8) << 4),
+        )
+    }
+
+    pub fn algorithm(self) -> Algorithm {
+        Algorithm::from_u8(self.0 & 0b11)
+    }
+
+    pub fn infix(self) -> Option<bool> {
+        match (self.0 >> 2) & 0b11 {
+            1 => Some(true),
+            2 => Some(false),
+            _ => None,
+        }
+    }
+
+    pub fn want_trace(self) -> bool {
+        self.0 & 0b1_0000 != 0
+    }
+
+    /// The raw packed byte (diagnostics / wire use).
+    pub fn word(self) -> u8 {
+        self.0
+    }
+
+    pub fn to_options(self) -> AnalyzeOptions {
+        AnalyzeOptions {
+            algorithm: self.algorithm(),
+            infix: self.infix(),
+            want_trace: self.want_trace(),
+        }
+    }
+}
+
+impl From<&AnalyzeOptions> for EngineOpts {
+    fn from(o: &AnalyzeOptions) -> EngineOpts {
+        EngineOpts::new(o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace + Analysis
+// ---------------------------------------------------------------------------
+
+/// The five pipeline stages of the paper's processor (Figs 10–11), reused
+/// as the trace vocabulary for every engine.
+pub const STAGE_NAMES: [&str; 5] = ["fetch", "affix", "candidate", "compare", "write-back"];
+
+/// One trace entry: a stage name (always one of [`STAGE_NAMES`]) plus a
+/// short human-readable detail line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceStage {
+    pub stage: &'static str,
+    pub detail: String,
+}
+
+/// A per-request diagnostics trace: one entry per pipeline stage.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub stages: Vec<TraceStage>,
+}
+
+impl Trace {
+    fn push(&mut self, stage: &'static str, detail: String) {
+        debug_assert!(STAGE_NAMES.contains(&stage));
+        self.stages.push(TraceStage { stage, detail });
+    }
+}
+
+/// The result of analyzing one word — supersedes the bare [`StemResult`].
+///
+/// `result` carries exactly what [`StemResult`] always did (root, match
+/// kind, cut), so pre-PR-3 behavior is recoverable as `analysis.result`;
+/// the conformance tests pin that projection bit-for-bit against the
+/// engines' original `stem` methods.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Analysis {
+    pub result: StemResult,
+    /// Which engine produced this result.
+    pub algorithm: Algorithm,
+    /// Agreement confidence in `[0, 1]`: for single engines 1.0 on a
+    /// match and 0.0 on [`MatchKind::None`]; for the voting analyzer the
+    /// fraction of ballots agreeing with the winner.
+    pub confidence: f32,
+    /// Number of engine votes behind the result (1 for single engines on
+    /// a match, up to 3 for the voting analyzer, 0 for no match).
+    pub votes: u8,
+    /// Per-stage diagnostics, present only when requested.
+    pub trace: Option<Trace>,
+}
+
+impl Analysis {
+    /// Wrap a bare result with derived single-engine metadata.
+    pub fn from_result(result: StemResult, algorithm: Algorithm) -> Analysis {
+        let matched = result.kind != MatchKind::None;
+        Analysis {
+            result,
+            algorithm,
+            confidence: if matched { 1.0 } else { 0.0 },
+            votes: matched as u8,
+            trace: None,
+        }
+    }
+
+    /// The degraded "no answer" value (backend failure, shutdown drain).
+    pub fn none(algorithm: Algorithm) -> Analysis {
+        Analysis::from_result(StemResult::NONE, algorithm)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Analyzer trait
+// ---------------------------------------------------------------------------
+
+/// One object-safe interface over every stemming engine.
+///
+/// `analyze` is the only required method. The provided `analyze_batch` /
+/// `stem_batch` are the single batching loop that replaced the four
+/// copy-pasted per-engine `stem_batch` implementations; engines with a
+/// genuinely different batch kernel (the SoA-encoded [`Stemmer`])
+/// override `analyze_batch` and everything downstream inherits the win.
+pub trait Analyzer: Send + Sync {
+    /// Engine name (matches [`Algorithm::as_str`] for the four built-ins).
+    fn name(&self) -> &'static str;
+
+    /// Analyze one word under the given options. Engines ignore
+    /// `opts.algorithm` (routing happens upstream, in the registry or
+    /// coordinator); they honor `opts.infix` where meaningful and attach
+    /// a trace when `opts.want_trace`.
+    fn analyze(&self, w: &ArabicWord, opts: &AnalyzeOptions) -> Analysis;
+
+    /// Analyze a batch. Default: the scalar loop.
+    fn analyze_batch(&self, words: &[ArabicWord], opts: &AnalyzeOptions) -> Vec<Analysis> {
+        words.iter().map(|w| self.analyze(w, opts)).collect()
+    }
+
+    /// Legacy-shaped batch: bare [`StemResult`]s at default options. This
+    /// is the provided method the old per-engine `stem_batch` loops
+    /// collapsed onto.
+    fn stem_batch(&self, words: &[ArabicWord]) -> Vec<StemResult> {
+        self.analyze_batch(words, &AnalyzeOptions::default())
+            .into_iter()
+            .map(|a| a.result)
+            .collect()
+    }
+}
+
+// --- linguistic-based stemmer ----------------------------------------------
+
+/// Count the candidate windows the fused kernel will consider — used only
+/// by the trace path (the hot path stays uninstrumented).
+fn lb_window_counts(w: &ArabicWord, profile: AffixProfile) -> (usize, usize) {
+    let n = w.len;
+    let suffix_start = profile.suffix_start as usize;
+    let mut tri = 0;
+    let mut quad = 0;
+    for p in 0..=profile.prefix_run as usize {
+        let e3 = p + 3;
+        if e3 <= n && n - e3 <= MAX_SUFFIX && e3 >= suffix_start {
+            tri += 1;
+        }
+        let e4 = p + 4;
+        if e4 <= n && n - e4 <= MAX_SUFFIX && e4 >= suffix_start {
+            quad += 1;
+        }
+    }
+    (tri, quad)
+}
+
+fn result_detail(r: &StemResult) -> String {
+    if r.kind == MatchKind::None {
+        "no root extracted".to_string()
+    } else {
+        format!("root={} kind={:?} cut={}", r.root_word().to_string_ar(), r.kind, r.cut)
+    }
+}
+
+fn lb_trace(w: &ArabicWord, infix: bool, r: &StemResult) -> Trace {
+    let idx = w.to_indices();
+    let profile = AffixProfile::from_indices(&idx[..w.len]);
+    let (tri, quad) = lb_window_counts(w, profile);
+    let mut t = Trace::default();
+    t.push("fetch", format!("word={} len={}", w.to_string_ar(), w.len));
+    t.push(
+        "affix",
+        format!("prefix_run={} suffix_start={}", profile.prefix_run, profile.suffix_start),
+    );
+    t.push(
+        "candidate",
+        format!("windows: tri={tri} quad={quad} (infix {})", if infix { "on" } else { "off" }),
+    );
+    t.push(
+        "compare",
+        match r.kind {
+            MatchKind::None => "all dictionary probes missed".to_string(),
+            kind => format!("stream {kind:?} hit at cut {}", r.cut),
+        },
+    );
+    t.push("write-back", result_detail(r));
+    t
+}
+
+impl Analyzer for Stemmer {
+    fn name(&self) -> &'static str {
+        "linguistic"
+    }
+
+    fn analyze(&self, w: &ArabicWord, opts: &AnalyzeOptions) -> Analysis {
+        let infix = opts.infix.unwrap_or(self.config().infix_processing);
+        let result = if infix == self.config().infix_processing {
+            self.stem(w)
+        } else {
+            self.with_infix(infix).stem(w)
+        };
+        let mut a = Analysis::from_result(result, Algorithm::Linguistic);
+        if opts.want_trace {
+            a.trace = Some(lb_trace(w, infix, &result));
+        }
+        a
+    }
+
+    /// Batch override: one engine (re)configuration, then the SoA fused
+    /// kernel — not the scalar loop. (Fully-qualified calls: the inherent
+    /// `Stemmer::stem_batch`, NOT the trait method, which would recurse.)
+    fn analyze_batch(&self, words: &[ArabicWord], opts: &AnalyzeOptions) -> Vec<Analysis> {
+        let infix = opts.infix.unwrap_or(self.config().infix_processing);
+        let results = if infix == self.config().infix_processing {
+            Stemmer::stem_batch(self, words)
+        } else {
+            Stemmer::stem_batch(&self.with_infix(infix), words)
+        };
+        words
+            .iter()
+            .zip(results)
+            .map(|(w, r)| {
+                let mut a = Analysis::from_result(r, Algorithm::Linguistic);
+                if opts.want_trace {
+                    a.trace = Some(lb_trace(w, infix, &r));
+                }
+                a
+            })
+            .collect()
+    }
+}
+
+// --- khoja baseline --------------------------------------------------------
+
+fn coarse_trace(w: &ArabicWord, affix: &str, candidate: &str, compare: &str, r: &StemResult) -> Trace {
+    let mut t = Trace::default();
+    t.push("fetch", format!("word={} len={}", w.to_string_ar(), w.len));
+    t.push("affix", affix.to_string());
+    t.push("candidate", candidate.to_string());
+    t.push("compare", compare.to_string());
+    t.push("write-back", result_detail(r));
+    t
+}
+
+impl Analyzer for KhojaStemmer {
+    fn name(&self) -> &'static str {
+        "khoja"
+    }
+
+    fn analyze(&self, w: &ArabicWord, opts: &AnalyzeOptions) -> Analysis {
+        // Khoja has no infix processing; `opts.infix` is a no-op here
+        // (documented in docs/PROTOCOL.md).
+        let result = self.stem(w);
+        let mut a = Analysis::from_result(result, Algorithm::Khoja);
+        if opts.want_trace {
+            a.trace = Some(coarse_trace(
+                w,
+                "article/conjunction strip, then iterative suffix/prefix removal",
+                "residues of length 3..=7 tried against roots and patterns",
+                &match result.kind {
+                    MatchKind::None => "no dictionary root or pattern matched".to_string(),
+                    k => format!("dictionary/pattern hit ({k:?})"),
+                },
+                &result,
+            ));
+        }
+        a
+    }
+}
+
+// --- light stemmer ---------------------------------------------------------
+
+impl Analyzer for LightStemmer {
+    fn name(&self) -> &'static str {
+        "light"
+    }
+
+    fn analyze(&self, w: &ArabicWord, opts: &AnalyzeOptions) -> Analysis {
+        let result = self.stem(w);
+        let mut a = Analysis::from_result(result, Algorithm::Light);
+        if opts.want_trace {
+            a.trace = Some(coarse_trace(
+                w,
+                "one light10 prefix strip + iterative suffix strip (residue ≥ 3)",
+                "residue checked only if length 3 or 4 (no root extraction)",
+                &match result.kind {
+                    MatchKind::None => "residue is not a dictionary root".to_string(),
+                    k => format!("residue is a dictionary root ({k:?})"),
+                },
+                &result,
+            ));
+        }
+        a
+    }
+}
+
+// --- voting analyzer -------------------------------------------------------
+
+impl Analyzer for VotingAnalyzer {
+    fn name(&self) -> &'static str {
+        "voting"
+    }
+
+    fn analyze(&self, w: &ArabicWord, opts: &AnalyzeOptions) -> Analysis {
+        let detail = self.stem_detail(w, opts.infix);
+        let matched = detail.winner.kind != MatchKind::None;
+        let mut a = Analysis {
+            result: detail.winner,
+            algorithm: Algorithm::Voting,
+            confidence: if matched { f32::from(detail.agree) / 3.0 } else { 0.0 },
+            votes: if matched { detail.agree } else { 0 },
+            trace: None,
+        };
+        if opts.want_trace {
+            let ballots: Vec<String> = ["lb", "khoja", "light"]
+                .iter()
+                .zip(&detail.ballots)
+                .map(|(name, b)| {
+                    if b.kind == MatchKind::None {
+                        format!("{name}=∅")
+                    } else {
+                        format!("{name}={}", b.root_word().to_string_ar())
+                    }
+                })
+                .collect();
+            a.trace = Some(coarse_trace(
+                w,
+                "each member engine runs its own affix stage",
+                &format!("ballots: {}", ballots.join(" ")),
+                &format!("majority vote: {} agreeing", detail.agree),
+                &detail.winner,
+            ));
+        }
+        a
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// All four engines behind one lookup — the engine half of the serving
+/// registry (`coordinator::RegistryBackend` wraps one per worker; the CLI
+/// uses one directly for local analysis).
+pub struct AnalyzerRegistry {
+    lb: Stemmer,
+    khoja: KhojaStemmer,
+    light: LightStemmer,
+    voting: VotingAnalyzer,
+}
+
+impl AnalyzerRegistry {
+    pub fn new(roots: Arc<RootSet>) -> AnalyzerRegistry {
+        Self::with_config(roots, StemmerConfig::default())
+    }
+
+    /// `cfg` sets the *default* infix behavior of the linguistic engine
+    /// (and the voting analyzer's linguistic member); per-request
+    /// `AnalyzeOptions::infix` still overrides it.
+    pub fn with_config(roots: Arc<RootSet>, cfg: StemmerConfig) -> AnalyzerRegistry {
+        AnalyzerRegistry {
+            lb: Stemmer::new(roots.clone(), cfg),
+            khoja: KhojaStemmer::new(roots.clone()),
+            light: LightStemmer::new(roots.clone()),
+            voting: VotingAnalyzer::with_config(roots, cfg),
+        }
+    }
+
+    pub fn get(&self, algorithm: Algorithm) -> &dyn Analyzer {
+        match algorithm {
+            Algorithm::Linguistic => &self.lb,
+            Algorithm::Khoja => &self.khoja,
+            Algorithm::Light => &self.light,
+            Algorithm::Voting => &self.voting,
+        }
+    }
+
+    /// Route a batch to the engine `opts.algorithm` selects.
+    pub fn analyze_batch(&self, words: &[ArabicWord], opts: &AnalyzeOptions) -> Vec<Analysis> {
+        self.get(opts.algorithm).analyze_batch(words, opts)
+    }
+
+    pub fn analyze(&self, w: &ArabicWord, opts: &AnalyzeOptions) -> Analysis {
+        self.get(opts.algorithm).analyze(w, opts)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed serving errors (shared with the AMA/1 wire protocol)
+// ---------------------------------------------------------------------------
+
+/// Machine-readable failure codes — the exact strings AMA/1 puts in
+/// `error.code` (docs/PROTOCOL.md §Errors).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// The request queue stayed full past the submission deadline.
+    QueueFull,
+    /// The coordinator is (or went) closed.
+    Shutdown,
+    /// A submitted word is empty or contains no Arabic letters.
+    BadWord,
+    /// A reply did not arrive within the caller's deadline.
+    Timeout,
+    /// Malformed frame / envelope (bad JSON, missing fields, wrong types,
+    /// oversized batch).
+    BadRequest,
+    /// `v` field present but not a protocol version this server speaks.
+    BadVersion,
+    /// Unknown `op`.
+    UnknownOp,
+    /// Catch-all server-side failure.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::QueueFull => "QUEUE_FULL",
+            ErrorCode::Shutdown => "SHUTDOWN",
+            ErrorCode::BadWord => "BAD_WORD",
+            ErrorCode::Timeout => "TIMEOUT",
+            ErrorCode::BadRequest => "BAD_REQUEST",
+            ErrorCode::BadVersion => "BAD_VERSION",
+            ErrorCode::UnknownOp => "UNKNOWN_OP",
+            ErrorCode::Internal => "INTERNAL",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "QUEUE_FULL" => ErrorCode::QueueFull,
+            "SHUTDOWN" => ErrorCode::Shutdown,
+            "BAD_WORD" => ErrorCode::BadWord,
+            "TIMEOUT" => ErrorCode::Timeout,
+            "BAD_REQUEST" => ErrorCode::BadRequest,
+            "BAD_VERSION" => ErrorCode::BadVersion,
+            "UNKNOWN_OP" => ErrorCode::UnknownOp,
+            "INTERNAL" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// A typed serving failure: an [`ErrorCode`] plus a human-readable
+/// message. Implements `std::error::Error`, so `?` still converts into
+/// `anyhow::Result` call sites — but the code survives for the protocol
+/// layer and metrics instead of being flattened into a string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeError {
+    pub code: ErrorCode,
+    pub msg: String,
+}
+
+impl ServeError {
+    pub fn new(code: ErrorCode, msg: impl Into<String>) -> ServeError {
+        ServeError { code, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.msg)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roots() -> Arc<RootSet> {
+        Arc::new(RootSet::builtin_mini())
+    }
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::from_name(a.as_str()), Some(a));
+            assert_eq!(Algorithm::from_u8(a as u8), a);
+        }
+        assert_eq!(Algorithm::from_name("lb"), Some(Algorithm::Linguistic));
+        assert_eq!(Algorithm::from_name("nope"), None);
+    }
+
+    #[test]
+    fn engine_opts_pack_roundtrip() {
+        for algorithm in Algorithm::ALL {
+            for infix in [None, Some(true), Some(false)] {
+                for want_trace in [false, true] {
+                    let opts = AnalyzeOptions { algorithm, infix, want_trace };
+                    let packed = EngineOpts::new(&opts);
+                    assert_eq!(packed.to_options(), opts, "packed word {:#04x}", packed.word());
+                }
+            }
+        }
+        assert_eq!(EngineOpts::default().to_options(), AnalyzeOptions::default());
+    }
+
+    #[test]
+    fn trait_analyze_matches_inherent_stem() {
+        let r = roots();
+        let reg = AnalyzerRegistry::new(r.clone());
+        let lb = Stemmer::with_defaults(r.clone());
+        let kh = KhojaStemmer::new(r.clone());
+        let li = LightStemmer::new(r.clone());
+        let vo = VotingAnalyzer::new(r.clone());
+        for word in ["سيلعبون", "قال", "دارس", "والدرس", "ظظظظظ", ""] {
+            let w = ArabicWord::encode(word);
+            for (algo, expected) in [
+                (Algorithm::Linguistic, lb.stem(&w)),
+                (Algorithm::Khoja, kh.stem(&w)),
+                (Algorithm::Light, li.stem(&w)),
+                (Algorithm::Voting, vo.stem(&w)),
+            ] {
+                let a = reg.analyze(&w, &AnalyzeOptions::with_algorithm(algo));
+                assert_eq!(a.result, expected, "{algo} on {word:?}");
+                assert_eq!(a.algorithm, algo);
+            }
+        }
+    }
+
+    #[test]
+    fn infix_override_honored_per_request() {
+        let r = roots();
+        let reg = AnalyzerRegistry::new(r.clone());
+        let w = ArabicWord::encode("قال"); // restored only with infix on
+        let on = reg.analyze(&w, &AnalyzeOptions::default());
+        assert_eq!(on.result.kind, MatchKind::Restored);
+        let off = reg.analyze(
+            &w,
+            &AnalyzeOptions { infix: Some(false), ..Default::default() },
+        );
+        assert_eq!(off.result.kind, MatchKind::None);
+        // a no-infix-by-default registry honors a per-request "on"
+        let reg_off =
+            AnalyzerRegistry::with_config(r, StemmerConfig { infix_processing: false });
+        let forced = reg_off.analyze(
+            &w,
+            &AnalyzeOptions { infix: Some(true), ..Default::default() },
+        );
+        assert_eq!(forced.result.kind, MatchKind::Restored);
+    }
+
+    #[test]
+    fn provided_stem_batch_equals_scalar_loop() {
+        let r = roots();
+        let reg = AnalyzerRegistry::new(r.clone());
+        let words: Vec<ArabicWord> = ["يدرس", "قال", "دارس", "مدروس", "ظظظ"]
+            .iter()
+            .map(|s| ArabicWord::encode(s))
+            .collect();
+        for algo in Algorithm::ALL {
+            let engine = reg.get(algo);
+            let batch = engine.stem_batch(&words);
+            let scalar: Vec<StemResult> = words
+                .iter()
+                .map(|w| engine.analyze(w, &AnalyzeOptions::default()).result)
+                .collect();
+            assert_eq!(batch, scalar, "{algo}");
+        }
+    }
+
+    #[test]
+    fn voting_metadata_counts_ballots() {
+        let r = roots();
+        let reg = AnalyzerRegistry::new(r);
+        // درس: all three engines agree → 3 votes, confidence 1.0
+        let a = reg.analyze(
+            &ArabicWord::encode("درس"),
+            &AnalyzeOptions::with_algorithm(Algorithm::Voting),
+        );
+        assert_eq!(a.votes, 3);
+        assert!((a.confidence - 1.0).abs() < 1e-6);
+        // قال: only the LB engine answers → fallback, 1 vote
+        let a = reg.analyze(
+            &ArabicWord::encode("قال"),
+            &AnalyzeOptions::with_algorithm(Algorithm::Voting),
+        );
+        assert_eq!(a.votes, 1);
+        assert!(a.confidence < 0.5);
+        // garbage → no votes
+        let a = reg.analyze(
+            &ArabicWord::encode("ظظظظظ"),
+            &AnalyzeOptions::with_algorithm(Algorithm::Voting),
+        );
+        assert_eq!(a.votes, 0);
+        assert_eq!(a.confidence, 0.0);
+    }
+
+    #[test]
+    fn traces_cover_all_five_stages() {
+        let r = roots();
+        let reg = AnalyzerRegistry::new(r);
+        let w = ArabicWord::encode("سيلعبون");
+        for algo in Algorithm::ALL {
+            let opts = AnalyzeOptions { algorithm: algo, want_trace: true, ..Default::default() };
+            let a = reg.analyze(&w, &opts);
+            let trace = a.trace.expect("trace requested");
+            let stages: Vec<&str> = trace.stages.iter().map(|s| s.stage).collect();
+            assert_eq!(stages, STAGE_NAMES, "{algo}");
+            // no trace when not requested
+            let a = reg.analyze(&w, &AnalyzeOptions::with_algorithm(algo));
+            assert!(a.trace.is_none());
+        }
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::QueueFull,
+            ErrorCode::Shutdown,
+            ErrorCode::BadWord,
+            ErrorCode::Timeout,
+            ErrorCode::BadRequest,
+            ErrorCode::BadVersion,
+            ErrorCode::UnknownOp,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::from_name(code.as_str()), Some(code));
+        }
+        let e = ServeError::new(ErrorCode::QueueFull, "queue stayed full for 5s");
+        assert_eq!(format!("{e}"), "QUEUE_FULL: queue stayed full for 5s");
+    }
+}

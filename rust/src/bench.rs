@@ -1,8 +1,10 @@
 //! Benchmark harness substrate (criterion is not in the offline image):
 //! warmup, adaptive iteration, mean/stddev/min, and words-per-second
 //! throughput reporting in the paper's units — plus the TCP load
-//! generator behind `ama loadtest` ([`run_tcp_load`]).
+//! generators behind `ama loadtest`: [`run_tcp_load`] for the legacy
+//! line protocol and [`run_ama1_load`] for typed AMA/1 envelopes.
 
+use crate::analysis::AnalyzeOptions;
 use crate::metrics::LatencyHistogram;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -261,6 +263,93 @@ pub fn run_tcp_load(
                 };
                 if let Err(e) = run() {
                     eprintln!("loadtest client {id}: {e}");
+                    total_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        let _ = t.join();
+    }
+    let elapsed = started.elapsed();
+    LoadOutcome {
+        conns,
+        depth,
+        words: total_words.load(Ordering::Relaxed),
+        errors: total_errors.load(Ordering::Relaxed),
+        reorders: total_reorders.load(Ordering::Relaxed),
+        elapsed,
+        rtt_p50_us: hist.percentile_us(0.50),
+        rtt_p90_us: hist.percentile_us(0.90),
+        rtt_p99_us: hist.percentile_us(0.99),
+    }
+}
+
+/// Drive the AMA/1 protocol at `addr` from `conns` typed clients for
+/// `duration`. Each thread loops: send one `analyze` envelope of `depth`
+/// words, read the reply, verify every result echoes its word in order,
+/// record the envelope round-trip latency. Connection `i` uses
+/// `opts_cycle[i % len]` — pass several option sets to exercise
+/// mixed-algorithm serving. Typed server error frames count as errors
+/// (they are protocol-level failures under load).
+pub fn run_ama1_load(
+    addr: SocketAddr,
+    conns: usize,
+    duration: Duration,
+    depth: usize,
+    words: &[String],
+    opts_cycle: &[AnalyzeOptions],
+) -> LoadOutcome {
+    assert!(!words.is_empty(), "need a word list");
+    assert!(!opts_cycle.is_empty(), "need at least one options set");
+    let depth = depth.clamp(1, crate::protocol::MAX_WORDS_PER_ENVELOPE);
+    let hist = Arc::new(LatencyHistogram::new());
+    let total_words = Arc::new(AtomicU64::new(0));
+    let total_errors = Arc::new(AtomicU64::new(0));
+    let total_reorders = Arc::new(AtomicU64::new(0));
+    let started = Instant::now();
+    let deadline = started + duration;
+    let words: Arc<[String]> = words.to_vec().into();
+    let opts_cycle: Arc<[AnalyzeOptions]> = opts_cycle.to_vec().into();
+    let threads: Vec<_> = (0..conns)
+        .map(|id| {
+            let words = words.clone();
+            let opts = opts_cycle[id % opts_cycle.len()];
+            let hist = hist.clone();
+            let total_words = total_words.clone();
+            let total_errors = total_errors.clone();
+            let total_reorders = total_reorders.clone();
+            std::thread::spawn(move || {
+                let run = || -> Result<(), crate::client::ClientError> {
+                    let mut client = crate::client::Client::connect(addr)?;
+                    client.set_read_timeout(Some(Duration::from_secs(10)))?;
+                    let mut next = (id * 37) % words.len();
+                    let mut batch: Vec<&str> = Vec::with_capacity(depth);
+                    while Instant::now() < deadline {
+                        batch.clear();
+                        let mut cursor = next;
+                        for _ in 0..depth {
+                            batch.push(words[cursor].as_str());
+                            cursor = (cursor + 1) % words.len();
+                        }
+                        let t0 = Instant::now();
+                        let results = client.analyze(&batch, &opts)?;
+                        hist.record(t0.elapsed());
+                        for (sent, got) in batch.iter().zip(&results) {
+                            if got.word != *sent {
+                                total_reorders.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        if results.len() != batch.len() {
+                            total_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        total_words.fetch_add(results.len() as u64, Ordering::Relaxed);
+                        next = cursor;
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    eprintln!("ama1 loadtest client {id}: {e}");
                     total_errors.fetch_add(1, Ordering::Relaxed);
                 }
             })

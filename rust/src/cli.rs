@@ -37,6 +37,9 @@ const VALUE_FLAGS: &[&str] = &[
     "--depth",
     "--mode",
     "--handlers",
+    "--algo",
+    "--connect",
+    "--proto",
 ];
 
 impl Args {
@@ -101,21 +104,29 @@ SUBCOMMANDS:
                           parallelism; it pays off with serve --batch ≥ 4096)
     corpus                generate a calibrated corpus
                           [--words N] [--seed S] [--out file.tsv] [--quran|--ankabut]
-    analyze               accuracy analysis over a corpus (Table 6/7 data)
+    analyze               unified analyzer API (PR 3). With words: analyze
+                          them through any engine — `ama analyze <words…>
+                          [--algo linguistic|khoja|light|voting] [--no-infix]
+                          [--trace]`, locally or against a running server
+                          via AMA/1 [--connect host:port]. Without words:
+                          accuracy analysis over a corpus (Table 6/7 data)
                           [--corpus quran|ankabut|file.tsv] [--no-infix] [--khoja]
     simulate              run the FPGA processor simulator with a trace
                           [--processor pipelined|non-pipelined] [--words N] [--trace]
     report                regenerate a paper table/figure
                           [--table morphology|truncation|hw|ratios|accuracy|roots]
                           [--figure throughput|sweep]
-    serve                 TCP line-protocol stemming service
-                          [--port P] [--backend …] [--workers N] [--batch B]
+    serve                 TCP stemming service: AMA/1 JSON-lines + legacy
+                          bare-line protocol on one port (first-line sniff)
+                          [--port P] [--backend …, default `registry` = all
+                          four engines per-request] [--workers N] [--batch B]
                           [--handlers H]  (fixed connection-handler pool;
                           clients may pipeline many lines per write)
     loadtest              drive the real TCP server from M client threads and
                           report p50/p90/p99 + words/sec from the histogram
                           metrics [--conns N] [--secs S] [--depth D]
                           [--mode pipelined|per-word|both] [--backend …]
+                          [--proto line|ama1] [--algo …]
                           [--workers N] [--batch B] [--out BENCH_PR2.json]
     selftest              cross-validate software / HW-sim / PJRT backends
     bench json            benchmark the software + hw-sim backends and write

@@ -1,0 +1,129 @@
+//! Typed AMA/1 client (PR 3): a thin, allocation-light wrapper over a
+//! `TcpStream` speaking the JSON-lines protocol of [`crate::protocol`].
+//!
+//! Used by `ama analyze --connect`, the `ama loadtest --proto ama1`
+//! fleet, and `examples/pipeline_service.rs`. One [`Client`] owns one
+//! connection; requests are correlated by auto-incrementing envelope ids
+//! and replies are matched strictly (an id mismatch is a protocol
+//! error — this client never pipelines more than one envelope, keeping
+//! it trivially correct; pipelining clients can issue multiple
+//! [`Client::send`]s before [`Client::recv`]s and match ids themselves).
+
+use crate::analysis::{AnalyzeOptions, ServeError};
+use crate::protocol::{Envelope, Reply, WireResult};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport failure (connect/read/write/EOF).
+    Io(std::io::Error),
+    /// The server answered with a typed AMA/1 error frame.
+    Remote(ServeError),
+    /// The server's bytes did not parse as AMA/1 (or ids mismatched).
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "i/o: {e}"),
+            ClientError::Remote(e) => write!(f, "server: {e}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
+}
+
+/// A connected AMA/1 client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+    line: String,
+}
+
+impl Client {
+    /// Connect and prepare the stream (TCP_NODELAY — the protocol is
+    /// request/response; see server.rs on what Nagle does to that).
+    pub fn connect(addr: SocketAddr) -> Result<Client, ClientError> {
+        let conn = TcpStream::connect(addr)?;
+        conn.set_nodelay(true)?;
+        let writer = conn.try_clone()?;
+        Ok(Client { reader: BufReader::new(conn), writer, next_id: 1, line: String::new() })
+    }
+
+    /// Bound how long [`Client::recv`] (and the helpers built on it) wait
+    /// for a reply line.
+    pub fn set_read_timeout(&mut self, d: Option<Duration>) -> Result<(), ClientError> {
+        self.reader.get_ref().set_read_timeout(d)?;
+        Ok(())
+    }
+
+    /// Send one envelope (assigning it the next id) without waiting for
+    /// the reply; returns the id. Pair with [`Client::recv`].
+    pub fn send(&mut self, mut env: Envelope) -> Result<u64, ClientError> {
+        env.id = self.next_id;
+        self.next_id += 1;
+        let mut line = env.to_json();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        Ok(env.id)
+    }
+
+    /// Read one reply frame.
+    pub fn recv(&mut self) -> Result<Reply, ClientError> {
+        self.line.clear();
+        let n = self.reader.read_line(&mut self.line)?;
+        if n == 0 {
+            return Err(ClientError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            )));
+        }
+        Reply::parse(self.line.trim_end()).map_err(ClientError::Protocol)
+    }
+
+    /// Analyze a batch of words: one envelope out, one reply in. Typed
+    /// server errors surface as [`ClientError::Remote`] with the wire
+    /// [`ServeError`] intact.
+    pub fn analyze(
+        &mut self,
+        words: &[&str],
+        opts: &AnalyzeOptions,
+    ) -> Result<Vec<WireResult>, ClientError> {
+        let env = Envelope::analyze(0, words.iter().map(|w| w.to_string()).collect(), *opts);
+        let id = self.send(env)?;
+        match self.recv()? {
+            Reply::Results { id: rid, results } if rid == id => Ok(results),
+            Reply::Error { id: rid, error } if rid == id => Err(ClientError::Remote(error)),
+            other => Err(ClientError::Protocol(format!(
+                "reply id {} does not match request id {id}",
+                other.id()
+            ))),
+        }
+    }
+
+    /// Liveness check: `{"op":"ping"}` → empty results.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        let env = Envelope { id: 0, op: "ping".to_string(), words: Vec::new(), opts: Default::default() };
+        let id = self.send(env)?;
+        match self.recv()? {
+            Reply::Results { id: rid, .. } if rid == id => Ok(()),
+            Reply::Error { error, .. } => Err(ClientError::Remote(error)),
+            other => Err(ClientError::Protocol(format!(
+                "pong id {} does not match {id}",
+                other.id()
+            ))),
+        }
+    }
+}

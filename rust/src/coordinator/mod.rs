@@ -8,34 +8,55 @@
 //!
 //! * **Intake** — requests stream into a bounded [`BoundedQueue`]
 //!   (backpressure: producers stall when the queue fills, exactly like the
-//!   paper's pipeline stalling its front end).
+//!   paper's pipeline stalling its front end). Since PR 3 every
+//!   [`Request`] carries an [`EngineOpts`] *options word* (algorithm,
+//!   infix override, trace bit packed into one byte), so the algorithm is
+//!   a per-request parameter instead of a compile-time backend choice.
 //! * **Batching** — a dynamic batcher groups whatever is waiting (up to
 //!   `max_batch`, with a `max_wait` deadline) and hands it to a worker
-//!   running a pluggable [`StemBackend`]: the pure-rust software stemmer,
-//!   either FPGA-simulator processor, or the PJRT engine executing the
-//!   AOT JAX artifact.
+//!   running a pluggable [`StemBackend`]. A popped batch is partitioned
+//!   by options word (uniform batches — the common case — stay one
+//!   group), and each group dispatches through
+//!   [`StemBackend::analyze_batch_opts`]; the [`RegistryBackend`] routes
+//!   groups to the four [`Analyzer`] engines, so one coordinator serves
+//!   linguistic/khoja/light/voting traffic concurrently.
 //! * **Reply routing** — instead of one `mpsc::channel()` allocation per
 //!   word (PR 1's hot-path residue), every request carries a `ticket`
 //!   into a shared [`exec::ReplySlab`]: a fixed-capacity, index-addressed
 //!   slab of reusable reply slots with park/unpark wakeups. Workers
-//!   `fill(ticket, result)`; submitters `wait(ticket)`. The steady-state
-//!   submit → stem → reply cycle allocates nothing.
+//!   `fill(ticket, analysis)`; submitters `wait(ticket)`. The slab
+//!   machinery is unchanged from PR 2 — only its payload grew from a bare
+//!   `StemResult` to an [`Analysis`] (still allocation-free unless a
+//!   trace was requested). The steady-state submit → stem → reply cycle
+//!   allocates nothing.
 //!
-//! [`Handle::stem_bulk`] / [`Handle::stem_stream`] share a *windowed*
-//! submit/collect core: up to half the slab may be in flight per call, and
-//! when the slab runs dry the submitter reaps its own oldest reply before
-//! acquiring more — so arbitrarily large streams pipeline through the
-//! fixed slab without deadlock, preserving submission order throughout.
+//! [`Handle::stem_bulk`] / [`Handle::stem_stream`] / [`Handle::analyze_bulk`]
+//! share a *windowed* submit/collect core: up to half the slab may be in
+//! flight per call, and when the slab runs dry the submitter reaps its own
+//! oldest reply before acquiring more — so arbitrarily large streams
+//! pipeline through the fixed slab without deadlock, preserving
+//! submission order throughout.
+//!
+//! Failures on the request path are typed (PR 3): [`ServeError`] carries
+//! the same [`ErrorCode`]s the AMA/1 wire protocol speaks (`SHUTDOWN`,
+//! `QUEUE_FULL`, `TIMEOUT`, …) and each rejection is counted in
+//! [`ServiceMetrics`].
 //!
 //! Backends are constructed *on* their worker thread via a factory, which
 //! is what lets the `Rc`-based PJRT engine participate without being
 //! `Send`.
+//!
+//! [`Analyzer`]: crate::analysis::Analyzer
 
+use crate::analysis::{
+    Algorithm, Analysis, AnalyzerRegistry, EngineOpts, ErrorCode, ServeError,
+};
 use crate::chars::ArabicWord;
 use crate::exec::{BoundedQueue, QueueError, ReplySlab, WorkerPool};
 use crate::metrics::ServiceMetrics;
-use crate::stemmer::StemResult;
-use anyhow::{anyhow, bail, Result};
+use crate::roots::RootSet;
+use crate::stemmer::{StemResult, StemmerConfig};
+use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -44,18 +65,49 @@ use std::time::{Duration, Instant};
 /// A batch-oriented root-extraction backend.
 pub trait StemBackend {
     fn name(&self) -> &'static str;
+
+    /// Which engine this backend actually runs — the label stamped onto
+    /// results by the default [`StemBackend::analyze_batch_opts`], so
+    /// wire replies never claim an algorithm the backend didn't execute.
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Linguistic
+    }
+
     fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>>;
+
+    /// Options-aware batch (PR 3). The default ignores the options word —
+    /// a compile-time single-engine backend (`hw-sim`, `xla`, a dedicated
+    /// khoja worker) made its choice at startup, so per-request
+    /// algorithm/infix/trace selectors are no-ops there and results are
+    /// labeled with [`StemBackend::algorithm`] (the engine that really
+    /// answered; clients can detect the mismatch from the reply's `algo`
+    /// field). The [`RegistryBackend`] overrides this to genuinely route
+    /// per request.
+    fn analyze_batch_opts(
+        &mut self,
+        words: &[ArabicWord],
+        _opts: EngineOpts,
+    ) -> Result<Vec<Analysis>> {
+        let algorithm = self.algorithm();
+        Ok(self
+            .stem_batch(words)?
+            .into_iter()
+            .map(|r| Analysis::from_result(r, algorithm))
+            .collect())
+    }
 }
 
 /// Constructs a backend on the worker thread (worker id passed in).
 pub type BackendFactory = Box<dyn Fn(usize) -> Result<Box<dyn StemBackend>> + Send + Sync>;
 
-/// One queued request: the word plus the reply-slab ticket its result is
-/// routed to. Plain data, no heap, no per-request channel.
+/// One queued request: the word, the reply-slab ticket its result is
+/// routed to, and the packed per-request options word. Plain data, no
+/// heap, no per-request channel.
 struct Request {
     word: ArabicWord,
     submitted: Instant,
     ticket: u32,
+    opts: EngineOpts,
 }
 
 /// Batching/queueing policy.
@@ -94,7 +146,7 @@ impl CoordinatorConfig {
 /// The running coordinator.
 pub struct Coordinator {
     queue: Arc<BoundedQueue<Request>>,
-    slab: Arc<ReplySlab<StemResult>>,
+    slab: Arc<ReplySlab<Analysis>>,
     pool: Option<WorkerPool>,
     metrics: Arc<ServiceMetrics>,
 }
@@ -103,7 +155,7 @@ impl Coordinator {
     /// Start workers, each owning a backend built by `factory`.
     pub fn start(cfg: CoordinatorConfig, factory: BackendFactory) -> Self {
         let queue: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.queue_capacity);
-        let slab: Arc<ReplySlab<StemResult>> = ReplySlab::new(cfg.reply_slots());
+        let slab: Arc<ReplySlab<Analysis>> = ReplySlab::new(cfg.reply_slots());
         let metrics = Arc::new(ServiceMetrics::new());
         let q = queue.clone();
         let s = slab.clone();
@@ -124,65 +176,96 @@ impl Coordinator {
                     if failed_inits.fetch_add(1, Ordering::SeqCst) + 1 == cfg.workers {
                         while let Ok(req) = q.pop() {
                             m.errors.fetch_add(1, Ordering::Relaxed);
-                            s.fill(req.ticket, StemResult::NONE);
+                            s.fill(req.ticket, Analysis::none(req.opts.algorithm()));
                         }
                     }
                     return;
                 }
             };
             let mut words = Vec::with_capacity(cfg.max_batch);
+            // Option-group scratch, reused across batches. A popped batch
+            // is partitioned by its packed options word; uniform batches
+            // (the overwhelmingly common case) form exactly one group.
+            let mut distinct: Vec<EngineOpts> = Vec::new();
+            let mut group_idx: Vec<usize> = Vec::with_capacity(cfg.max_batch);
             loop {
                 let batch = match q.pop_batch(cfg.max_batch, cfg.max_wait) {
                     Ok(b) => b,
                     Err(QueueError::Timeout) => continue,
                     Err(_) => break, // closed and drained
                 };
-                words.clear();
-                words.extend(batch.iter().map(|r| r.word));
-                // Every popped ticket MUST be filled, whatever the backend
-                // does — a panic or a short result vector would otherwise
-                // leave waiters parked forever (the old mpsc design woke
-                // them via dropped Senders; the slab has no such tripwire).
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    backend.stem_batch(&words)
-                }));
-                let results = match outcome {
-                    Ok(Ok(results)) if results.len() == words.len() => Some(results),
-                    Ok(Ok(results)) => {
-                        eprintln!(
-                            "worker {id}: backend returned {} results for {} words",
-                            results.len(),
-                            words.len()
-                        );
-                        None
+                distinct.clear();
+                for r in &batch {
+                    if !distinct.contains(&r.opts) {
+                        distinct.push(r.opts);
                     }
-                    Ok(Err(e)) => {
-                        eprintln!("worker {id}: batch failed: {e:#}");
-                        None
-                    }
-                    Err(_) => {
-                        eprintln!("worker {id}: backend panicked; failing the batch");
-                        None
-                    }
-                };
-                match results {
-                    Some(results) => {
-                        m.record_batch(words.len() as u64);
-                        for (req, res) in batch.into_iter().zip(results) {
-                            m.record_latency(req.submitted.elapsed());
-                            s.fill(req.ticket, res);
+                }
+                for &opts in &distinct {
+                    group_idx.clear();
+                    group_idx.extend(
+                        batch.iter().enumerate().filter(|(_, r)| r.opts == opts).map(|(i, _)| i),
+                    );
+                    words.clear();
+                    words.extend(group_idx.iter().map(|&i| batch[i].word));
+                    // Every popped ticket MUST be filled, whatever the
+                    // backend does — a panic or a short result vector would
+                    // otherwise leave waiters parked forever (the old mpsc
+                    // design woke them via dropped Senders; the slab has no
+                    // such tripwire).
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        backend.analyze_batch_opts(&words, opts)
+                    }));
+                    let results = match outcome {
+                        Ok(Ok(results)) if results.len() == words.len() => Some(results),
+                        Ok(Ok(results)) => {
+                            eprintln!(
+                                "worker {id}: backend returned {} results for {} words",
+                                results.len(),
+                                words.len()
+                            );
+                            None
                         }
-                    }
-                    None => {
-                        m.errors.fetch_add(1, Ordering::Relaxed);
-                        for req in batch {
-                            s.fill(req.ticket, StemResult::NONE);
+                        Ok(Err(e)) => {
+                            eprintln!("worker {id}: batch failed: {e:#}");
+                            None
+                        }
+                        Err(_) => {
+                            eprintln!("worker {id}: backend panicked; failing the batch");
+                            None
+                        }
+                    };
+                    match results {
+                        Some(results) => {
+                            m.record_batch(words.len() as u64);
+                            for (&i, res) in group_idx.iter().zip(results) {
+                                m.record_latency(batch[i].submitted.elapsed());
+                                s.fill(batch[i].ticket, res);
+                            }
+                        }
+                        None => {
+                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            for &i in &group_idx {
+                                s.fill(batch[i].ticket, Analysis::none(opts.algorithm()));
+                            }
                         }
                     }
                 }
             }
         });
         Coordinator { queue, slab, pool: Some(pool), metrics }
+    }
+
+    /// Start a multi-engine coordinator: every worker hosts an
+    /// [`AnalyzerRegistry`] behind a [`RegistryBackend`], so one running
+    /// process answers per-request `algorithm`/`infix`/`trace` options
+    /// for all four engines. `cfg_stemmer` sets the linguistic engine's
+    /// *default* infix behavior (per-request options still override it).
+    pub fn start_registry(
+        cfg: CoordinatorConfig,
+        roots: Arc<RootSet>,
+        cfg_stemmer: StemmerConfig,
+    ) -> Self {
+        Self::start(cfg, registry_factory(roots, cfg_stemmer))
     }
 
     pub fn handle(&self) -> Handle {
@@ -212,7 +295,7 @@ impl Coordinator {
         // their tickets. Fail them instead of leaving replies in flight.
         while let Ok(req) = self.queue.pop_timeout(Duration::ZERO) {
             self.metrics.errors.fetch_add(1, Ordering::Relaxed);
-            self.slab.fill(req.ticket, StemResult::NONE);
+            self.slab.fill(req.ticket, Analysis::none(req.opts.algorithm()));
         }
     }
 }
@@ -227,29 +310,33 @@ impl Drop for Coordinator {
 #[derive(Clone)]
 pub struct Handle {
     queue: Arc<BoundedQueue<Request>>,
-    slab: Arc<ReplySlab<StemResult>>,
+    slab: Arc<ReplySlab<Analysis>>,
     metrics: Arc<ServiceMetrics>,
 }
 
 /// A pending reply: a live reply-slab ticket. Dropping it un-waited
 /// abandons the ticket (the slot recycles when the worker fills it).
 pub struct Pending {
-    slab: Arc<ReplySlab<StemResult>>,
+    slab: Arc<ReplySlab<Analysis>>,
     ticket: u32,
     done: bool,
 }
 
 impl Pending {
-    pub fn wait(mut self) -> Result<StemResult> {
+    /// Block until the reply arrives.
+    pub fn wait(mut self) -> Analysis {
         self.done = true;
-        Ok(self.slab.wait(self.ticket))
+        self.slab.wait(self.ticket)
     }
 
-    pub fn wait_timeout(mut self, d: Duration) -> Result<StemResult> {
+    /// [`wait`](Pending::wait) with a deadline; expiry is the typed
+    /// `TIMEOUT` error (the ticket is abandoned and recycles when the
+    /// late fill lands — capacity never leaks).
+    pub fn wait_timeout(mut self, d: Duration) -> Result<Analysis, ServeError> {
         self.done = true;
         self.slab
             .wait_timeout(self.ticket, d)
-            .map_err(|e| anyhow!("reply timed out: {e:?}"))
+            .map_err(|_| ServeError::new(ErrorCode::Timeout, format!("no reply within {d:?}")))
     }
 }
 
@@ -278,16 +365,41 @@ impl Handle {
         }
     }
 
-    /// Enqueue a request, counting a full queue as saturation.
-    fn enqueue(&self, word: ArabicWord, submitted: Instant, ticket: u32) -> Result<(), QueueError> {
-        match self.queue.try_push(Request { word, submitted, ticket }) {
+    /// Enqueue a request, counting a full queue as saturation. With a
+    /// `submit_timeout`, a queue that stays full past the deadline fails
+    /// typed (`Timeout` here → `QUEUE_FULL` at the caller) instead of
+    /// blocking forever.
+    fn enqueue(
+        &self,
+        req: Request,
+        submit_timeout: Option<Duration>,
+    ) -> Result<(), QueueError> {
+        match self.queue.try_push(req) {
             Ok(()) => Ok(()),
             Err((req, QueueError::WouldBlock)) => {
                 self.metrics.queue_full_events.fetch_add(1, Ordering::Relaxed);
-                self.queue.push(req)
+                match submit_timeout {
+                    None => self.queue.push(req),
+                    Some(t) => self.queue.push_timeout(req, t).map_err(|(_, e)| e),
+                }
             }
             Err((_, e)) => Err(e),
         }
+    }
+
+    /// Map an enqueue failure to the typed protocol error, counting the
+    /// rejection.
+    fn rejection(&self, e: QueueError, context: String) -> ServeError {
+        let code = match e {
+            QueueError::Timeout => ErrorCode::QueueFull,
+            _ => ErrorCode::Shutdown,
+        };
+        self.metrics.record_rejection(code);
+        let msg = match code {
+            ErrorCode::QueueFull => format!("request queue full: {context}"),
+            _ => format!("coordinator closed: {context}"),
+        };
+        ServeError::new(code, msg)
     }
 
     /// Service metrics shared with the coordinator that issued this handle.
@@ -295,47 +407,91 @@ impl Handle {
         &self.metrics
     }
 
-    /// Submit one word; blocks only if the queue or reply slab is full
-    /// (backpressure). Allocation-free on the steady-state path.
-    pub fn submit(&self, word: ArabicWord) -> Result<Pending> {
+    /// Submit one word at default options; blocks only if the queue or
+    /// reply slab is full (backpressure). Allocation-free on the
+    /// steady-state path.
+    pub fn submit(&self, word: ArabicWord) -> Result<Pending, ServeError> {
+        self.submit_opts(word, EngineOpts::default())
+    }
+
+    /// Submit one word with a per-request options word.
+    pub fn submit_opts(&self, word: ArabicWord, opts: EngineOpts) -> Result<Pending, ServeError> {
         let ticket = self.acquire_ticket();
-        match self.enqueue(word, Instant::now(), ticket) {
+        let req = Request { word, submitted: Instant::now(), ticket, opts };
+        match self.enqueue(req, None) {
             Ok(()) => Ok(Pending { slab: self.slab.clone(), ticket, done: false }),
             Err(e) => {
                 // The request never reached a worker; recycle directly.
                 self.slab.release_unused(ticket);
-                Err(anyhow!("coordinator closed: {e:?}"))
+                Err(self.rejection(e, "request not accepted".to_string()))
             }
         }
     }
 
     /// Synchronous single-word convenience.
-    pub fn stem(&self, word: ArabicWord) -> Result<StemResult> {
-        self.submit(word)?.wait()
+    pub fn stem(&self, word: ArabicWord) -> Result<StemResult, ServeError> {
+        Ok(self.submit(word)?.wait().result)
+    }
+
+    /// Synchronous single-word analysis with options.
+    pub fn analyze(&self, word: ArabicWord, opts: EngineOpts) -> Result<Analysis, ServeError> {
+        Ok(self.submit_opts(word, opts)?.wait())
     }
 
     /// Bulk submission through the windowed core: submissions overlap
     /// execution and replies route through reusable slab slots — zero
     /// allocation per word, order preserved.
-    pub fn stem_bulk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-        self.stem_windowed(words)
+    pub fn stem_bulk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>, ServeError> {
+        Ok(self
+            .analyze_windowed(words, EngineOpts::default(), None)?
+            .into_iter()
+            .map(|a| a.result)
+            .collect())
     }
 
     /// Pipeline a whole slice through the coordinator, preserving order.
     /// Same windowed core as [`Handle::stem_bulk`] — the serving analog of
     /// the paper's pipelined processor keeping every stage busy.
-    pub fn stem_stream(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-        self.stem_windowed(words)
+    pub fn stem_stream(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>, ServeError> {
+        self.stem_bulk(words)
+    }
+
+    /// Bulk analysis under one options word (order preserved).
+    pub fn analyze_bulk(
+        &self,
+        words: &[ArabicWord],
+        opts: EngineOpts,
+    ) -> Result<Vec<Analysis>, ServeError> {
+        self.analyze_windowed(words, opts, None)
+    }
+
+    /// [`analyze_bulk`](Handle::analyze_bulk) with a per-word submission
+    /// deadline: if the request queue stays full past `submit_timeout`,
+    /// the call fails with the typed `QUEUE_FULL` error (already-accepted
+    /// replies are drained first). This is the overload-shedding entry
+    /// the AMA/1 protocol handler uses.
+    pub fn analyze_bulk_deadline(
+        &self,
+        words: &[ArabicWord],
+        opts: EngineOpts,
+        submit_timeout: Duration,
+    ) -> Result<Vec<Analysis>, ServeError> {
+        self.analyze_windowed(words, opts, Some(submit_timeout))
     }
 
     /// Windowed submit/collect: keep up to `window` tickets in flight;
     /// when the slab runs dry, reap our own oldest reply (guaranteed to be
     /// filled eventually, since it was accepted by the queue) instead of
     /// deadlocking on capacity we ourselves are holding.
-    fn stem_windowed(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+    fn analyze_windowed(
+        &self,
+        words: &[ArabicWord],
+        opts: EngineOpts,
+        submit_timeout: Option<Duration>,
+    ) -> Result<Vec<Analysis>, ServeError> {
         let window = (self.slab.capacity() / 2).max(1);
         let submitted = Instant::now();
-        let mut out: Vec<StemResult> = Vec::with_capacity(words.len());
+        let mut out: Vec<Analysis> = Vec::with_capacity(words.len());
         let mut inflight: VecDeque<u32> = VecDeque::with_capacity(window.min(words.len()));
         for &word in words {
             if inflight.len() >= window {
@@ -357,25 +513,28 @@ impl Handle {
                     }
                 }
             };
-            if let Err(e) = self.enqueue(word, submitted, ticket) {
+            let req = Request { word, submitted, ticket, opts };
+            if let Err(e) = self.enqueue(req, submit_timeout) {
                 self.slab.release_unused(ticket);
-                // Partial-submit fix: the queue closed mid-stream. Drain
-                // every already-accepted reply (workers drain the queue
-                // even after close) so nothing is left in flight, then
-                // report how far we got.
+                // Partial-submit: the queue closed (or stayed full past
+                // the deadline) mid-stream. Drain every already-accepted
+                // reply (workers drain the queue even after close) so
+                // nothing is left in flight, then report typed how far we
+                // got.
                 let accepted = out.len() + inflight.len();
                 for t in inflight.drain(..) {
                     if let Ok(r) = self.slab.wait_timeout(t, DRAIN_GRACE) {
                         out.push(r);
                     }
                 }
-                bail!(
-                    "coordinator closed mid-stream ({e:?}): {}/{} words accepted, \
-                     {} replies drained",
-                    accepted,
-                    words.len(),
-                    out.len()
-                );
+                return Err(self.rejection(
+                    e,
+                    format!(
+                        "mid-stream: {accepted}/{} words accepted, {} replies drained",
+                        words.len(),
+                        out.len()
+                    ),
+                ));
             }
             inflight.push_back(ticket);
         }
@@ -390,9 +549,12 @@ impl Handle {
 // Backend implementations
 // ---------------------------------------------------------------------------
 
-/// The software stemmer as a backend — the default. Batches go through
-/// the SoA fused kernel (`Stemmer::stem_batch`): dense-index encoding,
-/// AffixProfile candidate checks, direct-addressed dictionary bitsets.
+/// The software stemmer as a backend. Batches go through the SoA fused
+/// kernel (`Stemmer::stem_batch`): dense-index encoding, AffixProfile
+/// candidate checks, direct-addressed dictionary bitsets. Honors
+/// per-request infix/trace options through the `Analyzer` impl (the
+/// algorithm selector is ignored — this backend *is* the linguistic
+/// engine).
 pub struct SoftwareBackend(pub crate::stemmer::Stemmer);
 
 impl StemBackend for SoftwareBackend {
@@ -402,6 +564,15 @@ impl StemBackend for SoftwareBackend {
 
     fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
         Ok(self.0.stem_batch(words))
+    }
+
+    fn analyze_batch_opts(
+        &mut self,
+        words: &[ArabicWord],
+        opts: EngineOpts,
+    ) -> Result<Vec<Analysis>> {
+        use crate::analysis::Analyzer as _;
+        Ok(self.0.analyze_batch(words, &opts.to_options()))
     }
 }
 
@@ -450,9 +621,52 @@ impl StemBackend for XlaBackend {
     }
 }
 
+/// All four engines behind one backend (PR 3): the options word routes
+/// each batch group to its engine, making algorithm + infix + trace
+/// per-request serving parameters.
+pub struct RegistryBackend(pub AnalyzerRegistry);
+
+impl RegistryBackend {
+    pub fn new(roots: Arc<RootSet>) -> Self {
+        RegistryBackend(AnalyzerRegistry::new(roots))
+    }
+
+    pub fn with_config(roots: Arc<RootSet>, cfg: StemmerConfig) -> Self {
+        RegistryBackend(AnalyzerRegistry::with_config(roots, cfg))
+    }
+}
+
+impl StemBackend for RegistryBackend {
+    fn name(&self) -> &'static str {
+        "registry"
+    }
+
+    fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        use crate::analysis::Analyzer as _;
+        Ok(self.0.get(Algorithm::Linguistic).stem_batch(words))
+    }
+
+    fn analyze_batch_opts(
+        &mut self,
+        words: &[ArabicWord],
+        opts: EngineOpts,
+    ) -> Result<Vec<Analysis>> {
+        Ok(self.0.analyze_batch(words, &opts.to_options()))
+    }
+}
+
+/// Factory for [`RegistryBackend`] workers (the `--backend registry`
+/// serve default).
+pub fn registry_factory(roots: Arc<RootSet>, cfg: StemmerConfig) -> BackendFactory {
+    Box::new(move |_| Ok(Box::new(RegistryBackend::with_config(roots.clone(), cfg))))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analysis::AnalyzeOptions;
+    use crate::khoja::KhojaStemmer;
+    use crate::light::{LightStemmer, VotingAnalyzer};
     use crate::roots::RootSet;
     use crate::stemmer::{MatchKind, Stemmer};
 
@@ -571,11 +785,13 @@ mod tests {
         let c = Coordinator::start(CoordinatorConfig::default(), sw_factory());
         let h = c.handle();
         c.shutdown();
-        assert!(h.submit(ArabicWord::encode("درس")).is_err());
+        let err = h.submit(ArabicWord::encode("درس")).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Shutdown);
+        assert_eq!(h.metrics().snapshot().rejected_shutdown, 1);
     }
 
     /// Partial-submit fix: a bulk call against a closed coordinator fails
-    /// fast with a clean error — no hang, no stranded replies.
+    /// fast with a clean typed error — no hang, no stranded replies.
     #[test]
     fn bulk_after_shutdown_errors_without_hanging() {
         let c = Coordinator::start(CoordinatorConfig::default(), sw_factory());
@@ -583,6 +799,7 @@ mod tests {
         c.shutdown();
         let words: Vec<_> = (0..64).map(|_| ArabicWord::encode("يدرس")).collect();
         let err = h.stem_bulk(&words).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Shutdown);
         assert!(format!("{err:#}").contains("closed"), "{err:#}");
         // The slab is fully recycled: a fresh coordinator-sized burst of
         // tickets is still acquirable.
@@ -695,6 +912,147 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(c.metrics().snapshot().requests, 400);
+        c.shutdown();
+    }
+
+    // -- PR 3: per-request options through the registry ---------------------
+
+    fn registry_coordinator(cfg: CoordinatorConfig) -> (Coordinator, Arc<RootSet>) {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let c = Coordinator::start_registry(cfg, roots.clone(), StemmerConfig::default());
+        (c, roots)
+    }
+
+    fn opts_for(algo: Algorithm) -> EngineOpts {
+        EngineOpts::new(&AnalyzeOptions::with_algorithm(algo))
+    }
+
+    /// One coordinator answers all four algorithms concurrently, each
+    /// bit-identical to a direct call into the engine.
+    #[test]
+    fn registry_serves_all_four_algorithms() {
+        let (c, roots) = registry_coordinator(CoordinatorConfig {
+            workers: 2,
+            max_batch: 32,
+            ..Default::default()
+        });
+        let h = c.handle();
+        let vocab = ["يدرس", "قال", "دارس", "والدرس", "مدروس", "ظظظ"];
+        let words: Vec<ArabicWord> = vocab.iter().map(|s| ArabicWord::encode(s)).collect();
+
+        let lb = Stemmer::with_defaults(roots.clone());
+        let kh = KhojaStemmer::new(roots.clone());
+        let li = LightStemmer::new(roots.clone());
+        let vo = VotingAnalyzer::new(roots.clone());
+        let direct: [(Algorithm, Vec<StemResult>); 4] = [
+            (Algorithm::Linguistic, words.iter().map(|w| lb.stem(w)).collect()),
+            (Algorithm::Khoja, words.iter().map(|w| kh.stem(w)).collect()),
+            (Algorithm::Light, words.iter().map(|w| li.stem(w)).collect()),
+            (Algorithm::Voting, words.iter().map(|w| vo.stem(w)).collect()),
+        ];
+
+        // concurrent: one client thread per algorithm
+        let threads: Vec<_> = direct
+            .into_iter()
+            .map(|(algo, expected)| {
+                let h = c.handle();
+                let words = words.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        let got = h.analyze_bulk(&words, opts_for(algo)).unwrap();
+                        let got: Vec<StemResult> = got.into_iter().map(|a| a.result).collect();
+                        assert_eq!(got, expected, "{algo}");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        c.shutdown();
+    }
+
+    /// A single mixed-options stream (interleaved algorithms + infix
+    /// overrides) routes every word to the right engine.
+    #[test]
+    fn mixed_options_within_one_batch() {
+        let (c, roots) = registry_coordinator(CoordinatorConfig {
+            workers: 1,
+            max_batch: 64,
+            ..Default::default()
+        });
+        let h = c.handle();
+        let w = ArabicWord::encode("قال"); // the discriminating word
+        let kh = KhojaStemmer::new(roots.clone());
+        let lb = Stemmer::with_defaults(roots);
+
+        let infix_off = EngineOpts::new(&AnalyzeOptions {
+            infix: Some(false),
+            ..Default::default()
+        });
+        // Interleave submissions so one popped batch carries several
+        // option groups.
+        let pendings: Vec<(Pending, StemResult)> = (0..30)
+            .map(|i| match i % 3 {
+                0 => (h.submit_opts(w, EngineOpts::default()).unwrap(), lb.stem(&w)),
+                1 => (h.submit_opts(w, opts_for(Algorithm::Khoja)).unwrap(), kh.stem(&w)),
+                _ => (h.submit_opts(w, infix_off).unwrap(), StemResult::NONE),
+            })
+            .collect();
+        for (p, expected) in pendings {
+            assert_eq!(p.wait().result, expected);
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.requests, 30);
+        assert_eq!(snap.words, 30);
+        c.shutdown();
+    }
+
+    /// Traces ride through the coordinator when requested.
+    #[test]
+    fn trace_flows_through_coordinator() {
+        let (c, _) = registry_coordinator(CoordinatorConfig::default());
+        let h = c.handle();
+        let opts = EngineOpts::new(&AnalyzeOptions { want_trace: true, ..Default::default() });
+        let a = h.analyze(ArabicWord::encode("سيلعبون"), opts).unwrap();
+        let trace = a.trace.expect("trace requested");
+        assert_eq!(trace.stages.len(), 5);
+        // and absent when not requested
+        let a = h.analyze(ArabicWord::encode("سيلعبون"), EngineOpts::default()).unwrap();
+        assert!(a.trace.is_none());
+        c.shutdown();
+    }
+
+    /// A queue that stays full past the submission deadline sheds typed
+    /// QUEUE_FULL instead of blocking forever; accepted replies drain.
+    #[test]
+    fn queue_full_deadline_rejects_typed() {
+        struct Slow;
+        impl StemBackend for Slow {
+            fn name(&self) -> &'static str {
+                "slow"
+            }
+            fn stem_batch(&mut self, w: &[ArabicWord]) -> Result<Vec<StemResult>> {
+                std::thread::sleep(Duration::from_millis(600));
+                Ok(vec![StemResult::NONE; w.len()])
+            }
+        }
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                max_batch: 1,
+                queue_capacity: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            Box::new(|_| Ok(Box::new(Slow))),
+        );
+        let h = c.handle();
+        let words: Vec<_> = (0..4).map(|_| ArabicWord::encode("يدرس")).collect();
+        let err = h
+            .analyze_bulk_deadline(&words, EngineOpts::default(), Duration::from_millis(50))
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::QueueFull, "{err}");
+        assert!(h.metrics().snapshot().rejected_queue_full >= 1);
         c.shutdown();
     }
 }

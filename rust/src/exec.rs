@@ -82,6 +82,30 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Push with a deadline: blocks while full for at most `timeout`,
+    /// then hands the item back with `Timeout`. The primitive behind the
+    /// AMA/1 `QUEUE_FULL` rejection — a saturated server sheds typed
+    /// errors instead of wedging protocol handlers forever.
+    pub fn push_timeout(&self, item: T, timeout: Duration) -> Result<(), (T, QueueError)> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err((item, QueueError::Closed));
+            }
+            if g.queue.len() < self.capacity {
+                g.queue.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err((item, QueueError::Timeout));
+            }
+            g = self.not_full.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+
     /// Non-blocking push.
     pub fn try_push(&self, item: T) -> Result<(), (T, QueueError)> {
         let mut g = self.inner.lock().unwrap();
@@ -570,6 +594,25 @@ mod tests {
         assert_eq!(q.pop().unwrap(), 7);
         assert_eq!(q.pop(), Err(QueueError::Closed));
         assert_eq!(q.push(8), Err(QueueError::Closed));
+    }
+
+    #[test]
+    fn push_timeout_times_out_then_succeeds() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let r = q.push_timeout(2, Duration::from_millis(10));
+        assert!(matches!(r, Err((2, QueueError::Timeout))));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push_timeout(3, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop().unwrap(), 1);
+        t.join().unwrap().unwrap();
+        assert_eq!(q.pop().unwrap(), 3);
+        q.close();
+        assert!(matches!(
+            q.push_timeout(4, Duration::from_millis(5)),
+            Err((4, QueueError::Closed))
+        ));
     }
 
     #[test]

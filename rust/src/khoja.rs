@@ -170,10 +170,8 @@ impl KhojaStemmer {
             return StemResult::NONE;
         }
     }
-
-    pub fn stem_batch(&self, words: &[ArabicWord]) -> Vec<StemResult> {
-        words.iter().map(|w| self.stem(w)).collect()
-    }
+    // Batch form: provided by the `analysis::Analyzer` trait (the old
+    // copy-pasted per-engine loop collapsed onto its default method).
 }
 
 #[cfg(test)]

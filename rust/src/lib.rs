@@ -77,10 +77,50 @@
 //!   `ServiceMetrics::snapshot`; `ama loadtest` drives the real TCP
 //!   server from a client fleet in per-word vs pipelined mode and writes
 //!   the `BENCH_PR*.json` trajectory rows.
+//!
+//! ## API surface (PR 3)
+//!
+//! The public API is three layers deep; each layer's types map onto the
+//! one below:
+//!
+//! * **Engine layer** ([`analysis`]) — the object-safe
+//!   [`analysis::Analyzer`] trait (`analyze` / provided `analyze_batch` +
+//!   `stem_batch`) implemented by all four engines:
+//!   [`stemmer::Stemmer`] (linguistic), [`khoja::KhojaStemmer`],
+//!   [`light::LightStemmer`], and [`light::VotingAnalyzer`].
+//!   [`analysis::AnalyzeOptions`] carries per-request
+//!   [`analysis::Algorithm`], infix override, and trace flag;
+//!   [`analysis::Analysis`] supersedes the bare [`stemmer::StemResult`]
+//!   with algorithm/confidence/votes metadata and an optional five-stage
+//!   [`analysis::Trace`] (fetch → affix → candidate → compare →
+//!   write-back, the paper's pipeline vocabulary).
+//!   [`analysis::AnalyzerRegistry`] holds all four engines behind one
+//!   lookup.
+//! * **Routing layer** ([`coordinator`]) — every `Request` carries an
+//!   [`analysis::EngineOpts`] options word (the options packed into one
+//!   byte); workers partition each popped batch by that word and
+//!   dispatch through `StemBackend::analyze_batch_opts`, so a
+//!   [`coordinator::RegistryBackend`] serves all four algorithms from
+//!   one process (`Coordinator::start_registry`). The PR-2
+//!   ReplySlab/ticket machinery is unchanged — its payload grew from
+//!   `StemResult` to [`analysis::Analysis`]. Failures are typed
+//!   [`analysis::ServeError`]s ([`analysis::ErrorCode`]: `QUEUE_FULL`,
+//!   `SHUTDOWN`, `BAD_WORD`, …) counted in
+//!   [`metrics::ServiceMetrics`].
+//! * **Wire layer** ([`protocol`] + [`client`]) — the versioned `AMA/1`
+//!   JSON-lines protocol: [`protocol::Envelope`] `{v, id, op, words,
+//!   opts}` in, [`protocol::Reply`] `{id, results | error{code,msg}}`
+//!   out, negotiated by first-line sniffing in [`server`] (`{` opener ⇒
+//!   AMA/1; anything else ⇒ the legacy bare-line protocol, unchanged).
+//!   [`client::Client`] is the typed client used by `ama analyze
+//!   --connect`, `ama loadtest --proto ama1`, and the serving example.
+//!   Full spec: `docs/PROTOCOL.md`.
 
+pub mod analysis;
 pub mod bench;
 pub mod chars;
 pub mod cli;
+pub mod client;
 pub mod coordinator;
 pub mod corpus;
 pub mod eval;
@@ -89,6 +129,7 @@ pub mod hw;
 pub mod khoja;
 pub mod light;
 pub mod metrics;
+pub mod protocol;
 pub mod rng;
 pub mod report;
 pub mod roots;
@@ -96,5 +137,9 @@ pub mod runtime;
 pub mod server;
 pub mod stemmer;
 
+pub use analysis::{
+    Algorithm, Analysis, AnalyzeOptions, Analyzer, AnalyzerRegistry, EngineOpts, ErrorCode,
+    ServeError, Trace,
+};
 pub use chars::ArabicWord;
 pub use stemmer::{MatchKind, StemResult, Stemmer, StemmerConfig};

@@ -79,10 +79,8 @@ impl LightStemmer {
             _ => StemResult::NONE,
         }
     }
-
-    pub fn stem_batch(&self, words: &[ArabicWord]) -> Vec<StemResult> {
-        words.iter().map(|w| self.stem(w)).collect()
-    }
+    // Batch form: provided by the `analysis::Analyzer` trait (the old
+    // copy-pasted per-engine loop collapsed onto its default method).
 }
 
 /// Voting analyzer (Sawalha & Atwell 2008 style): run several analyzers,
@@ -94,17 +92,46 @@ pub struct VotingAnalyzer {
     light: LightStemmer,
 }
 
+/// The full outcome of one vote: the winning result, how many ballots
+/// agreed with it, and the raw per-engine ballots (LB, Khoja, light) —
+/// the metadata behind `Analysis::{votes, confidence}` and the voting
+/// engine's trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VoteDetail {
+    pub winner: StemResult,
+    /// Ballots agreeing with the winner (0 when nothing matched,
+    /// 1 for a priority fallback, 2–3 for a real majority).
+    pub agree: u8,
+    pub ballots: [StemResult; 3],
+}
+
 impl VotingAnalyzer {
     pub fn new(roots: Arc<RootSet>) -> Self {
+        Self::with_config(roots, crate::stemmer::StemmerConfig::default())
+    }
+
+    /// `cfg` configures the linguistic member's default infix behavior
+    /// (the other two engines have no infix concept).
+    pub fn with_config(roots: Arc<RootSet>, cfg: crate::stemmer::StemmerConfig) -> Self {
         VotingAnalyzer {
-            lb: Stemmer::with_defaults(roots.clone()),
+            lb: Stemmer::new(roots.clone(), cfg),
             khoja: crate::khoja::KhojaStemmer::new(roots.clone()),
             light: LightStemmer::new(roots),
         }
     }
 
     pub fn stem(&self, w: &ArabicWord) -> StemResult {
-        let votes = [self.lb.stem(w), self.khoja.stem(w), self.light.stem(w)];
+        self.stem_detail(w, None).winner
+    }
+
+    /// Vote with full ballot metadata. `infix` overrides the linguistic
+    /// member's configured default for this call (`None` = keep it).
+    pub fn stem_detail(&self, w: &ArabicWord, infix: Option<bool>) -> VoteDetail {
+        let lb_vote = match infix {
+            Some(i) if i != self.lb.config().infix_processing => self.lb.with_infix(i).stem(w),
+            _ => self.lb.stem(w),
+        };
+        let votes = [lb_vote, self.khoja.stem(w), self.light.stem(w)];
         // majority on the root field among non-NONE votes
         for i in 0..votes.len() {
             if votes[i].kind == MatchKind::None {
@@ -112,18 +139,14 @@ impl VotingAnalyzer {
             }
             let agree = votes.iter().filter(|v| v.root == votes[i].root).count();
             if agree >= 2 {
-                return votes[i];
+                return VoteDetail { winner: votes[i], agree: agree as u8, ballots: votes };
             }
         }
         // no majority: first non-NONE in priority order
-        votes
-            .into_iter()
-            .find(|v| v.kind != MatchKind::None)
-            .unwrap_or(StemResult::NONE)
-    }
-
-    pub fn stem_batch(&self, words: &[ArabicWord]) -> Vec<StemResult> {
-        words.iter().map(|w| self.stem(w)).collect()
+        match votes.into_iter().find(|v| v.kind != MatchKind::None) {
+            Some(winner) => VoteDetail { winner, agree: 1, ballots: votes },
+            None => VoteDetail { winner: StemResult::NONE, agree: 0, ballots: votes },
+        }
     }
 }
 

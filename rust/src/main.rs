@@ -1,10 +1,11 @@
 //! `ama` — the leader binary: CLI over the full stack (DESIGN.md §3).
 
+use ama::analysis::{Algorithm, AnalyzeOptions, Analyzer as _, AnalyzerRegistry};
 use ama::chars::ArabicWord;
 use ama::cli::{Args, USAGE};
 use ama::coordinator::{
-    BackendFactory, Coordinator, CoordinatorConfig, HwBackend, SoftwareBackend, StemBackend,
-    XlaBackend,
+    BackendFactory, Coordinator, CoordinatorConfig, HwBackend, RegistryBackend, SoftwareBackend,
+    StemBackend, XlaBackend,
 };
 use ama::corpus::{self, CorpusConfig};
 use ama::hw::{DatapathConfig, NonPipelinedProcessor, PipelinedProcessor};
@@ -89,6 +90,9 @@ fn backend_factory(
     let cfg = StemmerConfig { infix_processing: infix };
     let hw_cfg = DatapathConfig { infix_units: infix };
     Ok(match name {
+        "registry" => Box::new(move |_| {
+            Ok(Box::new(RegistryBackend::with_config(roots.clone(), cfg)))
+        }),
         "software" => Box::new(move |_| {
             Ok(Box::new(SoftwareBackend(Stemmer::new(roots.clone(), cfg))))
         }),
@@ -105,6 +109,9 @@ fn backend_factory(
             impl StemBackend for K {
                 fn name(&self) -> &'static str {
                     "khoja"
+                }
+                fn algorithm(&self) -> Algorithm {
+                    Algorithm::Khoja
                 }
                 fn stem_batch(
                     &mut self,
@@ -126,7 +133,9 @@ fn backend_factory(
                 .context("loading PJRT engine (run `make artifacts`?)")?;
             Ok(Box::new(XlaBackend(engine)))
         }),
-        other => bail!("unknown backend {other:?} (software|software-par|khoja|hw-np|hw-p|xla)"),
+        other => bail!(
+            "unknown backend {other:?} (registry|software|software-par|khoja|hw-np|hw-p|xla)"
+        ),
     })
 }
 
@@ -181,7 +190,68 @@ fn cmd_corpus(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ama analyze <words…>` — the unified analyzer API from the command
+/// line: any engine, per-request infix override, optional 5-stage trace,
+/// either locally (in-process registry) or against a running server over
+/// AMA/1 (`--connect host:port`).
+fn cmd_analyze_words(args: &Args) -> Result<()> {
+    let algorithm = match args.flag("--algo") {
+        None => Algorithm::Linguistic,
+        Some(name) => Algorithm::from_name(name)
+            .ok_or_else(|| anyhow!("unknown --algo {name:?} (linguistic|khoja|light|voting)"))?,
+    };
+    let opts = AnalyzeOptions {
+        algorithm,
+        infix: if args.switch("--no-infix") { Some(false) } else { None },
+        want_trace: args.switch("--trace"),
+    };
+    let words = &args.positionals[1..];
+
+    let print_result = |word: &str, r: &ama::protocol::WireResult| {
+        println!(
+            "{word}\t{}\t{:?}\tcut={}\talgo={}\tconfidence={:.2}\tvotes={}",
+            if r.root.is_empty() { "-" } else { &r.root },
+            r.kind,
+            r.cut,
+            r.algo,
+            r.confidence,
+            r.votes
+        );
+        if let Some(trace) = &r.trace {
+            for (stage, detail) in trace {
+                println!("    [{stage:>10}] {detail}");
+            }
+        }
+    };
+
+    if let Some(addr) = args.flag("--connect") {
+        use std::net::ToSocketAddrs as _;
+        let addr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("{addr} resolved to no address"))?;
+        let mut client = ama::client::Client::connect(addr)?;
+        let refs: Vec<&str> = words.iter().map(String::as_str).collect();
+        let results = client.analyze(&refs, &opts)?;
+        for (w, r) in words.iter().zip(&results) {
+            print_result(w, r);
+        }
+        return Ok(());
+    }
+
+    let registry = AnalyzerRegistry::new(load_roots(args)?);
+    for w in words {
+        let a = registry.analyze(&ArabicWord::encode(w), &opts);
+        print_result(w, &ama::protocol::WireResult::from_analysis(w, &a));
+    }
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
+    if args.positionals.len() > 1 {
+        return cmd_analyze_words(args);
+    }
     let roots = load_roots(args)?;
     let which = args.flag_or("--corpus", "quran");
     let c = match which {
@@ -315,8 +385,13 @@ fn cmd_report(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let roots = load_roots(args)?;
     let workers = args.flag_usize("--workers", 1).map_err(|e| anyhow!(e))?;
+    // Default backend is the PR-3 registry: one process answers
+    // per-request algorithm/infix/trace for all four engines, and the
+    // legacy bare-line protocol behaves exactly like the old `software`
+    // backend (default options select the linguistic engine).
+    let backend = args.flag_or("--backend", "registry");
     let factory = backend_factory(
-        args.flag_or("--backend", "software"),
+        backend,
         roots,
         !args.switch("--no-infix"),
         artifacts_dir(args),
@@ -338,7 +413,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let server =
         ama::server::Server::bind_with(&format!("127.0.0.1:{port}"), coord.handle(), srv_cfg)?;
-    println!("ama serving on {} ({} handlers)", server.local_addr()?, srv_cfg.handlers);
+    println!(
+        "ama serving on {} ({} handlers, backend {backend}; protocols: AMA/1 JSON-lines + legacy bare-line)",
+        server.local_addr()?,
+        srv_cfg.handlers
+    );
     server.serve_forever()?;
     coord.shutdown();
     Ok(())
@@ -352,7 +431,28 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let secs = args.flag_u64("--secs", 5).map_err(|e| anyhow!(e))?;
     let depth = args.flag_usize("--depth", 64).map_err(|e| anyhow!(e))?;
     let mode = args.flag_or("--mode", "both");
-    let backend = args.flag_or("--backend", "software-par");
+    let proto = args.flag_or("--proto", "line");
+    anyhow::ensure!(
+        matches!(proto, "line" | "ama1"),
+        "unknown proto {proto:?} (line|ama1)"
+    );
+    // AMA/1 load defaults to the registry backend so the fleet can
+    // exercise per-request algorithms; the legacy-line default keeps the
+    // BENCH_PR2 comparison backend.
+    let backend = args
+        .flag("--backend")
+        .unwrap_or(if proto == "ama1" { "registry" } else { "software-par" });
+    // AMA/1 fleet option sets: one --algo pins every connection; without
+    // it the fleet cycles all four algorithms across connections.
+    let opts_cycle: Vec<AnalyzeOptions> = match args.flag("--algo") {
+        Some(name) => vec![AnalyzeOptions::with_algorithm(
+            Algorithm::from_name(name).ok_or_else(|| anyhow!("unknown --algo {name:?}"))?,
+        )],
+        None if backend == "registry" => {
+            Algorithm::ALL.iter().map(|&a| AnalyzeOptions::with_algorithm(a)).collect()
+        }
+        None => vec![AnalyzeOptions::default()],
+    };
     let workers = args.flag_usize("--workers", 1).map_err(|e| anyhow!(e))?;
     let pr = args.flag_u64("--pr", 2).map_err(|e| anyhow!(e))?;
     let roots = load_roots(args)?;
@@ -390,9 +490,20 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         let srv = server.clone();
         let serve_thread = std::thread::spawn(move || srv.serve_forever());
 
-        println!("loadtest[{mode_name}]: {conns} conns × {secs}s against {addr} ({backend})…");
-        let outcome =
-            ama::bench::run_tcp_load(addr, conns, Duration::from_secs(secs), depth, &words);
+        println!(
+            "loadtest[{mode_name}/{proto}]: {conns} conns × {secs}s against {addr} ({backend})…"
+        );
+        let outcome = match proto {
+            "ama1" => ama::bench::run_ama1_load(
+                addr,
+                conns,
+                Duration::from_secs(secs),
+                depth,
+                &words,
+                &opts_cycle,
+            ),
+            _ => ama::bench::run_tcp_load(addr, conns, Duration::from_secs(secs), depth, &words),
+        };
         let snap = coord.metrics().snapshot();
         println!("  client: {outcome}");
         println!("  server: {snap}");
@@ -430,6 +541,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         json.push_str("{\n");
         json.push_str("  \"schema\": \"ama-loadtest-v1\",\n");
         json.push_str(&format!("  \"pr\": {pr},\n"));
+        json.push_str(&format!("  \"proto\": \"{proto}\",\n"));
         json.push_str(&format!("  \"backend\": \"{backend}\",\n"));
         json.push_str(&format!("  \"conns\": {conns},\n"));
         json.push_str(&format!("  \"secs\": {secs},\n"));

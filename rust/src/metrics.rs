@@ -114,6 +114,15 @@ pub struct ServiceMetrics {
     /// Saturation counter: submissions that found the reply slab exhausted
     /// (every reply slot in flight) and had to wait for capacity.
     pub slab_waits: AtomicU64,
+    /// Typed rejections (PR 3): requests answered with the protocol error
+    /// `QUEUE_FULL` (request queue stayed full past the submit deadline).
+    pub rejected_queue_full: AtomicU64,
+    /// Typed rejections: requests answered with `SHUTDOWN` (coordinator
+    /// closed before or during submission).
+    pub rejected_shutdown: AtomicU64,
+    /// Typed rejections: envelopes answered with `BAD_WORD` (empty or
+    /// non-Arabic word in an AMA/1 batch).
+    pub rejected_bad_word: AtomicU64,
     /// Histogram of request latency (submit → reply fill).
     latency: LatencyHistogram,
 }
@@ -154,6 +163,20 @@ impl ServiceMetrics {
         self.latency.percentile_us(q)
     }
 
+    /// Count a typed protocol rejection (`None` for codes without a
+    /// dedicated counter — they still show up in `errors` where counted
+    /// by the caller).
+    pub fn record_rejection(&self, code: crate::analysis::ErrorCode) {
+        use crate::analysis::ErrorCode;
+        match code {
+            ErrorCode::QueueFull => &self.rejected_queue_full,
+            ErrorCode::Shutdown => &self.rejected_shutdown,
+            ErrorCode::BadWord => &self.rejected_bad_word,
+            _ => return,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -162,6 +185,9 @@ impl ServiceMetrics {
             errors: self.errors.load(Ordering::Relaxed),
             queue_full_events: self.queue_full_events.load(Ordering::Relaxed),
             slab_waits: self.slab_waits.load(Ordering::Relaxed),
+            rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
+            rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
+            rejected_bad_word: self.rejected_bad_word.load(Ordering::Relaxed),
             mean_batch_size: self.mean_batch_size(),
             p50_us: self.latency.percentile_us(0.50),
             p90_us: self.latency.percentile_us(0.90),
@@ -178,6 +204,9 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub queue_full_events: u64,
     pub slab_waits: u64,
+    pub rejected_queue_full: u64,
+    pub rejected_shutdown: u64,
+    pub rejected_bad_word: u64,
     pub mean_batch_size: f64,
     pub p50_us: u64,
     pub p90_us: u64,
@@ -189,7 +218,8 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "requests={} words={} batches={} mean_batch={:.1} p50={}us p90={}us p99={}us \
-             queue_full={} slab_waits={} errors={}",
+             queue_full={} slab_waits={} errors={} \
+             rejected[queue_full={} shutdown={} bad_word={}]",
             self.requests,
             self.words,
             self.batches,
@@ -199,7 +229,10 @@ impl std::fmt::Display for MetricsSnapshot {
             self.p99_us,
             self.queue_full_events,
             self.slab_waits,
-            self.errors
+            self.errors,
+            self.rejected_queue_full,
+            self.rejected_shutdown,
+            self.rejected_bad_word
         )
     }
 }
@@ -256,6 +289,23 @@ mod tests {
         s.record_batch(30);
         assert_eq!(s.mean_batch_size(), 20.0);
         assert_eq!(s.snapshot().words, 40);
+    }
+
+    #[test]
+    fn rejection_counters_roundtrip() {
+        use crate::analysis::ErrorCode;
+        let s = ServiceMetrics::new();
+        s.record_rejection(ErrorCode::QueueFull);
+        s.record_rejection(ErrorCode::Shutdown);
+        s.record_rejection(ErrorCode::Shutdown);
+        s.record_rejection(ErrorCode::BadWord);
+        s.record_rejection(ErrorCode::Timeout); // no dedicated counter
+        let snap = s.snapshot();
+        assert_eq!(snap.rejected_queue_full, 1);
+        assert_eq!(snap.rejected_shutdown, 2);
+        assert_eq!(snap.rejected_bad_word, 1);
+        let line = format!("{snap}");
+        assert!(line.contains("rejected[queue_full=1 shutdown=2 bad_word=1]"), "{line}");
     }
 
     #[test]

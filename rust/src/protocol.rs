@@ -1,0 +1,860 @@
+//! AMA/1 — the versioned JSON-lines wire protocol (PR 3).
+//!
+//! One request (an [`Envelope`]) per line in, one [`Reply`] line out,
+//! UTF-8 JSON both ways. The server negotiates by *first-line sniffing*
+//! (`server.rs`): a connection whose first line starts with `{` speaks
+//! AMA/1; anything else is the legacy bare-line protocol, byte-for-byte
+//! unchanged — `nc` sessions keep working against the same port.
+//!
+//! ```text
+//! → {"v":1,"id":7,"op":"analyze","words":["سيلعبون"],"opts":{"algo":"khoja"}}
+//! ← {"id":7,"results":[{"word":"سيلعبون","root":"","kind":0,"cut":0,
+//!                       "algo":"khoja","confidence":0,"votes":0}]}
+//! ← {"id":7,"error":{"code":"QUEUE_FULL","msg":"…"}}   (failure shape)
+//! ```
+//!
+//! The JSON reader/writer is hand-rolled (like the vendored `anyhow`
+//! shim) so the crate stays offline-buildable; it supports exactly the
+//! JSON this protocol needs — objects, arrays, strings with full escape
+//! handling (including `\uXXXX` surrogate pairs), numbers, booleans,
+//! null. The full framing/ops/error-code specification lives in
+//! `docs/PROTOCOL.md`; the machine-readable error codes are
+//! [`crate::analysis::ErrorCode`].
+
+use crate::analysis::{Algorithm, Analysis, AnalyzeOptions, EngineOpts, ErrorCode, ServeError};
+use crate::chars::ArabicWord;
+use crate::coordinator::Handle;
+use crate::stemmer::MatchKind;
+use std::time::Duration;
+
+/// The one protocol version this build speaks (`v` in envelopes).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Hard cap on one frame (line) — oversized frames are rejected with
+/// `BAD_REQUEST` and the connection is closed (the peer is broken or
+/// hostile).
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Hard cap on `words` per envelope (larger batches should pipeline
+/// multiple envelopes; the cap bounds per-request memory).
+pub const MAX_WORDS_PER_ENVELOPE: usize = 4096;
+
+/// How long an envelope's words may wait for queue admission before the
+/// server sheds the request with `QUEUE_FULL`.
+pub const SUBMIT_DEADLINE: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value + parser + writer
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value (object keys keep insertion order; duplicate keys
+/// keep the last occurrence on lookup, like serde_json's map behavior).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get<'a>(&'a self, key: &str) -> Option<&'a Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.007_199_254_740_992e15 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document; trailing non-whitespace is an error.
+pub fn json_parse(s: &str) -> Result<Json, String> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing bytes at offset {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at offset {}", c as char, self.i))
+        }
+    }
+
+    fn eat_word(&mut self, w: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(w.as_bytes()) {
+            self.i += w.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at offset {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.eat_word("true", Json::Bool(true)),
+            Some(b'f') => self.eat_word("false", Json::Bool(false)),
+            Some(b'n') => self.eat_word("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected byte {:?} at offset {}", c as char, self.i)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut pairs = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".to_string());
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| "non-ASCII in \\u escape".to_string())?;
+        let v = u16::from_str_radix(s, 16).map_err(|_| format!("bad \\u escape {s:?}"))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        let mut run = self.i; // start of the current literal byte run
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    out.push_str(
+                        std::str::from_utf8(&self.b[run..self.i]).map_err(|e| e.to_string())?,
+                    );
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    out.push_str(
+                        std::str::from_utf8(&self.b[run..self.i]).map_err(|e| e.to_string())?,
+                    );
+                    self.i += 1;
+                    let esc = self.peek().ok_or("truncated escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let c = if (0xD800..=0xDBFF).contains(&hi) {
+                                // surrogate pair: require \uXXXX low half
+                                if self.peek() != Some(b'\\') {
+                                    return Err("lone high surrogate".to_string());
+                                }
+                                self.i += 1;
+                                if self.peek() != Some(b'u') {
+                                    return Err("lone high surrogate".to_string());
+                                }
+                                self.i += 1;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    return Err("invalid low surrogate".to_string());
+                                }
+                                let cp = 0x10000
+                                    + ((u32::from(hi) - 0xD800) << 10)
+                                    + (u32::from(lo) - 0xDC00);
+                                char::from_u32(cp).ok_or("invalid surrogate pair")?
+                            } else if (0xDC00..=0xDFFF).contains(&hi) {
+                                return Err("lone low surrogate".to_string());
+                            } else {
+                                char::from_u32(u32::from(hi)).ok_or("invalid \\u codepoint")?
+                            };
+                            out.push(c);
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                    run = self.i;
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(format!("raw control byte {c:#x} in string"));
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        let n: f64 = s.parse().map_err(|_| format!("bad number {s:?}"))?;
+        if !n.is_finite() {
+            return Err(format!("non-finite number {s:?}"));
+        }
+        Ok(Json::Num(n))
+    }
+}
+
+/// Append `s` to `out` as a JSON string literal (with quotes). Non-ASCII
+/// passes through as raw UTF-8 — valid JSON and what Arabic payloads
+/// want.
+pub fn json_push_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ---------------------------------------------------------------------------
+// Envelope (request)
+// ---------------------------------------------------------------------------
+
+/// One AMA/1 request frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Envelope {
+    /// Client-chosen correlation id, echoed verbatim in the reply.
+    pub id: u64,
+    /// Operation: `"analyze"` or `"ping"`.
+    pub op: String,
+    /// Words to analyze (`analyze` op).
+    pub words: Vec<String>,
+    pub opts: AnalyzeOptions,
+}
+
+impl Envelope {
+    pub fn analyze(id: u64, words: Vec<String>, opts: AnalyzeOptions) -> Envelope {
+        Envelope { id, op: "analyze".to_string(), words, opts }
+    }
+
+    /// Serialize as one JSON line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.words.iter().map(|w| w.len() + 3).sum::<usize>());
+        out.push_str("{\"v\":1,\"id\":");
+        out.push_str(&self.id.to_string());
+        out.push_str(",\"op\":");
+        json_push_str(&mut out, &self.op);
+        out.push_str(",\"words\":[");
+        for (i, w) in self.words.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json_push_str(&mut out, w);
+        }
+        out.push_str("],\"opts\":{\"algo\":");
+        json_push_str(&mut out, self.opts.algorithm.as_str());
+        if let Some(infix) = self.opts.infix {
+            out.push_str(",\"infix\":");
+            out.push_str(if infix { "true" } else { "false" });
+        }
+        if self.opts.want_trace {
+            out.push_str(",\"trace\":true");
+        }
+        out.push_str("}}");
+        out
+    }
+
+    /// Parse one request line. On failure returns the best-effort
+    /// correlation id (0 when unrecoverable) so the error reply can still
+    /// be matched by the client.
+    pub fn parse(line: &str) -> Result<Envelope, (u64, ServeError)> {
+        let bad = |id: u64, msg: String| (id, ServeError::new(ErrorCode::BadRequest, msg));
+        let doc = json_parse(line).map_err(|e| bad(0, format!("malformed JSON: {e}")))?;
+        if !matches!(doc, Json::Obj(_)) {
+            return Err(bad(0, "frame is not a JSON object".to_string()));
+        }
+        let id = doc.get("id").and_then(Json::as_u64).unwrap_or(0);
+        if doc.get("id").is_some() && doc.get("id").and_then(Json::as_u64).is_none() {
+            return Err(bad(0, "id must be a non-negative integer".to_string()));
+        }
+        if let Some(v) = doc.get("v") {
+            match v.as_u64() {
+                Some(PROTOCOL_VERSION) => {}
+                Some(other) => {
+                    return Err((
+                        id,
+                        ServeError::new(
+                            ErrorCode::BadVersion,
+                            format!("protocol version {other} not supported (this is AMA/{PROTOCOL_VERSION})"),
+                        ),
+                    ))
+                }
+                None => return Err(bad(id, "v must be an integer".to_string())),
+            }
+        }
+        let op = match doc.get("op").and_then(Json::as_str) {
+            Some(op) => op.to_string(),
+            None => return Err(bad(id, "missing or non-string op".to_string())),
+        };
+        let mut words = Vec::new();
+        if let Some(w) = doc.get("words") {
+            let arr = w
+                .as_arr()
+                .ok_or_else(|| bad(id, "words must be an array of strings".to_string()))?;
+            words.reserve(arr.len());
+            for item in arr {
+                match item.as_str() {
+                    Some(s) => words.push(s.to_string()),
+                    None => return Err(bad(id, "words must be an array of strings".to_string())),
+                }
+            }
+        }
+        let mut opts = AnalyzeOptions::default();
+        if let Some(o) = doc.get("opts") {
+            if !matches!(o, Json::Obj(_)) {
+                return Err(bad(id, "opts must be an object".to_string()));
+            }
+            if let Some(algo) = o.get("algo") {
+                let name = algo
+                    .as_str()
+                    .ok_or_else(|| bad(id, "opts.algo must be a string".to_string()))?;
+                opts.algorithm = Algorithm::from_name(name).ok_or_else(|| {
+                    bad(
+                        id,
+                        format!("unknown algorithm {name:?} (linguistic|khoja|light|voting)"),
+                    )
+                })?;
+            }
+            if let Some(infix) = o.get("infix") {
+                opts.infix = Some(
+                    infix
+                        .as_bool()
+                        .ok_or_else(|| bad(id, "opts.infix must be a boolean".to_string()))?,
+                );
+            }
+            if let Some(trace) = o.get("trace") {
+                opts.want_trace = trace
+                    .as_bool()
+                    .ok_or_else(|| bad(id, "opts.trace must be a boolean".to_string()))?;
+            }
+        }
+        Ok(Envelope { id, op, words, opts })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reply
+// ---------------------------------------------------------------------------
+
+/// One analyzed word as it crosses the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResult {
+    /// The word as submitted (echo — lets pipelining clients re-associate).
+    pub word: String,
+    /// Extracted root (empty string when `kind == None`).
+    pub root: String,
+    pub kind: MatchKind,
+    pub cut: u8,
+    pub algo: Algorithm,
+    pub confidence: f32,
+    pub votes: u8,
+    /// `(stage, detail)` pairs, present only when the envelope asked for
+    /// a trace.
+    pub trace: Option<Vec<(String, String)>>,
+}
+
+impl WireResult {
+    pub fn from_analysis(word: &str, a: &Analysis) -> WireResult {
+        WireResult {
+            word: word.to_string(),
+            root: if a.result.kind == MatchKind::None {
+                String::new()
+            } else {
+                a.result.root_word().to_string_ar()
+            },
+            kind: a.result.kind,
+            cut: a.result.cut,
+            algo: a.algorithm,
+            confidence: a.confidence,
+            votes: a.votes,
+            trace: a.trace.as_ref().map(|t| {
+                t.stages.iter().map(|s| (s.stage.to_string(), s.detail.clone())).collect()
+            }),
+        }
+    }
+}
+
+/// One AMA/1 reply frame: either results or a typed error, never both.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    Results { id: u64, results: Vec<WireResult> },
+    Error { id: u64, error: ServeError },
+}
+
+impl Reply {
+    pub fn id(&self) -> u64 {
+        match self {
+            Reply::Results { id, .. } | Reply::Error { id, .. } => *id,
+        }
+    }
+
+    /// Serialize as one JSON line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(128);
+        match self {
+            Reply::Results { id, results } => {
+                out.push_str("{\"id\":");
+                out.push_str(&id.to_string());
+                out.push_str(",\"results\":[");
+                for (i, r) in results.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str("{\"word\":");
+                    json_push_str(&mut out, &r.word);
+                    out.push_str(",\"root\":");
+                    json_push_str(&mut out, &r.root);
+                    out.push_str(&format!(
+                        ",\"kind\":{},\"cut\":{},\"algo\":",
+                        r.kind as u8, r.cut
+                    ));
+                    json_push_str(&mut out, r.algo.as_str());
+                    out.push_str(&format!(
+                        ",\"confidence\":{:.4},\"votes\":{}",
+                        r.confidence, r.votes
+                    ));
+                    if let Some(trace) = &r.trace {
+                        out.push_str(",\"trace\":[");
+                        for (j, (stage, detail)) in trace.iter().enumerate() {
+                            if j > 0 {
+                                out.push(',');
+                            }
+                            out.push_str("{\"stage\":");
+                            json_push_str(&mut out, stage);
+                            out.push_str(",\"detail\":");
+                            json_push_str(&mut out, detail);
+                            out.push('}');
+                        }
+                        out.push(']');
+                    }
+                    out.push('}');
+                }
+                out.push_str("]}");
+            }
+            Reply::Error { id, error } => {
+                out.push_str("{\"id\":");
+                out.push_str(&id.to_string());
+                out.push_str(",\"error\":{\"code\":");
+                json_push_str(&mut out, error.code.as_str());
+                out.push_str(",\"msg\":");
+                json_push_str(&mut out, &error.msg);
+                out.push_str("}}");
+            }
+        }
+        out
+    }
+
+    /// Parse a reply line (the client half).
+    pub fn parse(line: &str) -> Result<Reply, String> {
+        let doc = json_parse(line)?;
+        let id = doc.get("id").and_then(Json::as_u64).ok_or("reply missing id")?;
+        if let Some(err) = doc.get("error") {
+            let code_str = err.get("code").and_then(Json::as_str).ok_or("error missing code")?;
+            let code = ErrorCode::from_name(code_str)
+                .ok_or_else(|| format!("unknown error code {code_str:?}"))?;
+            let msg = err.get("msg").and_then(Json::as_str).unwrap_or("").to_string();
+            return Ok(Reply::Error { id, error: ServeError::new(code, msg) });
+        }
+        let arr = doc
+            .get("results")
+            .and_then(Json::as_arr)
+            .ok_or("reply has neither results nor error")?;
+        let mut results = Vec::with_capacity(arr.len());
+        for item in arr {
+            let get_str = |k: &str| -> Result<String, String> {
+                item.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("result missing string field {k:?}"))
+            };
+            let kind = item
+                .get("kind")
+                .and_then(Json::as_u64)
+                .ok_or("result missing kind")? as u8;
+            let cut =
+                item.get("cut").and_then(Json::as_u64).ok_or("result missing cut")? as u8;
+            let algo_name = get_str("algo")?;
+            let algo = Algorithm::from_name(&algo_name)
+                .ok_or_else(|| format!("unknown algo {algo_name:?}"))?;
+            let confidence =
+                item.get("confidence").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+            let votes = item.get("votes").and_then(Json::as_u64).unwrap_or(0) as u8;
+            let trace = match item.get("trace") {
+                None => None,
+                Some(t) => {
+                    let entries = t.as_arr().ok_or("trace must be an array")?;
+                    let mut out = Vec::with_capacity(entries.len());
+                    for e in entries {
+                        let stage = e
+                            .get("stage")
+                            .and_then(Json::as_str)
+                            .ok_or("trace entry missing stage")?;
+                        let detail = e
+                            .get("detail")
+                            .and_then(Json::as_str)
+                            .ok_or("trace entry missing detail")?;
+                        out.push((stage.to_string(), detail.to_string()));
+                    }
+                    Some(out)
+                }
+            };
+            results.push(WireResult {
+                word: get_str("word")?,
+                root: get_str("root")?,
+                kind: MatchKind::from_u8(kind),
+                cut,
+                algo,
+                confidence,
+                votes,
+                trace,
+            });
+        }
+        Ok(Reply::Results { id, results })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server-side dispatch
+// ---------------------------------------------------------------------------
+
+fn error_reply(id: u64, error: ServeError) -> String {
+    Reply::Error { id, error }.to_json()
+}
+
+/// Handle one AMA/1 request line end to end: parse, validate, route
+/// through the coordinator, serialize the reply. Always returns exactly
+/// one reply line (no trailing newline) — errors travel in-band as
+/// `{"id":…,"error":{…}}` frames. Pure over `line` + coordinator state,
+/// which is what the protocol tests drive without a socket.
+pub fn serve_envelope(line: &str, handle: &Handle) -> String {
+    let env = match Envelope::parse(line) {
+        Ok(env) => env,
+        Err((id, e)) => return error_reply(id, e),
+    };
+    match env.op.as_str() {
+        "ping" => Reply::Results { id: env.id, results: Vec::new() }.to_json(),
+        "analyze" => serve_analyze(&env, handle),
+        other => error_reply(
+            env.id,
+            ServeError::new(ErrorCode::UnknownOp, format!("unknown op {other:?} (analyze|ping)")),
+        ),
+    }
+}
+
+fn serve_analyze(env: &Envelope, handle: &Handle) -> String {
+    if env.words.len() > MAX_WORDS_PER_ENVELOPE {
+        return error_reply(
+            env.id,
+            ServeError::new(
+                ErrorCode::BadRequest,
+                format!(
+                    "{} words exceeds the per-envelope cap of {MAX_WORDS_PER_ENVELOPE}; \
+                     pipeline multiple envelopes instead",
+                    env.words.len()
+                ),
+            ),
+        );
+    }
+    // BAD_WORD validation: the typed protocol rejects words the engines
+    // could only ever answer NONE for structural reasons (empty, or no
+    // Arabic letters at all after normalization). The legacy line
+    // protocol keeps its permissive NONE-reply behavior.
+    let mut encoded = Vec::with_capacity(env.words.len());
+    for (i, w) in env.words.iter().enumerate() {
+        let enc = ArabicWord::encode(w);
+        if enc.len == 0 {
+            handle.metrics().record_rejection(ErrorCode::BadWord);
+            return error_reply(
+                env.id,
+                ServeError::new(
+                    ErrorCode::BadWord,
+                    format!("words[{i}] ({w:?}) is empty or contains no Arabic letters"),
+                ),
+            );
+        }
+        encoded.push(enc);
+    }
+    let opts = EngineOpts::new(&env.opts);
+    match handle.analyze_bulk_deadline(&encoded, opts, SUBMIT_DEADLINE) {
+        Ok(analyses) => {
+            let results = env
+                .words
+                .iter()
+                .zip(&analyses)
+                .map(|(w, a)| WireResult::from_analysis(w, a))
+                .collect();
+            Reply::Results { id: env.id, results }.to_json()
+        }
+        Err(e) => error_reply(env.id, e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_value_roundtrips() {
+        let doc = r#"{"a":1,"b":-2.5,"c":"x\nyل","d":[true,false,null],"e":{}}"#;
+        let v = json_parse(doc).unwrap();
+        assert_eq!(v.get("a").and_then(Json::as_u64), Some(1));
+        assert_eq!(v.get("b").and_then(Json::as_f64), Some(-2.5));
+        assert_eq!(v.get("c").and_then(Json::as_str), Some("x\nyل"));
+        assert_eq!(v.get("d").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
+        assert!(matches!(v.get("e"), Some(Json::Obj(p)) if p.is_empty()));
+    }
+
+    #[test]
+    fn json_surrogate_pairs_decode() {
+        let v = json_parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+        assert!(json_parse(r#""\ud83d""#).is_err(), "lone high surrogate");
+        assert!(json_parse(r#""\ude00""#).is_err(), "lone low surrogate");
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        for bad in [
+            "",
+            "{",
+            "}",
+            "{\"a\":}",
+            "{\"a\":1,}",
+            "[1,2",
+            "\"unterminated",
+            "{\"a\" 1}",
+            "nul",
+            "01x",
+            "{\"a\":1}trailing",
+            "\"\u{0007}\"", // raw control byte inside a string
+        ] {
+            assert!(json_parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn escape_roundtrip() {
+        for s in ["", "plain", "q\"b\\s", "new\nline\ttab\r", "عربى", "\u{0001}\u{001f}"] {
+            let mut enc = String::new();
+            json_push_str(&mut enc, s);
+            let back = json_parse(&enc).unwrap();
+            assert_eq!(back.as_str(), Some(s), "{enc}");
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrip() {
+        let env = Envelope::analyze(
+            42,
+            vec!["سيلعبون".to_string(), "قال".to_string()],
+            AnalyzeOptions {
+                algorithm: Algorithm::Khoja,
+                infix: Some(false),
+                want_trace: true,
+            },
+        );
+        let line = env.to_json();
+        assert_eq!(Envelope::parse(&line).unwrap(), env);
+    }
+
+    #[test]
+    fn envelope_defaults_and_optional_fields() {
+        let env = Envelope::parse(r#"{"id":1,"op":"analyze","words":["درس"]}"#).unwrap();
+        assert_eq!(env.opts, AnalyzeOptions::default());
+        // missing id defaults to 0 (documented), missing words to empty
+        let env = Envelope::parse(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(env.id, 0);
+        assert!(env.words.is_empty());
+    }
+
+    #[test]
+    fn envelope_malformed_frames_get_typed_codes() {
+        let code = |line: &str| Envelope::parse(line).unwrap_err().1.code;
+        assert_eq!(code("not json at all"), ErrorCode::BadRequest);
+        assert_eq!(code("[1,2,3]"), ErrorCode::BadRequest);
+        assert_eq!(code(r#"{"id":7}"#), ErrorCode::BadRequest); // no op
+        assert_eq!(code(r#"{"id":7,"op":5}"#), ErrorCode::BadRequest);
+        assert_eq!(code(r#"{"id":7,"op":"analyze","words":"x"}"#), ErrorCode::BadRequest);
+        assert_eq!(code(r#"{"id":7,"op":"analyze","words":[5]}"#), ErrorCode::BadRequest);
+        assert_eq!(
+            code(r#"{"id":7,"op":"analyze","opts":{"algo":"nope"}}"#),
+            ErrorCode::BadRequest
+        );
+        assert_eq!(
+            code(r#"{"id":7,"op":"analyze","opts":{"infix":"yes"}}"#),
+            ErrorCode::BadRequest
+        );
+        assert_eq!(code(r#"{"v":2,"id":7,"op":"analyze"}"#), ErrorCode::BadVersion);
+        // the id is still recovered for error correlation
+        let (id, e) = Envelope::parse(r#"{"v":9,"id":31,"op":"analyze"}"#).unwrap_err();
+        assert_eq!((id, e.code), (31, ErrorCode::BadVersion));
+    }
+
+    #[test]
+    fn reply_roundtrip_with_error_and_trace() {
+        let reply = Reply::Results {
+            id: 9,
+            results: vec![WireResult {
+                word: "سيلعبون".to_string(),
+                root: "لعب".to_string(),
+                kind: MatchKind::Tri,
+                cut: 2,
+                algo: Algorithm::Voting,
+                confidence: 0.6667,
+                votes: 2,
+                trace: Some(vec![("fetch".to_string(), "len=7".to_string())]),
+            }],
+        };
+        let back = Reply::parse(&reply.to_json()).unwrap();
+        assert_eq!(back, reply);
+
+        let err = Reply::Error {
+            id: 3,
+            error: ServeError::new(ErrorCode::QueueFull, "queue stayed full"),
+        };
+        assert_eq!(Reply::parse(&err.to_json()).unwrap(), err);
+    }
+}

@@ -1,6 +1,7 @@
 //! Report generation: regenerates every table and figure of the paper's
 //! evaluation from this implementation (experiment index in DESIGN.md §4).
 
+use crate::analysis::Analyzer as _; // engines' batch form is a trait method
 use crate::chars::ArabicWord;
 use crate::coordinator::StemBackend;
 use crate::corpus::{self, Corpus, CorpusConfig};

@@ -1,6 +1,7 @@
-//! TCP line-protocol stemming service on top of the coordinator.
+//! TCP stemming service on top of the coordinator: two wire protocols on
+//! one port, negotiated by first-line sniffing.
 //!
-//! ## Protocol
+//! ## Legacy line protocol
 //!
 //! One UTF-8 Arabic word per line in; one tab-separated reply line out:
 //! `word<TAB>root<TAB>kind<TAB>cut`, replies in request order. An empty
@@ -17,6 +18,17 @@
 //! dynamic batcher, and the outermost stage of the paper's pipeline
 //! organization (fetch many words per "clock" instead of one).
 //!
+//! ## AMA/1 (PR 3)
+//!
+//! A connection whose **first line starts with `{`** speaks the versioned
+//! JSON-lines protocol of [`crate::protocol`]: each line is one
+//! `Envelope` (id, op, words, per-request algorithm/infix/trace options)
+//! answered by exactly one `Reply` line — results or a typed error
+//! (`QUEUE_FULL`, `BAD_WORD`, …), never a silent drop. Envelopes are
+//! already batches, so the handler needs no cross-line folding; clients
+//! may still pipeline envelopes back-to-back. An empty line or EOF closes
+//! the connection, exactly like the legacy mode. See `docs/PROTOCOL.md`.
+//!
 //! ## Threading
 //!
 //! Accepted connections are pushed onto a bounded queue and served by a
@@ -32,7 +44,7 @@ use crate::chars::ArabicWord;
 use crate::coordinator::Handle;
 use crate::exec::{BoundedQueue, QueueError};
 use anyhow::Result;
-use std::io::{self, BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -199,6 +211,17 @@ impl Server {
     }
 }
 
+/// Which wire protocol a connection speaks — decided by its first line.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ConnMode {
+    /// Nothing read yet.
+    Unknown,
+    /// Bare words, tab-separated replies (the `nc` protocol).
+    Legacy,
+    /// JSON-lines envelopes (`crate::protocol`).
+    Ama1,
+}
+
 /// Serve one connection until EOF, an empty line, or server stop.
 fn handle_conn(
     stream: TcpStream,
@@ -217,6 +240,7 @@ fn handle_conn(
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::with_capacity(64);
+    let mut mode = ConnMode::Unknown;
     // Batch state, all reused across read cycles: words are stored as
     // spans into one contiguous text buffer — no per-word allocation on
     // the steady-state path.
@@ -232,15 +256,39 @@ fn handle_conn(
         }
         // Wait (poll-blocking) for the next line. On a timeout tick any
         // partial bytes stay accumulated in `buf` (read_until appends).
+        // Accumulation is capped at MAX_FRAME_BYTES *inside* the loop via
+        // `Read::take` — a peer streaming bytes without a newline cannot
+        // grow `buf` without bound.
         buf.clear();
         let mut eof = false;
+        let mut oversized = false;
         loop {
-            match reader.read_until(b'\n', &mut buf) {
+            let room =
+                (crate::protocol::MAX_FRAME_BYTES + 1).saturating_sub(buf.len()) as u64;
+            if room == 0 {
+                oversized = true;
+                break;
+            }
+            let mut limited = (&mut reader).take(room);
+            match limited.read_until(b'\n', &mut buf) {
                 Ok(0) => {
                     eof = true;
                     break;
                 }
-                Ok(_) => break,
+                Ok(_) => {
+                    if buf.last() == Some(&b'\n') {
+                        break; // complete line
+                    }
+                    // read_until stopped without a newline: either the
+                    // take-limit was exhausted (frame too big) or EOF
+                    // landed mid-line.
+                    if buf.len() > crate::protocol::MAX_FRAME_BYTES {
+                        oversized = true;
+                    } else {
+                        eof = true;
+                    }
+                    break;
+                }
                 Err(e)
                     if e.kind() == io::ErrorKind::WouldBlock
                         || e.kind() == io::ErrorKind::TimedOut =>
@@ -252,8 +300,47 @@ fn handle_conn(
                 Err(e) => return Err(e.into()),
             }
         }
+        if oversized {
+            // Never a valid frame in either protocol. Answer typed when
+            // the peer speaks (or might speak) AMA/1, then hang up.
+            if mode == ConnMode::Ama1
+                || (mode == ConnMode::Unknown && buf.first() == Some(&b'{'))
+            {
+                let reply = crate::protocol::Reply::Error {
+                    id: 0,
+                    error: crate::analysis::ServeError::new(
+                        crate::analysis::ErrorCode::BadRequest,
+                        format!("frame exceeds {} bytes", crate::protocol::MAX_FRAME_BYTES),
+                    ),
+                }
+                .to_json();
+                writer.write_all(reply.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            return Ok(());
+        }
         if eof && buf.is_empty() {
             return Ok(()); // clean EOF between requests
+        }
+        // First-line sniffing: a `{` opener selects AMA/1 for the whole
+        // connection; anything else is the legacy bare-line protocol.
+        if mode == ConnMode::Unknown {
+            let first_visible = buf.iter().copied().find(|b| !b.is_ascii_whitespace());
+            mode = if first_visible == Some(b'{') { ConnMode::Ama1 } else { ConnMode::Legacy };
+        }
+        if mode == ConnMode::Ama1 {
+            let line = String::from_utf8_lossy(&buf);
+            let line = line.trim();
+            if line.is_empty() {
+                return Ok(()); // empty line closes, like legacy
+            }
+            let mut reply = crate::protocol::serve_envelope(line, handle);
+            reply.push('\n');
+            writer.write_all(reply.as_bytes())?;
+            if eof {
+                return Ok(());
+            }
+            continue;
         }
         batch_text.clear();
         spans.clear();
@@ -395,6 +482,62 @@ mod tests {
             assert_eq!(&echoed, w, "reply out of order: {line}");
         }
         conn.write_all(b"\n").unwrap();
+
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr);
+        t.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    /// First-line sniffing: an AMA/1 connection and a legacy `nc`-style
+    /// connection are served concurrently by one server on one port.
+    #[test]
+    fn ama1_sniffing_next_to_legacy_lines() {
+        use crate::analysis::{Algorithm, AnalyzeOptions};
+        use crate::stemmer::StemmerConfig;
+        let roots = Arc::new(RootSet::builtin_mini());
+        let coord = Coordinator::start_registry(
+            CoordinatorConfig::default(),
+            roots,
+            StemmerConfig::default(),
+        );
+        let server = Server::bind("127.0.0.1:0", coord.handle()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_flag();
+        let t = std::thread::spawn(move || server.serve_forever());
+
+        // AMA/1 connection: per-request algorithm honored.
+        let mut client = crate::client::Client::connect(addr).unwrap();
+        client.ping().unwrap();
+        let res = client
+            .analyze(&["دارس"], &AnalyzeOptions::with_algorithm(Algorithm::Khoja))
+            .unwrap();
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].algo, Algorithm::Khoja);
+        assert_eq!(res[0].root, "درس");
+
+        // Legacy connection, same port, same reply format as ever.
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all("سيلعبون\n".as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "سيلعبون\tلعب\t1\t2\n");
+        conn.write_all(b"\n").unwrap();
+
+        // Malformed AMA/1 keeps the connection alive with a typed error.
+        let err = client
+            .analyze(&["hello"], &AnalyzeOptions::default())
+            .unwrap_err();
+        match err {
+            crate::client::ClientError::Remote(e) => {
+                assert_eq!(e.code, crate::analysis::ErrorCode::BadWord)
+            }
+            other => panic!("expected Remote(BAD_WORD), got {other:?}"),
+        }
+        // still usable afterwards
+        let res = client.analyze(&["قال"], &AnalyzeOptions::default()).unwrap();
+        assert_eq!(res[0].root, "قول");
 
         stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(addr);

@@ -177,6 +177,13 @@ impl Stemmer {
         self.config
     }
 
+    /// A stemmer over the same (shared) dictionaries with a different
+    /// infix setting — how the unified `Analyzer` API honors a
+    /// per-request infix override without rebuilding any tables.
+    pub fn with_infix(&self, infix: bool) -> Stemmer {
+        Stemmer::new(self.roots.clone(), StemmerConfig { infix_processing: infix })
+    }
+
     /// Is the window `word[p..p+size]` a valid stem candidate?
     /// (DESIGN.md §6 shared contract — `ref.candidate_valid`.) Used by the
     /// reference path; the fused path answers this from the AffixProfile.

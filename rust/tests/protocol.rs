@@ -1,0 +1,282 @@
+//! AMA/1 wire-protocol tests over real TCP: mixed-algorithm serving,
+//! interleaved AMA/1 + legacy-line connections on one server, typed
+//! error codes end to end, and per-request option handling — the PR 3
+//! acceptance pins.
+
+use ama::analysis::{Algorithm, AnalyzeOptions, ErrorCode};
+use ama::chars::ArabicWord;
+use ama::client::{Client, ClientError};
+use ama::coordinator::{Coordinator, CoordinatorConfig};
+use ama::khoja::KhojaStemmer;
+use ama::light::{LightStemmer, VotingAnalyzer};
+use ama::protocol::Reply;
+use ama::roots::RootSet;
+use ama::server::Server;
+use ama::stemmer::{MatchKind, StemResult, Stemmer, StemmerConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+struct Stack {
+    coord: Option<Coordinator>,
+    server: Option<Arc<Server>>,
+    serve_thread: Option<JoinHandle<anyhow::Result<()>>>,
+    addr: std::net::SocketAddr,
+    roots: Arc<RootSet>,
+}
+
+fn start_stack() -> Stack {
+    let roots = Arc::new(RootSet::builtin_mini());
+    let coord = Coordinator::start_registry(
+        CoordinatorConfig { workers: 2, max_batch: 64, ..Default::default() },
+        roots.clone(),
+        StemmerConfig::default(),
+    );
+    let server = Arc::new(Server::bind("127.0.0.1:0", coord.handle()).unwrap());
+    let addr = server.local_addr().unwrap();
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve_forever());
+    Stack {
+        coord: Some(coord),
+        server: Some(server),
+        serve_thread: Some(serve_thread),
+        addr,
+        roots,
+    }
+}
+
+impl Drop for Stack {
+    fn drop(&mut self) {
+        if let Some(server) = self.server.take() {
+            server.stop();
+        }
+        if let Some(t) = self.serve_thread.take() {
+            t.join().unwrap().unwrap();
+        }
+        if let Some(c) = self.coord.take() {
+            c.shutdown();
+        }
+    }
+}
+
+/// The legacy reply line the pre-PR-3 server produced for `word` — the
+/// bare-line wire format is pinned byte for byte.
+fn legacy_line(stemmer: &Stemmer, word: &str) -> String {
+    let r = stemmer.stem(&ArabicWord::encode(word));
+    format!("{word}\t{}\t{}\t{}", r.root_word().to_string_ar(), r.kind as u8, r.cut)
+}
+
+/// Acceptance: one running server instance answers AMA/1 requests for
+/// all four algorithms (per-request `algorithm` + infix honored) while
+/// raw bare-line sessions against the same port keep returning roots
+/// unchanged — all connections interleaved and concurrent.
+#[test]
+fn mixed_algorithms_and_legacy_interleaved_on_one_server() {
+    let stack = start_stack();
+    let vocab = ["يدرس", "قال", "دارس", "والدرس", "مدروس", "سيلعبون", "ظظظ"];
+    // AMA/1 rejects structurally un-analyzable words with BAD_WORD, so
+    // the typed fleet uses the Arabic-only slice (ظظظ is valid Arabic —
+    // it just has no root).
+    let r = stack.roots.clone();
+    let lb = Stemmer::with_defaults(r.clone());
+    let kh = KhojaStemmer::new(r.clone());
+    let li = LightStemmer::new(r.clone());
+    let vo = VotingAnalyzer::new(r.clone());
+    let direct: Vec<(Algorithm, Vec<StemResult>)> = vec![
+        (
+            Algorithm::Linguistic,
+            vocab.iter().map(|w| lb.stem(&ArabicWord::encode(w))).collect(),
+        ),
+        (Algorithm::Khoja, vocab.iter().map(|w| kh.stem(&ArabicWord::encode(w))).collect()),
+        (Algorithm::Light, vocab.iter().map(|w| li.stem(&ArabicWord::encode(w))).collect()),
+        (Algorithm::Voting, vocab.iter().map(|w| vo.stem(&ArabicWord::encode(w))).collect()),
+    ];
+
+    let addr = stack.addr;
+    let mut threads: Vec<JoinHandle<()>> = Vec::new();
+    // Four AMA/1 clients, one per algorithm, hammering concurrently.
+    for (algo, expected) in direct.clone() {
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let opts = AnalyzeOptions::with_algorithm(algo);
+            for _ in 0..25 {
+                let results = client.analyze(&vocab, &opts).unwrap();
+                assert_eq!(results.len(), vocab.len());
+                for ((w, got), want) in vocab.iter().zip(&results).zip(&expected) {
+                    assert_eq!(got.word, *w, "{algo}: echo mismatch");
+                    assert_eq!(got.algo, algo);
+                    assert_eq!(got.kind, want.kind, "{algo} on {w}");
+                    let want_root = if want.kind == MatchKind::None {
+                        String::new()
+                    } else {
+                        want.root_word().to_string_ar()
+                    };
+                    assert_eq!(got.root, want_root, "{algo} on {w}");
+                }
+            }
+        }));
+    }
+    // Three concurrent legacy bare-line clients on the same port.
+    let lb_expected: Vec<String> = vocab.iter().map(|w| legacy_line(&lb, w)).collect();
+    for _ in 0..3 {
+        let lb_expected = lb_expected.clone();
+        threads.push(std::thread::spawn(move || {
+            let conn = TcpStream::connect(addr).unwrap();
+            conn.set_nodelay(true).unwrap();
+            let mut writer = conn.try_clone().unwrap();
+            let mut reader = BufReader::new(conn);
+            let mut line = String::new();
+            for _ in 0..25 {
+                for (w, want) in vocab.iter().zip(&lb_expected) {
+                    writeln!(writer, "{w}").unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    assert_eq!(line.trim_end(), want, "legacy reply changed");
+                }
+            }
+            writer.write_all(b"\n").unwrap();
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // Strictly interleaved from a single thread: AMA/1 envelope, then a
+    // legacy line, alternating over two live connections.
+    let mut client = Client::connect(addr).unwrap();
+    let legacy = TcpStream::connect(addr).unwrap();
+    legacy.set_nodelay(true).unwrap();
+    let mut legacy_writer = legacy.try_clone().unwrap();
+    let mut legacy_reader = BufReader::new(legacy);
+    let mut line = String::new();
+    for (i, &w) in vocab.iter().cycle().take(20).enumerate() {
+        let algo = Algorithm::ALL[i % 4];
+        let results = client.analyze(&[w], &AnalyzeOptions::with_algorithm(algo)).unwrap();
+        assert_eq!(results[0].word, w);
+        writeln!(legacy_writer, "{w}").unwrap();
+        line.clear();
+        legacy_reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), legacy_line(&lb, w));
+    }
+    legacy_writer.write_all(b"\n").unwrap();
+}
+
+/// Typed error codes end to end: malformed frames, unknown ops, bad
+/// versions, and BAD_WORD all come back as in-band error frames with the
+/// right code, and the connection survives every one of them.
+#[test]
+fn error_codes_over_tcp() {
+    let stack = start_stack();
+    let conn = TcpStream::connect(stack.addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+
+    let mut roundtrip = |frame: &str| -> Reply {
+        writeln!(writer, "{frame}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        Reply::parse(line.trim_end()).unwrap()
+    };
+
+    let code = |r: Reply| match r {
+        Reply::Error { error, .. } => error.code,
+        Reply::Results { .. } => panic!("expected an error frame"),
+    };
+
+    assert_eq!(code(roundtrip(r#"{"op":"analyze","words":"#)), ErrorCode::BadRequest);
+    assert_eq!(code(roundtrip(r#"{"id":4,"op":"explode"}"#)), ErrorCode::UnknownOp);
+    assert_eq!(code(roundtrip(r#"{"v":9,"id":5,"op":"analyze","words":[]}"#)), ErrorCode::BadVersion);
+    assert_eq!(
+        code(roundtrip(r#"{"id":6,"op":"analyze","words":["hello"]}"#)),
+        ErrorCode::BadWord
+    );
+    assert_eq!(
+        code(roundtrip(r#"{"id":7,"op":"analyze","words":[""]}"#)),
+        ErrorCode::BadWord
+    );
+
+    // error ids echo for correlation
+    match roundtrip(r#"{"id":6,"op":"analyze","words":["hello"]}"#) {
+        Reply::Error { id, .. } => assert_eq!(id, 6),
+        _ => unreachable!(),
+    }
+
+    // the connection still serves good requests afterwards
+    match roundtrip(r#"{"id":8,"op":"analyze","words":["قال"]}"#) {
+        Reply::Results { id, results } => {
+            assert_eq!(id, 8);
+            assert_eq!(results[0].root, "قول");
+        }
+        Reply::Error { error, .. } => panic!("healthy frame failed: {error}"),
+    }
+
+    // BAD_WORD rejections surfaced in the coordinator metrics
+    let snap = stack.coord.as_ref().unwrap().metrics().snapshot();
+    assert!(snap.rejected_bad_word >= 3, "bad_word rejections uncounted: {snap}");
+
+    writer.write_all(b"\n").unwrap();
+}
+
+/// Per-request infix override and trace over the wire.
+#[test]
+fn infix_and_trace_options_over_tcp() {
+    let stack = start_stack();
+    let mut client = Client::connect(stack.addr).unwrap();
+
+    // قال is only analyzable with infix processing (Restore Original Form)
+    let on = client.analyze(&["قال"], &AnalyzeOptions::default()).unwrap();
+    assert_eq!(on[0].kind, MatchKind::Restored);
+    assert_eq!(on[0].root, "قول");
+    assert!(on[0].trace.is_none());
+
+    let off = client
+        .analyze(
+            &["قال"],
+            &AnalyzeOptions { infix: Some(false), ..Default::default() },
+        )
+        .unwrap();
+    assert_eq!(off[0].kind, MatchKind::None);
+    assert_eq!(off[0].root, "");
+
+    let traced = client
+        .analyze(
+            &["سيلعبون"],
+            &AnalyzeOptions { want_trace: true, ..Default::default() },
+        )
+        .unwrap();
+    let trace = traced[0].trace.as_ref().expect("trace requested");
+    let stages: Vec<&str> = trace.iter().map(|(s, _)| s.as_str()).collect();
+    assert_eq!(stages, ama::analysis::STAGE_NAMES);
+
+    // voting metadata crosses the wire
+    let voted = client
+        .analyze(&["درس"], &AnalyzeOptions::with_algorithm(Algorithm::Voting))
+        .unwrap();
+    assert_eq!(voted[0].votes, 3);
+    assert!((voted[0].confidence - 1.0).abs() < 1e-3);
+}
+
+/// The typed client surfaces remote typed errors as `Remote` and
+/// oversized envelopes are rejected with BAD_REQUEST.
+#[test]
+fn client_error_surface() {
+    let stack = start_stack();
+    let mut client = Client::connect(stack.addr).unwrap();
+
+    match client.analyze(&["not-arabic"], &AnalyzeOptions::default()) {
+        Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrorCode::BadWord),
+        other => panic!("expected Remote(BAD_WORD), got {other:?}"),
+    }
+
+    let too_many: Vec<&str> = vec!["درس"; ama::protocol::MAX_WORDS_PER_ENVELOPE + 1];
+    match client.analyze(&too_many, &AnalyzeOptions::default()) {
+        Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrorCode::BadRequest),
+        other => panic!("expected Remote(BAD_REQUEST), got {other:?}"),
+    }
+
+    // ping still works afterwards
+    client.ping().unwrap();
+}

@@ -1,0 +1,97 @@
+#!/usr/bin/env bash
+# Protocol-conformance smoke: spawn a real `ama serve` process, issue one
+# AMA/1 batch (per-request algorithm) and one legacy bare line against the
+# same port, and check both replies. Referenced from verify.sh and
+# `make protocol-check`; spec in docs/PROTOCOL.md.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${AMA_BIN:-./target/release/ama}
+PORT=${AMA_SMOKE_PORT:-7643}
+
+if [[ ! -x "$BIN" ]]; then
+  echo "protocol smoke: $BIN not built (run cargo build --release)" >&2
+  exit 1
+fi
+
+"$BIN" serve --port "$PORT" --workers 2 &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true; wait "$SERVE_PID" 2>/dev/null || true' EXIT
+
+# Wait for OUR listener (up to ~5s). If the serve process dies (e.g. the
+# port is already taken by a stale server), fail hard instead of testing
+# whatever else is listening; if it never comes up, fail too.
+READY=0
+for _ in $(seq 1 50); do
+  if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+    echo "protocol smoke: ama serve exited early (port $PORT already in use?)" >&2
+    exit 1
+  fi
+  if python3 -c "import socket; socket.create_connection(('127.0.0.1', $PORT), 0.2).close()" 2>/dev/null; then
+    READY=1
+    break
+  fi
+  sleep 0.1
+done
+if [[ "$READY" != 1 ]]; then
+  echo "protocol smoke: server on port $PORT never became ready" >&2
+  exit 1
+fi
+
+python3 - "$PORT" <<'EOF'
+import json
+import socket
+import sys
+
+port = int(sys.argv[1])
+
+# --- AMA/1 connection: typed batch, khoja selected per-request ------------
+s = socket.create_connection(("127.0.0.1", port), 5)
+s.settimeout(5)
+f = s.makefile("rw", encoding="utf-8", newline="\n")
+f.write(json.dumps({
+    "v": 1, "id": 1, "op": "analyze",
+    "words": ["سيلعبون", "دارس"],
+    "opts": {"algo": "khoja"},
+}, ensure_ascii=False) + "\n")
+f.flush()
+reply = json.loads(f.readline())
+assert reply["id"] == 1, reply
+assert "error" not in reply, reply
+results = reply["results"]
+assert len(results) == 2, reply
+assert all(r["algo"] == "khoja" for r in results), reply
+# khoja resolves دارس -> درس via the فاعل pattern
+assert results[1]["root"] == "درس", reply
+
+# typed error path: BAD_WORD on a non-Arabic word, connection survives
+f.write(json.dumps({"id": 2, "op": "analyze", "words": ["hello"]}) + "\n")
+f.flush()
+reply = json.loads(f.readline())
+assert reply.get("error", {}).get("code") == "BAD_WORD", reply
+f.write(json.dumps({"id": 3, "op": "ping"}) + "\n")
+f.flush()
+reply = json.loads(f.readline())
+assert reply["id"] == 3 and reply["results"] == [], reply
+f.write("\n")
+f.flush()
+s.close()
+
+# --- legacy bare-line connection on the same port -------------------------
+s = socket.create_connection(("127.0.0.1", port), 5)
+s.settimeout(5)
+f = s.makefile("rw", encoding="utf-8", newline="\n")
+f.write("سيلعبون\n")
+f.flush()
+line = f.readline().rstrip("\n")
+fields = line.split("\t")
+assert len(fields) == 4, line
+assert fields[0] == "سيلعبون", line
+assert fields[1] == "لعب", line  # root لعب
+f.write("\n")
+f.flush()
+s.close()
+
+print("protocol smoke OK: AMA/1 batch + typed error + legacy line")
+EOF

@@ -45,4 +45,17 @@ echo "== loadtest smoke (2 modes × 2s, 8 conns) =="
 grep -q '"schema": "ama-loadtest-v1"' /tmp/ama_loadtest_smoke.json
 echo "loadtest smoke OK"
 
+echo "== AMA/1 loadtest smoke (2s, 8 conns, all four algorithms) =="
+./target/release/ama loadtest --conns 8 --secs 2 --depth 32 --mode pipelined \
+  --proto ama1 --words 1000 --out /tmp/ama_loadtest_ama1_smoke.json
+grep -q '"proto": "ama1"' /tmp/ama_loadtest_ama1_smoke.json
+echo "AMA/1 loadtest smoke OK"
+
+echo "== protocol conformance smoke (AMA/1 + legacy line, one server) =="
+if command -v python3 >/dev/null 2>&1; then
+  scripts/protocol_check.sh
+else
+  echo "python3 not installed; skipping protocol smoke"
+fi
+
 echo "verify: all green"
