@@ -6,10 +6,12 @@
 #                     (scripts/verify.sh)
 #   make loadtest   — full serving-path comparison (per-word vs pipelined,
 #                     32 conns × 5 s) writing measured rows to BENCH_PR2.json
+#   make bench-packed — quick packed-kernel + stem-cache comparison rows
+#                     (PR 4 acceptance: packed ≥ array, cache warm ≥ off)
 #   make protocol-check — AMA/1 + legacy-line conformance smoke against a
 #                     real `ama serve` process (scripts/protocol_check.sh)
 
-.PHONY: data artifacts verify test loadtest protocol-check
+.PHONY: data artifacts verify test loadtest bench-packed protocol-check
 
 data:
 	cd python && python3 -m compile.gen_roots ../data
@@ -27,6 +29,14 @@ loadtest:
 	cargo build --release
 	./target/release/ama loadtest --conns 32 --secs 5 --depth 64 \
 		--mode both --backend software-par --out BENCH_PR2.json
+
+bench-packed:
+	cargo build --release
+	AMA_BENCH_FAST=1 ./target/release/ama bench json --pr 4 \
+		--out /tmp/ama_bench_packed.json
+	grep -q 'stem_batch_packed' /tmp/ama_bench_packed.json
+	grep -q 'registry_cache_warm' /tmp/ama_bench_packed.json
+	grep -q 'speedup_packed_vs_array' /tmp/ama_bench_packed.json
 
 protocol-check:
 	cargo build --release

@@ -32,7 +32,7 @@
 //!   with the AMA/1 wire protocol (`QUEUE_FULL`, `SHUTDOWN`, `BAD_WORD`,
 //!   …) replacing stringly `anyhow` errors on the request path.
 
-use crate::chars::{AffixProfile, ArabicWord, MAX_SUFFIX};
+use crate::chars::{AffixProfile, ArabicWord, PackedWord, MAX_SUFFIX};
 use crate::khoja::KhojaStemmer;
 use crate::light::{LightStemmer, VotingAnalyzer};
 use crate::roots::RootSet;
@@ -386,6 +386,30 @@ impl Analyzer for Stemmer {
     }
 }
 
+impl Stemmer {
+    /// Packed-batch analysis honoring per-request options (PR 4): the
+    /// words stay in their `u128` registers through the fused kernel.
+    /// Trace requests fall back to the unpacked path (tracing allocates
+    /// and reads codepoints anyway), keeping the hot kernel
+    /// uninstrumented.
+    pub fn analyze_batch_packed(&self, words: &[PackedWord], opts: &AnalyzeOptions) -> Vec<Analysis> {
+        if opts.want_trace {
+            let unpacked: Vec<ArabicWord> = words.iter().map(|w| w.unpack()).collect();
+            return Analyzer::analyze_batch(self, &unpacked, opts);
+        }
+        let infix = opts.infix.unwrap_or(self.config().infix_processing);
+        let results = if infix == self.config().infix_processing {
+            self.stem_batch_packed(words)
+        } else {
+            self.with_infix(infix).stem_batch_packed(words)
+        };
+        results
+            .into_iter()
+            .map(|r| Analysis::from_result(r, Algorithm::Linguistic))
+            .collect()
+    }
+}
+
 // --- khoja baseline --------------------------------------------------------
 
 fn coarse_trace(w: &ArabicWord, affix: &str, candidate: &str, compare: &str, r: &StemResult) -> Trace {
@@ -534,6 +558,20 @@ impl AnalyzerRegistry {
     /// Route a batch to the engine `opts.algorithm` selects.
     pub fn analyze_batch(&self, words: &[ArabicWord], opts: &AnalyzeOptions) -> Vec<Analysis> {
         self.get(opts.algorithm).analyze_batch(words, opts)
+    }
+
+    /// Packed-batch routing (PR 4): the linguistic engine consumes the
+    /// registers directly; the scalar engines (khoja/light/voting)
+    /// unpack at this boundary. Unpacking is exact on the canonical
+    /// packed form every serving-path word already has (see
+    /// [`PackedWord`]), so results match the unpacked route
+    /// word-for-word.
+    pub fn analyze_batch_packed(&self, words: &[PackedWord], opts: &AnalyzeOptions) -> Vec<Analysis> {
+        if opts.algorithm == Algorithm::Linguistic {
+            return self.lb.analyze_batch_packed(words, opts);
+        }
+        let unpacked: Vec<ArabicWord> = words.iter().map(|w| w.unpack()).collect();
+        self.analyze_batch(&unpacked, opts)
     }
 
     pub fn analyze(&self, w: &ArabicWord, opts: &AnalyzeOptions) -> Analysis {
@@ -764,6 +802,32 @@ mod tests {
             // no trace when not requested
             let a = reg.analyze(&w, &AnalyzeOptions::with_algorithm(algo));
             assert!(a.trace.is_none());
+        }
+    }
+
+    /// The packed batch route equals the array route for every engine,
+    /// every infix override, and the trace path (which falls back to the
+    /// unpacked engines).
+    #[test]
+    fn packed_batch_route_matches_array_route() {
+        let r = roots();
+        let reg = AnalyzerRegistry::new(r);
+        let words: Vec<ArabicWord> = ["يدرس", "قال", "دارس", "والدرس", "مدروس", "ظظظ", ""]
+            .iter()
+            .map(|s| ArabicWord::encode(s))
+            .collect();
+        let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+        for algorithm in Algorithm::ALL {
+            for infix in [None, Some(true), Some(false)] {
+                for want_trace in [false, true] {
+                    let opts = AnalyzeOptions { algorithm, infix, want_trace };
+                    assert_eq!(
+                        reg.analyze_batch_packed(&packed, &opts),
+                        reg.analyze_batch(&words, &opts),
+                        "{algorithm} infix={infix:?} trace={want_trace}"
+                    );
+                }
+            }
         }
     }
 

@@ -1,0 +1,358 @@
+//! Memoizing stem cache (PR 4): a sharded, lock-free, direct-mapped map
+//! from `(PackedWord, EngineOpts)` to a finished [`Analysis`] — the
+//! software analog of the paper's single-cycle pipelined fetch for words
+//! the processor has already seen.
+//!
+//! Real Arabic text is heavily repetitive (the Quran corpus the paper
+//! evaluates on reuses surface forms constantly), so the serving hot path
+//! answers the common case with one probe instead of a kernel pass:
+//! [`crate::coordinator::RegistryBackend`] consults the cache before
+//! kernel dispatch and records `cache_hits` / `cache_misses` in
+//! [`crate::metrics::ServiceMetrics`].
+//!
+//! Design:
+//!
+//! * **Direct-mapped, power-of-two slots.** The 128-bit key is the packed
+//!   word register with the one-byte options word folded into its unused
+//!   high bits — a whole cache key in two machine words, compared with
+//!   two loads. A new insert simply overwrites whatever hashed to the
+//!   slot (no chains, no eviction lists), exactly like a direct-mapped
+//!   block RAM.
+//! * **Seqlock-style versioned slots.** Every slot carries a version
+//!   counter: even = stable, odd = a writer is mid-update, 0 = never
+//!   written. Readers load the version, the key/value words, and the
+//!   version again — a changed or odd version is treated as a miss, so
+//!   *readers never block writers* (and never lock at all). Writers
+//!   claim a slot with one CAS on the version; a lost race simply drops
+//!   the insert (it is a cache). All fields are plain atomics — a torn
+//!   read is impossible by construction, only detected inconsistency,
+//!   which the version check turns into a miss.
+//! * **Sharded slot array.** Slots are split across [`SHARDS`]
+//!   independently-allocated arrays indexed by disjoint hash bits,
+//!   keeping concurrent writers from different connections out of each
+//!   other's cache lines in the common case.
+//!
+//! Only trace-free results are cacheable: a [`Trace`] allocates and is
+//! request-specific diagnostics, so callers bypass the cache entirely
+//! when `want_trace` is set (pinned by tests).
+//!
+//! [`Trace`]: crate::analysis::Trace
+
+use crate::analysis::{Algorithm, Analysis, EngineOpts};
+use crate::chars::PackedWord;
+use crate::stemmer::{MatchKind, StemResult};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Default slot count for `--cache-slots` (per process, shared by all
+/// coordinator workers): 32 Ki slots ≈ 1 MiB — larger than the distinct
+/// surface-form count of the calibrated Quran corpus, small enough to
+/// stay cache-friendly.
+pub const DEFAULT_CACHE_SLOTS: usize = 1 << 15;
+
+/// Number of independent slot arrays (power of two).
+const SHARDS: usize = 16;
+
+/// One direct-mapped entry. `ver` is the seqlock: 0 = empty, odd = write
+/// in progress, even ≥ 2 = stable. `k0`/`k1` hold the 128-bit key,
+/// `v0`/`v1` the encoded result (see `encode_value`).
+#[derive(Default)]
+struct Slot {
+    ver: AtomicU32,
+    k0: AtomicU64,
+    k1: AtomicU64,
+    v0: AtomicU64,
+    v1: AtomicU64,
+}
+
+struct Shard {
+    slots: Box<[Slot]>,
+}
+
+/// The sharded, lock-free, direct-mapped stem cache.
+pub struct StemCache {
+    shards: Box<[Shard]>,
+    /// Per-shard slot-index mask (`slots_per_shard - 1`).
+    slot_mask: usize,
+}
+
+/// Split the `(word, opts)` key into two 64-bit words. The packed word
+/// occupies bits 0..94; the options byte lands in bits 96..104 — no
+/// overlap, so distinct `(word, opts)` pairs have distinct keys.
+#[inline]
+fn key_words(w: PackedWord, opts: EngineOpts) -> (u64, u64) {
+    let key: u128 = w.0 | (opts.word() as u128) << 96;
+    (key as u64, (key >> 64) as u64)
+}
+
+/// splitmix64 finalizer — the slot-index hash.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Pack an [`Analysis`] (minus its never-cached trace) into two words:
+/// `v0` = the four root codepoints, `v1` = kind | cut | votes | algorithm
+/// | confidence bits.
+#[inline]
+fn encode_value(a: &Analysis) -> (u64, u64) {
+    let r = &a.result;
+    let v0 = (r.root[0] as u64)
+        | (r.root[1] as u64) << 16
+        | (r.root[2] as u64) << 32
+        | (r.root[3] as u64) << 48;
+    let v1 = (r.kind as u64)
+        | (r.cut as u64) << 8
+        | (a.votes as u64) << 16
+        | (a.algorithm as u64) << 24
+        | (a.confidence.to_bits() as u64) << 32;
+    (v0, v1)
+}
+
+#[inline]
+fn decode_value(v0: u64, v1: u64) -> Analysis {
+    Analysis {
+        result: StemResult {
+            root: [v0 as u16, (v0 >> 16) as u16, (v0 >> 32) as u16, (v0 >> 48) as u16],
+            kind: MatchKind::from_u8(v1 as u8),
+            cut: (v1 >> 8) as u8,
+        },
+        votes: (v1 >> 16) as u8,
+        algorithm: Algorithm::from_u8((v1 >> 24) as u8),
+        confidence: f32::from_bits((v1 >> 32) as u32),
+        trace: None,
+    }
+}
+
+impl StemCache {
+    /// A cache with at least `slots` total slots (rounded up so each of
+    /// the [`SHARDS`] shards holds a power of two).
+    pub fn new(slots: usize) -> Arc<StemCache> {
+        let per_shard = slots.div_ceil(SHARDS).next_power_of_two().max(1);
+        let shards = (0..SHARDS)
+            .map(|_| Shard { slots: (0..per_shard).map(|_| Slot::default()).collect() })
+            .collect();
+        Arc::new(StemCache { shards, slot_mask: per_shard - 1 })
+    }
+
+    /// Total slot count across all shards.
+    pub fn slots(&self) -> usize {
+        (self.slot_mask + 1) * SHARDS
+    }
+
+    /// Backing-store footprint in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.slots() * std::mem::size_of::<Slot>()
+    }
+
+    #[inline]
+    fn slot_for(&self, k0: u64, k1: u64) -> &Slot {
+        let h = mix64(k0 ^ mix64(k1)) as usize;
+        let shard = &self.shards[h & (SHARDS - 1)];
+        &shard.slots[(h >> SHARDS.trailing_zeros()) & self.slot_mask]
+    }
+
+    /// Probe the cache. `None` is a miss (empty slot, different key, or a
+    /// concurrent write in flight — all indistinguishable to the caller).
+    pub fn lookup(&self, w: PackedWord, opts: EngineOpts) -> Option<Analysis> {
+        let (k0, k1) = key_words(w, opts);
+        let slot = self.slot_for(k0, k1);
+        let v_before = slot.ver.load(Ordering::SeqCst);
+        if v_before == 0 || v_before & 1 == 1 {
+            return None;
+        }
+        let sk0 = slot.k0.load(Ordering::SeqCst);
+        let sk1 = slot.k1.load(Ordering::SeqCst);
+        let sv0 = slot.v0.load(Ordering::SeqCst);
+        let sv1 = slot.v1.load(Ordering::SeqCst);
+        if slot.ver.load(Ordering::SeqCst) != v_before {
+            return None; // raced a writer: treat as a miss
+        }
+        if (sk0, sk1) != (k0, k1) {
+            return None;
+        }
+        Some(decode_value(sv0, sv1))
+    }
+
+    /// Store a trace-free result. A concurrent writer on the same slot
+    /// wins the CAS and this insert is dropped — harmless for a cache.
+    pub fn insert(&self, w: PackedWord, opts: EngineOpts, a: &Analysis) {
+        debug_assert!(a.trace.is_none(), "traces are never cached (bypass upstream)");
+        if a.trace.is_some() {
+            return;
+        }
+        let (k0, k1) = key_words(w, opts);
+        let slot = self.slot_for(k0, k1);
+        let v = slot.ver.load(Ordering::SeqCst);
+        if v & 1 == 1 {
+            return; // another writer mid-flight
+        }
+        if slot
+            .ver
+            .compare_exchange(v, v | 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return;
+        }
+        let (v0, v1) = encode_value(a);
+        slot.k0.store(k0, Ordering::SeqCst);
+        slot.k1.store(k1, Ordering::SeqCst);
+        slot.v0.store(v0, Ordering::SeqCst);
+        slot.v1.store(v1, Ordering::SeqCst);
+        // Next stable (even, nonzero) version. Skipping 0 on wraparound
+        // keeps "never written" unambiguous.
+        let mut next = (v | 1).wrapping_add(1);
+        if next == 0 {
+            next = 2;
+        }
+        slot.ver.store(next, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{AnalyzeOptions, AnalyzerRegistry};
+    use crate::chars::ArabicWord;
+    use crate::roots::RootSet;
+    use crate::stemmer::Stemmer;
+
+    fn opts() -> EngineOpts {
+        EngineOpts::default()
+    }
+
+    #[test]
+    fn geometry_rounds_up_to_power_of_two_shards() {
+        let c = StemCache::new(1000);
+        assert_eq!(c.slots(), 64 * SHARDS); // ceil(1000/16)=63 → 64
+        assert!(c.memory_bytes() >= c.slots() * 36);
+        let tiny = StemCache::new(1);
+        assert_eq!(tiny.slots(), SHARDS);
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrips_the_analysis() {
+        let c = StemCache::new(1024);
+        let roots = std::sync::Arc::new(RootSet::builtin_mini());
+        let s = Stemmer::with_defaults(roots);
+        for word in ["سيلعبون", "قال", "فتزحزحت", "ظظظ", "درس"] {
+            let w = PackedWord::encode(word);
+            assert!(c.lookup(w, opts()).is_none(), "cold cache must miss {word}");
+            let a = Analysis::from_result(s.stem_packed(w), Algorithm::Linguistic);
+            c.insert(w, opts(), &a);
+            let hit = c.lookup(w, opts()).expect("warm cache must hit");
+            assert_eq!(hit, a, "hit-path result differs for {word}");
+        }
+    }
+
+    /// The options byte is part of the key: the same word under different
+    /// algorithm/infix options occupies distinct entries.
+    #[test]
+    fn options_word_separates_entries() {
+        let c = StemCache::new(1024);
+        let w = PackedWord::encode("قال");
+        let lb = EngineOpts::new(&AnalyzeOptions::default());
+        let kh = EngineOpts::new(&AnalyzeOptions::with_algorithm(Algorithm::Khoja));
+        let a_lb = Analysis::from_result(
+            StemResult { root: [1, 2, 3, 0], kind: MatchKind::Restored, cut: 0 },
+            Algorithm::Linguistic,
+        );
+        let a_kh = Analysis::none(Algorithm::Khoja);
+        c.insert(w, lb, &a_lb);
+        c.insert(w, kh, &a_kh);
+        assert_eq!(c.lookup(w, lb), Some(a_lb));
+        assert_eq!(c.lookup(w, kh), Some(a_kh));
+    }
+
+    /// Voting metadata (confidence fractions, vote counts) survives the
+    /// encode/decode exactly.
+    #[test]
+    fn voting_metadata_roundtrips_bit_exact() {
+        let c = StemCache::new(256);
+        let reg = AnalyzerRegistry::new(std::sync::Arc::new(RootSet::builtin_mini()));
+        let vopts = AnalyzeOptions::with_algorithm(Algorithm::Voting);
+        for word in ["درس", "قال", "ظظظظظ"] {
+            let w = PackedWord::encode(word);
+            let a = reg.analyze(&ArabicWord::encode(word), &vopts);
+            let tag = EngineOpts::new(&vopts);
+            c.insert(w, tag, &a);
+            let hit = c.lookup(w, tag).expect("hit");
+            assert_eq!(hit.confidence.to_bits(), a.confidence.to_bits(), "{word}");
+            assert_eq!(hit.votes, a.votes, "{word}");
+            assert_eq!(hit.result, a.result, "{word}");
+            assert_eq!(hit.algorithm, a.algorithm, "{word}");
+        }
+    }
+
+    /// Direct-mapped overwrite: a colliding insert replaces the previous
+    /// entry and the old key misses afterwards (never returns the new
+    /// value under the old key).
+    #[test]
+    fn overwrite_is_safe_under_collisions() {
+        let c = StemCache::new(1); // SHARDS slots total → collisions certain
+        let words: Vec<PackedWord> =
+            ["درس", "قال", "سيلعبون", "كاتب", "ماد", "خلق", "عمل", "كفر"]
+                .iter()
+                .map(|s| PackedWord::encode(s))
+                .collect();
+        let s = Stemmer::with_defaults(std::sync::Arc::new(RootSet::builtin_mini()));
+        for (i, &w) in words.iter().enumerate() {
+            let a = Analysis::from_result(s.stem_packed(w), Algorithm::Linguistic);
+            c.insert(w, opts(), &a);
+            // every probe, hit or miss, must be *correct* for its key
+            for &probe in &words[..=i] {
+                if let Some(hit) = c.lookup(probe, opts()) {
+                    let want = Analysis::from_result(s.stem_packed(probe), Algorithm::Linguistic);
+                    assert_eq!(hit, want, "stale/cross-keyed entry");
+                }
+            }
+        }
+    }
+
+    /// Concurrent readers and writers over a tiny cache: every hit is
+    /// correct for its key (the seqlock never serves a torn pair).
+    #[test]
+    fn concurrent_probes_never_return_wrong_values() {
+        let c = StemCache::new(64);
+        let roots = std::sync::Arc::new(RootSet::builtin_mini());
+        let vocab: Vec<PackedWord> = roots
+            .tri_rows()
+            .iter()
+            .map(|r| PackedWord::pack(&ArabicWord::from_codes(r)))
+            .collect();
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let c = c.clone();
+                let roots = roots.clone();
+                let vocab = vocab.clone();
+                std::thread::spawn(move || {
+                    let s = Stemmer::with_defaults(roots);
+                    for i in 0..20_000usize {
+                        let w = vocab[(i * 7 + t * 13) % vocab.len()];
+                        match c.lookup(w, EngineOpts::default()) {
+                            Some(hit) => {
+                                let want = Analysis::from_result(
+                                    s.stem_packed(w),
+                                    Algorithm::Linguistic,
+                                );
+                                assert_eq!(hit, want, "wrong hit under contention");
+                            }
+                            None => {
+                                let a = Analysis::from_result(
+                                    s.stem_packed(w),
+                                    Algorithm::Linguistic,
+                                );
+                                c.insert(w, EngineOpts::default(), &a);
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}

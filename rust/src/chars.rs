@@ -151,7 +151,34 @@ const fn build_char_class() -> [u8; ALPHABET_SIZE] {
 /// belongs to no class). The single source of truth for affix classes —
 /// the letter-array constants above are retained as the human-readable
 /// definition and for the paper-facing tests.
-pub static CHAR_CLASS: [u8; ALPHABET_SIZE] = build_char_class();
+pub static CHAR_CLASS: [u8; ALPHABET_SIZE] = CHAR_CLASS_TABLE;
+
+/// Const view of [`CHAR_CLASS`] so the bit-plane constants below can be
+/// derived from it at compile time (const fns cannot read statics).
+const CHAR_CLASS_TABLE: [u8; ALPHABET_SIZE] = build_char_class();
+
+/// One affix class as a 37-bit plane over dense alphabet indices: bit `i`
+/// is set iff letter `i` belongs to the class. A membership test is then
+/// a shift+mask against a register-resident constant — no table load —
+/// which is what the packed kernel uses per character.
+const fn class_bit_plane(class: u8) -> u64 {
+    let mut bits = 0u64;
+    let mut i = 0;
+    while i < ALPHABET_SIZE {
+        if CHAR_CLASS_TABLE[i] & class != 0 {
+            bits |= 1u64 << i;
+        }
+        i += 1;
+    }
+    bits
+}
+
+/// Bit plane of [`CLASS_PREFIX`] over dense indices.
+pub const CLASS_PREFIX_BITS: u64 = class_bit_plane(CLASS_PREFIX);
+/// Bit plane of [`CLASS_SUFFIX`] over dense indices.
+pub const CLASS_SUFFIX_BITS: u64 = class_bit_plane(CLASS_SUFFIX);
+/// Bit plane of [`CLASS_INFIX`] over dense indices.
+pub const CLASS_INFIX_BITS: u64 = class_bit_plane(CLASS_INFIX);
 
 /// Class bitmask of a raw codepoint (0 for PAD / non-Arabic).
 #[inline]
@@ -376,6 +403,188 @@ impl std::fmt::Display for ArabicWord {
     }
 }
 
+// --- PackedWord: the whole word in one register (PR 4) --------------------
+
+/// Bit offset of the 4-bit length field in a [`PackedWord`].
+pub const PACKED_LEN_SHIFT: u32 = (6 * MAX_WORD) as u32; // 90
+
+/// Mask of the 90 character bits of a [`PackedWord`].
+pub const PACKED_CHAR_MASK: u128 = (1u128 << PACKED_LEN_SHIFT) - 1;
+
+/// A whole Arabic word packed into one `u128` register — the software
+/// analog of the paper's fixed-width word register flowing through the
+/// pipeline stages.
+///
+/// Layout (94 bits used, bits 94..128 always zero):
+///
+/// * bits `6·i .. 6·i+6` — the dense alphabet index
+///   ([`char_index`], `0..ALPHABET_SIZE` ≤ 63) of character `i`
+///   (character 0 in the lowest bits);
+/// * bits `90..94` — the word length (`0..=MAX_WORD`).
+///
+/// The representation is *canonicalizing*: characters outside the
+/// 36-letter alphabet pack to index 0 (PAD), exactly as the paper's
+/// 16-bit datapath treats anything outside the Arabic block. They still
+/// occupy a length slot, so affix-window geometry is preserved; index 0
+/// belongs to no affix class and never addresses a stored root, so every
+/// stemming engine produces identical results for the canonicalized and
+/// the original word (the conformance proptests pin this). `unpack` is
+/// therefore exact for all-Arabic words and maps non-Arabic characters
+/// to PAD.
+///
+/// Positions `≥ len` are zero by construction, so equal words have equal
+/// bit patterns — `PackedWord` equality, hashing, and the stem-cache key
+/// are single `u128` comparisons.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PackedWord(pub u128);
+
+impl PackedWord {
+    /// The empty word.
+    pub const EMPTY: PackedWord = PackedWord(0);
+
+    /// Pack a fixed-width word (one shift+or per character).
+    #[inline]
+    pub fn pack(w: &ArabicWord) -> PackedWord {
+        let mut bits = 0u128;
+        let mut i = 0;
+        while i < w.len {
+            bits |= (char_index(w.chars[i]) as u128) << (6 * i);
+            i += 1;
+        }
+        PackedWord(bits | (w.len as u128) << PACKED_LEN_SHIFT)
+    }
+
+    /// Encode a Rust string straight into the register — the same
+    /// strip/normalize/truncate pipeline as [`ArabicWord::encode`] with
+    /// no intermediate `[u16; 15]` array. Pinned equal to
+    /// `PackedWord::pack(&ArabicWord::encode(s))` by tests.
+    pub fn encode(s: &str) -> PackedWord {
+        let mut bits = 0u128;
+        let mut len = 0usize;
+        for ch in s.chars() {
+            let c = ch as u32;
+            if c > 0xFFFF {
+                continue;
+            }
+            let c = c as u16;
+            if is_diacritic(c) || c == 0x0640 {
+                continue; // diacritics + tatweel stripped (paper §3.1)
+            }
+            if len == MAX_WORD {
+                break;
+            }
+            bits |= (char_index(normalize_char(c)) as u128) << (6 * len);
+            len += 1;
+        }
+        PackedWord(bits | (len as u128) << PACKED_LEN_SHIFT)
+    }
+
+    /// Expand back to the fixed-width codepoint form. Exact for
+    /// all-Arabic words; non-Arabic characters (packed as index 0)
+    /// come back as PAD — see the canonicalization note on the type.
+    pub fn unpack(self) -> ArabicWord {
+        let mut chars = [PAD; MAX_WORD];
+        let n = self.len();
+        let mut i = 0;
+        while i < n {
+            chars[i] = index_char(self.index_at(i));
+            i += 1;
+        }
+        ArabicWord { chars, len: n }
+    }
+
+    /// Word length in characters (`0..=MAX_WORD`).
+    #[inline]
+    pub fn len(self) -> usize {
+        ((self.0 >> PACKED_LEN_SHIFT) & 0xF) as usize
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dense alphabet index of character `i` (0 for positions ≥ `len`).
+    #[inline]
+    pub fn index_at(self, i: usize) -> u8 {
+        ((self.0 >> (6 * i)) & 63) as u8
+    }
+
+    /// Codepoint of character `i` (PAD for positions ≥ `len` and for
+    /// canonicalized non-Arabic characters).
+    #[inline]
+    pub fn char_at(self, i: usize) -> u16 {
+        index_char(self.index_at(i))
+    }
+
+    /// Does the word contain at least one Arabic letter? (All-zero
+    /// character bits means every position is PAD/non-Arabic — the
+    /// structural condition behind the wire protocol's `BAD_WORD`.)
+    #[inline]
+    pub fn has_arabic(self) -> bool {
+        self.0 & PACKED_CHAR_MASK != 0
+    }
+
+    /// Dense-index row, PAD-extended to the register width (the SoA
+    /// batch-kernel encoding).
+    #[inline]
+    pub fn to_indices(self) -> [u8; MAX_WORD] {
+        let mut idx = [0u8; MAX_WORD];
+        let mut i = 0;
+        while i < MAX_WORD {
+            idx[i] = self.index_at(i);
+            i += 1;
+        }
+        idx
+    }
+
+    /// Affix profile straight off the register: each class test is one
+    /// shift+mask against the `CLASS_*_BITS` planes (no table load).
+    /// Agrees with [`AffixProfile::of`] on the unpacked word.
+    #[inline]
+    pub fn profile(self) -> AffixProfile {
+        let n = self.len();
+        let max_p = MAX_PREFIX.min(n);
+        let mut prefix_run = 0;
+        while prefix_run < max_p
+            && (CLASS_PREFIX_BITS >> self.index_at(prefix_run)) & 1 != 0
+        {
+            prefix_run += 1;
+        }
+        let mut suffix_start = n;
+        while suffix_start > 0
+            && (CLASS_SUFFIX_BITS >> self.index_at(suffix_start - 1)) & 1 != 0
+        {
+            suffix_start -= 1;
+        }
+        AffixProfile { prefix_run: prefix_run as u8, suffix_start: suffix_start as u8 }
+    }
+}
+
+impl From<&ArabicWord> for PackedWord {
+    fn from(w: &ArabicWord) -> PackedWord {
+        PackedWord::pack(w)
+    }
+}
+
+impl From<PackedWord> for ArabicWord {
+    fn from(p: PackedWord) -> ArabicWord {
+        p.unpack()
+    }
+}
+
+impl std::fmt::Debug for PackedWord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PackedWord({} len={} bits={:#x})", self.unpack().to_string_ar(), self.len(), self.0)
+    }
+}
+
+impl std::fmt::Display for PackedWord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.unpack().to_string_ar())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -454,6 +663,118 @@ mod tests {
             assert_eq!(is_infix_letter(c), want_infix, "infix class of {c:04X}");
         }
         assert_eq!(CHAR_CLASS[0], 0, "PAD must belong to no class");
+    }
+
+    /// The class bit planes agree entry-for-entry with the class table.
+    #[test]
+    fn class_bit_planes_match_table() {
+        for i in 0..ALPHABET_SIZE {
+            assert_eq!(
+                (CLASS_PREFIX_BITS >> i) & 1 != 0,
+                CHAR_CLASS[i] & CLASS_PREFIX != 0,
+                "prefix plane at {i}"
+            );
+            assert_eq!(
+                (CLASS_SUFFIX_BITS >> i) & 1 != 0,
+                CHAR_CLASS[i] & CLASS_SUFFIX != 0,
+                "suffix plane at {i}"
+            );
+            assert_eq!(
+                (CLASS_INFIX_BITS >> i) & 1 != 0,
+                CHAR_CLASS[i] & CLASS_INFIX != 0,
+                "infix plane at {i}"
+            );
+        }
+        // no plane bits beyond the alphabet
+        assert_eq!(CLASS_PREFIX_BITS >> ALPHABET_SIZE, 0);
+        assert_eq!(CLASS_SUFFIX_BITS >> ALPHABET_SIZE, 0);
+        assert_eq!(CLASS_INFIX_BITS >> ALPHABET_SIZE, 0);
+    }
+
+    #[test]
+    fn packed_layout_and_length() {
+        let w = ArabicWord::encode("درس");
+        let p = PackedWord::pack(&w);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.index_at(0), char_index(DAL));
+        assert_eq!(p.index_at(1), char_index(REH));
+        assert_eq!(p.index_at(2), char_index(SEEN));
+        assert_eq!(p.index_at(3), 0, "past-len positions are zero");
+        // bit-exact layout: 6 bits per char, length nibble at bit 90
+        let want = (char_index(DAL) as u128)
+            | (char_index(REH) as u128) << 6
+            | (char_index(SEEN) as u128) << 12
+            | 3u128 << PACKED_LEN_SHIFT;
+        assert_eq!(p.0, want);
+        assert!(p.0 >> 94 == 0, "bits 94..128 must stay zero");
+        assert_eq!(PackedWord::EMPTY.len(), 0);
+        assert!(PackedWord::EMPTY.is_empty());
+        assert!(!PackedWord::EMPTY.has_arabic());
+    }
+
+    /// pack/unpack is an exact roundtrip on all-Arabic words, including
+    /// the 15-character maximum; packing is canonical (equal words ⇒
+    /// equal bits, via the zero tail).
+    #[test]
+    fn packed_roundtrip_arabic() {
+        for s in ["", "درس", "سيلعبون", "أفاستسقيناكموها", "فتزحزحت", "ظظظظ"] {
+            let w = ArabicWord::encode(s);
+            let p = PackedWord::pack(&w);
+            assert_eq!(p.unpack(), w, "roundtrip of {s:?}");
+            assert_eq!(PackedWord::pack(&p.unpack()), p, "repack of {s:?}");
+            assert_eq!(p.to_indices(), w.to_indices(), "indices of {s:?}");
+        }
+    }
+
+    /// Direct string encoding matches encode-then-pack, for Arabic,
+    /// diacritic-laden, mixed, oversized, and non-Arabic input.
+    #[test]
+    fn packed_encode_matches_array_encode() {
+        for s in [
+            "",
+            "درس",
+            "\u{062F}\u{064E}\u{0631}\u{064E}\u{0633}\u{064E}", // with fatha
+            "أفاستسقيناكموها",
+            "أفاستسقيناكموهاوووو", // truncates at 15
+            "hello",
+            "قاxل",
+            "😀درس",
+            "  ",
+        ] {
+            assert_eq!(
+                PackedWord::encode(s),
+                PackedWord::pack(&ArabicWord::encode(s)),
+                "encode of {s:?}"
+            );
+        }
+    }
+
+    /// Non-Arabic characters canonicalize to PAD but keep their length
+    /// slot, so window geometry survives; `has_arabic` sees through it.
+    #[test]
+    fn packed_canonicalizes_non_arabic() {
+        let p = PackedWord::encode("hello");
+        assert_eq!(p.len(), 5);
+        assert!(!p.has_arabic());
+        assert_eq!(p.unpack().as_slice(), &[PAD; 5]);
+        let mixed = PackedWord::encode("قاxل");
+        assert_eq!(mixed.len(), 4);
+        assert!(mixed.has_arabic());
+        assert_eq!(mixed.index_at(2), 0);
+        assert_eq!(mixed.char_at(0), QAF);
+    }
+
+    /// The register-resident profile equals the table-driven profile of
+    /// the unpacked word on a sweep of shapes.
+    #[test]
+    fn packed_profile_matches_affix_profile() {
+        let words =
+            ["سيلعبون", "أفاستسقيناكموها", "بكتبون", "درس", "", "ظظظظ", "ستون", "hello"];
+        for s in words {
+            let w = ArabicWord::encode(s);
+            let p = PackedWord::pack(&w);
+            assert_eq!(p.profile(), AffixProfile::of(&w), "profile of {s:?}");
+        }
     }
 
     #[test]

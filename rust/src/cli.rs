@@ -40,6 +40,7 @@ const VALUE_FLAGS: &[&str] = &[
     "--algo",
     "--connect",
     "--proto",
+    "--cache-slots",
 ];
 
 impl Args {
@@ -122,11 +123,13 @@ SUBCOMMANDS:
                           four engines per-request] [--workers N] [--batch B]
                           [--handlers H]  (fixed connection-handler pool;
                           clients may pipeline many lines per write)
+                          [--cache-slots K]  (registry backend: memoizing
+                          stem-cache size; 0 disables, default 32768)
     loadtest              drive the real TCP server from M client threads and
                           report p50/p90/p99 + words/sec from the histogram
                           metrics [--conns N] [--secs S] [--depth D]
                           [--mode pipelined|per-word|both] [--backend …]
-                          [--proto line|ama1] [--algo …]
+                          [--proto line|ama1] [--algo …] [--cache-slots K]
                           [--workers N] [--batch B] [--out BENCH_PR2.json]
     selftest              cross-validate software / HW-sim / PJRT backends
     bench json            benchmark the software + hw-sim backends and write

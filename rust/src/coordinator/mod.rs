@@ -12,6 +12,13 @@
 //!   [`Request`] carries an [`EngineOpts`] *options word* (algorithm,
 //!   infix override, trace bit packed into one byte), so the algorithm is
 //!   a per-request parameter instead of a compile-time backend choice.
+//!   Since PR 4 the word itself rides as a [`PackedWord`] `u128` register
+//!   (packed at the `Handle` boundary), so a whole request is ~32 bytes
+//!   of plain data and workers dispatch through
+//!   [`StemBackend::analyze_batch_packed`] without re-encoding.
+//!   The cache-fronted [`RegistryBackend`] probes a shared
+//!   [`StemCache`] before kernel dispatch — repeated surface forms (the
+//!   common case in real Arabic text) are answered by one lock-free load.
 //! * **Batching** — a dynamic batcher groups whatever is waiting (up to
 //!   `max_batch`, with a `max_wait` deadline) and hands it to a worker
 //!   running a pluggable [`StemBackend`]. A popped batch is partitioned
@@ -51,7 +58,8 @@
 use crate::analysis::{
     Algorithm, Analysis, AnalyzerRegistry, EngineOpts, ErrorCode, ServeError,
 };
-use crate::chars::ArabicWord;
+use crate::cache::{StemCache, DEFAULT_CACHE_SLOTS};
+use crate::chars::{ArabicWord, PackedWord};
 use crate::exec::{BoundedQueue, QueueError, ReplySlab, WorkerPool};
 use crate::metrics::ServiceMetrics;
 use crate::roots::RootSet;
@@ -95,16 +103,33 @@ pub trait StemBackend {
             .map(|r| Analysis::from_result(r, algorithm))
             .collect())
     }
+
+    /// Packed-batch dispatch (PR 4) — what the coordinator's workers
+    /// actually call, since every queued [`Request`] carries a
+    /// [`PackedWord`]. The default unpacks at this boundary and forwards
+    /// to [`StemBackend::analyze_batch_opts`], so existing backends work
+    /// unchanged; packed-native backends ([`SoftwareBackend`],
+    /// [`RegistryBackend`]) override to keep the words in registers.
+    fn analyze_batch_packed(
+        &mut self,
+        words: &[PackedWord],
+        opts: EngineOpts,
+    ) -> Result<Vec<Analysis>> {
+        let unpacked: Vec<ArabicWord> = words.iter().map(|w| w.unpack()).collect();
+        self.analyze_batch_opts(&unpacked, opts)
+    }
 }
 
 /// Constructs a backend on the worker thread (worker id passed in).
 pub type BackendFactory = Box<dyn Fn(usize) -> Result<Box<dyn StemBackend>> + Send + Sync>;
 
-/// One queued request: the word, the reply-slab ticket its result is
-/// routed to, and the packed per-request options word. Plain data, no
-/// heap, no per-request channel.
+/// One queued request: the word in its packed register form (PR 4 — 16
+/// bytes instead of the 32-byte `ArabicWord`, shrinking every queue slot
+/// and the per-request copy), the reply-slab ticket its result is routed
+/// to, and the packed per-request options word. Plain data, no heap, no
+/// per-request channel.
 struct Request {
-    word: ArabicWord,
+    word: PackedWord,
     submitted: Instant,
     ticket: u32,
     opts: EngineOpts,
@@ -154,9 +179,19 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start workers, each owning a backend built by `factory`.
     pub fn start(cfg: CoordinatorConfig, factory: BackendFactory) -> Self {
+        Self::start_with_metrics(cfg, factory, Arc::new(ServiceMetrics::new()))
+    }
+
+    /// [`Coordinator::start`] with caller-supplied metrics, so a factory
+    /// (e.g. a cache-counting [`RegistryBackend`]) can share the same
+    /// [`ServiceMetrics`] the coordinator reports from.
+    pub fn start_with_metrics(
+        cfg: CoordinatorConfig,
+        factory: BackendFactory,
+        metrics: Arc<ServiceMetrics>,
+    ) -> Self {
         let queue: Arc<BoundedQueue<Request>> = BoundedQueue::new(cfg.queue_capacity);
         let slab: Arc<ReplySlab<Analysis>> = ReplySlab::new(cfg.reply_slots());
-        let metrics = Arc::new(ServiceMetrics::new());
         let q = queue.clone();
         let s = slab.clone();
         let m = metrics.clone();
@@ -182,7 +217,7 @@ impl Coordinator {
                     return;
                 }
             };
-            let mut words = Vec::with_capacity(cfg.max_batch);
+            let mut words: Vec<PackedWord> = Vec::with_capacity(cfg.max_batch);
             // Option-group scratch, reused across batches. A popped batch
             // is partitioned by its packed options word; uniform batches
             // (the overwhelmingly common case) form exactly one group.
@@ -213,7 +248,7 @@ impl Coordinator {
                     // design woke them via dropped Senders; the slab has no
                     // such tripwire).
                     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        backend.analyze_batch_opts(&words, opts)
+                        backend.analyze_batch_packed(&words, opts)
                     }));
                     let results = match outcome {
                         Ok(Ok(results)) if results.len() == words.len() => Some(results),
@@ -260,12 +295,33 @@ impl Coordinator {
     /// process answers per-request `algorithm`/`infix`/`trace` options
     /// for all four engines. `cfg_stemmer` sets the linguistic engine's
     /// *default* infix behavior (per-request options still override it).
+    ///
+    /// Serves through a default-sized shared [`StemCache`]
+    /// ([`DEFAULT_CACHE_SLOTS`]); use
+    /// [`Coordinator::start_registry_cached`] to size or disable it.
     pub fn start_registry(
         cfg: CoordinatorConfig,
         roots: Arc<RootSet>,
         cfg_stemmer: StemmerConfig,
     ) -> Self {
-        Self::start(cfg, registry_factory(roots, cfg_stemmer))
+        Self::start_registry_cached(cfg, roots, cfg_stemmer, DEFAULT_CACHE_SLOTS)
+    }
+
+    /// [`Coordinator::start_registry`] with an explicit stem-cache size
+    /// (the `--cache-slots` knob; `0` disables caching entirely). One
+    /// cache is shared by every worker, so a form analyzed on any worker
+    /// is a hit on all of them; `cache_hits`/`cache_misses` land in this
+    /// coordinator's [`ServiceMetrics`].
+    pub fn start_registry_cached(
+        cfg: CoordinatorConfig,
+        roots: Arc<RootSet>,
+        cfg_stemmer: StemmerConfig,
+        cache_slots: usize,
+    ) -> Self {
+        let metrics = Arc::new(ServiceMetrics::new());
+        let cache = (cache_slots > 0).then(|| StemCache::new(cache_slots));
+        let factory = registry_factory_cached(roots, cfg_stemmer, cache, Some(metrics.clone()));
+        Self::start_with_metrics(cfg, factory, metrics)
     }
 
     pub fn handle(&self) -> Handle {
@@ -414,8 +470,24 @@ impl Handle {
         self.submit_opts(word, EngineOpts::default())
     }
 
-    /// Submit one word with a per-request options word.
+    /// Submit one word with a per-request options word. Packs at the
+    /// boundary (PR 4) — the queue and slab carry only the register form.
     pub fn submit_opts(&self, word: ArabicWord, opts: EngineOpts) -> Result<Pending, ServeError> {
+        self.submit_packed_opts(PackedWord::pack(&word), opts)
+    }
+
+    /// Submit one already-packed word at default options.
+    pub fn submit_packed(&self, word: PackedWord) -> Result<Pending, ServeError> {
+        self.submit_packed_opts(word, EngineOpts::default())
+    }
+
+    /// Submit one already-packed word with a per-request options word —
+    /// the native entry point every other submit path funnels into.
+    pub fn submit_packed_opts(
+        &self,
+        word: PackedWord,
+        opts: EngineOpts,
+    ) -> Result<Pending, ServeError> {
         let ticket = self.acquire_ticket();
         let req = Request { word, submitted: Instant::now(), ticket, opts };
         match self.enqueue(req, None) {
@@ -443,7 +515,17 @@ impl Handle {
     /// allocation per word, order preserved.
     pub fn stem_bulk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>, ServeError> {
         Ok(self
-            .analyze_windowed(words, EngineOpts::default(), None)?
+            .analyze_windowed(words.iter().map(PackedWord::pack), EngineOpts::default(), None)?
+            .into_iter()
+            .map(|a| a.result)
+            .collect())
+    }
+
+    /// [`Handle::stem_bulk`] over already-packed words — the server's
+    /// line-ingest path, which encodes UTF-8 straight into registers.
+    pub fn stem_bulk_packed(&self, words: &[PackedWord]) -> Result<Vec<StemResult>, ServeError> {
+        Ok(self
+            .analyze_windowed(words.iter().copied(), EngineOpts::default(), None)?
             .into_iter()
             .map(|a| a.result)
             .collect())
@@ -462,7 +544,16 @@ impl Handle {
         words: &[ArabicWord],
         opts: EngineOpts,
     ) -> Result<Vec<Analysis>, ServeError> {
-        self.analyze_windowed(words, opts, None)
+        self.analyze_windowed(words.iter().map(PackedWord::pack), opts, None)
+    }
+
+    /// [`Handle::analyze_bulk`] over already-packed words.
+    pub fn analyze_bulk_packed(
+        &self,
+        words: &[PackedWord],
+        opts: EngineOpts,
+    ) -> Result<Vec<Analysis>, ServeError> {
+        self.analyze_windowed(words.iter().copied(), opts, None)
     }
 
     /// [`analyze_bulk`](Handle::analyze_bulk) with a per-word submission
@@ -476,24 +567,41 @@ impl Handle {
         opts: EngineOpts,
         submit_timeout: Duration,
     ) -> Result<Vec<Analysis>, ServeError> {
-        self.analyze_windowed(words, opts, Some(submit_timeout))
+        self.analyze_windowed(words.iter().map(PackedWord::pack), opts, Some(submit_timeout))
+    }
+
+    /// [`Handle::analyze_bulk_deadline`] over already-packed words — the
+    /// AMA/1 handler's entry (envelopes encode straight to registers).
+    pub fn analyze_bulk_packed_deadline(
+        &self,
+        words: &[PackedWord],
+        opts: EngineOpts,
+        submit_timeout: Duration,
+    ) -> Result<Vec<Analysis>, ServeError> {
+        self.analyze_windowed(words.iter().copied(), opts, Some(submit_timeout))
     }
 
     /// Windowed submit/collect: keep up to `window` tickets in flight;
     /// when the slab runs dry, reap our own oldest reply (guaranteed to be
     /// filled eventually, since it was accepted by the queue) instead of
-    /// deadlocking on capacity we ourselves are holding.
-    fn analyze_windowed(
+    /// deadlocking on capacity we ourselves are holding. Generic over a
+    /// packed-word iterator so the `ArabicWord` entry points pack
+    /// per-word with no intermediate buffer.
+    fn analyze_windowed<I>(
         &self,
-        words: &[ArabicWord],
+        words: I,
         opts: EngineOpts,
         submit_timeout: Option<Duration>,
-    ) -> Result<Vec<Analysis>, ServeError> {
+    ) -> Result<Vec<Analysis>, ServeError>
+    where
+        I: ExactSizeIterator<Item = PackedWord>,
+    {
+        let total = words.len();
         let window = (self.slab.capacity() / 2).max(1);
         let submitted = Instant::now();
-        let mut out: Vec<Analysis> = Vec::with_capacity(words.len());
-        let mut inflight: VecDeque<u32> = VecDeque::with_capacity(window.min(words.len()));
-        for &word in words {
+        let mut out: Vec<Analysis> = Vec::with_capacity(total);
+        let mut inflight: VecDeque<u32> = VecDeque::with_capacity(window.min(total));
+        for word in words {
             if inflight.len() >= window {
                 let t = inflight.pop_front().expect("window non-empty");
                 out.push(self.slab.wait(t));
@@ -530,8 +638,7 @@ impl Handle {
                 return Err(self.rejection(
                     e,
                     format!(
-                        "mid-stream: {accepted}/{} words accepted, {} replies drained",
-                        words.len(),
+                        "mid-stream: {accepted}/{total} words accepted, {} replies drained",
                         out.len()
                     ),
                 ));
@@ -573,6 +680,14 @@ impl StemBackend for SoftwareBackend {
     ) -> Result<Vec<Analysis>> {
         use crate::analysis::Analyzer as _;
         Ok(self.0.analyze_batch(words, &opts.to_options()))
+    }
+
+    fn analyze_batch_packed(
+        &mut self,
+        words: &[PackedWord],
+        opts: EngineOpts,
+    ) -> Result<Vec<Analysis>> {
+        Ok(self.0.analyze_batch_packed(words, &opts.to_options()))
     }
 }
 
@@ -624,15 +739,76 @@ impl StemBackend for XlaBackend {
 /// All four engines behind one backend (PR 3): the options word routes
 /// each batch group to its engine, making algorithm + infix + trace
 /// per-request serving parameters.
-pub struct RegistryBackend(pub AnalyzerRegistry);
+///
+/// PR 4 puts the optional [`StemCache`] in front of kernel dispatch:
+/// every trace-free request probes the shared cache first; only the
+/// misses reach an engine, and their results are stored on the way out.
+/// Trace requests bypass the cache entirely (a trace allocates and is
+/// request-specific), so they always run the real pipeline and never
+/// pollute the cache. Hits and misses are counted into the coordinator's
+/// [`ServiceMetrics`] when one is attached.
+pub struct RegistryBackend {
+    registry: AnalyzerRegistry,
+    cache: Option<Arc<StemCache>>,
+    metrics: Option<Arc<ServiceMetrics>>,
+}
 
 impl RegistryBackend {
     pub fn new(roots: Arc<RootSet>) -> Self {
-        RegistryBackend(AnalyzerRegistry::new(roots))
+        Self::with_config(roots, StemmerConfig::default())
     }
 
     pub fn with_config(roots: Arc<RootSet>, cfg: StemmerConfig) -> Self {
-        RegistryBackend(AnalyzerRegistry::with_config(roots, cfg))
+        Self::with_cache(roots, cfg, None, None)
+    }
+
+    /// A registry backend fronted by `cache` (shared across workers),
+    /// counting hits/misses into `metrics` when given.
+    pub fn with_cache(
+        roots: Arc<RootSet>,
+        cfg: StemmerConfig,
+        cache: Option<Arc<StemCache>>,
+        metrics: Option<Arc<ServiceMetrics>>,
+    ) -> Self {
+        RegistryBackend {
+            registry: AnalyzerRegistry::with_config(roots, cfg),
+            cache,
+            metrics,
+        }
+    }
+
+    /// The cache-fronted dispatch core shared by both batch entry points.
+    fn analyze_packed_cached(&self, words: &[PackedWord], opts: EngineOpts) -> Vec<Analysis> {
+        let aopts = opts.to_options();
+        let cache = match &self.cache {
+            Some(c) if !aopts.want_trace => c,
+            _ => return self.registry.analyze_batch_packed(words, &aopts),
+        };
+        let mut out: Vec<Option<Analysis>> = vec![None; words.len()];
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_words: Vec<PackedWord> = Vec::new();
+        for (i, &w) in words.iter().enumerate() {
+            match cache.lookup(w, opts) {
+                Some(a) => out[i] = Some(a),
+                None => {
+                    miss_idx.push(i);
+                    miss_words.push(w);
+                }
+            }
+        }
+        if let Some(m) = &self.metrics {
+            let misses = miss_idx.len() as u64;
+            m.cache_hits.fetch_add(words.len() as u64 - misses, Ordering::Relaxed);
+            m.cache_misses.fetch_add(misses, Ordering::Relaxed);
+        }
+        if !miss_words.is_empty() {
+            let computed = self.registry.analyze_batch_packed(&miss_words, &aopts);
+            for (&i, a) in miss_idx.iter().zip(computed) {
+                cache.insert(words[i], opts, &a);
+                out[i] = Some(a);
+            }
+        }
+        out.into_iter().map(|a| a.expect("every index hit or computed")).collect()
     }
 }
 
@@ -643,7 +819,7 @@ impl StemBackend for RegistryBackend {
 
     fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
         use crate::analysis::Analyzer as _;
-        Ok(self.0.get(Algorithm::Linguistic).stem_batch(words))
+        Ok(self.registry.get(Algorithm::Linguistic).stem_batch(words))
     }
 
     fn analyze_batch_opts(
@@ -651,14 +827,48 @@ impl StemBackend for RegistryBackend {
         words: &[ArabicWord],
         opts: EngineOpts,
     ) -> Result<Vec<Analysis>> {
-        Ok(self.0.analyze_batch(words, &opts.to_options()))
+        // Without a cache there is nothing to key, so skip the
+        // pack/unpack round-trip and dispatch the codepoint slice as-is
+        // (pre-PR-4 behavior). With a cache, words are packed once here
+        // — both to probe and because the kernels consume registers.
+        if self.cache.is_none() {
+            return Ok(self.registry.analyze_batch(words, &opts.to_options()));
+        }
+        let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+        Ok(self.analyze_packed_cached(&packed, opts))
+    }
+
+    fn analyze_batch_packed(
+        &mut self,
+        words: &[PackedWord],
+        opts: EngineOpts,
+    ) -> Result<Vec<Analysis>> {
+        Ok(self.analyze_packed_cached(words, opts))
     }
 }
 
 /// Factory for [`RegistryBackend`] workers (the `--backend registry`
-/// serve default).
+/// serve default), cache-less.
 pub fn registry_factory(roots: Arc<RootSet>, cfg: StemmerConfig) -> BackendFactory {
-    Box::new(move |_| Ok(Box::new(RegistryBackend::with_config(roots.clone(), cfg))))
+    registry_factory_cached(roots, cfg, None, None)
+}
+
+/// Factory for cache-fronted [`RegistryBackend`] workers: every worker
+/// clones the same shared cache and metrics.
+pub fn registry_factory_cached(
+    roots: Arc<RootSet>,
+    cfg: StemmerConfig,
+    cache: Option<Arc<StemCache>>,
+    metrics: Option<Arc<ServiceMetrics>>,
+) -> BackendFactory {
+    Box::new(move |_| {
+        Ok(Box::new(RegistryBackend::with_cache(
+            roots.clone(),
+            cfg,
+            cache.clone(),
+            metrics.clone(),
+        )))
+    })
 }
 
 #[cfg(test)]
@@ -1020,6 +1230,133 @@ mod tests {
         // and absent when not requested
         let a = h.analyze(ArabicWord::encode("سيلعبون"), EngineOpts::default()).unwrap();
         assert!(a.trace.is_none());
+        c.shutdown();
+    }
+
+    // -- PR 4: packed requests + the memoizing stem cache -------------------
+
+    /// Packed bulk entry points agree with the ArabicWord ones.
+    #[test]
+    fn packed_bulk_matches_array_bulk() {
+        let c = Coordinator::start(
+            CoordinatorConfig { workers: 2, max_batch: 16, ..Default::default() },
+            sw_factory(),
+        );
+        let h = c.handle();
+        let words: Vec<ArabicWord> = ["يدرس", "قال", "ظظظ", "فتزحزحت", "سيلعبون"]
+            .iter()
+            .cycle()
+            .take(100)
+            .map(|s| ArabicWord::encode(s))
+            .collect();
+        let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+        assert_eq!(h.stem_bulk_packed(&packed).unwrap(), h.stem_bulk(&words).unwrap());
+        let r = h.submit_packed(packed[0]).unwrap().wait();
+        assert_eq!(r.result.root_word().to_string_ar(), "درس");
+        c.shutdown();
+    }
+
+    /// The cache's hit path is bit-identical to the miss path across
+    /// mixed options: the same mixed-algorithm word stream run cold
+    /// (all misses) and warm (hits) produces identical results, and the
+    /// hit/miss counters move as expected.
+    #[test]
+    fn cache_hit_path_identical_to_miss_path() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let c = Coordinator::start_registry_cached(
+            CoordinatorConfig { workers: 2, max_batch: 32, ..Default::default() },
+            roots,
+            StemmerConfig::default(),
+            4096,
+        );
+        let h = c.handle();
+        let words: Vec<ArabicWord> = ["يدرس", "قال", "دارس", "والدرس", "مدروس", "ظظظ"]
+            .iter()
+            .cycle()
+            .take(120)
+            .map(|s| ArabicWord::encode(s))
+            .collect();
+        let mut cold: Vec<Vec<Analysis>> = Vec::new();
+        for algo in Algorithm::ALL {
+            cold.push(h.analyze_bulk(&words, opts_for(algo)).unwrap());
+        }
+        let after_cold = h.metrics().snapshot();
+        assert!(after_cold.cache_misses > 0, "cold pass must miss");
+        for (algo, cold_pass) in Algorithm::ALL.iter().zip(&cold) {
+            let warm = h.analyze_bulk(&words, opts_for(*algo)).unwrap();
+            assert_eq!(&warm, cold_pass, "{algo}: warm != cold");
+        }
+        let after_warm = h.metrics().snapshot();
+        // The cache is direct-mapped, so a few of the 24 (word, opts) keys
+        // may collide and evict each other across passes — require the
+        // warm pass to be dominated by hits, not to hit perfectly.
+        assert!(
+            after_warm.cache_hits >= after_cold.cache_hits + 2 * words.len() as u64,
+            "warm pass must mostly hit: {after_warm:?}"
+        );
+        // infix override is part of the key: no cross-contamination
+        let infix_off = EngineOpts::new(&AnalyzeOptions {
+            infix: Some(false),
+            ..Default::default()
+        });
+        let w = ArabicWord::encode("قال");
+        assert_eq!(h.analyze(w, EngineOpts::default()).unwrap().result.kind, MatchKind::Restored);
+        assert_eq!(h.analyze(w, infix_off).unwrap().result.kind, MatchKind::None);
+        assert_eq!(h.analyze(w, EngineOpts::default()).unwrap().result.kind, MatchKind::Restored);
+        c.shutdown();
+    }
+
+    /// Trace requests bypass the cache: they always carry a trace (even
+    /// when the same word is already cached trace-less) and never seed
+    /// trace-less entries with wrong shapes.
+    #[test]
+    fn trace_requests_bypass_cache() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let c = Coordinator::start_registry_cached(
+            CoordinatorConfig::default(),
+            roots,
+            StemmerConfig::default(),
+            1024,
+        );
+        let h = c.handle();
+        let w = ArabicWord::encode("سيلعبون");
+        let trace_opts =
+            EngineOpts::new(&AnalyzeOptions { want_trace: true, ..Default::default() });
+        // warm the trace-less entry first
+        assert!(h.analyze(w, EngineOpts::default()).unwrap().trace.is_none());
+        for _ in 0..3 {
+            let a = h.analyze(w, trace_opts).unwrap();
+            let trace = a.trace.expect("trace requested must always trace");
+            assert_eq!(trace.stages.len(), 5);
+        }
+        // and the trace-less path still returns no trace afterwards
+        assert!(h.analyze(w, EngineOpts::default()).unwrap().trace.is_none());
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.errors, 0);
+        c.shutdown();
+    }
+
+    /// `cache_slots = 0` disables the cache: serving still works and the
+    /// counters stay at zero.
+    #[test]
+    fn cache_disabled_serves_identically() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let c = Coordinator::start_registry_cached(
+            CoordinatorConfig::default(),
+            roots.clone(),
+            StemmerConfig::default(),
+            0,
+        );
+        let h = c.handle();
+        let words: Vec<ArabicWord> =
+            ["يدرس", "قال", "ظظظ"].iter().map(|s| ArabicWord::encode(s)).collect();
+        let direct = Stemmer::with_defaults(roots).stem_batch(&words);
+        for _ in 0..2 {
+            let got = h.stem_bulk(&words).unwrap();
+            assert_eq!(got, direct);
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.cache_hits + snap.cache_misses, 0, "no cache counters when disabled");
         c.shutdown();
     }
 

@@ -115,9 +115,55 @@
 //!   [`client::Client`] is the typed client used by `ama analyze
 //!   --connect`, `ama loadtest --proto ama1`, and the serving example.
 //!   Full spec: `docs/PROTOCOL.md`.
+//!
+//! ## Packed word layout (PR 4)
+//!
+//! The paper's pipeline owes its throughput to fixed-width word registers
+//! flowing between stages with no memory indirection. The software
+//! analog is [`chars::PackedWord`]: the whole word in one `u128` —
+//! 15 × 6-bit dense alphabet indices (character `i` at bits
+//! `6i..6i+6`) plus a 4-bit length at bits 90..94. With a 37-symbol
+//! alphabet and the paper's 15-character bound, 94 bits cover every
+//! word; bits 94..128 stay zero, so equality, hashing, and the stem-cache
+//! key are one `u128` compare.
+//!
+//! What each pipeline stage becomes on the register:
+//!
+//! * **Fetch** — `ama serve`'s line ingest and the AMA/1 envelope
+//!   handler encode UTF-8 straight into registers
+//!   ([`chars::PackedWord::encode`], no intermediate `[u16; 15]`), and
+//!   `coordinator::Request` carries the register through the bounded
+//!   queue and reply slab (~2× smaller request, `Handle`/`StemBackend`
+//!   keep their `ArabicWord` signatures via boundary conversion).
+//! * **Affix** — class tests are shift+mask probes against the
+//!   [`chars::CLASS_PREFIX_BITS`]-style 37-bit planes (the comparator
+//!   banks of Figs 6–7 as register constants);
+//!   [`chars::PackedWord::profile`] computes the
+//!   [`chars::AffixProfile`] without a table load.
+//! * **Candidate/Compare** — [`stemmer::Stemmer::stem_packed`] /
+//!   `stem_batch_packed` probe direct windows through
+//!   [`roots::RootBitmap::contains_packed`] and accumulate the
+//!   modified-window (remove-infix/restore) base-37 keys from the
+//!   packed nibbles inline — the five candidate streams never leave
+//!   the register until the one winning window is written back as
+//!   codepoints.
+//! * **Single-cycle fetch for repeats** — [`cache::StemCache`] memoizes
+//!   `(PackedWord, EngineOpts) → Analysis` in a sharded, lock-free,
+//!   direct-mapped table (seqlock-style versioned slots; readers never
+//!   block writers). The registry backend probes it before kernel
+//!   dispatch; real Arabic text reuses surface forms constantly, so the
+//!   serving common case is one load. `--cache-slots` sizes it,
+//!   `cache_hits`/`cache_misses`/`cache_hit_rate` report it.
+//!
+//! Packing is *canonicalizing*: non-Arabic codepoints become PAD (index
+//! 0, no affix class, no dictionary key), exactly like the paper's
+//! Arabic-block-only datapath — results are unchanged, and the wire
+//! formats are byte-identical (packing is internal; see
+//! `docs/PROTOCOL.md`).
 
 pub mod analysis;
 pub mod bench;
+pub mod cache;
 pub mod chars;
 pub mod cli;
 pub mod client;
@@ -141,5 +187,6 @@ pub use analysis::{
     Algorithm, Analysis, AnalyzeOptions, Analyzer, AnalyzerRegistry, EngineOpts, ErrorCode,
     ServeError, Trace,
 };
-pub use chars::ArabicWord;
+pub use cache::StemCache;
+pub use chars::{ArabicWord, PackedWord};
 pub use stemmer::{MatchKind, StemResult, Stemmer, StemmerConfig};

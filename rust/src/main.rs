@@ -382,6 +382,33 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Start a coordinator for a named backend. The `registry` backend goes
+/// through [`Coordinator::start_registry_cached`] so the shared stem
+/// cache (sized by `--cache-slots`, 0 = off) fronts kernel dispatch and
+/// its hit/miss counters land in the coordinator's metrics; every other
+/// backend uses the generic factory path, cache-less.
+fn start_coordinator(
+    args: &Args,
+    backend: &str,
+    roots: Arc<RootSet>,
+    infix: bool,
+    cfg: CoordinatorConfig,
+) -> Result<Coordinator> {
+    if backend == "registry" {
+        let cache_slots = args
+            .flag_usize("--cache-slots", ama::cache::DEFAULT_CACHE_SLOTS)
+            .map_err(|e| anyhow!(e))?;
+        return Ok(Coordinator::start_registry_cached(
+            cfg,
+            roots,
+            StemmerConfig { infix_processing: infix },
+            cache_slots,
+        ));
+    }
+    let factory = backend_factory(backend, roots, infix, artifacts_dir(args), cfg.workers)?;
+    Ok(Coordinator::start(cfg, factory))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let roots = load_roots(args)?;
     let workers = args.flag_usize("--workers", 1).map_err(|e| anyhow!(e))?;
@@ -390,13 +417,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // legacy bare-line protocol behaves exactly like the old `software`
     // backend (default options select the linguistic engine).
     let backend = args.flag_or("--backend", "registry");
-    let factory = backend_factory(
-        backend,
-        roots,
-        !args.switch("--no-infix"),
-        artifacts_dir(args),
-        workers,
-    )?;
     let cfg = CoordinatorConfig {
         workers,
         max_batch: args.flag_usize("--batch", 256).map_err(|e| anyhow!(e))?,
@@ -405,7 +425,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         ..Default::default()
     };
-    let coord = Coordinator::start(cfg, factory);
+    let coord = start_coordinator(args, backend, roots, !args.switch("--no-infix"), cfg)?;
     let port = args.flag_usize("--port", 7601).map_err(|e| anyhow!(e))?;
     let srv_cfg = ama::server::ServerConfig {
         handlers: args.flag_usize("--handlers", 8).map_err(|e| anyhow!(e))?,
@@ -471,14 +491,12 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         Vec::new();
     for (mode_name, depth) in depths {
         // Fresh stack per mode so metrics and batching state don't bleed.
-        let factory =
-            backend_factory(backend, roots.clone(), true, artifacts_dir(args), workers)?;
         let cfg = CoordinatorConfig {
             workers,
             max_batch: args.flag_usize("--batch", 256).map_err(|e| anyhow!(e))?,
             ..Default::default()
         };
-        let coord = Coordinator::start(cfg, factory);
+        let coord = start_coordinator(args, backend, roots.clone(), true, cfg)?;
         let srv_cfg = ama::server::ServerConfig {
             // one handler per connection: the pool never gates the fleet
             handlers: conns,
@@ -559,6 +577,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                  \"rtt_p50_us\": {}, \"rtt_p90_us\": {}, \"rtt_p99_us\": {}, \
                  \"server_p50_us\": {}, \"server_p90_us\": {}, \"server_p99_us\": {}, \
                  \"mean_batch\": {:.2}, \"queue_full\": {}, \"slab_waits\": {}, \
+                 \"cache_hits\": {}, \"cache_misses\": {}, \"cache_hit_rate\": {:.4}, \
                  \"errors\": {}}}{}\n",
                 o.depth,
                 o.words,
@@ -572,6 +591,9 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                 snap.mean_batch_size,
                 snap.queue_full_events,
                 snap.slab_waits,
+                snap.cache_hits,
+                snap.cache_misses,
+                snap.cache_hit_rate(),
                 o.errors + snap.errors,
                 if i + 1 < rows.len() { "," } else { "" }
             ));
@@ -655,6 +677,60 @@ fn cmd_bench(args: &Args) -> Result<()> {
     println!("{r}");
     rows.push(r);
 
+    // PR 4 rows: the packed-register kernel vs the array kernel, and the
+    // registry dispatch with the memoizing cache warm vs off.
+    let packed: Vec<ama::chars::PackedWord> =
+        words.iter().map(ama::chars::PackedWord::pack).collect();
+    let r = ama::bench::bench_words("software/stem_packed", &cfg, n, || {
+        let mut acc = 0usize;
+        for &p in &packed {
+            acc += stemmer.stem_packed(p).kind as usize;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{r}");
+    let packed_wps = r.wps().unwrap_or(0.0);
+    rows.push(r);
+
+    let r = ama::bench::bench_words("software/stem_batch_packed", &cfg, n, || {
+        let res = stemmer.stem_batch_packed(&packed);
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
+    rows.push(r);
+
+    let cache_metrics = Arc::new(ama::metrics::ServiceMetrics::new());
+    let mut cached_backend = RegistryBackend::with_cache(
+        roots.clone(),
+        StemmerConfig::default(),
+        Some(ama::cache::StemCache::new(1 << 16)),
+        Some(cache_metrics.clone()),
+    );
+    let opts = ama::analysis::EngineOpts::default();
+    // One warm pass seeds the cache; the measured iterations then run
+    // the hit path (the corpus re-uses surface forms, as real text does).
+    std::hint::black_box(
+        cached_backend.analyze_batch_packed(&packed, opts).expect("warm pass").len(),
+    );
+    let r = ama::bench::bench_words("serve/registry_cache_warm", &cfg, n, || {
+        let res = cached_backend.analyze_batch_packed(&packed, opts).expect("cache bench");
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
+    let cache_warm_wps = r.wps().unwrap_or(0.0);
+    rows.push(r);
+
+    let mut uncached_backend =
+        RegistryBackend::with_config(roots.clone(), StemmerConfig::default());
+    let r = ama::bench::bench_words("serve/registry_cache_off", &cfg, n, || {
+        let res = uncached_backend.analyze_batch_packed(&packed, opts).expect("cache bench");
+        std::hint::black_box(res.len());
+    });
+    println!("{r}");
+    let cache_off_wps = r.wps().unwrap_or(0.0);
+    rows.push(r);
+    let cache_snap = cache_metrics.snapshot();
+
     use ama::hw::Processor as _;
     let dp = DatapathConfig { infix_units: true };
     let r = ama::bench::bench_words("hw-sim/pipelined (wall-clock)", &cfg, n, || {
@@ -689,6 +765,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
     json.push_str(&format!(
         "  \"speedup_stem_vs_reference\": {speedup:.3},\n"
     ));
+    let speedup_packed = if fused_wps > 0.0 { packed_wps / fused_wps } else { 0.0 };
+    let speedup_cache = if cache_off_wps > 0.0 { cache_warm_wps / cache_off_wps } else { 0.0 };
+    json.push_str(&format!(
+        "  \"speedup_packed_vs_array\": {speedup_packed:.3},\n"
+    ));
+    json.push_str(&format!(
+        "  \"speedup_cache_warm_vs_off\": {speedup_cache:.3},\n"
+    ));
+    json.push_str(&format!(
+        "  \"cache_hit_rate\": {:.4},\n",
+        cache_snap.cache_hit_rate()
+    ));
     json.push_str(&format!(
         "  \"hw_model_wps\": {{\"non_pipelined\": {:.1}, \"pipelined\": {:.1}}},\n",
         np.throughput_wps(n),
@@ -710,6 +798,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     json.push_str("  ]\n}\n");
     std::fs::write(&out_path, &json).with_context(|| format!("writing {out_path}"))?;
     println!("\nspeedup stem vs stem_reference: {speedup:.2}x");
+    println!("speedup stem_packed vs stem:    {speedup_packed:.2}x");
+    println!(
+        "speedup cache warm vs off:      {speedup_cache:.2}x (hit rate {:.1}%)",
+        100.0 * cache_snap.cache_hit_rate()
+    );
     println!("wrote {out_path}");
     Ok(())
 }

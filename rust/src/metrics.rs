@@ -123,6 +123,13 @@ pub struct ServiceMetrics {
     /// Typed rejections: envelopes answered with `BAD_WORD` (empty or
     /// non-Arabic word in an AMA/1 batch).
     pub rejected_bad_word: AtomicU64,
+    /// Stem-cache probes answered from the cache (PR 4): requests that
+    /// never reached a kernel. Counted by the cache-fronted
+    /// `RegistryBackend`; zero when serving without a cache.
+    pub cache_hits: AtomicU64,
+    /// Stem-cache probes that fell through to kernel dispatch (and then
+    /// seeded the cache).
+    pub cache_misses: AtomicU64,
     /// Histogram of request latency (submit → reply fill).
     latency: LatencyHistogram,
 }
@@ -188,6 +195,8 @@ impl ServiceMetrics {
             rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
             rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
             rejected_bad_word: self.rejected_bad_word.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
             mean_batch_size: self.mean_batch_size(),
             p50_us: self.latency.percentile_us(0.50),
             p90_us: self.latency.percentile_us(0.90),
@@ -207,10 +216,24 @@ pub struct MetricsSnapshot {
     pub rejected_queue_full: u64,
     pub rejected_shutdown: u64,
     pub rejected_bad_word: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
     pub mean_batch_size: f64,
     pub p50_us: u64,
     pub p90_us: u64,
     pub p99_us: u64,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of cache probes that hit (0.0 with no probes — i.e. no
+    /// cache configured or nothing served yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let probes = self.cache_hits + self.cache_misses;
+        if probes == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / probes as f64
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -219,7 +242,8 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "requests={} words={} batches={} mean_batch={:.1} p50={}us p90={}us p99={}us \
              queue_full={} slab_waits={} errors={} \
-             rejected[queue_full={} shutdown={} bad_word={}]",
+             rejected[queue_full={} shutdown={} bad_word={}] \
+             cache[hits={} misses={} rate={:.3}]",
             self.requests,
             self.words,
             self.batches,
@@ -232,7 +256,10 @@ impl std::fmt::Display for MetricsSnapshot {
             self.errors,
             self.rejected_queue_full,
             self.rejected_shutdown,
-            self.rejected_bad_word
+            self.rejected_bad_word,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_hit_rate()
         )
     }
 }
@@ -306,6 +333,20 @@ mod tests {
         assert_eq!(snap.rejected_bad_word, 1);
         let line = format!("{snap}");
         assert!(line.contains("rejected[queue_full=1 shutdown=2 bad_word=1]"), "{line}");
+    }
+
+    #[test]
+    fn cache_counters_and_hit_rate() {
+        let s = ServiceMetrics::new();
+        assert_eq!(s.snapshot().cache_hit_rate(), 0.0, "no probes → 0.0");
+        s.cache_hits.fetch_add(3, Ordering::Relaxed);
+        s.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.cache_hits, 3);
+        assert_eq!(snap.cache_misses, 1);
+        assert!((snap.cache_hit_rate() - 0.75).abs() < 1e-9);
+        let line = format!("{snap}");
+        assert!(line.contains("cache[hits=3 misses=1 rate=0.750]"), "{line}");
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! [`crate::analysis::ErrorCode`].
 
 use crate::analysis::{Algorithm, Analysis, AnalyzeOptions, EngineOpts, ErrorCode, ServeError};
-use crate::chars::ArabicWord;
+use crate::chars::PackedWord;
 use crate::coordinator::Handle;
 use crate::stemmer::MatchKind;
 use std::time::Duration;
@@ -700,12 +700,14 @@ fn serve_analyze(env: &Envelope, handle: &Handle) -> String {
     }
     // BAD_WORD validation: the typed protocol rejects words the engines
     // could only ever answer NONE for structural reasons (empty, or no
-    // Arabic letters at all after normalization). The legacy line
-    // protocol keeps its permissive NONE-reply behavior.
+    // Arabic letters at all after normalization — `has_arabic` is exactly
+    // that predicate on the packed register, and also catches
+    // all-non-Arabic words like "hello" that still occupy length slots).
+    // The legacy line protocol keeps its permissive NONE-reply behavior.
     let mut encoded = Vec::with_capacity(env.words.len());
     for (i, w) in env.words.iter().enumerate() {
-        let enc = ArabicWord::encode(w);
-        if enc.len == 0 {
+        let enc = PackedWord::encode(w);
+        if !enc.has_arabic() {
             handle.metrics().record_rejection(ErrorCode::BadWord);
             return error_reply(
                 env.id,
@@ -718,7 +720,7 @@ fn serve_analyze(env: &Envelope, handle: &Handle) -> String {
         encoded.push(enc);
     }
     let opts = EngineOpts::new(&env.opts);
-    match handle.analyze_bulk_deadline(&encoded, opts, SUBMIT_DEADLINE) {
+    match handle.analyze_bulk_packed_deadline(&encoded, opts, SUBMIT_DEADLINE) {
         Ok(analyses) => {
             let results = env
                 .words

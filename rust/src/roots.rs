@@ -99,6 +99,31 @@ impl RootBitmap {
         self.contains_key(key)
     }
 
+    /// Base-37 key of the `arity`-character window of `w` starting at
+    /// `start`, with digits extracted straight from the packed 6-bit
+    /// nibbles — no unpack, no index array. The length nibble is masked
+    /// off, so every position ≥ `w.len()` (including position 15, where
+    /// the length bits live) reads as digit 0, which never addresses a
+    /// stored root. `start + arity` must stay ≤ `chars::MAX_WORD + 3`
+    /// (shift bound); the stemming kernel's window checks guarantee it.
+    #[inline]
+    pub fn key_packed(&self, w: chars::PackedWord, start: usize) -> usize {
+        let bits = w.0 & chars::PACKED_CHAR_MASK;
+        let mut key = 0usize;
+        let mut j = 0;
+        while j < self.arity as usize {
+            key = key * chars::ALPHABET_SIZE + ((bits >> (6 * (start + j))) & 63) as usize;
+            j += 1;
+        }
+        key
+    }
+
+    /// O(1) membership of the packed window `[start, start + arity)`.
+    #[inline]
+    pub fn contains_packed(&self, w: chars::PackedWord, start: usize) -> bool {
+        self.contains_key(self.key_packed(w, start))
+    }
+
     pub fn arity(&self) -> u32 {
         self.arity
     }
@@ -355,6 +380,55 @@ mod tests {
         assert!(!r.dense.tri.contains_chars(&[0x68, 0x65, 0x6C])); // "hel"
         let first = r.tri_rows()[0];
         assert!(!r.dense.tri.contains_chars(&[first[0], first[1], 0]));
+    }
+
+    /// Packed-window membership agrees with the dense-index oracle at
+    /// every window position of random words (and sees every stored root
+    /// packed at offset 0).
+    #[test]
+    fn contains_packed_matches_contains_indices() {
+        use crate::chars::PackedWord;
+        let r = RootSet::builtin_mini();
+        for row in r.tri_rows() {
+            let p = PackedWord::pack(&ArabicWord::from_codes(row));
+            assert!(r.dense.tri.contains_packed(p, 0));
+        }
+        for row in r.quad_rows() {
+            let p = PackedWord::pack(&ArabicWord::from_codes(row));
+            assert!(r.dense.quad.contains_packed(p, 0));
+        }
+        let mut rng = crate::rng::SplitMix64::new(0xB4C);
+        for _ in 0..2000 {
+            let n = 3 + rng.index(chars::MAX_WORD - 2);
+            let codes: Vec<u16> =
+                (0..n).map(|_| chars::index_char(1 + rng.below(36) as u8)).collect();
+            let w = ArabicWord::from_codes(&codes);
+            let p = PackedWord::pack(&w);
+            let idx = w.to_indices();
+            for start in 0..n {
+                if start + 2 <= n {
+                    assert_eq!(
+                        r.dense.bi.contains_packed(p, start),
+                        r.dense.bi.contains_indices(&idx[start..start + 2]),
+                        "bi window at {start} of {w:?}"
+                    );
+                }
+                if start + 3 <= n {
+                    assert_eq!(
+                        r.dense.tri.contains_packed(p, start),
+                        r.dense.tri.contains_indices(&idx[start..start + 3]),
+                        "tri window at {start} of {w:?}"
+                    );
+                }
+                if start + 4 <= n {
+                    assert_eq!(
+                        r.dense.quad.contains_packed(p, start),
+                        r.dense.quad.contains_indices(&idx[start..start + 4]),
+                        "quad window at {start} of {w:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

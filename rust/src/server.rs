@@ -40,7 +40,7 @@
 //! tracks accepted / active / completed connections (active decrements on
 //! disconnect).
 
-use crate::chars::ArabicWord;
+use crate::chars::PackedWord;
 use crate::coordinator::Handle;
 use crate::exec::{BoundedQueue, QueueError};
 use anyhow::Result;
@@ -241,12 +241,14 @@ fn handle_conn(
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::with_capacity(64);
     let mut mode = ConnMode::Unknown;
-    // Batch state, all reused across read cycles: words are stored as
-    // spans into one contiguous text buffer — no per-word allocation on
-    // the steady-state path.
+    // Batch state, all reused across read cycles: each line is stored as
+    // a span into one contiguous text buffer (for the reply echo) and
+    // encoded straight into a PackedWord register — no per-word
+    // allocation and no intermediate [u16; 15] array on the steady-state
+    // path.
     let mut batch_text = String::new();
     let mut spans: Vec<(usize, usize)> = Vec::new();
-    let mut words: Vec<ArabicWord> = Vec::new();
+    let mut packed: Vec<PackedWord> = Vec::new();
     let mut reply = String::new();
     loop {
         // A continuously-sending client never hits the timeout branch
@@ -344,8 +346,9 @@ fn handle_conn(
         }
         batch_text.clear();
         spans.clear();
+        packed.clear();
         let mut closing = eof;
-        closing |= push_line(&mut batch_text, &mut spans, &buf);
+        closing |= push_line(&mut batch_text, &mut spans, &mut packed, &buf);
         // Pipelined mode: fold every complete line already buffered on the
         // connection into this batch — one linear pass over the buffer, no
         // extra read syscalls, never blocks. A one-line-at-a-time client
@@ -355,7 +358,8 @@ fn handle_conn(
                 let buffered = reader.buffer();
                 match buffered.iter().position(|&b| b == b'\n') {
                     Some(nl) => {
-                        closing = push_line(&mut batch_text, &mut spans, &buffered[..nl]);
+                        closing =
+                            push_line(&mut batch_text, &mut spans, &mut packed, &buffered[..nl]);
                         Some(nl + 1)
                     }
                     None => None, // only a partial line (or nothing) left
@@ -367,9 +371,7 @@ fn handle_conn(
             }
         }
         if !spans.is_empty() {
-            words.clear();
-            words.extend(spans.iter().map(|&(s, e)| ArabicWord::encode(&batch_text[s..e])));
-            let results = handle.stem_bulk(&words)?;
+            let results = handle.stem_bulk_packed(&packed)?;
             reply.clear();
             for (&(s, e), r) in spans.iter().zip(&results) {
                 use std::fmt::Write as _;
@@ -390,18 +392,36 @@ fn handle_conn(
     }
 }
 
-/// Append one raw protocol line to the batch (trimmed, stored as a span
-/// into `batch_text`). Returns `true` when the line is the empty
+/// Append one raw protocol line to the batch: trimmed, stored as a span
+/// into `batch_text` (for the reply echo) and encoded straight into a
+/// [`PackedWord`] register. Returns `true` when the line is the empty
 /// close-connection marker.
-fn push_line(batch_text: &mut String, spans: &mut Vec<(usize, usize)>, raw: &[u8]) -> bool {
-    let text = String::from_utf8_lossy(raw);
-    let w = text.trim();
+///
+/// The byte slice is validated in place (`str::from_utf8`, no copy); the
+/// allocating `from_utf8_lossy` fallback runs only for invalid UTF-8 —
+/// previously every line paid that allocation before being copied into
+/// the batch buffer a second time.
+fn push_line(
+    batch_text: &mut String,
+    spans: &mut Vec<(usize, usize)>,
+    packed: &mut Vec<PackedWord>,
+    raw: &[u8],
+) -> bool {
+    let lossy;
+    let w = match std::str::from_utf8(raw) {
+        Ok(s) => s.trim(),
+        Err(_) => {
+            lossy = String::from_utf8_lossy(raw);
+            lossy.trim()
+        }
+    };
     if w.is_empty() {
         return true;
     }
     let start = batch_text.len();
     batch_text.push_str(w);
     spans.push((start, batch_text.len()));
+    packed.push(PackedWord::encode(w));
     false
 }
 
@@ -538,6 +558,39 @@ mod tests {
         // still usable afterwards
         let res = client.analyze(&["قال"], &AnalyzeOptions::default()).unwrap();
         assert_eq!(res[0].root, "قول");
+
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr);
+        t.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    /// Invalid UTF-8 lines take the lossy fallback (replacement chars),
+    /// get the permissive NONE reply, and leave the connection usable —
+    /// valid lines around them are unaffected.
+    #[test]
+    fn invalid_utf8_line_falls_back_to_lossy() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let server = Server::bind("127.0.0.1:0", coord.handle()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_flag();
+        let t = std::thread::spawn(move || server.serve_forever());
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"\xFF\xFE\n").unwrap(); // not UTF-8
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let mut fields = line.trim_end().split('\t');
+        assert_eq!(fields.next(), Some("\u{FFFD}\u{FFFD}"), "lossy echo: {line:?}");
+        assert_eq!(fields.next(), Some(""), "no root");
+        assert_eq!(fields.next(), Some("0"), "kind NONE");
+        // the connection still serves valid lines
+        conn.write_all("قال\n".as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("قول"), "{line}");
+        conn.write_all(b"\n").unwrap();
 
         stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(addr);

@@ -24,8 +24,16 @@
 //! batch encoding (contiguous dense-index rows + lengths + profiles), and
 //! [`Stemmer::stem_batch_parallel`] fans chunks of that encoding out
 //! across an [`crate::exec::WorkerPool`].
+//!
+//! PR 4 adds the *packed* pair: [`Stemmer::stem_packed`] /
+//! [`Stemmer::stem_batch_packed`] run the fused kernel directly on
+//! [`chars::PackedWord`] registers (6 bits/char in one `u128`) — affix
+//! classes by shift+mask against the `CLASS_*_BITS` planes, dictionary
+//! keys accumulated from the packed nibbles. The array kernel is retained
+//! as the packed kernel's benchmark baseline, exactly as `stem_reference`
+//! is the array kernel's.
 
-use crate::chars::{self, AffixProfile, ArabicWord, MAX_PREFIX, MAX_SUFFIX, MAX_WORD};
+use crate::chars::{self, AffixProfile, ArabicWord, PackedWord, MAX_PREFIX, MAX_SUFFIX, MAX_WORD};
 use crate::exec::{BoundedQueue, WorkerPool};
 use crate::roots::RootSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -318,6 +326,155 @@ impl Stemmer {
             };
         }
         StemResult::NONE
+    }
+
+    /// The packed fused kernel (PR 4): the whole word stays in one
+    /// `u128` register end to end. Per-character affix classes are
+    /// shift+mask probes against the [`chars::CLASS_INFIX_BITS`]-style
+    /// bit planes; the direct tri/quad streams probe the dictionaries
+    /// through [`crate::roots::RootBitmap::contains_packed`] while the
+    /// modified-window streams (remove-infix, restore) accumulate their
+    /// base-37 keys from the packed nibbles inline; root codepoints are
+    /// reconstructed through [`chars::index_char`] only for the one
+    /// winning window.
+    ///
+    /// Bit-identical to [`Self::stem`] on the packed view of any word:
+    /// a returned root's characters are always dictionary letters, for
+    /// which `index_char ∘ char_index` is the identity, and index 0
+    /// (canonicalized non-Arabic) belongs to no class and no dictionary —
+    /// so `stem_packed(pack(w)) == stem(w)` for *every* `w`, canonical
+    /// or not (the proptests pin this).
+    pub fn stem_packed(&self, w: PackedWord) -> StemResult {
+        self.stem_packed_profiled(w, w.profile())
+    }
+
+    /// The packed kernel over a precomputed profile (the batch loop's
+    /// entry point).
+    fn stem_packed_profiled(&self, w: PackedWord, profile: AffixProfile) -> StemResult {
+        let n = w.len();
+        let word = w.0;
+        let nib = |i: usize| ((word >> (6 * i)) & 63) as usize;
+        let dicts = &self.roots.dense;
+        let infix = self.config.infix_processing;
+        let suffix_start = profile.suffix_start as usize;
+
+        let mut quad_cut = NO_CUT;
+        let mut rm3_cut = NO_CUT;
+        let mut rm2_cut = NO_CUT;
+        let mut rs3_cut = NO_CUT;
+
+        for p in 0..=profile.prefix_run as usize {
+            let e3 = p + 3;
+            let ok3 = e3 <= n && n - e3 <= MAX_SUFFIX && e3 >= suffix_start;
+            let e4 = p + 4;
+            let ok4 = e4 <= n && n - e4 <= MAX_SUFFIX && e4 >= suffix_start;
+            if ok3 {
+                if dicts.tri.contains_packed(w, p) {
+                    return StemResult {
+                        root: [
+                            chars::index_char(nib(p) as u8),
+                            chars::index_char(nib(p + 1) as u8),
+                            chars::index_char(nib(p + 2) as u8),
+                            0,
+                        ],
+                        kind: MatchKind::Tri,
+                        cut: p as u8,
+                    };
+                }
+            }
+            if ok4 && quad_cut == NO_CUT && dicts.quad.contains_packed(w, p) {
+                quad_cut = p;
+            }
+            if infix {
+                let second = nib(p + 1);
+                let second_infix = (chars::CLASS_INFIX_BITS >> second) & 1 != 0;
+                // The remove-infix / restore streams probe *modified*
+                // windows (a nibble skipped or substituted), so their
+                // keys are accumulated inline with the same base-37
+                // scheme as `RootBitmap::key_packed`.
+                if ok4 && rm3_cut == NO_CUT && second_infix {
+                    let key = ((nib(p) * A) + nib(p + 2)) * A + nib(p + 3);
+                    if dicts.tri.contains_key(key) {
+                        rm3_cut = p;
+                    }
+                }
+                if ok3 && rm2_cut == NO_CUT && second_infix {
+                    let key = nib(p) * A + nib(p + 2);
+                    if dicts.bi.contains_key(key) {
+                        rm2_cut = p;
+                    }
+                }
+                if ok3 && rs3_cut == NO_CUT && second == IDX_ALEF as usize {
+                    let key = ((nib(p) * A) + IDX_WAW as usize) * A + nib(p + 2);
+                    if dicts.tri.contains_key(key) {
+                        rs3_cut = p;
+                    }
+                }
+            }
+        }
+
+        if quad_cut != NO_CUT {
+            let p = quad_cut;
+            return StemResult {
+                root: [
+                    chars::index_char(nib(p) as u8),
+                    chars::index_char(nib(p + 1) as u8),
+                    chars::index_char(nib(p + 2) as u8),
+                    chars::index_char(nib(p + 3) as u8),
+                ],
+                kind: MatchKind::Quad,
+                cut: p as u8,
+            };
+        }
+        if rm3_cut != NO_CUT {
+            let p = rm3_cut;
+            return StemResult {
+                root: [
+                    chars::index_char(nib(p) as u8),
+                    chars::index_char(nib(p + 2) as u8),
+                    chars::index_char(nib(p + 3) as u8),
+                    0,
+                ],
+                kind: MatchKind::RmInfixTri,
+                cut: p as u8,
+            };
+        }
+        if rm2_cut != NO_CUT {
+            let p = rm2_cut;
+            return StemResult {
+                root: [
+                    chars::index_char(nib(p) as u8),
+                    chars::index_char(nib(p + 2) as u8),
+                    0,
+                    0,
+                ],
+                kind: MatchKind::RmInfixBi,
+                cut: p as u8,
+            };
+        }
+        if rs3_cut != NO_CUT {
+            let p = rs3_cut;
+            return StemResult {
+                root: [
+                    chars::index_char(nib(p) as u8),
+                    chars::WAW,
+                    chars::index_char(nib(p + 2) as u8),
+                    0,
+                ],
+                kind: MatchKind::Restored,
+                cut: p as u8,
+            };
+        }
+        StemResult::NONE
+    }
+
+    /// Packed batch kernel: the `Vec<PackedWord>` *is* the
+    /// structure-of-arrays encoding — 16 contiguous bytes per word, no
+    /// index rows, lengths, or profile side arrays to build. This is the
+    /// form the coordinator's request queue and the server's line ingest
+    /// feed directly.
+    pub fn stem_batch_packed(&self, words: &[PackedWord]) -> Vec<StemResult> {
+        words.iter().map(|&w| self.stem_packed_profiled(w, w.profile())).collect()
     }
 
     /// The original scalar implementation — per-candidate rescans and
@@ -626,6 +783,71 @@ mod tests {
                 assert_eq!(s.stem(&w), s.stem_reference(&w), "case {case} {w:?}");
             }
         }
+    }
+
+    /// The packed kernel is bit-identical to the array kernel — paper
+    /// examples, random letter soup, and words with canonicalized
+    /// non-Arabic characters, in both infix configs.
+    #[test]
+    fn packed_kernel_equals_fused() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let mut rng = SplitMix64::new(0x9AC7);
+        for infix in [true, false] {
+            let s = Stemmer::new(roots.clone(), StemmerConfig { infix_processing: infix });
+            for w in [
+                "سيلعبون",
+                "أفاستسقيناكموها",
+                "فتزحزحت",
+                "قال",
+                "كاتب",
+                "ماد",
+                "درسوووووووووو",
+                "خدرس",
+                "",
+                "hello",
+                "قاxل",
+            ] {
+                let w = ArabicWord::encode(w);
+                assert_eq!(
+                    s.stem_packed(PackedWord::pack(&w)),
+                    s.stem(&w),
+                    "word {w:?} infix={infix}"
+                );
+            }
+            for case in 0..2000 {
+                let n = rng.index(MAX_WORD + 1);
+                let codes: Vec<u16> =
+                    (0..n).map(|_| chars::index_char(1 + rng.below(36) as u8)).collect();
+                let w = ArabicWord::from_codes(&codes);
+                assert_eq!(
+                    s.stem_packed(PackedWord::pack(&w)),
+                    s.stem(&w),
+                    "case {case} {w:?}"
+                );
+            }
+        }
+    }
+
+    /// The packed batch kernel equals the scalar packed kernel and the
+    /// array batch kernel word-for-word.
+    #[test]
+    fn packed_batch_matches_scalar_and_array() {
+        let s = stemmer();
+        let mut rng = SplitMix64::new(0x9ACB);
+        let words: Vec<ArabicWord> = (0..3000)
+            .map(|_| {
+                let n = rng.index(MAX_WORD + 1);
+                let codes: Vec<u16> =
+                    (0..n).map(|_| chars::index_char(1 + rng.below(36) as u8)).collect();
+                ArabicWord::from_codes(&codes)
+            })
+            .collect();
+        let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+        let batch = s.stem_batch_packed(&packed);
+        let scalar: Vec<StemResult> = packed.iter().map(|&p| s.stem_packed(p)).collect();
+        assert_eq!(batch, scalar);
+        assert_eq!(batch, s.stem_batch(&words));
+        assert!(s.stem_batch_packed(&[]).is_empty());
     }
 
     /// Batch kernels are per-word-equal to the scalar fused path.

@@ -3,7 +3,7 @@
 //! cases with a deterministic seed; failures print the seed for replay.
 
 use ama::analysis::{Algorithm, AnalyzeOptions, Analyzer, AnalyzerRegistry};
-use ama::chars::{self, ArabicWord};
+use ama::chars::{self, ArabicWord, PackedWord};
 use ama::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SoftwareBackend};
 use ama::corpus::{self, CorpusConfig};
 use ama::exec::BoundedQueue;
@@ -148,6 +148,146 @@ fn prop_optimized_stem_matches_reference() {
     ] {
         assert!(kinds_seen.contains(&k), "inflected corpus never produced {k:?}");
     }
+}
+
+/// PR 4 acceptance property, part 1: `PackedWord` round-trips exactly —
+/// `pack(unpack(p)) == p` and `unpack(pack(w)) == w` — over every
+/// dictionary root and 10k randomly inflected corpus words, and the
+/// direct string encoder agrees with encode-then-pack.
+#[test]
+fn prop_packed_roundtrip_dictionary_and_inflected() {
+    let r = roots();
+    let mut all_words: Vec<ArabicWord> = Vec::new();
+    for t in r.tri_rows() {
+        all_words.push(ArabicWord::from_codes(t));
+    }
+    for q in r.quad_rows() {
+        all_words.push(ArabicWord::from_codes(q));
+    }
+    for b in r.bi_rows() {
+        all_words.push(ArabicWord::from_codes(b));
+    }
+    let mut rng = SplitMix64::new(0x0917_0004);
+    let classes =
+        [corpus::FormClass::Direct, corpus::FormClass::Infix, corpus::FormClass::Unstemmable];
+    let lexicon: Vec<[u16; 4]> = all_words
+        .iter()
+        .map(|w| {
+            let mut g = [0u16; 4];
+            g[..w.len.min(4)].copy_from_slice(&w.chars[..w.len.min(4)]);
+            g
+        })
+        .collect();
+    for _ in 0..10_000 {
+        let gold = *rng.choose(&lexicon);
+        let class = *rng.choose(&classes);
+        all_words.push(corpus::inflect(&gold, class, &mut rng));
+    }
+    for (case, w) in all_words.iter().enumerate() {
+        let p = PackedWord::pack(w);
+        assert_eq!(p.unpack(), *w, "case {case}: unpack(pack(w)) != w for {w:?}");
+        assert_eq!(PackedWord::pack(&p.unpack()), p, "case {case}: pack not canonical");
+        assert_eq!(p.len(), w.len, "case {case}");
+        assert_eq!(p.to_indices(), w.to_indices(), "case {case}");
+        let s = w.to_string_ar();
+        assert_eq!(PackedWord::encode(&s), p, "case {case}: string encoder diverges");
+    }
+}
+
+/// PR 4 acceptance property, part 2: the packed kernel is bit-identical
+/// to both the array kernel and the scalar reference —
+/// `stem_packed == stem == stem_reference` on root, kind, and cut — over
+/// 10k inflected corpus words in both infix configs, with the batch form
+/// agreeing word-for-word.
+#[test]
+fn prop_packed_kernel_matches_stem_and_reference() {
+    let r = roots();
+    let with = Stemmer::with_defaults(r.clone());
+    let without = Stemmer::new(r.clone(), StemmerConfig { infix_processing: false });
+    let mut rng = SplitMix64::new(0x0917_0005);
+    let classes =
+        [corpus::FormClass::Direct, corpus::FormClass::Infix, corpus::FormClass::Unstemmable];
+
+    let mut lexicon: Vec<[u16; 4]> = Vec::new();
+    for t in r.tri_rows() {
+        lexicon.push([t[0], t[1], t[2], 0]);
+    }
+    for q in r.quad_rows() {
+        lexicon.push(*q);
+    }
+    for b in r.bi_rows() {
+        lexicon.push([b[0], b[1], 0, 0]);
+    }
+
+    let mut words: Vec<ArabicWord> = Vec::with_capacity(10_000);
+    for _ in 0..10_000 {
+        let gold = *rng.choose(&lexicon);
+        let class = *rng.choose(&classes);
+        words.push(corpus::inflect(&gold, class, &mut rng));
+    }
+    let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+    for (stemmer, label) in [(&with, "with-infix"), (&without, "no-infix")] {
+        for (case, (w, &p)) in words.iter().zip(&packed).enumerate() {
+            let got = stemmer.stem_packed(p);
+            assert_eq!(got, stemmer.stem(w), "case {case} ({label}): packed != fused {w:?}");
+            assert_eq!(
+                got,
+                stemmer.stem_reference(w),
+                "case {case} ({label}): packed != reference {w:?}"
+            );
+        }
+        assert_eq!(
+            stemmer.stem_batch_packed(&packed),
+            stemmer.stem_batch(&words),
+            "batch form diverged ({label})"
+        );
+    }
+}
+
+/// PR 4 acceptance property, part 3: with the memoizing cache in front
+/// of the registry, a mixed-options request stream served cold and then
+/// warm returns identical results (hit path ≡ miss path), trace
+/// requests always trace, and the counters see the warm pass.
+#[test]
+fn prop_cache_warm_equals_cold_mixed_options() {
+    let r = roots();
+    let mut rng = SplitMix64::new(0x0917_0006);
+    let words: Vec<ArabicWord> = (0..400).map(|_| random_word(&mut rng)).collect();
+    let c = Coordinator::start_registry_cached(
+        CoordinatorConfig { workers: 2, max_batch: 64, ..Default::default() },
+        r,
+        StemmerConfig::default(),
+        8192,
+    );
+    let h = c.handle();
+    let mut option_mix: Vec<AnalyzeOptions> = Vec::new();
+    for algorithm in Algorithm::ALL {
+        for infix in [None, Some(false)] {
+            option_mix.push(AnalyzeOptions { algorithm, infix, want_trace: false });
+        }
+    }
+    option_mix.push(AnalyzeOptions { want_trace: true, ..Default::default() });
+    let cold: Vec<Vec<ama::analysis::Analysis>> = option_mix
+        .iter()
+        .map(|o| h.analyze_bulk(&words, o.into()).unwrap())
+        .collect();
+    let warm: Vec<Vec<ama::analysis::Analysis>> = option_mix
+        .iter()
+        .map(|o| h.analyze_bulk(&words, o.into()).unwrap())
+        .collect();
+    for ((opts, cold_pass), warm_pass) in option_mix.iter().zip(&cold).zip(&warm) {
+        assert_eq!(warm_pass, cold_pass, "warm != cold under {opts:?}");
+        if opts.want_trace {
+            assert!(
+                warm_pass.iter().all(|a| a.trace.is_some()),
+                "trace requests must trace on the (bypassed) warm pass too"
+            );
+        }
+    }
+    let snap = c.metrics().snapshot();
+    assert!(snap.cache_hits > 0, "warm pass produced no hits: {snap:?}");
+    assert_eq!(snap.errors, 0);
+    c.shutdown();
 }
 
 /// The fused batch kernels agree with the scalar paths on random words.

@@ -1,0 +1,269 @@
+"""PR 4 verification sweep (no-cargo container): a literal python port of
+the NEW rust packed kernel (chars.rs PackedWord + stemmer.rs
+stem_packed_profiled + roots.rs key_packed) swept against the executable
+specification python/compile/kernels/ref.py::ref_stem_word, plus the
+stem-cache value/key bit-layout roundtrip.
+"""
+import os
+import random
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "python"))
+from compile import alphabet as ab
+from compile.kernels.ref import ref_stem_word, candidate_valid
+
+LEN_SHIFT = 6 * ab.MAX_WORD            # 90, = chars.rs PACKED_LEN_SHIFT
+CHAR_MASK = (1 << LEN_SHIFT) - 1
+
+# --- class bit planes, exactly as chars.rs builds them from CHAR_CLASS ---
+def plane(letters):
+    bits = 0
+    for c in letters:
+        bits |= 1 << ab.char_index(c)
+    return bits
+
+PREFIX_BITS = plane(ab.PREFIX_LETTERS)   # alphabet.py already includes ALEF
+SUFFIX_BITS = plane(ab.SUFFIX_LETTERS)
+INFIX_BITS = plane(ab.INFIX_LETTERS)
+IDX_ALEF = ab.char_index(ab.ALEF)
+IDX_WAW = ab.char_index(ab.WAW)
+A = ab.ALPHABET_SIZE
+
+# --- PackedWord port ------------------------------------------------------
+def pack(codes, n):
+    bits = 0
+    for i in range(n):
+        bits |= ab.char_index(codes[i]) << (6 * i)
+    return bits | (n << LEN_SHIFT)
+
+def p_len(w):
+    return (w >> LEN_SHIFT) & 0xF
+
+def index_at(w, i):
+    return (w >> (6 * i)) & 63
+
+def unpack(w):
+    n = p_len(w)
+    return [ab.index_char(index_at(w, i)) for i in range(n)] + [ab.PAD] * (ab.MAX_WORD - n), n
+
+def profile(w):
+    n = p_len(w)
+    max_p = min(ab.MAX_PREFIX, n)
+    prefix_run = 0
+    while prefix_run < max_p and (PREFIX_BITS >> index_at(w, prefix_run)) & 1:
+        prefix_run += 1
+    suffix_start = n
+    while suffix_start > 0 and (SUFFIX_BITS >> index_at(w, suffix_start - 1)) & 1:
+        suffix_start -= 1
+    return prefix_run, suffix_start
+
+# --- direct-addressed bitsets (roots.rs RootBitmap) -----------------------
+def bitset(roots, arity):
+    bm = set()
+    for r in roots:
+        k = 0
+        for c in r:
+            k = k * A + ab.char_index(c)
+        bm.add(k)
+    return bm
+
+def key_packed(w, start, arity):
+    # mirrors roots.rs: the length nibble is masked off, so any position
+    # >= len (including position 15) reads as digit 0
+    bits = w & CHAR_MASK
+    k = 0
+    for j in range(arity):
+        k = k * A + ((bits >> (6 * (start + j))) & 63)
+    return k
+
+# --- stem_packed_profiled port (literal) ----------------------------------
+NO_CUT = -1
+
+def stem_packed(w, bi, tri, quad, infix):
+    n = p_len(w)
+    prefix_run, suffix_start = profile(w)
+    quad_cut = rm3_cut = rm2_cut = rs3_cut = NO_CUT
+    nib = lambda i: index_at(w, i)
+    for p in range(prefix_run + 1):
+        e3 = p + 3
+        ok3 = e3 <= n and n - e3 <= ab.MAX_SUFFIX and e3 >= suffix_start
+        e4 = p + 4
+        ok4 = e4 <= n and n - e4 <= ab.MAX_SUFFIX and e4 >= suffix_start
+        if ok3:
+            if key_packed(w, p, 3) in tri:  # contains_packed, as in stemmer.rs
+                root = (ab.index_char(nib(p)), ab.index_char(nib(p + 1)),
+                        ab.index_char(nib(p + 2)), 0)
+                return root, ab.KIND_TRI, p
+        if ok4 and quad_cut == NO_CUT and key_packed(w, p, 4) in quad:
+            quad_cut = p
+        if infix:
+            second = nib(p + 1)
+            second_infix = (INFIX_BITS >> second) & 1
+            if ok4 and rm3_cut == NO_CUT and second_infix:
+                if (nib(p) * A + nib(p + 2)) * A + nib(p + 3) in tri:
+                    rm3_cut = p
+            if ok3 and rm2_cut == NO_CUT and second_infix:
+                if nib(p) * A + nib(p + 2) in bi:
+                    rm2_cut = p
+            if ok3 and rs3_cut == NO_CUT and second == IDX_ALEF:
+                if (nib(p) * A + IDX_WAW) * A + nib(p + 2) in tri:
+                    rs3_cut = p
+    if quad_cut != NO_CUT:
+        p = quad_cut
+        return (ab.index_char(nib(p)), ab.index_char(nib(p + 1)),
+                ab.index_char(nib(p + 2)), ab.index_char(nib(p + 3))), ab.KIND_QUAD, p
+    if rm3_cut != NO_CUT:
+        p = rm3_cut
+        return (ab.index_char(nib(p)), ab.index_char(nib(p + 2)),
+                ab.index_char(nib(p + 3)), 0), ab.KIND_RMINFIX_TRI, p
+    if rm2_cut != NO_CUT:
+        p = rm2_cut
+        return (ab.index_char(nib(p)), ab.index_char(nib(p + 2)), 0, 0), ab.KIND_RMINFIX_BI, p
+    if rs3_cut != NO_CUT:
+        p = rs3_cut
+        return (ab.index_char(nib(p)), ab.WAW, ab.index_char(nib(p + 2)), 0), ab.KIND_RESTORED, p
+    return (0, 0, 0, 0), ab.KIND_NONE, 0
+
+# --- no-infix oracle: ref passes 1-2 only (rust stem_reference no-infix) --
+def ref_no_infix(codes, n, roots3, roots4):
+    for size, kind, dic in ((3, ab.KIND_TRI, roots3), (4, ab.KIND_QUAD, roots4)):
+        for p in range(ab.NUM_CUTS):
+            if candidate_valid(codes, n, p, size):
+                stem = tuple(codes[p : p + size])
+                if stem in dic:
+                    return stem + (ab.PAD,) * (4 - size), kind, p
+    return (ab.PAD,) * 4, ab.KIND_NONE, 0
+
+# --- load real dictionaries ----------------------------------------------
+def load(path, arity):
+    roots = set()
+    for line in open(path, encoding="utf-8"):
+        line = line.strip()
+        if not line:
+            continue
+        codes, n = ab.encode_word(line)
+        assert n == arity, (line, n)
+        roots.add(tuple(codes[:n]))
+    return roots
+
+R2 = load(os.path.join(REPO, "data/roots_bilateral.txt"), 2)
+R3 = load(os.path.join(REPO, "data/roots_trilateral.txt"), 3)
+R4 = load(os.path.join(REPO, "data/roots_quadrilateral.txt"), 4)
+BI, TRI, QUAD = bitset(R2, 2), bitset(R3, 3), bitset(R4, 4)
+print(f"dictionaries: {len(R2)} bi, {len(R3)} tri, {len(R4)} quad")
+
+LETTERS = [c for c in range(0x0621, 0x064B) if ab.char_index(c) != 0]
+assert len(LETTERS) == 36
+
+rng = random.Random(0x0917_2026)
+
+def random_word():
+    n = rng.randrange(ab.MAX_WORD + 1)
+    codes = [rng.choice(LETTERS) for _ in range(n)]
+    return codes + [ab.PAD] * (ab.MAX_WORD - n), n
+
+PREFIX_POOL = ["", "و", "ف", "ال", "وال", "ي", "ت", "ن", "س", "سي", "است", "أ", "فأ"]
+SUFFIX_POOL = ["", "ون", "ين", "ات", "ة", "ها", "تم", "نا", "كموها", "وا", "ت"]
+
+def inflected_word():
+    base = rng.choice([rng.choice(tuple(R3)), rng.choice(tuple(R4)),
+                       rng.choice(tuple(R2)) + (rng.choice(LETTERS),)])
+    mid = list(base)
+    if rng.random() < 0.35 and len(mid) >= 3:  # inject an infix second char
+        mid = [mid[0], rng.choice(list(ab.INFIX_LETTERS)), *mid[1:]]
+    s = "".join(chr(c) for c in mid)
+    word = rng.choice(PREFIX_POOL) + s + rng.choice(SUFFIX_POOL)
+    return ab.encode_word(word)
+
+mismatch = 0
+cases = 0
+kinds_seen = set()
+for case in range(60_000):
+    codes, n = random_word() if case % 2 == 0 else inflected_word()
+    w = pack(codes, n)
+    # roundtrip: all-Arabic words survive pack/unpack exactly
+    ucodes, un = unpack(w)
+    assert un == n and ucodes[:n] == codes[:n], f"roundtrip failed: {codes[:n]}"
+    assert w >> 94 == 0, "bits above 94 must be zero"
+    # profile vs naive scans
+    pr, ss = profile(w)
+    want_pr = 0
+    while want_pr < min(n, ab.MAX_PREFIX) and codes[want_pr] in ab.PREFIX_LETTERS:
+        want_pr += 1
+    want_ss = n
+    while want_ss > 0 and codes[want_ss - 1] in ab.SUFFIX_LETTERS:
+        want_ss -= 1
+    assert (pr, ss) == (want_pr, want_ss), f"profile diverged on {codes[:n]}"
+    # packed kernel vs oracle, both configs
+    got = stem_packed(w, BI, TRI, QUAD, True)
+    want = ref_stem_word(codes, n, R2, R3, R4)
+    if got != want:
+        mismatch += 1
+        if mismatch <= 5:
+            print("WITH-INFIX MISMATCH", codes[:n], got, want)
+    got_ni = stem_packed(w, BI, TRI, QUAD, False)
+    want_ni = ref_no_infix(codes, n, R3, R4)
+    if got_ni != want_ni:
+        mismatch += 1
+        if mismatch <= 5:
+            print("NO-INFIX MISMATCH", codes[:n], got_ni, want_ni)
+    kinds_seen.add(want[1])
+    cases += 1
+
+print(f"packed-kernel sweep: {cases} cases x 2 configs, {mismatch} mismatches")
+assert mismatch == 0
+assert kinds_seen == {0, 1, 2, 3, 4, 5}, f"kinds not all exercised: {kinds_seen}"
+
+# --- dictionary fixpoints through the packed kernel -----------------------
+for r in list(R3)[:500]:
+    codes = list(r) + [ab.PAD] * (ab.MAX_WORD - 3)
+    got = stem_packed(pack(codes, 3), BI, TRI, QUAD, True)
+    assert got[1] == ab.KIND_TRI and got[0][:3] == r and got[2] == 0, (r, got)
+print("fixpoint check: 500 tri roots stem to themselves via packed kernel")
+
+# --- contains_packed window agreement ------------------------------------
+for _ in range(5000):
+    codes, n = random_word()
+    if n < 4:
+        continue
+    w = pack(codes, n)
+    for start in range(n - 3):
+        for arity, bm, rs in ((2, BI, R2), (3, TRI, R3), (4, QUAD, R4)):
+            direct = tuple(codes[start:start + arity]) in rs
+            assert (key_packed(w, start, arity) in bm) == direct
+print("contains_packed window sweep OK")
+
+# --- cache value encode/decode bit layout (cache.rs) ----------------------
+def encode_value(root, kind, cut, votes, algo, conf_bits):
+    v0 = root[0] | root[1] << 16 | root[2] << 32 | root[3] << 48
+    v1 = kind | cut << 8 | votes << 16 | algo << 24 | conf_bits << 32
+    return v0 & (2**64 - 1), v1 & (2**64 - 1)
+
+def decode_value(v0, v1):
+    root = (v0 & 0xFFFF, (v0 >> 16) & 0xFFFF, (v0 >> 32) & 0xFFFF, (v0 >> 48) & 0xFFFF)
+    return root, v1 & 0xFF, (v1 >> 8) & 0xFF, (v1 >> 16) & 0xFF, (v1 >> 24) & 0xFF, (v1 >> 32) & 0xFFFFFFFF
+
+for _ in range(20_000):
+    root = tuple(rng.choice([0] + LETTERS) for _ in range(4))
+    kind = rng.randrange(6)
+    cut = rng.randrange(6)
+    votes = rng.randrange(4)
+    algo = rng.randrange(4)
+    conf = rng.getrandbits(32)
+    assert decode_value(*encode_value(root, kind, cut, votes, algo, conf)) == \
+        (root, kind, cut, votes, algo, conf)
+print("cache value encode/decode roundtrip OK (20k)")
+
+# --- cache key layout: word bits and opts tag never overlap ---------------
+for _ in range(20_000):
+    codes, n = random_word()
+    w = pack(codes, n)
+    opts = rng.getrandbits(8)
+    key = w | opts << 96
+    assert key & CHAR_MASK == w & CHAR_MASK
+    assert (key >> LEN_SHIFT) & 0xF == n
+    assert (key >> 96) & 0xFF == opts
+print("cache key layout OK (20k)")
+
+print("\nALL PR4 PYTHON-ORACLE CHECKS PASSED")

@@ -27,7 +27,7 @@ else
   echo "clippy not installed; skipping (install with 'rustup component add clippy')"
 fi
 
-echo "== bench smoke (~5s, AMA_BENCH_FAST) =="
+echo "== bench smoke (~5s, AMA_BENCH_FAST; incl. packed kernel + cache rows) =="
 AMA_BENCH_FAST=1 ./target/release/ama bench json \
   --words 5000 --out /tmp/ama_bench_smoke.json
 python3 - <<'EOF' 2>/dev/null || grep -q '"schema": "ama-bench-v1"' /tmp/ama_bench_smoke.json
@@ -36,8 +36,13 @@ with open("/tmp/ama_bench_smoke.json") as f:
     report = json.load(f)
 assert report["schema"] == "ama-bench-v1", report
 assert report["results"], "empty bench results"
+names = [r["name"] for r in report["results"]]
+assert any("stem_batch_packed" in n for n in names), f"no packed row in {names}"
+assert any("cache_warm" in n for n in names), f"no cache row in {names}"
 print("bench smoke OK:", len(report["results"]), "rows")
 EOF
+grep -q 'stem_batch_packed' /tmp/ama_bench_smoke.json
+grep -q 'registry_cache_warm' /tmp/ama_bench_smoke.json
 
 echo "== loadtest smoke (2 modes × 2s, 8 conns) =="
 ./target/release/ama loadtest --conns 8 --secs 2 --depth 32 --mode both \
@@ -50,6 +55,27 @@ echo "== AMA/1 loadtest smoke (2s, 8 conns, all four algorithms) =="
   --proto ama1 --words 1000 --out /tmp/ama_loadtest_ama1_smoke.json
 grep -q '"proto": "ama1"' /tmp/ama_loadtest_ama1_smoke.json
 echo "AMA/1 loadtest smoke OK"
+
+echo "== cache-enabled loadtest smoke (2s, 8 conns, registry + stem cache) =="
+./target/release/ama loadtest --conns 8 --secs 2 --depth 32 --mode pipelined \
+  --backend registry --cache-slots 65536 --words 1000 \
+  --out /tmp/ama_loadtest_cache_smoke.json
+grep -q '"cache_hit_rate"' /tmp/ama_loadtest_cache_smoke.json
+# 1000 distinct words replayed for 2s: the warm stream must mostly hit.
+if command -v python3 >/dev/null 2>&1; then
+  python3 - <<'EOF'
+import json
+with open("/tmp/ama_loadtest_cache_smoke.json") as f:
+    report = json.load(f)
+row = report["results"][0]
+assert row["cache_hits"] + row["cache_misses"] > 0, row
+assert row["cache_hit_rate"] > 0.5, f"cold cache under sustained replay: {row}"
+print("cache smoke OK: hit rate", row["cache_hit_rate"])
+EOF
+else
+  echo "python3 not installed; skipping cache hit-rate check"
+fi
+echo "cache loadtest smoke OK"
 
 echo "== protocol conformance smoke (AMA/1 + legacy line, one server) =="
 if command -v python3 >/dev/null 2>&1; then
