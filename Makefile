@@ -1,7 +1,11 @@
 # Build entry points referenced throughout the code and docs.
 #
 #   make data       — regenerate the root dictionaries under data/
-#   make artifacts  — AOT-lower the JAX stemmer to artifacts/*.hlo.txt
+#   make artifacts  — AOT-lower the stemmer to artifacts/*.hlo.txt
+#                     (JAX when importable, else `ama emit-hlo` — the
+#                     rust lowerer — so the cycle works offline; note
+#                     JAX-lowered artifacts may need `--features pjrt`,
+#                     the emit-hlo ones run on the default interpreter)
 #   make verify     — tier-1 + clippy + bench + loadtest + protocol smoke
 #                     (scripts/verify.sh)
 #   make loadtest   — full serving-path comparison (per-word vs pipelined,
@@ -17,7 +21,12 @@ data:
 	cd python && python3 -m compile.gen_roots ../data
 
 artifacts:
-	cd python && python3 -m compile.aot --out-dir ../artifacts
+	@if python3 -c "import jax" >/dev/null 2>&1; then \
+		cd python && python3 -m compile.aot --out-dir ../artifacts; \
+	else \
+		echo "jax not importable — falling back to the rust HLO emitter"; \
+		cargo build --release && ./target/release/ama emit-hlo --out artifacts; \
+	fi
 
 verify:
 	scripts/verify.sh

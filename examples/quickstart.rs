@@ -45,19 +45,19 @@ fn main() -> anyhow::Result<()> {
         println!("  {w} -> {}", r.root_word());
     }
 
-    // 4. The AOT JAX/Pallas artifact through PJRT, if built.
+    // 4. The AOT HLO artifact through the runtime engine, if built.
     let artifacts = ama::runtime::default_artifacts_dir();
     if artifacts.join("stemmer_b1.hlo.txt").exists() {
         let engine = ama::runtime::Engine::load(&artifacts, &roots)?;
         let res = engine.stem_chunk(&words)?;
-        println!("\npjrt engine (AOT JAX/Pallas): ");
+        println!("\nruntime engine (AOT HLO artifact): ");
         for (w, r) in words.iter().zip(&res) {
             println!("  {w} -> {}", r.root_word());
         }
-        assert_eq!(res, results, "PJRT and simulator must agree");
+        assert_eq!(res, results, "runtime engine and simulator must agree");
         println!("  (bit-identical to the simulator)");
     } else {
-        println!("\n(run `make artifacts` to also exercise the PJRT path)");
+        println!("\n(run `make artifacts` or `ama emit-hlo` to also exercise the runtime path)");
     }
     Ok(())
 }

@@ -1,7 +1,7 @@
 //! End-to-end driver (DESIGN.md deliverable): the full paper evaluation on
 //! the real (calibrated) workload — generates the 77,476-word Quran-analog
 //! corpus, runs it through **all three implementations** (software, both
-//! FPGA-simulator processors, and the AOT JAX/Pallas artifact via PJRT),
+//! FPGA-simulator processors, and the AOT HLO artifact via the runtime engine),
 //! checks they agree word-for-word, and reports every headline metric:
 //! Table 6 accuracy, Table 7 per-root counts, and Fig 16 throughput.
 //!
@@ -10,7 +10,7 @@
 //! ```
 
 use ama::chars::ArabicWord;
-use ama::coordinator::{Coordinator, CoordinatorConfig, XlaBackend};
+use ama::coordinator::{Coordinator, CoordinatorConfig, RuntimeBackend};
 use ama::corpus::{self, CorpusConfig};
 use ama::roots::RootSet;
 use ama::{report, Stemmer};
@@ -42,11 +42,11 @@ fn main() -> anyhow::Result<()> {
     print!("{}", report::figure_throughput(&roots, &quran, None));
 
     // Full three-layer composition on the real workload: stream the whole
-    // corpus through the coordinator backed by the PJRT engine and verify
+    // corpus through the coordinator backed by the runtime engine and verify
     // word-for-word agreement with the software stemmer.
     let artifacts = ama::runtime::default_artifacts_dir();
     if artifacts.join("stemmer_b256.hlo.txt").exists() {
-        println!("\n== end-to-end: coordinator + PJRT engine over the full corpus ==");
+        println!("\n== end-to-end: coordinator + runtime engine over the full corpus ==");
         let words: Vec<ArabicWord> = quran.tokens.iter().map(|t| t.word).collect();
         let sw = Stemmer::with_defaults(roots.clone());
         let expected = sw.stem_batch(&words);
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         let coord = Coordinator::start(
             CoordinatorConfig { max_batch: 256, workers: 1, ..Default::default() },
             Box::new(move |_| {
-                Ok(Box::new(XlaBackend(ama::runtime::Engine::load(
+                Ok(Box::new(RuntimeBackend(ama::runtime::Engine::load(
                     &ama::runtime::default_artifacts_dir(),
                     &r2,
                 )?)))
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         let t0 = Instant::now();
         let results = h.stem_bulk(&words)?;
         let dt = t0.elapsed();
-        anyhow::ensure!(results == expected, "PJRT path diverged from software");
+        anyhow::ensure!(results == expected, "runtime path diverged from software");
         let snap = coord.metrics().snapshot();
         println!(
             "streamed {} words in {:.2?} -> {:.0} Wps end-to-end (batches {}, mean {:.0}, p50 {}us, p99 {}us)",
@@ -77,10 +77,10 @@ fn main() -> anyhow::Result<()> {
             snap.p50_us,
             snap.p99_us
         );
-        println!("PJRT results bit-identical to software over all {} words ✓", words.len());
+        println!("runtime results bit-identical to software over all {} words ✓", words.len());
         coord.shutdown();
     } else {
-        println!("\n(run `make artifacts` to include the PJRT end-to-end leg)");
+        println!("\n(run `make artifacts` or `ama emit-hlo` to include the runtime end-to-end leg)");
     }
     Ok(())
 }

@@ -1,12 +1,12 @@
 //! End-to-end coordinator benchmarks: requests → bounded queue → dynamic
 //! batcher → backend → replies. Includes the batching-policy ablation
 //! (max_batch sweep) DESIGN.md §7 calls out, over both the software and
-//! PJRT backends.
+//! runtime backends.
 
 use ama::bench::{bench_words, config_from_env, header};
 use ama::chars::ArabicWord;
 use ama::coordinator::{
-    BackendFactory, Coordinator, CoordinatorConfig, SoftwareBackend, XlaBackend,
+    BackendFactory, Coordinator, CoordinatorConfig, RuntimeBackend, SoftwareBackend,
 };
 use ama::corpus::{self, CorpusConfig};
 use ama::roots::RootSet;
@@ -19,10 +19,10 @@ fn sw_factory(roots: Arc<RootSet>) -> BackendFactory {
     Box::new(move |_| Ok(Box::new(SoftwareBackend(Stemmer::with_defaults(roots.clone())))))
 }
 
-fn xla_factory(roots: Arc<RootSet>) -> BackendFactory {
+fn runtime_factory(roots: Arc<RootSet>) -> BackendFactory {
     let artifacts = ama::runtime::default_artifacts_dir();
     Box::new(move |_| {
-        Ok(Box::new(XlaBackend(ama::runtime::Engine::load(&artifacts, &roots)?)))
+        Ok(Box::new(RuntimeBackend(ama::runtime::Engine::load(&artifacts, &roots)?)))
     })
 }
 
@@ -112,7 +112,7 @@ fn main() {
         coord.shutdown();
     }
 
-    // PJRT backend end-to-end (the full three-layer path).
+    // Runtime backend end-to-end (the full three-layer path).
     if ama::runtime::default_artifacts_dir().join("stemmer_b256.hlo.txt").exists() {
         let coord = Coordinator::start(
             CoordinatorConfig {
@@ -121,10 +121,10 @@ fn main() {
                 queue_capacity: 8192,
                 workers: 1,
             },
-            xla_factory(roots.clone()),
+            runtime_factory(roots.clone()),
         );
         let h = coord.handle();
-        let r = bench_words("coordinator/xla max_batch=256", &cfg, n, || {
+        let r = bench_words("coordinator/runtime max_batch=256", &cfg, n, || {
             let res = h.stem_stream(&words).expect("stream");
             std::hint::black_box(res.len());
         });
@@ -133,6 +133,6 @@ fn main() {
         println!("  latency p50 {}us p99 {}us", snap.p50_us, snap.p99_us);
         coord.shutdown();
     } else {
-        println!("(skipping xla backend — run `make artifacts`)");
+        println!("(skipping runtime backend — run `make artifacts` or `ama emit-hlo`)");
     }
 }

@@ -1,6 +1,8 @@
-//! PJRT runtime microbenchmarks: the AOT JAX/Pallas artifact executed from
-//! rust, per batch size — the L2/L1 hot path the coordinator drives. Also
-//! the batch-size ablation that motivates the batcher's `max_batch=256`.
+//! Runtime microbenchmarks: the AOT stemmer artifact executed from rust,
+//! per batch size — the HLO interpreter in the default build, real PJRT
+//! with `--features pjrt`. Also the batch-size ablation that motivates
+//! the batcher's `max_batch=256`. Artifacts are emitted in-process when
+//! absent, so the bench runs offline with no `make artifacts` step.
 
 use ama::bench::{bench_words, config_from_env, header};
 use ama::chars::ArabicWord;
@@ -12,10 +14,13 @@ use std::sync::Arc;
 
 fn main() {
     let cfg = config_from_env();
-    let artifacts = ama::runtime::default_artifacts_dir();
+    let mut artifacts = ama::runtime::default_artifacts_dir();
     if !artifacts.join("stemmer_b1.hlo.txt").exists() {
-        eprintln!("bench_runtime: no artifacts under {} — run `make artifacts`", artifacts.display());
-        return;
+        artifacts =
+            std::env::temp_dir().join(format!("ama_bench_runtime_artifacts_{}", std::process::id()));
+        ama::runtime::emit::write_artifacts(&artifacts, ama::runtime::BATCHES)
+            .expect("emit artifacts");
+        eprintln!("bench_runtime: emitted artifacts to {}", artifacts.display());
     }
     let roots = if Path::new("data/roots_trilateral.txt").exists() {
         Arc::new(RootSet::load(Path::new("data")).expect("load roots"))
@@ -26,13 +31,17 @@ fn main() {
     let c = corpus::generate(&roots, &CorpusConfig::small(4096, 11));
     let words: Vec<ArabicWord> = c.tokens.iter().map(|t| t.word).collect();
 
-    header("bench_runtime — PJRT execution of the AOT stemmer artifact");
-    println!("loaded batch sizes: {:?}", engine.batch_sizes());
+    header("bench_runtime — execution of the AOT stemmer artifact");
+    println!(
+        "backend: {}, loaded batch sizes: {:?}",
+        engine.backend_name(),
+        engine.batch_sizes()
+    );
 
     // Per-batch-size throughput (batch-size ablation).
     for &b in &engine.batch_sizes() {
         let chunk = &words[..b];
-        let r = bench_words(&format!("pjrt/stemmer_b{b}"), &cfg, b as u64, || {
+        let r = bench_words(&format!("runtime/stemmer_b{b}"), &cfg, b as u64, || {
             let res = engine.stem_chunk(chunk).expect("exec");
             std::hint::black_box(res.len());
         });
@@ -40,7 +49,7 @@ fn main() {
     }
 
     // Sustained throughput: stream 4096 words through the best batch size.
-    let r = bench_words("pjrt/stream-4096", &cfg, words.len() as u64, || {
+    let r = bench_words("runtime/stream-4096", &cfg, words.len() as u64, || {
         let res = engine.stem_chunk(&words).expect("exec");
         std::hint::black_box(res.len());
     });

@@ -41,6 +41,7 @@ const VALUE_FLAGS: &[&str] = &[
     "--connect",
     "--proto",
     "--cache-slots",
+    "--batches",
 ];
 
 impl Args {
@@ -100,9 +101,11 @@ USAGE:
 
 SUBCOMMANDS:
     stem <words…>         extract roots for words given on the command line
-                          [--backend software|software-par|khoja|hw-np|hw-p|xla]
+                          [--backend software|software-par|khoja|hw-np|hw-p|runtime]
                           [--no-infix]  (software-par adds intra-batch
-                          parallelism; it pays off with serve --batch ≥ 4096)
+                          parallelism; it pays off with serve --batch ≥ 4096;
+                          `runtime` executes the HLO artifacts — interpreter
+                          by default, PJRT with --features pjrt)
     corpus                generate a calibrated corpus
                           [--words N] [--seed S] [--out file.tsv] [--quran|--ankabut]
     analyze               unified analyzer API (PR 3). With words: analyze
@@ -131,10 +134,14 @@ SUBCOMMANDS:
                           [--mode pipelined|per-word|both] [--backend …]
                           [--proto line|ama1] [--algo …] [--cache-slots K]
                           [--workers N] [--batch B] [--out BENCH_PR2.json]
-    selftest              cross-validate software / HW-sim / PJRT backends
-    bench json            benchmark the software + hw-sim backends and write
-                          a machine-readable report [--out BENCH_PR1.json]
+    selftest              cross-validate software / HW-sim / runtime backends
+    bench json            benchmark the software + hw-sim + runtime backends
+                          and write a machine-readable report
+                          [--out BENCH_PR1.json]
                           [--words N] [--pr K] (AMA_BENCH_FAST=1 = quick pass)
+    emit-hlo              lower the stemmer to HLO-text artifacts from rust
+                          (the offline `make artifacts` path; no JAX needed)
+                          [--out artifacts] [--batches 1,32,256]
 
 COMMON OPTIONS:
     --data-dir DIR        root dictionaries (default: data)

@@ -84,8 +84,8 @@ pub trait StemBackend {
     fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>>;
 
     /// Options-aware batch (PR 3). The default ignores the options word —
-    /// a compile-time single-engine backend (`hw-sim`, `xla`, a dedicated
-    /// khoja worker) made its choice at startup, so per-request
+    /// a compile-time single-engine backend (`hw-sim`, `runtime`, a
+    /// dedicated khoja worker) made its choice at startup, so per-request
     /// algorithm/infix/trace selectors are no-ops there and results are
     /// labeled with [`StemBackend::algorithm`] (the engine that really
     /// answered; clients can detect the mismatch from the reply's `algo`
@@ -723,12 +723,19 @@ impl<P: crate::hw::Processor> StemBackend for HwBackend<P> {
     }
 }
 
-/// The PJRT engine as a backend (constructed on the worker thread).
-pub struct XlaBackend(pub crate::runtime::Engine);
+/// The runtime [`Engine`] (HLO interpreter by default, PJRT with
+/// `--features pjrt`) as a backend. The engine is **not** `Send`, so the
+/// factory constructs it directly on the coordinator's worker thread —
+/// that thread becomes the engine's dedicated executor, exactly the
+/// ownership model the PJRT client requires (`ama serve --backend
+/// runtime`).
+///
+/// [`Engine`]: crate::runtime::Engine
+pub struct RuntimeBackend(pub crate::runtime::Engine);
 
-impl StemBackend for XlaBackend {
+impl StemBackend for RuntimeBackend {
     fn name(&self) -> &'static str {
-        "xla-pjrt"
+        "runtime"
     }
 
     fn stem_batch(&mut self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {

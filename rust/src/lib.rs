@@ -17,7 +17,9 @@
 //!   affix-check datapath and the one-hot-matmul dictionary matcher.
 //!
 //! Python never runs on the request path: the rust binary loads
-//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and serves from there.
+//! `artifacts/*.hlo.txt` through [`runtime`] — the offline HLO
+//! interpreter by default, real PJRT with `--features pjrt` — and
+//! serves from there.
 //!
 //! ## Dense-index dictionary memory layout (PR 1)
 //!
@@ -160,6 +162,33 @@
 //! Arabic-block-only datapath — results are unchanged, and the wire
 //! formats are byte-identical (packing is internal; see
 //! `docs/PROTOCOL.md`).
+//!
+//! ## Runtime backend (PR 5)
+//!
+//! The L3↔L2 bridge is real in the default build. [`runtime::Engine`]
+//! fronts a pluggable [`runtime::Backend`]:
+//!
+//! * **Interpreter (default)** — [`runtime::interp`] parses the
+//!   HLO-*text* artifacts and evaluates the stemmer graph directly (the
+//!   op set is small and fixed: constants/parameters/broadcast/slice/
+//!   reshape/concatenate, integer arithmetic + compare/select, gather
+//!   for the direct-mapped bitmap lookups, one reduce-min for the
+//!   priority select, tuple). No `xla` bindings, no JAX — `Engine::load`
+//!   succeeds offline.
+//! * **PJRT (`--features pjrt`)** — the original CPU-client bridge,
+//!   compiling the *same* artifact files. Batch selection and chunking
+//!   live on the shared trait, so the two backends cannot drift.
+//! * **Self-hosting artifacts** — [`runtime::emit`] (`ama emit-hlo`)
+//!   lowers the fused kernel's dataflow to the same HLO-text format
+//!   `python/compile/aot.py` produces; `make artifacts` falls back to it
+//!   when JAX is absent. A conformance proptest pins interpreter ==
+//!   `stem_packed` == `stem_reference` over 10k inflected words in both
+//!   infix configs.
+//! * **Serving** — `ama serve --backend runtime` builds the (non-`Send`)
+//!   engine on the coordinator's dedicated executor thread
+//!   ([`coordinator::RuntimeBackend`]); `ama bench json` reports
+//!   `runtime/stem_chunk_b{1,32,256}` rows alongside the software
+//!   kernels.
 
 pub mod analysis;
 pub mod bench;

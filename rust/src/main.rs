@@ -4,8 +4,8 @@ use ama::analysis::{Algorithm, AnalyzeOptions, Analyzer as _, AnalyzerRegistry};
 use ama::chars::ArabicWord;
 use ama::cli::{Args, USAGE};
 use ama::coordinator::{
-    BackendFactory, Coordinator, CoordinatorConfig, HwBackend, RegistryBackend, SoftwareBackend,
-    StemBackend, XlaBackend,
+    BackendFactory, Coordinator, CoordinatorConfig, HwBackend, RegistryBackend, RuntimeBackend,
+    SoftwareBackend, StemBackend,
 };
 use ama::corpus::{self, CorpusConfig};
 use ama::hw::{DatapathConfig, NonPipelinedProcessor, PipelinedProcessor};
@@ -46,6 +46,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "loadtest" => cmd_loadtest(&args),
         "selftest" => cmd_selftest(&args),
         "bench" => cmd_bench(&args),
+        "emit-hlo" => cmd_emit_hlo(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -128,13 +129,14 @@ fn backend_factory(
         "hw-p" => Box::new(move |_| {
             Ok(Box::new(HwBackend(PipelinedProcessor::new(roots.clone(), hw_cfg))))
         }),
-        "xla" => Box::new(move |_| {
+        // `xla` kept as an alias for the pre-PR-5 CLI surface.
+        "runtime" | "xla" => Box::new(move |_| {
             let engine = Engine::load(&artifacts, &roots)
-                .context("loading PJRT engine (run `make artifacts`?)")?;
-            Ok(Box::new(XlaBackend(engine)))
+                .context("loading runtime engine (run `make artifacts`?)")?;
+            Ok(Box::new(RuntimeBackend(engine)))
         }),
         other => bail!(
-            "unknown backend {other:?} (registry|software|software-par|khoja|hw-np|hw-p|xla)"
+            "unknown backend {other:?} (registry|software|software-par|khoja|hw-np|hw-p|runtime)"
         ),
     })
 }
@@ -605,6 +607,32 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ama emit-hlo`: lower the stemmer dataflow to HLO-text artifacts from
+/// rust — the offline replacement for the JAX leg of `make artifacts`
+/// (aot.py is preferred when `jax` is importable; the two emit the same
+/// graph semantics and the same file names).
+fn cmd_emit_hlo(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.flag_or("--out", "artifacts"));
+    let batches: Vec<usize> = match args.flag("--batches") {
+        None => ama::runtime::BATCHES.to_vec(),
+        Some(spec) => spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("--batches: invalid batch size {s:?}"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    anyhow::ensure!(!batches.is_empty(), "--batches: no batch sizes given");
+    let paths = ama::runtime::emit::write_artifacts(&out, &batches)?;
+    for p in &paths {
+        let bytes = std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+        println!("wrote {} ({bytes} bytes)", p.display());
+    }
+    Ok(())
+}
+
 /// `ama bench json`: run the software / hw-sim benchmark suite and write a
 /// machine-readable JSON report (the `BENCH_PR*.json` perf trajectory).
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -731,6 +759,29 @@ fn cmd_bench(args: &Args) -> Result<()> {
     rows.push(r);
     let cache_snap = cache_metrics.snapshot();
 
+    // PR 5 rows: the interpreter-backed runtime engine per artifact batch
+    // size. Artifacts are emitted to a per-process scratch dir by the rust
+    // lowerer so the rows never depend on `make artifacts` having run (and
+    // concurrent/multi-user bench runs cannot collide in /tmp).
+    let art_dir = std::env::temp_dir().join(format!("ama_bench_artifacts_{}", std::process::id()));
+    ama::runtime::emit::write_artifacts(&art_dir, ama::runtime::BATCHES)
+        .context("emitting bench artifacts")?;
+    let engine = Engine::load(&art_dir, &roots).context("loading runtime engine for bench")?;
+    for b in engine.batch_sizes() {
+        let chunk = &words[..b.min(words.len())];
+        let r = ama::bench::bench_words(
+            &format!("runtime/stem_chunk_b{b}"),
+            &cfg,
+            chunk.len() as u64,
+            || {
+                let res = engine.stem_chunk(chunk).expect("runtime exec");
+                std::hint::black_box(res.len());
+            },
+        );
+        println!("{r}");
+        rows.push(r);
+    }
+
     use ama::hw::Processor as _;
     let dp = DatapathConfig { infix_units: true };
     let r = ama::bench::bench_words("hw-sim/pipelined (wall-clock)", &cfg, n, || {
@@ -827,17 +878,17 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     anyhow::ensure!(pp_res == expected, "pipelined simulator diverged from software");
     println!("hw simulators: OK ({n} words, bit-identical to software)");
 
-    // PJRT path
+    // Runtime engine (HLO interpreter by default, PJRT with the feature)
     let artifacts = artifacts_dir(args);
     if artifacts.join("stemmer_b1.hlo.txt").exists() {
         let engine = Engine::load(&artifacts, &roots)?;
-        let xla_res = engine.stem_chunk(&words)?;
+        let rt_res = engine.stem_chunk(&words)?;
         let mut mismatches = 0;
-        for (i, (a, b)) in xla_res.iter().zip(&expected).enumerate() {
+        for (i, (a, b)) in rt_res.iter().zip(&expected).enumerate() {
             if a != b {
                 if mismatches < 5 {
                     eprintln!(
-                        "word {} ({}): xla {:?} vs software {:?}",
+                        "word {} ({}): runtime {:?} vs software {:?}",
                         i,
                         words[i],
                         a,
@@ -847,10 +898,23 @@ fn cmd_selftest(args: &Args) -> Result<()> {
                 mismatches += 1;
             }
         }
-        anyhow::ensure!(mismatches == 0, "{mismatches} PJRT mismatches");
-        println!("pjrt engine:   OK ({n} words, bit-identical to software)");
+        anyhow::ensure!(mismatches == 0, "{mismatches} runtime-engine mismatches");
+        // …and against the retained scalar specification, so the
+        // artifact cycle is pinned to the executable spec end to end.
+        for (i, (a, w)) in rt_res.iter().zip(&words).enumerate() {
+            anyhow::ensure!(
+                *a == sw.stem_reference(w),
+                "word {i} ({w}): runtime engine diverged from stem_reference"
+            );
+        }
+        println!(
+            "runtime engine: OK ({n} words via {}, bit-identical to software + reference)",
+            engine.backend_name()
+        );
     } else {
-        println!("pjrt engine:   SKIPPED (no artifacts — run `make artifacts`)");
+        println!(
+            "runtime engine: SKIPPED (no artifacts — run `make artifacts` or `ama emit-hlo`)"
+        );
     }
     Ok(())
 }

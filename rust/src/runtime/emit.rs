@@ -1,0 +1,581 @@
+//! Rust-side HLO-text artifact emitter: lowers the fused stemmer kernel's
+//! dataflow (the same candidate-stream formulation as
+//! `python/compile/model.py`) to the HLO text the runtime consumes.
+//!
+//! `make artifacts` prefers the JAX lowering when `jax` is importable and
+//! falls back to `ama emit-hlo` (this module) otherwise, so the artifact
+//! cycle — emit → `Engine::load` → `stem_chunk` — is fully offline and
+//! self-hosting. The emitted graph is a *fixed* dataflow per batch size:
+//! every loop below unrolls at emit time, exactly as `jax.jit` unrolls
+//! the python model, into the op set `runtime::interp` evaluates
+//! (constant/parameter/broadcast/slice/reshape/concatenate, integer
+//! arithmetic + compare/select, gather for the bitmap lookups, one
+//! reduce-min for the priority select, tuple).
+//!
+//! Graph semantics (must stay bit-identical to `Stemmer::stem` /
+//! `stem_packed` / `stem_reference`; `scripts/oracle_sweep_pr5.py` sweeps
+//! a literal python port of this emitter + the interpreter against
+//! `ref.py`, and the rust proptests pin the real thing):
+//!
+//! * inputs `words s32[B,15]` (raw codepoints), `lens s32[B]`, and the
+//!   three direct-mapped dictionary bitmaps (`RootSet::bitmap_i32`);
+//! * dense indices by range arithmetic (`chars::char_index` as
+//!   compare/select), affix classes by gather from 37-entry 0/1 tables
+//!   (`chars::CHAR_CLASS` split per class);
+//! * candidate validity per cut from unrolled prefix/suffix AND-scans
+//!   (the `AffixProfile` contract);
+//! * the five candidate streams' dictionary probes as base-37 keys
+//!   gathered from the bitmaps;
+//! * priority select as reduce-min over the stream-major candidate
+//!   index (kind = k/6 + 1, cut = k mod 6 — `alphabet.py` KIND_* order);
+//! * outputs `(root s32[B,4], kind s32[B], cut s32[B])`.
+
+use crate::chars::{
+    self, ALPHABET_SIZE, CLASS_INFIX, CLASS_PREFIX, CLASS_SUFFIX, MAX_PREFIX, MAX_SUFFIX, MAX_WORD,
+};
+use anyhow::{Context as _, Result};
+use std::path::{Path, PathBuf};
+
+/// Prefix cut positions examined by the datapath (p ∈ 0..=MAX_PREFIX).
+const NUM_CUTS: usize = MAX_PREFIX + 1;
+
+/// Sentinel priority index: larger than any candidate index (5·6 = 30).
+const BIG: i32 = 31;
+
+const IDX_ALEF: i32 = chars::char_index(chars::ALEF) as i32;
+const IDX_WAW: i32 = chars::char_index(chars::WAW) as i32;
+
+/// Emit the complete stemmer module for one batch size. `infix` selects
+/// whether the two §6.3 infix streams (remove-infix, restore) are
+/// compiled in — mirroring `StemmerConfig::infix_processing`. The
+/// shipped `stemmer_b*.hlo.txt` artifacts use `infix = true` (the JAX
+/// model's only config); `infix = false` exists for the conformance
+/// tests that pin both engine configs.
+pub fn stemmer_hlo(batch: usize, infix: bool) -> String {
+    Emitter::new(batch, infix).build()
+}
+
+/// Write `stemmer_b{b}.hlo.txt` for every batch size plus a small
+/// `manifest.json`, creating `dir` if needed. Returns the written paths.
+pub fn write_artifacts(dir: &Path, batches: &[usize]) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    let mut paths = Vec::new();
+    let mut manifest_rows = Vec::new();
+    for &b in batches {
+        let text = stemmer_hlo(b, true);
+        let path = super::artifact_path(dir, b);
+        std::fs::write(&path, &text).with_context(|| format!("writing {}", path.display()))?;
+        manifest_rows.push(format!(
+            "    \"stemmer_b{b}.hlo.txt\": {{\"kind\": \"stemmer\", \"batch\": {b}, \"bytes\": {}}}",
+            text.len()
+        ));
+        paths.push(path);
+    }
+    let manifest = format!(
+        "{{\n  \"alphabet\": {ALPHABET_SIZE},\n  \"max_word\": {MAX_WORD},\n  \
+         \"dict_shapes\": {{\"bitmap2\": {}, \"bitmap3\": {}, \"bitmap4\": {}}},\n  \
+         \"emitter\": \"ama emit-hlo\",\n  \"artifacts\": {{\n{}\n  }}\n}}\n",
+        ALPHABET_SIZE * ALPHABET_SIZE,
+        ALPHABET_SIZE * ALPHABET_SIZE * ALPHABET_SIZE,
+        ALPHABET_SIZE * ALPHABET_SIZE * ALPHABET_SIZE * ALPHABET_SIZE,
+        manifest_rows.join(",\n")
+    );
+    let manifest_path = dir.join("manifest.json");
+    std::fs::write(&manifest_path, manifest)
+        .with_context(|| format!("writing {}", manifest_path.display()))?;
+    paths.push(manifest_path);
+    Ok(paths)
+}
+
+/// 37-entry 0/1 class table over dense alphabet indices.
+fn class_table(class: u8) -> Vec<i32> {
+    chars::CHAR_CLASS.iter().map(|&c| i32::from(c & class != 0)).collect()
+}
+
+struct Emitter {
+    b: usize,
+    infix: bool,
+    body: Vec<String>,
+    next: usize,
+    /// Scalar-constant cache: value → instruction name.
+    scalars: Vec<(i32, String)>,
+    /// Broadcast-constant cache: value → `s32[B]` instruction name.
+    bcasts: Vec<(i32, String)>,
+}
+
+impl Emitter {
+    fn new(b: usize, infix: bool) -> Emitter {
+        Emitter { b, infix, body: Vec::new(), next: 0, scalars: Vec::new(), bcasts: Vec::new() }
+    }
+
+    // -- shape strings ----------------------------------------------------
+
+    fn s_b(&self) -> String {
+        format!("s32[{}]", self.b)
+    }
+
+    fn p_b(&self) -> String {
+        format!("pred[{}]", self.b)
+    }
+
+    fn s_b1(&self) -> String {
+        format!("s32[{},1]", self.b)
+    }
+
+    // -- instruction helpers ----------------------------------------------
+
+    fn push(&mut self, shape: &str, expr: &str) -> String {
+        let name = format!("%v{}", self.next);
+        self.next += 1;
+        self.body.push(format!("  {name} = {shape} {expr}"));
+        name
+    }
+
+    fn named(&mut self, name: &str, shape: &str, expr: &str) -> String {
+        let name = format!("%{name}");
+        self.body.push(format!("  {name} = {shape} {expr}"));
+        name
+    }
+
+    /// Scalar `s32[]` constant (cached).
+    fn c(&mut self, v: i32) -> String {
+        if let Some((_, name)) = self.scalars.iter().find(|(x, _)| *x == v) {
+            return name.clone();
+        }
+        let name = self.push("s32[]", &format!("constant({v})"));
+        self.scalars.push((v, name.clone()));
+        name
+    }
+
+    /// Scalar constant broadcast to `s32[B]` (cached).
+    fn cb(&mut self, v: i32) -> String {
+        if let Some((_, name)) = self.bcasts.iter().find(|(x, _)| *x == v) {
+            return name.clone();
+        }
+        let c = self.c(v);
+        let shape = self.s_b();
+        let name = self.push(&shape, &format!("broadcast({c}), dimensions={{}}"));
+        self.bcasts.push((v, name.clone()));
+        name
+    }
+
+    /// 1-D `s32` table constant.
+    fn table(&mut self, values: &[i32]) -> String {
+        let list: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+        let shape = format!("s32[{}]", values.len());
+        self.push(&shape, &format!("constant({{{}}})", list.join(", ")))
+    }
+
+    fn bin(&mut self, op: &str, shape: &str, a: &str, b: &str) -> String {
+        self.push(shape, &format!("{op}({a}, {b})"))
+    }
+
+    /// `compare` of two `s32[B]` operands → `pred[B]`.
+    fn cmp(&mut self, a: &str, b: &str, dir: &str) -> String {
+        let shape = self.p_b();
+        self.push(&shape, &format!("compare({a}, {b}), direction={dir}"))
+    }
+
+    fn and(&mut self, a: &str, b: &str) -> String {
+        let shape = self.p_b();
+        self.bin("and", &shape, a, b)
+    }
+
+    fn or(&mut self, a: &str, b: &str) -> String {
+        let shape = self.p_b();
+        self.bin("or", &shape, a, b)
+    }
+
+    fn not(&mut self, a: &str) -> String {
+        let shape = self.p_b();
+        self.push(&shape, &format!("not({a})"))
+    }
+
+    /// `select` over `s32[B]` values.
+    fn sel(&mut self, c: &str, t: &str, f: &str) -> String {
+        let shape = self.s_b();
+        self.push(&shape, &format!("select({c}, {t}, {f})"))
+    }
+
+    /// Reshape an `s32[B]` vector to the `s32[B,1]` gather-index form.
+    fn as_col(&mut self, v: &str) -> String {
+        let shape = self.s_b1();
+        self.push(&shape, &format!("reshape({v})"))
+    }
+
+    /// Canonical 1-D gather: `table s32[N]` indexed by `idx2 s32[B,1]`.
+    fn gather(&mut self, table: &str, idx2: &str) -> String {
+        let shape = self.s_b();
+        self.push(
+            &shape,
+            &format!(
+                "gather({table}, {idx2}), offset_dims={{}}, collapsed_slice_dims={{0}}, \
+                 start_index_map={{0}}, index_vector_dim=1, slice_sizes={{1}}"
+            ),
+        )
+    }
+
+    /// Base-37 key of a digit-vector list (each an `s32[B]` name).
+    fn key(&mut self, digits: &[String]) -> String {
+        let a37 = self.cb(ALPHABET_SIZE as i32);
+        let shape = self.s_b();
+        let mut k = digits[0].clone();
+        for d in &digits[1..] {
+            let m = self.bin("multiply", &shape, &k, &a37);
+            k = self.bin("add", &shape, &m, d);
+        }
+        k
+    }
+
+    /// Bitmap membership of a key: gather + `!= 0`.
+    fn in_dict(&mut self, bitmap: &str, key: &str) -> String {
+        let k2 = self.as_col(key);
+        let g = self.gather(bitmap, &k2);
+        let zero = self.cb(0);
+        self.cmp(&g, &zero, "NE")
+    }
+
+    // -- the graph ---------------------------------------------------------
+
+    fn build(mut self) -> String {
+        let b = self.b;
+        let sb = self.s_b();
+        let sb1 = self.s_b1();
+        let pb = self.p_b();
+
+        // Parameters (same order and shapes as the JAX lowering).
+        let shape_words = format!("s32[{b},{MAX_WORD}]");
+        let words = self.named("words", &shape_words, "parameter(0)");
+        let lens = self.named("lens", &sb, "parameter(1)");
+        let bm2 = self.named("bitmap2", &format!("s32[{}]", ALPHABET_SIZE.pow(2)), "parameter(2)");
+        let bm3 = self.named("bitmap3", &format!("s32[{}]", ALPHABET_SIZE.pow(3)), "parameter(3)");
+        let bm4 = self.named("bitmap4", &format!("s32[{}]", ALPHABET_SIZE.pow(4)), "parameter(4)");
+
+        // Affix-class tables over dense indices (CHAR_CLASS split per class).
+        let pfx_tbl = self.table(&class_table(CLASS_PREFIX));
+        let sfx_tbl = self.table(&class_table(CLASS_SUFFIX));
+        let ifx_tbl = self.table(&class_table(CLASS_INFIX));
+
+        // Character columns (raw codepoints) and their dense indices.
+        let zero = self.cb(0);
+        let lo1 = self.cb(0x0621);
+        let hi1 = self.cb(0x063A);
+        let lo2 = self.cb(0x0641);
+        let hi2 = self.cb(0x064A);
+        let off1 = self.cb(0x0620);
+        let off2 = self.cb(0x0641 - 27);
+        let mut col: Vec<String> = Vec::with_capacity(MAX_WORD);
+        let mut ix: Vec<String> = Vec::with_capacity(MAX_WORD);
+        let mut ixc: Vec<String> = Vec::with_capacity(MAX_WORD);
+        for j in 0..MAX_WORD {
+            let sl = self.push(
+                &sb1,
+                &format!("slice({words}), slice={{[0:{b}], [{j}:{}]}}", j + 1),
+            );
+            let cj = self.push(&sb, &format!("reshape({sl})"));
+            // char_index as arithmetic: two contiguous ranges, else 0.
+            let ge1 = self.cmp(&cj, &lo1, "GE");
+            let le1 = self.cmp(&cj, &hi1, "LE");
+            let in1 = self.and(&ge1, &le1);
+            let ge2 = self.cmp(&cj, &lo2, "GE");
+            let le2 = self.cmp(&cj, &hi2, "LE");
+            let in2 = self.and(&ge2, &le2);
+            let d1 = self.bin("subtract", &sb, &cj, &off1);
+            let d2 = self.bin("subtract", &sb, &cj, &off2);
+            let alt = self.sel(&in2, &d2, &zero);
+            let ij = self.sel(&in1, &d1, &alt);
+            let ij2 = self.as_col(&ij);
+            col.push(cj);
+            ix.push(ij);
+            ixc.push(ij2);
+        }
+
+        // Affix-class predicates per position.
+        let mut pfx_ok: Vec<String> = Vec::with_capacity(MAX_PREFIX);
+        for ij2 in ixc.iter().take(MAX_PREFIX) {
+            let g = self.gather(&pfx_tbl, ij2);
+            pfx_ok.push(self.cmp(&g, &zero, "NE"));
+        }
+        let mut sfx_ok: Vec<String> = Vec::with_capacity(MAX_WORD);
+        for ij2 in &ixc {
+            let g = self.gather(&sfx_tbl, ij2);
+            sfx_ok.push(self.cmp(&g, &zero, "NE"));
+        }
+        // Second-character predicates for the infix streams (position p+1).
+        let idx_alef = self.cb(IDX_ALEF);
+        let mut ifx_ok: Vec<String> = Vec::new();
+        let mut alef_ok: Vec<String> = Vec::new();
+        if self.infix {
+            for p in 0..NUM_CUTS {
+                let g = self.gather(&ifx_tbl, &ixc[p + 1]);
+                ifx_ok.push(self.cmp(&g, &zero, "NE"));
+                alef_ok.push(self.cmp(&ix[p + 1], &idx_alef, "EQ"));
+            }
+        }
+
+        // Suffix tail scan: tail[j] ⇔ positions j..n are all suffix
+        // letters (positions ≥ n are vacuously fine). tail[e] is exactly
+        // `e ≥ suffix_start` of the AffixProfile contract.
+        let t_scalar = self.push("pred[]", "constant(true)");
+        let true_b = self.push(&pb, &format!("broadcast({t_scalar}), dimensions={{}}"));
+        let mut s_ok: Vec<String> = Vec::with_capacity(MAX_WORD);
+        for j in 0..MAX_WORD {
+            let jb = self.cb(j as i32);
+            let inw = self.cmp(&jb, &lens, "LT");
+            let ninw = self.not(&inw);
+            s_ok.push(self.or(&sfx_ok[j], &ninw));
+        }
+        let mut tail: Vec<String> = vec![String::new(); MAX_WORD + 1];
+        tail[MAX_WORD] = true_b.clone();
+        for j in (0..MAX_WORD).rev() {
+            tail[j] = self.and(&s_ok[j], &tail[j + 1]);
+        }
+
+        // Prefix validity scan: pv[p] ⇔ the first p characters are all
+        // prefix letters (`p ≤ prefix_run`).
+        let mut pv: Vec<String> = Vec::with_capacity(NUM_CUTS);
+        pv.push(true_b.clone());
+        for p in 1..NUM_CUTS {
+            let v = self.and(&pv[p - 1], &pfx_ok[p - 1]);
+            pv.push(v);
+        }
+
+        // Window validity per (cut, stem size): fits, tail short enough,
+        // tail all-suffix, prefix all-prefix (candidate_valid of ref.py).
+        let max_sfx = self.cb(MAX_SUFFIX as i32);
+        let valid = |em: &mut Emitter, p: usize, size: usize| -> String {
+            let e = p + size;
+            let eb = em.cb(e as i32);
+            let fits = em.cmp(&eb, &lens, "LE");
+            let rem = em.bin("subtract", &sb, &lens, &eb);
+            let slen = em.cmp(&rem, &max_sfx, "LE");
+            let a = em.and(&fits, &slen);
+            let bb = em.and(&tail[e], &pv[p]);
+            em.and(&a, &bb)
+        };
+        let valid3: Vec<String> = (0..NUM_CUTS).map(|p| valid(&mut self, p, 3)).collect();
+        let valid4: Vec<String> = (0..NUM_CUTS).map(|p| valid(&mut self, p, 4)).collect();
+
+        // Candidate hits, stream-major (k = stream·6 + p), plus each
+        // candidate's root characters (raw codepoint columns — on a hit
+        // every window character is a genuine dictionary letter).
+        let waw_b = self.cb(chars::WAW as i32);
+        let mut hits: Vec<String> = Vec::new();
+        let mut cand_root: Vec<[String; 4]> = Vec::new();
+        // stream 0: direct trilateral
+        for p in 0..NUM_CUTS {
+            let k = self.key(&[ix[p].clone(), ix[p + 1].clone(), ix[p + 2].clone()]);
+            let found = self.in_dict(&bm3, &k);
+            hits.push(self.and(&valid3[p], &found));
+            cand_root.push([col[p].clone(), col[p + 1].clone(), col[p + 2].clone(), zero.clone()]);
+        }
+        // stream 1: direct quadrilateral
+        for p in 0..NUM_CUTS {
+            let k = self.key(&[
+                ix[p].clone(),
+                ix[p + 1].clone(),
+                ix[p + 2].clone(),
+                ix[p + 3].clone(),
+            ]);
+            let found = self.in_dict(&bm4, &k);
+            hits.push(self.and(&valid4[p], &found));
+            cand_root.push([
+                col[p].clone(),
+                col[p + 1].clone(),
+                col[p + 2].clone(),
+                col[p + 3].clone(),
+            ]);
+        }
+        if self.infix {
+            // stream 2: remove-infix, quad stem → trilateral root
+            for p in 0..NUM_CUTS {
+                let k = self.key(&[ix[p].clone(), ix[p + 2].clone(), ix[p + 3].clone()]);
+                let found = self.in_dict(&bm3, &k);
+                let v = self.and(&valid4[p], &ifx_ok[p]);
+                hits.push(self.and(&v, &found));
+                cand_root.push([
+                    col[p].clone(),
+                    col[p + 2].clone(),
+                    col[p + 3].clone(),
+                    zero.clone(),
+                ]);
+            }
+            // stream 3: remove-infix, tri stem → bilateral root
+            for p in 0..NUM_CUTS {
+                let k = self.key(&[ix[p].clone(), ix[p + 2].clone()]);
+                let found = self.in_dict(&bm2, &k);
+                let v = self.and(&valid3[p], &ifx_ok[p]);
+                hits.push(self.and(&v, &found));
+                cand_root.push([col[p].clone(), col[p + 2].clone(), zero.clone(), zero.clone()]);
+            }
+            // stream 4: restore original form (hollow verbs, ا → و)
+            let idx_waw = self.cb(IDX_WAW);
+            for p in 0..NUM_CUTS {
+                let k = self.key(&[ix[p].clone(), idx_waw.clone(), ix[p + 2].clone()]);
+                let found = self.in_dict(&bm3, &k);
+                let v = self.and(&valid3[p], &alef_ok[p]);
+                hits.push(self.and(&v, &found));
+                cand_root.push([col[p].clone(), waw_b.clone(), col[p + 2].clone(), zero.clone()]);
+            }
+        }
+
+        // Priority select: the winning candidate is the smallest hit
+        // index in stream-major order — reduce-min over masked indices.
+        let big_b = self.cb(BIG);
+        let mut masked_cols: Vec<String> = Vec::with_capacity(hits.len());
+        for (k, hit) in hits.iter().enumerate() {
+            let kb = self.cb(k as i32);
+            let m = self.sel(hit, &kb, &big_b);
+            masked_cols.push(self.as_col(&m));
+        }
+        let kdim = masked_cols.len();
+        let cat = self.push(
+            &format!("s32[{b},{kdim}]"),
+            &format!("concatenate({}), dimensions={{1}}", masked_cols.join(", ")),
+        );
+        let big_s = self.c(BIG);
+        let best = self.push(
+            &sb,
+            &format!("reduce({cat}, {big_s}), dimensions={{1}}, to_apply=%min_s32"),
+        );
+        let found_any = self.cmp(&best, &big_b, "LT");
+        let six = self.cb(NUM_CUTS as i32);
+        let one = self.cb(1);
+        let stream = self.bin("divide", &sb, &best, &six);
+        let kind_raw = self.bin("add", &sb, &stream, &one);
+        let kind = self.sel(&found_any, &kind_raw, &zero);
+        let cut_raw = self.bin("remainder", &sb, &best, &six);
+        let cut = self.sel(&found_any, &cut_raw, &zero);
+
+        // Root extraction: per character position, a select chain keyed
+        // on `best == k` (exactly one k matches when found).
+        let mut root_cols: Vec<String> = Vec::with_capacity(4);
+        for j in 0..4 {
+            let mut acc = zero.clone();
+            for (k, cand) in cand_root.iter().enumerate() {
+                let kb = self.cb(k as i32);
+                let eq = self.cmp(&best, &kb, "EQ");
+                acc = self.sel(&eq, &cand[j], &acc);
+            }
+            root_cols.push(self.as_col(&acc));
+        }
+        let root = self.push(
+            &format!("s32[{b},4]"),
+            &format!("concatenate({}), dimensions={{1}}", root_cols.join(", ")),
+        );
+
+        let result_shape = format!("(s32[{b},4], s32[{b}], s32[{b}])");
+        self.body.push(format!(
+            "  ROOT %result = {result_shape} tuple({root}, {kind}, {cut})"
+        ));
+
+        // Render the module.
+        let suffix = if self.infix { "" } else { "_noinfix" };
+        let mut out = String::new();
+        out.push_str(&format!("HloModule stemmer{suffix}_b{b}\n\n"));
+        out.push_str(
+            "%min_s32 (a: s32[], b: s32[]) -> s32[] {\n  %a = s32[] parameter(0)\n  \
+             %b = s32[] parameter(1)\n  ROOT %min = s32[] minimum(%a, %b)\n}\n\n",
+        );
+        out.push_str(&format!(
+            "ENTRY %stemmer (words: {shape_words}, lens: {sb}, bitmap2: s32[{}], \
+             bitmap3: s32[{}], bitmap4: s32[{}]) -> {result_shape} {{\n",
+            ALPHABET_SIZE.pow(2),
+            ALPHABET_SIZE.pow(3),
+            ALPHABET_SIZE.pow(4)
+        ));
+        for line in &self.body {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chars::ArabicWord;
+    use crate::roots::RootSet;
+    use crate::runtime::interp::InterpBackend;
+    use crate::runtime::Backend as _;
+    use crate::stemmer::{MatchKind, Stemmer, StemmerConfig};
+    use std::sync::Arc;
+
+    fn engine(batch: usize, infix: bool, roots: &RootSet) -> InterpBackend {
+        let text = stemmer_hlo(batch, infix);
+        InterpBackend::from_texts([(text.as_str(), "emitted")], roots).unwrap()
+    }
+
+    #[test]
+    fn emitted_module_parses_and_validates() {
+        for b in [1usize, 8] {
+            let text = stemmer_hlo(b, true);
+            let m = crate::runtime::interp::Module::parse(&text).unwrap();
+            let shapes = m.entry_param_shapes();
+            assert_eq!(shapes.len(), 5);
+            assert_eq!(shapes[0].dims, vec![b, MAX_WORD]);
+            assert_eq!(shapes[4].dims, vec![ALPHABET_SIZE.pow(4)]);
+        }
+    }
+
+    #[test]
+    fn paper_examples_through_the_emitted_graph() {
+        let roots = RootSet::builtin_mini();
+        let eng = engine(8, true, &roots);
+        let cases = [
+            ("سيلعبون", "لعب", MatchKind::Tri),
+            ("أفاستسقيناكموها", "سقي", MatchKind::Tri),
+            ("فتزحزحت", "زحزح", MatchKind::Quad),
+            ("قال", "قول", MatchKind::Restored),
+            ("كاتب", "كتب", MatchKind::RmInfixTri),
+            ("ماد", "مد", MatchKind::RmInfixBi),
+            ("ظظظظظ", "", MatchKind::None),
+        ];
+        let words: Vec<ArabicWord> = cases.iter().map(|(w, _, _)| ArabicWord::encode(w)).collect();
+        let got = eng.stem_chunk(&words).unwrap();
+        for ((w, root, kind), r) in cases.iter().zip(&got) {
+            assert_eq!(r.kind, *kind, "{w}");
+            assert_eq!(r.root_word().to_string_ar(), *root, "{w}");
+        }
+    }
+
+    #[test]
+    fn both_infix_configs_match_the_stemmer() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let mut rng = crate::rng::SplitMix64::new(0x0917_0050);
+        let words: Vec<ArabicWord> = (0..200)
+            .map(|_| {
+                let n = rng.index(MAX_WORD + 1);
+                let codes: Vec<u16> =
+                    (0..n).map(|_| chars::index_char(1 + rng.below(36) as u8)).collect();
+                ArabicWord::from_codes(&codes)
+            })
+            .collect();
+        for infix in [true, false] {
+            let eng = engine(8, infix, &roots);
+            let sw = Stemmer::new(roots.clone(), StemmerConfig { infix_processing: infix });
+            let got = eng.stem_chunk(&words).unwrap();
+            for (case, (w, g)) in words.iter().zip(&got).enumerate() {
+                assert_eq!(*g, sw.stem(w), "case {case} (infix={infix}): {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_artifacts_emits_loadable_files() {
+        let dir = std::env::temp_dir().join("ama_emit_test_artifacts");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = write_artifacts(&dir, &[1, 8]).unwrap();
+        assert_eq!(paths.len(), 3); // two artifacts + manifest
+        assert!(dir.join("stemmer_b1.hlo.txt").exists());
+        assert!(dir.join("manifest.json").exists());
+        let roots = RootSet::builtin_mini();
+        let eng = InterpBackend::load(&dir, &roots).unwrap();
+        // load discovers whatever batch sizes are on disk, standard or not
+        assert_eq!(eng.batch_sizes(), vec![1, 8]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,1312 @@
+//! A dependency-free HLO-text interpreter: the offline execution backend
+//! behind [`crate::runtime::Engine`] in the default build.
+//!
+//! The stemmer artifacts (`artifacts/stemmer_b*.hlo.txt`, produced by
+//! `make artifacts` — JAX when available, [`crate::runtime::emit`]
+//! otherwise) are fixed dataflow graphs over a small integer op set:
+//! `constant` / `parameter` / `broadcast` / `iota` / `reshape` / `slice` /
+//! `concatenate`, integer arithmetic and `compare` / `select`, `gather` /
+//! `dynamic-slice` for the direct-mapped bitmap lookups, `reduce` (with a
+//! named scalar combiner computation), and `tuple`. This module parses
+//! that HLO text and evaluates it directly — no `xla` bindings, no
+//! codegen — so `Engine::load` succeeds offline. The same artifact text
+//! compiles through real PJRT when the `pjrt` feature is enabled.
+//!
+//! Only two element types exist on the stemmer path (`s32` and `pred`),
+//! so tensors store `i32` with a dtype tag. Every instruction's computed
+//! shape is validated against its declared shape, which turns the
+//! interpreter into a shape checker for the emitter as a side effect.
+
+use crate::chars::{ArabicWord, ALPHABET_SIZE, MAX_WORD};
+use crate::roots::RootSet;
+use crate::stemmer::{MatchKind, StemResult};
+use anyhow::{anyhow, bail, Context as _, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::rc::Rc;
+
+// ---------------------------------------------------------------------------
+// Values
+// ---------------------------------------------------------------------------
+
+/// Element type of a tensor. The stemmer graphs use only 32-bit signed
+/// integers and booleans (`pred`, stored as 0/1 `i32`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    S32,
+    Pred,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "s32" => Ok(DType::S32),
+            "pred" => Ok(DType::Pred),
+            other => bail!("unsupported element type {other:?} (only s32/pred)"),
+        }
+    }
+}
+
+/// An array shape: element type plus dimensions (row-major layout).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// A dense row-major tensor of `i32` (`pred` stores 0/1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn s32(dims: Vec<usize>, data: Vec<i32>) -> Tensor {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dtype: DType::S32, dims, data }
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { dtype: self.dtype, dims: self.dims.clone() }
+    }
+}
+
+/// Row-major strides of a dimension list.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut out = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        out[i] = out[i + 1] * dims[i + 1];
+    }
+    out
+}
+
+/// An evaluated value: one tensor or a (flat) tuple of tensors.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Tensor(Rc<Tensor>),
+    Tuple(Vec<Rc<Tensor>>),
+}
+
+impl Value {
+    fn tensor(&self) -> Result<&Rc<Tensor>> {
+        match self {
+            Value::Tensor(t) => Ok(t),
+            Value::Tuple(_) => bail!("expected array value, found tuple"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instructions
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BinOp {
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    Remainder,
+    Minimum,
+    Maximum,
+    And,
+    Or,
+    Xor,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+#[derive(Debug)]
+enum Op {
+    Parameter(usize),
+    Constant(Tensor),
+    Broadcast { dims: Vec<usize> },
+    Iota { dim: usize },
+    Reshape,
+    Slice { limits: Vec<(usize, usize)> },
+    Concatenate { dim: usize },
+    Binary(BinOp),
+    Not,
+    Compare(CmpDir),
+    Select,
+    Convert,
+    Gather { index_vector_dim: usize, slice_sizes: Vec<usize> },
+    DynamicSlice { sizes: Vec<usize> },
+    Reduce { dims: Vec<usize>, to_apply: String },
+    Tuple,
+}
+
+#[derive(Debug)]
+enum DeclShape {
+    Array(Shape),
+    Tuple(Vec<Shape>),
+}
+
+#[derive(Debug)]
+struct Instr {
+    op: Op,
+    operands: Vec<usize>,
+    shape: DeclShape,
+}
+
+#[derive(Debug)]
+struct Computation {
+    name: String,
+    instrs: Vec<Instr>,
+    root: usize,
+    num_params: usize,
+}
+
+/// A parsed HLO module: auxiliary computations plus the `ENTRY` graph.
+#[derive(Debug)]
+pub struct Module {
+    computations: Vec<Computation>,
+    by_name: HashMap<String, usize>,
+    entry: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------------
+
+/// Split `s` on commas at brace/bracket/paren depth zero.
+fn split_top(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = s[start..].trim();
+    if !last.is_empty() {
+        out.push(last);
+    }
+    out
+}
+
+/// Parse one array shape like `s32[32,15]` (an optional trailing layout
+/// `{1,0}` is ignored).
+fn parse_array_shape(s: &str) -> Result<Shape> {
+    let s = s.trim();
+    let open = s.find('[').ok_or_else(|| anyhow!("malformed shape {s:?}"))?;
+    let close = s.find(']').ok_or_else(|| anyhow!("malformed shape {s:?}"))?;
+    let dtype = DType::parse(&s[..open])?;
+    let inner = &s[open + 1..close];
+    let mut dims = Vec::new();
+    for d in inner.split(',') {
+        let d = d.trim();
+        if d.is_empty() {
+            continue;
+        }
+        dims.push(d.parse::<usize>().map_err(|_| anyhow!("bad dimension {d:?} in {s:?}"))?);
+    }
+    Ok(Shape { dtype, dims })
+}
+
+fn parse_decl_shape(s: &str) -> Result<DeclShape> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('(') {
+        let inner = inner.strip_suffix(')').ok_or_else(|| anyhow!("malformed tuple shape {s:?}"))?;
+        let mut shapes = Vec::new();
+        for part in split_top(inner) {
+            shapes.push(parse_array_shape(part)?);
+        }
+        Ok(DeclShape::Tuple(shapes))
+    } else {
+        Ok(DeclShape::Array(parse_array_shape(s)?))
+    }
+}
+
+/// Parse a brace list of integers: `{1, 2, 3}` or `{}`.
+fn parse_int_list(s: &str) -> Result<Vec<i64>> {
+    let s = s.trim();
+    let inner = s
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .ok_or_else(|| anyhow!("expected brace list, found {s:?}"))?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(part.parse::<i64>().map_err(|_| anyhow!("bad integer {part:?} in {s:?}"))?);
+    }
+    Ok(out)
+}
+
+/// Parse a constant literal: scalar `5`, `true`/`false`, or `{…}` list.
+fn parse_literal(text: &str, shape: &Shape) -> Result<Tensor> {
+    let text = text.trim();
+    let data: Vec<i32> = if text.starts_with('{') {
+        parse_int_list(text)?.into_iter().map(|v| v as i32).collect()
+    } else if text == "true" {
+        vec![1]
+    } else if text == "false" {
+        vec![0]
+    } else {
+        vec![text.parse::<i64>().map_err(|_| anyhow!("bad constant literal {text:?}"))? as i32]
+    };
+    if data.len() != shape.elements() {
+        bail!("constant has {} elements, shape {:?} wants {}", data.len(), shape.dims, shape.elements());
+    }
+    Ok(Tensor { dtype: shape.dtype, dims: shape.dims.clone(), data })
+}
+
+/// Parse a slice spec: `{[0:32], [3:4]}` (an optional `:stride` must be 1).
+fn parse_slice_spec(s: &str) -> Result<Vec<(usize, usize)>> {
+    let s = s.trim();
+    let inner = s
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .ok_or_else(|| anyhow!("malformed slice spec {s:?}"))?;
+    let mut out = Vec::new();
+    for part in split_top(inner) {
+        let part = part
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .ok_or_else(|| anyhow!("malformed slice range {part:?}"))?;
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() < 2 || fields.len() > 3 {
+            bail!("malformed slice range [{part}]");
+        }
+        if fields.len() == 3 && fields[2].trim() != "1" {
+            bail!("strided slice unsupported: [{part}]");
+        }
+        let lo = fields[0].trim().parse::<usize>().map_err(|_| anyhow!("bad slice bound in [{part}]"))?;
+        let hi = fields[1].trim().parse::<usize>().map_err(|_| anyhow!("bad slice bound in [{part}]"))?;
+        out.push((lo, hi));
+    }
+    Ok(out)
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    Ok(parse_int_list(s)?.into_iter().map(|v| v as usize).collect())
+}
+
+/// One body line split into (is_root, name, shape text, opcode, operand
+/// text, attribute map).
+struct RawInstr<'a> {
+    is_root: bool,
+    name: &'a str,
+    shape: &'a str,
+    opcode: &'a str,
+    operands: &'a str,
+    attrs: HashMap<&'a str, &'a str>,
+}
+
+fn parse_body_line(line: &str) -> Result<RawInstr<'_>> {
+    let line = line.trim();
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let (name, rest) = line.split_once(" = ").ok_or_else(|| anyhow!("missing `=` in {line:?}"))?;
+    let name = name.trim();
+    if !name.starts_with('%') {
+        bail!("instruction name {name:?} must start with %");
+    }
+    let rest = rest.trim();
+    // Shape: tuple `(...)` or `dtype[dims]` (+ optional layout braces).
+    let (shape, rest) = if rest.starts_with('(') {
+        let mut depth = 0i32;
+        let mut end = 0usize;
+        for (i, c) in rest.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if end == 0 {
+            bail!("unbalanced tuple shape in {line:?}");
+        }
+        (&rest[..end], rest[end..].trim_start())
+    } else {
+        let close = rest.find(']').ok_or_else(|| anyhow!("missing shape in {line:?}"))?;
+        let mut end = close + 1;
+        // skip a layout annotation like `{1,0}`
+        if rest[end..].starts_with('{') {
+            let rel = rest[end..].find('}').ok_or_else(|| anyhow!("unbalanced layout in {line:?}"))?;
+            end += rel + 1;
+        }
+        (&rest[..end], rest[end..].trim_start())
+    };
+    // Opcode up to the opening paren of the operand list.
+    let open = rest.find('(').ok_or_else(|| anyhow!("missing operand list in {line:?}"))?;
+    let opcode = rest[..open].trim();
+    let mut depth = 0i32;
+    let mut close = 0usize;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = i;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    if close == 0 && !rest.ends_with("()") {
+        bail!("unbalanced operand list in {line:?}");
+    }
+    let operands = &rest[open + 1..close];
+    let mut attrs = HashMap::new();
+    for part in split_top(rest[close + 1..].trim_start_matches(',').trim()) {
+        if let Some((k, v)) = part.split_once('=') {
+            attrs.insert(k.trim(), v.trim());
+        }
+    }
+    Ok(RawInstr { is_root, name, shape, opcode, operands, attrs })
+}
+
+/// Resolve an operand token to the instruction it names. Operands may be
+/// bare (`%v3`) or typed (`s32[32] %v3`) — the `%`-token wins.
+fn operand_index(token: &str, names: &HashMap<String, usize>) -> Result<usize> {
+    let name = token
+        .split_whitespace()
+        .find(|t| t.starts_with('%'))
+        .ok_or_else(|| anyhow!("operand {token:?} names no instruction"))?;
+    names
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("operand {name:?} is not defined before use"))
+}
+
+impl Module {
+    /// Parse an HLO-text module. Accepts the subset emitted by
+    /// [`crate::runtime::emit`] (and the equivalent JAX lowering): one or
+    /// more computations, exactly one marked `ENTRY`.
+    pub fn parse(text: &str) -> Result<Module> {
+        let mut computations: Vec<Computation> = Vec::new();
+        let mut by_name: HashMap<String, usize> = HashMap::new();
+        let mut entry: Option<usize> = None;
+
+        let mut cur_name: Option<(String, bool)> = None;
+        let mut cur_instrs: Vec<Instr> = Vec::new();
+        let mut cur_names: HashMap<String, usize> = HashMap::new();
+        let mut cur_root: Option<usize> = None;
+
+        let mut saw_module = false;
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = raw_line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with("HloModule") {
+                saw_module = true;
+                continue;
+            }
+            if line == "}" {
+                let (name, is_entry) =
+                    cur_name.take().ok_or_else(|| anyhow!("line {}: stray `}}`", lineno + 1))?;
+                let root = cur_root
+                    .take()
+                    .ok_or_else(|| anyhow!("computation {name} has no ROOT instruction"))?;
+                let num_params = cur_instrs
+                    .iter()
+                    .filter(|i| matches!(i.op, Op::Parameter(_)))
+                    .count();
+                let idx = computations.len();
+                by_name.insert(name.clone(), idx);
+                computations.push(Computation {
+                    name,
+                    instrs: std::mem::take(&mut cur_instrs),
+                    root,
+                    num_params,
+                });
+                cur_names.clear();
+                if is_entry {
+                    if entry.is_some() {
+                        bail!("multiple ENTRY computations");
+                    }
+                    entry = Some(idx);
+                }
+                continue;
+            }
+            if line.ends_with('{') && line.contains("->") {
+                // computation header: `[ENTRY] %name (sig) -> result {`
+                if cur_name.is_some() {
+                    bail!("line {}: nested computation", lineno + 1);
+                }
+                let is_entry = line.starts_with("ENTRY");
+                let after = line.strip_prefix("ENTRY").unwrap_or(line).trim_start();
+                let name = after
+                    .split_whitespace()
+                    .next()
+                    .filter(|t| t.starts_with('%'))
+                    .ok_or_else(|| anyhow!("line {}: computation header has no %name", lineno + 1))?;
+                cur_name = Some((name.trim_end_matches('(').to_string(), is_entry));
+                continue;
+            }
+            // body instruction
+            if cur_name.is_none() {
+                bail!("line {}: instruction outside a computation: {line:?}", lineno + 1);
+            }
+            let raw = parse_body_line(line)
+                .with_context(|| format!("line {}", lineno + 1))?;
+            let instr = build_instr(&raw, &cur_names)
+                .with_context(|| format!("line {}: {line:?}", lineno + 1))?;
+            let idx = cur_instrs.len();
+            if cur_names.insert(raw.name.to_string(), idx).is_some() {
+                bail!("line {}: duplicate instruction name {}", lineno + 1, raw.name);
+            }
+            if raw.is_root {
+                cur_root = Some(idx);
+            }
+            cur_instrs.push(instr);
+        }
+        if !saw_module {
+            bail!("not an HLO-text module (no `HloModule` header)");
+        }
+        if cur_name.is_some() {
+            bail!("unterminated computation");
+        }
+        let entry = entry.ok_or_else(|| anyhow!("module has no ENTRY computation"))?;
+        // Resolve reduce combiner references eagerly for a clean error.
+        for comp in &computations {
+            for instr in &comp.instrs {
+                if let Op::Reduce { to_apply, .. } = &instr.op {
+                    if !by_name.contains_key(to_apply) {
+                        bail!("reduce refers to unknown computation {to_apply}");
+                    }
+                }
+            }
+        }
+        Ok(Module { computations, by_name, entry })
+    }
+
+    /// Shapes of the entry computation's parameters, in parameter order.
+    pub fn entry_param_shapes(&self) -> Vec<Shape> {
+        let comp = &self.computations[self.entry];
+        let mut out: Vec<(usize, Shape)> = Vec::new();
+        for instr in &comp.instrs {
+            if let (Op::Parameter(n), DeclShape::Array(s)) = (&instr.op, &instr.shape) {
+                out.push((*n, s.clone()));
+            }
+        }
+        out.sort_by_key(|(n, _)| *n);
+        out.into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// Evaluate the entry computation on `args`.
+    pub fn evaluate(&self, args: &[Rc<Tensor>]) -> Result<Value> {
+        self.eval_computation(self.entry, args)
+    }
+
+    fn eval_computation(&self, idx: usize, args: &[Rc<Tensor>]) -> Result<Value> {
+        let comp = &self.computations[idx];
+        if args.len() != comp.num_params {
+            bail!("{} expects {} arguments, got {}", comp.name, comp.num_params, args.len());
+        }
+        let mut values: Vec<Option<Value>> = Vec::with_capacity(comp.instrs.len());
+        for (i, instr) in comp.instrs.iter().enumerate() {
+            let value = self
+                .eval_instr(instr, &values, args)
+                .with_context(|| format!("evaluating {} instruction #{i}", comp.name))?;
+            // Shape checking: the computed value must match the decl.
+            match (&value, &instr.shape) {
+                (Value::Tensor(t), DeclShape::Array(s)) => {
+                    if &t.shape() != s {
+                        bail!(
+                            "{} instruction #{i}: computed shape {:?}/{:?} != declared {:?}/{:?}",
+                            comp.name, t.dtype, t.dims, s.dtype, s.dims
+                        );
+                    }
+                }
+                (Value::Tuple(ts), DeclShape::Tuple(ss)) => {
+                    if ts.len() != ss.len() || ts.iter().zip(ss).any(|(t, s)| &t.shape() != s) {
+                        bail!("{} instruction #{i}: tuple shape mismatch", comp.name);
+                    }
+                }
+                _ => bail!("{} instruction #{i}: array/tuple kind mismatch", comp.name),
+            }
+            values.push(Some(value));
+        }
+        values[comp.root]
+            .clone()
+            .ok_or_else(|| anyhow!("ROOT of {} never evaluated", comp.name))
+    }
+
+    /// Look up a combiner computation and distill it to a binary op.
+    fn combiner(&self, name: &str) -> Result<BinOp> {
+        let comp = &self.computations[self.by_name[name]];
+        if comp.num_params != 2 {
+            bail!("combiner {name} must take 2 parameters");
+        }
+        let root = &comp.instrs[comp.root];
+        let op = match &root.op {
+            Op::Binary(op) => *op,
+            _ => bail!("combiner {name} root must be a binary elementwise op"),
+        };
+        for &o in &root.operands {
+            if !matches!(comp.instrs[o].op, Op::Parameter(_)) {
+                bail!("combiner {name} must apply the op directly to its parameters");
+            }
+        }
+        Ok(op)
+    }
+
+    fn eval_instr(
+        &self,
+        instr: &Instr,
+        values: &[Option<Value>],
+        args: &[Rc<Tensor>],
+    ) -> Result<Value> {
+        fn operand_tensor(values: &[Option<Value>], i: usize) -> Result<&Rc<Tensor>> {
+            values[i].as_ref().expect("operands precede uses").tensor()
+        }
+        let get = |i: usize| operand_tensor(values, i);
+        let decl = match &instr.shape {
+            DeclShape::Array(s) => Some(s),
+            DeclShape::Tuple(_) => None,
+        };
+        let out = match &instr.op {
+            Op::Parameter(n) => {
+                let t = args
+                    .get(*n)
+                    .ok_or_else(|| anyhow!("parameter({n}) out of range"))?;
+                Value::Tensor(t.clone())
+            }
+            Op::Constant(t) => Value::Tensor(Rc::new(t.clone())),
+            Op::Broadcast { dims } => {
+                let src = get(instr.operands[0])?;
+                let shape = decl.expect("broadcast is an array op");
+                if dims.len() != src.dims.len() {
+                    bail!("broadcast dimensions={dims:?} rank != operand rank {}", src.dims.len());
+                }
+                let out_dims = shape.dims.clone();
+                let out_str = strides(&out_dims);
+                let src_str = strides(&src.dims);
+                let mut data = vec![0i32; shape.elements()];
+                for (flat, slot) in data.iter_mut().enumerate() {
+                    let mut src_flat = 0usize;
+                    for (k, &d) in dims.iter().enumerate() {
+                        let coord = (flat / out_str[d]) % out_dims[d];
+                        src_flat += coord * src_str[k];
+                    }
+                    *slot = src.data[src_flat];
+                }
+                Value::Tensor(Rc::new(Tensor { dtype: src.dtype, dims: out_dims, data }))
+            }
+            Op::Iota { dim } => {
+                let shape = decl.expect("iota is an array op");
+                let out_dims = shape.dims.clone();
+                let out_str = strides(&out_dims);
+                let mut data = vec![0i32; shape.elements()];
+                for (flat, slot) in data.iter_mut().enumerate() {
+                    *slot = ((flat / out_str[*dim]) % out_dims[*dim]) as i32;
+                }
+                Value::Tensor(Rc::new(Tensor { dtype: shape.dtype, dims: out_dims, data }))
+            }
+            Op::Reshape => {
+                let src = get(instr.operands[0])?;
+                let shape = decl.expect("reshape is an array op");
+                if shape.elements() != src.data.len() {
+                    bail!("reshape element count mismatch");
+                }
+                Value::Tensor(Rc::new(Tensor {
+                    dtype: src.dtype,
+                    dims: shape.dims.clone(),
+                    data: src.data.clone(),
+                }))
+            }
+            Op::Slice { limits } => {
+                let src = get(instr.operands[0])?;
+                if limits.len() != src.dims.len() {
+                    bail!("slice rank mismatch");
+                }
+                for (d, &(lo, hi)) in limits.iter().enumerate() {
+                    if lo > hi || hi > src.dims[d] {
+                        bail!("slice [{lo}:{hi}] out of bounds for dim {d} of {:?}", src.dims);
+                    }
+                }
+                let out_dims: Vec<usize> = limits.iter().map(|&(lo, hi)| hi - lo).collect();
+                let out_str = strides(&out_dims);
+                let src_str = strides(&src.dims);
+                let n: usize = out_dims.iter().product();
+                let mut data = vec![0i32; n];
+                for (flat, slot) in data.iter_mut().enumerate() {
+                    let mut src_flat = 0usize;
+                    for d in 0..out_dims.len() {
+                        let coord = (flat / out_str[d]) % out_dims[d] + limits[d].0;
+                        src_flat += coord * src_str[d];
+                    }
+                    *slot = src.data[src_flat];
+                }
+                Value::Tensor(Rc::new(Tensor { dtype: src.dtype, dims: out_dims, data }))
+            }
+            Op::Concatenate { dim } => {
+                let parts: Vec<&Rc<Tensor>> =
+                    instr.operands.iter().map(|&i| get(i)).collect::<Result<_>>()?;
+                let first = parts[0];
+                let d = *dim;
+                let mut out_dims = first.dims.clone();
+                out_dims[d] = parts.iter().map(|t| t.dims[d]).sum();
+                for t in &parts {
+                    for (k, (&a, &b)) in t.dims.iter().zip(&out_dims).enumerate() {
+                        if k != d && a != b {
+                            bail!("concatenate shape mismatch on dim {k}");
+                        }
+                    }
+                }
+                // outer = product of dims before d; inner = product after d
+                let outer: usize = out_dims[..d].iter().product();
+                let inner: usize = out_dims[d + 1..].iter().product();
+                let mut data = Vec::with_capacity(out_dims.iter().product());
+                for o in 0..outer {
+                    for t in &parts {
+                        let width = t.dims[d] * inner;
+                        let start = o * width;
+                        data.extend_from_slice(&t.data[start..start + width]);
+                    }
+                }
+                Value::Tensor(Rc::new(Tensor { dtype: first.dtype, dims: out_dims, data }))
+            }
+            Op::Binary(op) => {
+                let a = get(instr.operands[0])?;
+                let b = get(instr.operands[1])?;
+                if a.dims != b.dims {
+                    bail!("binary op shape mismatch: {:?} vs {:?}", a.dims, b.dims);
+                }
+                let mut data = Vec::with_capacity(a.data.len());
+                for (&x, &y) in a.data.iter().zip(&b.data) {
+                    data.push(apply_binop(*op, x, y)?);
+                }
+                Value::Tensor(Rc::new(Tensor { dtype: a.dtype, dims: a.dims.clone(), data }))
+            }
+            Op::Not => {
+                let a = get(instr.operands[0])?;
+                let data = a.data.iter().map(|&x| i32::from(x == 0)).collect();
+                Value::Tensor(Rc::new(Tensor { dtype: a.dtype, dims: a.dims.clone(), data }))
+            }
+            Op::Compare(dir) => {
+                let a = get(instr.operands[0])?;
+                let b = get(instr.operands[1])?;
+                if a.dims != b.dims {
+                    bail!("compare shape mismatch: {:?} vs {:?}", a.dims, b.dims);
+                }
+                let data = a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| {
+                        i32::from(match dir {
+                            CmpDir::Eq => x == y,
+                            CmpDir::Ne => x != y,
+                            CmpDir::Lt => x < y,
+                            CmpDir::Le => x <= y,
+                            CmpDir::Gt => x > y,
+                            CmpDir::Ge => x >= y,
+                        })
+                    })
+                    .collect();
+                Value::Tensor(Rc::new(Tensor { dtype: DType::Pred, dims: a.dims.clone(), data }))
+            }
+            Op::Select => {
+                let c = get(instr.operands[0])?;
+                let t = get(instr.operands[1])?;
+                let f = get(instr.operands[2])?;
+                if c.dims != t.dims || t.dims != f.dims {
+                    bail!("select shape mismatch");
+                }
+                let data = c
+                    .data
+                    .iter()
+                    .zip(t.data.iter().zip(&f.data))
+                    .map(|(&c, (&t, &f))| if c != 0 { t } else { f })
+                    .collect();
+                Value::Tensor(Rc::new(Tensor { dtype: t.dtype, dims: t.dims.clone(), data }))
+            }
+            Op::Convert => {
+                let a = get(instr.operands[0])?;
+                let shape = decl.expect("convert is an array op");
+                let data = match shape.dtype {
+                    DType::Pred => a.data.iter().map(|&x| i32::from(x != 0)).collect(),
+                    DType::S32 => a.data.clone(),
+                };
+                Value::Tensor(Rc::new(Tensor { dtype: shape.dtype, dims: a.dims.clone(), data }))
+            }
+            Op::Gather { index_vector_dim, slice_sizes } => {
+                // Canonical 1-D lookup: operand s32[N], indices s32[B,1]
+                // (index_vector_dim = 1, slice_sizes = {1}) → s32[B].
+                let operand = get(instr.operands[0])?;
+                let indices = get(instr.operands[1])?;
+                if operand.dims.len() != 1
+                    || indices.dims.len() != 2
+                    || indices.dims[1] != 1
+                    || *index_vector_dim != 1
+                    || slice_sizes != &[1]
+                {
+                    bail!(
+                        "unsupported gather form (want operand[N], indices[B,1], slice_sizes={{1}})"
+                    );
+                }
+                let n = operand.dims[0] as i64;
+                let data = indices
+                    .data
+                    .iter()
+                    .map(|&k| {
+                        // XLA clamps out-of-bounds gather start indices.
+                        let k = (k as i64).clamp(0, n - 1) as usize;
+                        operand.data[k]
+                    })
+                    .collect();
+                Value::Tensor(Rc::new(Tensor {
+                    dtype: operand.dtype,
+                    dims: vec![indices.dims[0]],
+                    data,
+                }))
+            }
+            Op::DynamicSlice { sizes } => {
+                // 1-D form: operand s32[N], one scalar start index.
+                let operand = get(instr.operands[0])?;
+                let start = get(instr.operands[1])?;
+                if operand.dims.len() != 1 || sizes.len() != 1 || !start.dims.is_empty() {
+                    bail!("unsupported dynamic-slice form (want 1-D operand, scalar start)");
+                }
+                let k = sizes[0];
+                let n = operand.dims[0];
+                if k > n {
+                    bail!("dynamic-slice size {k} exceeds operand length {n}");
+                }
+                // XLA clamps the start so the slice stays in bounds.
+                let s = (start.data[0] as i64).clamp(0, (n - k) as i64) as usize;
+                Value::Tensor(Rc::new(Tensor {
+                    dtype: operand.dtype,
+                    dims: vec![k],
+                    data: operand.data[s..s + k].to_vec(),
+                }))
+            }
+            Op::Reduce { dims, to_apply } => {
+                let operand = get(instr.operands[0])?;
+                let init = get(instr.operands[1])?;
+                if !init.dims.is_empty() {
+                    bail!("reduce init must be scalar");
+                }
+                let op = self.combiner(to_apply)?;
+                let keep: Vec<usize> =
+                    (0..operand.dims.len()).filter(|d| !dims.contains(d)).collect();
+                let out_dims: Vec<usize> = keep.iter().map(|&d| operand.dims[d]).collect();
+                let out_str = strides(&out_dims);
+                let src_str = strides(&operand.dims);
+                let red_dims: Vec<usize> = dims.iter().map(|&d| operand.dims[d]).collect();
+                let red_count: usize = red_dims.iter().product();
+                let n: usize = out_dims.iter().product();
+                let mut data = vec![0i32; n];
+                for (flat, slot) in data.iter_mut().enumerate() {
+                    let mut base = 0usize;
+                    for (k, &d) in keep.iter().enumerate() {
+                        let coord = (flat / out_str[k]) % out_dims[k];
+                        base += coord * src_str[d];
+                    }
+                    let mut acc = init.data[0];
+                    for r in 0..red_count {
+                        let mut rem = r;
+                        let mut off = 0usize;
+                        for (k, &d) in dims.iter().enumerate().rev() {
+                            let extent = red_dims[k];
+                            off += (rem % extent) * src_str[d];
+                            rem /= extent;
+                        }
+                        acc = apply_binop(op, acc, operand.data[base + off])?;
+                    }
+                    *slot = acc;
+                }
+                Value::Tensor(Rc::new(Tensor { dtype: operand.dtype, dims: out_dims, data }))
+            }
+            Op::Tuple => {
+                let parts: Vec<Rc<Tensor>> = instr
+                    .operands
+                    .iter()
+                    .map(|&i| get(i).map(Rc::clone))
+                    .collect::<Result<_>>()?;
+                Value::Tuple(parts)
+            }
+        };
+        Ok(out)
+    }
+}
+
+fn apply_binop(op: BinOp, x: i32, y: i32) -> Result<i32> {
+    Ok(match op {
+        BinOp::Add => x.wrapping_add(y),
+        BinOp::Subtract => x.wrapping_sub(y),
+        BinOp::Multiply => x.wrapping_mul(y),
+        BinOp::Divide => {
+            if y == 0 {
+                bail!("integer division by zero");
+            }
+            x.wrapping_div(y)
+        }
+        BinOp::Remainder => {
+            if y == 0 {
+                bail!("integer remainder by zero");
+            }
+            x.wrapping_rem(y)
+        }
+        BinOp::Minimum => x.min(y),
+        BinOp::Maximum => x.max(y),
+        BinOp::And => x & y,
+        BinOp::Or => x | y,
+        BinOp::Xor => x ^ y,
+    })
+}
+
+fn build_instr(raw: &RawInstr<'_>, names: &HashMap<String, usize>) -> Result<Instr> {
+    let shape = parse_decl_shape(raw.shape)?;
+    let refs = || -> Result<Vec<usize>> {
+        split_top(raw.operands)
+            .into_iter()
+            .map(|t| operand_index(t, names))
+            .collect()
+    };
+    let dir_attr = |key: &str| -> Result<&str> {
+        raw.attrs
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("{} needs attribute {key}", raw.opcode))
+    };
+    let (op, operands) = match raw.opcode {
+        "parameter" => {
+            let n = raw
+                .operands
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad parameter number {:?}", raw.operands))?;
+            (Op::Parameter(n), Vec::new())
+        }
+        "constant" => {
+            let DeclShape::Array(s) = &shape else {
+                bail!("tuple constants unsupported");
+            };
+            (Op::Constant(parse_literal(raw.operands, s)?), Vec::new())
+        }
+        "broadcast" => (
+            Op::Broadcast { dims: parse_usize_list(dir_attr("dimensions")?)? },
+            refs()?,
+        ),
+        "iota" => {
+            let dim = dir_attr("iota_dimension")?
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad iota_dimension"))?;
+            (Op::Iota { dim }, Vec::new())
+        }
+        "reshape" => (Op::Reshape, refs()?),
+        "slice" => (Op::Slice { limits: parse_slice_spec(dir_attr("slice")?)? }, refs()?),
+        "concatenate" => {
+            let dims = parse_usize_list(dir_attr("dimensions")?)?;
+            if dims.len() != 1 {
+                bail!("concatenate needs exactly one dimension");
+            }
+            (Op::Concatenate { dim: dims[0] }, refs()?)
+        }
+        "add" => (Op::Binary(BinOp::Add), refs()?),
+        "subtract" => (Op::Binary(BinOp::Subtract), refs()?),
+        "multiply" => (Op::Binary(BinOp::Multiply), refs()?),
+        "divide" => (Op::Binary(BinOp::Divide), refs()?),
+        "remainder" => (Op::Binary(BinOp::Remainder), refs()?),
+        "minimum" => (Op::Binary(BinOp::Minimum), refs()?),
+        "maximum" => (Op::Binary(BinOp::Maximum), refs()?),
+        "and" => (Op::Binary(BinOp::And), refs()?),
+        "or" => (Op::Binary(BinOp::Or), refs()?),
+        "xor" => (Op::Binary(BinOp::Xor), refs()?),
+        "not" => (Op::Not, refs()?),
+        "compare" => {
+            let dir = match dir_attr("direction")? {
+                "EQ" => CmpDir::Eq,
+                "NE" => CmpDir::Ne,
+                "LT" => CmpDir::Lt,
+                "LE" => CmpDir::Le,
+                "GT" => CmpDir::Gt,
+                "GE" => CmpDir::Ge,
+                other => bail!("unknown compare direction {other:?}"),
+            };
+            (Op::Compare(dir), refs()?)
+        }
+        "select" => (Op::Select, refs()?),
+        "convert" => (Op::Convert, refs()?),
+        "gather" => {
+            let ivd = dir_attr("index_vector_dim")?
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad index_vector_dim"))?;
+            let sizes = parse_usize_list(dir_attr("slice_sizes")?)?;
+            (Op::Gather { index_vector_dim: ivd, slice_sizes: sizes }, refs()?)
+        }
+        "dynamic-slice" => {
+            let sizes = parse_usize_list(dir_attr("dynamic_slice_sizes")?)?;
+            (Op::DynamicSlice { sizes }, refs()?)
+        }
+        "reduce" => {
+            let dims = parse_usize_list(dir_attr("dimensions")?)?;
+            let to_apply = dir_attr("to_apply")?;
+            if !to_apply.starts_with('%') {
+                bail!("to_apply must name a computation");
+            }
+            (Op::Reduce { dims, to_apply: to_apply.to_string() }, refs()?)
+        }
+        "tuple" => (Op::Tuple, refs()?),
+        other => bail!("unsupported opcode {other:?}"),
+    };
+    Ok(Instr { op, operands, shape })
+}
+
+// ---------------------------------------------------------------------------
+// The interpreter-backed engine
+// ---------------------------------------------------------------------------
+
+/// The interpreter-backed runtime engine: parsed stemmer modules per batch
+/// size plus the dictionary bitmaps as pre-built input tensors. This is
+/// the default-build implementation of [`crate::runtime::Backend`].
+pub struct InterpBackend {
+    exes: BTreeMap<usize, Module>,
+    dict_tensors: [Rc<Tensor>; 3],
+    dicts_i32: [Vec<i32>; 3],
+}
+
+impl InterpBackend {
+    /// Load every `stemmer_b*.hlo.txt` under `artifacts_dir` (whatever
+    /// batch sizes are actually present, not just the standard three).
+    pub fn load(artifacts_dir: &Path, roots: &RootSet) -> Result<Self> {
+        let mut texts = Vec::new();
+        for (_, path) in super::list_artifacts(artifacts_dir) {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            texts.push((text, path.display().to_string()));
+        }
+        if texts.is_empty() {
+            return Err(super::no_artifacts_error(artifacts_dir));
+        }
+        Self::from_texts(texts.iter().map(|(t, n)| (t.as_str(), n.as_str())), roots)
+            .context(
+                "the offline interpreter evaluates the op subset `ama emit-hlo` \
+                 produces; artifacts from another lowering (e.g. the JAX path) \
+                 may exceed it — regenerate with `ama emit-hlo`, or build with \
+                 `--features pjrt` to compile them through real XLA",
+            )
+    }
+
+    /// Build from in-memory HLO texts (each with a label for errors). The
+    /// batch size is read off each module's first parameter shape.
+    pub fn from_texts<'a, I>(texts: I, roots: &RootSet) -> Result<Self>
+    where
+        I: IntoIterator<Item = (&'a str, &'a str)>,
+    {
+        let mut exes = BTreeMap::new();
+        for (text, label) in texts {
+            let module = Module::parse(text).with_context(|| format!("parsing {label}"))?;
+            let batch = validate_stemmer_module(&module).with_context(|| format!("validating {label}"))?;
+            exes.insert(batch, module);
+        }
+        if exes.is_empty() {
+            bail!("no stemmer modules given");
+        }
+        let dicts_i32 = [roots.bi_bitmap(), roots.tri_bitmap(), roots.quad_bitmap()];
+        let dict_tensors = [
+            Rc::new(Tensor::s32(vec![dicts_i32[0].len()], dicts_i32[0].clone())),
+            Rc::new(Tensor::s32(vec![dicts_i32[1].len()], dicts_i32[1].clone())),
+            Rc::new(Tensor::s32(vec![dicts_i32[2].len()], dicts_i32[2].clone())),
+        ];
+        Ok(InterpBackend { exes, dict_tensors, dicts_i32 })
+    }
+}
+
+/// Check a module has the stemmer signature; return its batch size.
+fn validate_stemmer_module(module: &Module) -> Result<usize> {
+    let params = module.entry_param_shapes();
+    if params.len() != 5 {
+        bail!("stemmer module must take 5 parameters, found {}", params.len());
+    }
+    let b = *params[0]
+        .dims
+        .first()
+        .ok_or_else(|| anyhow!("words parameter must be 2-D"))?;
+    let want: [(&str, Vec<usize>); 5] = [
+        ("words", vec![b, MAX_WORD]),
+        ("lengths", vec![b]),
+        ("bitmap2", vec![ALPHABET_SIZE.pow(2)]),
+        ("bitmap3", vec![ALPHABET_SIZE.pow(3)]),
+        ("bitmap4", vec![ALPHABET_SIZE.pow(4)]),
+    ];
+    for ((name, dims), shape) in want.iter().zip(&params) {
+        if shape.dims != *dims || shape.dtype != DType::S32 {
+            bail!("{name} parameter has shape {:?}, expected s32{dims:?}", shape.dims);
+        }
+    }
+    Ok(b)
+}
+
+impl super::Backend for InterpBackend {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    fn dicts(&self) -> &[Vec<i32>; 3] {
+        &self.dicts_i32
+    }
+
+    fn run_loaded(&self, batch: usize, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        let module = self
+            .exes
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no loaded module for batch size {batch}"))?;
+        let (flat, lens) = super::encode_batch(words, batch);
+        let args = [
+            Rc::new(Tensor::s32(vec![batch, MAX_WORD], flat)),
+            Rc::new(Tensor::s32(vec![batch], lens)),
+            self.dict_tensors[0].clone(),
+            self.dict_tensors[1].clone(),
+            self.dict_tensors[2].clone(),
+        ];
+        let out = module.evaluate(&args)?;
+        let Value::Tuple(parts) = out else {
+            bail!("stemmer module must return a tuple");
+        };
+        if parts.len() != 3 {
+            bail!("stemmer module must return (root, kind, cut), got {} parts", parts.len());
+        }
+        let (roots, kinds, cuts) = (&parts[0], &parts[1], &parts[2]);
+        let mut out = Vec::with_capacity(words.len());
+        for i in 0..words.len() {
+            let mut root = [0u16; 4];
+            for (j, slot) in root.iter_mut().enumerate() {
+                *slot = roots.data[i * 4 + j] as u16;
+            }
+            out.push(StemResult {
+                root,
+                kind: MatchKind::from_u8(kinds.data[i] as u8),
+                cut: cuts.data[i] as u8,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(dims: &[usize], data: &[i32]) -> Rc<Tensor> {
+        Rc::new(Tensor::s32(dims.to_vec(), data.to_vec()))
+    }
+
+    fn run1(module: &Module, args: &[Rc<Tensor>]) -> Vec<i32> {
+        match module.evaluate(args).unwrap() {
+            Value::Tensor(t) => t.data.clone(),
+            Value::Tuple(_) => panic!("expected tensor"),
+        }
+    }
+
+    #[test]
+    fn parse_and_eval_arithmetic() {
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[4]) -> s32[4] {
+  %p0 = s32[4] parameter(0)
+  %c = s32[] constant(10)
+  %cb = s32[4] broadcast(%c), dimensions={}
+  ROOT %sum = s32[4] add(%p0, %cb)
+}
+";
+        let m = Module::parse(text).unwrap();
+        assert_eq!(run1(&m, &[t(&[4], &[1, 2, 3, 4])]), vec![11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn slice_reshape_concat_iota() {
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[2,3]) -> s32[2,2] {
+  %p0 = s32[2,3] parameter(0)
+  %a = s32[2,1] slice(%p0), slice={[0:2], [1:2]}
+  %i = s32[2,1] iota(), iota_dimension=0
+  ROOT %c = s32[2,2] concatenate(%a, %i), dimensions={1}
+}
+";
+        let m = Module::parse(text).unwrap();
+        // rows: [1,2,3],[4,5,6]; column 1 = [2,5]; iota dim0 = [0,1]
+        assert_eq!(run1(&m, &[t(&[2, 3], &[1, 2, 3, 4, 5, 6])]), vec![2, 0, 5, 1]);
+    }
+
+    #[test]
+    fn compare_select_and_convert() {
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[3], p1: s32[3]) -> s32[3] {
+  %p0 = s32[3] parameter(0)
+  %p1 = s32[3] parameter(1)
+  %lt = pred[3] compare(%p0, %p1), direction=LT
+  ROOT %sel = s32[3] select(%lt, %p0, %p1)
+}
+";
+        let m = Module::parse(text).unwrap();
+        assert_eq!(run1(&m, &[t(&[3], &[5, 1, 9]), t(&[3], &[3, 7, 9])]), vec![3, 1, 9]);
+    }
+
+    #[test]
+    fn gather_clamps_and_looks_up() {
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[5], p1: s32[4,1]) -> s32[4] {
+  %p0 = s32[5] parameter(0)
+  %p1 = s32[4,1] parameter(1)
+  ROOT %g = s32[4] gather(%p0, %p1), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1}
+}
+";
+        let m = Module::parse(text).unwrap();
+        let table = t(&[5], &[10, 11, 12, 13, 14]);
+        // -3 clamps to 0; 99 clamps to 4
+        let got = run1(&m, &[table, t(&[4, 1], &[2, -3, 99, 0])]);
+        assert_eq!(got, vec![12, 10, 14, 10]);
+    }
+
+    #[test]
+    fn dynamic_slice_clamps() {
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[5], p1: s32[]) -> s32[2] {
+  %p0 = s32[5] parameter(0)
+  %p1 = s32[] parameter(1)
+  ROOT %d = s32[2] dynamic-slice(%p0, %p1), dynamic_slice_sizes={2}
+}
+";
+        let m = Module::parse(text).unwrap();
+        let v = t(&[5], &[10, 11, 12, 13, 14]);
+        assert_eq!(run1(&m, &[v.clone(), t(&[], &[1])]), vec![11, 12]);
+        // start 9 clamps to 3 so the slice stays in bounds
+        assert_eq!(run1(&m, &[v, t(&[], &[9])]), vec![13, 14]);
+    }
+
+    #[test]
+    fn reduce_with_named_combiner() {
+        let text = "\
+HloModule mini
+
+%min_s32 (a: s32[], b: s32[]) -> s32[] {
+  %a = s32[] parameter(0)
+  %b = s32[] parameter(1)
+  ROOT %m = s32[] minimum(%a, %b)
+}
+
+ENTRY %main (p0: s32[2,3]) -> s32[2] {
+  %p0 = s32[2,3] parameter(0)
+  %init = s32[] constant(99)
+  ROOT %r = s32[2] reduce(%p0, %init), dimensions={1}, to_apply=%min_s32
+}
+";
+        let m = Module::parse(text).unwrap();
+        assert_eq!(run1(&m, &[t(&[2, 3], &[5, 2, 7, 1, 8, 3])]), vec![2, 1]);
+    }
+
+    #[test]
+    fn tuple_results_and_param_shapes() {
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[2], p1: s32[3]) -> (s32[2], s32[3]) {
+  %p0 = s32[2] parameter(0)
+  %p1 = s32[3] parameter(1)
+  ROOT %t = (s32[2], s32[3]) tuple(%p0, %p1)
+}
+";
+        let m = Module::parse(text).unwrap();
+        let shapes = m.entry_param_shapes();
+        assert_eq!(shapes.len(), 2);
+        assert_eq!(shapes[0].dims, vec![2]);
+        assert_eq!(shapes[1].dims, vec![3]);
+        match m.evaluate(&[t(&[2], &[1, 2]), t(&[3], &[3, 4, 5])]).unwrap() {
+            Value::Tuple(parts) => {
+                assert_eq!(parts[0].data, vec![1, 2]);
+                assert_eq!(parts[1].data, vec![3, 4, 5]);
+            }
+            Value::Tensor(_) => panic!("expected tuple"),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage_and_shape_lies() {
+        assert!(Module::parse("this is not HLO").is_err());
+        assert!(Module::parse("HloModule empty\n").is_err(), "no ENTRY must fail");
+        // declared shape disagrees with computed shape → eval fails
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[4]) -> s32[3] {
+  %p0 = s32[4] parameter(0)
+  ROOT %r = s32[3] reshape(%p0)
+}
+";
+        let m = Module::parse(text).unwrap();
+        assert!(m.evaluate(&[t(&[4], &[1, 2, 3, 4])]).is_err());
+        // unknown opcodes are parse errors
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[1]) -> s32[1] {
+  %p0 = s32[1] parameter(0)
+  ROOT %r = s32[1] cosine(%p0)
+}
+";
+        assert!(Module::parse(text).is_err());
+    }
+
+    #[test]
+    fn typed_operands_and_layouts_accepted() {
+        // Real XLA text carries typed operands and layout annotations;
+        // the parser must see through both.
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[2]) -> s32[2] {
+  %p0 = s32[2]{0} parameter(0)
+  %c = s32[] constant(3)
+  %cb = s32[2]{0} broadcast(s32[] %c), dimensions={}
+  ROOT %m = s32[2]{0} multiply(s32[2] %p0, s32[2] %cb)
+}
+";
+        let m = Module::parse(text).unwrap();
+        assert_eq!(run1(&m, &[t(&[2], &[4, 5])]), vec![12, 15]);
+    }
+}

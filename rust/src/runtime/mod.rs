@@ -1,247 +1,302 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
-//! CPU PJRT client — the L3↔L2 bridge. Python never runs here.
+//! Runtime: loads the AOT HLO-text stemmer artifacts and executes them —
+//! the L3↔L2 bridge. Python never runs here.
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
-//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Since PR 5 the runtime is a pluggable [`Backend`] behind one
+//! [`Engine`] facade, and the **default build executes artifacts
+//! offline** through [`interp`] — a dependency-free HLO-text parser +
+//! evaluator (the op set of the stemmer graph is small and fixed, so a
+//! direct interpreter covers it). With `--features pjrt` the same
+//! artifacts compile through the real PJRT CPU client instead
+//! ([`pjrt`], unchanged from the original bridge); on `ama emit-hlo`
+//! artifacts the files, the `Engine` API, and the results are identical
+//! either way. (Artifacts from the full JAX lowering may use ops beyond
+//! the interpreter's subset — those need the `pjrt` feature; the
+//! interpreter says so in its load error.)
 //!
-//! `PjRtClient` is `Rc`-based (not `Send`), so an [`Engine`] must stay on
-//! one thread; the coordinator owns it on a dedicated executor thread and
-//! feeds it through a queue. Dictionaries are uploaded to device once and
-//! reused as `PjRtBuffer`s for every call (`execute_b`).
+//! Artifacts come from `make artifacts`: the JAX lowering
+//! (`python/compile/aot.py`) when `jax` is importable, else the rust
+//! emitter ([`emit`], `ama emit-hlo`) — so the emit → load → execute
+//! cycle is self-hosting with no python at all.
 //!
-//! The `xla` bindings crate is not available in the offline build image, so
-//! the real engine is compiled only with `--features pjrt`; the default
-//! build ships the API-compatible [`Engine`] stub below, which reports a
-//! clean error at load time (see ROADMAP.md "Open items" — PJRT artifact
-//! loading).
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file` on the
+//! PJRT side): jax ≥ 0.5 serialized protos carry 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! PJRT's client is `Rc`-based (not `Send`), so an [`Engine`] must stay
+//! on one thread regardless of backend; the coordinator builds it *on* a
+//! dedicated executor thread via the backend factory (`ama serve
+//! --backend runtime`) and feeds it through the request queue.
+//! Dictionaries are uploaded/pinned once at load and reused for every
+//! call.
 
-use std::path::PathBuf;
+pub mod emit;
+pub mod interp;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
-/// Batch sizes the AOT pipeline bakes (aot.py BATCH_SIZES).
+use crate::chars::{ArabicWord, MAX_WORD};
+use crate::roots::RootSet;
+use crate::stemmer::StemResult;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Batch sizes the AOT pipeline bakes (aot.py BATCH_SIZES / `ama emit-hlo`).
 pub const BATCHES: &[usize] = &[1, 32, 256];
 
-/// Locate the artifacts directory: `$AMA_ARTIFACTS` or `./artifacts`.
+/// Path of the stemmer artifact for batch size `b` under `dir`.
+pub fn artifact_path(dir: &Path, b: usize) -> PathBuf {
+    dir.join(format!("stemmer_b{b}.hlo.txt"))
+}
+
+/// Discover every `stemmer_b{N}.hlo.txt` under `dir`, sorted by batch
+/// size. Backends load whatever is actually present (so `ama emit-hlo
+/// --batches 64` artifacts are served too), not just [`BATCHES`].
+pub(crate) fn list_artifacts(dir: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(b) = name
+                .strip_prefix("stemmer_b")
+                .and_then(|rest| rest.strip_suffix(".hlo.txt"))
+            else {
+                continue;
+            };
+            if let Ok(b) = b.parse::<usize>() {
+                out.push((b, entry.path()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// The error every backend reports when `artifacts_dir` holds no
+/// stemmer artifacts at all.
+fn no_artifacts_error(dir: &Path) -> anyhow::Error {
+    anyhow::anyhow!(
+        "no stemmer artifacts under {} — run `make artifacts` (or `ama emit-hlo --out {}`) first",
+        dir.display(),
+        dir.display()
+    )
+}
+
+/// Locate the artifacts directory.
+///
+/// `$AMA_ARTIFACTS` always wins. Otherwise the directory is resolved
+/// *without* depending on the process CWD alone: `./artifacts` is used
+/// only if it actually exists, then `artifacts/` next to the executable
+/// or one of its ancestors (`target/release/ama` → the repo root), then
+/// the crate manifest directory (dev builds / `cargo test`). A bare
+/// relative `artifacts` is the last resort, so `ama serve` launched from
+/// any directory finds the repo's artifacts.
 pub fn default_artifacts_dir() -> PathBuf {
-    std::env::var_os("AMA_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
+    resolve_artifacts_dir(
+        std::env::var_os("AMA_ARTIFACTS"),
+        std::env::current_dir().ok().as_deref(),
+        std::env::current_exe().ok().as_deref(),
+    )
 }
 
-#[cfg(feature = "pjrt")]
-mod engine {
-    use super::BATCHES;
-    use crate::chars::{ArabicWord, MAX_WORD};
-    use crate::roots::RootSet;
-    use crate::stemmer::{MatchKind, StemResult};
-    use anyhow::{anyhow, bail, Context, Result};
-    use std::collections::BTreeMap;
-    use std::path::Path;
-
-    /// One compiled stemmer executable (a fixed batch size).
-    struct StemmerExe {
-        batch: usize,
-        exe: xla::PjRtLoadedExecutable,
-    }
-
-    /// The PJRT engine: client + compiled executables + device-resident
-    /// dictionaries.
-    pub struct Engine {
-        client: xla::PjRtClient,
-        exes: BTreeMap<usize, StemmerExe>,
-        dict_bufs: Vec<xla::PjRtBuffer>, // roots2, roots3, roots4
-        dicts_i32: [Vec<i32>; 3],
-    }
-
-    impl Engine {
-        /// Load every `stemmer_b*.hlo.txt` under `artifacts_dir`, compile,
-        /// and upload the dictionaries.
-        pub fn load(artifacts_dir: &Path, roots: &RootSet) -> Result<Self> {
-            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-            let mut exes = BTreeMap::new();
-            for &b in BATCHES {
-                let path = artifacts_dir.join(format!("stemmer_b{b}.hlo.txt"));
-                if !path.exists() {
-                    continue;
-                }
-                let exe = compile_hlo(&client, &path)
-                    .with_context(|| format!("compiling {}", path.display()))?;
-                exes.insert(b, StemmerExe { batch: b, exe });
-            }
-            if exes.is_empty() {
-                bail!(
-                    "no stemmer artifacts under {} — run `make artifacts` first",
-                    artifacts_dir.display()
-                );
-            }
-            // Dictionaries travel as direct-mapped bitmaps (roots::bitmap_i32
-            // — the block-RAM-lookup formulation; see kernels/lookup.py),
-            // uploaded to the device once and reused by every execute_b call.
-            let dicts_i32 = [roots.bi_bitmap(), roots.tri_bitmap(), roots.quad_bitmap()];
-            let dict_bufs = vec![
-                client
-                    .buffer_from_host_buffer(&dicts_i32[0], &[dicts_i32[0].len()], None)
-                    .map_err(|e| anyhow!("upload bitmap2: {e}"))?,
-                client
-                    .buffer_from_host_buffer(&dicts_i32[1], &[dicts_i32[1].len()], None)
-                    .map_err(|e| anyhow!("upload bitmap3: {e}"))?,
-                client
-                    .buffer_from_host_buffer(&dicts_i32[2], &[dicts_i32[2].len()], None)
-                    .map_err(|e| anyhow!("upload bitmap4: {e}"))?,
-            ];
-            Ok(Engine { client, exes, dict_bufs, dicts_i32 })
-        }
-
-        /// Batch sizes actually loaded.
-        pub fn batch_sizes(&self) -> Vec<usize> {
-            self.exes.keys().copied().collect()
-        }
-
-        /// Smallest loaded batch size that fits `n` words, or the largest
-        /// available (the caller chunks).
-        pub fn pick_batch(&self, n: usize) -> usize {
-            for (&b, _) in self.exes.iter() {
-                if n <= b {
-                    return b;
-                }
-            }
-            *self.exes.keys().next_back().expect("non-empty")
-        }
-
-        /// Encode words into flat `(B·15)` codes + `(B,)` lengths buffers.
-        fn encode(&self, words: &[ArabicWord], batch: usize) -> (Vec<i32>, Vec<i32>) {
-            debug_assert!(words.len() <= batch);
-            let mut flat = vec![0i32; batch * MAX_WORD];
-            let mut lens = vec![0i32; batch];
-            for (i, w) in words.iter().enumerate() {
-                for (j, &c) in w.chars.iter().enumerate() {
-                    flat[i * MAX_WORD + j] = c as i32;
-                }
-                lens[i] = w.len as i32;
-            }
-            (flat, lens)
-        }
-
-        /// Run one batch (up to the executable's batch size) and decode.
-        pub fn stem_chunk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-            let b = self.pick_batch(words.len());
-            let exe = &self.exes[&b];
-            let mut out = Vec::with_capacity(words.len());
-            for chunk in words.chunks(exe.batch) {
-                out.extend(self.run_one(exe, chunk)?);
-            }
-            Ok(out)
-        }
-
-        fn run_one(&self, exe: &StemmerExe, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-            let (flat, lens) = self.encode(words, exe.batch);
-            // Upload the per-call inputs; dictionaries are already on device.
-            let wbuf = self
-                .client
-                .buffer_from_host_buffer(&flat, &[exe.batch, MAX_WORD], None)
-                .map_err(|e| anyhow!("upload words: {e}"))?;
-            let lbuf = self
-                .client
-                .buffer_from_host_buffer(&lens, &[exe.batch], None)
-                .map_err(|e| anyhow!("upload lengths: {e}"))?;
-            let args =
-                [&wbuf, &lbuf, &self.dict_bufs[0], &self.dict_bufs[1], &self.dict_bufs[2]];
-            let result = exe
-                .exe
-                .execute_b::<&xla::PjRtBuffer>(&args)
-                .map_err(|e| anyhow!("execute: {e}"))?;
-            let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
-            let (root_l, kind_l, cut_l) = lit.to_tuple3().map_err(|e| anyhow!("tuple3: {e}"))?;
-            let roots = root_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
-            let kinds = kind_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
-            let cuts = cut_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
-            let mut out = Vec::with_capacity(words.len());
-            for i in 0..words.len() {
-                let mut root = [0u16; 4];
-                for j in 0..4 {
-                    root[j] = roots[i * 4 + j] as u16;
-                }
-                out.push(StemResult {
-                    root,
-                    kind: MatchKind::from_u8(kinds[i] as u8),
-                    cut: cuts[i] as u8,
-                });
-            }
-            Ok(out)
-        }
-
-        /// The raw padded dictionaries (for tests / reports).
-        pub fn dicts(&self) -> &[Vec<i32>; 3] {
-            &self.dicts_i32
+/// CWD-independent resolution core of [`default_artifacts_dir`]
+/// (separated from the process environment for testability).
+pub fn resolve_artifacts_dir(
+    env: Option<std::ffi::OsString>,
+    cwd: Option<&Path>,
+    exe: Option<&Path>,
+) -> PathBuf {
+    if let Some(dir) = env {
+        if !dir.is_empty() {
+            return PathBuf::from(dir);
         }
     }
+    if let Some(cwd) = cwd {
+        let p = cwd.join("artifacts");
+        if p.is_dir() {
+            return p;
+        }
+    }
+    if let Some(exe) = exe {
+        // target/release/ama → target/release → target → the repo root,
+        // and no further: walking past the root could silently pick up
+        // an unrelated artifacts/ directory elsewhere on the machine.
+        for dir in exe.ancestors().skip(1).take(3) {
+            let p = dir.join("artifacts");
+            if p.is_dir() {
+                return p;
+            }
+        }
+    }
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.is_dir() {
+        return manifest;
+    }
+    PathBuf::from("artifacts")
+}
 
-    fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))
+/// A loaded runtime execution backend: compiled/parsed stemmer
+/// executables per batch size plus the resident dictionary bitmaps.
+///
+/// Batch selection and chunking are *provided* methods, so every
+/// backend (interpreter, PJRT) shares one implementation and cannot
+/// drift — the pre-PR-5 stub's `pick_batch` disagreed with the real
+/// engine's exactly because each carried its own copy.
+pub trait Backend {
+    /// Short backend label (`"interp"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Batch sizes actually loaded, ascending.
+    fn batch_sizes(&self) -> Vec<usize>;
+
+    /// The raw direct-mapped dictionary bitmaps (for tests / reports).
+    fn dicts(&self) -> &[Vec<i32>; 3];
+
+    /// Execute one loaded batch size on `words.len() <= batch` words.
+    fn run_loaded(&self, batch: usize, words: &[ArabicWord]) -> Result<Vec<StemResult>>;
+
+    /// Smallest loaded batch size that fits `n` words, or the largest
+    /// available (the caller chunks).
+    fn pick_batch(&self, n: usize) -> usize {
+        let sizes = self.batch_sizes();
+        for &b in &sizes {
+            if n <= b {
+                return b;
+            }
+        }
+        *sizes.last().expect("backend loaded no batch sizes")
+    }
+
+    /// Run any number of words: pick a batch size, chunk, execute, and
+    /// concatenate (order preserved; short final chunks are padded by
+    /// the executable's fixed shape and trimmed on decode).
+    fn stem_chunk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        if words.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = self.pick_batch(words.len());
+        let mut out = Vec::with_capacity(words.len());
+        for chunk in words.chunks(b) {
+            out.extend(self.run_loaded(b, chunk)?);
+        }
+        Ok(out)
     }
 }
 
-#[cfg(feature = "pjrt")]
-pub use engine::Engine;
+/// Encode words into flat `(B·15)` codes + `(B,)` lengths buffers — the
+/// shared input layout of every backend.
+pub(crate) fn encode_batch(words: &[ArabicWord], batch: usize) -> (Vec<i32>, Vec<i32>) {
+    debug_assert!(words.len() <= batch);
+    let mut flat = vec![0i32; batch * MAX_WORD];
+    let mut lens = vec![0i32; batch];
+    for (i, w) in words.iter().enumerate() {
+        for (j, &c) in w.chars.iter().enumerate() {
+            flat[i * MAX_WORD + j] = c as i32;
+        }
+        lens[i] = w.len as i32;
+    }
+    (flat, lens)
+}
 
-#[cfg(not(feature = "pjrt"))]
-mod stub {
-    use super::BATCHES;
-    use crate::chars::ArabicWord;
-    use crate::roots::RootSet;
-    use crate::stemmer::StemResult;
-    use anyhow::{bail, Result};
-    use std::path::Path;
+/// The runtime engine facade: one loaded [`Backend`] behind a stable
+/// API. Intentionally **not** `Send` (the PJRT client is `Rc`-based;
+/// the interpreter keeps the same contract) — the coordinator owns an
+/// `Engine` on a dedicated executor thread.
+pub struct Engine {
+    backend: Box<dyn Backend>,
+}
 
-    /// API-compatible stand-in for the PJRT engine when the `pjrt` feature
-    /// (and the `xla` bindings it needs) is unavailable. `load` always
-    /// fails with an actionable message, so no instance ever exists; the
-    /// methods keep the same signatures for callers compiled either way.
-    pub struct Engine {
-        dicts_i32: [Vec<i32>; 3],
+impl Engine {
+    /// Load every `stemmer_b*.hlo.txt` under `artifacts_dir`. Default
+    /// build: the offline HLO interpreter. With `--features pjrt`: the
+    /// real PJRT CPU client.
+    pub fn load(artifacts_dir: &Path, roots: &RootSet) -> Result<Self> {
+        #[cfg(feature = "pjrt")]
+        let backend = pjrt::PjrtBackend::load(artifacts_dir, roots)?;
+        #[cfg(not(feature = "pjrt"))]
+        let backend = interp::InterpBackend::load(artifacts_dir, roots)?;
+        Ok(Engine { backend: Box::new(backend) })
     }
 
-    impl Engine {
-        pub fn load(artifacts_dir: &Path, _roots: &RootSet) -> Result<Self> {
-            let have_artifacts = BATCHES
-                .iter()
-                .any(|b| artifacts_dir.join(format!("stemmer_b{b}.hlo.txt")).exists());
-            if !have_artifacts {
-                bail!(
-                    "no stemmer artifacts under {} — run `make artifacts` first",
-                    artifacts_dir.display()
-                );
-            }
-            bail!(
-                "artifacts found under {}, but this binary was built without the \
-                 `pjrt` feature. Enabling it needs the `xla` bindings crate, which \
-                 is not in the offline image: add `xla` to [dependencies] in \
-                 Cargo.toml, then `cargo build --features pjrt` (see ROADMAP.md \
-                 \"PJRT artifact loading\")",
-                artifacts_dir.display()
-            );
-        }
+    /// Which backend this engine runs (`"interp"` or `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
 
-        pub fn batch_sizes(&self) -> Vec<usize> {
-            Vec::new()
-        }
+    /// Batch sizes actually loaded.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.backend.batch_sizes()
+    }
 
-        pub fn pick_batch(&self, _n: usize) -> usize {
-            *BATCHES.last().expect("BATCHES non-empty")
-        }
+    /// Smallest loaded batch size that fits `n` words (largest when
+    /// nothing fits; the chunker handles the rest).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        self.backend.pick_batch(n)
+    }
 
-        pub fn stem_chunk(&self, _words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-            bail!("PJRT engine unavailable: built without the `pjrt` feature")
-        }
+    /// Run one batch (any size — chunked internally) and decode.
+    pub fn stem_chunk(&self, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        self.backend.stem_chunk(words)
+    }
 
-        pub fn dicts(&self) -> &[Vec<i32>; 3] {
-            &self.dicts_i32
-        }
+    /// The raw padded dictionaries (for tests / reports).
+    pub fn dicts(&self) -> &[Vec<i32>; 3] {
+        self.backend.dicts()
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
-pub use stub::Engine;
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::ffi::OsString;
+
+    #[test]
+    fn env_var_always_wins() {
+        let dir = resolve_artifacts_dir(
+            Some(OsString::from("/custom/artifacts")),
+            Some(Path::new("/somewhere/else")),
+            Some(Path::new("/usr/bin/ama")),
+        );
+        assert_eq!(dir, PathBuf::from("/custom/artifacts"));
+        // …but an empty env var does not.
+        let dir = resolve_artifacts_dir(Some(OsString::new()), None, None);
+        assert!(dir.ends_with("artifacts"));
+    }
+
+    /// Regression (PR 5 satellite): `ama serve` launched from an
+    /// unrelated CWD must still find the artifacts next to the binary —
+    /// resolution walks the executable's ancestors instead of trusting
+    /// the CWD blindly.
+    #[test]
+    fn resolves_relative_to_executable_when_cwd_is_elsewhere() {
+        let root = std::env::temp_dir().join("ama_artifacts_resolution_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let repo = root.join("repo");
+        std::fs::create_dir_all(repo.join("artifacts")).unwrap();
+        std::fs::create_dir_all(repo.join("target/release")).unwrap();
+        let unrelated = root.join("unrelated-cwd");
+        std::fs::create_dir_all(&unrelated).unwrap();
+
+        let exe = repo.join("target/release/ama");
+        let dir = resolve_artifacts_dir(None, Some(&unrelated), Some(&exe));
+        assert_eq!(dir, repo.join("artifacts"), "must find artifacts via the exe path");
+
+        // When the CWD itself has an artifacts dir, it still wins (the
+        // pre-PR-5 behavior for in-repo invocations is preserved).
+        std::fs::create_dir_all(unrelated.join("artifacts")).unwrap();
+        let dir = resolve_artifacts_dir(None, Some(&unrelated), Some(&exe));
+        assert_eq!(dir, unrelated.join("artifacts"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn artifact_paths_and_missing_error() {
+        assert_eq!(
+            artifact_path(Path::new("x"), 32),
+            PathBuf::from("x/stemmer_b32.hlo.txt")
+        );
+        let msg = format!("{:#}", no_artifacts_error(Path::new("/nowhere")));
+        assert!(msg.contains("make artifacts"), "{msg}");
+        assert!(msg.contains("emit-hlo"), "{msg}");
+    }
+}

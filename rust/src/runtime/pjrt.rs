@@ -1,0 +1,120 @@
+//! The PJRT execution backend (`--features pjrt`): compiles the HLO-text
+//! artifacts on the CPU PJRT client and executes on-device. Needs the
+//! `xla` bindings crate, which is not in the offline image — the default
+//! build uses [`super::interp`] instead; both implement [`super::Backend`]
+//! so batch selection and chunking are shared.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so the engine must stay on
+//! one thread; the coordinator owns it on a dedicated executor thread
+//! and feeds it through a queue. Dictionaries are uploaded to device
+//! once and reused as `PjRtBuffer`s for every call (`execute_b`).
+
+use super::Backend;
+use crate::chars::{ArabicWord, MAX_WORD};
+use crate::roots::RootSet;
+use crate::stemmer::{MatchKind, StemResult};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The PJRT backend: client + compiled executables + device-resident
+/// dictionaries.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    dict_bufs: Vec<xla::PjRtBuffer>, // roots2, roots3, roots4
+    dicts_i32: [Vec<i32>; 3],
+}
+
+impl PjrtBackend {
+    /// Load every `stemmer_b*.hlo.txt` under `artifacts_dir`, compile,
+    /// and upload the dictionaries.
+    pub fn load(artifacts_dir: &Path, roots: &RootSet) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let mut exes = BTreeMap::new();
+        for (b, path) in super::list_artifacts(artifacts_dir) {
+            let exe = compile_hlo(&client, &path)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            exes.insert(b, exe);
+        }
+        if exes.is_empty() {
+            return Err(super::no_artifacts_error(artifacts_dir));
+        }
+        // Dictionaries travel as direct-mapped bitmaps (roots::bitmap_i32
+        // — the block-RAM-lookup formulation; see kernels/lookup.py),
+        // uploaded to the device once and reused by every execute_b call.
+        let dicts_i32 = [roots.bi_bitmap(), roots.tri_bitmap(), roots.quad_bitmap()];
+        let dict_bufs = vec![
+            client
+                .buffer_from_host_buffer(&dicts_i32[0], &[dicts_i32[0].len()], None)
+                .map_err(|e| anyhow!("upload bitmap2: {e}"))?,
+            client
+                .buffer_from_host_buffer(&dicts_i32[1], &[dicts_i32[1].len()], None)
+                .map_err(|e| anyhow!("upload bitmap3: {e}"))?,
+            client
+                .buffer_from_host_buffer(&dicts_i32[2], &[dicts_i32[2].len()], None)
+                .map_err(|e| anyhow!("upload bitmap4: {e}"))?,
+        ];
+        Ok(PjrtBackend { client, exes, dict_bufs, dicts_i32 })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    fn dicts(&self) -> &[Vec<i32>; 3] {
+        &self.dicts_i32
+    }
+
+    fn run_loaded(&self, batch: usize, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
+        let exe = self
+            .exes
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no compiled executable for batch size {batch}"))?;
+        let (flat, lens) = super::encode_batch(words, batch);
+        // Upload the per-call inputs; dictionaries are already on device.
+        let wbuf = self
+            .client
+            .buffer_from_host_buffer(&flat, &[batch, MAX_WORD], None)
+            .map_err(|e| anyhow!("upload words: {e}"))?;
+        let lbuf = self
+            .client
+            .buffer_from_host_buffer(&lens, &[batch], None)
+            .map_err(|e| anyhow!("upload lengths: {e}"))?;
+        let args = [&wbuf, &lbuf, &self.dict_bufs[0], &self.dict_bufs[1], &self.dict_bufs[2]];
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+        let (root_l, kind_l, cut_l) = lit.to_tuple3().map_err(|e| anyhow!("tuple3: {e}"))?;
+        let roots = root_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let kinds = kind_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let cuts = cut_l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let mut out = Vec::with_capacity(words.len());
+        for i in 0..words.len() {
+            let mut root = [0u16; 4];
+            for (j, slot) in root.iter_mut().enumerate() {
+                *slot = roots[i * 4 + j] as u16;
+            }
+            out.push(StemResult {
+                root,
+                kind: MatchKind::from_u8(kinds[i] as u8),
+                cut: cuts[i] as u8,
+            });
+        }
+        Ok(out)
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))
+}

@@ -244,6 +244,61 @@ fn prop_packed_kernel_matches_stem_and_reference() {
     }
 }
 
+/// PR 5 acceptance property: the HLO interpreter executing the emitted
+/// stemmer artifact is bit-identical to both `stem_packed` and the
+/// scalar `stem_reference` — root, kind, and cut — over 10k randomly
+/// inflected corpus words, in both infix configs (the no-infix graph is
+/// a separately emitted module, mirroring `StemmerConfig`). This pins
+/// the whole self-hosting artifact cycle: `emit::stemmer_hlo` →
+/// `interp::Module` → batched execution with padding and chunking.
+#[test]
+fn prop_interp_engine_matches_packed_and_reference() {
+    use ama::runtime::{emit, interp::InterpBackend, Backend as _};
+    let r = roots();
+    let mut rng = SplitMix64::new(0x0917_0007);
+    let classes =
+        [corpus::FormClass::Direct, corpus::FormClass::Infix, corpus::FormClass::Unstemmable];
+
+    let mut lexicon: Vec<[u16; 4]> = Vec::new();
+    for t in r.tri_rows() {
+        lexicon.push([t[0], t[1], t[2], 0]);
+    }
+    for q in r.quad_rows() {
+        lexicon.push(*q);
+    }
+    for b in r.bi_rows() {
+        lexicon.push([b[0], b[1], 0, 0]);
+    }
+
+    let mut words: Vec<ArabicWord> = Vec::with_capacity(10_000);
+    for _ in 0..10_000 {
+        let gold = *rng.choose(&lexicon);
+        let class = *rng.choose(&classes);
+        words.push(corpus::inflect(&gold, class, &mut rng));
+    }
+    let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+
+    for infix in [true, false] {
+        let text = emit::stemmer_hlo(256, infix);
+        let engine = InterpBackend::from_texts([(text.as_str(), "emitted")], &r).unwrap();
+        let sw = Stemmer::new(r.clone(), StemmerConfig { infix_processing: infix });
+        let got = engine.stem_chunk(&words).unwrap();
+        assert_eq!(got.len(), words.len());
+        for (case, ((w, &p), g)) in words.iter().zip(&packed).zip(&got).enumerate() {
+            assert_eq!(
+                *g,
+                sw.stem_packed(p),
+                "case {case} (infix={infix}): interpreter != stem_packed for {w:?}"
+            );
+            assert_eq!(
+                *g,
+                sw.stem_reference(w),
+                "case {case} (infix={infix}): interpreter != stem_reference for {w:?}"
+            );
+        }
+    }
+}
+
 /// PR 4 acceptance property, part 3: with the memoizing cache in front
 /// of the registry, a mixed-options request stream served cold and then
 /// warm returns identical results (hit path ≡ miss path), trace

@@ -1,0 +1,123 @@
+//! Runtime-engine integration tests (PR 5): the self-hosting artifact
+//! cycle (emit → load → execute), engine chunking edge cases that had
+//! never executed anywhere, and the `--backend runtime` serving path.
+
+use ama::chars::{ArabicWord, MAX_WORD};
+use ama::coordinator::{Coordinator, CoordinatorConfig, RuntimeBackend};
+use ama::rng::SplitMix64;
+use ama::roots::RootSet;
+use ama::runtime::{emit, Engine};
+use ama::stemmer::Stemmer;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn roots() -> Arc<RootSet> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("data");
+    if dir.join("roots_trilateral.txt").exists() {
+        Arc::new(RootSet::load(&dir).unwrap())
+    } else {
+        Arc::new(RootSet::builtin_mini())
+    }
+}
+
+/// Emit a fresh artifact set into a unique temp dir.
+fn emitted_artifacts(tag: &str, batches: &[usize]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ama_runtime_test_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    emit::write_artifacts(&dir, batches).unwrap();
+    dir
+}
+
+fn random_words(n: usize, seed: u64) -> Vec<ArabicWord> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.index(MAX_WORD + 1);
+            let codes: Vec<u16> =
+                (0..len).map(|_| ama::chars::index_char(1 + rng.below(36) as u8)).collect();
+            ArabicWord::from_codes(&codes)
+        })
+        .collect()
+}
+
+/// Chunking edge cases (these paths had never executed anywhere before
+/// PR 5): n = 0, n exactly a loaded batch size, n one past a batch size,
+/// and n far beyond the largest batch (multi-chunk with a short tail).
+#[test]
+fn stem_chunk_edge_cases() {
+    let dir = emitted_artifacts("chunking", ama::runtime::BATCHES);
+    let r = roots();
+    let engine = Engine::load(&dir, &r).unwrap();
+    let sw = Stemmer::with_defaults(r.clone());
+
+    // n = 0: no executable runs at all.
+    assert!(engine.stem_chunk(&[]).unwrap().is_empty());
+
+    let words = random_words(600, 0x0917_0061);
+    for n in [1usize, 2, 31, 32, 33, 255, 256, 257, 600] {
+        let slice = &words[..n];
+        let got = engine.stem_chunk(slice).unwrap();
+        assert_eq!(got.len(), n, "n={n}: result length");
+        assert_eq!(got, sw.stem_batch(slice), "n={n}: results");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Words shorter than the batch width survive the pad → execute → decode
+/// roundtrip: a 3-word chunk through the 32-wide executable returns
+/// exactly 3 results, identical to the software kernel, and the padded
+/// tail never leaks into them.
+#[test]
+fn short_chunk_pad_decode_roundtrip() {
+    let dir = emitted_artifacts("padding", &[32]);
+    let r = roots();
+    let engine = Engine::load(&dir, &r).unwrap();
+    assert_eq!(engine.batch_sizes(), vec![32]);
+    let sw = Stemmer::with_defaults(r.clone());
+    let words: Vec<ArabicWord> =
+        ["سيلعبون", "قال", "ظظظ"].iter().map(|s| ArabicWord::encode(s)).collect();
+    let got = engine.stem_chunk(&words).unwrap();
+    assert_eq!(got.len(), 3);
+    assert_eq!(got, sw.stem_batch(&words));
+    assert_eq!(got[0].root_word().to_string_ar(), "لعب");
+    assert_eq!(got[1].root_word().to_string_ar(), "قول");
+    assert_eq!(got[2], ama::stemmer::StemResult::NONE);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A batch-1-only artifact set still serves any n (everything chunks to
+/// width 1), pinning the `pick_batch` largest-available fallback.
+#[test]
+fn single_batch_artifact_chunks_everything() {
+    let dir = emitted_artifacts("b1only", &[1]);
+    let r = roots();
+    let engine = Engine::load(&dir, &r).unwrap();
+    assert_eq!(engine.pick_batch(10_000), 1);
+    let words = random_words(40, 0x0917_0062);
+    let sw = Stemmer::with_defaults(r.clone());
+    assert_eq!(engine.stem_chunk(&words).unwrap(), sw.stem_batch(&words));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--backend runtime` end to end: the coordinator builds the (non-Send)
+/// engine on its worker thread and serves batches through it, word-for-
+/// word identical to the software backend.
+#[test]
+fn runtime_backend_serves_through_coordinator() {
+    let dir = emitted_artifacts("serve", &[1, 32]);
+    let r = roots();
+    let sw = Stemmer::with_defaults(r.clone());
+    let words = random_words(300, 0x0917_0063);
+    let expected = sw.stem_batch(&words);
+
+    let (dir2, r2) = (dir.clone(), r.clone());
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 1, max_batch: 32, ..Default::default() },
+        Box::new(move |_| Ok(Box::new(RuntimeBackend(Engine::load(&dir2, &r2)?)))),
+    );
+    let got = coord.handle().stem_bulk(&words).unwrap();
+    assert_eq!(got, expected);
+    assert_eq!(coord.metrics().snapshot().words, words.len() as u64);
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,866 @@
+"""PR 5 verification sweep (no-cargo container): literal python ports of
+the NEW rust HLO emitter (runtime/emit.rs) and HLO-text interpreter
+(runtime/interp.rs), swept end-to-end against the executable
+specification python/compile/kernels/ref.py::ref_stem_word.
+
+The port mirrors the rust code structurally (same instruction order,
+same helper names, same canonical gather form, same shape checks), so a
+pass here pins the *semantics* of the emitted graph and of the
+interpreter's evaluation rules; only rust-syntax-level divergence
+remains for the first cargo-equipped session to catch.
+
+Run: python3 scripts/oracle_sweep_pr5.py [n_words_per_config]
+"""
+import os
+import random
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "python"))
+from compile import alphabet as ab
+from compile.kernels.ref import ref_stem_word, candidate_valid
+
+A = ab.ALPHABET_SIZE
+NUM_CUTS = ab.MAX_PREFIX + 1
+BIG = 31
+IDX_ALEF = ab.char_index(ab.ALEF)
+IDX_WAW = ab.char_index(ab.WAW)
+
+
+# =========================================================================
+# Emitter port (runtime/emit.rs)
+# =========================================================================
+
+def class_table(letters):
+    """37-entry 0/1 table over dense indices (chars.rs CHAR_CLASS split)."""
+    t = [0] * A
+    for c in letters:
+        t[ab.char_index(c)] = 1
+    return t
+
+
+class Emitter:
+    def __init__(self, b, infix):
+        self.b = b
+        self.infix = infix
+        self.body = []
+        self.next = 0
+        self.scalars = {}
+        self.bcasts = {}
+
+    # -- shape strings ----------------------------------------------------
+    def s_b(self):
+        return f"s32[{self.b}]"
+
+    def p_b(self):
+        return f"pred[{self.b}]"
+
+    def s_b1(self):
+        return f"s32[{self.b},1]"
+
+    # -- instruction helpers ----------------------------------------------
+    def push(self, shape, expr):
+        name = f"%v{self.next}"
+        self.next += 1
+        self.body.append(f"  {name} = {shape} {expr}")
+        return name
+
+    def named(self, name, shape, expr):
+        name = f"%{name}"
+        self.body.append(f"  {name} = {shape} {expr}")
+        return name
+
+    def c(self, v):
+        if v in self.scalars:
+            return self.scalars[v]
+        name = self.push("s32[]", f"constant({v})")
+        self.scalars[v] = name
+        return name
+
+    def cb(self, v):
+        if v in self.bcasts:
+            return self.bcasts[v]
+        c = self.c(v)
+        name = self.push(self.s_b(), f"broadcast({c}), dimensions={{}}")
+        self.bcasts[v] = name
+        return name
+
+    def table(self, values):
+        lst = ", ".join(str(v) for v in values)
+        return self.push(f"s32[{len(values)}]", f"constant({{{lst}}})")
+
+    def bin(self, op, shape, a, b):
+        return self.push(shape, f"{op}({a}, {b})")
+
+    def cmp(self, a, b, d):
+        return self.push(self.p_b(), f"compare({a}, {b}), direction={d}")
+
+    def and_(self, a, b):
+        return self.bin("and", self.p_b(), a, b)
+
+    def or_(self, a, b):
+        return self.bin("or", self.p_b(), a, b)
+
+    def not_(self, a):
+        return self.push(self.p_b(), f"not({a})")
+
+    def sel(self, c, t, f):
+        return self.push(self.s_b(), f"select({c}, {t}, {f})")
+
+    def as_col(self, v):
+        return self.push(self.s_b1(), f"reshape({v})")
+
+    def gather(self, table, idx2):
+        return self.push(
+            self.s_b(),
+            f"gather({table}, {idx2}), offset_dims={{}}, collapsed_slice_dims={{0}}, "
+            f"start_index_map={{0}}, index_vector_dim=1, slice_sizes={{1}}",
+        )
+
+    def key(self, digits):
+        a37 = self.cb(A)
+        shape = self.s_b()
+        k = digits[0]
+        for d in digits[1:]:
+            m = self.bin("multiply", shape, k, a37)
+            k = self.bin("add", shape, m, d)
+        return k
+
+    def in_dict(self, bitmap, key):
+        k2 = self.as_col(key)
+        g = self.gather(bitmap, k2)
+        zero = self.cb(0)
+        return self.cmp(g, zero, "NE")
+
+    # -- the graph ---------------------------------------------------------
+    def build(self):
+        b = self.b
+        sb = self.s_b()
+        sb1 = self.s_b1()
+        pb = self.p_b()
+
+        shape_words = f"s32[{b},{ab.MAX_WORD}]"
+        words = self.named("words", shape_words, "parameter(0)")
+        lens = self.named("lens", sb, "parameter(1)")
+        bm2 = self.named("bitmap2", f"s32[{A**2}]", "parameter(2)")
+        bm3 = self.named("bitmap3", f"s32[{A**3}]", "parameter(3)")
+        bm4 = self.named("bitmap4", f"s32[{A**4}]", "parameter(4)")
+
+        pfx_tbl = self.table(class_table(ab.PREFIX_LETTERS))
+        sfx_tbl = self.table(class_table(ab.SUFFIX_LETTERS))
+        ifx_tbl = self.table(class_table(ab.INFIX_LETTERS))
+
+        zero = self.cb(0)
+        lo1 = self.cb(0x0621)
+        hi1 = self.cb(0x063A)
+        lo2 = self.cb(0x0641)
+        hi2 = self.cb(0x064A)
+        off1 = self.cb(0x0620)
+        off2 = self.cb(0x0641 - 27)
+        col, ix, ixc = [], [], []
+        for j in range(ab.MAX_WORD):
+            sl = self.push(sb1, f"slice({words}), slice={{[0:{b}], [{j}:{j + 1}]}}")
+            cj = self.push(sb, f"reshape({sl})")
+            ge1 = self.cmp(cj, lo1, "GE")
+            le1 = self.cmp(cj, hi1, "LE")
+            in1 = self.and_(ge1, le1)
+            ge2 = self.cmp(cj, lo2, "GE")
+            le2 = self.cmp(cj, hi2, "LE")
+            in2 = self.and_(ge2, le2)
+            d1 = self.bin("subtract", sb, cj, off1)
+            d2 = self.bin("subtract", sb, cj, off2)
+            alt = self.sel(in2, d2, zero)
+            ij = self.sel(in1, d1, alt)
+            ij2 = self.as_col(ij)
+            col.append(cj)
+            ix.append(ij)
+            ixc.append(ij2)
+
+        pfx_ok = []
+        for j in range(ab.MAX_PREFIX):
+            g = self.gather(pfx_tbl, ixc[j])
+            pfx_ok.append(self.cmp(g, zero, "NE"))
+        sfx_ok = []
+        for j in range(ab.MAX_WORD):
+            g = self.gather(sfx_tbl, ixc[j])
+            sfx_ok.append(self.cmp(g, zero, "NE"))
+        idx_alef = self.cb(IDX_ALEF)
+        ifx_ok, alef_ok = [], []
+        if self.infix:
+            for p in range(NUM_CUTS):
+                g = self.gather(ifx_tbl, ixc[p + 1])
+                ifx_ok.append(self.cmp(g, zero, "NE"))
+                alef_ok.append(self.cmp(ix[p + 1], idx_alef, "EQ"))
+
+        t_scalar = self.push("pred[]", "constant(true)")
+        true_b = self.push(pb, f"broadcast({t_scalar}), dimensions={{}}")
+        s_ok = []
+        for j in range(ab.MAX_WORD):
+            jb = self.cb(j)
+            inw = self.cmp(jb, lens, "LT")
+            ninw = self.not_(inw)
+            s_ok.append(self.or_(sfx_ok[j], ninw))
+        tail = [None] * (ab.MAX_WORD + 1)
+        tail[ab.MAX_WORD] = true_b
+        for j in range(ab.MAX_WORD - 1, -1, -1):
+            tail[j] = self.and_(s_ok[j], tail[j + 1])
+
+        pv = [true_b]
+        for p in range(1, NUM_CUTS):
+            pv.append(self.and_(pv[p - 1], pfx_ok[p - 1]))
+
+        max_sfx = self.cb(ab.MAX_SUFFIX)
+
+        def valid(p, size):
+            e = p + size
+            eb = self.cb(e)
+            fits = self.cmp(eb, lens, "LE")
+            rem = self.bin("subtract", sb, lens, eb)
+            slen = self.cmp(rem, max_sfx, "LE")
+            a = self.and_(fits, slen)
+            bb = self.and_(tail[e], pv[p])
+            return self.and_(a, bb)
+
+        valid3 = [valid(p, 3) for p in range(NUM_CUTS)]
+        valid4 = [valid(p, 4) for p in range(NUM_CUTS)]
+
+        waw_b = self.cb(ab.WAW)
+        hits, cand_root = [], []
+        for p in range(NUM_CUTS):
+            k = self.key([ix[p], ix[p + 1], ix[p + 2]])
+            found = self.in_dict(bm3, k)
+            hits.append(self.and_(valid3[p], found))
+            cand_root.append([col[p], col[p + 1], col[p + 2], zero])
+        for p in range(NUM_CUTS):
+            k = self.key([ix[p], ix[p + 1], ix[p + 2], ix[p + 3]])
+            found = self.in_dict(bm4, k)
+            hits.append(self.and_(valid4[p], found))
+            cand_root.append([col[p], col[p + 1], col[p + 2], col[p + 3]])
+        if self.infix:
+            for p in range(NUM_CUTS):
+                k = self.key([ix[p], ix[p + 2], ix[p + 3]])
+                found = self.in_dict(bm3, k)
+                v = self.and_(valid4[p], ifx_ok[p])
+                hits.append(self.and_(v, found))
+                cand_root.append([col[p], col[p + 2], col[p + 3], zero])
+            for p in range(NUM_CUTS):
+                k = self.key([ix[p], ix[p + 2]])
+                found = self.in_dict(bm2, k)
+                v = self.and_(valid3[p], ifx_ok[p])
+                hits.append(self.and_(v, found))
+                cand_root.append([col[p], col[p + 2], zero, zero])
+            idx_waw = self.cb(IDX_WAW)
+            for p in range(NUM_CUTS):
+                k = self.key([ix[p], idx_waw, ix[p + 2]])
+                found = self.in_dict(bm3, k)
+                v = self.and_(valid3[p], alef_ok[p])
+                hits.append(self.and_(v, found))
+                cand_root.append([col[p], waw_b, col[p + 2], zero])
+
+        big_b = self.cb(BIG)
+        masked_cols = []
+        for k_i, hit in enumerate(hits):
+            kb = self.cb(k_i)
+            m = self.sel(hit, kb, big_b)
+            masked_cols.append(self.as_col(m))
+        kdim = len(masked_cols)
+        cat = self.push(
+            f"s32[{b},{kdim}]",
+            f"concatenate({', '.join(masked_cols)}), dimensions={{1}}",
+        )
+        big_s = self.c(BIG)
+        best = self.push(sb, f"reduce({cat}, {big_s}), dimensions={{1}}, to_apply=%min_s32")
+        found_any = self.cmp(best, big_b, "LT")
+        six = self.cb(NUM_CUTS)
+        one = self.cb(1)
+        stream = self.bin("divide", sb, best, six)
+        kind_raw = self.bin("add", sb, stream, one)
+        kind = self.sel(found_any, kind_raw, zero)
+        cut_raw = self.bin("remainder", sb, best, six)
+        cut = self.sel(found_any, cut_raw, zero)
+
+        root_cols = []
+        for j in range(4):
+            acc = zero
+            for k_i, cand in enumerate(cand_root):
+                kb = self.cb(k_i)
+                eq = self.cmp(best, kb, "EQ")
+                acc = self.sel(eq, cand[j], acc)
+            root_cols.append(self.as_col(acc))
+        root = self.push(
+            f"s32[{b},4]", f"concatenate({', '.join(root_cols)}), dimensions={{1}}"
+        )
+
+        result_shape = f"(s32[{b},4], s32[{b}], s32[{b}])"
+        self.body.append(f"  ROOT %result = {result_shape} tuple({root}, {kind}, {cut})")
+
+        suffix = "" if self.infix else "_noinfix"
+        out = [f"HloModule stemmer{suffix}_b{b}", ""]
+        out.append("%min_s32 (a: s32[], b: s32[]) -> s32[] {")
+        out.append("  %a = s32[] parameter(0)")
+        out.append("  %b = s32[] parameter(1)")
+        out.append("  ROOT %min = s32[] minimum(%a, %b)")
+        out.append("}")
+        out.append("")
+        out.append(
+            f"ENTRY %stemmer (words: {shape_words}, lens: {sb}, bitmap2: s32[{A**2}], "
+            f"bitmap3: s32[{A**3}], bitmap4: s32[{A**4}]) -> {result_shape} {{"
+        )
+        out.extend(self.body)
+        out.append("}")
+        out.append("")
+        return "\n".join(out)
+
+
+def stemmer_hlo(batch, infix):
+    return Emitter(batch, infix).build()
+
+
+# =========================================================================
+# Interpreter port (runtime/interp.rs) — same grammar, same eval rules
+# =========================================================================
+
+def split_top(s):
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i].strip())
+            start = i + 1
+    last = s[start:].strip()
+    if last:
+        out.append(last)
+    return out
+
+
+def parse_array_shape(s):
+    s = s.strip()
+    open_i, close_i = s.index("["), s.index("]")
+    dtype = s[:open_i]
+    assert dtype in ("s32", "pred"), dtype
+    dims = [int(d) for d in s[open_i + 1 : close_i].split(",") if d.strip()]
+    return (dtype, tuple(dims))
+
+
+class Tensor:
+    __slots__ = ("dtype", "dims", "data")
+
+    def __init__(self, dtype, dims, data):
+        assert len(data) == prod(dims), (dims, len(data))
+        self.dtype, self.dims, self.data = dtype, tuple(dims), data
+
+
+def prod(dims):
+    p = 1
+    for d in dims:
+        p *= d
+    return p
+
+
+def strides(dims):
+    out = [1] * len(dims)
+    for i in range(len(dims) - 2, -1, -1):
+        out[i] = out[i + 1] * dims[i + 1]
+    return out
+
+
+def wrap32(v):
+    v &= 0xFFFFFFFF
+    return v - (1 << 32) if v >= (1 << 31) else v
+
+
+CMP = {
+    "EQ": lambda x, y: x == y,
+    "NE": lambda x, y: x != y,
+    "LT": lambda x, y: x < y,
+    "LE": lambda x, y: x <= y,
+    "GT": lambda x, y: x > y,
+    "GE": lambda x, y: x >= y,
+}
+
+BINOPS = {
+    "add": lambda x, y: wrap32(x + y),
+    "subtract": lambda x, y: wrap32(x - y),
+    "multiply": lambda x, y: wrap32(x * y),
+    # rust wrapping_div/_rem truncate toward zero (python // floors)
+    "divide": lambda x, y: wrap32(int(x / y)),
+    "remainder": lambda x, y: wrap32(x - int(x / y) * y),
+    "minimum": min,
+    "maximum": max,
+    "and": lambda x, y: x & y,
+    "or": lambda x, y: x | y,
+    "xor": lambda x, y: x ^ y,
+}
+
+
+class Module:
+    def __init__(self, text):
+        self.computations = {}  # name -> (instrs, root_idx, num_params)
+        self.entry = None
+        cur = None
+        saw_module = False
+        for line in text.splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            if line.startswith("HloModule"):
+                saw_module = True
+                continue
+            if line == "}":
+                name, is_entry, instrs, names, root = cur
+                assert root is not None, f"{name}: no ROOT"
+                n_params = sum(1 for i in instrs if i["op"] == "parameter")
+                self.computations[name] = (instrs, root, n_params)
+                if is_entry:
+                    assert self.entry is None
+                    self.entry = name
+                cur = None
+                continue
+            if line.endswith("{") and "->" in line:
+                is_entry = line.startswith("ENTRY")
+                after = line[5:].lstrip() if is_entry else line
+                name = after.split()[0].rstrip("(")
+                cur = (name, is_entry, [], {}, None)
+                continue
+            assert cur is not None, f"instruction outside computation: {line}"
+            name, is_entry, instrs, names, root = cur
+            instr, iname, is_root = self._parse_instr(line, names)
+            idx = len(instrs)
+            names[iname] = idx
+            instrs.append(instr)
+            if is_root:
+                root = idx
+            cur = (name, is_entry, instrs, names, root)
+        assert saw_module, "no HloModule header"
+        assert self.entry is not None, "no ENTRY computation"
+
+    def _parse_instr(self, line, names):
+        is_root = line.startswith("ROOT ")
+        if is_root:
+            line = line[5:]
+        iname, rest = line.split(" = ", 1)
+        iname = iname.strip()
+        rest = rest.strip()
+        if rest.startswith("("):
+            depth, end = 0, 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            shape_txt, rest = rest[:end], rest[end:].lstrip()
+            shape = ("tuple", tuple(parse_array_shape(p) for p in split_top(shape_txt[1:-1])))
+        else:
+            end = rest.index("]") + 1
+            if rest[end:].startswith("{"):
+                end += rest[end:].index("}") + 1
+            shape_txt, rest = rest[:end], rest[end:].lstrip()
+            shape = parse_array_shape(shape_txt)
+        open_i = rest.index("(")
+        opcode = rest[:open_i].strip()
+        depth, close_i = 0, -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    close_i = i
+                    break
+        operands_txt = rest[open_i + 1 : close_i]
+        attrs = {}
+        for part in split_top(rest[close_i + 1 :].lstrip(",").strip()):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                attrs[k.strip()] = v.strip()
+
+        def refs():
+            out = []
+            for tok in split_top(operands_txt):
+                pct = [t for t in tok.split() if t.startswith("%")]
+                out.append(names[pct[-1]])
+            return out
+
+        instr = {"op": opcode, "shape": shape, "attrs": attrs}
+        if opcode == "parameter":
+            instr["n"] = int(operands_txt.strip())
+            instr["operands"] = []
+        elif opcode == "constant":
+            t = operands_txt.strip()
+            if t.startswith("{"):
+                data = [int(x) for x in t[1:-1].split(",") if x.strip()]
+            elif t in ("true", "false"):
+                data = [1 if t == "true" else 0]
+            else:
+                data = [int(t)]
+            assert len(data) == prod(shape[1]), line
+            instr["literal"] = data
+            instr["operands"] = []
+        elif opcode == "iota":
+            instr["operands"] = []
+        else:
+            instr["operands"] = refs()
+        return instr, iname, is_root
+
+    def combiner(self, name):
+        instrs, root, n_params = self.computations[name]
+        assert n_params == 2
+        r = instrs[root]
+        assert r["op"] in BINOPS, r["op"]
+        for o in r["operands"]:
+            assert instrs[o]["op"] == "parameter"
+        return BINOPS[r["op"]]
+
+    def evaluate(self, args):
+        return self._eval(self.entry, args)
+
+    def _eval(self, comp_name, args):
+        instrs, root, n_params = self.computations[comp_name]
+        assert len(args) == n_params
+        vals = []
+        for instr in instrs:
+            v = self._eval_instr(instr, vals, args)
+            # shape check (mirrors the rust interpreter's validation)
+            sh = instr["shape"]
+            if sh[0] == "tuple":
+                assert isinstance(v, tuple)
+                assert tuple((t.dtype, t.dims) for t in v) == sh[1], instr
+            else:
+                assert (v.dtype, v.dims) == sh, (instr, v.dtype, v.dims)
+            vals.append(v)
+        return vals[root]
+
+    def _eval_instr(self, instr, vals, args):
+        op = instr["op"]
+        sh = instr["shape"]
+        get = lambda i: vals[i]
+        if op == "parameter":
+            return args[instr["n"]]
+        if op == "constant":
+            return Tensor(sh[0], sh[1], list(instr["literal"]))
+        if op == "broadcast":
+            src = get(instr["operands"][0])
+            dims = [int(x) for x in instr["attrs"]["dimensions"][1:-1].split(",") if x.strip()]
+            out_dims = sh[1]
+            out_str = strides(out_dims)
+            src_str = strides(src.dims)
+            data = [0] * prod(out_dims)
+            for flat in range(len(data)):
+                src_flat = 0
+                for k, d in enumerate(dims):
+                    coord = (flat // out_str[d]) % out_dims[d]
+                    src_flat += coord * src_str[k]
+                data[flat] = src.data[src_flat]
+            return Tensor(src.dtype, out_dims, data)
+        if op == "iota":
+            dim = int(instr["attrs"]["iota_dimension"])
+            out_dims = sh[1]
+            out_str = strides(out_dims)
+            return Tensor(sh[0], out_dims,
+                          [(f // out_str[dim]) % out_dims[dim] for f in range(prod(out_dims))])
+        if op == "reshape":
+            src = get(instr["operands"][0])
+            assert prod(sh[1]) == len(src.data)
+            return Tensor(src.dtype, sh[1], src.data)
+        if op == "slice":
+            src = get(instr.get("operands")[0])
+            spec = instr["attrs"]["slice"]
+            limits = []
+            for part in split_top(spec[1:-1]):
+                fields = part.strip()[1:-1].split(":")
+                assert len(fields) in (2, 3)
+                if len(fields) == 3:
+                    assert fields[2].strip() == "1"
+                limits.append((int(fields[0]), int(fields[1])))
+            out_dims = tuple(hi - lo for lo, hi in limits)
+            out_str = strides(out_dims)
+            src_str = strides(src.dims)
+            data = [0] * prod(out_dims)
+            for flat in range(len(data)):
+                src_flat = 0
+                for d in range(len(out_dims)):
+                    coord = (flat // out_str[d]) % out_dims[d] + limits[d][0]
+                    src_flat += coord * src_str[d]
+                data[flat] = src.data[src_flat]
+            return Tensor(src.dtype, out_dims, data)
+        if op == "concatenate":
+            parts = [get(i) for i in instr["operands"]]
+            d = int(instr["attrs"]["dimensions"][1:-1])
+            out_dims = list(parts[0].dims)
+            out_dims[d] = sum(t.dims[d] for t in parts)
+            outer = prod(out_dims[:d])
+            inner = prod(out_dims[d + 1 :])
+            data = []
+            for o in range(outer):
+                for t in parts:
+                    width = t.dims[d] * inner
+                    data.extend(t.data[o * width : (o + 1) * width])
+            return Tensor(parts[0].dtype, tuple(out_dims), data)
+        if op in BINOPS:
+            a = get(instr["operands"][0])
+            b = get(instr["operands"][1])
+            assert a.dims == b.dims
+            f = BINOPS[op]
+            return Tensor(a.dtype, a.dims, [f(x, y) for x, y in zip(a.data, b.data)])
+        if op == "not":
+            a = get(instr["operands"][0])
+            return Tensor(a.dtype, a.dims, [1 if x == 0 else 0 for x in a.data])
+        if op == "compare":
+            a = get(instr["operands"][0])
+            b = get(instr["operands"][1])
+            assert a.dims == b.dims
+            f = CMP[instr["attrs"]["direction"]]
+            return Tensor("pred", a.dims, [1 if f(x, y) else 0 for x, y in zip(a.data, b.data)])
+        if op == "select":
+            c = get(instr["operands"][0])
+            t = get(instr["operands"][1])
+            f = get(instr["operands"][2])
+            assert c.dims == t.dims == f.dims
+            return Tensor(t.dtype, t.dims,
+                          [tv if cv != 0 else fv for cv, tv, fv in zip(c.data, t.data, f.data)])
+        if op == "convert":
+            a = get(instr["operands"][0])
+            if sh[0] == "pred":
+                return Tensor("pred", a.dims, [1 if x != 0 else 0 for x in a.data])
+            return Tensor("s32", a.dims, list(a.data))
+        if op == "gather":
+            operand = get(instr["operands"][0])
+            indices = get(instr["operands"][1])
+            assert len(operand.dims) == 1 and len(indices.dims) == 2
+            assert indices.dims[1] == 1
+            assert int(instr["attrs"]["index_vector_dim"]) == 1
+            assert instr["attrs"]["slice_sizes"] == "{1}"
+            n = operand.dims[0]
+            data = [operand.data[min(max(k, 0), n - 1)] for k in indices.data]
+            return Tensor(operand.dtype, (indices.dims[0],), data)
+        if op == "dynamic-slice":
+            operand = get(instr["operands"][0])
+            start = get(instr["operands"][1])
+            k = int(instr["attrs"]["dynamic_slice_sizes"][1:-1])
+            n = operand.dims[0]
+            s = min(max(start.data[0], 0), n - k)
+            return Tensor(operand.dtype, (k,), operand.data[s : s + k])
+        if op == "reduce":
+            operand = get(instr["operands"][0])
+            init = get(instr["operands"][1])
+            dims = [int(x) for x in instr["attrs"]["dimensions"][1:-1].split(",")]
+            f = self.combiner(instr["attrs"]["to_apply"])
+            keep = [d for d in range(len(operand.dims)) if d not in dims]
+            out_dims = tuple(operand.dims[d] for d in keep)
+            out_str = strides(out_dims)
+            src_str = strides(operand.dims)
+            red_dims = [operand.dims[d] for d in dims]
+            red_count = prod(red_dims)
+            data = [0] * prod(out_dims)
+            for flat in range(len(data)):
+                base = 0
+                for k, d in enumerate(keep):
+                    base += ((flat // out_str[k]) % out_dims[k]) * src_str[d]
+                acc = init.data[0]
+                for r in range(red_count):
+                    rem, off = r, 0
+                    for k in range(len(dims) - 1, -1, -1):
+                        off += (rem % red_dims[k]) * src_str[dims[k]]
+                        rem //= red_dims[k]
+                    acc = f(acc, operand.data[base + off])
+                data[flat] = acc
+            return Tensor(operand.dtype, out_dims, data)
+        if op == "tuple":
+            return tuple(get(i) for i in instr["operands"])
+        raise AssertionError(f"unsupported opcode {op}")
+
+
+# =========================================================================
+# Engine-level harness (encode → evaluate → decode, as interp.rs does)
+# =========================================================================
+
+def encode_batch(word_rows, batch):
+    flat = [0] * (batch * ab.MAX_WORD)
+    lens = [0] * batch
+    for i, (codes, n) in enumerate(word_rows):
+        flat[i * ab.MAX_WORD : i * ab.MAX_WORD + ab.MAX_WORD] = codes
+        lens[i] = n
+    return flat, lens
+
+
+def stem_chunk(module, batch, word_rows, bm2, bm3, bm4):
+    out = []
+    for start in range(0, len(word_rows), batch):
+        chunk = word_rows[start : start + batch]
+        flat, lens = encode_batch(chunk, batch)
+        args = [
+            Tensor("s32", (batch, ab.MAX_WORD), flat),
+            Tensor("s32", (batch,), lens),
+            bm2, bm3, bm4,
+        ]
+        root_t, kind_t, cut_t = module.evaluate(args)
+        for i in range(len(chunk)):
+            root = tuple(root_t.data[i * 4 : i * 4 + 4])
+            out.append((root, kind_t.data[i], cut_t.data[i]))
+    return out
+
+
+# =========================================================================
+# Dictionaries and word generators (as in oracle_sweep_pr4.py)
+# =========================================================================
+
+def load(path, arity):
+    roots = set()
+    for line in open(path, encoding="utf-8"):
+        line = line.strip()
+        if not line:
+            continue
+        codes, n = ab.encode_word(line)
+        assert n == arity, (line, n)
+        roots.add(tuple(codes[:n]))
+    return roots
+
+
+def bitmap_tensor(roots, length):
+    bm = [0] * (A**length)
+    for r in roots:
+        bm[ab.stem_key(r)] = 1
+    return Tensor("s32", (A**length,), bm)
+
+
+R2 = load(os.path.join(REPO, "data/roots_bilateral.txt"), 2)
+R3 = load(os.path.join(REPO, "data/roots_trilateral.txt"), 3)
+R4 = load(os.path.join(REPO, "data/roots_quadrilateral.txt"), 4)
+BM2, BM3, BM4 = bitmap_tensor(R2, 2), bitmap_tensor(R3, 3), bitmap_tensor(R4, 4)
+print(f"dictionaries: {len(R2)} bi, {len(R3)} tri, {len(R4)} quad")
+
+LETTERS = [c for c in range(0x0621, 0x064B) if ab.char_index(c) != 0]
+assert len(LETTERS) == 36
+rng = random.Random(0x0917_2027)
+
+PREFIX_POOL = ["", "و", "ف", "ال", "وال", "ي", "ت", "ن", "س", "سي", "است", "أ", "فأ"]
+SUFFIX_POOL = ["", "ون", "ين", "ات", "ة", "ها", "تم", "نا", "كموها", "وا", "ت"]
+
+
+def random_word():
+    n = rng.randrange(ab.MAX_WORD + 1)
+    codes = [rng.choice(LETTERS) for _ in range(n)]
+    return codes + [ab.PAD] * (ab.MAX_WORD - n), n
+
+
+def inflected_word():
+    base = rng.choice([rng.choice(tuple(R3)), rng.choice(tuple(R4)),
+                       rng.choice(tuple(R2)) + (rng.choice(LETTERS),)])
+    mid = list(base)
+    if rng.random() < 0.35 and len(mid) >= 3:
+        mid = [mid[0], rng.choice(list(ab.INFIX_LETTERS)), *mid[1:]]
+    s = "".join(chr(c) for c in mid)
+    word = rng.choice(PREFIX_POOL) + s + rng.choice(SUFFIX_POOL)
+    return ab.encode_word(word)
+
+
+HOLLOW = [r for r in R3 if r[1] == ab.WAW]
+
+
+def hollow_verb_word():
+    """A restore-original-form candidate: و-middled tri root with ا."""
+    r = rng.choice(HOLLOW)
+    s = "".join(chr(c) for c in (r[0], ab.ALEF, r[2]))
+    word = rng.choice(PREFIX_POOL) + s + rng.choice(SUFFIX_POOL)
+    return ab.encode_word(word)
+
+
+def ref_no_infix(codes, n, roots3, roots4):
+    for size, kind, dic in ((3, ab.KIND_TRI, roots3), (4, ab.KIND_QUAD, roots4)):
+        for p in range(ab.NUM_CUTS):
+            if candidate_valid(codes, n, p, size):
+                stem = tuple(codes[p : p + size])
+                if stem in dic:
+                    return stem + (ab.PAD,) * (4 - size), kind, p
+    return (ab.PAD,) * 4, ab.KIND_NONE, 0
+
+
+# =========================================================================
+# The sweep
+# =========================================================================
+
+N = int(sys.argv[1]) if len(sys.argv) > 1 else 6000
+BATCH = 32
+
+# spot-check the interpreter's op semantics on hand-built modules first
+mini = Module("""HloModule mini
+
+%min_s32 (a: s32[], b: s32[]) -> s32[] {
+  %a = s32[] parameter(0)
+  %b = s32[] parameter(1)
+  ROOT %min = s32[] minimum(%a, %b)
+}
+
+ENTRY %main (p0: s32[2,3]) -> s32[2] {
+  %p0 = s32[2,3] parameter(0)
+  %init = s32[] constant(99)
+  ROOT %r = s32[2] reduce(%p0, %init), dimensions={1}, to_apply=%min_s32
+}
+""")
+assert mini.evaluate([Tensor("s32", (2, 3), [5, 2, 7, 1, 8, 3])]).data == [2, 1]
+print("interpreter spot checks OK")
+
+mismatch = 0
+kinds_seen = set()
+for infix in (True, False):
+    text = stemmer_hlo(BATCH, infix)
+    module = Module(text)
+    # emitted module structure sanity
+    instrs, _, n_params = module.computations[module.entry]
+    assert n_params == 5
+    word_rows, wants = [], []
+    for case in range(N):
+        if case % 16 == 7:
+            codes, n = hollow_verb_word()
+        elif case % 2 == 0:
+            codes, n = random_word()
+        else:
+            codes, n = inflected_word()
+        word_rows.append((codes, n))
+        if infix:
+            wants.append(ref_stem_word(codes, n, R2, R3, R4))
+        else:
+            wants.append(ref_no_infix(codes, n, R3, R4))
+    got = stem_chunk(module, BATCH, word_rows, BM2, BM3, BM4)
+    for case, (g, w) in enumerate(zip(got, wants)):
+        kinds_seen.add(w[1])
+        if g != w:
+            mismatch += 1
+            if mismatch <= 5:
+                codes, n = word_rows[case]
+                print(f"MISMATCH infix={infix}", codes[:n], "got", g, "want", w)
+    label = "with-infix" if infix else "no-infix"
+    print(f"interp sweep [{label}]: {N} words through emit→parse→eval, "
+          f"{len(instrs)} entry instructions")
+
+print(f"interp-vs-ref sweep: {2 * N} cases, {mismatch} mismatches")
+assert mismatch == 0
+assert kinds_seen == {0, 1, 2, 3, 4, 5}, f"kinds not all exercised: {kinds_seen}"
+
+# chunk/pad roundtrip: a 3-word chunk through the 32-wide module
+module = Module(stemmer_hlo(BATCH, True))
+three = []
+for s in ["سيلعبون", "قال", "ظظظ"]:
+    three.append(ab.encode_word(s))
+got = stem_chunk(module, BATCH, three, BM2, BM3, BM4)
+assert len(got) == 3
+for (codes, n), g in zip(three, got):
+    assert g == ref_stem_word(codes, n, R2, R3, R4), (codes[:n], g)
+assert got[0][1] == ab.KIND_TRI and got[1][1] == ab.KIND_RESTORED
+assert got[2][1] == ab.KIND_NONE
+print("pad/decode roundtrip OK (3 words through the 32-wide graph)")
+
+# dictionary fixpoints through the graph
+rows = [(list(r) + [ab.PAD] * (ab.MAX_WORD - 3), 3) for r in list(R3)[:96]]
+got = stem_chunk(module, BATCH, rows, BM2, BM3, BM4)
+for (codes, n), g in zip(rows, got):
+    assert g[1] == ab.KIND_TRI and g[0][:3] == tuple(codes[:3]) and g[2] == 0, (codes[:3], g)
+print("fixpoint check: 96 tri roots stem to themselves through the graph")
+
+print("\nALL PR5 PYTHON-ORACLE CHECKS PASSED")

@@ -43,6 +43,15 @@ print("bench smoke OK:", len(report["results"]), "rows")
 EOF
 grep -q 'stem_batch_packed' /tmp/ama_bench_smoke.json
 grep -q 'registry_cache_warm' /tmp/ama_bench_smoke.json
+grep -q 'runtime/stem_chunk_b' /tmp/ama_bench_smoke.json
+
+echo "== interpreter conformance smoke (emit → load → stem 1k vs reference) =="
+rm -rf /tmp/ama_smoke_artifacts
+./target/release/ama emit-hlo --out /tmp/ama_smoke_artifacts
+AMA_ARTIFACTS=/tmp/ama_smoke_artifacts ./target/release/ama selftest --words 1000 \
+  | tee /tmp/ama_selftest_smoke.txt
+grep -q 'runtime engine: OK' /tmp/ama_selftest_smoke.txt
+echo "interpreter conformance smoke OK"
 
 echo "== loadtest smoke (2 modes × 2s, 8 conns) =="
 ./target/release/ama loadtest --conns 8 --secs 2 --depth 32 --mode both \
