@@ -12,10 +12,13 @@
 #                     32 conns × 5 s) writing measured rows to BENCH_PR2.json
 #   make bench-packed — quick packed-kernel + stem-cache comparison rows
 #                     (PR 4 acceptance: packed ≥ array, cache warm ≥ off)
+#   make bench-simd — quick SIMD-vs-scalar batch kernel comparison
+#                     (PR 6 acceptance: simd ≥ 2× packed on AVX2/NEON hosts;
+#                     AMA_SIMD=off|scalar|avx2|neon forces the lane path)
 #   make protocol-check — AMA/1 + legacy-line conformance smoke against a
 #                     real `ama serve` process (scripts/protocol_check.sh)
 
-.PHONY: data artifacts verify test loadtest bench-packed protocol-check
+.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check
 
 data:
 	cd python && python3 -m compile.gen_roots ../data
@@ -46,6 +49,14 @@ bench-packed:
 	grep -q 'stem_batch_packed' /tmp/ama_bench_packed.json
 	grep -q 'registry_cache_warm' /tmp/ama_bench_packed.json
 	grep -q 'speedup_packed_vs_array' /tmp/ama_bench_packed.json
+
+bench-simd:
+	cargo build --release
+	AMA_BENCH_FAST=1 ./target/release/ama bench json --pr 6 \
+		--out /tmp/ama_bench_simd.json
+	grep -q 'stem_batch_simd' /tmp/ama_bench_simd.json
+	grep -q 'speedup_simd_vs_packed' /tmp/ama_bench_simd.json
+	grep -q 'pct_of_hw_model_wps' /tmp/ama_bench_simd.json
 
 protocol-check:
 	cargo build --release

@@ -180,6 +180,16 @@ pub const CLASS_SUFFIX_BITS: u64 = class_bit_plane(CLASS_SUFFIX);
 /// Bit plane of [`CLASS_INFIX`] over dense indices.
 pub const CLASS_INFIX_BITS: u64 = class_bit_plane(CLASS_INFIX);
 
+/// Split a 37-bit class plane into `(lo, hi)` 32-bit halves such that
+/// `lo as u64 | (hi as u64) << 32` recombines the plane — the layout the
+/// SIMD lane kernel tests against in 32-bit lanes: bit `d` of the plane
+/// is `((lo >> d) | (hi >> (d - 32))) & 1` under shift semantics that
+/// yield 0 for any count outside `0..32` (both `vpsrlvd` and NEON `ushl`
+/// behave that way, so no per-lane select is needed).
+pub const fn plane_halves(plane: u64) -> (u32, u32) {
+    (plane as u32, (plane >> 32) as u32)
+}
+
 /// Class bitmask of a raw codepoint (0 for PAD / non-Arabic).
 #[inline]
 pub fn char_class(c: u16) -> u8 {
@@ -689,6 +699,16 @@ mod tests {
         assert_eq!(CLASS_PREFIX_BITS >> ALPHABET_SIZE, 0);
         assert_eq!(CLASS_SUFFIX_BITS >> ALPHABET_SIZE, 0);
         assert_eq!(CLASS_INFIX_BITS >> ALPHABET_SIZE, 0);
+    }
+
+    /// The 32-bit plane halves recombine to the u64 plane bit-exactly
+    /// (the SIMD lane kernel's view of the comparator banks).
+    #[test]
+    fn plane_halves_recombine() {
+        for plane in [CLASS_PREFIX_BITS, CLASS_SUFFIX_BITS, CLASS_INFIX_BITS, 0, u64::MAX] {
+            let (lo, hi) = plane_halves(plane);
+            assert_eq!(lo as u64 | (hi as u64) << 32, plane, "plane {plane:#x}");
+        }
     }
 
     #[test]

@@ -135,10 +135,15 @@ SUBCOMMANDS:
                           [--proto line|ama1] [--algo …] [--cache-slots K]
                           [--workers N] [--batch B] [--out BENCH_PR2.json]
     selftest              cross-validate software / HW-sim / runtime backends
+                          (incl. the SIMD kernel vs the scalar packed kernel)
     bench json            benchmark the software + hw-sim + runtime backends
-                          and write a machine-readable report
+                          and write a machine-readable report; the
+                          software/stem_batch_simd row + speedup_simd_vs_packed
+                          and pct_of_hw_model_wps figures track the SIMD kernel
                           [--out BENCH_PR1.json]
                           [--words N] [--pr K] (AMA_BENCH_FAST=1 = quick pass)
+                          (AMA_SIMD=off|scalar|avx2|neon forces the lane path
+                          everywhere the batch kernels dispatch)
     emit-hlo              lower the stemmer to HLO-text artifacts from rust
                           (the offline `make artifacts` path; no JAX needed)
                           [--out artifacts] [--batches 1,32,256]

@@ -189,6 +189,46 @@
 //!   ([`coordinator::RuntimeBackend`]); `ama bench json` reports
 //!   `runtime/stem_chunk_b{1,32,256}` rows alongside the software
 //!   kernels.
+//!
+//! ## SIMD kernel (PR 6)
+//!
+//! The paper's pipelined processor evaluates all five candidate streams
+//! of one word per clock; [`simd`] turns the same dataflow sideways —
+//! one instruction evaluates one pipeline step for 8 words at once:
+//!
+//! * **Lane layout** — batches split into groups of [`simd::LANES`] = 8
+//!   packed words; each group is transposed into a tiny SoA register
+//!   file (lengths, affix profiles, and the first 9 digit rows as
+//!   `[i32; 8]` vectors). Remainder lanes (`len % 8`) always run the
+//!   pinned scalar kernel.
+//! * **Bit-plane classification** — the 37-bit `CLASS_*_BITS` planes
+//!   split into 32-bit halves ([`chars::plane_halves`]); each lane's
+//!   digit selects its class bit with two variable shifts and an OR
+//!   (AVX2 `vpsrlvd` / NEON `ushl`, both of which zero out-of-range
+//!   counts — no select needed).
+//! * **Keys and priority** — base-37 dictionary keys accumulate as
+//!   vector multiply-add over the digit rows; AVX2 probes the
+//!   [`roots::RootBitmap`]s via u32-view gathers
+//!   ([`roots::RootBitmap::bit_words`]), NEON probes per-lane against
+//!   the cache-resident bitsets. The five streams resolve with a
+//!   running vector min over `rank·16 + cut` — provably the scalar
+//!   kernel's kind-major, smallest-cut-first priority.
+//! * **Detect/dispatch contract** — [`simd::active`] resolves once per
+//!   process: `AMA_SIMD` (`auto`/`off`/`scalar`/`avx2`/`neon`)
+//!   overrides runtime detection; unavailable forced paths degrade to
+//!   the portable lane kernel. [`stemmer::Stemmer::stem_batch_packed`]
+//!   and `stem_batch` dispatch for batches ≥ [`simd::MIN_SIMD_BATCH`];
+//!   [`stemmer::Stemmer::stem_batch_packed_scalar`] stays pinned as the
+//!   byte-identical baseline, and the conformance proptest forces every
+//!   available path. `ama bench json` reports `software/stem_batch_simd`
+//!   plus `pct_of_hw_model_wps` — how much of the paper's pipelined
+//!   processor the software path now reaches.
+//!
+//! The HLO interpreter gains a pre-compiled execution plan in the same
+//! PR ([`runtime::interp`]): elementwise instruction chains fuse into
+//! single-pass programs at load time (constants pre-materialized,
+//! shapes pre-checked), so the "hardware" backend's inner loop stops
+//! allocating one `Vec<i32>` per instruction per call.
 
 pub mod analysis;
 pub mod bench;
@@ -210,6 +250,7 @@ pub mod report;
 pub mod roots;
 pub mod runtime;
 pub mod server;
+pub mod simd;
 pub mod stemmer;
 
 pub use analysis::{

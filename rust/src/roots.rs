@@ -141,6 +141,16 @@ impl RootBitmap {
     pub fn memory_bytes(&self) -> usize {
         self.words.len() * 8
     }
+
+    /// The raw 64-bit backing words of the bitset, ascending by key —
+    /// the SIMD kernel's gather view. On little-endian hosts the same
+    /// buffer reads as u32 words with bit `key` in u32 word `key >> 5`
+    /// at bit `key & 31` (a u64 is its lo u32 then its hi u32).
+    /// Capacities: 37² = 1,369 bits (bi), 37³ = 50,653 (tri),
+    /// 37⁴ = 1,874,161 (quad).
+    pub fn bit_words(&self) -> &[u64] {
+        &self.words
+    }
 }
 
 /// The three direct-addressed dictionaries, shared by the fused software

@@ -16,6 +16,14 @@
 //! so tensors store `i32` with a dtype tag. Every instruction's computed
 //! shape is validated against its declared shape, which turns the
 //! interpreter into a shape checker for the emitter as a side effect.
+//!
+//! Evaluation has two speeds. [`Module::evaluate`] interprets the graph
+//! instruction by instruction. [`Module::compile_plan`] pre-compiles the
+//! entry computation into an execution [`Plan`] that fuses single-use
+//! elementwise chains into per-element stack programs, pins constants,
+//! and pre-resolves reduce combiners; [`InterpBackend`] always runs
+//! through a plan. Both paths compute identical results — the plan
+//! falls back to the generic evaluator for anything it cannot fuse.
 
 use crate::chars::{ArabicWord, ALPHABET_SIZE, MAX_WORD};
 use crate::roots::RootSet;
@@ -538,22 +546,7 @@ impl Module {
                 .eval_instr(instr, &values, args)
                 .with_context(|| format!("evaluating {} instruction #{i}", comp.name))?;
             // Shape checking: the computed value must match the decl.
-            match (&value, &instr.shape) {
-                (Value::Tensor(t), DeclShape::Array(s)) => {
-                    if &t.shape() != s {
-                        bail!(
-                            "{} instruction #{i}: computed shape {:?}/{:?} != declared {:?}/{:?}",
-                            comp.name, t.dtype, t.dims, s.dtype, s.dims
-                        );
-                    }
-                }
-                (Value::Tuple(ts), DeclShape::Tuple(ss)) => {
-                    if ts.len() != ss.len() || ts.iter().zip(ss).any(|(t, s)| &t.shape() != s) {
-                        bail!("{} instruction #{i}: tuple shape mismatch", comp.name);
-                    }
-                }
-                _ => bail!("{} instruction #{i}: array/tuple kind mismatch", comp.name),
-            }
+            check_decl_shape(&value, &instr.shape, &comp.name, i)?;
             values.push(Some(value));
         }
         values[comp.root]
@@ -818,35 +811,7 @@ impl Module {
                     bail!("reduce init must be scalar");
                 }
                 let op = self.combiner(to_apply)?;
-                let keep: Vec<usize> =
-                    (0..operand.dims.len()).filter(|d| !dims.contains(d)).collect();
-                let out_dims: Vec<usize> = keep.iter().map(|&d| operand.dims[d]).collect();
-                let out_str = strides(&out_dims);
-                let src_str = strides(&operand.dims);
-                let red_dims: Vec<usize> = dims.iter().map(|&d| operand.dims[d]).collect();
-                let red_count: usize = red_dims.iter().product();
-                let n: usize = out_dims.iter().product();
-                let mut data = vec![0i32; n];
-                for (flat, slot) in data.iter_mut().enumerate() {
-                    let mut base = 0usize;
-                    for (k, &d) in keep.iter().enumerate() {
-                        let coord = (flat / out_str[k]) % out_dims[k];
-                        base += coord * src_str[d];
-                    }
-                    let mut acc = init.data[0];
-                    for r in 0..red_count {
-                        let mut rem = r;
-                        let mut off = 0usize;
-                        for (k, &d) in dims.iter().enumerate().rev() {
-                            let extent = red_dims[k];
-                            off += (rem % extent) * src_str[d];
-                            rem /= extent;
-                        }
-                        acc = apply_binop(op, acc, operand.data[base + off])?;
-                    }
-                    *slot = acc;
-                }
-                Value::Tensor(Rc::new(Tensor { dtype: operand.dtype, dims: out_dims, data }))
+                Value::Tensor(Rc::new(eval_reduce(operand, init.data[0], op, dims)?))
             }
             Op::Tuple => {
                 let parts: Vec<Rc<Tensor>> = instr
@@ -859,6 +824,489 @@ impl Module {
         };
         Ok(out)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Pre-compiled execution plans
+// ---------------------------------------------------------------------------
+//
+// `Module::evaluate` walks the graph one instruction at a time and
+// allocates a fresh tensor per node — fine for correctness, wasteful for
+// the long elementwise chains the stemmer graphs are mostly made of.
+// `compile_plan` walks the entry computation once and fuses every
+// single-use elementwise chain (binary / compare / select / not /
+// convert, plus iota and scalar-broadcast leaves) into a small RPN stack
+// program that runs in one pass per output element with no intermediate
+// tensors. Structural ops (slice / gather / reduce / …), fan-out nodes,
+// and the root stay materialized boundaries; constants are materialized
+// once at plan-build time instead of cloned per call, and each reduce's
+// combiner computation is distilled to its `BinOp` up front. Anything
+// the planner does not understand falls back to the generic
+// single-instruction evaluator, so a plan never rejects a module that
+// `evaluate` accepts.
+
+/// One step of a compiled elementwise program, in RPN order. The flat
+/// output element index is implicit; loads name evaluation slots.
+#[derive(Debug)]
+enum PStep {
+    /// Push the named slot's element at the current flat index.
+    Load(usize),
+    /// Push the named slot's only element (a fused scalar broadcast).
+    LoadScalar(usize),
+    /// Push the iota coordinate `(idx / stride) % extent`.
+    Iota { stride: usize, extent: usize },
+    Bin(BinOp),
+    Cmp(CmpDir),
+    Not,
+    /// Normalize to 0/1 (a `convert` whose target type is `pred`).
+    ToPred,
+    /// Ternary select over the top three entries: `c ? t : f`.
+    Sel,
+}
+
+/// A fused chain of elementwise instructions compiled into a stack
+/// program, evaluated once per output element in a single pass.
+#[derive(Debug)]
+struct Program {
+    steps: Vec<PStep>,
+    dims: Vec<usize>,
+    dtype: DType,
+    max_stack: usize,
+}
+
+/// What the planned evaluator does at one entry instruction.
+#[derive(Debug)]
+enum Step {
+    /// Fall back to the generic single-instruction evaluator.
+    Eval,
+    /// Reuse a constant tensor materialized at plan-build time.
+    Const(Rc<Tensor>),
+    /// Run a compiled elementwise program.
+    Fused(Program),
+    /// Nothing: this instruction was inlined into a later `Fused` step.
+    Skip,
+}
+
+/// A pre-compiled execution plan for a module's entry computation.
+/// Build once with [`Module::compile_plan`], evaluate many times with
+/// [`Module::evaluate_with_plan`].
+#[derive(Debug)]
+pub struct Plan {
+    steps: Vec<Step>,
+    /// Pre-resolved combiner per `reduce` instruction index.
+    reduce_ops: HashMap<usize, BinOp>,
+}
+
+/// Declared array dims of an instruction, if it declares an array.
+fn decl_dims(instr: &Instr) -> Option<&[usize]> {
+    match &instr.shape {
+        DeclShape::Array(s) => Some(&s.dims),
+        DeclShape::Tuple(_) => None,
+    }
+}
+
+/// Ops a compiled program can evaluate per element.
+fn compilable(instrs: &[Instr], i: usize) -> bool {
+    match &instrs[i].op {
+        Op::Binary(_) | Op::Compare(_) | Op::Select | Op::Not | Op::Convert => true,
+        Op::Iota { dim } => {
+            // guard a malformed iota dimension so plan building can't panic
+            decl_dims(&instrs[i]).is_some_and(|d| *dim < d.len())
+        }
+        Op::Broadcast { .. } => {
+            // only a broadcast of a scalar fuses (it becomes LoadScalar)
+            instrs[i]
+                .operands
+                .first()
+                .and_then(|&o| decl_dims(&instrs[o]))
+                .is_some_and(|d| d.is_empty())
+        }
+        _ => false,
+    }
+}
+
+/// Ops whose program compilation recurses into their operands.
+fn fuses_operands(op: &Op) -> bool {
+    matches!(op, Op::Binary(_) | Op::Compare(_) | Op::Select | Op::Not | Op::Convert)
+}
+
+/// Compile the expression rooted at `i` into RPN steps. Returns `None`
+/// when a precondition fails (shape surprise, unsupported form); the
+/// caller then falls back to the generic evaluator for this head.
+fn compile_node(
+    comp: &Computation,
+    materialized: &[bool],
+    i: usize,
+    dims: &[usize],
+    steps: &mut Vec<PStep>,
+    is_head: bool,
+) -> Option<()> {
+    let instr = &comp.instrs[i];
+    if !is_head && materialized[i] {
+        // Boundary operand: its tensor is in the slot table. Runtime
+        // values of materialized nodes always match their decl shape, so
+        // an equal-dims decl guarantees an in-bounds indexed load.
+        if decl_dims(instr)? != dims {
+            return None;
+        }
+        steps.push(PStep::Load(i));
+        return Some(());
+    }
+    if decl_dims(instr)? != dims {
+        return None;
+    }
+    match &instr.op {
+        Op::Binary(op) => {
+            compile_node(comp, materialized, instr.operands[0], dims, steps, false)?;
+            compile_node(comp, materialized, instr.operands[1], dims, steps, false)?;
+            steps.push(PStep::Bin(*op));
+        }
+        Op::Compare(dir) => {
+            compile_node(comp, materialized, instr.operands[0], dims, steps, false)?;
+            compile_node(comp, materialized, instr.operands[1], dims, steps, false)?;
+            steps.push(PStep::Cmp(*dir));
+        }
+        Op::Select => {
+            compile_node(comp, materialized, instr.operands[0], dims, steps, false)?;
+            compile_node(comp, materialized, instr.operands[1], dims, steps, false)?;
+            compile_node(comp, materialized, instr.operands[2], dims, steps, false)?;
+            steps.push(PStep::Sel);
+        }
+        Op::Not => {
+            compile_node(comp, materialized, instr.operands[0], dims, steps, false)?;
+            steps.push(PStep::Not);
+        }
+        Op::Convert => {
+            compile_node(comp, materialized, instr.operands[0], dims, steps, false)?;
+            // convert to s32 is the identity on 0/1-or-s32 data; only a
+            // conversion *to* pred changes values
+            let DeclShape::Array(s) = &instr.shape else { return None };
+            if s.dtype == DType::Pred {
+                steps.push(PStep::ToPred);
+            }
+        }
+        Op::Iota { dim } => {
+            let st = strides(dims);
+            steps.push(PStep::Iota { stride: st[*dim], extent: dims[*dim] });
+        }
+        Op::Broadcast { .. } => {
+            let o = *instr.operands.first()?;
+            if !materialized[o] || !decl_dims(&comp.instrs[o])?.is_empty() {
+                return None;
+            }
+            steps.push(PStep::LoadScalar(o));
+        }
+        _ => return None,
+    }
+    Some(())
+}
+
+/// Compile the fused program headed at materialized instruction `head`.
+fn compile_program(comp: &Computation, materialized: &[bool], head: usize) -> Option<Program> {
+    let DeclShape::Array(shape) = &comp.instrs[head].shape else {
+        return None;
+    };
+    let dims = shape.dims.clone();
+    let mut steps = Vec::new();
+    compile_node(comp, materialized, head, &dims, &mut steps, true)?;
+    let mut depth = 0usize;
+    let mut max_stack = 0usize;
+    for s in &steps {
+        match s {
+            PStep::Load(_) | PStep::LoadScalar(_) | PStep::Iota { .. } => {
+                depth += 1;
+                max_stack = max_stack.max(depth);
+            }
+            PStep::Bin(_) | PStep::Cmp(_) => depth -= 1,
+            PStep::Sel => depth -= 2,
+            PStep::Not | PStep::ToPred => {}
+        }
+    }
+    debug_assert_eq!(depth, 1, "program must leave exactly one result");
+    Some(Program { steps, dims, dtype: shape.dtype, max_stack })
+}
+
+/// Collect every node the program headed at `i` would inline, so a
+/// failed compilation can re-materialize its whole subtree.
+fn collect_inlined(comp: &Computation, materialized: &[bool], i: usize, out: &mut Vec<usize>) {
+    if !fuses_operands(&comp.instrs[i].op) {
+        return;
+    }
+    for &o in &comp.instrs[i].operands {
+        if !materialized[o] {
+            out.push(o);
+            collect_inlined(comp, materialized, o, out);
+        }
+    }
+}
+
+/// Run a compiled program against the slot table.
+fn run_program(prog: &Program, values: &[Option<Value>]) -> Result<Tensor> {
+    /// A step with its loads resolved to borrowed data slices.
+    enum RStep<'a> {
+        Elem(&'a [i32]),
+        Scalar(i32),
+        Iota { stride: usize, extent: usize },
+        Bin(BinOp),
+        Cmp(CmpDir),
+        Not,
+        ToPred,
+        Sel,
+    }
+    let n: usize = prog.dims.iter().product();
+    let slot = |s: usize| -> Result<&Rc<Tensor>> {
+        values[s].as_ref().expect("plan: operands precede uses").tensor()
+    };
+    let mut ops = Vec::with_capacity(prog.steps.len());
+    for step in &prog.steps {
+        ops.push(match step {
+            PStep::Load(s) => {
+                let t = slot(*s)?;
+                if t.data.len() != n {
+                    bail!("fused load of slot {s}: {} elements, program wants {n}", t.data.len());
+                }
+                RStep::Elem(&t.data)
+            }
+            PStep::LoadScalar(s) => {
+                let t = slot(*s)?;
+                if t.data.len() != 1 {
+                    bail!("fused scalar load of slot {s}: {} elements", t.data.len());
+                }
+                RStep::Scalar(t.data[0])
+            }
+            PStep::Iota { stride, extent } => RStep::Iota { stride: *stride, extent: *extent },
+            PStep::Bin(op) => RStep::Bin(*op),
+            PStep::Cmp(dir) => RStep::Cmp(*dir),
+            PStep::Not => RStep::Not,
+            PStep::ToPred => RStep::ToPred,
+            PStep::Sel => RStep::Sel,
+        });
+    }
+    let mut data = vec![0i32; n];
+    let mut stack = vec![0i32; prog.max_stack.max(1)];
+    for (idx, out) in data.iter_mut().enumerate() {
+        let mut sp = 0usize;
+        for op in &ops {
+            match op {
+                RStep::Elem(d) => {
+                    stack[sp] = d[idx];
+                    sp += 1;
+                }
+                RStep::Scalar(v) => {
+                    stack[sp] = *v;
+                    sp += 1;
+                }
+                RStep::Iota { stride, extent } => {
+                    stack[sp] = ((idx / stride) % extent) as i32;
+                    sp += 1;
+                }
+                RStep::Bin(op) => {
+                    sp -= 1;
+                    stack[sp - 1] = apply_binop(*op, stack[sp - 1], stack[sp])?;
+                }
+                RStep::Cmp(dir) => {
+                    sp -= 1;
+                    let (x, y) = (stack[sp - 1], stack[sp]);
+                    stack[sp - 1] = i32::from(match dir {
+                        CmpDir::Eq => x == y,
+                        CmpDir::Ne => x != y,
+                        CmpDir::Lt => x < y,
+                        CmpDir::Le => x <= y,
+                        CmpDir::Gt => x > y,
+                        CmpDir::Ge => x >= y,
+                    });
+                }
+                RStep::Not => stack[sp - 1] = i32::from(stack[sp - 1] == 0),
+                RStep::ToPred => stack[sp - 1] = i32::from(stack[sp - 1] != 0),
+                RStep::Sel => {
+                    sp -= 2;
+                    stack[sp - 1] = if stack[sp - 1] != 0 { stack[sp] } else { stack[sp + 1] };
+                }
+            }
+        }
+        *out = stack[0];
+    }
+    Ok(Tensor { dtype: prog.dtype, dims: prog.dims.clone(), data })
+}
+
+impl Module {
+    /// Compile an execution plan for the entry computation. Infallible by
+    /// design: any node the planner cannot fuse simply stays on the
+    /// generic evaluator, so `evaluate_with_plan` accepts exactly the
+    /// inputs `evaluate` accepts.
+    pub fn compile_plan(&self) -> Plan {
+        let comp = &self.computations[self.entry];
+        let n = comp.instrs.len();
+        let mut uses = vec![0usize; n];
+        let mut user = vec![usize::MAX; n];
+        for (i, instr) in comp.instrs.iter().enumerate() {
+            for &o in &instr.operands {
+                uses[o] += 1;
+                user[o] = i;
+            }
+        }
+        // A node is inlined into its user only when it is single-use,
+        // elementwise, feeds an operand-fusing op, and shares its user's
+        // declared dims (elementwise ops preserve dims, so the whole
+        // chain then shares the head's dims transitively).
+        let mut materialized = vec![true; n];
+        for i in 0..n {
+            let inline_ok = compilable(&comp.instrs, i)
+                && i != comp.root
+                && uses[i] == 1
+                && fuses_operands(&comp.instrs[user[i]].op)
+                && decl_dims(&comp.instrs[i])
+                    .zip(decl_dims(&comp.instrs[user[i]]))
+                    .is_some_and(|(a, b)| a == b);
+            materialized[i] = !inline_ok;
+        }
+        let mut steps: Vec<Step> = Vec::with_capacity(n);
+        for i in 0..n {
+            steps.push(if materialized[i] { Step::Eval } else { Step::Skip });
+        }
+        let mut reduce_ops = HashMap::new();
+        for i in 0..n {
+            if !materialized[i] {
+                continue;
+            }
+            match &comp.instrs[i].op {
+                Op::Constant(t) => steps[i] = Step::Const(Rc::new(t.clone())),
+                Op::Reduce { to_apply, .. } => {
+                    // pre-resolve the combiner; on failure the generic
+                    // evaluator reproduces the original error at runtime
+                    if let Ok(op) = self.combiner(to_apply) {
+                        reduce_ops.insert(i, op);
+                    }
+                }
+                _ if compilable(&comp.instrs, i) => {
+                    match compile_program(comp, &materialized, i) {
+                        Some(p) => steps[i] = Step::Fused(p),
+                        None => {
+                            // compilation declined: re-materialize the
+                            // subtree this head would have inlined
+                            let mut subtree = Vec::new();
+                            collect_inlined(comp, &materialized, i, &mut subtree);
+                            for j in subtree {
+                                materialized[j] = true;
+                                steps[j] = Step::Eval;
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        Plan { steps, reduce_ops }
+    }
+
+    /// Evaluate the entry computation on `args` through a pre-compiled
+    /// plan. Equivalent to [`Module::evaluate`], faster on elementwise-
+    /// heavy graphs.
+    pub fn evaluate_with_plan(&self, plan: &Plan, args: &[Rc<Tensor>]) -> Result<Value> {
+        let comp = &self.computations[self.entry];
+        if args.len() != comp.num_params {
+            bail!("{} expects {} arguments, got {}", comp.name, comp.num_params, args.len());
+        }
+        debug_assert_eq!(plan.steps.len(), comp.instrs.len(), "plan built for another module");
+        let mut values: Vec<Option<Value>> = Vec::with_capacity(comp.instrs.len());
+        for (i, instr) in comp.instrs.iter().enumerate() {
+            let value = match &plan.steps[i] {
+                Step::Skip => {
+                    values.push(None);
+                    continue;
+                }
+                // Const and Fused tensors are built from the declared
+                // shape, so the runtime shape check would be a tautology.
+                Step::Const(t) => Value::Tensor(t.clone()),
+                Step::Fused(p) => Value::Tensor(Rc::new(
+                    run_program(p, &values)
+                        .with_context(|| format!("evaluating {} fused chain #{i}", comp.name))?,
+                )),
+                Step::Eval => {
+                    let value = match (&instr.op, plan.reduce_ops.get(&i)) {
+                        (Op::Reduce { dims, .. }, Some(op)) => {
+                            let operand = values[instr.operands[0]]
+                                .as_ref()
+                                .expect("operands precede uses")
+                                .tensor()?;
+                            let init = values[instr.operands[1]]
+                                .as_ref()
+                                .expect("operands precede uses")
+                                .tensor()?;
+                            if !init.dims.is_empty() {
+                                bail!("reduce init must be scalar");
+                            }
+                            Value::Tensor(Rc::new(eval_reduce(operand, init.data[0], *op, dims)?))
+                        }
+                        _ => self
+                            .eval_instr(instr, &values, args)
+                            .with_context(|| format!("evaluating {} instruction #{i}", comp.name))?,
+                    };
+                    check_decl_shape(&value, &instr.shape, &comp.name, i)?;
+                    value
+                }
+            };
+            values.push(Some(value));
+        }
+        values[comp.root]
+            .clone()
+            .ok_or_else(|| anyhow!("ROOT of {} never evaluated", comp.name))
+    }
+}
+
+/// Reduce `operand` over `dims` with combiner `op`, seeded by `init`.
+/// Shared by the generic evaluator (combiner looked up by name) and the
+/// planned evaluator (combiner pre-resolved at plan-build time).
+fn eval_reduce(operand: &Tensor, init: i32, op: BinOp, dims: &[usize]) -> Result<Tensor> {
+    let keep: Vec<usize> = (0..operand.dims.len()).filter(|d| !dims.contains(d)).collect();
+    let out_dims: Vec<usize> = keep.iter().map(|&d| operand.dims[d]).collect();
+    let out_str = strides(&out_dims);
+    let src_str = strides(&operand.dims);
+    let red_dims: Vec<usize> = dims.iter().map(|&d| operand.dims[d]).collect();
+    let red_count: usize = red_dims.iter().product();
+    let n: usize = out_dims.iter().product();
+    let mut data = vec![0i32; n];
+    for (flat, slot) in data.iter_mut().enumerate() {
+        let mut base = 0usize;
+        for (k, &d) in keep.iter().enumerate() {
+            let coord = (flat / out_str[k]) % out_dims[k];
+            base += coord * src_str[d];
+        }
+        let mut acc = init;
+        for r in 0..red_count {
+            let mut rem = r;
+            let mut off = 0usize;
+            for (k, &d) in dims.iter().enumerate().rev() {
+                let extent = red_dims[k];
+                off += (rem % extent) * src_str[d];
+                rem /= extent;
+            }
+            acc = apply_binop(op, acc, operand.data[base + off])?;
+        }
+        *slot = acc;
+    }
+    Ok(Tensor { dtype: operand.dtype, dims: out_dims, data })
+}
+
+/// Validate a computed value against an instruction's declared shape.
+fn check_decl_shape(value: &Value, decl: &DeclShape, comp: &str, i: usize) -> Result<()> {
+    match (value, decl) {
+        (Value::Tensor(t), DeclShape::Array(s)) => {
+            if &t.shape() != s {
+                bail!(
+                    "{comp} instruction #{i}: computed shape {:?}/{:?} != declared {:?}/{:?}",
+                    t.dtype, t.dims, s.dtype, s.dims
+                );
+            }
+        }
+        (Value::Tuple(ts), DeclShape::Tuple(ss)) => {
+            if ts.len() != ss.len() || ts.iter().zip(ss).any(|(t, s)| &t.shape() != s) {
+                bail!("{comp} instruction #{i}: tuple shape mismatch");
+            }
+        }
+        _ => bail!("{comp} instruction #{i}: array/tuple kind mismatch"),
+    }
+    Ok(())
 }
 
 fn apply_binop(op: BinOp, x: i32, y: i32) -> Result<i32> {
@@ -992,7 +1440,8 @@ fn build_instr(raw: &RawInstr<'_>, names: &HashMap<String, usize>) -> Result<Ins
 /// size plus the dictionary bitmaps as pre-built input tensors. This is
 /// the default-build implementation of [`crate::runtime::Backend`].
 pub struct InterpBackend {
-    exes: BTreeMap<usize, Module>,
+    /// Parsed module plus its pre-compiled execution plan per batch size.
+    exes: BTreeMap<usize, (Module, Plan)>,
     dict_tensors: [Rc<Tensor>; 3],
     dicts_i32: [Vec<i32>; 3],
 }
@@ -1029,7 +1478,8 @@ impl InterpBackend {
         for (text, label) in texts {
             let module = Module::parse(text).with_context(|| format!("parsing {label}"))?;
             let batch = validate_stemmer_module(&module).with_context(|| format!("validating {label}"))?;
-            exes.insert(batch, module);
+            let plan = module.compile_plan();
+            exes.insert(batch, (module, plan));
         }
         if exes.is_empty() {
             bail!("no stemmer modules given");
@@ -1083,7 +1533,7 @@ impl super::Backend for InterpBackend {
     }
 
     fn run_loaded(&self, batch: usize, words: &[ArabicWord]) -> Result<Vec<StemResult>> {
-        let module = self
+        let (module, plan) = self
             .exes
             .get(&batch)
             .ok_or_else(|| anyhow!("no loaded module for batch size {batch}"))?;
@@ -1095,7 +1545,7 @@ impl super::Backend for InterpBackend {
             self.dict_tensors[1].clone(),
             self.dict_tensors[2].clone(),
         ];
-        let out = module.evaluate(&args)?;
+        let out = module.evaluate_with_plan(plan, &args)?;
         let Value::Tuple(parts) = out else {
             bail!("stemmer module must return a tuple");
         };
@@ -1290,6 +1740,142 @@ ENTRY %main (p0: s32[1]) -> s32[1] {
 }
 ";
         assert!(Module::parse(text).is_err());
+    }
+
+    /// Evaluate `text` on `args` through both the generic evaluator and
+    /// a compiled plan and assert the results agree exactly.
+    fn assert_planned_matches(text: &str, args: &[Rc<Tensor>]) {
+        let m = Module::parse(text).unwrap();
+        let plan = m.compile_plan();
+        let a = m.evaluate(args).unwrap();
+        let b = m.evaluate_with_plan(&plan, args).unwrap();
+        match (a, b) {
+            (Value::Tensor(x), Value::Tensor(y)) => {
+                assert_eq!(x.data, y.data);
+                assert_eq!(x.dims, y.dims);
+                assert_eq!(x.dtype, y.dtype);
+            }
+            (Value::Tuple(xs), Value::Tuple(ys)) => {
+                assert_eq!(xs.len(), ys.len());
+                for (x, y) in xs.iter().zip(&ys) {
+                    assert_eq!(x.data, y.data);
+                    assert_eq!(x.dims, y.dims);
+                }
+            }
+            _ => panic!("evaluate and evaluate_with_plan disagree on value kind"),
+        }
+    }
+
+    #[test]
+    fn planned_eval_matches_unplanned_across_op_mix() {
+        // elementwise chain with broadcast + iota + compare/select
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[6]) -> s32[6] {
+  %p0 = s32[6] parameter(0)
+  %c = s32[] constant(4)
+  %cb = s32[6] broadcast(%c), dimensions={}
+  %i = s32[6] iota(), iota_dimension=0
+  %sum = s32[6] add(%p0, %i)
+  %lt = pred[6] compare(%sum, %cb), direction=LT
+  ROOT %sel = s32[6] select(%lt, %sum, %cb)
+}
+";
+        assert_planned_matches(text, &[t(&[6], &[9, -3, 0, 2, 7, 1])]);
+
+        // structural boundaries: slice feeding a fused chain, reduce after
+        let text = "\
+HloModule mini
+
+%add_s32 (a: s32[], b: s32[]) -> s32[] {
+  %a = s32[] parameter(0)
+  %b = s32[] parameter(1)
+  ROOT %m = s32[] add(%a, %b)
+}
+
+ENTRY %main (p0: s32[2,3]) -> s32[2] {
+  %p0 = s32[2,3] parameter(0)
+  %row = s32[2,3] multiply(%p0, %p0)
+  %init = s32[] constant(0)
+  ROOT %r = s32[2] reduce(%row, %init), dimensions={1}, to_apply=%add_s32
+}
+";
+        assert_planned_matches(text, &[t(&[2, 3], &[1, 2, 3, 4, 5, 6])]);
+
+        // gather + convert + not, tuple root
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[5], p1: s32[3,1]) -> (s32[3], pred[3]) {
+  %p0 = s32[5] parameter(0)
+  %p1 = s32[3,1] parameter(1)
+  %g = s32[3] gather(%p0, %p1), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1}
+  %pr = pred[3] convert(%g)
+  %np = pred[3] not(%pr)
+  ROOT %t = (s32[3], pred[3]) tuple(%g, %np)
+}
+";
+        assert_planned_matches(
+            text,
+            &[t(&[5], &[0, 7, 0, 9, 2]), t(&[3, 1], &[1, 2, 4])],
+        );
+    }
+
+    #[test]
+    fn plan_fuses_chains_pins_constants_and_keeps_fanout_materialized() {
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[8]) -> s32[8] {
+  %p0 = s32[8] parameter(0)
+  %c = s32[] constant(3)
+  %cb = s32[8] broadcast(%c), dimensions={}
+  %sum = s32[8] add(%p0, %cb)
+  %i = s32[8] iota(), iota_dimension=0
+  %lt = pred[8] compare(%i, %sum), direction=LT
+  ROOT %sel = s32[8] select(%lt, %p0, %sum)
+}
+";
+        let m = Module::parse(text).unwrap();
+        let plan = m.compile_plan();
+        // instruction order: p0, c, cb, sum, i, lt, sel
+        assert!(matches!(plan.steps[0], Step::Eval), "parameter stays on the evaluator");
+        assert!(matches!(plan.steps[1], Step::Const(_)), "constant pinned at build time");
+        assert!(matches!(plan.steps[2], Step::Skip), "scalar broadcast fuses away");
+        // %sum feeds both %lt and %sel, so fanout keeps it materialized —
+        // but as a compiled program of its own, not the generic evaluator
+        assert!(matches!(plan.steps[3], Step::Fused(_)), "fanout node materializes as a program");
+        assert!(matches!(plan.steps[4], Step::Skip), "iota fuses away");
+        assert!(matches!(plan.steps[5], Step::Skip), "compare fuses into the root select");
+        assert!(matches!(plan.steps[6], Step::Fused(_)), "root is a fused head");
+        let args = [t(&[8], &[5, 0, 9, 1, 2, 8, 3, 4])];
+        assert_planned_matches(text, &args);
+        // spot-check the actual values too: sel = (iota < p0+3) ? p0 : p0+3;
+        // lanes 6 and 7 fail the compare (6<6, 7<7) and take the sum branch
+        match m.evaluate_with_plan(&plan, &args).unwrap() {
+            Value::Tensor(out) => assert_eq!(out.data, vec![5, 0, 9, 1, 2, 8, 6, 7]),
+            Value::Tuple(_) => panic!("expected tensor"),
+        }
+    }
+
+    #[test]
+    fn planned_divide_by_zero_still_errors() {
+        let text = "\
+HloModule mini
+
+ENTRY %main (p0: s32[4]) -> s32[4] {
+  %p0 = s32[4] parameter(0)
+  %z = s32[] constant(0)
+  %zb = s32[4] broadcast(%z), dimensions={}
+  ROOT %d = s32[4] divide(%p0, %zb)
+}
+";
+        let m = Module::parse(text).unwrap();
+        let plan = m.compile_plan();
+        let args = [t(&[4], &[1, 2, 3, 4])];
+        assert!(m.evaluate(&args).is_err());
+        assert!(m.evaluate_with_plan(&plan, &args).is_err());
     }
 
     #[test]

@@ -1,0 +1,763 @@
+//! SIMD lane-group batch stemming (PR 6) — the paper's pipeline stages
+//! laid out as vector lanes instead of clock stages.
+//!
+//! The pipelined FPGA processor owes its throughput to evaluating every
+//! candidate stream of *one* word per cycle while the next word enters
+//! the fetch stage. The software analog inverts that: one instruction
+//! evaluates the *same* pipeline step for [`LANES`] words at once. Per
+//! group of 8 packed words the kernel extracts a small structure-of-
+//! arrays register file ([`LaneGroup`]) and then, for each cut position
+//! `p ∈ 0..=MAX_PREFIX`:
+//!
+//! * **Affix classification** is a vertical bit-plane test: the 37-bit
+//!   [`chars::CLASS_INFIX_BITS`] plane is split into two 32-bit halves
+//!   ([`chars::plane_halves`]) and each lane's digit selects its bit via
+//!   variable shifts (`vpsrlvd` on AVX2, `ushl` with negated counts on
+//!   NEON) — the comparator banks of the paper's Figs 6–7 as one vector
+//!   op.
+//! * **Dictionary keys** accumulate as vector multiply-add over the SoA
+//!   digit rows (base-37, the same key function as
+//!   [`crate::roots::RootBitmap::key_packed`]); AVX2 probes the bitset
+//!   through a u32-view gather, NEON extracts lanes and probes the
+//!   cache-resident bitsets scalarly (aarch64 has no gather).
+//! * **Priority resolution** is a running vector min: every hit folds
+//!   `rank·16 + p` into `best` (rank: tri 0, quad 1, rm-infix-tri 2,
+//!   rm-infix-bi 3, restored 4; [`NONE_SENTINEL`] = 0x7F when no stream
+//!   hits). Because `p ≤ MAX_PREFIX < 16`, the min is exactly the
+//!   kind-major / smallest-cut-first priority of the scalar kernel:
+//!   each stream's first hit is its smallest `p`, and the trilateral
+//!   short-circuit is subsumed by rank 0 outranking everything.
+//!
+//! Only the winning `(rank, p)` is decoded back to a [`StemResult`]
+//! ([`materialize`]), reading the root characters straight off the
+//! packed nibbles exactly like `Stemmer::stem_packed`.
+//!
+//! ## Detect / dispatch contract
+//!
+//! [`active`] resolves the path once per process: the `AMA_SIMD` env var
+//! (`auto` | `off` | `scalar` | `avx2` | `neon`) overrides runtime
+//! feature detection (`is_x86_feature_detected!("avx2")` on x86_64;
+//! NEON is baseline on aarch64). `off` disables dispatch entirely —
+//! `Stemmer::stem_batch_packed` then runs the pinned scalar kernel —
+//! while `scalar` forces the *portable* lane-group kernel (same math,
+//! plain arrays, auto-vectorizable). Forcing an unavailable path falls
+//! back to the portable kernel. Batches narrower than
+//! [`MIN_SIMD_BATCH`] never dispatch; remainder lanes (`len % LANES`)
+//! always go through `Stemmer::stem_packed`, so every path is
+//! bit-identical to `stem_batch_packed_scalar` (the proptests force
+//! each available path explicitly).
+
+use crate::chars::{self, PackedWord, MAX_PREFIX};
+use crate::roots::DenseDicts;
+use crate::stemmer::{MatchKind, StemResult, Stemmer};
+use std::sync::OnceLock;
+
+/// Words per lane group — one AVX2 register of i32 lanes (NEON runs the
+/// same group as two 4-lane halves).
+pub const LANES: usize = 8;
+
+/// Smallest batch worth dispatching to the lane kernel: below two full
+/// groups the extract/decode overhead beats the lane win.
+pub const MIN_SIMD_BATCH: usize = 2 * LANES;
+
+/// Highest digit row a key can touch: `p + 3` with `p ≤ MAX_PREFIX`.
+const KEY_DIGITS: usize = MAX_PREFIX + 4;
+
+/// Lane value when no candidate stream hit (must exceed every real
+/// `rank·16 + p`; the max is `4·16 + 5 = 69`).
+const NONE_SENTINEL: i32 = 0x7F;
+
+const RANK_TRI: i32 = 0;
+const RANK_QUAD: i32 = 1;
+const RANK_RM3: i32 = 2;
+const RANK_RM2: i32 = 3;
+const RANK_RS3: i32 = 4;
+
+const A_I32: i32 = chars::ALPHABET_SIZE as i32;
+const IDX_ALEF_I32: i32 = chars::char_index(chars::ALEF) as i32;
+const IDX_WAW_I32: i32 = chars::char_index(chars::WAW) as i32;
+
+/// Packed priority value of a hit: kind-major, then smallest cut.
+#[inline]
+const fn value(rank: i32, p: usize) -> i32 {
+    (rank << 4) | p as i32
+}
+
+/// A vectorizable execution path for the lane-group kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    /// Portable lane-group kernel over plain arrays (every host).
+    Scalar,
+    /// AVX2 intrinsics (x86_64 with runtime-detected `avx2`).
+    Avx2,
+    /// NEON intrinsics (baseline on aarch64).
+    Neon,
+}
+
+impl SimdPath {
+    /// Short label for bench/selftest output.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+        }
+    }
+
+    /// Can this path actually run on the current host?
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdPath::Scalar => true,
+            SimdPath::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdPath::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// Every path the current host can execute (always includes `Scalar`) —
+/// what the conformance proptests iterate so one CI host still exercises
+/// its intrinsic path *and* the portable kernel.
+pub fn available_paths() -> Vec<SimdPath> {
+    [SimdPath::Scalar, SimdPath::Avx2, SimdPath::Neon]
+        .into_iter()
+        .filter(|p| p.is_available())
+        .collect()
+}
+
+/// The widest available path on this host.
+pub fn best_available() -> SimdPath {
+    if SimdPath::Avx2.is_available() {
+        SimdPath::Avx2
+    } else if SimdPath::Neon.is_available() {
+        SimdPath::Neon
+    } else {
+        SimdPath::Scalar
+    }
+}
+
+/// Parse an `AMA_SIMD` override against host availability. `None`
+/// disables lane dispatch entirely; forcing an unavailable intrinsic
+/// path degrades to the portable kernel (never silently to `off`).
+fn resolve(env: Option<&str>) -> Option<SimdPath> {
+    let forced = |p: SimdPath| {
+        Some(if p.is_available() { p } else { SimdPath::Scalar })
+    };
+    match env.map(|s| s.trim().to_ascii_lowercase()).as_deref() {
+        Some("off") | Some("0") | Some("none") => None,
+        Some("scalar") => Some(SimdPath::Scalar),
+        Some("avx2") => forced(SimdPath::Avx2),
+        Some("neon") => forced(SimdPath::Neon),
+        // auto / unset / unrecognized: detect.
+        _ => Some(best_available()),
+    }
+}
+
+/// The process-wide dispatch decision (`AMA_SIMD` + feature detection),
+/// resolved once. `None` means dispatch is disabled (`AMA_SIMD=off`).
+pub fn active() -> Option<SimdPath> {
+    static ACTIVE: OnceLock<Option<SimdPath>> = OnceLock::new();
+    *ACTIVE.get_or_init(|| resolve(std::env::var("AMA_SIMD").ok().as_deref()))
+}
+
+/// The SoA register file of one lane group: lengths, affix profiles and
+/// the first [`KEY_DIGITS`] digit rows, transposed so each vector op
+/// reads one contiguous row (the paper's fixed-width register file,
+/// eight words wide).
+struct LaneGroup {
+    n: [i32; LANES],
+    prefix_run: [i32; LANES],
+    suffix_start: [i32; LANES],
+    d: [[i32; LANES]; KEY_DIGITS],
+}
+
+impl LaneGroup {
+    #[inline]
+    fn extract(chunk: &[PackedWord]) -> LaneGroup {
+        debug_assert_eq!(chunk.len(), LANES);
+        let mut g = LaneGroup {
+            n: [0; LANES],
+            prefix_run: [0; LANES],
+            suffix_start: [0; LANES],
+            d: [[0; LANES]; KEY_DIGITS],
+        };
+        for (i, &w) in chunk.iter().enumerate() {
+            let profile = w.profile();
+            g.n[i] = w.len() as i32;
+            g.prefix_run[i] = profile.prefix_run as i32;
+            g.suffix_start[i] = profile.suffix_start as i32;
+            for (j, row) in g.d.iter_mut().enumerate() {
+                row[i] = w.index_at(j) as i32;
+            }
+        }
+        g
+    }
+}
+
+/// Scalar emulation of the vector right shift (`vpsrlvd`/`ushl`): zero
+/// for any count outside `0..32`, including the negative `d - 32` the
+/// plane-half test feeds it.
+#[inline]
+fn srl_or_zero(x: u32, count: i32) -> u32 {
+    if (0..32).contains(&count) {
+        x >> count
+    } else {
+        0
+    }
+}
+
+/// Bit `d` of a class plane split into 32-bit halves — the exact
+/// formula the AVX2/NEON paths evaluate per lane.
+#[inline]
+fn plane_bit(lo: u32, hi: u32, d: i32) -> bool {
+    (srl_or_zero(lo, d) | srl_or_zero(hi, d - 32)) & 1 != 0
+}
+
+/// Portable lane-group kernel: the same masks, keys and min-fold as the
+/// intrinsic paths, over plain `[i32; LANES]` rows (the inner loops are
+/// branch-light and auto-vectorizable). This is also the structure the
+/// python oracle sweep (`scripts/oracle_sweep_pr6.py`) ports literally.
+fn group_best_portable(g: &LaneGroup, dicts: &DenseDicts, infix: bool) -> [i32; LANES] {
+    let (inf_lo, inf_hi) = chars::plane_halves(chars::CLASS_INFIX_BITS);
+    let mut best = [NONE_SENTINEL; LANES];
+    for p in 0..=MAX_PREFIX {
+        let e3 = (p + 3) as i32;
+        let e4 = (p + 4) as i32;
+        let (d0, d1, d2, d3) = (&g.d[p], &g.d[p + 1], &g.d[p + 2], &g.d[p + 3]);
+        for i in 0..LANES {
+            if (p as i32) > g.prefix_run[i] {
+                continue;
+            }
+            let (n, ss) = (g.n[i], g.suffix_start[i]);
+            let ok3 = e3 <= n && n < e3 + 10 && ss <= e3;
+            let ok4 = e4 <= n && n < e4 + 10 && ss <= e4;
+            let key3 = (d0[i] * A_I32 + d1[i]) * A_I32 + d2[i];
+            if ok3 && dicts.tri.contains_key(key3 as usize) {
+                best[i] = best[i].min(value(RANK_TRI, p));
+            }
+            if ok4 && dicts.quad.contains_key((key3 * A_I32 + d3[i]) as usize) {
+                best[i] = best[i].min(value(RANK_QUAD, p));
+            }
+            if infix {
+                let second_infix = plane_bit(inf_lo, inf_hi, d1[i]);
+                let skip = d0[i] * A_I32 + d2[i];
+                if ok4
+                    && second_infix
+                    && dicts.tri.contains_key((skip * A_I32 + d3[i]) as usize)
+                {
+                    best[i] = best[i].min(value(RANK_RM3, p));
+                }
+                if ok3 && second_infix && dicts.bi.contains_key(skip as usize) {
+                    best[i] = best[i].min(value(RANK_RM2, p));
+                }
+                if ok3
+                    && d1[i] == IDX_ALEF_I32
+                    && dicts
+                        .tri
+                        .contains_key(((d0[i] * A_I32 + IDX_WAW_I32) * A_I32 + d2[i]) as usize)
+                {
+                    best[i] = best[i].min(value(RANK_RS3, p));
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Decode one lane's winning `(rank, cut)` back to a [`StemResult`],
+/// reading root characters off the packed nibbles — mirrors the
+/// materialization arms of `Stemmer::stem_packed` exactly.
+fn materialize(w: PackedWord, best: i32) -> StemResult {
+    if best >= NONE_SENTINEL {
+        return StemResult::NONE;
+    }
+    let p = (best & 15) as usize;
+    let cut = p as u8;
+    let c = |i: usize| chars::index_char(w.index_at(i));
+    match best >> 4 {
+        RANK_TRI => StemResult {
+            root: [c(p), c(p + 1), c(p + 2), 0],
+            kind: MatchKind::Tri,
+            cut,
+        },
+        RANK_QUAD => StemResult {
+            root: [c(p), c(p + 1), c(p + 2), c(p + 3)],
+            kind: MatchKind::Quad,
+            cut,
+        },
+        RANK_RM3 => StemResult {
+            root: [c(p), c(p + 2), c(p + 3), 0],
+            kind: MatchKind::RmInfixTri,
+            cut,
+        },
+        RANK_RM2 => StemResult {
+            root: [c(p), c(p + 2), 0, 0],
+            kind: MatchKind::RmInfixBi,
+            cut,
+        },
+        _ => StemResult {
+            root: [c(p), chars::WAW, c(p + 2), 0],
+            kind: MatchKind::Restored,
+            cut,
+        },
+    }
+}
+
+/// Stem a packed batch through the lane-group kernel on an explicit
+/// path (tests force each available path; production callers go through
+/// [`active`] via `Stemmer::stem_batch_packed`). An unavailable path
+/// degrades to the portable kernel. Remainder lanes (`len % LANES`) run
+/// the pinned scalar kernel, so the result is bit-identical to
+/// `Stemmer::stem_batch_packed_scalar` on every path.
+pub fn stem_batch_simd_with(
+    stemmer: &Stemmer,
+    words: &[PackedWord],
+    path: SimdPath,
+) -> Vec<StemResult> {
+    let path = if path.is_available() { path } else { SimdPath::Scalar };
+    let dicts = &stemmer.roots().dense;
+    let infix = stemmer.config().infix_processing;
+    let mut out = Vec::with_capacity(words.len());
+    let mut groups = words.chunks_exact(LANES);
+    for chunk in &mut groups {
+        let g = LaneGroup::extract(chunk);
+        let best = match path {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `path.is_available()` verified avx2 above.
+            SimdPath::Avx2 => unsafe { avx2::group_best(&g, dicts, infix) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            SimdPath::Neon => unsafe { neon::group_best(&g, dicts, infix) },
+            _ => group_best_portable(&g, dicts, infix),
+        };
+        for (i, &b) in best.iter().enumerate() {
+            out.push(materialize(chunk[i], b));
+        }
+    }
+    for &w in groups.remainder() {
+        out.push(stemmer.stem_packed(w));
+    }
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{
+        value, LaneGroup, A_I32, IDX_ALEF_I32, IDX_WAW_I32, KEY_DIGITS, LANES, NONE_SENTINEL,
+        RANK_QUAD, RANK_RM2, RANK_RM3, RANK_RS3, RANK_TRI,
+    };
+    use crate::chars;
+    use crate::roots::{DenseDicts, RootBitmap};
+    use core::arch::x86_64::*;
+
+    /// Little-endian u32 gather view of a bitset: bit `key` lives in u32
+    /// word `key >> 5` at bit `key & 31` (a `u64` word is its lo u32
+    /// followed by its hi u32). Returns the base pointer and the largest
+    /// valid u32 index, used to clamp gathers: every digit a public
+    /// `PackedWord` constructor can produce is ≤ 36, so real keys are
+    /// always in range — the clamp only keeps a hand-rolled out-of-range
+    /// register from turning the scalar kernel's panic into UB.
+    fn view(bm: &RootBitmap) -> (*const i32, i32) {
+        let words = bm.bit_words();
+        (words.as_ptr() as *const i32, (words.len() * 2 - 1) as i32)
+    }
+
+    /// `x·a + y` per lane.
+    #[target_feature(enable = "avx2")]
+    unsafe fn mad(x: __m256i, a: __m256i, y: __m256i) -> __m256i {
+        _mm256_add_epi32(_mm256_mullo_epi32(x, a), y)
+    }
+
+    /// Window validity for end position `e`: `e ≤ n ∧ n − e ≤ 9 ∧
+    /// suffix_start ≤ e ∧ p ≤ prefix_run` (as all-ones lane masks).
+    #[target_feature(enable = "avx2")]
+    unsafe fn window_ok(n: __m256i, ss: __m256i, okp: __m256i, e: i32) -> __m256i {
+        let fits = _mm256_cmpgt_epi32(n, _mm256_set1_epi32(e - 1));
+        let tail = _mm256_cmpgt_epi32(_mm256_set1_epi32(e + 10), n);
+        let suff = _mm256_cmpgt_epi32(_mm256_set1_epi32(e + 1), ss);
+        _mm256_and_si256(_mm256_and_si256(fits, tail), _mm256_and_si256(suff, okp))
+    }
+
+    /// Per-lane class-plane bit: `((lo ≫ d) | (hi ≫ (d − 32))) & 1` —
+    /// `vpsrlvd` yields 0 for any count outside 0..32 (the negative
+    /// `d − 32` case reads as a huge unsigned count), so the two halves
+    /// combine without a select.
+    #[target_feature(enable = "avx2")]
+    unsafe fn plane_mask(lo: __m256i, hi: __m256i, d: __m256i) -> __m256i {
+        let lo_s = _mm256_srlv_epi32(lo, d);
+        let hi_s = _mm256_srlv_epi32(hi, _mm256_sub_epi32(d, _mm256_set1_epi32(32)));
+        let bit = _mm256_and_si256(_mm256_or_si256(lo_s, hi_s), _mm256_set1_epi32(1));
+        _mm256_cmpeq_epi32(bit, _mm256_set1_epi32(1))
+    }
+
+    /// Gather the bitset word of each lane's key and test its bit.
+    #[target_feature(enable = "avx2")]
+    unsafe fn probe(ptr: *const i32, max_word: __m256i, key: __m256i) -> __m256i {
+        let widx = _mm256_min_epi32(_mm256_srli_epi32::<5>(key), max_word);
+        let word = _mm256_i32gather_epi32::<4>(ptr, widx);
+        let bit = _mm256_srlv_epi32(word, _mm256_and_si256(key, _mm256_set1_epi32(31)));
+        _mm256_cmpeq_epi32(_mm256_and_si256(bit, _mm256_set1_epi32(1)), _mm256_set1_epi32(1))
+    }
+
+    /// Fold a hit stream into the running priority min.
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold(best: __m256i, ok: __m256i, hit: __m256i, val: i32) -> __m256i {
+        let mask = _mm256_and_si256(ok, hit);
+        let cand = _mm256_blendv_epi8(
+            _mm256_set1_epi32(NONE_SENTINEL),
+            _mm256_set1_epi32(val),
+            mask,
+        );
+        _mm256_min_epi32(best, cand)
+    }
+
+    /// The AVX2 lane-group kernel: all five candidate streams of eight
+    /// words per pass over the cut positions.
+    ///
+    /// # Safety
+    /// Requires `avx2` (checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn group_best(
+        g: &LaneGroup,
+        dicts: &DenseDicts,
+        infix: bool,
+    ) -> [i32; LANES] {
+        let (tri_ptr, tri_last) = view(&dicts.tri);
+        let (quad_ptr, quad_last) = view(&dicts.quad);
+        let (bi_ptr, bi_last) = view(&dicts.bi);
+        let tri_last = _mm256_set1_epi32(tri_last);
+        let quad_last = _mm256_set1_epi32(quad_last);
+        let bi_last = _mm256_set1_epi32(bi_last);
+
+        let n = _mm256_loadu_si256(g.n.as_ptr() as *const __m256i);
+        let pr = _mm256_loadu_si256(g.prefix_run.as_ptr() as *const __m256i);
+        let ss = _mm256_loadu_si256(g.suffix_start.as_ptr() as *const __m256i);
+        let mut d = [_mm256_setzero_si256(); KEY_DIGITS];
+        for (j, row) in g.d.iter().enumerate() {
+            d[j] = _mm256_loadu_si256(row.as_ptr() as *const __m256i);
+        }
+        let a37 = _mm256_set1_epi32(A_I32);
+        let (inf_lo, inf_hi) = chars::plane_halves(chars::CLASS_INFIX_BITS);
+        let inf_lo = _mm256_set1_epi32(inf_lo as i32);
+        let inf_hi = _mm256_set1_epi32(inf_hi as i32);
+        let mut best = _mm256_set1_epi32(NONE_SENTINEL);
+
+        for p in 0..=chars::MAX_PREFIX {
+            let pv = p as i32;
+            // p ≤ prefix_run ⇔ prefix_run > p − 1
+            let okp = _mm256_cmpgt_epi32(pr, _mm256_set1_epi32(pv - 1));
+            let ok3 = window_ok(n, ss, okp, pv + 3);
+            let ok4 = window_ok(n, ss, okp, pv + 4);
+            let key3 = mad(mad(d[p], a37, d[p + 1]), a37, d[p + 2]);
+            best = fold(best, ok3, probe(tri_ptr, tri_last, key3), value(RANK_TRI, p));
+            let key4 = mad(key3, a37, d[p + 3]);
+            best = fold(best, ok4, probe(quad_ptr, quad_last, key4), value(RANK_QUAD, p));
+            if infix {
+                let second_infix = plane_mask(inf_lo, inf_hi, d[p + 1]);
+                let skip = mad(d[p], a37, d[p + 2]);
+                let rm3 = mad(skip, a37, d[p + 3]);
+                best = fold(
+                    best,
+                    _mm256_and_si256(ok4, second_infix),
+                    probe(tri_ptr, tri_last, rm3),
+                    value(RANK_RM3, p),
+                );
+                best = fold(
+                    best,
+                    _mm256_and_si256(ok3, second_infix),
+                    probe(bi_ptr, bi_last, skip),
+                    value(RANK_RM2, p),
+                );
+                let alef = _mm256_cmpeq_epi32(d[p + 1], _mm256_set1_epi32(IDX_ALEF_I32));
+                let rs = mad(mad(d[p], a37, _mm256_set1_epi32(IDX_WAW_I32)), a37, d[p + 2]);
+                best = fold(
+                    best,
+                    _mm256_and_si256(ok3, alef),
+                    probe(tri_ptr, tri_last, rs),
+                    value(RANK_RS3, p),
+                );
+            }
+        }
+        let mut out = [0i32; LANES];
+        _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, best);
+        out
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{
+        value, LaneGroup, A_I32, IDX_ALEF_I32, IDX_WAW_I32, KEY_DIGITS, LANES, NONE_SENTINEL,
+        RANK_QUAD, RANK_RM2, RANK_RM3, RANK_RS3, RANK_TRI,
+    };
+    use crate::chars;
+    use crate::roots::{DenseDicts, RootBitmap};
+    use core::arch::aarch64::*;
+
+    /// Window validity for end position `e` (all-ones lane masks).
+    unsafe fn window_ok(n: int32x4_t, ss: int32x4_t, okp: uint32x4_t, e: i32) -> uint32x4_t {
+        let ev = vdupq_n_s32(e);
+        let fits = vcgeq_s32(n, ev);
+        let tail = vcleq_s32(n, vdupq_n_s32(e + 9));
+        let suff = vcleq_s32(ss, ev);
+        vandq_u32(vandq_u32(fits, tail), vandq_u32(suff, okp))
+    }
+
+    /// Per-lane class-plane bit — `ushl` with a negative count is a
+    /// right shift and yields 0 once |count| ≥ 32, so the two 32-bit
+    /// plane halves combine exactly like the AVX2 `vpsrlvd` form.
+    unsafe fn plane_mask(lo: uint32x4_t, hi: uint32x4_t, d: int32x4_t) -> uint32x4_t {
+        let lo_s = vshlq_u32(lo, vnegq_s32(d));
+        let hi_s = vshlq_u32(hi, vsubq_s32(vdupq_n_s32(32), d));
+        let bit = vandq_u32(vorrq_u32(lo_s, hi_s), vdupq_n_u32(1));
+        vceqq_u32(bit, vdupq_n_u32(1))
+    }
+
+    /// Probe one candidate stream of a 4-lane half and fold hits into
+    /// the running min. aarch64 has no gather, so masks and keys come
+    /// out of the vector registers and the bitset probes stay scalar —
+    /// the bitsets are cache-resident, the win is the vectorized mask
+    /// and key arithmetic feeding them.
+    unsafe fn fold_half(
+        best: &mut [i32],
+        ok: uint32x4_t,
+        key: int32x4_t,
+        dict: &RootBitmap,
+        val: i32,
+    ) {
+        let mut m = [0u32; 4];
+        let mut k = [0i32; 4];
+        vst1q_u32(m.as_mut_ptr(), ok);
+        vst1q_s32(k.as_mut_ptr(), key);
+        for lane in 0..4 {
+            if m[lane] != 0 && dict.contains_key(k[lane] as usize) {
+                best[lane] = best[lane].min(val);
+            }
+        }
+    }
+
+    /// The NEON lane-group kernel: the eight-lane group as two
+    /// `int32x4_t` halves.
+    ///
+    /// # Safety
+    /// NEON is part of the aarch64 baseline; callers stay behind the
+    /// dispatcher for symmetry with the AVX2 path.
+    pub(super) unsafe fn group_best(
+        g: &LaneGroup,
+        dicts: &DenseDicts,
+        infix: bool,
+    ) -> [i32; LANES] {
+        let mut best = [NONE_SENTINEL; LANES];
+        let (inf_lo, inf_hi) = chars::plane_halves(chars::CLASS_INFIX_BITS);
+        let inf_lo = vdupq_n_u32(inf_lo);
+        let inf_hi = vdupq_n_u32(inf_hi);
+        let a37 = vdupq_n_s32(A_I32);
+        for half in 0..LANES / 4 {
+            let off = half * 4;
+            let n = vld1q_s32(g.n[off..].as_ptr());
+            let pr = vld1q_s32(g.prefix_run[off..].as_ptr());
+            let ss = vld1q_s32(g.suffix_start[off..].as_ptr());
+            let mut d = [vdupq_n_s32(0); KEY_DIGITS];
+            for (j, row) in g.d.iter().enumerate() {
+                d[j] = vld1q_s32(row[off..].as_ptr());
+            }
+            for p in 0..=chars::MAX_PREFIX {
+                let pv = p as i32;
+                let okp = vcgeq_s32(pr, vdupq_n_s32(pv));
+                let ok3 = window_ok(n, ss, okp, pv + 3);
+                let ok4 = window_ok(n, ss, okp, pv + 4);
+                // vmlaq_s32(y, x, a) = y + x·a — base-37 multiply-add.
+                let key3 = vmlaq_s32(d[p + 2], vmlaq_s32(d[p + 1], d[p], a37), a37);
+                fold_half(&mut best[off..], ok3, key3, &dicts.tri, value(RANK_TRI, p));
+                let key4 = vmlaq_s32(d[p + 3], key3, a37);
+                fold_half(&mut best[off..], ok4, key4, &dicts.quad, value(RANK_QUAD, p));
+                if infix {
+                    let second_infix = plane_mask(inf_lo, inf_hi, d[p + 1]);
+                    let skip = vmlaq_s32(d[p + 2], d[p], a37);
+                    let rm3 = vmlaq_s32(d[p + 3], skip, a37);
+                    fold_half(
+                        &mut best[off..],
+                        vandq_u32(ok4, second_infix),
+                        rm3,
+                        &dicts.tri,
+                        value(RANK_RM3, p),
+                    );
+                    fold_half(
+                        &mut best[off..],
+                        vandq_u32(ok3, second_infix),
+                        skip,
+                        &dicts.bi,
+                        value(RANK_RM2, p),
+                    );
+                    let alef = vceqq_s32(d[p + 1], vdupq_n_s32(IDX_ALEF_I32));
+                    let rs = vmlaq_s32(
+                        d[p + 2],
+                        vmlaq_s32(vdupq_n_s32(IDX_WAW_I32), d[p], a37),
+                        a37,
+                    );
+                    fold_half(
+                        &mut best[off..],
+                        vandq_u32(ok3, alef),
+                        rs,
+                        &dicts.tri,
+                        value(RANK_RS3, p),
+                    );
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chars::{ArabicWord, MAX_WORD};
+    use crate::rng::SplitMix64;
+    use crate::roots::RootSet;
+    use crate::stemmer::StemmerConfig;
+    use std::sync::Arc;
+
+    fn random_word(rng: &mut SplitMix64) -> ArabicWord {
+        let n = rng.index(MAX_WORD + 1);
+        let codes: Vec<u16> =
+            (0..n).map(|_| chars::index_char(1 + rng.below(36) as u8)).collect();
+        ArabicWord::from_codes(&codes)
+    }
+
+    #[test]
+    fn sentinel_exceeds_every_real_value() {
+        assert!(value(RANK_RS3, MAX_PREFIX) < NONE_SENTINEL);
+        assert_eq!(value(RANK_TRI, 0), 0);
+        assert_eq!(value(RANK_QUAD, 5), 21);
+    }
+
+    #[test]
+    fn env_override_parsing() {
+        assert_eq!(resolve(Some("off")), None);
+        assert_eq!(resolve(Some("0")), None);
+        assert_eq!(resolve(Some(" OFF ")), None);
+        assert_eq!(resolve(Some("scalar")), Some(SimdPath::Scalar));
+        assert_eq!(resolve(Some("auto")), Some(best_available()));
+        assert_eq!(resolve(None), Some(best_available()));
+        assert_eq!(resolve(Some("bogus")), Some(best_available()));
+        // Forcing a path yields that path when available, else the
+        // portable kernel — never `off`.
+        for (name, path) in [("avx2", SimdPath::Avx2), ("neon", SimdPath::Neon)] {
+            let got = resolve(Some(name)).unwrap();
+            if path.is_available() {
+                assert_eq!(got, path);
+            } else {
+                assert_eq!(got, SimdPath::Scalar);
+            }
+        }
+        assert!(SimdPath::Scalar.is_available());
+        assert!(available_paths().contains(&SimdPath::Scalar));
+        assert!(available_paths().contains(&best_available()));
+    }
+
+    #[test]
+    fn scalar_plane_bit_matches_u64_plane() {
+        for plane in [
+            chars::CLASS_PREFIX_BITS,
+            chars::CLASS_SUFFIX_BITS,
+            chars::CLASS_INFIX_BITS,
+        ] {
+            let (lo, hi) = chars::plane_halves(plane);
+            for d in 0..64i32 {
+                assert_eq!(
+                    plane_bit(lo, hi, d),
+                    (plane >> d) & 1 != 0,
+                    "plane {plane:#x} digit {d}"
+                );
+            }
+        }
+    }
+
+    /// Every available path is bit-identical to the pinned scalar packed
+    /// kernel across batch widths covering empty, sub-group, exact-group
+    /// and remainder-lane shapes, in both infix configs.
+    #[test]
+    fn every_path_matches_scalar_kernel_all_widths() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let mut rng = SplitMix64::new(0x0917_6001);
+        for infix in [true, false] {
+            let s = Stemmer::new(roots.clone(), StemmerConfig { infix_processing: infix });
+            for width in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 24, 33] {
+                let words: Vec<PackedWord> = (0..width)
+                    .map(|_| PackedWord::pack(&random_word(&mut rng)))
+                    .collect();
+                let expected = s.stem_batch_packed_scalar(&words);
+                for path in available_paths() {
+                    assert_eq!(
+                        stem_batch_simd_with(&s, &words, path),
+                        expected,
+                        "path {path:?} width {width} infix {infix}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Lanes holding canonicalized non-Arabic words (all digit-0) and
+    /// empty words stem to NONE through every path, mixed into groups
+    /// with real words.
+    #[test]
+    fn non_arabic_and_empty_lanes() {
+        let s = Stemmer::with_defaults(Arc::new(RootSet::builtin_mini()));
+        let mut words = vec![
+            PackedWord::encode("hello"),
+            PackedWord::EMPTY,
+            PackedWord::encode("سيلعبون"),
+            PackedWord::encode("xyzxyzxyz"),
+            PackedWord::encode("قال"),
+            PackedWord::encode(""),
+            PackedWord::encode("فتزحزحت"),
+            PackedWord::encode("كاتب"),
+        ];
+        // one full group + remainder lanes
+        words.push(PackedWord::encode("ماد"));
+        words.push(PackedWord::encode("hello"));
+        let expected = s.stem_batch_packed_scalar(&words);
+        assert_eq!(expected[0], StemResult::NONE);
+        assert_eq!(expected[1], StemResult::NONE);
+        assert_eq!(expected[2].kind, MatchKind::Tri);
+        for path in available_paths() {
+            assert_eq!(stem_batch_simd_with(&s, &words, path), expected, "path {path:?}");
+        }
+        // an all-non-Arabic batch
+        let blank: Vec<PackedWord> =
+            (0..LANES * 2).map(|_| PackedWord::encode("latin")).collect();
+        for path in available_paths() {
+            assert!(stem_batch_simd_with(&s, &blank, path)
+                .iter()
+                .all(|r| *r == StemResult::NONE));
+        }
+    }
+
+    /// An unavailable forced path degrades to the portable kernel
+    /// instead of executing intrinsics the host lacks.
+    #[test]
+    fn unavailable_path_degrades_to_portable() {
+        let s = Stemmer::with_defaults(Arc::new(RootSet::builtin_mini()));
+        let words: Vec<PackedWord> = ["درس", "قال", "كاتب"]
+            .iter()
+            .cycle()
+            .take(20)
+            .map(|w| PackedWord::encode(w))
+            .collect();
+        let expected = s.stem_batch_packed_scalar(&words);
+        for path in [SimdPath::Avx2, SimdPath::Neon] {
+            // Available or not, the result must be identical.
+            assert_eq!(stem_batch_simd_with(&s, &words, path), expected);
+        }
+    }
+}

@@ -32,6 +32,14 @@
 //! keys accumulated from the packed nibbles. The array kernel is retained
 //! as the packed kernel's benchmark baseline, exactly as `stem_reference`
 //! is the array kernel's.
+//!
+//! PR 6 adds the lane dimension: [`Stemmer::stem_batch_packed`] is now a
+//! *dispatcher* — wide batches go through the [`crate::simd`] lane-group
+//! kernel ([`Stemmer::stem_batch_simd`]) when a path is active, narrow
+//! batches and the `AMA_SIMD=off` escape hatch run
+//! [`Stemmer::stem_batch_packed_scalar`], the pinned per-word kernel
+//! retained as the SIMD baseline (the same baseline role `stem` plays
+//! for `stem_packed`).
 
 use crate::chars::{self, AffixProfile, ArabicWord, PackedWord, MAX_PREFIX, MAX_SUFFIX, MAX_WORD};
 use crate::exec::{BoundedQueue, WorkerPool};
@@ -161,6 +169,17 @@ const A: usize = chars::ALPHABET_SIZE;
 
 /// Sentinel for "stream found no cut".
 const NO_CUT: usize = usize::MAX;
+
+/// Chunk width of the parallel batch kernel: every worker gets ~4 chunks
+/// for load balance, never below the amortization floor, and always a
+/// multiple of [`crate::simd::LANES`] so the parallel fan-out never
+/// strands remainder-lane (scalar-path) work on interior chunk
+/// boundaries — only the final chunk of the whole batch may be ragged.
+pub(crate) fn parallel_chunk_size(len: usize, workers: usize) -> usize {
+    len.div_ceil(workers * 4)
+        .max(MIN_PARALLEL_CHUNK)
+        .next_multiple_of(crate::simd::LANES)
+}
 
 /// The linguistic-based stemmer.
 pub struct Stemmer {
@@ -473,8 +492,42 @@ impl Stemmer {
     /// index rows, lengths, or profile side arrays to build. This is the
     /// form the coordinator's request queue and the server's line ingest
     /// feed directly.
+    ///
+    /// Since PR 6 this is the dispatch point: batches of at least
+    /// [`simd::MIN_SIMD_BATCH`] words run the [`crate::simd`] lane-group
+    /// kernel on the [`simd::active`] path (AVX2 / NEON / portable);
+    /// narrow batches — and every batch under `AMA_SIMD=off` — run the
+    /// pinned scalar kernel. Both are bit-identical (proptest-pinned),
+    /// so callers ([`crate::analysis`], the coordinator, serving) see
+    /// only the throughput change.
+    ///
+    /// [`simd::MIN_SIMD_BATCH`]: crate::simd::MIN_SIMD_BATCH
+    /// [`simd::active`]: crate::simd::active
     pub fn stem_batch_packed(&self, words: &[PackedWord]) -> Vec<StemResult> {
+        if words.len() >= crate::simd::MIN_SIMD_BATCH {
+            if let Some(path) = crate::simd::active() {
+                return crate::simd::stem_batch_simd_with(self, words, path);
+            }
+        }
+        self.stem_batch_packed_scalar(words)
+    }
+
+    /// The per-word packed batch kernel, pinned as the lane kernel's
+    /// byte-identical baseline (benchmarked as
+    /// `software/stem_batch_packed`; the conformance tests and the
+    /// python oracle sweep compare every SIMD path against it).
+    pub fn stem_batch_packed_scalar(&self, words: &[PackedWord]) -> Vec<StemResult> {
         words.iter().map(|&w| self.stem_packed_profiled(w, w.profile())).collect()
+    }
+
+    /// The lane-group batch kernel (PR 6), unconditionally — on the
+    /// process-wide [`crate::simd::active`] path, or the best available
+    /// path when dispatch is disabled. This is the `software/
+    /// stem_batch_simd` bench row; production callers should prefer
+    /// [`Self::stem_batch_packed`], which also handles narrow batches.
+    pub fn stem_batch_simd(&self, words: &[PackedWord]) -> Vec<StemResult> {
+        let path = crate::simd::active().unwrap_or_else(crate::simd::best_available);
+        crate::simd::stem_batch_simd_with(self, words, path)
     }
 
     /// The original scalar implementation — per-candidate rescans and
@@ -549,7 +602,18 @@ impl Stemmer {
 
     /// Stem a batch through the SoA kernel: encode once into contiguous
     /// index/length/profile buffers, then run the fused kernel per row.
+    ///
+    /// Wide batches pack into `u128` registers and dispatch to the
+    /// lane-group kernel instead (PR 6) — semantics-preserving because
+    /// `stem_packed(pack(w)) == stem(w)` for every word (proptest-pinned
+    /// since PR 4) and the lane kernel equals `stem_packed` lane-wise.
     pub fn stem_batch(&self, words: &[ArabicWord]) -> Vec<StemResult> {
+        if words.len() >= crate::simd::MIN_SIMD_BATCH {
+            if let Some(path) = crate::simd::active() {
+                let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+                return crate::simd::stem_batch_simd_with(self, &packed, path);
+            }
+        }
         let batch = SoaBatch::encode(words);
         words
             .iter()
@@ -570,9 +634,7 @@ impl Stemmer {
         if workers <= 1 || words.len() < 2 * MIN_PARALLEL_CHUNK {
             return self.stem_batch(words);
         }
-        // Adaptive chunk: every worker gets ~4 chunks for load balance,
-        // but never below the amortization floor.
-        let chunk = words.len().div_ceil(workers * 4).max(MIN_PARALLEL_CHUNK);
+        let chunk = parallel_chunk_size(words.len(), workers);
         let n_chunks = words.len().div_ceil(chunk);
         let shared: Arc<Vec<ArabicWord>> = Arc::new(words.to_vec());
         let cursor = Arc::new(AtomicUsize::new(0));
@@ -870,6 +932,52 @@ mod tests {
         assert!(s.stem_batch(&[]).is_empty());
         assert!(s.stem_batch_parallel(&[], 4).is_empty());
         assert_eq!(s.stem_batch_parallel(&words[..3], 4), &scalar[..3]);
+    }
+
+    /// Parallel chunk widths land on SIMD lane multiples (satellite of
+    /// PR 6) without dropping below the amortization floor.
+    #[test]
+    fn parallel_chunks_are_lane_multiples() {
+        for len in [512usize, 1000, 4097, 10_000, 65_536, 1_000_001] {
+            for workers in [2usize, 3, 4, 7, 8, 16] {
+                let chunk = parallel_chunk_size(len, workers);
+                assert_eq!(chunk % crate::simd::LANES, 0, "len {len} workers {workers}");
+                assert!(chunk >= MIN_PARALLEL_CHUNK);
+                // still wide enough to cover the batch with the claimed
+                // number of chunks
+                assert!(chunk * len.div_ceil(chunk) >= len);
+            }
+        }
+        // the floor itself is already a lane multiple
+        assert_eq!(MIN_PARALLEL_CHUNK % crate::simd::LANES, 0);
+    }
+
+    /// The dispatching packed batch, the explicit SIMD batch, and the
+    /// pinned scalar batch agree word-for-word across the dispatch
+    /// threshold in both infix configs.
+    #[test]
+    fn simd_dispatch_agrees_with_scalar_baseline() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let mut rng = SplitMix64::new(0x51D0);
+        for infix in [true, false] {
+            let s = Stemmer::new(roots.clone(), StemmerConfig { infix_processing: infix });
+            for width in [0usize, 5, crate::simd::MIN_SIMD_BATCH - 1, 64, 333] {
+                let words: Vec<ArabicWord> = (0..width)
+                    .map(|_| {
+                        let n = rng.index(MAX_WORD + 1);
+                        let codes: Vec<u16> = (0..n)
+                            .map(|_| chars::index_char(1 + rng.below(36) as u8))
+                            .collect();
+                        ArabicWord::from_codes(&codes)
+                    })
+                    .collect();
+                let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+                let baseline = s.stem_batch_packed_scalar(&packed);
+                assert_eq!(s.stem_batch_packed(&packed), baseline, "width {width}");
+                assert_eq!(s.stem_batch_simd(&packed), baseline, "width {width}");
+                assert_eq!(s.stem_batch(&words), baseline, "width {width}");
+            }
+        }
     }
 
     #[test]

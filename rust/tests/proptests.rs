@@ -244,6 +244,85 @@ fn prop_packed_kernel_matches_stem_and_reference() {
     }
 }
 
+/// PR 6 acceptance property: the lane-parallel SIMD kernel is
+/// bit-identical to the pinned scalar packed kernel and the scalar
+/// reference — root, kind, and cut — over 10k inflected corpus words in
+/// both infix configs. Every compiled-in path is forced explicitly
+/// (portable scalar always; AVX2/NEON when the host supports them), and
+/// the public dispatchers (`stem_batch_packed`, `stem_batch_simd`,
+/// `stem_batch`) must agree with whatever `AMA_SIMD`/auto-detection
+/// picked. Odd tails exercise the remainder-lane path: 10k % 8 != 0
+/// batches split at every width via sub-slices.
+#[test]
+fn prop_simd_kernel_matches_packed_and_reference() {
+    let r = roots();
+    let with = Stemmer::with_defaults(r.clone());
+    let without = Stemmer::new(r.clone(), StemmerConfig { infix_processing: false });
+    let mut rng = SplitMix64::new(0x0917_0008);
+    let classes =
+        [corpus::FormClass::Direct, corpus::FormClass::Infix, corpus::FormClass::Unstemmable];
+
+    let mut lexicon: Vec<[u16; 4]> = Vec::new();
+    for t in r.tri_rows() {
+        lexicon.push([t[0], t[1], t[2], 0]);
+    }
+    for q in r.quad_rows() {
+        lexicon.push(*q);
+    }
+    for b in r.bi_rows() {
+        lexicon.push([b[0], b[1], 0, 0]);
+    }
+
+    let mut words: Vec<ArabicWord> = Vec::with_capacity(10_000);
+    for _ in 0..10_000 {
+        let gold = *rng.choose(&lexicon);
+        let class = *rng.choose(&classes);
+        words.push(corpus::inflect(&gold, class, &mut rng));
+    }
+    let packed: Vec<PackedWord> = words.iter().map(PackedWord::pack).collect();
+    let paths = ama::simd::available_paths();
+    assert!(
+        paths.contains(&ama::simd::SimdPath::Scalar),
+        "the portable path must always be available"
+    );
+    for (stemmer, label) in [(&with, "with-infix"), (&without, "no-infix")] {
+        let baseline = stemmer.stem_batch_packed_scalar(&packed);
+        for (i, (w, want)) in words.iter().zip(&baseline).enumerate() {
+            assert_eq!(
+                *want,
+                stemmer.stem_reference(w),
+                "case {i} ({label}): scalar kernel != reference for {w:?}"
+            );
+        }
+        for &path in &paths {
+            let got = ama::simd::stem_batch_simd_with(stemmer, &packed, path);
+            assert_eq!(got.len(), baseline.len());
+            for (i, (g, want)) in got.iter().zip(&baseline).enumerate() {
+                assert_eq!(
+                    g, want,
+                    "case {i} ({label}, {}): simd != scalar kernel for {:?}",
+                    path.name(),
+                    words[i]
+                );
+            }
+            // odd widths hit the remainder lanes and the wide/narrow cut
+            for width in [1usize, 7, 15, 16, 17, 63, 100] {
+                let got = ama::simd::stem_batch_simd_with(stemmer, &packed[..width], path);
+                assert_eq!(
+                    got,
+                    baseline[..width],
+                    "width {width} ({label}, {})",
+                    path.name()
+                );
+            }
+        }
+        // the public dispatchers agree regardless of which path is active
+        assert_eq!(stemmer.stem_batch_packed(&packed), baseline, "dispatcher ({label})");
+        assert_eq!(stemmer.stem_batch_simd(&packed), baseline, "simd dispatcher ({label})");
+        assert_eq!(stemmer.stem_batch(&words), baseline, "array dispatcher ({label})");
+    }
+}
+
 /// PR 5 acceptance property: the HLO interpreter executing the emitted
 /// stemmer artifact is bit-identical to both `stem_packed` and the
 /// scalar `stem_reference` — root, kind, and cut — over 10k randomly

@@ -1,0 +1,337 @@
+"""PR 6 verification sweep (no-cargo container): a literal python port of
+the lane-group SIMD kernel (rust/src/simd.rs group_best_portable — the
+exact masks, keys, plane-half tests and rank<<4|p min-fold the AVX2/NEON
+paths evaluate per lane) plus the group-of-8 + scalar-remainder batch
+driver, swept against the executable specification
+python/compile/kernels/ref.py::ref_stem_word in both infix configs.
+"""
+import os
+import random
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "python"))
+from compile import alphabet as ab
+from compile.kernels.ref import ref_stem_word, candidate_valid
+
+LEN_SHIFT = 6 * ab.MAX_WORD            # 90, = chars.rs PACKED_LEN_SHIFT
+CHAR_MASK = (1 << LEN_SHIFT) - 1
+
+# --- class bit planes, exactly as chars.rs builds them from CHAR_CLASS ---
+def plane(letters):
+    bits = 0
+    for c in letters:
+        bits |= 1 << ab.char_index(c)
+    return bits
+
+PREFIX_BITS = plane(ab.PREFIX_LETTERS)
+SUFFIX_BITS = plane(ab.SUFFIX_LETTERS)
+INFIX_BITS = plane(ab.INFIX_LETTERS)
+IDX_ALEF = ab.char_index(ab.ALEF)
+IDX_WAW = ab.char_index(ab.WAW)
+A = ab.ALPHABET_SIZE
+
+# --- PackedWord port (chars.rs) -------------------------------------------
+def pack(codes, n):
+    bits = 0
+    for i in range(n):
+        bits |= ab.char_index(codes[i]) << (6 * i)
+    return bits | (n << LEN_SHIFT)
+
+def p_len(w):
+    return (w >> LEN_SHIFT) & 0xF
+
+def index_at(w, i):
+    return (w >> (6 * i)) & 63
+
+def profile(w):
+    n = p_len(w)
+    max_p = min(ab.MAX_PREFIX, n)
+    prefix_run = 0
+    while prefix_run < max_p and (PREFIX_BITS >> index_at(w, prefix_run)) & 1:
+        prefix_run += 1
+    suffix_start = n
+    while suffix_start > 0 and (SUFFIX_BITS >> index_at(w, suffix_start - 1)) & 1:
+        suffix_start -= 1
+    return prefix_run, suffix_start
+
+# --- direct-addressed bitsets (roots.rs RootBitmap) -----------------------
+def bitset(roots):
+    bm = set()
+    for r in roots:
+        k = 0
+        for c in r:
+            k = k * A + ab.char_index(c)
+        bm.add(k)
+    return bm
+
+def key_packed(w, start, arity):
+    bits = w & CHAR_MASK
+    k = 0
+    for j in range(arity):
+        k = k * A + ((bits >> (6 * (start + j))) & 63)
+    return k
+
+# --- scalar packed kernel port (PR 4) — the remainder-lane path -----------
+NO_CUT = -1
+
+def stem_packed(w, bi, tri, quad, infix):
+    n = p_len(w)
+    prefix_run, suffix_start = profile(w)
+    quad_cut = rm3_cut = rm2_cut = rs3_cut = NO_CUT
+    nib = lambda i: index_at(w, i)
+    for p in range(prefix_run + 1):
+        e3 = p + 3
+        ok3 = e3 <= n and n - e3 <= ab.MAX_SUFFIX and e3 >= suffix_start
+        e4 = p + 4
+        ok4 = e4 <= n and n - e4 <= ab.MAX_SUFFIX and e4 >= suffix_start
+        if ok3:
+            if key_packed(w, p, 3) in tri:
+                root = (ab.index_char(nib(p)), ab.index_char(nib(p + 1)),
+                        ab.index_char(nib(p + 2)), 0)
+                return root, ab.KIND_TRI, p
+        if ok4 and quad_cut == NO_CUT and key_packed(w, p, 4) in quad:
+            quad_cut = p
+        if infix:
+            second = nib(p + 1)
+            second_infix = (INFIX_BITS >> second) & 1
+            if ok4 and rm3_cut == NO_CUT and second_infix:
+                if (nib(p) * A + nib(p + 2)) * A + nib(p + 3) in tri:
+                    rm3_cut = p
+            if ok3 and rm2_cut == NO_CUT and second_infix:
+                if nib(p) * A + nib(p + 2) in bi:
+                    rm2_cut = p
+            if ok3 and rs3_cut == NO_CUT and second == IDX_ALEF:
+                if (nib(p) * A + IDX_WAW) * A + nib(p + 2) in tri:
+                    rs3_cut = p
+    if quad_cut != NO_CUT:
+        p = quad_cut
+        return (ab.index_char(nib(p)), ab.index_char(nib(p + 1)),
+                ab.index_char(nib(p + 2)), ab.index_char(nib(p + 3))), ab.KIND_QUAD, p
+    if rm3_cut != NO_CUT:
+        p = rm3_cut
+        return (ab.index_char(nib(p)), ab.index_char(nib(p + 2)),
+                ab.index_char(nib(p + 3)), 0), ab.KIND_RMINFIX_TRI, p
+    if rm2_cut != NO_CUT:
+        p = rm2_cut
+        return (ab.index_char(nib(p)), ab.index_char(nib(p + 2)), 0, 0), ab.KIND_RMINFIX_BI, p
+    if rs3_cut != NO_CUT:
+        p = rs3_cut
+        return (ab.index_char(nib(p)), ab.WAW, ab.index_char(nib(p + 2)), 0), ab.KIND_RESTORED, p
+    return (0, 0, 0, 0), ab.KIND_NONE, 0
+
+# --- lane-group SIMD kernel port (simd.rs, literal) -----------------------
+LANES = 8
+KEY_DIGITS = ab.MAX_PREFIX + 4
+NONE_SENTINEL = 0x7F
+RANK_TRI, RANK_QUAD, RANK_RM3, RANK_RM2, RANK_RS3 = range(5)
+
+def value(rank, p):
+    return (rank << 4) | p
+
+def plane_halves(bits):
+    return bits & 0xFFFFFFFF, (bits >> 32) & 0xFFFFFFFF
+
+def srl_or_zero(x, count):
+    # vpsrlvd / ushl semantics: zero for any count outside 0..32
+    return x >> count if 0 <= count < 32 else 0
+
+def plane_bit(lo, hi, d):
+    return (srl_or_zero(lo, d) | srl_or_zero(hi, d - 32)) & 1 != 0
+
+def extract(chunk):
+    assert len(chunk) == LANES
+    g = {"n": [], "prefix_run": [], "suffix_start": [],
+         "d": [[0] * LANES for _ in range(KEY_DIGITS)]}
+    for i, w in enumerate(chunk):
+        pr, ss = profile(w)
+        g["n"].append(p_len(w))
+        g["prefix_run"].append(pr)
+        g["suffix_start"].append(ss)
+        for j in range(KEY_DIGITS):
+            g["d"][j][i] = index_at(w, j)
+    return g
+
+def group_best(g, bi, tri, quad, infix):
+    inf_lo, inf_hi = plane_halves(INFIX_BITS)
+    best = [NONE_SENTINEL] * LANES
+    for p in range(ab.MAX_PREFIX + 1):
+        e3 = p + 3
+        e4 = p + 4
+        d0, d1, d2, d3 = g["d"][p], g["d"][p + 1], g["d"][p + 2], g["d"][p + 3]
+        for i in range(LANES):
+            if p > g["prefix_run"][i]:
+                continue
+            n, ss = g["n"][i], g["suffix_start"][i]
+            ok3 = e3 <= n < e3 + 10 and ss <= e3
+            ok4 = e4 <= n < e4 + 10 and ss <= e4
+            key3 = (d0[i] * A + d1[i]) * A + d2[i]
+            if ok3 and key3 in tri:
+                best[i] = min(best[i], value(RANK_TRI, p))
+            if ok4 and key3 * A + d3[i] in quad:
+                best[i] = min(best[i], value(RANK_QUAD, p))
+            if infix:
+                second_infix = plane_bit(inf_lo, inf_hi, d1[i])
+                skip = d0[i] * A + d2[i]
+                if ok4 and second_infix and skip * A + d3[i] in tri:
+                    best[i] = min(best[i], value(RANK_RM3, p))
+                if ok3 and second_infix and skip in bi:
+                    best[i] = min(best[i], value(RANK_RM2, p))
+                if ok3 and d1[i] == IDX_ALEF and (d0[i] * A + IDX_WAW) * A + d2[i] in tri:
+                    best[i] = min(best[i], value(RANK_RS3, p))
+    return best
+
+def materialize(w, best):
+    if best >= NONE_SENTINEL:
+        return (0, 0, 0, 0), ab.KIND_NONE, 0
+    p = best & 15
+    rank = best >> 4
+    c = lambda i: ab.index_char(index_at(w, i))
+    if rank == RANK_TRI:
+        return (c(p), c(p + 1), c(p + 2), 0), ab.KIND_TRI, p
+    if rank == RANK_QUAD:
+        return (c(p), c(p + 1), c(p + 2), c(p + 3)), ab.KIND_QUAD, p
+    if rank == RANK_RM3:
+        return (c(p), c(p + 2), c(p + 3), 0), ab.KIND_RMINFIX_TRI, p
+    if rank == RANK_RM2:
+        return (c(p), c(p + 2), 0, 0), ab.KIND_RMINFIX_BI, p
+    return (c(p), ab.WAW, c(p + 2), 0), ab.KIND_RESTORED, p
+
+def stem_batch_simd(packed, bi, tri, quad, infix):
+    out = []
+    full = len(packed) // LANES * LANES
+    for base in range(0, full, LANES):
+        g = extract(packed[base:base + LANES])
+        best = group_best(g, bi, tri, quad, infix)
+        for i in range(LANES):
+            out.append(materialize(packed[base + i], best[i]))
+    for w in packed[full:]:
+        out.append(stem_packed(w, bi, tri, quad, infix))
+    return out
+
+# --- no-infix oracle: ref passes 1-2 only (rust stem_reference no-infix) --
+def ref_no_infix(codes, n, roots3, roots4):
+    for size, kind, dic in ((3, ab.KIND_TRI, roots3), (4, ab.KIND_QUAD, roots4)):
+        for p in range(ab.NUM_CUTS):
+            if candidate_valid(codes, n, p, size):
+                stem = tuple(codes[p : p + size])
+                if stem in dic:
+                    return stem + (ab.PAD,) * (4 - size), kind, p
+    return (ab.PAD,) * 4, ab.KIND_NONE, 0
+
+# --- the min-fold encoding is a total priority order ----------------------
+ranked = [(rank, p) for rank in range(5) for p in range(ab.MAX_PREFIX + 1)]
+vals = [value(rank, p) for rank, p in ranked]
+assert vals == sorted(vals) and len(set(vals)) == len(vals), \
+    "rank<<4|p must order kind-major then smallest cut"
+assert max(vals) < NONE_SENTINEL, "sentinel must exceed every real value"
+print(f"priority encoding: {len(vals)} (rank,p) values strictly ordered, "
+      f"max {max(vals)} < sentinel {NONE_SENTINEL}")
+
+# --- plane-half split recombines for every digit --------------------------
+for bits in (PREFIX_BITS, SUFFIX_BITS, INFIX_BITS):
+    lo, hi = plane_halves(bits)
+    for d in range(64):
+        assert plane_bit(lo, hi, d) == bool((bits >> d) & 1), (bits, d)
+print("plane-half split agrees with the u64 plane for all 64 digits x 3 planes")
+
+# --- load real dictionaries ----------------------------------------------
+def load(path, arity):
+    roots = set()
+    for line in open(path, encoding="utf-8"):
+        line = line.strip()
+        if not line:
+            continue
+        codes, n = ab.encode_word(line)
+        assert n == arity, (line, n)
+        roots.add(tuple(codes[:n]))
+    return roots
+
+R2 = load(os.path.join(REPO, "data/roots_bilateral.txt"), 2)
+R3 = load(os.path.join(REPO, "data/roots_trilateral.txt"), 3)
+R4 = load(os.path.join(REPO, "data/roots_quadrilateral.txt"), 4)
+BI, TRI, QUAD = bitset(R2), bitset(R3), bitset(R4)
+print(f"dictionaries: {len(R2)} bi, {len(R3)} tri, {len(R4)} quad")
+
+LETTERS = [c for c in range(0x0621, 0x064B) if ab.char_index(c) != 0]
+assert len(LETTERS) == 36
+
+rng = random.Random(0x0917_2606)
+
+def random_word():
+    n = rng.randrange(ab.MAX_WORD + 1)
+    codes = [rng.choice(LETTERS) for _ in range(n)]
+    return codes + [ab.PAD] * (ab.MAX_WORD - n), n
+
+PREFIX_POOL = ["", "و", "ف", "ال", "وال", "ي", "ت", "ن", "س", "سي", "است", "أ", "فأ"]
+SUFFIX_POOL = ["", "ون", "ين", "ات", "ة", "ها", "تم", "نا", "كموها", "وا", "ت"]
+
+def inflected_word():
+    base = rng.choice([rng.choice(tuple(R3)), rng.choice(tuple(R4)),
+                       rng.choice(tuple(R2)) + (rng.choice(LETTERS),)])
+    mid = list(base)
+    if rng.random() < 0.35 and len(mid) >= 3:
+        mid = [mid[0], rng.choice(list(ab.INFIX_LETTERS)), *mid[1:]]
+    s = "".join(chr(c) for c in mid)
+    word = rng.choice(PREFIX_POOL) + s + rng.choice(SUFFIX_POOL)
+    return ab.encode_word(word)
+
+# --- batch sweep: lane kernel vs ref oracle, both configs -----------------
+# Batch widths cycle through lane-remainder shapes: exact groups, odd
+# tails, sub-group batches (all-scalar), and wide mixed batches.
+WIDTHS = [8, 16, 17, 3, 33, 40, 1, 25]
+mismatch = 0
+cases = 0
+kinds_seen = set()
+width_i = 0
+TOTAL = 60_000
+buf = []  # (codes, n, w)
+while cases < TOTAL:
+    width = WIDTHS[width_i % len(WIDTHS)]
+    width_i += 1
+    buf.clear()
+    for k in range(width):
+        codes, n = random_word() if (cases + k) % 2 == 0 else inflected_word()
+        buf.append((codes, n, pack(codes, n)))
+    packed = [w for (_, _, w) in buf]
+    got_batch = stem_batch_simd(packed, BI, TRI, QUAD, True)
+    got_batch_ni = stem_batch_simd(packed, BI, TRI, QUAD, False)
+    for (codes, n, w), got, got_ni in zip(buf, got_batch, got_batch_ni):
+        want = ref_stem_word(codes, n, R2, R3, R4)
+        if got != want:
+            mismatch += 1
+            if mismatch <= 5:
+                print("WITH-INFIX MISMATCH", codes[:n], got, want)
+        want_ni = ref_no_infix(codes, n, R3, R4)
+        if got_ni != want_ni:
+            mismatch += 1
+            if mismatch <= 5:
+                print("NO-INFIX MISMATCH", codes[:n], got_ni, want_ni)
+        # the lane kernel must also equal the scalar packed kernel port
+        scalar = stem_packed(w, BI, TRI, QUAD, True)
+        if got != scalar:
+            mismatch += 1
+            if mismatch <= 5:
+                print("LANE-VS-SCALAR MISMATCH", codes[:n], got, scalar)
+        kinds_seen.add(want[1])
+        cases += 1
+
+print(f"simd lane-kernel sweep: {cases} cases x 2 configs, {mismatch} mismatches")
+assert mismatch == 0
+assert kinds_seen == {0, 1, 2, 3, 4, 5}, f"kinds not all exercised: {kinds_seen}"
+
+# --- dictionary fixpoints through the lane kernel --------------------------
+fix = list(R3)[:496]  # 62 full groups, no remainder
+packed = [pack(list(r) + [ab.PAD] * (ab.MAX_WORD - 3), 3) for r in fix]
+for r, got in zip(fix, stem_batch_simd(packed, BI, TRI, QUAD, True)):
+    assert got[1] == ab.KIND_TRI and got[0][:3] == r and got[2] == 0, (r, got)
+print(f"fixpoint check: {len(fix)} tri roots stem to themselves via lane kernel")
+
+# --- empty / all-non-Arabic batches ---------------------------------------
+assert stem_batch_simd([], BI, TRI, QUAD, True) == []
+empty = [pack([ab.PAD] * ab.MAX_WORD, 0)] * 24
+for got in stem_batch_simd(empty, BI, TRI, QUAD, True):
+    assert got == ((0, 0, 0, 0), ab.KIND_NONE, 0)
+print("empty-batch and zero-length-lane checks OK")
+
+print("\nALL PR6 PYTHON-ORACLE CHECKS PASSED")

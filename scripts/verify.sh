@@ -38,10 +38,17 @@ assert report["schema"] == "ama-bench-v1", report
 assert report["results"], "empty bench results"
 names = [r["name"] for r in report["results"]]
 assert any("stem_batch_packed" in n for n in names), f"no packed row in {names}"
+assert any("stem_batch_simd" in n for n in names), f"no simd row in {names}"
 assert any("cache_warm" in n for n in names), f"no cache row in {names}"
-print("bench smoke OK:", len(report["results"]), "rows")
+assert "speedup_simd_vs_packed" in report, "missing simd speedup figure"
+assert "pct_of_hw_model_wps" in report, "missing hw-gap figure"
+assert report["simd_path"] in ("scalar", "avx2", "neon"), report.get("simd_path")
+print("bench smoke OK:", len(report["results"]), "rows, simd path", report["simd_path"])
 EOF
 grep -q 'stem_batch_packed' /tmp/ama_bench_smoke.json
+grep -q 'stem_batch_simd' /tmp/ama_bench_smoke.json
+grep -q 'speedup_simd_vs_packed' /tmp/ama_bench_smoke.json
+grep -q 'pct_of_hw_model_wps' /tmp/ama_bench_smoke.json
 grep -q 'registry_cache_warm' /tmp/ama_bench_smoke.json
 grep -q 'runtime/stem_chunk_b' /tmp/ama_bench_smoke.json
 
@@ -51,7 +58,18 @@ rm -rf /tmp/ama_smoke_artifacts
 AMA_ARTIFACTS=/tmp/ama_smoke_artifacts ./target/release/ama selftest --words 1000 \
   | tee /tmp/ama_selftest_smoke.txt
 grep -q 'runtime engine: OK' /tmp/ama_selftest_smoke.txt
+grep -q 'simd kernel: OK' /tmp/ama_selftest_smoke.txt
 echo "interpreter conformance smoke OK"
+
+echo "== simd forced-path conformance smoke (AMA_SIMD=off/scalar/auto) =="
+for path in off scalar auto; do
+  AMA_SIMD=$path AMA_ARTIFACTS=/tmp/ama_smoke_artifacts \
+    ./target/release/ama selftest --words 1000 > /tmp/ama_selftest_simd.txt
+  grep -q 'simd kernel: OK' /tmp/ama_selftest_simd.txt \
+    || { echo "simd conformance failed under AMA_SIMD=$path"; exit 1; }
+  echo "  AMA_SIMD=$path: $(grep 'simd kernel: OK' /tmp/ama_selftest_simd.txt)"
+done
+echo "simd forced-path conformance smoke OK"
 
 echo "== loadtest smoke (2 modes × 2s, 8 conns) =="
 ./target/release/ama loadtest --conns 8 --secs 2 --depth 32 --mode both \
