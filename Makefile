@@ -17,8 +17,11 @@
 #                     AMA_SIMD=off|scalar|avx2|neon forces the lane path)
 #   make protocol-check — AMA/1 + legacy-line conformance smoke against a
 #                     real `ama serve` process (scripts/protocol_check.sh)
+#   make gateway-loadtest — gateway scaling + chaos run (PR 7): in-process
+#                     replica fleet behind `ama gateway`, mixed AMA/1 load,
+#                     forced replica kill+restart; writes BENCH_PR7.json
 
-.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check
+.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check gateway-loadtest
 
 data:
 	cd python && python3 -m compile.gen_roots ../data
@@ -61,3 +64,9 @@ bench-simd:
 protocol-check:
 	cargo build --release
 	scripts/protocol_check.sh
+
+gateway-loadtest:
+	cargo build --release
+	./target/release/ama gateway-loadtest --replicas 3 --conns 16 --secs 4 \
+		--depth 8 --chaos --out BENCH_PR7.json
+	grep -q '"schema": "ama-gateway-v1"' BENCH_PR7.json

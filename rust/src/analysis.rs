@@ -604,6 +604,14 @@ pub enum ErrorCode {
     UnknownOp,
     /// Catch-all server-side failure.
     Internal,
+    /// No healthy backend could answer within the request budget — every
+    /// candidate replica was down, circuit-open, or out of retry budget
+    /// (PR 7 gateway tier). Retryable after `meta.retry_after_ms`.
+    Unavailable,
+    /// Per-client admission control shed the request (token bucket
+    /// empty); `meta` carries the remaining budget and the soonest
+    /// useful retry time (PR 7 gateway tier).
+    RateLimited,
 }
 
 impl ErrorCode {
@@ -617,6 +625,8 @@ impl ErrorCode {
             ErrorCode::BadVersion => "BAD_VERSION",
             ErrorCode::UnknownOp => "UNKNOWN_OP",
             ErrorCode::Internal => "INTERNAL",
+            ErrorCode::Unavailable => "UNAVAILABLE",
+            ErrorCode::RateLimited => "RATE_LIMITED",
         }
     }
 
@@ -630,6 +640,8 @@ impl ErrorCode {
             "BAD_VERSION" => ErrorCode::BadVersion,
             "UNKNOWN_OP" => ErrorCode::UnknownOp,
             "INTERNAL" => ErrorCode::Internal,
+            "UNAVAILABLE" => ErrorCode::Unavailable,
+            "RATE_LIMITED" => ErrorCode::RateLimited,
             _ => return None,
         })
     }
@@ -641,6 +653,28 @@ impl std::fmt::Display for ErrorCode {
     }
 }
 
+/// Machine-readable retry/budget hints attached to a typed error — the
+/// gateway tier's rate-limit / remaining-budget metadata (PR 7). Engine-
+/// level errors leave it `None`; the AMA/1 parser ignores the fields when
+/// absent, so pre-PR-7 clients interoperate unchanged.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ErrorMeta {
+    /// Soonest time, in milliseconds, at which retrying could succeed
+    /// (breaker cooldown remaining, or token-bucket refill time).
+    pub retry_after_ms: Option<u64>,
+    /// Remaining per-client request budget (whole words left in the
+    /// token bucket) after this rejection.
+    pub remaining: Option<u64>,
+}
+
+impl ErrorMeta {
+    /// True when no field is set — such a meta is never serialized, so
+    /// wire roundtrips stay exact.
+    pub fn is_empty(&self) -> bool {
+        self.retry_after_ms.is_none() && self.remaining.is_none()
+    }
+}
+
 /// A typed serving failure: an [`ErrorCode`] plus a human-readable
 /// message. Implements `std::error::Error`, so `?` still converts into
 /// `anyhow::Result` call sites — but the code survives for the protocol
@@ -649,11 +683,20 @@ impl std::fmt::Display for ErrorCode {
 pub struct ServeError {
     pub code: ErrorCode,
     pub msg: String,
+    /// Optional retry/budget metadata (gateway-tier errors only).
+    pub meta: Option<ErrorMeta>,
 }
 
 impl ServeError {
     pub fn new(code: ErrorCode, msg: impl Into<String>) -> ServeError {
-        ServeError { code, msg: msg.into() }
+        ServeError { code, msg: msg.into(), meta: None }
+    }
+
+    /// Attach retry/budget metadata (empty metadata is normalized away
+    /// so serialization roundtrips compare equal).
+    pub fn with_meta(mut self, meta: ErrorMeta) -> ServeError {
+        self.meta = if meta.is_empty() { None } else { Some(meta) };
+        self
     }
 }
 
@@ -842,10 +885,23 @@ mod tests {
             ErrorCode::BadVersion,
             ErrorCode::UnknownOp,
             ErrorCode::Internal,
+            ErrorCode::Unavailable,
+            ErrorCode::RateLimited,
         ] {
             assert_eq!(ErrorCode::from_name(code.as_str()), Some(code));
         }
         let e = ServeError::new(ErrorCode::QueueFull, "queue stayed full for 5s");
         assert_eq!(format!("{e}"), "QUEUE_FULL: queue stayed full for 5s");
+    }
+
+    #[test]
+    fn error_meta_normalizes_empty() {
+        let e = ServeError::new(ErrorCode::RateLimited, "slow down")
+            .with_meta(ErrorMeta::default());
+        assert_eq!(e.meta, None, "empty meta must normalize to None");
+        let e = e.with_meta(ErrorMeta { retry_after_ms: Some(120), remaining: Some(3) });
+        let meta = e.meta.expect("meta survives");
+        assert_eq!(meta.retry_after_ms, Some(120));
+        assert_eq!(meta.remaining, Some(3));
     }
 }

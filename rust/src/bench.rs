@@ -147,6 +147,11 @@ pub struct LoadOutcome {
     /// Replies whose echoed word did not match the word sent at that
     /// position — any non-zero value means the protocol reordered.
     pub reorders: u64,
+    /// Typed `UNAVAILABLE` / `RATE_LIMITED` replies tolerated by a
+    /// [`run_ama1_load_tolerant`] run (the gateway shedding by design —
+    /// not a failure, but not progress either). Always 0 for the strict
+    /// runners.
+    pub typed_shed: u64,
     pub elapsed: Duration,
     /// Client-observed round-trip latency percentiles, µs (per burst:
     /// write `depth` lines → read `depth` replies).
@@ -170,7 +175,7 @@ impl std::fmt::Display for LoadOutcome {
         write!(
             f,
             "conns={} depth={} words={} -> {:.0} words/s  rtt p50={}us p90={}us p99={}us  \
-             errors={} reorders={}",
+             errors={} reorders={} shed={}",
             self.conns,
             self.depth,
             self.words,
@@ -179,7 +184,8 @@ impl std::fmt::Display for LoadOutcome {
             self.rtt_p90_us,
             self.rtt_p99_us,
             self.errors,
-            self.reorders
+            self.reorders,
+            self.typed_shed
         )
     }
 }
@@ -278,6 +284,7 @@ pub fn run_tcp_load(
         words: total_words.load(Ordering::Relaxed),
         errors: total_errors.load(Ordering::Relaxed),
         reorders: total_reorders.load(Ordering::Relaxed),
+        typed_shed: 0, // the line protocol has no typed shed frames
         elapsed,
         rtt_p50_us: hist.percentile_us(0.50),
         rtt_p90_us: hist.percentile_us(0.90),
@@ -300,6 +307,34 @@ pub fn run_ama1_load(
     words: &[String],
     opts_cycle: &[AnalyzeOptions],
 ) -> LoadOutcome {
+    run_ama1_load_inner(addr, conns, duration, depth, words, opts_cycle, false)
+}
+
+/// [`run_ama1_load`] for gateway chaos runs: typed `UNAVAILABLE` and
+/// `RATE_LIMITED` replies are counted in [`LoadOutcome::typed_shed`]
+/// instead of killing the client thread — shedding is the gateway doing
+/// its job during an outage. Everything else (wrong roots, reorders,
+/// transport failures, any other error code) still counts as an error.
+pub fn run_ama1_load_tolerant(
+    addr: SocketAddr,
+    conns: usize,
+    duration: Duration,
+    depth: usize,
+    words: &[String],
+    opts_cycle: &[AnalyzeOptions],
+) -> LoadOutcome {
+    run_ama1_load_inner(addr, conns, duration, depth, words, opts_cycle, true)
+}
+
+fn run_ama1_load_inner(
+    addr: SocketAddr,
+    conns: usize,
+    duration: Duration,
+    depth: usize,
+    words: &[String],
+    opts_cycle: &[AnalyzeOptions],
+    tolerate_shed: bool,
+) -> LoadOutcome {
     assert!(!words.is_empty(), "need a word list");
     assert!(!opts_cycle.is_empty(), "need at least one options set");
     let depth = depth.clamp(1, crate::protocol::MAX_WORDS_PER_ENVELOPE);
@@ -307,6 +342,7 @@ pub fn run_ama1_load(
     let total_words = Arc::new(AtomicU64::new(0));
     let total_errors = Arc::new(AtomicU64::new(0));
     let total_reorders = Arc::new(AtomicU64::new(0));
+    let total_shed = Arc::new(AtomicU64::new(0));
     let started = Instant::now();
     let deadline = started + duration;
     let words: Arc<[String]> = words.to_vec().into();
@@ -319,6 +355,7 @@ pub fn run_ama1_load(
             let total_words = total_words.clone();
             let total_errors = total_errors.clone();
             let total_reorders = total_reorders.clone();
+            let total_shed = total_shed.clone();
             std::thread::spawn(move || {
                 let run = || -> Result<(), crate::client::ClientError> {
                     let mut client = crate::client::Client::connect(addr)?;
@@ -332,8 +369,23 @@ pub fn run_ama1_load(
                             batch.push(words[cursor].as_str());
                             cursor = (cursor + 1) % words.len();
                         }
+                        next = cursor;
                         let t0 = Instant::now();
-                        let results = client.analyze(&batch, &opts)?;
+                        let results = match client.analyze(&batch, &opts) {
+                            Ok(r) => r,
+                            Err(crate::client::ClientError::Remote(err))
+                                if tolerate_shed
+                                    && matches!(
+                                        err.code,
+                                        crate::analysis::ErrorCode::Unavailable
+                                            | crate::analysis::ErrorCode::RateLimited
+                                    ) =>
+                            {
+                                total_shed.fetch_add(1, Ordering::Relaxed);
+                                continue;
+                            }
+                            Err(e) => return Err(e),
+                        };
                         hist.record(t0.elapsed());
                         for (sent, got) in batch.iter().zip(&results) {
                             if got.word != *sent {
@@ -344,7 +396,6 @@ pub fn run_ama1_load(
                             total_errors.fetch_add(1, Ordering::Relaxed);
                         }
                         total_words.fetch_add(results.len() as u64, Ordering::Relaxed);
-                        next = cursor;
                     }
                     Ok(())
                 };
@@ -365,6 +416,7 @@ pub fn run_ama1_load(
         words: total_words.load(Ordering::Relaxed),
         errors: total_errors.load(Ordering::Relaxed),
         reorders: total_reorders.load(Ordering::Relaxed),
+        typed_shed: total_shed.load(Ordering::Relaxed),
         elapsed,
         rtt_p50_us: hist.percentile_us(0.50),
         rtt_p90_us: hist.percentile_us(0.90),

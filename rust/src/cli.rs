@@ -42,6 +42,15 @@ const VALUE_FLAGS: &[&str] = &[
     "--proto",
     "--cache-slots",
     "--batches",
+    "--replicas",
+    "--endpoints",
+    "--rate",
+    "--burst",
+    "--max-in-flight",
+    "--deadline-ms",
+    "--cooldown-ms",
+    "--failure-threshold",
+    "--probe-ms",
 ];
 
 impl Args {
@@ -147,6 +156,21 @@ SUBCOMMANDS:
     emit-hlo              lower the stemmer to HLO-text artifacts from rust
                           (the offline `make artifacts` path; no JAX needed)
                           [--out artifacts] [--batches 1,32,256]
+    gateway               fault-tolerant sharding gateway in front of `ama
+                          serve` replicas (AMA/1 only): consistent-hash
+                          sharding, per-endpoint circuit breakers + failover,
+                          request coalescing, admission control
+                          [--port P] [--endpoints host:p1,host:p2,…]
+                          [--replicas N]  (no --endpoints: start N in-process
+                          replicas instead) [--handlers H] [--rate R] [--burst B]
+                          [--max-in-flight M] [--deadline-ms D]
+                          [--cooldown-ms C] [--failure-threshold F] [--probe-ms P]
+    gateway-loadtest      chaos/scaling harness: in-process replica fleet
+                          behind a gateway, mixed AMA/1 load, optional forced
+                          replica kill+restart mid-run [--replicas N]
+                          [--conns N] [--secs S] [--depth D] [--chaos]
+                          [--out BENCH_PR7.json] (scaling rows at 1..N replicas
+                          plus direct-vs-gateway overhead at 1 replica)
 
 COMMON OPTIONS:
     --data-dir DIR        root dictionaries (default: data)

@@ -2,12 +2,26 @@
 //! `TcpStream` speaking the JSON-lines protocol of [`crate::protocol`].
 //!
 //! Used by `ama analyze --connect`, the `ama loadtest --proto ama1`
-//! fleet, and `examples/pipeline_service.rs`. One [`Client`] owns one
-//! connection; requests are correlated by auto-incrementing envelope ids
-//! and replies are matched strictly (an id mismatch is a protocol
-//! error — this client never pipelines more than one envelope, keeping
-//! it trivially correct; pipelining clients can issue multiple
-//! [`Client::send`]s before [`Client::recv`]s and match ids themselves).
+//! fleet, the PR 7 gateway's backend pool, and
+//! `examples/pipeline_service.rs`. One [`Client`] owns one connection;
+//! requests are correlated by auto-incrementing envelope ids and replies
+//! are matched strictly (an id mismatch is a protocol error — this
+//! client never pipelines more than one envelope, keeping it trivially
+//! correct; pipelining clients can issue multiple [`Client::send`]s
+//! before [`Client::recv`]s and match ids themselves).
+//!
+//! ## Reconnect-and-retry (PR 7 bugfix)
+//!
+//! Pre-PR 7, a replica restart poisoned a `Client` forever: the first
+//! call after the restart failed with a transport error and every later
+//! call failed the same way, because nothing ever re-dialed. Analysis is
+//! pure (same words + options → same roots, no server-side state
+//! mutation), so idempotent calls are safe to retry transparently:
+//! [`Client::analyze`] and [`Client::ping`] now reconnect and resend
+//! **once** on a transport failure. The single-shot primitives
+//! ([`Client::analyze_once`], [`Client::send`]/[`Client::recv`]) keep the
+//! old fail-fast behavior — the gateway pool uses those because it owns
+//! its own retry/failover budget.
 
 use crate::analysis::{AnalyzeOptions, ServeError};
 use crate::protocol::{Envelope, Reply, WireResult};
@@ -50,22 +64,67 @@ pub struct Client {
     writer: TcpStream,
     next_id: u64,
     line: String,
+    addr: SocketAddr,
+    connect_timeout: Option<Duration>,
+    read_timeout: Option<Duration>,
 }
 
 impl Client {
     /// Connect and prepare the stream (TCP_NODELAY — the protocol is
     /// request/response; see server.rs on what Nagle does to that).
     pub fn connect(addr: SocketAddr) -> Result<Client, ClientError> {
-        let conn = TcpStream::connect(addr)?;
+        Self::connect_with(addr, None)
+    }
+
+    /// [`Client::connect`] with a bounded dial time — the gateway pool
+    /// uses this so a dead replica costs milliseconds, not the OS
+    /// connect timeout.
+    pub fn connect_timeout(addr: SocketAddr, timeout: Duration) -> Result<Client, ClientError> {
+        Self::connect_with(addr, Some(timeout))
+    }
+
+    fn connect_with(addr: SocketAddr, timeout: Option<Duration>) -> Result<Client, ClientError> {
+        let conn = match timeout {
+            Some(t) => TcpStream::connect_timeout(&addr, t)?,
+            None => TcpStream::connect(addr)?,
+        };
         conn.set_nodelay(true)?;
         let writer = conn.try_clone()?;
-        Ok(Client { reader: BufReader::new(conn), writer, next_id: 1, line: String::new() })
+        Ok(Client {
+            reader: BufReader::new(conn),
+            writer,
+            next_id: 1,
+            line: String::new(),
+            addr,
+            connect_timeout: timeout,
+            read_timeout: None,
+        })
+    }
+
+    /// The address this client dials.
+    pub fn peer_addr(&self) -> SocketAddr {
+        self.addr
     }
 
     /// Bound how long [`Client::recv`] (and the helpers built on it) wait
-    /// for a reply line.
+    /// for a reply line. Survives [`Client::reconnect`].
     pub fn set_read_timeout(&mut self, d: Option<Duration>) -> Result<(), ClientError> {
         self.reader.get_ref().set_read_timeout(d)?;
+        self.read_timeout = d;
+        Ok(())
+    }
+
+    /// Drop the current stream and dial the same address again, keeping
+    /// the configured timeouts. The id counter keeps counting up — ids
+    /// only need to be unique per in-flight request, and a fresh server
+    /// echoes whatever id it is sent.
+    pub fn reconnect(&mut self) -> Result<(), ClientError> {
+        let fresh = Self::connect_with(self.addr, self.connect_timeout)?;
+        self.reader = fresh.reader;
+        self.writer = fresh.writer;
+        if self.read_timeout.is_some() {
+            self.reader.get_ref().set_read_timeout(self.read_timeout)?;
+        }
         Ok(())
     }
 
@@ -93,10 +152,29 @@ impl Client {
         Reply::parse(self.line.trim_end()).map_err(ClientError::Protocol)
     }
 
-    /// Analyze a batch of words: one envelope out, one reply in. Typed
-    /// server errors surface as [`ClientError::Remote`] with the wire
-    /// [`ServeError`] intact.
+    /// Analyze a batch of words: one envelope out, one reply in, with
+    /// one transparent reconnect-and-retry on transport failure (analyze
+    /// is idempotent — stemming is pure). Typed server errors surface as
+    /// [`ClientError::Remote`] with the wire [`ServeError`] intact and
+    /// are never retried here.
     pub fn analyze(
+        &mut self,
+        words: &[&str],
+        opts: &AnalyzeOptions,
+    ) -> Result<Vec<WireResult>, ClientError> {
+        match self.analyze_once(words, opts) {
+            Err(ClientError::Io(_)) => {
+                self.reconnect()?;
+                self.analyze_once(words, opts)
+            }
+            other => other,
+        }
+    }
+
+    /// Single-shot analyze: no reconnect, no retry — fails fast on the
+    /// first transport error. The gateway pool builds on this because it
+    /// owns its own bounded-retry/failover budget.
+    pub fn analyze_once(
         &mut self,
         words: &[&str],
         opts: &AnalyzeOptions,
@@ -105,7 +183,11 @@ impl Client {
         let id = self.send(env)?;
         match self.recv()? {
             Reply::Results { id: rid, results } if rid == id => Ok(results),
-            Reply::Error { id: rid, error } if rid == id => Err(ClientError::Remote(error)),
+            // id 0 is the connection-scoped id: servers use it for
+            // unsolicited errors (e.g. the SHUTDOWN goodbye frame).
+            Reply::Error { id: rid, error } if rid == id || rid == 0 => {
+                Err(ClientError::Remote(error))
+            }
             other => Err(ClientError::Protocol(format!(
                 "reply id {} does not match request id {id}",
                 other.id()
@@ -113,9 +195,23 @@ impl Client {
         }
     }
 
-    /// Liveness check: `{"op":"ping"}` → empty results.
+    /// Liveness check: `{"op":"ping"}` → empty results. Reconnects and
+    /// retries once like [`Client::analyze`].
     pub fn ping(&mut self) -> Result<(), ClientError> {
-        let env = Envelope { id: 0, op: "ping".to_string(), words: Vec::new(), opts: Default::default() };
+        match self.ping_once() {
+            Err(ClientError::Io(_)) => {
+                self.reconnect()?;
+                self.ping_once()
+            }
+            other => other,
+        }
+    }
+
+    /// Single-shot ping (the gateway's health prober: a failure here must
+    /// count against the breaker, not be masked by a retry).
+    pub fn ping_once(&mut self) -> Result<(), ClientError> {
+        let env =
+            Envelope { id: 0, op: "ping".to_string(), words: Vec::new(), opts: Default::default() };
         let id = self.send(env)?;
         match self.recv()? {
             Reply::Results { id: rid, .. } if rid == id => Ok(()),
@@ -125,5 +221,11 @@ impl Client {
                 other.id()
             ))),
         }
+    }
+
+    /// Discard buffered unsolicited frames (e.g. a SHUTDOWN goodbye read
+    /// later than sent) — used by pools before reusing a connection.
+    pub fn has_buffered_input(&self) -> bool {
+        !self.reader.buffer().is_empty()
     }
 }

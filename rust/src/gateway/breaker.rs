@@ -1,0 +1,250 @@
+//! Three-state circuit breaker, one per backend endpoint (PR 7).
+//!
+//! ```text
+//!           N consecutive failures
+//!   Closed ─────────────────────────▶ Open
+//!     ▲                                │ cooldown elapsed
+//!     │ trial succeeds                 ▼
+//!     └──────────────────────────── HalfOpen ──▶ (trial fails → Open)
+//! ```
+//!
+//! * **Closed** — requests flow; `failure_threshold` *consecutive*
+//!   failures trip the breaker (one success resets the count).
+//! * **Open** — requests are denied instantly with the time remaining
+//!   until the next trial, so callers can fail over without burning a
+//!   connect timeout on a known-dead replica.
+//! * **HalfOpen** — after `cooldown`, exactly one in-flight trial is
+//!   admitted at a time; success closes the breaker, failure re-opens it
+//!   (restarting the cooldown).
+//!
+//! State transitions are returned to the caller as [`Transition`] values
+//! rather than recorded internally — the pool owns the
+//! [`crate::metrics::GatewayMetrics`] counters and the chaos test
+//! asserts the exact open → half-open → closed sequence through them.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// A state-machine edge worth counting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transition {
+    /// closed→open or half-open→open (trip / failed trial).
+    Opened,
+    /// open→half-open (cooldown expired, trial admitted).
+    HalfOpened,
+    /// half-open→closed (trial succeeded) or open→closed (late success).
+    Closed,
+}
+
+/// The admission decision for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Breaker closed — go ahead.
+    Allowed,
+    /// Half-open trial slot granted: this request's outcome decides the
+    /// endpoint's fate. (Carries the open→half-open transition when this
+    /// admission performed it.)
+    Probe(Option<Transition>),
+    /// Denied; `retry_after` is the time until the next trial slot.
+    Denied { retry_after: Duration },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip closed→open.
+    pub failure_threshold: u32,
+    /// How long open lasts before a half-open trial is admitted.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { failure_threshold: 3, cooldown: Duration::from_millis(500) }
+    }
+}
+
+struct Inner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Instant,
+    /// Half-open: a trial is currently in flight (only one at a time).
+    probe_in_flight: bool,
+}
+
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    inner: Mutex<Inner>,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: Instant::now(),
+                probe_in_flight: false,
+            }),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+
+    /// May a request be sent to this endpoint right now?
+    pub fn try_admit(&self) -> Admission {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::Closed => Admission::Allowed,
+            BreakerState::Open => {
+                let elapsed = g.opened_at.elapsed();
+                if elapsed >= self.cfg.cooldown {
+                    g.state = BreakerState::HalfOpen;
+                    g.probe_in_flight = true;
+                    Admission::Probe(Some(Transition::HalfOpened))
+                } else {
+                    Admission::Denied { retry_after: self.cfg.cooldown - elapsed }
+                }
+            }
+            BreakerState::HalfOpen => {
+                if g.probe_in_flight {
+                    // another trial is pending; check back shortly
+                    Admission::Denied { retry_after: Duration::from_millis(10) }
+                } else {
+                    g.probe_in_flight = true;
+                    Admission::Probe(None)
+                }
+            }
+        }
+    }
+
+    /// Record a request outcome. Returns the transition this outcome
+    /// caused, if any.
+    pub fn record_success(&self) -> Option<Transition> {
+        let mut g = self.inner.lock().unwrap();
+        g.consecutive_failures = 0;
+        match g.state {
+            BreakerState::Closed => None,
+            // A half-open trial succeeded — or a request admitted before
+            // the trip landed after it; either way the endpoint
+            // demonstrably works.
+            BreakerState::HalfOpen | BreakerState::Open => {
+                g.state = BreakerState::Closed;
+                g.probe_in_flight = false;
+                Some(Transition::Closed)
+            }
+        }
+    }
+
+    pub fn record_failure(&self) -> Option<Transition> {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::Closed => {
+                g.consecutive_failures += 1;
+                if g.consecutive_failures >= self.cfg.failure_threshold {
+                    g.state = BreakerState::Open;
+                    g.opened_at = Instant::now();
+                    Some(Transition::Opened)
+                } else {
+                    None
+                }
+            }
+            BreakerState::HalfOpen => {
+                g.state = BreakerState::Open;
+                g.opened_at = Instant::now();
+                g.probe_in_flight = false;
+                g.consecutive_failures = self.cfg.failure_threshold;
+                Some(Transition::Opened)
+            }
+            // Already open: a straggler failure from a request admitted
+            // earlier. Don't extend the cooldown.
+            BreakerState::Open => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker(ms: u64) -> CircuitBreaker {
+        CircuitBreaker::new(BreakerConfig {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(ms),
+        })
+    }
+
+    #[test]
+    fn trips_on_consecutive_failures_only() {
+        let b = breaker(1000);
+        assert_eq!(b.record_failure(), None);
+        assert_eq!(b.record_failure(), None);
+        assert_eq!(b.record_success(), None, "success resets the streak");
+        assert_eq!(b.record_failure(), None);
+        assert_eq!(b.record_failure(), None);
+        assert_eq!(b.record_failure(), Some(Transition::Opened));
+        assert_eq!(b.state(), BreakerState::Open);
+        match b.try_admit() {
+            Admission::Denied { retry_after } => assert!(retry_after <= Duration::from_secs(1)),
+            other => panic!("open breaker must deny, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn half_open_single_probe_then_close() {
+        let b = breaker(10);
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(20));
+        // first admission after cooldown is the trial…
+        assert_eq!(b.try_admit(), Admission::Probe(Some(Transition::HalfOpened)));
+        // …and concurrent requests are still denied while it is in flight
+        assert!(matches!(b.try_admit(), Admission::Denied { .. }));
+        assert_eq!(b.record_success(), Some(Transition::Closed));
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.try_admit(), Admission::Allowed);
+    }
+
+    #[test]
+    fn failed_probe_reopens_and_cooldown_restarts() {
+        let b = breaker(15);
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(matches!(b.try_admit(), Admission::Probe(_)));
+        assert_eq!(b.record_failure(), Some(Transition::Opened));
+        assert_eq!(b.state(), BreakerState::Open);
+        // immediately after re-opening, still denied
+        assert!(matches!(b.try_admit(), Admission::Denied { .. }));
+        // …but another cooldown admits another trial
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(matches!(b.try_admit(), Admission::Probe(_)));
+        assert_eq!(b.record_success(), Some(Transition::Closed));
+    }
+
+    #[test]
+    fn straggler_failure_in_open_does_not_extend_cooldown() {
+        let b = breaker(20);
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(b.record_failure(), None, "already open");
+        std::thread::sleep(Duration::from_millis(12));
+        // 22ms since the trip: the extra failure at t=10 must not have
+        // restarted the clock
+        assert!(matches!(b.try_admit(), Admission::Probe(_)));
+    }
+}

@@ -1,0 +1,278 @@
+//! In-flight request coalescing (PR 7): a thundering herd of identical
+//! `(word, options)` requests costs one backend dispatch.
+//!
+//! The key is [`super::shard::request_key`] — packed word ⊕ options byte,
+//! the same fold as the replica-side stem cache — so "identical" here is
+//! exactly the class of requests a replica would answer from one cache
+//! slot anyway; the gateway just collapses them one hop earlier, before
+//! they cost network round-trips.
+//!
+//! Protocol: the first claimant of a key becomes the **leader** and owns
+//! the backend dispatch; later claimants become **followers** and park on
+//! the leader's slot. The contract that keeps this deadlock-free (PR 7
+//! chaos harness asserts it under replica kills):
+//!
+//! * a leader MUST complete every slot it holds — with a result or an
+//!   error — whatever its dispatch does; [`LeaderToken`] enforces this
+//!   with a panic-safe `Drop` that publishes `UNAVAILABLE`;
+//! * a handler must dispatch (and complete) all its own leader slots
+//!   *before* waiting on any follower slot, so two envelopes can never
+//!   hold leader slots the other is following;
+//! * followers copy the published [`WireResult`] but overwrite its `word`
+//!   echo with their *own* submitted string — packing is canonicalizing,
+//!   so two different raw strings can share a key, and the echo must
+//!   match what each client sent.
+
+use crate::analysis::{ErrorCode, ErrorMeta, ServeError};
+use crate::protocol::WireResult;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// What a dispatch produced for one word.
+pub type WordOutcome = Result<WireResult, ServeError>;
+
+struct Slot {
+    done: Mutex<Option<WordOutcome>>,
+    cv: Condvar,
+}
+
+type Registry = Arc<Mutex<HashMap<u128, Arc<Slot>>>>;
+
+/// The coalescing table: one per gateway.
+pub struct CoalesceMap {
+    inner: Registry,
+}
+
+/// Claim outcome for one key.
+pub enum Claim {
+    /// This caller owns the dispatch for the key.
+    Leader(LeaderToken),
+    /// Someone else is already dispatching the key; wait on this.
+    Follower(FollowerWait),
+}
+
+impl Default for CoalesceMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoalesceMap {
+    pub fn new() -> CoalesceMap {
+        CoalesceMap { inner: Arc::new(Mutex::new(HashMap::new())) }
+    }
+
+    /// How many keys are currently in flight (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn claim(&self, key: u128) -> Claim {
+        let mut map = self.inner.lock().unwrap();
+        if let Some(slot) = map.get(&key) {
+            return Claim::Follower(FollowerWait { slot: slot.clone() });
+        }
+        let slot = Arc::new(Slot { done: Mutex::new(None), cv: Condvar::new() });
+        map.insert(key, slot.clone());
+        Claim::Leader(LeaderToken { registry: self.inner.clone(), key, slot, completed: false })
+    }
+}
+
+/// Leadership of one in-flight key. Publishing a result (or being
+/// dropped) removes the key from the table and wakes every follower.
+pub struct LeaderToken {
+    registry: Registry,
+    key: u128,
+    slot: Arc<Slot>,
+    completed: bool,
+}
+
+impl LeaderToken {
+    pub fn key(&self) -> u128 {
+        self.key
+    }
+
+    /// Publish the outcome: wake all followers, retire the key.
+    pub fn complete(mut self, outcome: WordOutcome) {
+        self.publish(outcome);
+    }
+
+    fn publish(&mut self, outcome: WordOutcome) {
+        if self.completed {
+            return;
+        }
+        self.completed = true;
+        // Retire the key first: a brand-new identical request arriving
+        // after completion should dispatch fresh (it is no longer
+        // piggybacking on anything in flight). Guard with ptr_eq so a
+        // successor leader's slot is never evicted by a late drop.
+        {
+            let mut map = self.registry.lock().unwrap();
+            if let Some(cur) = map.get(&self.key) {
+                if Arc::ptr_eq(cur, &self.slot) {
+                    map.remove(&self.key);
+                }
+            }
+        }
+        *self.slot.done.lock().unwrap() = Some(outcome);
+        self.slot.cv.notify_all();
+    }
+}
+
+impl Drop for LeaderToken {
+    fn drop(&mut self) {
+        // Panic / early-return safety: followers must never park forever.
+        self.publish(Err(ServeError::new(
+            ErrorCode::Unavailable,
+            "coalesce leader aborted before completing its dispatch",
+        )
+        .with_meta(ErrorMeta { retry_after_ms: Some(0), remaining: None })));
+    }
+}
+
+/// A follower's handle on someone else's in-flight dispatch.
+pub struct FollowerWait {
+    slot: Arc<Slot>,
+}
+
+impl FollowerWait {
+    /// Park until the leader publishes, or until `deadline`. `None` means
+    /// the deadline expired first (the caller maps this to `UNAVAILABLE`
+    /// — the leader's own deadline will fire shortly anyway).
+    pub fn wait_deadline(&self, deadline: Instant) -> Option<WordOutcome> {
+        let mut g = self.slot.done.lock().unwrap();
+        loop {
+            if let Some(outcome) = g.as_ref() {
+                return Some(outcome.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, timeout) = self.slot.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if timeout.timed_out() && g.is_none() {
+                return None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Algorithm;
+    use crate::stemmer::MatchKind;
+    use std::time::Duration;
+
+    fn result(word: &str) -> WireResult {
+        WireResult {
+            word: word.to_string(),
+            root: "لعب".to_string(),
+            kind: MatchKind::Tri,
+            cut: 2,
+            algo: Algorithm::Voting,
+            confidence: 1.0,
+            votes: 3,
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn first_claim_leads_second_follows() {
+        let map = CoalesceMap::new();
+        let lead = match map.claim(7) {
+            Claim::Leader(t) => t,
+            Claim::Follower(_) => panic!("first claim must lead"),
+        };
+        let follow = match map.claim(7) {
+            Claim::Follower(f) => f,
+            Claim::Leader(_) => panic!("second claim must follow"),
+        };
+        assert_eq!(map.len(), 1);
+        lead.complete(Ok(result("سيلعبون")));
+        let out = follow.wait_deadline(Instant::now() + Duration::from_secs(1)).unwrap();
+        assert_eq!(out.unwrap().root, "لعب");
+        assert!(map.is_empty(), "completion retires the key");
+        // a fresh claim after completion leads again (not stale-follows)
+        assert!(matches!(map.claim(7), Claim::Leader(_)));
+    }
+
+    #[test]
+    fn follower_parked_across_threads_gets_woken() {
+        let map = Arc::new(CoalesceMap::new());
+        let lead = match map.claim(42) {
+            Claim::Leader(t) => t,
+            _ => unreachable!(),
+        };
+        let m2 = map.clone();
+        let waiter = std::thread::spawn(move || {
+            let f = match m2.claim(42) {
+                Claim::Follower(f) => f,
+                _ => panic!("should follow"),
+            };
+            f.wait_deadline(Instant::now() + Duration::from_secs(2))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        lead.complete(Ok(result("لاعبون")));
+        let got = waiter.join().unwrap().expect("woken before deadline").unwrap();
+        assert_eq!(got.root, "لعب");
+    }
+
+    #[test]
+    fn dropped_leader_unblocks_followers_with_unavailable() {
+        let map = CoalesceMap::new();
+        let lead = match map.claim(9) {
+            Claim::Leader(t) => t,
+            _ => unreachable!(),
+        };
+        let follow = match map.claim(9) {
+            Claim::Follower(f) => f,
+            _ => unreachable!(),
+        };
+        drop(lead); // e.g. handler panicked mid-dispatch
+        let out = follow.wait_deadline(Instant::now() + Duration::from_millis(500)).unwrap();
+        match out {
+            Err(e) => assert_eq!(e.code, ErrorCode::Unavailable),
+            Ok(_) => panic!("aborted leader must publish an error"),
+        }
+        assert!(map.is_empty());
+    }
+
+    #[test]
+    fn follower_deadline_expires_without_leader() {
+        let map = CoalesceMap::new();
+        let _lead = match map.claim(5) {
+            Claim::Leader(t) => t,
+            _ => unreachable!(),
+        };
+        let follow = match map.claim(5) {
+            Claim::Follower(f) => f,
+            _ => unreachable!(),
+        };
+        let t0 = Instant::now();
+        assert!(follow.wait_deadline(t0 + Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn error_outcomes_propagate_to_followers() {
+        let map = CoalesceMap::new();
+        let lead = match map.claim(1) {
+            Claim::Leader(t) => t,
+            _ => unreachable!(),
+        };
+        let follow = match map.claim(1) {
+            Claim::Follower(f) => f,
+            _ => unreachable!(),
+        };
+        lead.complete(Err(ServeError::new(ErrorCode::QueueFull, "replica saturated")));
+        let out = follow.wait_deadline(Instant::now() + Duration::from_secs(1)).unwrap();
+        assert_eq!(out.unwrap_err().code, ErrorCode::QueueFull);
+    }
+}

@@ -1,0 +1,207 @@
+//! In-process replica fleet (PR 7): N real `ama serve` instances —
+//! coordinator + TCP server each, real sockets, real ports — inside one
+//! process. This is the substrate for the gateway loadtest
+//! (`ama gateway-loadtest`), the verify.sh smoke, and the chaos test:
+//! [`Fleet::kill`] / [`Fleet::restart`] give fault injection without
+//! process management, and a restart **rebinds the same port**, so a
+//! gateway endpoint that tripped its breaker genuinely recovers through
+//! the half-open path.
+
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::roots::RootSet;
+use crate::server::{Server, ServerConfig};
+use crate::stemmer::StemmerConfig;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One running replica.
+struct Replica {
+    server: Arc<Server>,
+    coordinator: Coordinator,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// Per-fleet construction knobs.
+#[derive(Clone)]
+pub struct FleetConfig {
+    pub roots: Arc<RootSet>,
+    pub coordinator: CoordinatorConfig,
+    pub server: ServerConfig,
+    /// Replica-side stem-cache slots (0 disables).
+    pub cache_slots: usize,
+}
+
+impl FleetConfig {
+    /// Small fleet config for tests: built-in mini dictionary, snappy
+    /// stop polling.
+    pub fn mini() -> FleetConfig {
+        FleetConfig {
+            roots: Arc::new(RootSet::builtin_mini()),
+            coordinator: CoordinatorConfig { workers: 1, ..Default::default() },
+            server: ServerConfig { handlers: 4, poll: Duration::from_millis(10), ..Default::default() },
+            cache_slots: 1024,
+        }
+    }
+
+    pub fn with_roots(roots: Arc<RootSet>) -> FleetConfig {
+        FleetConfig { roots, ..FleetConfig::mini() }
+    }
+}
+
+/// A fleet of in-process replicas with stable addresses.
+pub struct Fleet {
+    cfg: FleetConfig,
+    addrs: Vec<SocketAddr>,
+    replicas: Vec<Option<Replica>>,
+}
+
+impl Fleet {
+    /// Start `n` replicas on OS-assigned loopback ports.
+    pub fn start(n: usize, cfg: FleetConfig) -> Fleet {
+        let mut fleet = Fleet { cfg, addrs: Vec::with_capacity(n), replicas: Vec::with_capacity(n) };
+        for _ in 0..n {
+            let (replica, addr) = fleet.spawn("127.0.0.1:0").expect("fleet replica start");
+            fleet.addrs.push(addr);
+            fleet.replicas.push(Some(replica));
+        }
+        fleet
+    }
+
+    fn spawn(&self, bind: &str) -> anyhow::Result<(Replica, SocketAddr)> {
+        let coordinator = Coordinator::start_registry_cached(
+            self.cfg.coordinator,
+            self.cfg.roots.clone(),
+            StemmerConfig::default(),
+            self.cfg.cache_slots,
+        );
+        // On bind failure the coordinator drops here, which stops it.
+        let server = Arc::new(Server::bind_with(bind, coordinator.handle(), self.cfg.server)?);
+        let addr = server.local_addr()?;
+        let srv = server.clone();
+        let join = std::thread::spawn(move || {
+            let _ = srv.serve_forever();
+        });
+        Ok((Replica { server, coordinator, join }, addr))
+    }
+
+    /// The stable endpoint list to hand the gateway.
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    pub fn is_up(&self, i: usize) -> bool {
+        self.replicas[i].is_some()
+    }
+
+    /// Kill replica `i`: stop its server (in-flight AMA/1 clients get a
+    /// typed `SHUTDOWN` frame), join its threads, free its port.
+    pub fn kill(&mut self, i: usize) {
+        if let Some(r) = self.replicas[i].take() {
+            r.server.stop();
+            let _ = r.join.join();
+            r.coordinator.shutdown();
+        }
+    }
+
+    /// Restart replica `i` on its original port. The port was freed by
+    /// [`Fleet::kill`] moments ago; retry briefly in case the OS is slow
+    /// to release it.
+    pub fn restart(&mut self, i: usize) {
+        assert!(self.replicas[i].is_none(), "replica {i} is already running");
+        let bind = self.addrs[i].to_string();
+        let mut last_err = String::new();
+        for _ in 0..50 {
+            match self.spawn(&bind) {
+                Ok((replica, addr)) => {
+                    assert_eq!(addr, self.addrs[i], "restart must keep the address");
+                    self.replicas[i] = Some(replica);
+                    return;
+                }
+                Err(e) => {
+                    last_err = format!("{e:#}");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+        panic!("replica {i} could not rebind {bind}: {last_err}");
+    }
+
+    /// Stop everything.
+    pub fn shutdown(mut self) {
+        for i in 0..self.replicas.len() {
+            self.kill(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::AnalyzeOptions;
+    use crate::client::Client;
+
+    #[test]
+    fn fleet_serves_kills_and_restarts_on_stable_ports() {
+        let mut fleet = Fleet::start(2, FleetConfig::mini());
+        let addrs: Vec<_> = fleet.addrs().to_vec();
+        assert_eq!(addrs.len(), 2);
+
+        // both replicas serve AMA/1
+        for &a in &addrs {
+            let mut c = Client::connect(a).unwrap();
+            let r = c.analyze(&["سيلعبون"], &AnalyzeOptions::default()).unwrap();
+            assert_eq!(r[0].root, "لعب");
+        }
+
+        // kill replica 0: connections now fail
+        fleet.kill(0);
+        assert!(!fleet.is_up(0));
+        assert!(Client::connect(addrs[0]).is_err(), "killed replica must refuse connections");
+
+        // replica 1 is unaffected
+        let mut c = Client::connect(addrs[1]).unwrap();
+        assert!(c.ping().is_ok());
+
+        // restart replica 0 on the SAME port and serve again
+        fleet.restart(0);
+        assert!(fleet.is_up(0));
+        let mut c = Client::connect(addrs[0]).unwrap();
+        let r = c.analyze(&["قال"], &AnalyzeOptions::default()).unwrap();
+        assert_eq!(r[0].root, "قول");
+
+        fleet.shutdown();
+    }
+
+    /// The client-side reconnect bugfix (PR 7): one `Client` survives a
+    /// replica restart transparently for idempotent analyze calls.
+    #[test]
+    fn client_reconnects_across_replica_restart() {
+        let mut fleet = Fleet::start(1, FleetConfig::mini());
+        let addr = fleet.addrs()[0];
+        let mut client = Client::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(client.analyze(&["سيلعبون"], &AnalyzeOptions::default()).unwrap()[0].root, "لعب");
+
+        fleet.kill(0);
+        fleet.restart(0);
+
+        // pre-PR 7 this connection was poisoned forever; now the first
+        // idempotent call reconnects and succeeds
+        let r = client.analyze(&["قال"], &AnalyzeOptions::default()).unwrap();
+        assert_eq!(r[0].root, "قول");
+
+        // and the single-shot primitive still fails fast after a kill
+        fleet.kill(0);
+        assert!(client.analyze_once(&["قال"], &AnalyzeOptions::default()).is_err());
+        fleet.shutdown();
+    }
+}

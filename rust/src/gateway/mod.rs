@@ -1,0 +1,704 @@
+//! `ama gateway` (PR 7): a fault-tolerant sharding tier in front of a
+//! fleet of `ama serve` replicas.
+//!
+//! The gateway speaks AMA/1 on the front (same JSON-lines protocol, same
+//! port discipline — but AMA/1 *only*; legacy bare-line connections get
+//! one typed `BAD_REQUEST` frame and a close) and fans each envelope out
+//! to backend replicas:
+//!
+//! * **Sharding** ([`shard`]) — consistent hashing on the packed-word ⊕
+//!   options-byte key routes every distinct request to a stable owner
+//!   replica, so each replica's seqlock stem cache stays hot on its own
+//!   key range.
+//! * **Health + failover** ([`breaker`], [`pool`]) — per-endpoint
+//!   three-state circuit breakers driven by request outcomes plus a
+//!   background prober; bounded retry with exponential backoff + jitter;
+//!   ring-ordered failover; deadline propagation so a retry never
+//!   outlives the client's budget. Exhaustion maps to typed
+//!   `UNAVAILABLE` with `retry_after_ms` metadata — never a hang.
+//! * **Coalescing** ([`coalesce`]) — identical in-flight requests
+//!   collapse onto one backend dispatch (leader/follower on the shard
+//!   key).
+//! * **Admission control** ([`limits`]) — per-connection token buckets
+//!   and a gateway-wide in-flight cap shed load with typed
+//!   `RATE_LIMITED` errors carrying remaining-budget metadata.
+//! * **Fault injection** ([`fleet`]) — an in-process replica fleet with
+//!   kill/restart on stable ports, the substrate for the chaos test and
+//!   `ama gateway-loadtest`.
+//!
+//! Operational guidance (topology, breaker tuning, metrics to watch)
+//! lives in `docs/OPERATIONS.md`; wire semantics in `docs/PROTOCOL.md`.
+
+pub mod breaker;
+pub mod coalesce;
+pub mod fleet;
+pub mod limits;
+pub mod pool;
+pub mod shard;
+
+use crate::analysis::{ErrorCode, ErrorMeta, ServeError};
+use crate::chars::PackedWord;
+use crate::exec::{BoundedQueue, QueueError, WorkerPool};
+use crate::metrics::GatewayMetrics;
+use crate::protocol::{Envelope, Reply, WireResult, MAX_WORDS_PER_ENVELOPE};
+use crate::rng::SplitMix64;
+use crate::server::{read_frame, shutdown_goodbye, ConnMode, Frame};
+use anyhow::Result;
+use coalesce::{Claim, CoalesceMap, LeaderToken, WordOutcome};
+use limits::{InFlightCap, Shed, TokenBucket};
+use pool::{Pool, PoolConfig};
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Gateway policy knobs. Everything here maps to a CLI flag on
+/// `ama gateway` (see `cli.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct GatewayConfig {
+    /// Front-side connection-handler pool size.
+    pub handlers: usize,
+    /// Front-side read poll (stop-latency bound, like `ServerConfig`).
+    pub poll: Duration,
+    /// Accepted connections waiting for a free handler.
+    pub accept_backlog: usize,
+    /// Backend pool policy (breaker, retries, backoff, connect timeout).
+    pub pool: PoolConfig,
+    /// Per-envelope budget: dispatch + retries + failover must all fit.
+    pub request_deadline: Duration,
+    /// Background health-probe period (`ZERO` disables the prober).
+    pub probe_interval: Duration,
+    /// Per-connection token-bucket rate, words/sec (`0` = unlimited).
+    pub rate_per_sec: f64,
+    /// Token-bucket burst, words (defaults to 2× rate when 0).
+    pub burst: f64,
+    /// Gateway-wide concurrent-envelope cap (`0` = unlimited).
+    pub max_in_flight: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            handlers: 8,
+            poll: Duration::from_millis(50),
+            accept_backlog: 64,
+            pool: PoolConfig::default(),
+            request_deadline: Duration::from_secs(2),
+            probe_interval: Duration::from_millis(100),
+            rate_per_sec: 0.0,
+            burst: 0.0,
+            max_in_flight: 0,
+        }
+    }
+}
+
+/// The gateway core: pool + coalescer + admission + metrics. Cheap to
+/// share (`Arc`) across front handlers; [`Gateway::serve_line`] is the
+/// socket-free entry point the tests drive directly.
+pub struct Gateway {
+    cfg: GatewayConfig,
+    pool: Arc<Pool>,
+    coalesce: CoalesceMap,
+    in_flight: Arc<InFlightCap>,
+    metrics: Arc<GatewayMetrics>,
+    prober_stop: Arc<AtomicBool>,
+    prober: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Gateway {
+    pub fn new(endpoints: &[SocketAddr], cfg: GatewayConfig) -> Gateway {
+        let metrics = Arc::new(GatewayMetrics::new());
+        let pool = Arc::new(Pool::new(endpoints, cfg.pool, metrics.clone()));
+        let prober_stop = Arc::new(AtomicBool::new(false));
+        let prober = (!cfg.probe_interval.is_zero()).then(|| {
+            let pool = pool.clone();
+            let stop = prober_stop.clone();
+            let interval = cfg.probe_interval;
+            std::thread::Builder::new()
+                .name("gw-prober".to_string())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        pool.probe_all();
+                        // sleep in slices so shutdown is prompt
+                        let mut slept = Duration::ZERO;
+                        while slept < interval && !stop.load(Ordering::SeqCst) {
+                            let slice = (interval - slept).min(Duration::from_millis(20));
+                            std::thread::sleep(slice);
+                            slept += slice;
+                        }
+                    }
+                })
+                .expect("spawn gw-prober")
+        });
+        Gateway {
+            cfg,
+            pool,
+            coalesce: CoalesceMap::new(),
+            in_flight: InFlightCap::new(cfg.max_in_flight),
+            metrics,
+            prober_stop,
+            prober,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<GatewayMetrics> {
+        &self.metrics
+    }
+
+    pub fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+
+    pub fn config(&self) -> &GatewayConfig {
+        &self.cfg
+    }
+
+    /// A per-connection token bucket per this gateway's rate policy.
+    pub fn client_bucket(&self) -> TokenBucket {
+        if self.cfg.rate_per_sec <= 0.0 {
+            return TokenBucket::unlimited();
+        }
+        let burst =
+            if self.cfg.burst > 0.0 { self.cfg.burst } else { self.cfg.rate_per_sec * 2.0 };
+        TokenBucket::new(self.cfg.rate_per_sec, burst)
+    }
+
+    fn error_reply(id: u64, error: ServeError) -> String {
+        Reply::Error { id, error }.to_json()
+    }
+
+    fn shed_reply(id: u64, shed: Shed, what: &str) -> String {
+        Self::error_reply(
+            id,
+            ServeError::new(ErrorCode::RateLimited, format!("request shed: {what}")).with_meta(
+                ErrorMeta {
+                    retry_after_ms: Some(shed.retry_after_ms),
+                    remaining: Some(shed.remaining),
+                },
+            ),
+        )
+    }
+
+    /// Handle one AMA/1 request line end to end: parse, admit, shard,
+    /// coalesce, dispatch with failover, reassemble in request order.
+    /// Always returns exactly one reply line (no trailing newline).
+    ///
+    /// `bucket` is the calling connection's token bucket; `rng` jitters
+    /// this connection's retry backoff.
+    pub fn serve_line(&self, line: &str, bucket: &TokenBucket, rng: &mut SplitMix64) -> String {
+        let start = Instant::now();
+        let env = match Envelope::parse(line) {
+            Ok(env) => env,
+            Err((id, e)) => return Self::error_reply(id, e),
+        };
+        match env.op.as_str() {
+            // Answered locally: the gateway itself is alive. Replica
+            // liveness is the prober's job, not the client's.
+            "ping" => Reply::Results { id: env.id, results: Vec::new() }.to_json(),
+            "analyze" => {
+                let reply = self.serve_analyze(&env, bucket, rng);
+                self.metrics.record_latency(start.elapsed());
+                reply
+            }
+            other => Self::error_reply(
+                env.id,
+                ServeError::new(
+                    ErrorCode::UnknownOp,
+                    format!("unknown op {other:?} (analyze|ping)"),
+                ),
+            ),
+        }
+    }
+
+    fn serve_analyze(&self, env: &Envelope, bucket: &TokenBucket, rng: &mut SplitMix64) -> String {
+        if env.words.len() > MAX_WORDS_PER_ENVELOPE {
+            return Self::error_reply(
+                env.id,
+                ServeError::new(
+                    ErrorCode::BadRequest,
+                    format!(
+                        "{} words exceeds the per-envelope cap of {MAX_WORDS_PER_ENVELOPE}; \
+                         pipeline multiple envelopes instead",
+                        env.words.len()
+                    ),
+                ),
+            );
+        }
+        // Admission control first — shed *before* spending any work.
+        let _guard = match self.in_flight.try_acquire() {
+            Ok(g) => g,
+            Err(shed) => {
+                self.metrics.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+                return Self::shed_reply(env.id, shed, "gateway at max in-flight envelopes");
+            }
+        };
+        if let Err(shed) = bucket.try_take(env.words.len().max(1) as u64) {
+            self.metrics.shed_rate_limited.fetch_add(1, Ordering::Relaxed);
+            return Self::shed_reply(env.id, shed, "per-client word budget exhausted");
+        }
+        self.metrics.record_envelope(env.words.len() as u64);
+
+        // Validate *before* claiming coalesce leadership: an early return
+        // must never strand followers.
+        let opts = crate::analysis::EngineOpts::new(&env.opts);
+        let mut keys = Vec::with_capacity(env.words.len());
+        for (i, w) in env.words.iter().enumerate() {
+            let enc = PackedWord::encode(w);
+            if !enc.has_arabic() {
+                return Self::error_reply(
+                    env.id,
+                    ServeError::new(
+                        ErrorCode::BadWord,
+                        format!("words[{i}] ({w:?}) is empty or contains no Arabic letters"),
+                    ),
+                );
+            }
+            keys.push(shard::request_key(enc, opts));
+        }
+        let deadline = Instant::now() + self.cfg.request_deadline;
+
+        // Coalesce claims. Per-word sources:
+        //   Lead(k)        — we own dispatch k
+        //   FollowRemote(k)— another handler is dispatching; wait on k
+        //   FollowLocal(j) — duplicate of word j within this envelope
+        enum Source {
+            Lead(usize),
+            FollowRemote(usize),
+            FollowLocal(usize),
+        }
+        let mut first_by_key: HashMap<u128, usize> = HashMap::with_capacity(keys.len());
+        let mut sources = Vec::with_capacity(keys.len());
+        let mut leads: Vec<(LeaderToken, usize)> = Vec::new();
+        let mut follows: Vec<(coalesce::FollowerWait, usize)> = Vec::new();
+        let mut coalesced = 0u64;
+        for (i, &key) in keys.iter().enumerate() {
+            if let Some(&j) = first_by_key.get(&key) {
+                sources.push(Source::FollowLocal(j));
+                coalesced += 1;
+                continue;
+            }
+            first_by_key.insert(key, i);
+            match self.coalesce.claim(key) {
+                Claim::Leader(tok) => {
+                    sources.push(Source::Lead(leads.len()));
+                    leads.push((tok, i));
+                }
+                Claim::Follower(f) => {
+                    sources.push(Source::FollowRemote(follows.len()));
+                    follows.push((f, i));
+                    coalesced += 1;
+                }
+            }
+        }
+        self.metrics.coalesced_words.fetch_add(coalesced, Ordering::Relaxed);
+
+        // Group our leads by shard owner and dispatch every group —
+        // completing ALL lead slots (result or error) BEFORE waiting on
+        // any follower slot. That ordering is what makes cross-envelope
+        // coalescing deadlock-free.
+        let mut outcomes: Vec<Option<WordOutcome>> = Vec::new();
+        outcomes.resize_with(env.words.len(), || None);
+        let ring = self.pool.ring();
+        let mut groups: HashMap<usize, Vec<usize>> = HashMap::new(); // owner → lead idxs
+        for (k, (_tok, word_idx)) in leads.iter().enumerate() {
+            groups.entry(ring.owner(shard::ring_key(keys[*word_idx]))).or_default().push(k);
+        }
+        let mut group_list: Vec<(usize, Vec<usize>)> = groups.into_iter().collect();
+        group_list.sort_unstable_by_key(|(owner, _)| *owner);
+        // Tokens move out of `leads` as their group completes.
+        let mut tokens: Vec<Option<LeaderToken>> = leads.into_iter().map(|(t, _)| Some(t)).collect();
+        let lead_word_idx: Vec<usize> = sources
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| matches!(s, Source::Lead(_)).then_some(i))
+            .collect();
+        for (_owner, members) in group_list {
+            let words: Vec<&str> =
+                members.iter().map(|&k| env.words[lead_word_idx[k]].as_str()).collect();
+            let group_ring_key = shard::ring_key(keys[lead_word_idx[members[0]]]);
+            match self.pool.dispatch(group_ring_key, &words, &env.opts, deadline, rng) {
+                Ok(results) => {
+                    for (&k, r) in members.iter().zip(results) {
+                        let outcome = Ok(r);
+                        outcomes[lead_word_idx[k]] = Some(outcome.clone());
+                        if let Some(tok) = tokens[k].take() {
+                            tok.complete(outcome);
+                        }
+                    }
+                }
+                Err(err) => {
+                    for &k in &members {
+                        let outcome = Err(err.clone());
+                        outcomes[lead_word_idx[k]] = Some(outcome.clone());
+                        if let Some(tok) = tokens[k].take() {
+                            tok.complete(outcome);
+                        }
+                    }
+                }
+            }
+        }
+        drop(tokens); // any leaked token publishes UNAVAILABLE (Drop)
+
+        // Now (and only now) wait on other handlers' dispatches.
+        for (f, word_idx) in follows {
+            let outcome = f.wait_deadline(deadline).unwrap_or_else(|| {
+                Err(ServeError::new(
+                    ErrorCode::Unavailable,
+                    "coalesced dispatch did not complete within the request deadline",
+                )
+                .with_meta(ErrorMeta { retry_after_ms: Some(0), remaining: None }))
+            });
+            outcomes[word_idx] = Some(outcome);
+        }
+
+        // Reassemble in request order. Any word-level error fails the
+        // envelope (AMA/1 replies are results XOR error) — first error in
+        // word order wins, matching the backend's BAD_WORD behavior.
+        let mut results: Vec<WireResult> = Vec::with_capacity(env.words.len());
+        for (i, source) in sources.iter().enumerate() {
+            let outcome = match source {
+                Source::Lead(_) | Source::FollowRemote(_) => outcomes[i].clone(),
+                Source::FollowLocal(j) => outcomes[*j].clone(),
+            };
+            match outcome {
+                Some(Ok(mut r)) => {
+                    // Packing canonicalizes: different raw strings can
+                    // share a key. The echo must be what *this* client
+                    // sent for *this* slot.
+                    r.word = env.words[i].clone();
+                    results.push(r);
+                }
+                Some(Err(err)) => return Self::error_reply(env.id, err),
+                None => {
+                    return Self::error_reply(
+                        env.id,
+                        ServeError::new(
+                            ErrorCode::Internal,
+                            format!("word {i} has no outcome (gateway bug)"),
+                        ),
+                    )
+                }
+            }
+        }
+        Reply::Results { id: env.id, results }.to_json()
+    }
+
+    /// Stop the background prober (idempotent; also runs on drop).
+    pub fn stop_prober(&mut self) {
+        self.prober_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.prober.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop_prober();
+    }
+}
+
+/// Seed source for per-connection jitter RNGs (no wall clock in scripts
+/// or tests — determinism within a connection is a feature).
+static CONN_SEED: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+/// The TCP front: accept loop + fixed handler pool, mirroring
+/// [`crate::server::Server`]'s threading model, speaking AMA/1 only.
+pub struct GatewayServer {
+    listener: TcpListener,
+    gateway: Arc<Gateway>,
+    stop: Arc<AtomicBool>,
+}
+
+impl GatewayServer {
+    pub fn bind(addr: &str, gateway: Arc<Gateway>) -> Result<GatewayServer> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(GatewayServer { listener, gateway, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn gateway(&self) -> &Arc<Gateway> {
+        &self.gateway
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Request shutdown and poke the accept loop.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Ok(addr) = self.listener.local_addr() {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// Accept loop; returns after every handler has been joined.
+    pub fn serve_forever(&self) -> Result<()> {
+        let cfg = self.gateway.config();
+        let conn_q: Arc<BoundedQueue<TcpStream>> = BoundedQueue::new(cfg.accept_backlog.max(1));
+        let pool = {
+            let conn_q = conn_q.clone();
+            let gw = self.gateway.clone();
+            WorkerPool::spawn(cfg.handlers.max(1), "gw-handler", move |_id, sd| {
+                while let Ok(stream) = conn_q.pop() {
+                    if let Err(e) = handle_gateway_conn(stream, &gw, sd) {
+                        eprintln!("gateway connection error: {e:#}");
+                    }
+                }
+            })
+        };
+        let accept_result = (|| -> Result<()> {
+            for stream in self.listener.incoming() {
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let mut item = stream?;
+                loop {
+                    match conn_q.try_push(item) {
+                        Ok(()) => break,
+                        Err((back, QueueError::WouldBlock)) => {
+                            if self.stop.load(Ordering::SeqCst) {
+                                drop(back);
+                                break;
+                            }
+                            item = back;
+                            std::thread::sleep(self.gateway.config().poll);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Ok(())
+        })();
+        conn_q.close();
+        pool.join();
+        accept_result
+    }
+}
+
+/// Serve one front connection until EOF, an empty line, or stop.
+fn handle_gateway_conn(
+    stream: TcpStream,
+    gw: &Arc<Gateway>,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(gw.config().poll))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::with_capacity(128);
+    let mut mode = ConnMode::Unknown;
+    let bucket = gw.client_bucket();
+    let mut rng = SplitMix64::new(CONN_SEED.fetch_add(0x9E37_79B9, Ordering::Relaxed));
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            shutdown_goodbye(&mut writer, mode);
+            return Ok(());
+        }
+        let eof = match read_frame(&mut reader, &mut buf, shutdown)? {
+            Frame::Stopped => {
+                shutdown_goodbye(&mut writer, mode);
+                return Ok(());
+            }
+            Frame::Eof => return Ok(()),
+            Frame::Oversized => {
+                let mut reply = Gateway::error_reply(
+                    0,
+                    ServeError::new(
+                        ErrorCode::BadRequest,
+                        format!(
+                            "frame exceeds {} bytes",
+                            crate::protocol::MAX_FRAME_BYTES
+                        ),
+                    ),
+                );
+                reply.push('\n');
+                let _ = writer.write_all(reply.as_bytes());
+                return Ok(());
+            }
+            Frame::Line { eof } => eof,
+        };
+        let line_raw = String::from_utf8_lossy(&buf);
+        let line = line_raw.trim();
+        if line.is_empty() {
+            return Ok(()); // empty line closes, like the serve path
+        }
+        if mode == ConnMode::Unknown {
+            if !line.starts_with('{') {
+                // The gateway tier is AMA/1-only: answer with one typed
+                // frame (a legacy peer sees one JSON line instead of a
+                // silent drop) and close.
+                let mut reply = Gateway::error_reply(
+                    0,
+                    ServeError::new(
+                        ErrorCode::BadRequest,
+                        "gateway speaks AMA/1 only; use `ama serve` ports for the \
+                         legacy line protocol",
+                    ),
+                );
+                reply.push('\n');
+                let _ = writer.write_all(reply.as_bytes());
+                return Ok(());
+            }
+            mode = ConnMode::Ama1;
+        }
+        let mut reply = gw.serve_line(line, &bucket, &mut rng);
+        reply.push('\n');
+        writer.write_all(reply.as_bytes())?;
+        if eof {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::AnalyzeOptions;
+    use fleet::{Fleet, FleetConfig};
+
+    fn quick_cfg() -> GatewayConfig {
+        GatewayConfig {
+            poll: Duration::from_millis(10),
+            probe_interval: Duration::ZERO, // deterministic tests drive probes manually
+            request_deadline: Duration::from_secs(2),
+            pool: PoolConfig {
+                connect_timeout: Duration::from_millis(200),
+                ..PoolConfig::default()
+            },
+            ..GatewayConfig::default()
+        }
+    }
+
+    #[test]
+    fn serve_line_analyzes_through_one_replica() {
+        let fleet = Fleet::start(1, FleetConfig::mini());
+        let gw = Gateway::new(fleet.addrs(), quick_cfg());
+        let bucket = gw.client_bucket();
+        let mut rng = SplitMix64::new(1);
+        let req = Envelope::analyze(
+            7,
+            vec!["سيلعبون".to_string(), "قال".to_string(), "سيلعبون".to_string()],
+            AnalyzeOptions::default(),
+        )
+        .to_json();
+        let reply = Reply::parse(&gw.serve_line(&req, &bucket, &mut rng)).unwrap();
+        match reply {
+            Reply::Results { id, results } => {
+                assert_eq!(id, 7);
+                assert_eq!(results.len(), 3);
+                assert_eq!(results[0].root, "لعب");
+                assert_eq!(results[1].root, "قول");
+                assert_eq!(results[2].root, "لعب");
+                // echo preserved per-slot, including the duplicate
+                assert_eq!(results[2].word, "سيلعبون");
+            }
+            other => panic!("expected results, got {other:?}"),
+        }
+        // intra-envelope duplicate counted as coalesced, and only 2
+        // backend words dispatched for 3 front words
+        let snap = gw.metrics().snapshot();
+        assert_eq!(snap.words, 3);
+        assert_eq!(snap.backend_words, 2);
+        assert_eq!(snap.coalesced_words, 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn ping_answers_locally_and_bad_word_rejects() {
+        let fleet = Fleet::start(1, FleetConfig::mini());
+        let gw = Gateway::new(fleet.addrs(), quick_cfg());
+        let bucket = gw.client_bucket();
+        let mut rng = SplitMix64::new(2);
+        let pong = gw.serve_line(r#"{"id":1,"op":"ping"}"#, &bucket, &mut rng);
+        assert_eq!(Reply::parse(&pong).unwrap(), Reply::Results { id: 1, results: vec![] });
+        let bad = gw.serve_line(
+            r#"{"id":2,"op":"analyze","words":["hello"]}"#,
+            &bucket,
+            &mut rng,
+        );
+        match Reply::parse(&bad).unwrap() {
+            Reply::Error { id, error } => {
+                assert_eq!(id, 2);
+                assert_eq!(error.code, ErrorCode::BadWord);
+            }
+            other => panic!("expected BAD_WORD, got {other:?}"),
+        }
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn rate_limit_sheds_with_budget_metadata() {
+        let fleet = Fleet::start(1, FleetConfig::mini());
+        // rate 1/s: slow enough that refill during the first (real TCP)
+        // dispatch cannot hand the second envelope its 2 tokens back
+        let cfg = GatewayConfig { rate_per_sec: 1.0, burst: 3.0, ..quick_cfg() };
+        let gw = Gateway::new(fleet.addrs(), cfg);
+        let bucket = gw.client_bucket();
+        let mut rng = SplitMix64::new(3);
+        let req = |id: u64| {
+            Envelope::analyze(id, vec!["سيلعبون".to_string(); 2], AnalyzeOptions::default())
+                .to_json()
+        };
+        // burst of 3: first envelope (2 words) passes, second sheds
+        assert!(matches!(
+            Reply::parse(&gw.serve_line(&req(1), &bucket, &mut rng)).unwrap(),
+            Reply::Results { .. }
+        ));
+        match Reply::parse(&gw.serve_line(&req(2), &bucket, &mut rng)).unwrap() {
+            Reply::Error { error, .. } => {
+                assert_eq!(error.code, ErrorCode::RateLimited);
+                let meta = error.meta.expect("shed replies carry budget metadata");
+                assert!(meta.retry_after_ms.unwrap() > 0);
+                assert_eq!(meta.remaining, Some(1));
+            }
+            other => panic!("expected RATE_LIMITED, got {other:?}"),
+        }
+        assert_eq!(gw.metrics().snapshot().shed_rate_limited, 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn tcp_front_serves_ama1_and_rejects_legacy_lines() {
+        use std::io::{BufRead, Write};
+        let fleet = Fleet::start(2, FleetConfig::mini());
+        let gw = Arc::new(Gateway::new(fleet.addrs(), quick_cfg()));
+        let server = Arc::new(GatewayServer::bind("127.0.0.1:0", gw).unwrap());
+        let addr = server.local_addr().unwrap();
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+
+        // typed client end to end through the gateway
+        let mut client = crate::client::Client::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let r = client.analyze(&["سيلعبون", "قال"], &AnalyzeOptions::default()).unwrap();
+        assert_eq!(r[0].root, "لعب");
+        assert_eq!(r[1].root, "قول");
+
+        // legacy bare-line connection: one typed frame, then close
+        let mut legacy = TcpStream::connect(addr).unwrap();
+        legacy.write_all("سيلعبون\n".as_bytes()).unwrap();
+        let mut reader = std::io::BufReader::new(legacy.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match Reply::parse(line.trim()).unwrap() {
+            Reply::Error { error, .. } => assert_eq!(error.code, ErrorCode::BadRequest),
+            other => panic!("expected BAD_REQUEST frame, got {other:?}"),
+        }
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must close");
+
+        server.stop();
+        t.join().unwrap().unwrap();
+        fleet.shutdown();
+    }
+}

@@ -1,0 +1,458 @@
+//! Replica endpoint pool (PR 7): connection reuse, per-endpoint circuit
+//! breakers, bounded retry with exponential backoff + jitter, and
+//! ring-ordered failover.
+//!
+//! [`Pool::dispatch`] is the one entry point: given a shard key and a
+//! group of words, it walks the consistent-hash failover order
+//! ([`super::shard::ShardRing::candidates`]), asks each endpoint's
+//! breaker for admission, and attempts the dispatch with a bounded
+//! per-endpoint retry budget. Every attempt is deadline-checked first —
+//! a retry never outlives the client's budget — and exhaustion maps to a
+//! typed [`ErrorCode::Unavailable`] carrying the soonest useful
+//! retry-after, never a hang or a dropped connection.
+//!
+//! Outcome classification drives both the breaker and the failover
+//! decision:
+//!
+//! | outcome                         | breaker   | next action          |
+//! |---------------------------------|-----------|----------------------|
+//! | results (right count)           | success   | return them          |
+//! | `BAD_WORD`/`BAD_REQUEST`/…      | success   | propagate to client  |
+//! | `QUEUE_FULL`                    | success   | fail over (alive, saturated) |
+//! | `SHUTDOWN`                      | failure   | fail over            |
+//! | connect/read/write/EOF/garbage  | failure   | retry w/ backoff, then fail over |
+
+use super::breaker::{Admission, BreakerConfig, BreakerState, CircuitBreaker, Transition};
+use super::shard::ShardRing;
+use crate::analysis::{AnalyzeOptions, ErrorCode, ErrorMeta, ServeError};
+use crate::client::{Client, ClientError};
+use crate::metrics::GatewayMetrics;
+use crate::protocol::WireResult;
+use crate::rng::SplitMix64;
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Pool policy knobs (a subset of `GatewayConfig`, see `mod.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub breaker: BreakerConfig,
+    /// Attempts per endpoint before failing over (≥1).
+    pub attempts_per_endpoint: u32,
+    /// First retry backoff; doubles per retry up to `backoff_max`, with
+    /// ±50% jitter.
+    pub backoff_base: Duration,
+    pub backoff_max: Duration,
+    /// Bound on dialing a replica.
+    pub connect_timeout: Duration,
+    /// Idle connections kept per endpoint (excess are dropped).
+    pub idle_per_endpoint: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            breaker: BreakerConfig::default(),
+            attempts_per_endpoint: 2,
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(200),
+            connect_timeout: Duration::from_millis(250),
+            idle_per_endpoint: 8,
+        }
+    }
+}
+
+/// One backend replica: address + breaker + idle-connection stack.
+pub struct Endpoint {
+    pub addr: SocketAddr,
+    breaker: CircuitBreaker,
+    idle: Mutex<Vec<Client>>,
+}
+
+impl Endpoint {
+    fn new(addr: SocketAddr, breaker: BreakerConfig) -> Endpoint {
+        Endpoint { addr, breaker: CircuitBreaker::new(breaker), idle: Mutex::new(Vec::new()) }
+    }
+
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.state()
+    }
+
+    fn checkout(&self, connect_timeout: Duration) -> Result<Client, ClientError> {
+        if let Some(c) = self.idle.lock().unwrap().pop() {
+            return Ok(c);
+        }
+        Client::connect_timeout(self.addr, connect_timeout)
+    }
+
+    fn checkin(&self, client: Client, cap: usize) {
+        // A connection with unread bytes is out of sync (e.g. a buffered
+        // unsolicited SHUTDOWN goodbye) — never pool it.
+        if client.has_buffered_input() {
+            return;
+        }
+        let mut idle = self.idle.lock().unwrap();
+        if idle.len() < cap {
+            idle.push(client);
+        }
+    }
+
+    /// Drop every pooled connection (a transport failure means the peer
+    /// restarted; sibling connections are almost certainly dead too, and
+    /// each would otherwise cost a client one failed request to find out).
+    fn flush_idle(&self) {
+        self.idle.lock().unwrap().clear();
+    }
+}
+
+/// How one attempt against one endpoint resolved.
+enum Attempt {
+    Ok(Vec<WireResult>),
+    /// Client-caused typed error — the endpoint is healthy; propagate.
+    Propagate(ServeError),
+    /// Endpoint alive but saturated (`QUEUE_FULL`) — fail over.
+    Saturated(ServeError),
+    /// Transport-level / shutdown failure — counts against the breaker.
+    Transient(String),
+}
+
+pub struct Pool {
+    endpoints: Vec<Arc<Endpoint>>,
+    ring: ShardRing,
+    cfg: PoolConfig,
+    metrics: Arc<GatewayMetrics>,
+}
+
+impl Pool {
+    pub fn new(addrs: &[SocketAddr], cfg: PoolConfig, metrics: Arc<GatewayMetrics>) -> Pool {
+        assert!(!addrs.is_empty(), "pool needs at least one endpoint");
+        let cfg = PoolConfig { attempts_per_endpoint: cfg.attempts_per_endpoint.max(1), ..cfg };
+        Pool {
+            endpoints: addrs
+                .iter()
+                .map(|&a| Arc::new(Endpoint::new(a, cfg.breaker)))
+                .collect(),
+            ring: ShardRing::new(addrs.len(), 64),
+            cfg,
+            metrics,
+        }
+    }
+
+    pub fn endpoints(&self) -> &[Arc<Endpoint>] {
+        &self.endpoints
+    }
+
+    pub fn ring(&self) -> &ShardRing {
+        &self.ring
+    }
+
+    pub fn metrics(&self) -> &Arc<GatewayMetrics> {
+        &self.metrics
+    }
+
+    fn note(&self, t: Option<Transition>) {
+        let counter = match t {
+            Some(Transition::Opened) => &self.metrics.breaker_opened,
+            Some(Transition::HalfOpened) => &self.metrics.breaker_half_opened,
+            Some(Transition::Closed) => &self.metrics.breaker_closed,
+            None => return,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Dispatch one shard group. `ring_key` picks the owner (and the
+    /// failover order); `deadline` bounds everything — connects, reads,
+    /// backoff sleeps.
+    pub fn dispatch(
+        &self,
+        ring_key: u64,
+        words: &[&str],
+        opts: &AnalyzeOptions,
+        deadline: Instant,
+        rng: &mut SplitMix64,
+    ) -> Result<Vec<WireResult>, ServeError> {
+        self.metrics.record_dispatch(words.len() as u64);
+        let mut min_retry_after: Option<Duration> = None;
+        let mut saturated: Option<ServeError> = None;
+        let mut last_transient = String::new();
+        for (ci, &e) in self.ring.candidates(ring_key).iter().enumerate() {
+            let ep = &self.endpoints[e];
+            let mut failed_over = ci > 0;
+            for attempt in 0..self.cfg.attempts_per_endpoint {
+                if Instant::now() >= deadline {
+                    return Err(self.unavailable(
+                        format!("deadline exhausted ({last_transient})"),
+                        min_retry_after,
+                    ));
+                }
+                match ep.breaker.try_admit() {
+                    Admission::Denied { retry_after } => {
+                        min_retry_after =
+                            Some(min_retry_after.map_or(retry_after, |m| m.min(retry_after)));
+                        break; // next candidate
+                    }
+                    Admission::Probe(t) => self.note(t),
+                    Admission::Allowed => {}
+                }
+                if failed_over {
+                    self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                    failed_over = false; // count once per endpoint actually tried
+                }
+                if attempt > 0 {
+                    self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                match self.attempt(ep, words, opts, deadline) {
+                    Attempt::Ok(results) => {
+                        self.note(ep.breaker.record_success());
+                        return Ok(results);
+                    }
+                    Attempt::Propagate(err) => {
+                        self.note(ep.breaker.record_success());
+                        return Err(err);
+                    }
+                    Attempt::Saturated(err) => {
+                        self.note(ep.breaker.record_success());
+                        saturated = Some(err);
+                        break; // alive but full — fail over, don't retry here
+                    }
+                    Attempt::Transient(msg) => {
+                        last_transient = msg;
+                        ep.flush_idle();
+                        self.note(ep.breaker.record_failure());
+                        if attempt + 1 < self.cfg.attempts_per_endpoint {
+                            // exponential backoff + jitter, deadline-capped
+                            let exp = self
+                                .cfg
+                                .backoff_base
+                                .saturating_mul(1u32 << attempt.min(16))
+                                .min(self.cfg.backoff_max);
+                            let jittered = exp.mul_f64(0.5 + rng.f64());
+                            let now = Instant::now();
+                            if now + jittered >= deadline {
+                                return Err(self.unavailable(
+                                    format!("retry budget outlives deadline ({last_transient})"),
+                                    min_retry_after,
+                                ));
+                            }
+                            std::thread::sleep(jittered);
+                        }
+                    }
+                }
+            }
+        }
+        // Every candidate was down, circuit-open, or saturated. A
+        // saturated replica is the most actionable story to tell.
+        self.metrics.unavailable.fetch_add(1, Ordering::Relaxed);
+        match saturated {
+            Some(err) => Err(err),
+            None => Err(self.unavailable(
+                if last_transient.is_empty() {
+                    "every replica is circuit-open".to_string()
+                } else {
+                    format!("no healthy replica ({last_transient})")
+                },
+                min_retry_after,
+            )),
+        }
+    }
+
+    fn unavailable(&self, msg: String, retry_after: Option<Duration>) -> ServeError {
+        let retry = retry_after.unwrap_or(self.cfg.breaker.cooldown);
+        ServeError::new(ErrorCode::Unavailable, msg)
+            .with_meta(ErrorMeta { retry_after_ms: Some(retry.as_millis() as u64), remaining: None })
+    }
+
+    /// One wire round-trip against one endpoint.
+    fn attempt(
+        &self,
+        ep: &Endpoint,
+        words: &[&str],
+        opts: &AnalyzeOptions,
+        deadline: Instant,
+    ) -> Attempt {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Attempt::Transient("deadline exhausted before dial".to_string());
+        }
+        let mut client = match ep.checkout(self.cfg.connect_timeout.min(remaining)) {
+            Ok(c) => c,
+            Err(e) => return Attempt::Transient(format!("connect {}: {e}", ep.addr)),
+        };
+        if client.set_read_timeout(Some(remaining.max(Duration::from_millis(1)))).is_err() {
+            return Attempt::Transient(format!("socket setup {}", ep.addr));
+        }
+        match client.analyze_once(words, opts) {
+            Ok(results) => {
+                if results.len() != words.len() {
+                    return Attempt::Transient(format!(
+                        "{}: short reply ({} results for {} words)",
+                        ep.addr,
+                        results.len(),
+                        words.len()
+                    ));
+                }
+                ep.checkin(client, self.cfg.idle_per_endpoint);
+                Attempt::Ok(results)
+            }
+            Err(ClientError::Remote(err)) => match err.code {
+                // The replica is alive and made a policy decision.
+                ErrorCode::QueueFull => {
+                    ep.checkin(client, self.cfg.idle_per_endpoint);
+                    Attempt::Saturated(err)
+                }
+                // Going away — the connection is about to die with it.
+                ErrorCode::Shutdown => {
+                    Attempt::Transient(format!("{}: replica shutting down", ep.addr))
+                }
+                // Client-caused (BAD_WORD, BAD_REQUEST, …): propagate.
+                _ => {
+                    ep.checkin(client, self.cfg.idle_per_endpoint);
+                    Attempt::Propagate(err)
+                }
+            },
+            Err(ClientError::Io(e)) => Attempt::Transient(format!("{}: {e}", ep.addr)),
+            Err(ClientError::Protocol(m)) => {
+                Attempt::Transient(format!("{}: protocol: {m}", ep.addr))
+            }
+        }
+    }
+
+    /// One background health-probe pass: ping every endpoint through its
+    /// breaker. For open breakers this performs the half-open trial, so
+    /// replicas recover even with zero client traffic; for closed ones it
+    /// detects silent death before a client pays for the discovery.
+    pub fn probe_all(&self) {
+        for ep in &self.endpoints {
+            match ep.breaker.try_admit() {
+                Admission::Denied { .. } => continue, // cooling down
+                Admission::Probe(t) => self.note(t),
+                Admission::Allowed => {}
+            }
+            let ok = match ep.checkout(self.cfg.connect_timeout) {
+                Ok(mut c) => {
+                    let alive = c
+                        .set_read_timeout(Some(self.cfg.connect_timeout))
+                        .and_then(|_| c.ping_once())
+                        .is_ok();
+                    if alive {
+                        ep.checkin(c, self.cfg.idle_per_endpoint);
+                    }
+                    alive
+                }
+                Err(_) => false,
+            };
+            if ok {
+                self.note(ep.breaker.record_success());
+            } else {
+                self.metrics.probe_failures.fetch_add(1, Ordering::Relaxed);
+                ep.flush_idle();
+                self.note(ep.breaker.record_failure());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An address nothing listens on (bind, read the port, drop).
+    fn dead_addr() -> SocketAddr {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    }
+
+    fn fast_cfg() -> PoolConfig {
+        PoolConfig {
+            breaker: BreakerConfig {
+                failure_threshold: 2,
+                cooldown: Duration::from_millis(50),
+            },
+            attempts_per_endpoint: 2,
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(2),
+            connect_timeout: Duration::from_millis(100),
+            idle_per_endpoint: 2,
+        }
+    }
+
+    #[test]
+    fn dead_endpoints_yield_typed_unavailable_with_retry_meta() {
+        let metrics = Arc::new(GatewayMetrics::new());
+        let pool = Pool::new(&[dead_addr(), dead_addr()], fast_cfg(), metrics.clone());
+        let mut rng = SplitMix64::new(7);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let err = pool
+            .dispatch(1, &["سيلعبون"], &AnalyzeOptions::default(), deadline, &mut rng)
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unavailable);
+        let meta = err.meta.expect("unavailable carries retry-after meta");
+        assert!(meta.retry_after_ms.is_some());
+        // both endpoints were tried twice → breakers tripped
+        let snap = metrics.snapshot();
+        assert_eq!(snap.breaker_opened, 2, "{snap}");
+        assert!(snap.retries >= 1, "{snap}");
+        assert!(snap.failovers >= 1, "{snap}");
+        assert_eq!(snap.unavailable, 1);
+    }
+
+    #[test]
+    fn open_breakers_shortcut_to_unavailable_without_dialing() {
+        let metrics = Arc::new(GatewayMetrics::new());
+        let pool = Pool::new(&[dead_addr()], fast_cfg(), metrics.clone());
+        let mut rng = SplitMix64::new(7);
+        let deadline = || Instant::now() + Duration::from_secs(2);
+        // trip the breaker
+        let _ = pool.dispatch(1, &["قال"], &AnalyzeOptions::default(), deadline(), &mut rng);
+        assert_eq!(pool.endpoints()[0].breaker_state(), BreakerState::Open);
+        // now requests are denied instantly (no connect attempts)
+        let t0 = Instant::now();
+        let err = pool
+            .dispatch(2, &["قال"], &AnalyzeOptions::default(), deadline(), &mut rng)
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unavailable);
+        assert!(t0.elapsed() < Duration::from_millis(40), "open breaker must fail fast");
+    }
+
+    #[test]
+    fn deadline_bounds_the_whole_dispatch() {
+        let metrics = Arc::new(GatewayMetrics::new());
+        // long backoffs that would overrun the deadline if not capped
+        let cfg = PoolConfig {
+            backoff_base: Duration::from_secs(5),
+            backoff_max: Duration::from_secs(5),
+            ..fast_cfg()
+        };
+        let pool = Pool::new(&[dead_addr()], cfg, metrics);
+        let mut rng = SplitMix64::new(3);
+        let t0 = Instant::now();
+        let err = pool
+            .dispatch(
+                1,
+                &["قال"],
+                &AnalyzeOptions::default(),
+                t0 + Duration::from_millis(150),
+                &mut rng,
+            )
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unavailable);
+        assert!(
+            t0.elapsed() < Duration::from_millis(600),
+            "dispatch overran its deadline: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn probe_trips_breaker_on_dead_endpoint() {
+        let metrics = Arc::new(GatewayMetrics::new());
+        let pool = Pool::new(&[dead_addr()], fast_cfg(), metrics.clone());
+        pool.probe_all();
+        pool.probe_all();
+        assert_eq!(pool.endpoints()[0].breaker_state(), BreakerState::Open);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.probe_failures, 2);
+        assert_eq!(snap.breaker_opened, 1);
+    }
+}

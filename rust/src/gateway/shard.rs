@@ -1,0 +1,172 @@
+//! Consistent-hash shard ring over the replica pool (PR 7).
+//!
+//! Each endpoint contributes `vnodes` pseudo-random points on a u64 ring;
+//! a word's shard owner is the endpoint owning the first point at or
+//! after the word's key (wrapping). Virtual nodes smooth the per-endpoint
+//! load to within a few percent of uniform, and — the property the
+//! gateway actually cares about — keep the key→endpoint mapping *stable*:
+//! every replica's seqlock stem cache ([`crate::cache::StemCache`]) stays
+//! hot on its own key range, and a failed endpoint's keys redistribute
+//! across the survivors instead of reshuffling the whole space.
+//!
+//! Failover order is the ring walk: [`ShardRing::candidates`] yields all
+//! endpoints starting at the owner, each appearing once, so the breaker
+//! loop in [`super::pool`] tries the owner first and degrades to the
+//! next-nearest replicas in a deterministic order shared by every
+//! gateway instance with the same endpoint list.
+
+use crate::analysis::EngineOpts;
+use crate::chars::PackedWord;
+
+/// splitmix64 finalizer — same mixer as the stem cache's slot hash.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// The 128-bit dispatch key: packed word in bits 0..94, options byte in
+/// bits 96..104 — the same fold as the stem-cache key, so "identical
+/// request" means the same thing to the gateway's coalescer and to the
+/// replica's cache.
+#[inline]
+pub fn request_key(w: PackedWord, opts: EngineOpts) -> u128 {
+    w.0 | (opts.word() as u128) << 96
+}
+
+/// Collapse a 128-bit request key onto the u64 ring.
+#[inline]
+pub fn ring_key(key: u128) -> u64 {
+    mix64(key as u64 ^ mix64((key >> 64) as u64))
+}
+
+/// Consistent-hash ring: immutable after construction (membership changes
+/// mean building a new ring; the gateway's endpoint list is fixed per
+/// process — health is the breaker's job, not the ring's).
+pub struct ShardRing {
+    /// `(point, endpoint)` sorted by point.
+    points: Vec<(u64, usize)>,
+    endpoints: usize,
+}
+
+impl ShardRing {
+    /// Build a ring over `endpoints` members with `vnodes` points each.
+    pub fn new(endpoints: usize, vnodes: usize) -> ShardRing {
+        assert!(endpoints > 0, "ring needs at least one endpoint");
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(endpoints * vnodes);
+        for e in 0..endpoints {
+            for v in 0..vnodes {
+                // (e, v) packed into disjoint bit fields, then XOR-salted:
+                // mix64 is a bijection, so distinct (e, v) pairs can never
+                // collide and every endpoint keeps all its vnodes.
+                points.push((mix64(((e as u64) << 32 | v as u64) ^ 0x9E37_79B9_7F4A_7C15), e));
+            }
+        }
+        points.sort_unstable();
+        ShardRing { points, endpoints }
+    }
+
+    pub fn endpoints(&self) -> usize {
+        self.endpoints
+    }
+
+    /// The shard owner for a ring key: first point ≥ key, wrapping.
+    pub fn owner(&self, key: u64) -> usize {
+        let i = self.points.partition_point(|&(p, _)| p < key);
+        self.points[i % self.points.len()].1
+    }
+
+    /// Every endpoint exactly once, in failover order for `key` (owner
+    /// first, then the next distinct endpoints found walking the ring).
+    pub fn candidates(&self, key: u64) -> Vec<usize> {
+        let mut order = Vec::with_capacity(self.endpoints);
+        let mut seen = vec![false; self.endpoints];
+        let start = self.points.partition_point(|&(p, _)| p < key);
+        for i in 0..self.points.len() {
+            let e = self.points[(start + i) % self.points.len()].1;
+            if !seen[e] {
+                seen[e] = true;
+                order.push(e);
+                if order.len() == self.endpoints {
+                    break;
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::AnalyzeOptions;
+
+    #[test]
+    fn owner_is_stable_and_in_range() {
+        let ring = ShardRing::new(4, 64);
+        for k in 0..10_000u64 {
+            let key = mix64(k);
+            let o = ring.owner(key);
+            assert!(o < 4);
+            assert_eq!(o, ring.owner(key), "owner must be deterministic");
+        }
+    }
+
+    #[test]
+    fn candidates_cover_all_endpoints_owner_first() {
+        let ring = ShardRing::new(4, 32);
+        for k in 0..500u64 {
+            let key = mix64(k);
+            let c = ring.candidates(key);
+            assert_eq!(c.len(), 4);
+            assert_eq!(c[0], ring.owner(key), "owner leads the failover order");
+            let mut sorted = c.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "every endpoint appears once: {c:?}");
+        }
+    }
+
+    #[test]
+    fn load_spread_is_roughly_uniform() {
+        let ring = ShardRing::new(4, 64);
+        let mut counts = [0u64; 4];
+        for k in 0..40_000u64 {
+            counts[ring.owner(mix64(k))] += 1;
+        }
+        for (e, &c) in counts.iter().enumerate() {
+            // each endpoint should own 25% ± 12% absolute of the space
+            assert!(
+                (5_000..=20_000).contains(&c),
+                "endpoint {e} owns {c}/40000 keys — ring too lumpy: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn request_key_matches_cache_fold_and_separates_opts() {
+        let w = PackedWord::encode("سيلعبون");
+        let a = EngineOpts::new(&AnalyzeOptions::default());
+        let b = EngineOpts::new(&AnalyzeOptions {
+            infix: Some(false),
+            ..AnalyzeOptions::default()
+        });
+        assert_ne!(request_key(w, a), request_key(w, b), "options byte must separate keys");
+        assert_eq!(request_key(w, a) as u64 as u128 & 0xFFFF_FFFF_FFFF_FFFF, w.0 & 0xFFFF_FFFF_FFFF_FFFF);
+        // same word + same opts → same ring key (shard affinity)
+        assert_eq!(
+            ring_key(request_key(w, a)),
+            ring_key(request_key(PackedWord::encode("سيلعبون"), a))
+        );
+    }
+
+    #[test]
+    fn single_endpoint_ring_owns_everything() {
+        let ring = ShardRing::new(1, 8);
+        for k in 0..100 {
+            assert_eq!(ring.owner(mix64(k)), 0);
+            assert_eq!(ring.candidates(mix64(k)), vec![0]);
+        }
+    }
+}

@@ -229,6 +229,23 @@
 //! single-pass programs at load time (constants pre-materialized,
 //! shapes pre-checked), so the "hardware" backend's inner loop stops
 //! allocating one `Vec<i32>` per instruction per call.
+//!
+//! ## Fault-tolerant gateway (PR 7)
+//!
+//! [`gateway`] adds a sharding tier (`ama gateway`) in front of a fleet
+//! of `ama serve` replicas: consistent hashing on the packed-word ⊕
+//! options key ([`gateway::shard`]) keeps each replica's stem cache hot
+//! on its own key range; per-endpoint three-state circuit breakers
+//! ([`gateway::breaker`]) plus bounded backoff-with-jitter retries and
+//! ring-ordered failover ([`gateway::pool`]) turn replica failures into
+//! typed `UNAVAILABLE` errors with `retry_after_ms` metadata instead of
+//! hangs; identical in-flight requests coalesce onto one backend
+//! dispatch ([`gateway::coalesce`]); token-bucket + in-flight admission
+//! control ([`gateway::limits`]) sheds with typed `RATE_LIMITED` errors
+//! carrying the remaining budget. [`gateway::fleet`] hosts an
+//! in-process replica fleet with kill/restart on stable ports — the
+//! substrate for the chaos test, `ama gateway-loadtest`, and the
+//! verify.sh smoke.
 
 pub mod analysis;
 pub mod bench;
@@ -240,6 +257,7 @@ pub mod coordinator;
 pub mod corpus;
 pub mod eval;
 pub mod exec;
+pub mod gateway;
 pub mod hw;
 pub mod khoja;
 pub mod light;

@@ -47,6 +47,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "selftest" => cmd_selftest(&args),
         "bench" => cmd_bench(&args),
         "emit-hlo" => cmd_emit_hlo(&args),
+        "gateway" => cmd_gateway(&args),
+        "gateway-loadtest" => cmd_gateway_loadtest(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -887,6 +889,294 @@ fn cmd_bench(args: &Args) -> Result<()> {
         100.0 * cache_snap.cache_hit_rate()
     );
     println!("wrote {out_path}");
+    Ok(())
+}
+
+fn flag_f64(args: &Args, name: &str, default: f64) -> Result<f64> {
+    match args.flag(name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("{name}: invalid number {v:?}")),
+    }
+}
+
+/// Gateway policy from the shared flag set (used by both `ama gateway`
+/// and `ama gateway-loadtest`).
+fn gateway_config(args: &Args) -> Result<ama::gateway::GatewayConfig> {
+    use ama::gateway::breaker::BreakerConfig;
+    use ama::gateway::pool::PoolConfig;
+    Ok(ama::gateway::GatewayConfig {
+        handlers: args.flag_usize("--handlers", 8).map_err(|e| anyhow!(e))?,
+        pool: PoolConfig {
+            breaker: BreakerConfig {
+                failure_threshold: args
+                    .flag_u64("--failure-threshold", 3)
+                    .map_err(|e| anyhow!(e))? as u32,
+                cooldown: Duration::from_millis(
+                    args.flag_u64("--cooldown-ms", 500).map_err(|e| anyhow!(e))?,
+                ),
+            },
+            ..PoolConfig::default()
+        },
+        request_deadline: Duration::from_millis(
+            args.flag_u64("--deadline-ms", 2000).map_err(|e| anyhow!(e))?,
+        ),
+        probe_interval: Duration::from_millis(
+            args.flag_u64("--probe-ms", 100).map_err(|e| anyhow!(e))?,
+        ),
+        rate_per_sec: flag_f64(args, "--rate", 0.0)?,
+        burst: flag_f64(args, "--burst", 0.0)?,
+        max_in_flight: args.flag_usize("--max-in-flight", 0).map_err(|e| anyhow!(e))?,
+        ..ama::gateway::GatewayConfig::default()
+    })
+}
+
+/// `ama gateway`: the PR 7 fault-tolerant sharding tier. Fronts either an
+/// explicit `--endpoints` list of running `ama serve` replicas, or
+/// `--replicas N` in-process ones (a single-command demo topology).
+fn cmd_gateway(args: &Args) -> Result<()> {
+    use ama::gateway::fleet::{Fleet, FleetConfig};
+    use ama::gateway::{Gateway, GatewayServer};
+
+    let cfg = gateway_config(args)?;
+    let (endpoints, _fleet): (Vec<std::net::SocketAddr>, Option<Fleet>) =
+        match args.flag("--endpoints") {
+            Some(spec) => {
+                use std::net::ToSocketAddrs as _;
+                let mut addrs = Vec::new();
+                for item in spec.split(',') {
+                    let item = item.trim();
+                    addrs.push(
+                        item.to_socket_addrs()
+                            .with_context(|| format!("resolving endpoint {item}"))?
+                            .next()
+                            .ok_or_else(|| anyhow!("{item} resolved to no address"))?,
+                    );
+                }
+                anyhow::ensure!(!addrs.is_empty(), "--endpoints: empty list");
+                (addrs, None)
+            }
+            None => {
+                let n = args.flag_usize("--replicas", 2).map_err(|e| anyhow!(e))?.max(1);
+                let fleet = Fleet::start(n, FleetConfig::with_roots(load_roots(args)?));
+                println!("started {n} in-process replicas: {:?}", fleet.addrs());
+                let addrs = fleet.addrs().to_vec();
+                (addrs, Some(fleet))
+            }
+        };
+
+    let gw = Arc::new(Gateway::new(&endpoints, cfg));
+    let port = args.flag_usize("--port", 7610).map_err(|e| anyhow!(e))?;
+    let server = GatewayServer::bind(&format!("127.0.0.1:{port}"), gw)?;
+    println!(
+        "ama gateway on {} -> {} replicas ({} handlers; AMA/1 only; breaker \
+         threshold={} cooldown={}ms; probe every {}ms)",
+        server.local_addr()?,
+        endpoints.len(),
+        cfg.handlers,
+        cfg.pool.breaker.failure_threshold,
+        cfg.pool.breaker.cooldown.as_millis(),
+        cfg.probe_interval.as_millis(),
+    );
+    server.serve_forever()?;
+    Ok(())
+}
+
+/// `ama gateway-loadtest`: chaos/scaling harness behind one command.
+///
+/// * overhead — direct-vs-gateway AMA/1 load against the same 1-replica
+///   fleet (the <20% p50 acceptance figure);
+/// * scaling — gateway throughput at 1..N replicas;
+/// * `--chaos` — kill replica 0 mid-run and restart it, requiring zero
+///   errors/reorders and a visible breaker trip (the verify.sh smoke
+///   greps the `breaker tripped` / `zero-loss OK` lines).
+fn cmd_gateway_loadtest(args: &Args) -> Result<()> {
+    use ama::gateway::breaker::BreakerConfig;
+    use ama::gateway::fleet::{Fleet, FleetConfig};
+    use ama::gateway::{Gateway, GatewayServer};
+
+    let replicas = args.flag_usize("--replicas", 3).map_err(|e| anyhow!(e))?.max(1);
+    let conns = args.flag_usize("--conns", 16).map_err(|e| anyhow!(e))?.max(1);
+    let secs = args.flag_u64("--secs", 4).map_err(|e| anyhow!(e))?.max(1);
+    let depth = args.flag_usize("--depth", 8).map_err(|e| anyhow!(e))?.max(1);
+    let duration = Duration::from_secs(secs);
+    let roots = load_roots(args)?;
+    let n_words = args.flag_usize("--words", 2048).map_err(|e| anyhow!(e))?;
+    let corpus = corpus::generate(&roots, &CorpusConfig::small(n_words, 29));
+    let words: Vec<String> = corpus.tokens.iter().map(|t| t.word.to_string_ar()).collect();
+    // Mixed load: the fleet's registry backend serves all four engines.
+    let opts_cycle: Vec<AnalyzeOptions> =
+        Algorithm::ALL.iter().map(|&a| AnalyzeOptions::with_algorithm(a)).collect();
+    // Snappy fault policy so a short run can observe a full breaker cycle.
+    let mut cfg = gateway_config(args)?;
+    cfg.handlers = conns;
+    if args.flag("--failure-threshold").is_none() {
+        cfg.pool.breaker = BreakerConfig {
+            failure_threshold: 2,
+            cooldown: Duration::from_millis(args.flag_u64("--cooldown-ms", 250).unwrap_or(250)),
+        };
+    }
+    if args.flag("--probe-ms").is_none() {
+        cfg.probe_interval = Duration::from_millis(50);
+    }
+
+    let fleet_cfg = FleetConfig::with_roots(roots.clone());
+    let gw_stack = |n: usize| -> Result<(Fleet, Arc<Gateway>, Arc<GatewayServer>, std::net::SocketAddr)> {
+        let fleet = Fleet::start(n, fleet_cfg.clone());
+        let gw = Arc::new(Gateway::new(fleet.addrs(), cfg));
+        let server = Arc::new(GatewayServer::bind("127.0.0.1:0", gw.clone())?);
+        let addr = server.local_addr()?;
+        Ok((fleet, gw, server, addr))
+    };
+    let stop_stack = |server: Arc<GatewayServer>,
+                      t: std::thread::JoinHandle<Result<()>>,
+                      fleet: Fleet|
+     -> Result<()> {
+        server.stop();
+        t.join().expect("gateway serve thread")?;
+        fleet.shutdown();
+        Ok(())
+    };
+
+    // --- overhead: the same 1-replica fleet, direct vs through the gateway
+    println!("gateway-loadtest: overhead at 1 replica ({conns} conns × {secs}s, depth {depth})…");
+    let fleet = Fleet::start(1, fleet_cfg.clone());
+    let direct =
+        ama::bench::run_ama1_load(fleet.addrs()[0], conns, duration, depth, &words, &opts_cycle);
+    println!("  direct : {direct}");
+    let gw = Arc::new(Gateway::new(fleet.addrs(), cfg));
+    let server = Arc::new(GatewayServer::bind("127.0.0.1:0", gw.clone())?);
+    let addr = server.local_addr()?;
+    let srv = server.clone();
+    let t = std::thread::spawn(move || srv.serve_forever());
+    let gated = ama::bench::run_ama1_load(addr, conns, duration, depth, &words, &opts_cycle);
+    println!("  gateway: {gated}");
+    anyhow::ensure!(direct.errors + gated.errors == 0, "overhead phase not clean");
+    anyhow::ensure!(direct.reorders + gated.reorders == 0, "overhead phase reordered");
+    let overhead_p50 = if direct.rtt_p50_us > 0 {
+        gated.rtt_p50_us as f64 / direct.rtt_p50_us as f64 - 1.0
+    } else {
+        0.0
+    };
+    println!("  p50 overhead through the gateway: {:+.1}%", 100.0 * overhead_p50);
+    server.stop();
+    t.join().expect("gateway serve thread")?;
+    fleet.shutdown();
+
+    // --- scaling: gateway throughput at 1..replicas
+    let mut scaling: Vec<(usize, ama::bench::LoadOutcome)> = Vec::new();
+    let mut n = 1usize;
+    while n <= replicas {
+        println!("gateway-loadtest: scaling at {n} replica(s)…");
+        let (fleet, _gw, server, addr) = gw_stack(n)?;
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+        let o = ama::bench::run_ama1_load(addr, conns, duration, depth, &words, &opts_cycle);
+        println!("  {o}");
+        anyhow::ensure!(o.errors == 0 && o.reorders == 0, "scaling phase not clean at {n}");
+        stop_stack(server, t, fleet)?;
+        scaling.push((n, o));
+        n = if n * 2 <= replicas || n == replicas { n * 2 } else { replicas };
+    }
+
+    // --- chaos: kill replica 0 mid-run, restart it, demand no losses
+    let mut chaos_row = None;
+    if args.switch("--chaos") {
+        let n = replicas.max(2);
+        println!("gateway-loadtest: chaos at {n} replicas (kill+restart replica 0 mid-run)…");
+        let (fleet, gw, server, addr) = gw_stack(n)?;
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+        let fault = std::thread::spawn(move || {
+            let mut fleet = fleet;
+            std::thread::sleep(duration / 4);
+            fleet.kill(0);
+            std::thread::sleep(duration / 4);
+            fleet.restart(0);
+            fleet
+        });
+        let o = ama::bench::run_ama1_load_tolerant(addr, conns, duration, depth, &words, &opts_cycle);
+        let fleet = fault.join().expect("fault-injection thread");
+        let snap = gw.metrics().snapshot();
+        println!("  chaos  : {o}");
+        println!("  gateway: {snap}");
+        anyhow::ensure!(
+            o.errors == 0 && o.reorders == 0,
+            "chaos run lost or corrupted replies: {} errors, {} reorders",
+            o.errors,
+            o.reorders
+        );
+        anyhow::ensure!(
+            snap.breaker_opened >= 1 && snap.breaker_closed >= 1,
+            "chaos run never exercised the breaker: {snap:?}"
+        );
+        println!(
+            "  breaker tripped: opened={} half_opened={} closed={} failovers={} \
+             typed_shed={}",
+            snap.breaker_opened,
+            snap.breaker_half_opened,
+            snap.breaker_closed,
+            snap.failovers,
+            o.typed_shed
+        );
+        println!(
+            "  zero-loss OK: words={} errors=0 reorders=0 (shed replies were typed)",
+            o.words
+        );
+        stop_stack(server, t, fleet)?;
+        chaos_row = Some((o, snap));
+    }
+
+    if let Some(out_path) = args.flag("--out") {
+        let mut json = String::new();
+        json.push_str("{\n");
+        json.push_str("  \"schema\": \"ama-gateway-v1\",\n");
+        json.push_str("  \"pr\": 7,\n");
+        json.push_str(&format!("  \"conns\": {conns},\n"));
+        json.push_str(&format!("  \"secs\": {secs},\n"));
+        json.push_str(&format!("  \"depth\": {depth},\n"));
+        json.push_str(&format!("  \"gateway_p50_overhead\": {overhead_p50:.4},\n"));
+        json.push_str(&format!(
+            "  \"overhead\": {{\"direct_wps\": {:.1}, \"gateway_wps\": {:.1}, \
+             \"direct_p50_us\": {}, \"gateway_p50_us\": {}}},\n",
+            direct.wps(),
+            gated.wps(),
+            direct.rtt_p50_us,
+            gated.rtt_p50_us
+        ));
+        json.push_str("  \"scaling\": [\n");
+        for (i, (n, o)) in scaling.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"replicas\": {n}, \"wps\": {:.1}, \"rtt_p50_us\": {}, \
+                 \"rtt_p99_us\": {}, \"errors\": {}}}{}\n",
+                o.wps(),
+                o.rtt_p50_us,
+                o.rtt_p99_us,
+                o.errors,
+                if i + 1 < scaling.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("  ],\n");
+        match &chaos_row {
+            Some((o, snap)) => json.push_str(&format!(
+                "  \"chaos\": {{\"words\": {}, \"errors\": {}, \"reorders\": {}, \
+                 \"typed_shed\": {}, \"breaker_opened\": {}, \"breaker_half_opened\": {}, \
+                 \"breaker_closed\": {}, \"failovers\": {}, \"coalesced_words\": {}}}\n",
+                o.words,
+                o.errors,
+                o.reorders,
+                o.typed_shed,
+                snap.breaker_opened,
+                snap.breaker_half_opened,
+                snap.breaker_closed,
+                snap.failovers,
+                snap.coalesced_words
+            )),
+            None => json.push_str("  \"chaos\": null\n"),
+        }
+        json.push_str("}\n");
+        std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
+        println!("wrote {out_path}");
+    }
     Ok(())
 }
 

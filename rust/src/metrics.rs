@@ -264,6 +264,164 @@ impl std::fmt::Display for MetricsSnapshot {
     }
 }
 
+/// Lock-free gateway-tier counters (PR 7): one instance per running
+/// gateway, shared across its connection handlers and the health prober.
+/// Everything is a relaxed atomic increment on the hot path; the chaos
+/// harness reads a [`GatewaySnapshot`] to assert breaker transitions and
+/// loss-free failover.
+#[derive(Default)]
+pub struct GatewayMetrics {
+    /// AMA/1 envelopes accepted on the front side.
+    pub envelopes: AtomicU64,
+    /// Words carried by those envelopes.
+    pub words: AtomicU64,
+    /// Backend dispatch groups actually sent to replicas (after sharding
+    /// and coalescing collapse).
+    pub backend_dispatches: AtomicU64,
+    /// Words sent to replicas. `words - backend_words` is the coalescing
+    /// + dedup savings.
+    pub backend_words: AtomicU64,
+    /// Words answered by piggybacking on an identical in-flight dispatch
+    /// (never reached a replica).
+    pub coalesced_words: AtomicU64,
+    /// Backend attempts beyond the first for a dispatch group (backoff
+    /// retries on the same endpoint).
+    pub retries: AtomicU64,
+    /// Dispatch groups rerouted to a different replica after their shard
+    /// owner failed.
+    pub failovers: AtomicU64,
+    /// Breaker transitions closed→open (trip).
+    pub breaker_opened: AtomicU64,
+    /// Breaker transitions open→half-open (cooldown expired, trial
+    /// request admitted).
+    pub breaker_half_opened: AtomicU64,
+    /// Breaker transitions half-open→closed (trial succeeded; replica
+    /// recovered).
+    pub breaker_closed: AtomicU64,
+    /// Front-side requests shed by the per-client token bucket
+    /// (`RATE_LIMITED`).
+    pub shed_rate_limited: AtomicU64,
+    /// Front-side requests shed by the per-client in-flight cap
+    /// (`RATE_LIMITED` with retry-after, no token consumed).
+    pub shed_overloaded: AtomicU64,
+    /// Requests answered `UNAVAILABLE` (no healthy replica within the
+    /// retry/deadline budget).
+    pub unavailable: AtomicU64,
+    /// Background health-probe failures (prober-side view of outages).
+    pub probe_failures: AtomicU64,
+    /// Front-side request latency (envelope read → reply written).
+    latency: LatencyHistogram,
+}
+
+impl GatewayMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_envelope(&self, words: u64) {
+        self.envelopes.fetch_add(1, Ordering::Relaxed);
+        self.words.fetch_add(words, Ordering::Relaxed);
+    }
+
+    pub fn record_dispatch(&self, words: u64) {
+        self.backend_dispatches.fetch_add(1, Ordering::Relaxed);
+        self.backend_words.fetch_add(words, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latency.record(d);
+    }
+
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.latency
+    }
+
+    pub fn snapshot(&self) -> GatewaySnapshot {
+        GatewaySnapshot {
+            envelopes: self.envelopes.load(Ordering::Relaxed),
+            words: self.words.load(Ordering::Relaxed),
+            backend_dispatches: self.backend_dispatches.load(Ordering::Relaxed),
+            backend_words: self.backend_words.load(Ordering::Relaxed),
+            coalesced_words: self.coalesced_words.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            breaker_opened: self.breaker_opened.load(Ordering::Relaxed),
+            breaker_half_opened: self.breaker_half_opened.load(Ordering::Relaxed),
+            breaker_closed: self.breaker_closed.load(Ordering::Relaxed),
+            shed_rate_limited: self.shed_rate_limited.load(Ordering::Relaxed),
+            shed_overloaded: self.shed_overloaded.load(Ordering::Relaxed),
+            unavailable: self.unavailable.load(Ordering::Relaxed),
+            probe_failures: self.probe_failures.load(Ordering::Relaxed),
+            p50_us: self.latency.percentile_us(0.50),
+            p90_us: self.latency.percentile_us(0.90),
+            p99_us: self.latency.percentile_us(0.99),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewaySnapshot {
+    pub envelopes: u64,
+    pub words: u64,
+    pub backend_dispatches: u64,
+    pub backend_words: u64,
+    pub coalesced_words: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub breaker_opened: u64,
+    pub breaker_half_opened: u64,
+    pub breaker_closed: u64,
+    pub shed_rate_limited: u64,
+    pub shed_overloaded: u64,
+    pub unavailable: u64,
+    pub probe_failures: u64,
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+}
+
+impl GatewaySnapshot {
+    /// Fraction of front-side words that never cost a backend dispatch
+    /// (coalesced onto an identical in-flight request).
+    pub fn coalesce_rate(&self) -> f64 {
+        if self.words == 0 {
+            return 0.0;
+        }
+        self.coalesced_words as f64 / self.words as f64
+    }
+}
+
+impl std::fmt::Display for GatewaySnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "envelopes={} words={} p50={}us p90={}us p99={}us \
+             backend[dispatches={} words={}] coalesced={} ({:.3}) \
+             retries={} failovers={} \
+             breaker[opened={} half_opened={} closed={}] \
+             shed[rate_limited={} overloaded={}] unavailable={} probe_failures={}",
+            self.envelopes,
+            self.words,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.backend_dispatches,
+            self.backend_words,
+            self.coalesced_words,
+            self.coalesce_rate(),
+            self.retries,
+            self.failovers,
+            self.breaker_opened,
+            self.breaker_half_opened,
+            self.breaker_closed,
+            self.shed_rate_limited,
+            self.shed_overloaded,
+            self.unavailable,
+            self.probe_failures
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,6 +505,32 @@ mod tests {
         assert!((snap.cache_hit_rate() - 0.75).abs() < 1e-9);
         let line = format!("{snap}");
         assert!(line.contains("cache[hits=3 misses=1 rate=0.750]"), "{line}");
+    }
+
+    #[test]
+    fn gateway_counters_and_display() {
+        let g = GatewayMetrics::new();
+        g.record_envelope(8);
+        g.record_envelope(4);
+        g.record_dispatch(9);
+        g.coalesced_words.fetch_add(3, Ordering::Relaxed);
+        g.breaker_opened.fetch_add(1, Ordering::Relaxed);
+        g.breaker_half_opened.fetch_add(1, Ordering::Relaxed);
+        g.breaker_closed.fetch_add(1, Ordering::Relaxed);
+        g.shed_rate_limited.fetch_add(2, Ordering::Relaxed);
+        g.unavailable.fetch_add(5, Ordering::Relaxed);
+        g.record_latency(Duration::from_micros(100));
+        let snap = g.snapshot();
+        assert_eq!(snap.envelopes, 2);
+        assert_eq!(snap.words, 12);
+        assert_eq!(snap.backend_dispatches, 1);
+        assert_eq!(snap.backend_words, 9);
+        assert!((snap.coalesce_rate() - 0.25).abs() < 1e-9);
+        assert!(snap.p50_us > 0);
+        let line = format!("{snap}");
+        assert!(line.contains("breaker[opened=1 half_opened=1 closed=1]"), "{line}");
+        assert!(line.contains("shed[rate_limited=2 overloaded=0]"), "{line}");
+        assert!(line.contains("unavailable=5"), "{line}");
     }
 
     #[test]

@@ -581,6 +581,16 @@ impl Reply {
                 json_push_str(&mut out, error.code.as_str());
                 out.push_str(",\"msg\":");
                 json_push_str(&mut out, &error.msg);
+                // Gateway retry/budget metadata (PR 7) — optional fields
+                // old clients simply never look at.
+                if let Some(meta) = &error.meta {
+                    if let Some(ms) = meta.retry_after_ms {
+                        out.push_str(&format!(",\"retry_after_ms\":{ms}"));
+                    }
+                    if let Some(rem) = meta.remaining {
+                        out.push_str(&format!(",\"remaining\":{rem}"));
+                    }
+                }
                 out.push_str("}}");
             }
         }
@@ -596,7 +606,11 @@ impl Reply {
             let code = ErrorCode::from_name(code_str)
                 .ok_or_else(|| format!("unknown error code {code_str:?}"))?;
             let msg = err.get("msg").and_then(Json::as_str).unwrap_or("").to_string();
-            return Ok(Reply::Error { id, error: ServeError::new(code, msg) });
+            let meta = crate::analysis::ErrorMeta {
+                retry_after_ms: err.get("retry_after_ms").and_then(Json::as_u64),
+                remaining: err.get("remaining").and_then(Json::as_u64),
+            };
+            return Ok(Reply::Error { id, error: ServeError::new(code, msg).with_meta(meta) });
         }
         let arr = doc
             .get("results")
@@ -858,5 +872,36 @@ mod tests {
             error: ServeError::new(ErrorCode::QueueFull, "queue stayed full"),
         };
         assert_eq!(Reply::parse(&err.to_json()).unwrap(), err);
+    }
+
+    #[test]
+    fn error_reply_meta_roundtrips() {
+        use crate::analysis::ErrorMeta;
+        // Full meta survives the wire.
+        let err = Reply::Error {
+            id: 11,
+            error: ServeError::new(ErrorCode::RateLimited, "budget exhausted").with_meta(
+                ErrorMeta { retry_after_ms: Some(250), remaining: Some(0) },
+            ),
+        };
+        let line = err.to_json();
+        assert!(line.contains("\"retry_after_ms\":250"), "{line}");
+        assert!(line.contains("\"remaining\":0"), "{line}");
+        assert_eq!(Reply::parse(&line).unwrap(), err);
+
+        // Partial meta (only one field) also roundtrips.
+        let err = Reply::Error {
+            id: 12,
+            error: ServeError::new(ErrorCode::Unavailable, "all replicas down")
+                .with_meta(ErrorMeta { retry_after_ms: Some(1000), remaining: None }),
+        };
+        assert_eq!(Reply::parse(&err.to_json()).unwrap(), err);
+
+        // Meta-free errors keep the exact old wire shape (no extra keys).
+        let bare = Reply::Error { id: 13, error: ServeError::new(ErrorCode::Internal, "x") };
+        let line = bare.to_json();
+        assert!(!line.contains("retry_after_ms"), "{line}");
+        assert!(!line.contains("remaining"), "{line}");
+        assert_eq!(Reply::parse(&line).unwrap(), bare);
     }
 }

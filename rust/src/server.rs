@@ -213,13 +213,95 @@ impl Server {
 
 /// Which wire protocol a connection speaks — decided by its first line.
 #[derive(Clone, Copy, PartialEq, Eq)]
-enum ConnMode {
+pub(crate) enum ConnMode {
     /// Nothing read yet.
     Unknown,
     /// Bare words, tab-separated replies (the `nc` protocol).
     Legacy,
     /// JSON-lines envelopes (`crate::protocol`).
     Ama1,
+}
+
+/// Outcome of one framing read on a polled connection.
+pub(crate) enum Frame {
+    /// A complete line is in the buffer; `eof` means it was the last.
+    Line { eof: bool },
+    /// Clean EOF with nothing buffered.
+    Eof,
+    /// The line exceeded [`crate::protocol::MAX_FRAME_BYTES`].
+    Oversized,
+    /// The stop flag was observed while waiting for bytes.
+    Stopped,
+}
+
+/// Read one newline-terminated frame into `buf` (cleared first), polling
+/// the socket so `shutdown` is observed within one read-timeout tick.
+/// Accumulation is capped at `MAX_FRAME_BYTES` *inside* the loop via
+/// `Read::take` — a peer streaming bytes without a newline cannot grow
+/// `buf` without bound. Shared by the serve handler and the PR 7 gateway
+/// front, so both ends frame (and shed oversized frames) identically.
+pub(crate) fn read_frame(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    shutdown: &AtomicBool,
+) -> io::Result<Frame> {
+    buf.clear();
+    loop {
+        let room = (crate::protocol::MAX_FRAME_BYTES + 1).saturating_sub(buf.len()) as u64;
+        if room == 0 {
+            return Ok(Frame::Oversized);
+        }
+        let mut limited = (&mut *reader).take(room);
+        match limited.read_until(b'\n', buf) {
+            Ok(0) => {
+                return Ok(if buf.is_empty() { Frame::Eof } else { Frame::Line { eof: true } });
+            }
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    return Ok(Frame::Line { eof: false });
+                }
+                // read_until stopped without a newline: either the
+                // take-limit was exhausted (frame too big) or EOF landed
+                // mid-line.
+                return Ok(if buf.len() > crate::protocol::MAX_FRAME_BYTES {
+                    Frame::Oversized
+                } else {
+                    Frame::Line { eof: true }
+                });
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(Frame::Stopped);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// PR 7 hygiene: a stopping server tells in-flight AMA/1 clients *why*
+/// the connection is about to close — one unsolicited `SHUTDOWN` error
+/// frame (id 0, the connection-scoped id) instead of a silent FIN mid-
+/// session. Legacy connections have no error vocabulary and still get
+/// the plain close. Write errors are ignored: the peer may already be
+/// gone, and we are closing either way.
+pub(crate) fn shutdown_goodbye(writer: &mut TcpStream, mode: ConnMode) {
+    if mode != ConnMode::Ama1 {
+        return;
+    }
+    let mut frame = crate::protocol::Reply::Error {
+        id: 0,
+        error: crate::analysis::ServeError::new(
+            crate::analysis::ErrorCode::Shutdown,
+            "server stopping; reconnect and retry",
+        ),
+    }
+    .to_json();
+    frame.push('\n');
+    let _ = writer.write_all(frame.as_bytes());
 }
 
 /// Serve one connection until EOF, an empty line, or server stop.
@@ -252,56 +334,21 @@ fn handle_conn(
     let mut reply = String::new();
     loop {
         // A continuously-sending client never hits the timeout branch
-        // below, so the stop flag must also be polled between batches.
+        // inside read_frame, so the stop flag must also be polled between
+        // batches.
         if shutdown.load(Ordering::SeqCst) {
+            shutdown_goodbye(&mut writer, mode);
             return Ok(());
         }
-        // Wait (poll-blocking) for the next line. On a timeout tick any
-        // partial bytes stay accumulated in `buf` (read_until appends).
-        // Accumulation is capped at MAX_FRAME_BYTES *inside* the loop via
-        // `Read::take` — a peer streaming bytes without a newline cannot
-        // grow `buf` without bound.
-        buf.clear();
-        let mut eof = false;
-        let mut oversized = false;
-        loop {
-            let room =
-                (crate::protocol::MAX_FRAME_BYTES + 1).saturating_sub(buf.len()) as u64;
-            if room == 0 {
-                oversized = true;
-                break;
+        let (eof, oversized) = match read_frame(&mut reader, &mut buf, shutdown)? {
+            Frame::Stopped => {
+                shutdown_goodbye(&mut writer, mode);
+                return Ok(());
             }
-            let mut limited = (&mut reader).take(room);
-            match limited.read_until(b'\n', &mut buf) {
-                Ok(0) => {
-                    eof = true;
-                    break;
-                }
-                Ok(_) => {
-                    if buf.last() == Some(&b'\n') {
-                        break; // complete line
-                    }
-                    // read_until stopped without a newline: either the
-                    // take-limit was exhausted (frame too big) or EOF
-                    // landed mid-line.
-                    if buf.len() > crate::protocol::MAX_FRAME_BYTES {
-                        oversized = true;
-                    } else {
-                        eof = true;
-                    }
-                    break;
-                }
-                Err(e)
-                    if e.kind() == io::ErrorKind::WouldBlock
-                        || e.kind() == io::ErrorKind::TimedOut =>
-                {
-                    if shutdown.load(Ordering::SeqCst) {
-                        return Ok(());
-                    }
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
+            Frame::Eof => return Ok(()), // clean EOF between requests
+            Frame::Oversized => (false, true),
+            Frame::Line { eof } => (eof, false),
+        };
         if oversized {
             // Never a valid frame in either protocol. Answer typed when
             // the peer speaks (or might speak) AMA/1, then hang up.
@@ -320,9 +367,6 @@ fn handle_conn(
                 writer.write_all(b"\n")?;
             }
             return Ok(());
-        }
-        if eof && buf.is_empty() {
-            return Ok(()); // clean EOF between requests
         }
         // First-line sniffing: a `{` opener selects AMA/1 for the whole
         // connection; anything else is the legacy bare-line protocol.
@@ -595,6 +639,61 @@ mod tests {
         stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(addr);
         t.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    /// PR 7 hygiene: a stopping server emits one typed `SHUTDOWN` error
+    /// frame to connected AMA/1 clients before closing — never a silent
+    /// mid-session FIN. Legacy connections still close bare.
+    #[test]
+    fn stop_sends_typed_shutdown_frame_to_ama1_clients() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let server = Arc::new(
+            Server::bind_with(
+                "127.0.0.1:0",
+                coord.handle(),
+                ServerConfig { poll: Duration::from_millis(10), ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let addr = server.local_addr().unwrap();
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+
+        // An AMA/1 client mid-session (one request exchanged, now idle).
+        let mut client = crate::client::Client::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        client.ping().unwrap();
+        // A legacy client on the same port.
+        let mut legacy = TcpStream::connect(addr).unwrap();
+        legacy.write_all("قال\n".as_bytes()).unwrap();
+        let mut legacy_reader = BufReader::new(legacy.try_clone().unwrap());
+        let mut line = String::new();
+        legacy_reader.read_line(&mut line).unwrap();
+        assert!(line.contains("قول"), "{line}");
+
+        server.stop();
+        t.join().unwrap().unwrap();
+
+        // The AMA/1 client reads the goodbye as a typed error frame.
+        match client.recv() {
+            Ok(crate::protocol::Reply::Error { id, error }) => {
+                assert_eq!(id, 0, "shutdown frames use the connection-scoped id 0");
+                assert_eq!(error.code, crate::analysis::ErrorCode::Shutdown);
+            }
+            other => panic!("expected typed SHUTDOWN frame, got {other:?}"),
+        }
+        // …and a helper call surfaces it as Remote(SHUTDOWN), not a
+        // protocol error, even though it is unsolicited. The reconnect
+        // path does not mask it (nothing listens anymore → Io).
+        match client.analyze_once(&["قال"], &crate::analysis::AnalyzeOptions::default()) {
+            Err(crate::client::ClientError::Io(_)) | Err(crate::client::ClientError::Remote(_)) => {}
+            other => panic!("poisoned connection must fail, got {other:?}"),
+        }
+        // The legacy connection got no JSON garbage: next read is EOF.
+        line.clear();
+        assert_eq!(legacy_reader.read_line(&mut line).unwrap(), 0, "legacy close stays bare: {line:?}");
+
         coord.shutdown();
     }
 

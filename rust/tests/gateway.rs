@@ -1,0 +1,309 @@
+//! Chaos tests for the PR 7 gateway tier: sustained load through a real
+//! TCP gateway front while a backend replica is killed and restarted
+//! mid-run. The acceptance bar (ISSUE PR 7):
+//!
+//! * zero lost or reordered replies — every request gets exactly one
+//!   reply, every reply echoes its words in submission order with the
+//!   roots the stemmer computes directly;
+//! * clients see **only typed `UNAVAILABLE`** while capacity is gone —
+//!   never a hang, a raw disconnect surfaced as garbage, or a wrong
+//!   answer;
+//! * the victim's breaker demonstrably walks open → half-open → closed
+//!   (visible in `GatewayMetrics`), and the fleet serves again after the
+//!   restart.
+
+use ama::analysis::{AnalyzeOptions, ErrorCode};
+use ama::chars::ArabicWord;
+use ama::client::{Client, ClientError};
+use ama::gateway::breaker::BreakerConfig;
+use ama::gateway::fleet::{Fleet, FleetConfig};
+use ama::gateway::pool::PoolConfig;
+use ama::gateway::{Gateway, GatewayConfig, GatewayServer};
+use ama::protocol::{Envelope, Reply};
+use ama::rng::SplitMix64;
+use ama::roots::RootSet;
+use ama::stemmer::Stemmer;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const VOCAB: [&str; 6] = ["يدرس", "قال", "سيلعبون", "فتزحزحت", "يلعب", "كتب"];
+
+/// Expected root per vocab word, computed by direct stemming against the
+/// same builtin-mini dictionary the fleet serves.
+fn expected_roots() -> HashMap<String, String> {
+    let stemmer = Stemmer::with_defaults(Arc::new(RootSet::builtin_mini()));
+    VOCAB
+        .iter()
+        .map(|w| {
+            let res = stemmer.stem(&ArabicWord::encode(w));
+            (w.to_string(), res.root_word().to_string_ar())
+        })
+        .collect()
+}
+
+/// Snappy failure detection + recovery so the whole chaos cycle fits in
+/// a couple of seconds of test time.
+fn chaos_cfg() -> GatewayConfig {
+    GatewayConfig {
+        poll: Duration::from_millis(10),
+        request_deadline: Duration::from_secs(2),
+        probe_interval: Duration::from_millis(25),
+        pool: PoolConfig {
+            breaker: BreakerConfig {
+                failure_threshold: 2,
+                cooldown: Duration::from_millis(150),
+            },
+            attempts_per_endpoint: 2,
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(5),
+            connect_timeout: Duration::from_millis(100),
+            idle_per_endpoint: 4,
+        },
+        ..GatewayConfig::default()
+    }
+}
+
+/// The headline chaos test: 4 concurrent clients sustain batched load
+/// through the TCP gateway front against 3 replicas while replica 0 is
+/// killed and later restarted. Failover should absorb almost everything;
+/// whatever cannot be absorbed must surface as typed `UNAVAILABLE`.
+#[test]
+fn chaos_kill_and_restart_replica_under_load_loses_nothing() {
+    const CLIENTS: usize = 4;
+    let expected = expected_roots();
+
+    let mut fleet = Fleet::start(3, FleetConfig::mini());
+    let gw = Arc::new(Gateway::new(fleet.addrs(), chaos_cfg()));
+    let server = Arc::new(GatewayServer::bind("127.0.0.1:0", gw.clone()).unwrap());
+    let addr = server.local_addr().unwrap();
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve_forever());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|id| {
+            let stop = stop.clone();
+            let expected = expected.clone();
+            std::thread::spawn(move || -> (u64, u64) {
+                let mut client = Client::connect(addr).unwrap();
+                client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                let mut rng = SplitMix64::new(0xC1A0 + id as u64);
+                let (mut ok, mut unavailable) = (0u64, 0u64);
+                while !stop.load(Ordering::SeqCst) {
+                    // 1–4 words per envelope, rotating through the vocab
+                    let n = 1 + rng.index(4);
+                    let batch: Vec<&str> =
+                        (0..n).map(|_| VOCAB[rng.index(VOCAB.len())]).collect();
+                    match client.analyze_once(&batch, &AnalyzeOptions::default()) {
+                        Ok(results) => {
+                            assert_eq!(results.len(), batch.len(), "client {id}: lost words");
+                            for (w, r) in batch.iter().zip(&results) {
+                                assert_eq!(&r.word, w, "client {id}: reply out of order");
+                                assert_eq!(
+                                    &r.root, &expected[*w],
+                                    "client {id}: wrong root for {w}"
+                                );
+                            }
+                            ok += 1;
+                        }
+                        // The only acceptable failure while capacity is
+                        // gone: typed, retryable, with a retry hint.
+                        Err(ClientError::Remote(err)) => {
+                            assert_eq!(
+                                err.code,
+                                ErrorCode::Unavailable,
+                                "client {id}: non-UNAVAILABLE error under chaos: {err}"
+                            );
+                            assert!(
+                                err.meta.and_then(|m| m.retry_after_ms).is_some(),
+                                "client {id}: UNAVAILABLE without a retry hint"
+                            );
+                            unavailable += 1;
+                        }
+                        Err(other) => {
+                            panic!("client {id}: untyped failure under chaos: {other}")
+                        }
+                    }
+                }
+                (ok, unavailable)
+            })
+        })
+        .collect();
+
+    // Chaos choreography: let load flow, kill replica 0, leave it dark
+    // long enough for its breaker to trip (prober probes every 25 ms,
+    // threshold 2), then restart it on the same port and give the
+    // half-open path time to close the breaker again.
+    std::thread::sleep(Duration::from_millis(300));
+    fleet.kill(0);
+    std::thread::sleep(Duration::from_millis(500));
+    fleet.restart(0);
+    std::thread::sleep(Duration::from_millis(500));
+    stop.store(true, Ordering::SeqCst);
+
+    let mut total_ok = 0u64;
+    let mut total_unavailable = 0u64;
+    for w in workers {
+        let (ok, unavailable) = w.join().unwrap();
+        assert!(ok > 0, "a client made no progress at all");
+        total_ok += ok;
+        total_unavailable += unavailable;
+    }
+    assert!(total_ok > 50, "suspiciously little traffic flowed: {total_ok}");
+
+    // With two healthy replicas the ring failover should absorb the
+    // outage almost entirely.
+    assert!(
+        total_unavailable <= total_ok / 4,
+        "failover barely worked: {total_unavailable} unavailable vs {total_ok} ok"
+    );
+
+    // The victim's breaker visibly walked the full cycle.
+    let snap = gw.metrics().snapshot();
+    assert!(snap.breaker_opened >= 1, "breaker never opened: {snap:?}");
+    assert!(snap.breaker_half_opened >= 1, "breaker never half-opened: {snap:?}");
+    assert!(snap.breaker_closed >= 1, "breaker never closed again: {snap:?}");
+    assert!(snap.probe_failures >= 1, "the prober never saw the outage: {snap:?}");
+
+    // Fully recovered: a fresh client round-trips through every shard.
+    let mut client = Client::connect(addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let all: Vec<&str> = VOCAB.to_vec();
+    let results = client.analyze(&all, &AnalyzeOptions::default()).unwrap();
+    for (w, r) in all.iter().zip(&results) {
+        assert_eq!(&r.root, &expected[*w], "post-recovery wrong root for {w}");
+    }
+
+    server.stop();
+    serve_thread.join().unwrap().unwrap();
+    fleet.shutdown();
+}
+
+/// Breaker lifecycle against a single replica, where failover cannot
+/// mask the outage: every request during the dark window must come back
+/// as typed `UNAVAILABLE` (with retry metadata), and after the restart
+/// the prober's half-open trial closes the breaker with no client help.
+#[test]
+fn single_replica_outage_is_typed_unavailable_then_recovers() {
+    let mut fleet = Fleet::start(1, FleetConfig::mini());
+    let cfg = GatewayConfig {
+        pool: PoolConfig {
+            attempts_per_endpoint: 1, // keep the dark-window loop fast
+            ..chaos_cfg().pool
+        },
+        request_deadline: Duration::from_millis(500),
+        ..chaos_cfg()
+    };
+    let gw = Gateway::new(fleet.addrs(), cfg);
+    let bucket = gw.client_bucket();
+    let mut rng = SplitMix64::new(7);
+    let mut next_id = 0u64;
+    let mut request = |gw: &Gateway, rng: &mut SplitMix64, id: &mut u64| -> Reply {
+        *id += 1;
+        let env = Envelope::analyze(*id, vec!["سيلعبون".to_string()], AnalyzeOptions::default());
+        Reply::parse(&gw.serve_line(&env.to_json(), &bucket, rng)).unwrap()
+    };
+
+    // healthy
+    match request(&gw, &mut rng, &mut next_id) {
+        Reply::Results { results, .. } => assert_eq!(results[0].root, "لعب"),
+        other => panic!("healthy fleet failed: {other:?}"),
+    }
+
+    // dark: every reply is UNAVAILABLE + retry hint — nothing else
+    fleet.kill(0);
+    let dark_until = Instant::now() + Duration::from_millis(400);
+    let mut dark_replies = 0u64;
+    while Instant::now() < dark_until {
+        match request(&gw, &mut rng, &mut next_id) {
+            Reply::Error { error, .. } => {
+                assert_eq!(error.code, ErrorCode::Unavailable, "dark window: {error}");
+                let retry = error.meta.and_then(|m| m.retry_after_ms);
+                assert!(retry.is_some(), "UNAVAILABLE without retry_after_ms");
+                dark_replies += 1;
+            }
+            other => panic!("impossible success with zero replicas: {other:?}"),
+        }
+        // with the breaker open each reply is near-instant; don't spin
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(dark_replies >= 3, "dark window produced almost no traffic");
+    let mid = gw.metrics().snapshot();
+    assert!(mid.breaker_opened >= 1, "breaker never opened: {mid:?}");
+    assert_eq!(mid.breaker_closed, 0, "nothing should close while dark");
+    assert!(mid.unavailable >= 1, "unavailable counter never moved");
+
+    // restart: the background prober alone must close the breaker
+    fleet.restart(0);
+    let recovered_by = Instant::now() + Duration::from_secs(3);
+    loop {
+        match request(&gw, &mut rng, &mut next_id) {
+            Reply::Results { results, .. } => {
+                assert_eq!(results[0].root, "لعب");
+                break;
+            }
+            Reply::Error { error, .. } => {
+                assert_eq!(error.code, ErrorCode::Unavailable, "recovery window: {error}");
+                assert!(Instant::now() < recovered_by, "never recovered after restart");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+    let snap = gw.metrics().snapshot();
+    assert!(snap.breaker_half_opened >= 1, "no half-open trial recorded: {snap:?}");
+    assert!(snap.breaker_closed >= 1, "breaker never closed: {snap:?}");
+    fleet.shutdown();
+}
+
+/// Cross-connection coalescing: concurrent envelopes for the same word
+/// through the TCP front collapse onto fewer backend dispatches, and
+/// every follower still gets a correct, correctly-echoed reply.
+#[test]
+fn concurrent_identical_requests_coalesce() {
+    const CLIENTS: usize = 8;
+    const ROUNDS: usize = 30;
+    let fleet = Fleet::start(1, FleetConfig::mini());
+    let gw = Arc::new(Gateway::new(fleet.addrs(), chaos_cfg()));
+    let server = Arc::new(GatewayServer::bind("127.0.0.1:0", gw.clone()).unwrap());
+    let addr = server.local_addr().unwrap();
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve_forever());
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                for _ in 0..ROUNDS {
+                    // all clients hammer the same word at the same time
+                    let r = client.analyze(&["سيلعبون"], &AnalyzeOptions::default()).unwrap();
+                    assert_eq!(r[0].word, "سيلعبون");
+                    assert_eq!(r[0].root, "لعب");
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let snap = gw.metrics().snapshot();
+    assert_eq!(snap.words, (CLIENTS * ROUNDS) as u64);
+    // Coalescing is timing-dependent; with 8 clients racing the same key
+    // at least *some* overlap must have been captured.
+    assert!(
+        snap.coalesced_words > 0,
+        "8 clients × 30 rounds on one word never overlapped: {snap:?}"
+    );
+    assert_eq!(
+        snap.backend_words + snap.coalesced_words,
+        snap.words,
+        "every word is either dispatched or coalesced: {snap:?}"
+    );
+
+    server.stop();
+    serve_thread.join().unwrap().unwrap();
+    fleet.shutdown();
+}

@@ -104,6 +104,15 @@ else
 fi
 echo "cache loadtest smoke OK"
 
+echo "== gateway chaos smoke (2 replicas, 2s mixed load, forced replica kill) =="
+./target/release/ama gateway-loadtest --replicas 2 --conns 8 --secs 2 \
+  --depth 4 --words 500 --chaos --out /tmp/ama_gateway_smoke.json \
+  | tee /tmp/ama_gateway_smoke.txt
+grep -q 'breaker tripped' /tmp/ama_gateway_smoke.txt
+grep -q 'zero-loss OK' /tmp/ama_gateway_smoke.txt
+grep -q '"schema": "ama-gateway-v1"' /tmp/ama_gateway_smoke.json
+echo "gateway chaos smoke OK"
+
 echo "== protocol conformance smoke (AMA/1 + legacy line, one server) =="
 if command -v python3 >/dev/null 2>&1; then
   scripts/protocol_check.sh
