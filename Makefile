@@ -20,8 +20,12 @@
 #   make gateway-loadtest — gateway scaling + chaos run (PR 7): in-process
 #                     replica fleet behind `ama gateway`, mixed AMA/1 load,
 #                     forced replica kill+restart; writes BENCH_PR7.json
+#   make index-bench — corpus-engine run (PR 8): staged pipeline over a
+#                     calibrated synthetic corpus → AMAIDX01 snapshot +
+#                     accuracy harness, three root searches against it,
+#                     and the index rows/accuracy object in BENCH_PR8.json
 
-.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check gateway-loadtest
+.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check gateway-loadtest index-bench
 
 data:
 	cd python && python3 -m compile.gen_roots ../data
@@ -70,3 +74,14 @@ gateway-loadtest:
 	./target/release/ama gateway-loadtest --replicas 3 --conns 16 --secs 4 \
 		--depth 8 --chaos --out BENCH_PR7.json
 	grep -q '"schema": "ama-gateway-v1"' BENCH_PR7.json
+
+index-bench:
+	cargo build --release
+	./target/release/ama index corpus:small:20000 --seed 9 --out /tmp/ama_index_bench.idx
+	./target/release/ama search /tmp/ama_index_bench.idx درس --top 5
+	./target/release/ama search /tmp/ama_index_bench.idx قال --top 5
+	./target/release/ama search /tmp/ama_index_bench.idx درس قال --top 5
+	AMA_BENCH_FAST=1 ./target/release/ama bench json --pr 8 --out BENCH_PR8.json
+	grep -q 'index/pipeline_build' BENCH_PR8.json
+	grep -q 'index/search' BENCH_PR8.json
+	grep -q '"accuracy"' BENCH_PR8.json

@@ -51,6 +51,9 @@ const VALUE_FLAGS: &[&str] = &[
     "--cooldown-ms",
     "--failure-threshold",
     "--probe-ms",
+    "--top",
+    "--doc-words",
+    "--window",
 ];
 
 impl Args {
@@ -165,6 +168,19 @@ SUBCOMMANDS:
                           replicas instead) [--handlers H] [--rate R] [--burst B]
                           [--max-in-flight M] [--deadline-ms D]
                           [--cooldown-ms C] [--failure-threshold F] [--probe-ms P]
+    index <inputs…>       build a root-keyed inverted index (PR 8): run the
+                          staged document pipeline (tokenize → segment →
+                          batch analyze → optional re-rank) over text files,
+                          a directory of them, or a named synthetic corpus
+                          (`corpus:quran`, `corpus:ankabut`,
+                          `corpus:small:N`) and write an AMAIDX01 snapshot
+                          [--out ama.idx] [--doc-words N] [--workers N]
+                          [--rerank] [--window W] [--no-infix]
+                          (corpus inputs carry gold roots: prints the
+                          accuracy harness vs the paper's 87.7%/90.7%)
+    search IDX <words…>   query an index snapshot: words analyze to roots,
+                          postings intersect (AND), docs rank by root
+                          frequency [--top K] [--algo …] [--no-infix]
     gateway-loadtest      chaos/scaling harness: in-process replica fleet
                           behind a gateway, mixed AMA/1 load, optional forced
                           replica kill+restart mid-run [--replicas N]

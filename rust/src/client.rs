@@ -24,7 +24,7 @@
 //! its own retry/failover budget.
 
 use crate::analysis::{AnalyzeOptions, ServeError};
-use crate::protocol::{Envelope, Reply, WireResult};
+use crate::protocol::{Envelope, Reply, WireHit, WireResult};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
@@ -195,6 +195,76 @@ impl Client {
         }
     }
 
+    /// Send `env` verbatim — the caller's id is preserved, not
+    /// reassigned — and read one reply, which must echo that id (or the
+    /// connection-scoped id 0 for unsolicited errors). The gateway's
+    /// op-forwarding path uses this so front-client correlation ids
+    /// survive the hop untouched.
+    pub fn request_reply(&mut self, env: &Envelope) -> Result<Reply, ClientError> {
+        let mut line = env.to_json();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        let reply = self.recv()?;
+        if reply.id() == env.id || reply.id() == 0 {
+            Ok(reply)
+        } else {
+            Err(ClientError::Protocol(format!(
+                "reply id {} does not match forwarded id {}",
+                reply.id(),
+                env.id
+            )))
+        }
+    }
+
+    /// Single-shot `index` op: submit one document's tokens for
+    /// server-side indexing. NOT retried — indexing mutates replica
+    /// state, so a retry after an ambiguous failure could double-post.
+    /// Returns `(doc_id, words_posted)`.
+    pub fn index_once(
+        &mut self,
+        doc: &str,
+        words: &[&str],
+        opts: &AnalyzeOptions,
+    ) -> Result<(u64, u64), ClientError> {
+        let env =
+            Envelope::index(0, doc, words.iter().map(|w| w.to_string()).collect(), *opts);
+        let id = self.send(env)?;
+        match self.recv()? {
+            Reply::Indexed { id: rid, doc, posted, .. } if rid == id => Ok((doc, posted)),
+            Reply::Error { id: rid, error } if rid == id || rid == 0 => {
+                Err(ClientError::Remote(error))
+            }
+            other => Err(ClientError::Protocol(format!(
+                "unexpected reply (id {}) to index request {id}",
+                other.id()
+            ))),
+        }
+    }
+
+    /// Single-shot `search` op: root-based retrieval over the server's
+    /// index. Read-only and idempotent, but kept single-shot for
+    /// symmetry with the gateway pool's own retry budget.
+    pub fn search_once(
+        &mut self,
+        words: &[&str],
+        opts: &AnalyzeOptions,
+        top: Option<u64>,
+    ) -> Result<Vec<WireHit>, ClientError> {
+        let env =
+            Envelope::search(0, words.iter().map(|w| w.to_string()).collect(), *opts, top);
+        let id = self.send(env)?;
+        match self.recv()? {
+            Reply::Search { id: rid, hits } if rid == id => Ok(hits),
+            Reply::Error { id: rid, error } if rid == id || rid == 0 => {
+                Err(ClientError::Remote(error))
+            }
+            other => Err(ClientError::Protocol(format!(
+                "unexpected reply (id {}) to search request {id}",
+                other.id()
+            ))),
+        }
+    }
+
     /// Liveness check: `{"op":"ping"}` → empty results. Reconnects and
     /// retries once like [`Client::analyze`].
     pub fn ping(&mut self) -> Result<(), ClientError> {
@@ -211,7 +281,14 @@ impl Client {
     /// count against the breaker, not be masked by a retry).
     pub fn ping_once(&mut self) -> Result<(), ClientError> {
         let env =
-            Envelope { id: 0, op: "ping".to_string(), words: Vec::new(), opts: Default::default() };
+            Envelope {
+                id: 0,
+                op: "ping".to_string(),
+                words: Vec::new(),
+                opts: Default::default(),
+                doc: None,
+                top: None,
+            };
         let id = self.send(env)?;
         match self.recv()? {
             Reply::Results { id: rid, .. } if rid == id => Ok(()),

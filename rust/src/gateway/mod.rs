@@ -202,11 +202,16 @@ impl Gateway {
                 self.metrics.record_latency(start.elapsed());
                 reply
             }
+            "index" | "search" => {
+                let reply = self.serve_retrieval(&env, bucket, rng);
+                self.metrics.record_latency(start.elapsed());
+                reply
+            }
             other => Self::error_reply(
                 env.id,
                 ServeError::new(
                     ErrorCode::UnknownOp,
-                    format!("unknown op {other:?} (analyze|ping)"),
+                    format!("unknown op {other:?} (analyze|index|search|ping)"),
                 ),
             ),
         }
@@ -385,6 +390,64 @@ impl Gateway {
         Reply::Results { id: env.id, results }.to_json()
     }
 
+    /// Forward a retrieval op (PR 8 `index`/`search`) to the replica that
+    /// homes the corpus index. All retrieval traffic shares ONE shard key
+    /// ([`RETRIEVAL_HOME_KEY`]), so index writes and the searches that
+    /// read them land on the same replica — the index lives in that
+    /// replica's memory. The ring's candidate walk still provides
+    /// failover when the home is down; that degraded mode trades index
+    /// locality for availability (`docs/PROTOCOL.md` calls it out).
+    fn serve_retrieval(&self, env: &Envelope, bucket: &TokenBucket, rng: &mut SplitMix64) -> String {
+        if env.words.len() > MAX_WORDS_PER_ENVELOPE {
+            return Self::error_reply(
+                env.id,
+                ServeError::new(
+                    ErrorCode::BadRequest,
+                    format!(
+                        "{} words exceeds the per-envelope cap of {MAX_WORDS_PER_ENVELOPE}; \
+                         split the document across envelopes instead",
+                        env.words.len()
+                    ),
+                ),
+            );
+        }
+        let _guard = match self.in_flight.try_acquire() {
+            Ok(g) => g,
+            Err(shed) => {
+                self.metrics.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+                return Self::shed_reply(env.id, shed, "gateway at max in-flight envelopes");
+            }
+        };
+        if let Err(shed) = bucket.try_take(env.words.len().max(1) as u64) {
+            self.metrics.shed_rate_limited.fetch_add(1, Ordering::Relaxed);
+            return Self::shed_reply(env.id, shed, "per-client word budget exhausted");
+        }
+        self.metrics.record_envelope(env.words.len() as u64);
+        let deadline = Instant::now() + self.cfg.request_deadline;
+        // `search` is read-only → safe to resend after an ambiguous
+        // failure; `index` mutates replica state → it is not.
+        let retry_safe = env.op == "search";
+        let home = shard::ring_key(RETRIEVAL_HOME_KEY);
+        match self.pool.forward(home, env, retry_safe, deadline, rng) {
+            Ok(reply) => {
+                // The forwarded envelope carried the front client's id, so
+                // the echo normally matches already — but rewrite anyway so
+                // an id-0 (connection-scoped) backend frame can never leak
+                // a foreign correlation id to the front client.
+                let reply = match reply {
+                    Reply::Results { results, .. } => Reply::Results { id: env.id, results },
+                    Reply::Indexed { doc, name, words, posted, roots, .. } => {
+                        Reply::Indexed { id: env.id, doc, name, words, posted, roots }
+                    }
+                    Reply::Search { hits, .. } => Reply::Search { id: env.id, hits },
+                    Reply::Error { error, .. } => Reply::Error { id: env.id, error },
+                };
+                reply.to_json()
+            }
+            Err(err) => Self::error_reply(env.id, err),
+        }
+    }
+
     /// Stop the background prober (idempotent; also runs on drop).
     pub fn stop_prober(&mut self) {
         self.prober_stop.store(true, Ordering::SeqCst);
@@ -399,6 +462,12 @@ impl Drop for Gateway {
         self.stop_prober();
     }
 }
+
+/// The one shard key every retrieval op (`index`/`search`) homes on, so
+/// the corpus index accumulates on a single stable replica. The value is
+/// arbitrary ("AMAIDX" as ASCII) — any fixed constant works, because the
+/// ring maps it to one owner plus a deterministic failover order.
+const RETRIEVAL_HOME_KEY: u128 = 0x414D_4149_4458;
 
 /// Seed source for per-connection jitter RNGs (no wall clock in scripts
 /// or tests — determinism within a connection is a feature).

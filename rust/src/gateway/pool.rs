@@ -27,7 +27,7 @@ use super::shard::ShardRing;
 use crate::analysis::{AnalyzeOptions, ErrorCode, ErrorMeta, ServeError};
 use crate::client::{Client, ClientError};
 use crate::metrics::GatewayMetrics;
-use crate::protocol::WireResult;
+use crate::protocol::{Envelope, Reply, WireResult};
 use crate::rng::SplitMix64;
 use std::net::SocketAddr;
 use std::sync::atomic::Ordering;
@@ -104,6 +104,19 @@ impl Endpoint {
     fn flush_idle(&self) {
         self.idle.lock().unwrap().clear();
     }
+}
+
+/// How one verbatim-forward attempt resolved (PR 8 retrieval ops).
+enum Forward {
+    Ok(Reply),
+    /// Typed remote error — the endpoint is healthy; propagate.
+    Remote(ServeError),
+    /// Transport-level failure. `sent` says whether the request bytes may
+    /// have reached the replica: `false` means the failure happened before
+    /// anything was written (connect/setup), so a resend is always safe;
+    /// `true` means the op may already have been applied remotely, so only
+    /// idempotent ops may retry.
+    Failed { msg: String, sent: bool },
 }
 
 /// How one attempt against one endpoint resolved.
@@ -254,6 +267,157 @@ impl Pool {
                 },
                 min_retry_after,
             )),
+        }
+    }
+
+    /// Forward one envelope verbatim (PR 8: `index`/`search` retrieval
+    /// ops). Same breaker/backoff/failover spine as [`Pool::dispatch`],
+    /// with two differences: the reply shape is op-specific so the caller
+    /// gets the raw [`Reply`] back (ids untouched — the front client's
+    /// correlation id survives the hop), and `retry_safe` gates what
+    /// happens when an attempt fails *after* the request may have been
+    /// written. `search` is read-only → full retry/failover; `index`
+    /// mutates replica state → an ambiguous failure returns a typed
+    /// `UNAVAILABLE` instead of risking a double-post.
+    pub fn forward(
+        &self,
+        ring_key: u64,
+        env: &Envelope,
+        retry_safe: bool,
+        deadline: Instant,
+        rng: &mut SplitMix64,
+    ) -> Result<Reply, ServeError> {
+        self.metrics.record_dispatch(env.words.len() as u64);
+        let mut min_retry_after: Option<Duration> = None;
+        let mut last_err = String::new();
+        for (ci, &e) in self.ring.candidates(ring_key).iter().enumerate() {
+            let ep = &self.endpoints[e];
+            let mut failed_over = ci > 0;
+            for attempt in 0..self.cfg.attempts_per_endpoint {
+                if Instant::now() >= deadline {
+                    return Err(self.unavailable(
+                        format!("deadline exhausted ({last_err})"),
+                        min_retry_after,
+                    ));
+                }
+                match ep.breaker.try_admit() {
+                    Admission::Denied { retry_after } => {
+                        min_retry_after =
+                            Some(min_retry_after.map_or(retry_after, |m| m.min(retry_after)));
+                        break; // next candidate
+                    }
+                    Admission::Probe(t) => self.note(t),
+                    Admission::Allowed => {}
+                }
+                if failed_over {
+                    self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                    failed_over = false;
+                }
+                if attempt > 0 {
+                    self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                match self.attempt_forward(ep, env, deadline) {
+                    Forward::Ok(reply) => {
+                        self.note(ep.breaker.record_success());
+                        return Ok(reply);
+                    }
+                    Forward::Remote(err) => {
+                        self.note(ep.breaker.record_success());
+                        return Err(err);
+                    }
+                    Forward::Failed { msg, sent } => {
+                        last_err = msg;
+                        ep.flush_idle();
+                        self.note(ep.breaker.record_failure());
+                        if sent && !retry_safe {
+                            // The request may already have been applied on
+                            // the replica; a blind resend could double-apply
+                            // a mutating op. Surface the ambiguity instead.
+                            return Err(self.unavailable(
+                                format!(
+                                    "non-idempotent `{}` failed after dispatch; \
+                                     not retrying ({last_err})",
+                                    env.op
+                                ),
+                                min_retry_after,
+                            ));
+                        }
+                        if attempt + 1 < self.cfg.attempts_per_endpoint {
+                            let exp = self
+                                .cfg
+                                .backoff_base
+                                .saturating_mul(1u32 << attempt.min(16))
+                                .min(self.cfg.backoff_max);
+                            let jittered = exp.mul_f64(0.5 + rng.f64());
+                            let now = Instant::now();
+                            if now + jittered >= deadline {
+                                return Err(self.unavailable(
+                                    format!("retry budget outlives deadline ({last_err})"),
+                                    min_retry_after,
+                                ));
+                            }
+                            std::thread::sleep(jittered);
+                        }
+                    }
+                }
+            }
+        }
+        self.metrics.unavailable.fetch_add(1, Ordering::Relaxed);
+        Err(self.unavailable(
+            if last_err.is_empty() {
+                "every replica is circuit-open".to_string()
+            } else {
+                format!("no healthy replica ({last_err})")
+            },
+            min_retry_after,
+        ))
+    }
+
+    /// One verbatim envelope round-trip against one endpoint. The
+    /// `sent` flag in [`Forward::Failed`] encodes whether request bytes
+    /// may have reached the peer — the ambiguity [`Pool::forward`] needs
+    /// to refuse blind retries of mutating ops.
+    fn attempt_forward(&self, ep: &Endpoint, env: &Envelope, deadline: Instant) -> Forward {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Forward::Failed {
+                msg: "deadline exhausted before dial".to_string(),
+                sent: false,
+            };
+        }
+        let mut client = match ep.checkout(self.cfg.connect_timeout.min(remaining)) {
+            Ok(c) => c,
+            Err(e) => {
+                return Forward::Failed { msg: format!("connect {}: {e}", ep.addr), sent: false }
+            }
+        };
+        if client.set_read_timeout(Some(remaining.max(Duration::from_millis(1)))).is_err() {
+            return Forward::Failed { msg: format!("socket setup {}", ep.addr), sent: false };
+        }
+        match client.request_reply(env) {
+            Ok(Reply::Error { error, .. }) => match error.code {
+                // Going away — the connection dies with the replica, and
+                // whether the op was applied first is unknowable here.
+                ErrorCode::Shutdown => Forward::Failed {
+                    msg: format!("{}: replica shutting down", ep.addr),
+                    sent: true,
+                },
+                _ => {
+                    ep.checkin(client, self.cfg.idle_per_endpoint);
+                    Forward::Remote(error)
+                }
+            },
+            Ok(reply) => {
+                ep.checkin(client, self.cfg.idle_per_endpoint);
+                Forward::Ok(reply)
+            }
+            Err(ClientError::Remote(err)) => Forward::Remote(err),
+            Err(ClientError::Io(e)) => {
+                Forward::Failed { msg: format!("{}: {e}", ep.addr), sent: true }
+            }
+            Err(ClientError::Protocol(m)) => {
+                Forward::Failed { msg: format!("{}: protocol: {m}", ep.addr), sent: true }
+            }
         }
     }
 

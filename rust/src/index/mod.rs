@@ -1,0 +1,530 @@
+//! Corpus engine (PR 8): inverted root→postings index over the staged
+//! document pipeline.
+//!
+//! The IR papers this stemmer descends from (Bessou & Touahria,
+//! PAPERS.md) index documents by *root*, not surface form — one key
+//! covers every inflection of a root, which is exactly what the packed
+//! dictionary key already is: the root's canonical [`PackedWord`] u128.
+//! This module turns the word-in/root-out engine into a
+//! document-in/retrieval-out one:
+//!
+//! - [`pipeline`]: the staged document pipeline (tokenize → segment →
+//!   batch analyze → optional CBAS re-rank) on the `exec` primitives.
+//! - [`CorpusIndex`]: the in-memory inverted index — root key →
+//!   postings (doc, position, interned surface form, confidence).
+//! - [`snapshot`]: the `AMAIDX01` on-disk format (build once, load
+//!   across restarts; checksummed, byte-stable).
+//! - [`IndexService`]: the shared, capped, mutex-guarded index behind
+//!   the AMA/1 `index`/`search` ops (`protocol.rs`).
+//! - [`accuracy_harness`]: pipeline accuracy over the calibrated
+//!   synthetic corpus against the paper's 87.7%/90.7% reference points,
+//!   with and without the context re-rank stage.
+
+pub mod pipeline;
+pub mod postings;
+pub mod snapshot;
+
+use crate::analysis::{Analysis, AnalyzeOptions, ErrorCode, ServeError};
+use crate::chars::{ArabicWord, PackedWord};
+use crate::corpus::Corpus;
+use crate::eval::{evaluate, AccuracyReport};
+use crate::light::VotingAnalyzer;
+use crate::roots::RootSet;
+use crate::stemmer::{MatchKind, StemResult};
+use pipeline::{build_stages, AnalyzeVia, DocUnit, PipelineConfig, PipelineRun};
+use postings::Posting;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Paper reference points the harness reports against (Table 6 / §6.3).
+pub const PAPER_QURAN_ROOT_ACCURACY: f64 = 0.877;
+pub const PAPER_ANKABUT_ROOT_ACCURACY: f64 = 0.907;
+
+/// Per-document metadata kept alongside the postings.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DocMeta {
+    pub name: String,
+    /// Words that survived segmentation (position space).
+    pub words: u32,
+}
+
+/// The inverted index: packed root key → postings, plus the doc table
+/// and the interned surface-form table.
+#[derive(Default)]
+pub struct CorpusIndex {
+    pub(crate) docs: Vec<DocMeta>,
+    pub(crate) forms: Vec<String>,
+    pub(crate) form_ids: HashMap<String, u32>,
+    pub(crate) map: HashMap<u128, Vec<Posting>>,
+    /// All words that entered the index stage.
+    pub(crate) words_seen: u64,
+    /// Words that produced a root and therefore a posting.
+    pub(crate) words_indexed: u64,
+}
+
+/// The packed-u128 dictionary key for an extracted root, `None` when the
+/// analysis found no root (nothing to index).
+pub fn root_key(res: &StemResult) -> Option<u128> {
+    if res.kind == MatchKind::None {
+        return None;
+    }
+    Some(PackedWord::pack(&res.root_word()).0)
+}
+
+/// Inverse of [`root_key`] for display.
+pub fn key_root(key: u128) -> ArabicWord {
+    PackedWord(key).unpack()
+}
+
+/// Summary counters for `ama index` output and the bench report.
+#[derive(Clone, Copy, Debug)]
+pub struct IndexStats {
+    pub docs: usize,
+    pub distinct_roots: usize,
+    pub postings: u64,
+    pub forms: usize,
+    pub words_seen: u64,
+    pub words_indexed: u64,
+}
+
+/// One matched surface occurrence returned with a search hit.
+#[derive(Clone, Debug)]
+pub struct SearchContext {
+    /// The matched root, rendered.
+    pub root: String,
+    pub pos: u32,
+    /// The surface form as it appeared in the document.
+    pub form: String,
+    pub confidence: f32,
+}
+
+/// One ranked document match.
+#[derive(Clone, Debug)]
+pub struct SearchHit {
+    pub doc: u32,
+    pub name: String,
+    /// Total query-root occurrences in this doc (root frequency score).
+    pub score: u64,
+    /// Distinct query roots present (== query roots for strict AND).
+    pub matched_roots: usize,
+    /// Up to [`MAX_CONTEXTS_PER_ROOT`] occurrences per query root.
+    pub contexts: Vec<SearchContext>,
+}
+
+/// Context cap per (hit, root) — inspection aid, not a full position list.
+pub const MAX_CONTEXTS_PER_ROOT: usize = 3;
+
+impl CorpusIndex {
+    pub fn new() -> CorpusIndex {
+        CorpusIndex::default()
+    }
+
+    fn intern(&mut self, form: &str) -> u32 {
+        if let Some(&id) = self.form_ids.get(form) {
+            return id;
+        }
+        let id = self.forms.len() as u32;
+        self.forms.push(form.to_string());
+        self.form_ids.insert(form.to_string(), id);
+        id
+    }
+
+    /// Add one analyzed document. `words`, `surfaces`, and `analyses`
+    /// must be 1:1 (the pipeline's post-segmentation contract);
+    /// positions are indices into that sequence. Words whose analysis
+    /// found no root are counted but not posted. Returns the doc id.
+    pub fn add_doc(
+        &mut self,
+        name: &str,
+        words: &[PackedWord],
+        surfaces: &[String],
+        analyses: &[Analysis],
+    ) -> u32 {
+        assert_eq!(words.len(), analyses.len(), "words/analyses misaligned");
+        assert_eq!(words.len(), surfaces.len(), "words/surfaces misaligned");
+        let doc = self.docs.len() as u32;
+        self.docs.push(DocMeta { name: name.to_string(), words: words.len() as u32 });
+        self.words_seen += words.len() as u64;
+        for (pos, a) in analyses.iter().enumerate() {
+            let Some(key) = root_key(&a.result) else { continue };
+            let form = self.intern(&surfaces[pos]);
+            self.map.entry(key).or_default().push(Posting {
+                doc,
+                pos: pos as u32,
+                form,
+                conf_q: Posting::quantize(a.confidence),
+            });
+            self.words_indexed += 1;
+        }
+        doc
+    }
+
+    /// Add a pipeline output document.
+    pub fn add_unit(&mut self, unit: &DocUnit) -> u32 {
+        self.add_doc(&unit.name, &unit.words, &unit.surfaces, &unit.analyses)
+    }
+
+    pub fn doc(&self, id: u32) -> Option<&DocMeta> {
+        self.docs.get(id as usize)
+    }
+
+    pub fn postings(&self, key: u128) -> Option<&[Posting]> {
+        self.map.get(&key).map(Vec::as_slice)
+    }
+
+    pub fn postings_total(&self) -> u64 {
+        self.map.values().map(|v| v.len() as u64).sum()
+    }
+
+    pub fn stats(&self) -> IndexStats {
+        IndexStats {
+            docs: self.docs.len(),
+            distinct_roots: self.map.len(),
+            postings: self.postings_total(),
+            forms: self.forms.len(),
+            words_seen: self.words_seen,
+            words_indexed: self.words_indexed,
+        }
+    }
+
+    /// Root-based retrieval: intersect the postings of every distinct
+    /// query root (strict AND) and rank matching documents by total
+    /// root frequency (descending, doc id ascending on ties). Duplicate
+    /// query roots count once.
+    pub fn search(&self, keys: &[u128], top: usize) -> Vec<SearchHit> {
+        let mut distinct: Vec<u128> = Vec::new();
+        for &k in keys {
+            if !distinct.contains(&k) {
+                distinct.push(k);
+            }
+        }
+        if distinct.is_empty() {
+            return Vec::new();
+        }
+        // doc → (roots matched, total occurrences)
+        let mut per_doc: HashMap<u32, (usize, u64)> = HashMap::new();
+        for &key in &distinct {
+            let Some(postings) = self.map.get(&key) else { return Vec::new() };
+            let mut prev: Option<u32> = None;
+            for p in postings {
+                let e = per_doc.entry(p.doc).or_insert((0, 0));
+                if prev != Some(p.doc) {
+                    e.0 += 1;
+                    prev = Some(p.doc);
+                }
+                e.1 += 1;
+            }
+        }
+        let mut hits: Vec<(u32, u64)> = per_doc
+            .into_iter()
+            .filter(|&(_, (matched, _))| matched == distinct.len())
+            .map(|(doc, (_, score))| (doc, score))
+            .collect();
+        hits.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        hits.truncate(top);
+
+        hits.into_iter()
+            .map(|(doc, score)| {
+                let mut contexts = Vec::new();
+                for &key in &distinct {
+                    let root = key_root(key).to_string_ar();
+                    let postings = self.map.get(&key).expect("intersected key present");
+                    for p in postings.iter().filter(|p| p.doc == doc).take(MAX_CONTEXTS_PER_ROOT) {
+                        contexts.push(SearchContext {
+                            root: root.clone(),
+                            pos: p.pos,
+                            form: self.forms[p.form as usize].clone(),
+                            confidence: p.confidence(),
+                        });
+                    }
+                }
+                SearchHit {
+                    doc,
+                    name: self.docs[doc as usize].name.clone(),
+                    score,
+                    matched_roots: distinct.len(),
+                    contexts,
+                }
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared index service (AMA/1 `index`/`search` ops)
+// ---------------------------------------------------------------------------
+
+/// Caps for the server-resident index — a remote peer must not be able
+/// to grow a replica's memory without bound.
+#[derive(Clone, Copy, Debug)]
+pub struct IndexServiceConfig {
+    pub max_docs: usize,
+    pub max_words: u64,
+}
+
+impl Default for IndexServiceConfig {
+    fn default() -> Self {
+        IndexServiceConfig { max_docs: 65_536, max_words: 1 << 24 }
+    }
+}
+
+/// Mutex-guarded [`CorpusIndex`] shared across protocol handler threads.
+/// Lock scope is one op — document adds and searches are both O(index
+/// slice touched), never O(network).
+pub struct IndexService {
+    inner: Mutex<CorpusIndex>,
+    cfg: IndexServiceConfig,
+}
+
+impl IndexService {
+    pub fn new(cfg: IndexServiceConfig) -> IndexService {
+        IndexService { inner: Mutex::new(CorpusIndex::new()), cfg }
+    }
+
+    /// Add a document, enforcing the service caps. Returns
+    /// `(doc_id, words_posted)`.
+    pub fn add_doc(
+        &self,
+        name: &str,
+        words: &[PackedWord],
+        surfaces: &[String],
+        analyses: &[Analysis],
+    ) -> Result<(u32, u64), ServeError> {
+        let mut idx = self.inner.lock().unwrap();
+        if idx.docs.len() >= self.cfg.max_docs {
+            return Err(ServeError::new(
+                ErrorCode::Unavailable,
+                format!("index full: {} docs (cap {})", idx.docs.len(), self.cfg.max_docs),
+            ));
+        }
+        if idx.words_seen + words.len() as u64 > self.cfg.max_words {
+            return Err(ServeError::new(
+                ErrorCode::Unavailable,
+                format!("index full: {} words (cap {})", idx.words_seen, self.cfg.max_words),
+            ));
+        }
+        let before = idx.words_indexed;
+        let doc = idx.add_doc(name, words, surfaces, analyses);
+        Ok((doc, idx.words_indexed - before))
+    }
+
+    pub fn search(&self, keys: &[u128], top: usize) -> Vec<SearchHit> {
+        self.inner.lock().unwrap().search(keys, top)
+    }
+
+    pub fn stats(&self) -> IndexStats {
+        self.inner.lock().unwrap().stats()
+    }
+
+    pub fn doc_count(&self) -> usize {
+        self.inner.lock().unwrap().docs.len()
+    }
+
+    /// Run `f` against the underlying index (snapshot save, tests).
+    pub fn with_index<R>(&self, f: impl FnOnce(&CorpusIndex) -> R) -> R {
+        f(&self.inner.lock().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Corpus plumbing + accuracy harness
+// ---------------------------------------------------------------------------
+
+/// Slice a synthetic corpus into pseudo-documents of `doc_words` tokens
+/// (surface forms + gold labels carried along) — the corpus-shaped input
+/// for the pipeline and the accuracy harness.
+pub fn corpus_units(corpus: &Corpus, doc_words: usize) -> Vec<DocUnit> {
+    let doc_words = doc_words.max(1);
+    corpus
+        .tokens
+        .chunks(doc_words)
+        .enumerate()
+        .map(|(i, chunk)| {
+            let surfaces = chunk.iter().map(|t| t.word.to_string_ar()).collect();
+            let gold = chunk.iter().map(|t| t.gold).collect();
+            DocUnit::from_tokens(
+                i as u32,
+                format!("{}-{:05}", corpus.name, i),
+                surfaces,
+                Some(gold),
+            )
+        })
+        .collect()
+}
+
+/// Build a [`CorpusIndex`] from a finished pipeline run.
+pub fn index_from_run(run: &PipelineRun) -> CorpusIndex {
+    let mut idx = CorpusIndex::new();
+    for d in &run.docs {
+        idx.add_unit(d);
+    }
+    idx
+}
+
+/// Run the standard pipeline over a corpus with `cfg`.
+pub fn run_corpus_pipeline(
+    via: AnalyzeVia,
+    roots: &Arc<RootSet>,
+    corpus: &Corpus,
+    cfg: &PipelineConfig,
+    doc_words: usize,
+) -> PipelineRun {
+    let voting = cfg.rerank.then(|| VotingAnalyzer::new(roots.clone()));
+    let stages = build_stages(via, cfg, voting);
+    pipeline::run(stages, corpus_units(corpus, doc_words), cfg)
+}
+
+/// Flatten a run's analyses back into corpus token order and score them
+/// with the `eval.rs` machinery. Panics if segmentation dropped corpus
+/// tokens (the synthetic corpus is all-Arabic, so it never does).
+pub fn report_from_run(corpus: &Corpus, run: &PipelineRun, stemmer_name: &str) -> AccuracyReport {
+    let results: Vec<StemResult> =
+        run.docs.iter().flat_map(|d| d.analyses.iter().map(|a| a.result)).collect();
+    assert_eq!(
+        results.len(),
+        corpus.tokens.len(),
+        "pipeline dropped corpus tokens — gold alignment lost"
+    );
+    let mut results = Some(results);
+    evaluate(corpus, stemmer_name, |_| results.take().expect("evaluate calls stem_fn once"))
+}
+
+/// The PR 8 accuracy harness: the same corpus through the pipeline with
+/// and without the CBAS context re-rank stage, both scored root-level
+/// against the paper's reference points.
+pub fn accuracy_harness(
+    via: AnalyzeVia,
+    roots: &Arc<RootSet>,
+    corpus: &Corpus,
+    cfg: &PipelineConfig,
+    doc_words: usize,
+) -> (AccuracyReport, AccuracyReport) {
+    let mut base_cfg = cfg.clone();
+    base_cfg.rerank = false;
+    let base_run = run_corpus_pipeline(via.clone(), roots, corpus, &base_cfg, doc_words);
+    let base = report_from_run(corpus, &base_run, "pipeline-voting");
+
+    let mut rr_cfg = cfg.clone();
+    rr_cfg.rerank = true;
+    let rr_run = run_corpus_pipeline(via, roots, corpus, &rr_cfg, doc_words);
+    let rr = report_from_run(corpus, &rr_run, "pipeline-voting+rerank");
+    (base, rr)
+}
+
+/// Analyze raw query words to packed root keys with the registry
+/// (shared by `ama search` and the protocol op when no coordinator is
+/// in play). Returns `(root_keys, unrooted_words)`.
+pub fn query_roots(
+    registry: &crate::analysis::AnalyzerRegistry,
+    words: &[PackedWord],
+    opts: &AnalyzeOptions,
+) -> (Vec<u128>, Vec<usize>) {
+    let analyses = registry.analyze_batch_packed(words, opts);
+    keys_from_analyses(&analyses)
+}
+
+/// Split analyses into root keys and the indices that produced none.
+pub fn keys_from_analyses(analyses: &[Analysis]) -> (Vec<u128>, Vec<usize>) {
+    let mut keys = Vec::new();
+    let mut unrooted = Vec::new();
+    for (i, a) in analyses.iter().enumerate() {
+        match root_key(&a.result) {
+            Some(k) => keys.push(k),
+            None => unrooted.push(i),
+        }
+    }
+    (keys, unrooted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{Algorithm, AnalyzerRegistry};
+
+    fn roots() -> Arc<RootSet> {
+        Arc::new(RootSet::builtin_mini())
+    }
+
+    fn analyzed(reg: &AnalyzerRegistry, words: &[&str]) -> (Vec<PackedWord>, Vec<String>, Vec<Analysis>) {
+        let packed: Vec<PackedWord> = words.iter().map(|w| PackedWord::encode(w)).collect();
+        let opts = AnalyzeOptions::with_algorithm(Algorithm::Voting);
+        let analyses = reg.analyze_batch_packed(&packed, &opts);
+        (packed, words.iter().map(|s| s.to_string()).collect(), analyses)
+    }
+
+    #[test]
+    fn add_and_search_single_root() {
+        let reg = AnalyzerRegistry::new(roots());
+        let mut idx = CorpusIndex::new();
+        let (w, s, a) = analyzed(&reg, &["الدرس", "قال", "درس"]);
+        idx.add_doc("d0", &w, &s, &a);
+        let (w, s, a) = analyzed(&reg, &["يدرسون"]);
+        idx.add_doc("d1", &w, &s, &a);
+
+        let key = root_key(&reg.analyze(&ArabicWord::encode("درس"), &AnalyzeOptions::with_algorithm(Algorithm::Voting)).result).unwrap();
+        let hits = idx.search(&[key], 10);
+        assert_eq!(hits.len(), 2);
+        // d0 has درس twice → ranks first
+        assert_eq!(hits[0].doc, 0);
+        assert_eq!(hits[0].score, 2);
+        assert_eq!(hits[1].doc, 1);
+        assert!(hits[0].contexts.iter().any(|c| c.form == "الدرس"));
+    }
+
+    #[test]
+    fn intersection_requires_all_roots() {
+        let reg = AnalyzerRegistry::new(roots());
+        let mut idx = CorpusIndex::new();
+        let (w, s, a) = analyzed(&reg, &["درس", "قال"]);
+        idx.add_doc("both", &w, &s, &a);
+        let (w, s, a) = analyzed(&reg, &["درس"]);
+        idx.add_doc("one", &w, &s, &a);
+
+        let opts = AnalyzeOptions::with_algorithm(Algorithm::Voting);
+        let k1 = root_key(&reg.analyze(&ArabicWord::encode("درس"), &opts).result).unwrap();
+        let k2 = root_key(&reg.analyze(&ArabicWord::encode("قال"), &opts).result).unwrap();
+        let hits = idx.search(&[k1, k2], 10);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].name, "both");
+        assert_eq!(hits[0].matched_roots, 2);
+        // absent root → empty strict intersection
+        let missing = PackedWord::encode("ظظظ").0;
+        assert!(idx.search(&[k1, missing], 10).is_empty());
+    }
+
+    #[test]
+    fn service_caps_are_enforced() {
+        let svc = IndexService::new(IndexServiceConfig { max_docs: 1, max_words: 10 });
+        let reg = AnalyzerRegistry::new(roots());
+        let (w, s, a) = analyzed(&reg, &["درس"]);
+        svc.add_doc("a", &w, &s, &a).unwrap();
+        let err = svc.add_doc("b", &w, &s, &a).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unavailable);
+    }
+
+    #[test]
+    fn corpus_units_carry_gold() {
+        let c = crate::corpus::generate(&roots(), &crate::corpus::CorpusConfig::small(97, 3));
+        let units = corpus_units(&c, 10);
+        assert_eq!(units.len(), 10);
+        assert_eq!(units[9].surfaces.len(), 7);
+        let total: usize = units.iter().map(|u| u.surfaces.len()).sum();
+        assert_eq!(total, 97);
+        assert!(units.iter().all(|u| u.gold.as_ref().unwrap().len() == u.surfaces.len()));
+    }
+
+    #[test]
+    fn harness_scores_both_configs() {
+        let roots = roots();
+        let c = crate::corpus::generate(&roots, &crate::corpus::CorpusConfig::small(300, 11));
+        let reg = Arc::new(AnalyzerRegistry::new(roots.clone()));
+        let cfg = PipelineConfig {
+            opts: AnalyzeOptions::with_algorithm(Algorithm::Voting),
+            ..PipelineConfig::default()
+        };
+        let (base, rr) = accuracy_harness(AnalyzeVia::Registry(reg), &roots, &c, &cfg, 50);
+        assert_eq!(base.words_total, 300);
+        assert_eq!(rr.words_total, 300);
+        assert!(base.root_accuracy() > 0.0, "voting must recover some roots");
+    }
+}

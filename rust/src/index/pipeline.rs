@@ -1,0 +1,518 @@
+//! Staged document pipeline — tokenize → segment → analyze → (re-rank).
+//!
+//! Documents flow through a small DAG of stages as [`DocUnit`]s. Each
+//! stage is a [`Stage`] trait object running on its own
+//! [`exec::WorkerPool`], connected to the next by a bounded
+//! [`exec::BoundedQueue`] — the same primitives the coordinator serving
+//! path is built on, so backpressure and shutdown semantics are uniform:
+//! a full downstream queue throttles the upstream pool, and closing the
+//! source queue drains the whole chain in order.
+//!
+//! The stage list is the DAG configuration: [`build_stages`] assembles
+//! the standard chain from a [`PipelineConfig`], with the CBAS-style
+//! context re-rank stage ([`RerankStage`]) inserted when
+//! `cfg.rerank` is set. Stages are independent — variants (alternative
+//! segmenters, different analyzers) slot in per-position without
+//! touching the runner.
+//!
+//! Document order in = document order out (units carry their ids and the
+//! collector re-sorts), so corpus-order gold labels survive the parallel
+//! run for the accuracy harness.
+
+use crate::analysis::{Analysis, AnalyzeOptions, AnalyzerRegistry, EngineOpts};
+use crate::chars::PackedWord;
+use crate::coordinator::Handle;
+use crate::exec::{BoundedQueue, WorkerPool};
+use crate::light::VotingAnalyzer;
+use crate::protocol::MAX_WORDS_PER_ENVELOPE;
+use crate::stemmer::MatchKind;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One document moving through the pipeline. Stages fill fields in as
+/// the unit advances; fields a stage does not own pass through untouched.
+#[derive(Clone, Debug, Default)]
+pub struct DocUnit {
+    /// Dense id assigned by the caller; the collector sorts on it.
+    pub id: u32,
+    pub name: String,
+    /// Raw text (consumed by the tokenize stage; empty for pre-tokenized
+    /// sources like the synthetic corpus).
+    pub text: String,
+    /// Surface tokens. Pre-filled ⇒ the tokenize stage passes through.
+    pub surfaces: Vec<String>,
+    /// Canonicalized registers, 1:1 with `surfaces` after segmentation.
+    pub words: Vec<PackedWord>,
+    /// Analyzer output, 1:1 with `words` after the analyze stage.
+    pub analyses: Vec<Analysis>,
+    /// Gold roots (synthetic corpus only), kept 1:1 with `surfaces`
+    /// through segmentation drops so the accuracy harness stays aligned.
+    pub gold: Option<Vec<[u16; 4]>>,
+    /// Tokens dropped by segmentation (no Arabic letters).
+    pub dropped: u32,
+}
+
+impl DocUnit {
+    pub fn from_text(id: u32, name: impl Into<String>, text: impl Into<String>) -> DocUnit {
+        DocUnit { id, name: name.into(), text: text.into(), ..DocUnit::default() }
+    }
+
+    pub fn from_tokens(
+        id: u32,
+        name: impl Into<String>,
+        surfaces: Vec<String>,
+        gold: Option<Vec<[u16; 4]>>,
+    ) -> DocUnit {
+        DocUnit { id, name: name.into(), surfaces, gold, ..DocUnit::default() }
+    }
+}
+
+/// One pipeline stage: a pure `DocUnit → DocUnit` transform, shared
+/// across its worker pool.
+pub trait Stage: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn run(&self, unit: DocUnit) -> DocUnit;
+}
+
+/// Where the analyze stage sends its batches.
+#[derive(Clone)]
+pub enum AnalyzeVia {
+    /// In-process registry — direct `analyze_batch_packed` (SIMD path),
+    /// no coordinator round-trip. Tests and the bench rows use this.
+    Registry(Arc<AnalyzerRegistry>),
+    /// Through a coordinator [`Handle`] — batching, queueing, and
+    /// backend dispatch identical to the serving path. The CLI uses
+    /// this so `ama index` exercises the same machinery as `ama serve`.
+    Coordinator(Handle),
+}
+
+/// Tokenize raw text into surface tokens: split on whitespace, then trim
+/// leading/trailing non-letter punctuation from each token. Units that
+/// arrive pre-tokenized pass through.
+pub struct TokenizeStage;
+
+impl Stage for TokenizeStage {
+    fn name(&self) -> &'static str {
+        "tokenize"
+    }
+
+    fn run(&self, mut unit: DocUnit) -> DocUnit {
+        if !unit.surfaces.is_empty() || unit.text.is_empty() {
+            return unit;
+        }
+        let text = std::mem::take(&mut unit.text);
+        unit.surfaces = text
+            .split_whitespace()
+            .map(|t| t.trim_matches(|c: char| c.is_ascii_punctuation() || c == '،' || c == '؛' || c == '؟'))
+            .filter(|t| !t.is_empty())
+            .map(str::to_string)
+            .collect();
+        unit
+    }
+}
+
+/// Normalize + segment: canonicalize each surface token to a
+/// [`PackedWord`] register (diacritic stripping, length capping — the
+/// encode contract) and drop tokens with no Arabic letters at all,
+/// keeping gold labels aligned with the survivors.
+pub struct SegmentStage;
+
+impl Stage for SegmentStage {
+    fn name(&self) -> &'static str {
+        "segment"
+    }
+
+    fn run(&self, mut unit: DocUnit) -> DocUnit {
+        let surfaces = std::mem::take(&mut unit.surfaces);
+        let gold = unit.gold.take();
+        let mut kept_surfaces = Vec::with_capacity(surfaces.len());
+        let mut kept_gold = gold.as_ref().map(|g| Vec::with_capacity(g.len()));
+        let mut words = Vec::with_capacity(surfaces.len());
+        for (i, s) in surfaces.into_iter().enumerate() {
+            let w = PackedWord::encode(&s);
+            if !w.has_arabic() {
+                unit.dropped += 1;
+                continue;
+            }
+            words.push(w);
+            kept_surfaces.push(s);
+            if let (Some(out), Some(g)) = (kept_gold.as_mut(), gold.as_ref()) {
+                out.push(g[i]);
+            }
+        }
+        unit.surfaces = kept_surfaces;
+        unit.words = words;
+        unit.gold = kept_gold;
+        unit
+    }
+}
+
+/// Batch analysis: the whole document's registers go through the engine
+/// in envelope-sized chunks (the packed/SIMD path either way).
+pub struct AnalyzeStage {
+    pub via: AnalyzeVia,
+    pub opts: AnalyzeOptions,
+}
+
+impl Stage for AnalyzeStage {
+    fn name(&self) -> &'static str {
+        "analyze"
+    }
+
+    fn run(&self, mut unit: DocUnit) -> DocUnit {
+        let mut analyses = Vec::with_capacity(unit.words.len());
+        for chunk in unit.words.chunks(MAX_WORDS_PER_ENVELOPE.max(1)) {
+            match &self.via {
+                AnalyzeVia::Registry(reg) => {
+                    analyses.extend(reg.analyze_batch_packed(chunk, &self.opts));
+                }
+                AnalyzeVia::Coordinator(handle) => {
+                    match handle.analyze_bulk_packed(chunk, EngineOpts::new(&self.opts)) {
+                        Ok(batch) => analyses.extend(batch),
+                        // Degrade like the serving path: a shed batch
+                        // becomes NONE results, never a crash mid-corpus.
+                        Err(_) => analyses
+                            .extend(chunk.iter().map(|_| Analysis::none(self.opts.algorithm))),
+                    }
+                }
+            }
+        }
+        unit.analyses = analyses;
+        unit
+    }
+}
+
+/// CBAS-style context re-rank (El-Defrawy et al., PAPERS.md): where the
+/// voting engines disagreed (no ballot majority), re-score each ballot
+/// root by how often it appears among the *winning* roots of neighboring
+/// words (window ±`window`), and adopt the best-supported ballot. Words
+/// with a clear majority are left alone — context only breaks ties.
+pub struct RerankStage {
+    voting: VotingAnalyzer,
+    infix: Option<bool>,
+    window: usize,
+}
+
+impl RerankStage {
+    pub fn new(voting: VotingAnalyzer, infix: Option<bool>, window: usize) -> RerankStage {
+        RerankStage { voting, infix, window: window.max(1) }
+    }
+
+    /// Count occurrences of `root` among neighbor winners within the
+    /// window, excluding position `i` itself.
+    fn support(analyses: &[Analysis], i: usize, root: &[u16; 4], window: usize) -> usize {
+        let lo = i.saturating_sub(window);
+        let hi = (i + window).min(analyses.len().saturating_sub(1));
+        (lo..=hi)
+            .filter(|&j| j != i)
+            .filter(|&j| {
+                analyses[j].result.kind != MatchKind::None && analyses[j].result.root == *root
+            })
+            .count()
+    }
+}
+
+impl Stage for RerankStage {
+    fn name(&self) -> &'static str {
+        "rerank"
+    }
+
+    fn run(&self, mut unit: DocUnit) -> DocUnit {
+        if unit.analyses.is_empty() {
+            return unit;
+        }
+        // Two passes so every decision sees the *pre-rerank* neighbor
+        // winners — re-ranking is order-independent and deterministic.
+        let before = unit.analyses.clone();
+        for i in 0..unit.words.len() {
+            let detail = self.voting.stem_detail(&unit.words[i].unpack(), self.infix);
+            if detail.agree >= 2 {
+                continue; // clear majority — context cannot overrule it
+            }
+            let current = before[i].result;
+            let mut best = current;
+            let mut best_support = if current.kind != MatchKind::None {
+                Self::support(&before, i, &current.root, self.window)
+            } else {
+                0
+            };
+            for ballot in detail.ballots.iter() {
+                if ballot.kind == MatchKind::None || ballot.root == best.root {
+                    continue;
+                }
+                let s = Self::support(&before, i, &ballot.root, self.window);
+                // strict > keeps the priority-order winner on ties
+                if s > best_support {
+                    best = *ballot;
+                    best_support = s;
+                }
+            }
+            if best.root != current.root {
+                let a = &mut unit.analyses[i];
+                a.result = best;
+                a.confidence = (1 + best_support.min(self.window)) as f32
+                    / (self.window + 1) as f32;
+            }
+        }
+        unit
+    }
+}
+
+/// Pipeline shape: worker counts, queue depths, and the optional re-rank
+/// stage — the DAG configuration `build_stages` assembles from.
+#[derive(Clone)]
+pub struct PipelineConfig {
+    /// Workers per stage pool.
+    pub workers: usize,
+    /// Capacity of each inter-stage queue (documents).
+    pub queue_capacity: usize,
+    /// Analyzer options for the analyze stage.
+    pub opts: AnalyzeOptions,
+    /// Insert the CBAS context re-rank stage after analysis.
+    pub rerank: bool,
+    /// Neighbor window (± tokens) for the re-rank stage.
+    pub window: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            workers: 2,
+            queue_capacity: 64,
+            opts: AnalyzeOptions::default(),
+            rerank: false,
+            window: 3,
+        }
+    }
+}
+
+/// Per-stage counters, snapshot into the run report.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub name: &'static str,
+    pub units: u64,
+    pub words_out: u64,
+    pub busy_nanos: u64,
+}
+
+/// The result of one pipeline run: documents in id order plus per-stage
+/// accounting and wall-clock throughput.
+#[derive(Debug)]
+pub struct PipelineRun {
+    pub docs: Vec<DocUnit>,
+    pub stages: Vec<StageReport>,
+    pub words_total: u64,
+    pub elapsed: std::time::Duration,
+}
+
+impl PipelineRun {
+    /// End-to-end indexing throughput in words/sec.
+    pub fn wps(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.words_total as f64 / secs
+    }
+}
+
+/// Assemble the standard stage chain for `cfg`:
+/// tokenize → segment → analyze\[ → rerank\].
+pub fn build_stages(via: AnalyzeVia, cfg: &PipelineConfig, voting: Option<VotingAnalyzer>) -> Vec<Box<dyn Stage>> {
+    let mut stages: Vec<Box<dyn Stage>> = vec![
+        Box::new(TokenizeStage),
+        Box::new(SegmentStage),
+        Box::new(AnalyzeStage { via, opts: cfg.opts }),
+    ];
+    if cfg.rerank {
+        let voting = voting.expect("rerank stage needs a VotingAnalyzer");
+        stages.push(Box::new(RerankStage::new(voting, cfg.opts.infix, cfg.window)));
+    }
+    stages
+}
+
+struct StageStats {
+    units: AtomicU64,
+    words_out: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+/// Run `inputs` through `stages`. Each stage gets `cfg.workers` workers;
+/// stage i's pool pops from queue i and pushes to queue i+1; closing
+/// cascades front to back as each pool drains and exits. The caller's
+/// thread feeds the first queue and collects from the last, so total
+/// in-flight documents are bounded by the queue capacities.
+pub fn run(stages: Vec<Box<dyn Stage>>, inputs: Vec<DocUnit>, cfg: &PipelineConfig) -> PipelineRun {
+    assert!(!stages.is_empty(), "pipeline needs at least one stage");
+    let start = Instant::now();
+    let n = stages.len();
+    let queues: Vec<Arc<BoundedQueue<DocUnit>>> =
+        (0..=n).map(|_| BoundedQueue::new(cfg.queue_capacity.max(1))).collect();
+    let stats: Vec<Arc<StageStats>> = (0..n)
+        .map(|_| {
+            Arc::new(StageStats {
+                units: AtomicU64::new(0),
+                words_out: AtomicU64::new(0),
+                busy_nanos: AtomicU64::new(0),
+            })
+        })
+        .collect();
+
+    let mut names = Vec::with_capacity(n);
+    let mut supervisors = Vec::with_capacity(n);
+    for (i, stage) in stages.into_iter().enumerate() {
+        names.push(stage.name());
+        let stage: Arc<dyn Stage> = Arc::from(stage);
+        let q_in = queues[i].clone();
+        let q_out = queues[i + 1].clone();
+        let st = stats[i].clone();
+        let pool = WorkerPool::spawn(cfg.workers.max(1), stage.name(), move |_id, _shutdown| {
+            while let Ok(unit) = q_in.pop() {
+                let t0 = Instant::now();
+                let unit = stage.run(unit);
+                st.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                st.units.fetch_add(1, Ordering::Relaxed);
+                st.words_out.fetch_add(unit.words.len() as u64, Ordering::Relaxed);
+                if q_out.push(unit).is_err() {
+                    break; // downstream torn down — nothing left to feed
+                }
+            }
+        });
+        // Supervisor: when this stage's pool drains (its input queue is
+        // closed and empty), close the next queue so shutdown cascades.
+        let q_next = queues[i + 1].clone();
+        supervisors.push(std::thread::spawn(move || {
+            pool.join();
+            q_next.close();
+        }));
+    }
+
+    // Feed from this thread (blocking pushes apply backpressure), then
+    // close the source to start the cascade — and collect concurrently?
+    // No: feeding first could deadlock with a bounded sink. Collect on a
+    // helper thread instead so the sink always drains.
+    let sink = queues[n].clone();
+    let collector = std::thread::spawn(move || {
+        let mut docs = Vec::new();
+        while let Ok(unit) = sink.pop() {
+            docs.push(unit);
+        }
+        docs
+    });
+
+    let source = queues[0].clone();
+    for unit in inputs {
+        if source.push(unit).is_err() {
+            break; // closed early — only possible on teardown
+        }
+    }
+    source.close();
+
+    for s in supervisors {
+        let _ = s.join();
+    }
+    let mut docs = collector.join().expect("pipeline collector panicked");
+    docs.sort_by_key(|d| d.id);
+
+    let words_total = docs.iter().map(|d| d.words.len() as u64).sum();
+    let reports = names
+        .into_iter()
+        .zip(&stats)
+        .map(|(name, st)| StageReport {
+            name,
+            units: st.units.load(Ordering::Relaxed),
+            words_out: st.words_out.load(Ordering::Relaxed),
+            busy_nanos: st.busy_nanos.load(Ordering::Relaxed),
+        })
+        .collect();
+
+    PipelineRun { docs, stages: reports, words_total, elapsed: start.elapsed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roots::RootSet;
+
+    fn registry() -> Arc<AnalyzerRegistry> {
+        Arc::new(AnalyzerRegistry::new(Arc::new(RootSet::builtin_mini())))
+    }
+
+    fn voting_cfg() -> PipelineConfig {
+        PipelineConfig {
+            opts: AnalyzeOptions::with_algorithm(crate::analysis::Algorithm::Voting),
+            ..PipelineConfig::default()
+        }
+    }
+
+    #[test]
+    fn tokenize_splits_and_trims() {
+        let u = TokenizeStage.run(DocUnit::from_text(0, "d", "والدرس، يدرسون.  \n درس"));
+        assert_eq!(u.surfaces, vec!["والدرس", "يدرسون", "درس"]);
+    }
+
+    #[test]
+    fn segment_drops_non_arabic_and_keeps_gold_aligned() {
+        let gold = vec![[1, 2, 3, 0], [9, 9, 9, 9], [4, 5, 6, 0]];
+        let u = DocUnit::from_tokens(
+            0,
+            "d",
+            vec!["درس".into(), "hello".into(), "قال".into()],
+            Some(gold),
+        );
+        let u = SegmentStage.run(u);
+        assert_eq!(u.words.len(), 2);
+        assert_eq!(u.dropped, 1);
+        assert_eq!(u.gold.as_ref().unwrap().len(), 2);
+        assert_eq!(u.gold.unwrap()[1], [4, 5, 6, 0]);
+        assert_eq!(u.surfaces, vec!["درس", "قال"]);
+    }
+
+    #[test]
+    fn full_chain_preserves_doc_order_and_counts() {
+        let cfg = voting_cfg();
+        let stages = build_stages(AnalyzeVia::Registry(registry()), &cfg, None);
+        let inputs: Vec<DocUnit> = (0..20)
+            .map(|i| DocUnit::from_text(i, format!("doc-{i}"), "الدرس يدرسون قال hello"))
+            .collect();
+        let run = super::run(stages, inputs, &cfg);
+        assert_eq!(run.docs.len(), 20);
+        for (i, d) in run.docs.iter().enumerate() {
+            assert_eq!(d.id, i as u32, "collector must restore id order");
+            assert_eq!(d.words.len(), 3, "hello drops in segmentation");
+            assert_eq!(d.analyses.len(), d.words.len());
+        }
+        assert_eq!(run.words_total, 60);
+        let names: Vec<_> = run.stages.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["tokenize", "segment", "analyze"]);
+        assert!(run.stages.iter().all(|s| s.units == 20));
+    }
+
+    #[test]
+    fn empty_input_terminates() {
+        let cfg = voting_cfg();
+        let stages = build_stages(AnalyzeVia::Registry(registry()), &cfg, None);
+        let run = super::run(stages, Vec::new(), &cfg);
+        assert!(run.docs.is_empty());
+        assert_eq!(run.words_total, 0);
+    }
+
+    #[test]
+    fn rerank_only_touches_majority_less_words() {
+        let roots = Arc::new(RootSet::builtin_mini());
+        let mut cfg = voting_cfg();
+        cfg.rerank = true;
+        let stages = build_stages(
+            AnalyzeVia::Registry(Arc::new(AnalyzerRegistry::new(roots.clone()))),
+            &cfg,
+            Some(VotingAnalyzer::new(roots)),
+        );
+        // درس has a full majority everywhere — rerank must not change it.
+        let inputs = vec![DocUnit::from_text(0, "d", "درس درس درس")];
+        let run = super::run(stages, inputs, &cfg);
+        for a in &run.docs[0].analyses {
+            assert_eq!(a.result.root_word().to_string_ar(), "درس");
+        }
+    }
+}

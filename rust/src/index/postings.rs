@@ -1,0 +1,202 @@
+//! Postings and their byte encoding — the unit of the inverted index.
+//!
+//! A posting records one occurrence of a root in a document: which
+//! document, at which token position, under which surface form (interned
+//! to a `u32` id so the string is stored once per distinct form), and
+//! with what analyzer confidence (quantized to 1/10000 so the on-disk
+//! format is exact and platform-independent — no float bytes on disk).
+//!
+//! Encoding is LEB128 varints with delta compression, chosen to be
+//! byte-stable (same postings → same bytes, always) so snapshots can be
+//! compared and checksummed, and trivially portable — the python oracle
+//! (`scripts/index_sim_pr8.py`) ports this file literally:
+//!
+//! ```text
+//! per posting, in (doc, pos) order:
+//!   varint(doc - prev_doc)                  // first posting: doc itself
+//!   varint(pos - prev_pos)  if same doc     // first in doc: pos itself
+//!   varint(form)
+//!   varint(conf_q)                          // confidence × 10000
+//! ```
+
+use anyhow::{bail, Result};
+
+/// Confidence quantization scale: `conf_q = round(confidence * 10000)`.
+pub const CONF_SCALE: u32 = 10_000;
+
+/// One occurrence of a root in a document.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Posting {
+    /// Document id (dense, assigned in insertion order).
+    pub doc: u32,
+    /// Token position inside the document, counted over the words that
+    /// survived segmentation (0-based).
+    pub pos: u32,
+    /// Interned surface-form id (`CorpusIndex::forms`).
+    pub form: u32,
+    /// Analyzer confidence quantized to `[0, CONF_SCALE]`.
+    pub conf_q: u16,
+}
+
+impl Posting {
+    pub fn confidence(&self) -> f32 {
+        self.conf_q as f32 / CONF_SCALE as f32
+    }
+
+    pub fn quantize(confidence: f32) -> u16 {
+        let c = confidence.clamp(0.0, 1.0);
+        (c * CONF_SCALE as f32).round() as u16
+    }
+}
+
+/// Append `v` as a LEB128 varint.
+pub fn write_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Read one LEB128 varint at `*off`, advancing it. Bounds- and
+/// width-checked (max 10 bytes = 64 bits) so corrupt snapshots fail
+/// loudly instead of looping.
+pub fn read_varint(buf: &[u8], off: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        if *off >= buf.len() {
+            bail!("varint truncated at byte {}", *off);
+        }
+        if shift >= 64 {
+            bail!("varint wider than 64 bits at byte {}", *off);
+        }
+        let byte = buf[*off];
+        *off += 1;
+        v |= u64::from(byte & 0x7F) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// FNV-1a 64-bit — the snapshot trailer checksum. Hand-rolled like the
+/// rest of the offline shims; stable across platforms.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Delta-encode a postings list. `postings` must already be sorted by
+/// `(doc, pos)` — the index builder appends in that order by
+/// construction, and the decoder reproduces exactly these bytes on
+/// re-encode (byte stability).
+pub fn encode_postings(postings: &[Posting]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(postings.len() * 5);
+    let mut prev_doc: u32 = 0;
+    let mut prev_pos: u32 = 0;
+    for (i, p) in postings.iter().enumerate() {
+        let doc_delta = if i == 0 { p.doc } else { p.doc - prev_doc };
+        let pos_delta = if i > 0 && doc_delta == 0 { p.pos - prev_pos } else { p.pos };
+        write_varint(&mut buf, u64::from(doc_delta));
+        write_varint(&mut buf, u64::from(pos_delta));
+        write_varint(&mut buf, u64::from(p.form));
+        write_varint(&mut buf, u64::from(p.conf_q));
+        prev_doc = p.doc;
+        prev_pos = p.pos;
+    }
+    buf
+}
+
+/// Decode `count` postings from `buf`, which must be exactly consumed.
+pub fn decode_postings(buf: &[u8], count: usize) -> Result<Vec<Posting>> {
+    let mut out = Vec::with_capacity(count);
+    let mut off = 0usize;
+    let mut prev_doc: u32 = 0;
+    let mut prev_pos: u32 = 0;
+    for i in 0..count {
+        let doc_delta = read_varint(buf, &mut off)?;
+        let pos_delta = read_varint(buf, &mut off)?;
+        let form = read_varint(buf, &mut off)?;
+        let conf_q = read_varint(buf, &mut off)?;
+        if form > u64::from(u32::MAX) || conf_q > u64::from(CONF_SCALE) {
+            bail!("posting {i} out of range (form {form}, conf_q {conf_q})");
+        }
+        let doc = if i == 0 { doc_delta } else { u64::from(prev_doc) + doc_delta };
+        let pos = if i > 0 && doc_delta == 0 { u64::from(prev_pos) + pos_delta } else { pos_delta };
+        if doc > u64::from(u32::MAX) || pos > u64::from(u32::MAX) {
+            bail!("posting {i} overflows u32 (doc {doc}, pos {pos})");
+        }
+        let p = Posting { doc: doc as u32, pos: pos as u32, form: form as u32, conf_q: conf_q as u16 };
+        prev_doc = p.doc;
+        prev_pos = p.pos;
+        out.push(p);
+    }
+    if off != buf.len() {
+        bail!("postings block has {} trailing bytes", buf.len() - off);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        let mut buf = Vec::new();
+        let cases = [0u64, 1, 127, 128, 300, u64::from(u32::MAX), u64::MAX];
+        for &v in &cases {
+            buf.clear();
+            write_varint(&mut buf, v);
+            let mut off = 0;
+            assert_eq!(read_varint(&buf, &mut off).unwrap(), v);
+            assert_eq!(off, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncation_and_overwidth() {
+        assert!(read_varint(&[0x80], &mut 0).is_err());
+        assert!(read_varint(&[0x80; 11], &mut 0).is_err());
+    }
+
+    #[test]
+    fn postings_roundtrip_and_byte_stability() {
+        let ps = vec![
+            Posting { doc: 0, pos: 0, form: 3, conf_q: 10_000 },
+            Posting { doc: 0, pos: 7, form: 1, conf_q: 6_667 },
+            Posting { doc: 2, pos: 1, form: 0, conf_q: 0 },
+            Posting { doc: 2, pos: 2, form: 9, conf_q: 3_333 },
+            Posting { doc: 900, pos: 70_000, form: 12, conf_q: 5_000 },
+        ];
+        let bytes = encode_postings(&ps);
+        let back = decode_postings(&bytes, ps.len()).unwrap();
+        assert_eq!(back, ps);
+        assert_eq!(encode_postings(&back), bytes, "re-encode must be byte-identical");
+    }
+
+    #[test]
+    fn decode_rejects_trailing_garbage() {
+        let ps = vec![Posting { doc: 1, pos: 2, form: 3, conf_q: 4 }];
+        let mut bytes = encode_postings(&ps);
+        bytes.push(0);
+        assert!(decode_postings(&bytes, 1).is_err());
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        assert_eq!(Posting::quantize(1.5), 10_000);
+        assert_eq!(Posting::quantize(-0.5), 0);
+        assert_eq!(Posting::quantize(0.5), 5_000);
+    }
+}

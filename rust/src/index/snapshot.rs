@@ -1,0 +1,256 @@
+//! On-disk snapshot format for [`CorpusIndex`] — `AMAIDX01`.
+//!
+//! Hand-rolled and dependency-free like the anyhow/JSON shims: the whole
+//! format is varints + raw bytes, written deterministically (roots sorted
+//! ascending by packed key, forms and docs in id order) so save → load →
+//! save is byte-identical. Layout:
+//!
+//! ```text
+//! magic            8 bytes  "AMAIDX01"
+//! doc_count        varint
+//!   per doc:       varint(name_len) name_utf8 varint(word_count)
+//! form_count       varint
+//!   per form:      varint(len) form_utf8
+//! root_count       varint
+//!   per root (key ascending):
+//!                  16 bytes key (u128 LE)
+//!                  varint(posting_count)
+//!                  varint(block_len) block   // postings.rs delta coding
+//! words_seen       varint
+//! words_indexed    varint
+//! checksum         8 bytes  FNV-1a 64 of everything above, LE
+//! ```
+//!
+//! Every load re-verifies the checksum and all counts, so a truncated or
+//! bit-flipped snapshot fails with a typed error instead of serving
+//! garbage postings. `scripts/index_sim_pr8.py` ports this layout
+//! literally and sweeps round-trips against a dict-based reference.
+
+use super::postings::{decode_postings, encode_postings, fnv1a64, read_varint, write_varint};
+use super::{CorpusIndex, DocMeta};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Format magic: name + 2-digit version.
+pub const MAGIC: &[u8; 8] = b"AMAIDX01";
+
+fn write_bytes(buf: &mut Vec<u8>, s: &[u8]) {
+    write_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s);
+}
+
+fn read_bytes<'a>(buf: &'a [u8], off: &mut usize) -> Result<&'a [u8]> {
+    let len = read_varint(buf, off)? as usize;
+    if buf.len() - *off < len {
+        bail!("byte run of {len} truncated at offset {}", *off);
+    }
+    let out = &buf[*off..*off + len];
+    *off += len;
+    Ok(out)
+}
+
+fn read_string(buf: &[u8], off: &mut usize) -> Result<String> {
+    let bytes = read_bytes(buf, off)?;
+    String::from_utf8(bytes.to_vec()).context("snapshot string is not UTF-8")
+}
+
+/// Serialize the index to its canonical byte form.
+pub fn to_bytes(index: &CorpusIndex) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + index.postings_total() as usize * 5);
+    buf.extend_from_slice(MAGIC);
+
+    write_varint(&mut buf, index.docs.len() as u64);
+    for d in &index.docs {
+        write_bytes(&mut buf, d.name.as_bytes());
+        write_varint(&mut buf, u64::from(d.words));
+    }
+
+    write_varint(&mut buf, index.forms.len() as u64);
+    for f in &index.forms {
+        write_bytes(&mut buf, f.as_bytes());
+    }
+
+    let mut keys: Vec<u128> = index.map.keys().copied().collect();
+    keys.sort_unstable();
+    write_varint(&mut buf, keys.len() as u64);
+    for key in keys {
+        let postings = &index.map[&key];
+        buf.extend_from_slice(&key.to_le_bytes());
+        write_varint(&mut buf, postings.len() as u64);
+        let block = encode_postings(postings);
+        write_bytes(&mut buf, &block);
+    }
+
+    write_varint(&mut buf, index.words_seen);
+    write_varint(&mut buf, index.words_indexed);
+
+    let sum = fnv1a64(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// Parse a snapshot, verifying magic, checksum, counts, and posting
+/// references (every posting's doc and form id must exist).
+pub fn from_bytes(buf: &[u8]) -> Result<CorpusIndex> {
+    if buf.len() < MAGIC.len() + 8 {
+        bail!("snapshot too short ({} bytes)", buf.len());
+    }
+    if &buf[..MAGIC.len()] != MAGIC {
+        bail!(
+            "bad snapshot magic {:?} (expected {:?})",
+            String::from_utf8_lossy(&buf[..MAGIC.len().min(buf.len())]),
+            String::from_utf8_lossy(MAGIC),
+        );
+    }
+    let body = &buf[..buf.len() - 8];
+    let mut sum_bytes = [0u8; 8];
+    sum_bytes.copy_from_slice(&buf[buf.len() - 8..]);
+    let want = u64::from_le_bytes(sum_bytes);
+    let got = fnv1a64(body);
+    if got != want {
+        bail!("snapshot checksum mismatch (stored {want:#x}, computed {got:#x})");
+    }
+
+    let mut off = MAGIC.len();
+    let mut index = CorpusIndex::new();
+
+    let doc_count = read_varint(body, &mut off)? as usize;
+    for _ in 0..doc_count {
+        let name = read_string(body, &mut off)?;
+        let words = read_varint(body, &mut off)?;
+        if words > u64::from(u32::MAX) {
+            bail!("doc {name:?} word count {words} overflows u32");
+        }
+        index.docs.push(DocMeta { name, words: words as u32 });
+    }
+
+    let form_count = read_varint(body, &mut off)? as usize;
+    for _ in 0..form_count {
+        let form = read_string(body, &mut off)?;
+        index.form_ids.insert(form.clone(), index.forms.len() as u32);
+        index.forms.push(form);
+    }
+
+    let root_count = read_varint(body, &mut off)? as usize;
+    let mut prev_key: Option<u128> = None;
+    for _ in 0..root_count {
+        if body.len() - off < 16 {
+            bail!("root key truncated at offset {off}");
+        }
+        let mut key_bytes = [0u8; 16];
+        key_bytes.copy_from_slice(&body[off..off + 16]);
+        off += 16;
+        let key = u128::from_le_bytes(key_bytes);
+        if let Some(prev) = prev_key {
+            if key <= prev {
+                bail!("root keys out of order ({prev:#x} then {key:#x})");
+            }
+        }
+        prev_key = Some(key);
+        let count = read_varint(body, &mut off)? as usize;
+        let block = read_bytes(body, &mut off)?;
+        let postings = decode_postings(block, count)
+            .with_context(|| format!("postings for root {key:#x}"))?;
+        for p in &postings {
+            if p.doc as usize >= index.docs.len() {
+                bail!("root {key:#x} posting references unknown doc {}", p.doc);
+            }
+            if p.form as usize >= index.forms.len() {
+                bail!("root {key:#x} posting references unknown form {}", p.form);
+            }
+        }
+        index.map.insert(key, postings);
+    }
+
+    index.words_seen = read_varint(body, &mut off)?;
+    index.words_indexed = read_varint(body, &mut off)?;
+    if off != body.len() {
+        bail!("snapshot has {} trailing bytes", body.len() - off);
+    }
+    Ok(index)
+}
+
+/// Write the snapshot to `path` (atomic enough for our purposes: full
+/// buffer in one `write`).
+pub fn save(index: &CorpusIndex, path: &Path) -> Result<()> {
+    let bytes = to_bytes(index);
+    std::fs::write(path, &bytes).with_context(|| format!("writing snapshot {path:?}"))?;
+    Ok(())
+}
+
+/// Load a snapshot from `path`.
+pub fn load(path: &Path) -> Result<CorpusIndex> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading snapshot {path:?}"))?;
+    from_bytes(&bytes).with_context(|| format!("parsing snapshot {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::postings::Posting;
+    use super::*;
+
+    fn sample() -> CorpusIndex {
+        let mut idx = CorpusIndex::new();
+        idx.docs.push(DocMeta { name: "a.txt".to_string(), words: 4 });
+        idx.docs.push(DocMeta { name: "b.txt".to_string(), words: 2 });
+        idx.form_ids.insert("درس".to_string(), 0);
+        idx.forms.push("درس".to_string());
+        idx.form_ids.insert("والدرس".to_string(), 1);
+        idx.forms.push("والدرس".to_string());
+        idx.map.insert(
+            42u128,
+            vec![
+                Posting { doc: 0, pos: 1, form: 0, conf_q: 10_000 },
+                Posting { doc: 1, pos: 0, form: 1, conf_q: 6_667 },
+            ],
+        );
+        idx.map.insert(7u128 << 90, vec![Posting { doc: 0, pos: 3, form: 0, conf_q: 3_333 }]);
+        idx.words_seen = 6;
+        idx.words_indexed = 3;
+        idx
+    }
+
+    #[test]
+    fn roundtrip_and_byte_stability() {
+        let idx = sample();
+        let bytes = to_bytes(&idx);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(to_bytes(&back), bytes);
+        assert_eq!(back.docs.len(), 2);
+        assert_eq!(back.forms, idx.forms);
+        assert_eq!(back.map, idx.map);
+        assert_eq!(back.words_seen, 6);
+        assert_eq!(back.words_indexed, 3);
+    }
+
+    #[test]
+    fn empty_index_roundtrips() {
+        let idx = CorpusIndex::new();
+        let back = from_bytes(&to_bytes(&idx)).unwrap();
+        assert!(back.docs.is_empty() && back.map.is_empty());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let bytes = to_bytes(&sample());
+        // flip one bit in the middle
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 1;
+        assert!(from_bytes(&bad).is_err(), "bit flip must fail the checksum");
+        // truncate
+        assert!(from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // wrong magic
+        let mut wrong = bytes;
+        wrong[0] = b'X';
+        assert!(from_bytes(&wrong).is_err());
+    }
+
+    #[test]
+    fn dangling_references_are_rejected() {
+        let mut idx = sample();
+        idx.map.get_mut(&42u128).unwrap()[1].doc = 9;
+        let bytes = to_bytes(&idx);
+        assert!(from_bytes(&bytes).is_err(), "posting into unknown doc must fail");
+    }
+}

@@ -246,6 +246,41 @@
 //! in-process replica fleet with kill/restart on stable ports — the
 //! substrate for the chaos test, `ama gateway-loadtest`, and the
 //! verify.sh smoke.
+//!
+//! ## Corpus engine (PR 8)
+//!
+//! [`index`] turns the analyzer into a retrieval system — the paper's
+//! workload is corpus-scale (the Quran, the Ankabut corpus), so the
+//! analysis path gains a document pipeline and a root-keyed inverted
+//! index:
+//!
+//! * **Staged pipeline** ([`index::pipeline`]) — tokenize →
+//!   segment/pack → batch analyze → (optional) neighbor re-rank, each
+//!   stage a [`exec::WorkerPool`] bridged by [`exec::BoundedQueue`]s, so
+//!   documents stream through with backpressure exactly like the serving
+//!   path. Analysis runs through [`analysis::AnalyzerRegistry`] in
+//!   process or through a [`coordinator`] handle (`stem_batch`/SIMD
+//!   packed path underneath either way).
+//! * **Inverted root index** ([`index::CorpusIndex`]) — postings keyed
+//!   by the *root's* [`chars::PackedWord`] key (`u128`): `(doc id,
+//!   position, surface-form id, quantized confidence)`, delta+varint
+//!   coded ([`index::postings`]), snapshotted to the checksummed
+//!   `AMAIDX01` on-disk format ([`index::snapshot`]) — hand-rolled and
+//!   dependency-free like the rest of the crate.
+//! * **Search** — queries analyze to roots, postings intersect
+//!   (strict AND over distinct query roots), docs rank by total root
+//!   frequency; hits carry surface-form contexts. Surfaced as `ama
+//!   index`/`ama search`, as AMA/1 `index`/`search` ops
+//!   ([`protocol::serve_envelope_indexed`]), and through the gateway,
+//!   which homes all retrieval traffic on one shard key so index writes
+//!   and searches land on the same replica (non-idempotent `index`
+//!   dispatches are never blindly retried — see `gateway::pool`).
+//! * **Accuracy harness** ([`index::accuracy_harness`]) — the pipeline
+//!   over calibrated synthetic corpora ([`corpus`]) with a CBAS-style
+//!   neighboring-word re-rank stage over [`light::VotingAnalyzer`]
+//!   ballots, reporting root-extraction accuracy against the paper's
+//!   87.7% (Quran, infix on) and 90.7% (Ankabut) reference points via
+//!   [`eval`].
 
 pub mod analysis;
 pub mod bench;
@@ -259,6 +294,7 @@ pub mod eval;
 pub mod exec;
 pub mod gateway;
 pub mod hw;
+pub mod index;
 pub mod khoja;
 pub mod light;
 pub mod metrics;

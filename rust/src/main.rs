@@ -49,6 +49,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "emit-hlo" => cmd_emit_hlo(&args),
         "gateway" => cmd_gateway(&args),
         "gateway-loadtest" => cmd_gateway_loadtest(&args),
+        "index" => cmd_index(&args),
+        "search" => cmd_search(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -810,6 +812,56 @@ fn cmd_bench(args: &Args) -> Result<()> {
     println!("{r}");
     rows.push(r);
 
+    // PR 8 rows: staged-pipeline index build plus root search over the
+    // built index (in-process registry path — same packed/SIMD kernels
+    // the serving rows measure).
+    let reg = Arc::new(AnalyzerRegistry::new(roots.clone()));
+    let pipe_cfg = ama::index::pipeline::PipelineConfig {
+        opts: AnalyzeOptions::with_algorithm(Algorithm::Voting),
+        ..Default::default()
+    };
+    let mut built: Option<ama::index::CorpusIndex> = None;
+    let r = ama::bench::bench_words("index/pipeline_build", &cfg, n, || {
+        let stages = ama::index::pipeline::build_stages(
+            ama::index::pipeline::AnalyzeVia::Registry(reg.clone()),
+            &pipe_cfg,
+            None,
+        );
+        let run =
+            ama::index::pipeline::run(stages, ama::index::corpus_units(&corpus, 64), &pipe_cfg);
+        built = Some(ama::index::index_from_run(&run));
+    });
+    println!("{r}");
+    let index_build_wps = r.wps().unwrap_or(0.0);
+    rows.push(r);
+    let built = built.expect("bench ran at least once");
+
+    // One-word root queries over the first corpus words (the retrieval
+    // common case); the row's "wps" is searches/sec.
+    let query_analyses =
+        reg.analyze_batch_packed(&packed[..64.min(packed.len())], &pipe_cfg.opts);
+    let (query_keys, _) = ama::index::keys_from_analyses(&query_analyses);
+    let r = ama::bench::bench_words("index/search", &cfg, query_keys.len() as u64, || {
+        let mut acc = 0usize;
+        for &k in &query_keys {
+            acc += built.search(&[k], 10).len();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{r}");
+    rows.push(r);
+
+    // The PR 8 bugfix: the accuracy harness results are wired into the
+    // bench JSON (previously `AccuracyReport` never reached `bench json`
+    // — the perf trajectory had no accuracy-vs-paper record at all).
+    let (acc_base, acc_rr) = ama::index::accuracy_harness(
+        ama::index::pipeline::AnalyzeVia::Registry(reg.clone()),
+        &roots,
+        &corpus,
+        &pipe_cfg,
+        64,
+    );
+
     let speedup = if reference_wps > 0.0 { fused_wps / reference_wps } else { 0.0 };
     // Same datapath config as the measured rows (fmax/cycle model is
     // config-independent, but keep the report internally consistent).
@@ -862,6 +914,29 @@ fn cmd_bench(args: &Args) -> Result<()> {
         np.throughput_wps(n),
         pp.throughput_wps(n)
     ));
+    json.push_str(&format!(
+        "  \"index_build_wps\": {index_build_wps:.1},\n"
+    ));
+    json.push_str(&format!(
+        "  \"accuracy\": {{\"corpus\": \"{}\", \"roots_present\": {}, \
+         \"baseline\": {{\"stemmer\": \"{}\", \"roots_recovered\": {}, \
+         \"root_accuracy\": {:.4}, \"word_accuracy\": {:.4}}}, \
+         \"rerank\": {{\"stemmer\": \"{}\", \"roots_recovered\": {}, \
+         \"root_accuracy\": {:.4}, \"word_accuracy\": {:.4}}}, \
+         \"reference\": {{\"quran_infix\": {:.3}, \"ankabut\": {:.3}}}}},\n",
+        corpus.name,
+        acc_base.roots_present,
+        acc_base.stemmer,
+        acc_base.roots_recovered,
+        acc_base.root_accuracy(),
+        acc_base.word_accuracy(),
+        acc_rr.stemmer,
+        acc_rr.roots_recovered,
+        acc_rr.root_accuracy(),
+        acc_rr.word_accuracy(),
+        ama::index::PAPER_QURAN_ROOT_ACCURACY,
+        ama::index::PAPER_ANKABUT_ROOT_ACCURACY,
+    ));
     json.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         let wps = r.wps().unwrap_or(0.0);
@@ -887,6 +962,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     println!(
         "speedup cache warm vs off:      {speedup_cache:.2}x (hit rate {:.1}%)",
         100.0 * cache_snap.cache_hit_rate()
+    );
+    println!("index pipeline build:           {index_build_wps:.0} words/sec");
+    println!(
+        "pipeline accuracy (roots):      {:.1}% base, {:.1}% +rerank (paper 87.7%/90.7%)",
+        100.0 * acc_base.root_accuracy(),
+        100.0 * acc_rr.root_accuracy()
     );
     println!("wrote {out_path}");
     Ok(())
@@ -1176,6 +1257,212 @@ fn cmd_gateway_loadtest(args: &Args) -> Result<()> {
         json.push_str("}\n");
         std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
         println!("wrote {out_path}");
+    }
+    Ok(())
+}
+
+/// The analyze options shared by `ama index` / `ama search`: voting by
+/// default (the accuracy harness engine), `--algo`/`--no-infix` override.
+fn retrieval_opts(args: &Args) -> Result<AnalyzeOptions> {
+    let algorithm = match args.flag("--algo") {
+        None => Algorithm::Voting,
+        Some(name) => Algorithm::from_name(name)
+            .ok_or_else(|| anyhow!("unknown --algo {name:?} (linguistic|khoja|light|voting)"))?,
+    };
+    Ok(AnalyzeOptions {
+        algorithm,
+        infix: if args.switch("--no-infix") { Some(false) } else { None },
+        want_trace: false,
+    })
+}
+
+fn print_accuracy_line(rep: &ama::eval::AccuracyReport) {
+    println!(
+        "accuracy {:<24} roots {}/{} = {:.1}%  words {}/{} = {:.1}%  \
+         (paper ref: quran-infix 87.7%, ankabut 90.7%)",
+        rep.stemmer,
+        rep.roots_recovered,
+        rep.roots_present,
+        100.0 * rep.root_accuracy(),
+        rep.words_correct,
+        rep.words_total,
+        100.0 * rep.word_accuracy()
+    );
+}
+
+/// `ama index` (PR 8): run the staged document pipeline (tokenize →
+/// segment → batch analyze → optional context re-rank) over the inputs
+/// and write an `AMAIDX01` snapshot. Inputs are text files, directories
+/// of them, or a named synthetic corpus (`corpus:quran`,
+/// `corpus:ankabut`, `corpus:small:N`). Analysis goes through a real
+/// coordinator handle, so indexing exercises the same batching machinery
+/// as `ama serve`; corpus inputs carry gold roots, so the run ends with
+/// the accuracy harness against the paper's reference points.
+fn cmd_index(args: &Args) -> Result<()> {
+    use ama::index::{self, pipeline::{AnalyzeVia, DocUnit, PipelineConfig}};
+
+    let inputs = &args.positionals[1..];
+    anyhow::ensure!(
+        !inputs.is_empty(),
+        "usage: ama index <dir|file|corpus:NAME…> [--out IDX] [--doc-words N] [--rerank]"
+    );
+    let out = args.flag_or("--out", "ama.idx").to_string();
+    let doc_words = args.flag_usize("--doc-words", 64).map_err(|e| anyhow!(e))?.max(1);
+    let roots = load_roots(args)?;
+    let opts = retrieval_opts(args)?;
+    let pipe_cfg = PipelineConfig {
+        workers: args.flag_usize("--workers", 2).map_err(|e| anyhow!(e))?.max(1),
+        opts,
+        rerank: args.switch("--rerank"),
+        window: args.flag_usize("--window", 3).map_err(|e| anyhow!(e))?.max(1),
+        ..PipelineConfig::default()
+    };
+
+    // Gather documents. `corpus:` inputs keep the full Corpus around for
+    // the gold-scored accuracy harness.
+    let mut units: Vec<DocUnit> = Vec::new();
+    let mut gold_corpus: Option<ama::corpus::Corpus> = None;
+    if let Some(spec) = inputs[0].strip_prefix("corpus:") {
+        anyhow::ensure!(inputs.len() == 1, "corpus: input cannot be mixed with file inputs");
+        let ccfg = match spec {
+            "quran" => CorpusConfig::quran(),
+            "ankabut" => CorpusConfig::ankabut(),
+            other => match other.strip_prefix("small:") {
+                Some(n) => CorpusConfig::small(
+                    n.parse().map_err(|_| anyhow!("corpus:small:N — invalid N {n:?}"))?,
+                    args.flag_u64("--seed", 1).map_err(|e| anyhow!(e))?,
+                ),
+                None => bail!("unknown corpus {other:?} (quran|ankabut|small:N)"),
+            },
+        };
+        let c = corpus::generate(&roots, &ccfg);
+        println!("{}", report::corpus_stats_line(&c));
+        units = index::corpus_units(&c, doc_words);
+        gold_corpus = Some(c);
+    } else {
+        let mut paths: Vec<PathBuf> = Vec::new();
+        for input in inputs {
+            let p = PathBuf::from(input);
+            if p.is_dir() {
+                let mut entries: Vec<PathBuf> = std::fs::read_dir(&p)
+                    .with_context(|| format!("reading directory {input}"))?
+                    .filter_map(|e| e.ok().map(|e| e.path()))
+                    .filter(|p| p.is_file())
+                    .collect();
+                entries.sort();
+                paths.extend(entries);
+            } else {
+                paths.push(p);
+            }
+        }
+        anyhow::ensure!(!paths.is_empty(), "no input files found");
+        for (i, p) in paths.iter().enumerate() {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            let name = p
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| format!("doc-{i}"));
+            units.push(DocUnit::from_text(i as u32, name, text));
+        }
+    }
+
+    // Analysis through a real coordinator: `ama index` is the bulk-write
+    // counterpart of `ama serve`, on the same batching machinery.
+    let coord = start_coordinator(
+        args,
+        args.flag_or("--backend", "registry"),
+        roots.clone(),
+        opts.infix.unwrap_or(true),
+        CoordinatorConfig::default(),
+    )?;
+    let via = AnalyzeVia::Coordinator(coord.handle());
+    let voting = pipe_cfg.rerank.then(|| ama::light::VotingAnalyzer::new(roots.clone()));
+    let stages = index::pipeline::build_stages(via.clone(), &pipe_cfg, voting);
+    let run = index::pipeline::run(stages, units, &pipe_cfg);
+
+    let idx = index::index_from_run(&run);
+    let stats = idx.stats();
+    let dropped: u64 = run.docs.iter().map(|d| u64::from(d.dropped)).sum();
+    println!(
+        "indexed {} docs, {} words ({} non-Arabic tokens dropped) -> {} postings over \
+         {} distinct roots, {} surface forms",
+        stats.docs, stats.words_seen, dropped, stats.postings, stats.distinct_roots, stats.forms
+    );
+    println!(
+        "pipeline throughput: {:.0} words/sec ({} words in {:.3}s)",
+        run.wps(),
+        run.words_total,
+        run.elapsed.as_secs_f64()
+    );
+    for s in &run.stages {
+        println!(
+            "  stage {:>8}: {:>6} docs  {:>8} words out  busy {:.3}s",
+            s.name,
+            s.units,
+            s.words_out,
+            s.busy_nanos as f64 / 1e9
+        );
+    }
+    index::snapshot::save(&idx, Path::new(&out))?;
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!("wrote {out} ({bytes} bytes, AMAIDX01)");
+
+    if let Some(c) = gold_corpus {
+        let (base, rr) = index::accuracy_harness(via, &roots, &c, &pipe_cfg, doc_words);
+        print_accuracy_line(&base);
+        print_accuracy_line(&rr);
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+/// `ama search` (PR 8): load an `AMAIDX01` snapshot, analyze the query
+/// words to roots, intersect postings (strict AND), and print ranked
+/// hits with surface-form contexts.
+fn cmd_search(args: &Args) -> Result<()> {
+    use ama::index;
+
+    anyhow::ensure!(
+        args.positionals.len() >= 3,
+        "usage: ama search IDX <words…> [--top K] [--algo …] [--no-infix]"
+    );
+    let idx_path = &args.positionals[1];
+    let query = &args.positionals[2..];
+    let idx = index::snapshot::load(Path::new(idx_path))?;
+    let stats = idx.stats();
+    println!(
+        "loaded {idx_path}: {} docs, {} distinct roots, {} postings",
+        stats.docs, stats.distinct_roots, stats.postings
+    );
+
+    let opts = retrieval_opts(args)?;
+    let registry = AnalyzerRegistry::new(load_roots(args)?);
+    let packed: Vec<ama::chars::PackedWord> =
+        query.iter().map(|w| ama::chars::PackedWord::encode(w)).collect();
+    for (w, p) in query.iter().zip(&packed) {
+        anyhow::ensure!(p.has_arabic(), "query word {w:?} has no Arabic letters");
+    }
+    let (keys, unrooted) = index::query_roots(&registry, &packed, &opts);
+    for &i in &unrooted {
+        eprintln!("note: no root extracted for query word {:?} — ignored", query[i]);
+    }
+    anyhow::ensure!(!keys.is_empty(), "no query word produced a root");
+    let roots_str: Vec<String> = keys.iter().map(|&k| index::key_root(k).to_string_ar()).collect();
+    println!("query roots: {}", roots_str.join(" "));
+
+    let top = args.flag_usize("--top", 10).map_err(|e| anyhow!(e))?.max(1);
+    let hits = idx.search(&keys, top);
+    let occurrences: u64 = hits.iter().map(|h| h.score).sum();
+    println!("exact root hits: {} docs ({occurrences} occurrences)", hits.len());
+    for h in &hits {
+        println!("  doc {:<5} {:<24} score={} matched_roots={}", h.doc, h.name, h.score, h.matched_roots);
+        for c in &h.contexts {
+            println!(
+                "      root {}  pos {:<5} form {}  confidence {:.2}",
+                c.root, c.pos, c.form, c.confidence
+            );
+        }
     }
     Ok(())
 }

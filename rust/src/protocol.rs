@@ -358,16 +358,29 @@ pub fn json_push_str(out: &mut String, s: &str) {
 pub struct Envelope {
     /// Client-chosen correlation id, echoed verbatim in the reply.
     pub id: u64,
-    /// Operation: `"analyze"` or `"ping"`.
+    /// Operation: `"analyze"`, `"index"`, `"search"`, or `"ping"`.
     pub op: String,
-    /// Words to analyze (`analyze` op).
+    /// Words to analyze (`analyze`), document tokens (`index`), or query
+    /// words (`search`).
     pub words: Vec<String>,
     pub opts: AnalyzeOptions,
+    /// Document name (`index` op; server assigns `doc-N` when absent).
+    pub doc: Option<String>,
+    /// Result cap (`search` op; default 10, max 100).
+    pub top: Option<u64>,
 }
 
 impl Envelope {
     pub fn analyze(id: u64, words: Vec<String>, opts: AnalyzeOptions) -> Envelope {
-        Envelope { id, op: "analyze".to_string(), words, opts }
+        Envelope { id, op: "analyze".to_string(), words, opts, doc: None, top: None }
+    }
+
+    pub fn index(id: u64, doc: impl Into<String>, words: Vec<String>, opts: AnalyzeOptions) -> Envelope {
+        Envelope { id, op: "index".to_string(), words, opts, doc: Some(doc.into()), top: None }
+    }
+
+    pub fn search(id: u64, words: Vec<String>, opts: AnalyzeOptions, top: Option<u64>) -> Envelope {
+        Envelope { id, op: "search".to_string(), words, opts, doc: None, top }
     }
 
     /// Serialize as one JSON line (no trailing newline).
@@ -393,7 +406,15 @@ impl Envelope {
         if self.opts.want_trace {
             out.push_str(",\"trace\":true");
         }
-        out.push_str("}}");
+        out.push('}');
+        if let Some(doc) = &self.doc {
+            out.push_str(",\"doc\":");
+            json_push_str(&mut out, doc);
+        }
+        if let Some(top) = self.top {
+            out.push_str(&format!(",\"top\":{top}"));
+        }
+        out.push('}');
         out
     }
 
@@ -471,7 +492,22 @@ impl Envelope {
                     .ok_or_else(|| bad(id, "opts.trace must be a boolean".to_string()))?;
             }
         }
-        Ok(Envelope { id, op, words, opts })
+        let top = match doc.get("top") {
+            None => None,
+            Some(t) => Some(
+                t.as_u64()
+                    .ok_or_else(|| bad(id, "top must be a non-negative integer".to_string()))?,
+            ),
+        };
+        let doc = match doc.get("doc") {
+            None => None,
+            Some(d) => Some(
+                d.as_str()
+                    .ok_or_else(|| bad(id, "doc must be a string".to_string()))?
+                    .to_string(),
+            ),
+        };
+        Ok(Envelope { id, op, words, opts, doc, top })
     }
 }
 
@@ -517,17 +553,72 @@ impl WireResult {
     }
 }
 
-/// One AMA/1 reply frame: either results or a typed error, never both.
+/// One matched occurrence inside a search hit, as it crosses the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireContext {
+    /// The matched root, rendered.
+    pub root: String,
+    /// Token position inside the document.
+    pub pos: u64,
+    /// Surface form at that position.
+    pub form: String,
+    pub confidence: f32,
+}
+
+/// One ranked document hit (`search` op reply).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireHit {
+    pub doc: u64,
+    pub name: String,
+    /// Total query-root occurrences in the doc.
+    pub score: u64,
+    /// Distinct query roots matched.
+    pub matched: u64,
+    pub contexts: Vec<WireContext>,
+}
+
+impl WireHit {
+    pub fn from_hit(h: &crate::index::SearchHit) -> WireHit {
+        WireHit {
+            doc: u64::from(h.doc),
+            name: h.name.clone(),
+            score: h.score,
+            matched: h.matched_roots as u64,
+            contexts: h
+                .contexts
+                .iter()
+                .map(|c| WireContext {
+                    root: c.root.clone(),
+                    pos: u64::from(c.pos),
+                    form: c.form.clone(),
+                    confidence: c.confidence,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One AMA/1 reply frame: analysis results, an index acknowledgement,
+/// search hits, or a typed error — exactly one of the four.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Reply {
     Results { id: u64, results: Vec<WireResult> },
+    /// `index` op acknowledgement: the assigned doc id plus counters
+    /// (words that survived segmentation, postings written, distinct
+    /// roots in the whole index afterwards).
+    Indexed { id: u64, doc: u64, name: String, words: u64, posted: u64, roots: u64 },
+    /// `search` op reply: ranked hits.
+    Search { id: u64, hits: Vec<WireHit> },
     Error { id: u64, error: ServeError },
 }
 
 impl Reply {
     pub fn id(&self) -> u64 {
         match self {
-            Reply::Results { id, .. } | Reply::Error { id, .. } => *id,
+            Reply::Results { id, .. }
+            | Reply::Indexed { id, .. }
+            | Reply::Search { id, .. }
+            | Reply::Error { id, .. } => *id,
         }
     }
 
@@ -574,6 +665,45 @@ impl Reply {
                 }
                 out.push_str("]}");
             }
+            Reply::Indexed { id, doc, name, words, posted, roots } => {
+                out.push_str("{\"id\":");
+                out.push_str(&id.to_string());
+                out.push_str(",\"indexed\":{\"doc\":");
+                out.push_str(&doc.to_string());
+                out.push_str(",\"name\":");
+                json_push_str(&mut out, name);
+                out.push_str(&format!(
+                    ",\"words\":{words},\"posted\":{posted},\"roots\":{roots}}}}}"
+                ));
+            }
+            Reply::Search { id, hits } => {
+                out.push_str("{\"id\":");
+                out.push_str(&id.to_string());
+                out.push_str(",\"hits\":[");
+                for (i, h) in hits.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str("{\"doc\":");
+                    out.push_str(&h.doc.to_string());
+                    out.push_str(",\"name\":");
+                    json_push_str(&mut out, &h.name);
+                    out.push_str(&format!(",\"score\":{},\"matched\":{}", h.score, h.matched));
+                    out.push_str(",\"contexts\":[");
+                    for (j, c) in h.contexts.iter().enumerate() {
+                        if j > 0 {
+                            out.push(',');
+                        }
+                        out.push_str("{\"root\":");
+                        json_push_str(&mut out, &c.root);
+                        out.push_str(&format!(",\"pos\":{},\"form\":", c.pos));
+                        json_push_str(&mut out, &c.form);
+                        out.push_str(&format!(",\"confidence\":{:.4}}}", c.confidence));
+                    }
+                    out.push_str("]}");
+                }
+                out.push_str("]}");
+            }
             Reply::Error { id, error } => {
                 out.push_str("{\"id\":");
                 out.push_str(&id.to_string());
@@ -612,10 +742,63 @@ impl Reply {
             };
             return Ok(Reply::Error { id, error: ServeError::new(code, msg).with_meta(meta) });
         }
+        if let Some(ix) = doc.get("indexed") {
+            let num = |k: &str| -> Result<u64, String> {
+                ix.get(k).and_then(Json::as_u64).ok_or_else(|| format!("indexed missing {k:?}"))
+            };
+            return Ok(Reply::Indexed {
+                id,
+                doc: num("doc")?,
+                name: ix.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                words: num("words")?,
+                posted: num("posted")?,
+                roots: num("roots")?,
+            });
+        }
+        if let Some(hits) = doc.get("hits") {
+            let arr = hits.as_arr().ok_or("hits must be an array")?;
+            let mut out = Vec::with_capacity(arr.len());
+            for h in arr {
+                let num = |k: &str| -> Result<u64, String> {
+                    h.get(k).and_then(Json::as_u64).ok_or_else(|| format!("hit missing {k:?}"))
+                };
+                let mut contexts = Vec::new();
+                if let Some(cs) = h.get("contexts") {
+                    for c in cs.as_arr().ok_or("contexts must be an array")? {
+                        contexts.push(WireContext {
+                            root: c
+                                .get("root")
+                                .and_then(Json::as_str)
+                                .ok_or("context missing root")?
+                                .to_string(),
+                            pos: c.get("pos").and_then(Json::as_u64).ok_or("context missing pos")?,
+                            form: c
+                                .get("form")
+                                .and_then(Json::as_str)
+                                .ok_or("context missing form")?
+                                .to_string(),
+                            confidence: c
+                                .get("confidence")
+                                .and_then(Json::as_f64)
+                                .ok_or("context missing confidence")?
+                                as f32,
+                        });
+                    }
+                }
+                out.push(WireHit {
+                    doc: num("doc")?,
+                    name: h.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                    score: num("score")?,
+                    matched: num("matched")?,
+                    contexts,
+                });
+            }
+            return Ok(Reply::Search { id, hits: out });
+        }
         let arr = doc
             .get("results")
             .and_then(Json::as_arr)
-            .ok_or("reply has neither results nor error")?;
+            .ok_or("reply has neither results, indexed, hits, nor error")?;
         let mut results = Vec::with_capacity(arr.len());
         for item in arr {
             let get_str = |k: &str| -> Result<String, String> {
@@ -684,6 +867,19 @@ fn error_reply(id: u64, error: ServeError) -> String {
 /// `{"id":…,"error":{…}}` frames. Pure over `line` + coordinator state,
 /// which is what the protocol tests drive without a socket.
 pub fn serve_envelope(line: &str, handle: &Handle) -> String {
+    serve_envelope_indexed(line, handle, None)
+}
+
+/// [`serve_envelope`] with an optional index service attached: `index`
+/// and `search` ops are answered against it (replica-resident retrieval
+/// state); without one they fail typed `UNAVAILABLE`. `server.rs` always
+/// attaches one; bare-coordinator callers (gateway pool replies, tests)
+/// use [`serve_envelope`].
+pub fn serve_envelope_indexed(
+    line: &str,
+    handle: &Handle,
+    index: Option<&crate::index::IndexService>,
+) -> String {
     let env = match Envelope::parse(line) {
         Ok(env) => env,
         Err((id, e)) => return error_reply(id, e),
@@ -691,11 +887,136 @@ pub fn serve_envelope(line: &str, handle: &Handle) -> String {
     match env.op.as_str() {
         "ping" => Reply::Results { id: env.id, results: Vec::new() }.to_json(),
         "analyze" => serve_analyze(&env, handle),
+        "index" => match index {
+            Some(svc) => serve_index(&env, handle, svc),
+            None => error_reply(
+                env.id,
+                ServeError::new(ErrorCode::Unavailable, "no index service on this endpoint"),
+            ),
+        },
+        "search" => match index {
+            Some(svc) => serve_search(&env, handle, svc),
+            None => error_reply(
+                env.id,
+                ServeError::new(ErrorCode::Unavailable, "no index service on this endpoint"),
+            ),
+        },
         other => error_reply(
             env.id,
-            ServeError::new(ErrorCode::UnknownOp, format!("unknown op {other:?} (analyze|ping)")),
+            ServeError::new(
+                ErrorCode::UnknownOp,
+                format!("unknown op {other:?} (analyze|index|search|ping)"),
+            ),
         ),
     }
+}
+
+/// Default and maximum `top` for the `search` op.
+pub const SEARCH_TOP_DEFAULT: u64 = 10;
+pub const SEARCH_TOP_MAX: u64 = 100;
+
+/// `index` op: segment the document tokens like the pipeline's segment
+/// stage (non-Arabic tokens drop silently — documents are raw text, not
+/// pre-validated words), analyze the survivors through the coordinator,
+/// and post them into the shared index.
+fn serve_index(env: &Envelope, handle: &Handle, svc: &crate::index::IndexService) -> String {
+    if env.words.len() > MAX_WORDS_PER_ENVELOPE {
+        return error_reply(
+            env.id,
+            ServeError::new(
+                ErrorCode::BadRequest,
+                format!(
+                    "{} tokens exceeds the per-envelope cap of {MAX_WORDS_PER_ENVELOPE}; \
+                     split the document across envelopes",
+                    env.words.len()
+                ),
+            ),
+        );
+    }
+    let mut words = Vec::with_capacity(env.words.len());
+    let mut surfaces = Vec::with_capacity(env.words.len());
+    for s in &env.words {
+        let w = PackedWord::encode(s);
+        if w.has_arabic() {
+            words.push(w);
+            surfaces.push(s.clone());
+        }
+    }
+    let analyses = match handle.analyze_bulk_packed_deadline(
+        &words,
+        EngineOpts::new(&env.opts),
+        SUBMIT_DEADLINE,
+    ) {
+        Ok(a) => a,
+        Err(e) => return error_reply(env.id, e),
+    };
+    let name = match &env.doc {
+        Some(d) => d.clone(),
+        None => format!("doc-{}", svc.doc_count()),
+    };
+    match svc.add_doc(&name, &words, &surfaces, &analyses) {
+        Ok((doc, posted)) => Reply::Indexed {
+            id: env.id,
+            doc: u64::from(doc),
+            name,
+            words: words.len() as u64,
+            posted,
+            roots: svc.stats().distinct_roots as u64,
+        }
+        .to_json(),
+        Err(e) => error_reply(env.id, e),
+    }
+}
+
+/// `search` op: analyze the query words to roots through the coordinator
+/// and run the strict-AND root-frequency retrieval. Query words that
+/// yield no root cannot match and are dropped from the key set; a query
+/// where no word roots returns zero hits.
+fn serve_search(env: &Envelope, handle: &Handle, svc: &crate::index::IndexService) -> String {
+    if env.words.is_empty() {
+        return error_reply(
+            env.id,
+            ServeError::new(ErrorCode::BadRequest, "search needs at least one query word"),
+        );
+    }
+    if env.words.len() > MAX_WORDS_PER_ENVELOPE {
+        return error_reply(
+            env.id,
+            ServeError::new(
+                ErrorCode::BadRequest,
+                format!(
+                    "{} query words exceeds the per-envelope cap of {MAX_WORDS_PER_ENVELOPE}",
+                    env.words.len()
+                ),
+            ),
+        );
+    }
+    let mut words = Vec::with_capacity(env.words.len());
+    for s in &env.words {
+        let w = PackedWord::encode(s);
+        if !w.has_arabic() {
+            return error_reply(
+                env.id,
+                ServeError::new(
+                    ErrorCode::BadWord,
+                    format!("query word {s:?} has no Arabic letters"),
+                ),
+            );
+        }
+        words.push(w);
+    }
+    let analyses = match handle.analyze_bulk_packed_deadline(
+        &words,
+        EngineOpts::new(&env.opts),
+        SUBMIT_DEADLINE,
+    ) {
+        Ok(a) => a,
+        Err(e) => return error_reply(env.id, e),
+    };
+    let (keys, _unrooted) = crate::index::keys_from_analyses(&analyses);
+    let top = env.top.unwrap_or(SEARCH_TOP_DEFAULT).min(SEARCH_TOP_MAX) as usize;
+    let hits = if keys.is_empty() { Vec::new() } else { svc.search(&keys, top) };
+    Reply::Search { id: env.id, hits: hits.iter().map(WireHit::from_hit).collect() }.to_json()
 }
 
 fn serve_analyze(env: &Envelope, handle: &Handle) -> String {

@@ -107,6 +107,10 @@ pub struct Server {
     cfg: ServerConfig,
     stop: Arc<AtomicBool>,
     pub stats: Arc<ConnStats>,
+    /// Replica-resident inverted index behind the AMA/1 `index`/`search`
+    /// ops (PR 8). Always present; capped by
+    /// [`crate::index::IndexServiceConfig`] defaults.
+    index: Arc<crate::index::IndexService>,
 }
 
 impl Server {
@@ -130,7 +134,14 @@ impl Server {
             cfg,
             stop: Arc::new(AtomicBool::new(false)),
             stats: Arc::new(ConnStats::default()),
+            index: Arc::new(crate::index::IndexService::new(Default::default())),
         })
+    }
+
+    /// The index service answering this server's `index`/`search` ops
+    /// (snapshot export, tests).
+    pub fn index_service(&self) -> Arc<crate::index::IndexService> {
+        self.index.clone()
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -162,10 +173,11 @@ impl Server {
             let stats = self.stats.clone();
             let handle = self.handle.clone();
             let cfg = self.cfg;
+            let index = self.index.clone();
             crate::exec::WorkerPool::spawn(self.cfg.handlers.max(1), "conn-handler", move |_id, sd| {
                 while let Ok(stream) = conn_q.pop() {
                     stats.active.fetch_add(1, Ordering::SeqCst);
-                    if let Err(e) = handle_conn(stream, &handle, sd, &cfg) {
+                    if let Err(e) = handle_conn(stream, &handle, sd, &cfg, &index) {
                         eprintln!("connection error: {e:#}");
                     }
                     stats.active.fetch_sub(1, Ordering::SeqCst);
@@ -310,6 +322,7 @@ fn handle_conn(
     handle: &Handle,
     shutdown: &AtomicBool,
     cfg: &ServerConfig,
+    index: &crate::index::IndexService,
 ) -> Result<()> {
     // Request/response is one short line each way in interactive mode;
     // without TCP_NODELAY the Nagle/delayed-ACK interaction costs ~40 ms
@@ -380,7 +393,7 @@ fn handle_conn(
             if line.is_empty() {
                 return Ok(()); // empty line closes, like legacy
             }
-            let mut reply = crate::protocol::serve_envelope(line, handle);
+            let mut reply = crate::protocol::serve_envelope_indexed(line, handle, Some(index));
             reply.push('\n');
             writer.write_all(reply.as_bytes())?;
             if eof {

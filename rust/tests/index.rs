@@ -1,0 +1,404 @@
+//! PR 8 corpus-engine acceptance: index+search round-trip over a
+//! synthetic corpus (every indexed root retrievable, positions exact),
+//! AMAIDX01 snapshot byte-stability, empty/oversized/non-Arabic edge
+//! cases, and the AMA/1 `index`/`search` ops over real TCP — direct to a
+//! replica and forwarded through the gateway's single-home pool.
+
+use ama::analysis::{Algorithm, AnalyzeOptions, AnalyzerRegistry, ErrorCode};
+use ama::chars::PackedWord;
+use ama::client::{Client, ClientError};
+use ama::coordinator::{Coordinator, CoordinatorConfig};
+use ama::corpus::{self, CorpusConfig};
+use ama::gateway::fleet::{Fleet, FleetConfig};
+use ama::gateway::pool::PoolConfig;
+use ama::gateway::{Gateway, GatewayConfig};
+use ama::index::pipeline::{self, AnalyzeVia, DocUnit, PipelineConfig};
+use ama::index::{
+    self, corpus_units, index_from_run, root_key, snapshot, CorpusIndex, IndexService,
+    IndexServiceConfig,
+};
+use ama::protocol::{Envelope, Reply};
+use ama::rng::SplitMix64;
+use ama::roots::RootSet;
+use ama::server::Server;
+use ama::stemmer::StemmerConfig;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn voting_opts() -> AnalyzeOptions {
+    AnalyzeOptions::with_algorithm(Algorithm::Voting)
+}
+
+/// Analyze `words` through an in-process registry and add them as one
+/// document; returns the doc id.
+fn add_doc(idx: &mut CorpusIndex, reg: &AnalyzerRegistry, name: &str, words: &[&str]) -> u32 {
+    let packed: Vec<PackedWord> = words.iter().map(|w| PackedWord::encode(w)).collect();
+    let surfaces: Vec<String> = words.iter().map(|w| w.to_string()).collect();
+    let analyses = reg.analyze_batch_packed(&packed, &voting_opts());
+    idx.add_doc(name, &packed, &surfaces, &analyses)
+}
+
+/// Build a pipeline-produced index over a small calibrated corpus, and
+/// return it together with the pipeline run for cross-checking.
+fn pipeline_index(words: usize, seed: u64) -> (CorpusIndex, pipeline::PipelineRun) {
+    let roots = Arc::new(RootSet::builtin_mini());
+    let corpus = corpus::generate(&roots, &CorpusConfig::small(words, seed));
+    let units = corpus_units(&corpus, 50);
+    let reg = Arc::new(AnalyzerRegistry::new(roots));
+    let cfg = PipelineConfig { workers: 2, opts: voting_opts(), ..Default::default() };
+    let stages = pipeline::build_stages(AnalyzeVia::Registry(reg), &cfg, None);
+    let run = pipeline::run(stages, units, &cfg);
+    (index_from_run(&run), run)
+}
+
+/// Acceptance pin: every root the pipeline indexed is retrievable by
+/// search, with exact positions and exact per-document scores.
+#[test]
+fn pipeline_index_search_round_trip() {
+    let (idx, run) = pipeline_index(400, 11);
+    let stats = idx.stats();
+    assert_eq!(stats.docs, run.docs.len());
+    assert_eq!(stats.words_seen, run.words_total);
+    assert!(stats.docs >= 2, "corpus should shard into multiple docs");
+    assert!(stats.postings > 0, "calibrated corpus must index roots");
+
+    // Ground truth straight from the pipeline output: key → doc → tf,
+    // and key → set of (doc, pos).
+    let mut tf: HashMap<u128, HashMap<u32, u64>> = HashMap::new();
+    let mut occurrences: HashMap<u128, HashSet<(u32, u32)>> = HashMap::new();
+    for (doc, unit) in run.docs.iter().enumerate() {
+        let doc = doc as u32;
+        assert_eq!(unit.id, doc, "collector must hand docs back in dense id order");
+        for (pos, a) in unit.analyses.iter().enumerate() {
+            if let Some(key) = root_key(&a.result) {
+                *tf.entry(key).or_default().entry(doc).or_insert(0) += 1;
+                occurrences.entry(key).or_default().insert((doc, pos as u32));
+            }
+        }
+    }
+    assert_eq!(tf.len(), stats.distinct_roots, "index key set == pipeline key set");
+
+    for (&key, docs) in &tf {
+        // Postings carry exact (doc, pos) pairs.
+        let postings = idx.postings(key).expect("indexed key has postings");
+        let got: HashSet<(u32, u32)> = postings.iter().map(|p| (p.doc, p.pos)).collect();
+        assert_eq!(got, occurrences[&key], "positions exact for key {key:#x}");
+
+        // Single-root search finds exactly the docs containing it,
+        // scored by term frequency (desc, doc id asc on ties).
+        let hits = idx.search(&[key], usize::MAX);
+        let hit_docs: HashSet<u32> = hits.iter().map(|h| h.doc).collect();
+        assert_eq!(hit_docs, docs.keys().copied().collect::<HashSet<u32>>());
+        for h in &hits {
+            assert_eq!(h.score, docs[&h.doc], "score is the root's tf in the doc");
+            assert_eq!(h.matched_roots, 1);
+            assert!(!h.contexts.is_empty(), "hits carry surface-form contexts");
+            for c in &h.contexts {
+                assert!(occurrences[&key].contains(&(h.doc, c.pos)));
+                assert!(!c.form.is_empty());
+            }
+        }
+        for w in hits.windows(2) {
+            assert!(
+                w[0].score > w[1].score || (w[0].score == w[1].score && w[0].doc < w[1].doc),
+                "ranking must be score desc then doc asc"
+            );
+        }
+    }
+}
+
+/// Multi-root queries intersect strictly: a doc matches only when every
+/// distinct query root occurs in it.
+#[test]
+fn search_intersects_roots_strictly() {
+    let roots = Arc::new(RootSet::builtin_mini());
+    let reg = AnalyzerRegistry::new(roots);
+    let mut idx = CorpusIndex::new();
+    let d0 = add_doc(&mut idx, &reg, "both", &["يدرس", "قال", "الدرس"]);
+    let d1 = add_doc(&mut idx, &reg, "study-only", &["مدروس", "دارس"]);
+    let d2 = add_doc(&mut idx, &reg, "play-only", &["سيلعبون"]);
+
+    let key = |w: &str| {
+        let a = reg.analyze_batch_packed(&[PackedWord::encode(w)], &voting_opts());
+        root_key(&a[0].result).expect("test words must root")
+    };
+    let (study, say, play) = (key("يدرس"), key("قال"), key("لعب"));
+    assert_ne!(study, say);
+
+    // Strict AND: only d0 carries both درس and قول.
+    let hits = idx.search(&[study, say], 10);
+    assert_eq!(hits.iter().map(|h| h.doc).collect::<Vec<u32>>(), vec![d0]);
+    assert_eq!(hits[0].matched_roots, 2);
+    assert_eq!(hits[0].score, 3, "2× درس + 1× قول in the doc");
+
+    // Duplicate query roots count once — same result set and scores.
+    assert_eq!(idx.search(&[study, say, study], 10).len(), 1);
+
+    // Single root ranks by tf: d0 has two درس occurrences, d1 two.
+    let hits = idx.search(&[study], 10);
+    assert_eq!(hits.len(), 2);
+    assert_eq!(
+        hits.iter().map(|h| (h.doc, h.score)).collect::<Vec<(u32, u64)>>(),
+        vec![(d0, 2), (d1, 2)],
+        "tie on tf=2 breaks toward the lower doc id"
+    );
+
+    // No document contains both درس and لعب — strict AND yields nothing.
+    assert!(idx.search(&[study, play], 10).is_empty());
+    assert!(idx.search(&[study, play, say], 10).is_empty());
+    assert!(idx.search(&[play], 10).iter().map(|h| h.doc).eq([d2]));
+    assert!(idx.search(&[0xDEAD_BEEF], 10).is_empty(), "unknown key → no hits");
+}
+
+/// Snapshot acceptance: encode→decode→encode is byte-identical,
+/// save/load round-trips through a file, and corruption is detected.
+#[test]
+fn snapshot_bytes_are_stable_and_checksummed() {
+    let (idx, run) = pipeline_index(300, 7);
+    let bytes = snapshot::to_bytes(&idx);
+    assert_eq!(&bytes[..8], b"AMAIDX01");
+
+    let decoded = snapshot::from_bytes(&bytes).expect("own snapshot must decode");
+    assert_eq!(snapshot::to_bytes(&decoded), bytes, "re-encode is byte-identical");
+    let (a, b) = (idx.stats(), decoded.stats());
+    assert_eq!(a.docs, b.docs);
+    assert_eq!(a.distinct_roots, b.distinct_roots);
+    assert_eq!(a.postings, b.postings);
+    assert_eq!(a.forms, b.forms);
+    assert_eq!(a.words_seen, b.words_seen);
+    assert_eq!(a.words_indexed, b.words_indexed);
+
+    // Postings survive exactly (delta coding is lossless), checked over
+    // every key the pipeline produced.
+    for unit in &run.docs {
+        for a in &unit.analyses {
+            if let Some(key) = root_key(&a.result) {
+                assert_eq!(idx.postings(key), decoded.postings(key));
+            }
+        }
+    }
+    for doc in 0..a.docs as u32 {
+        assert_eq!(idx.doc(doc), decoded.doc(doc));
+    }
+
+    // File round-trip under a collision-proof temp path.
+    let path = std::env::temp_dir()
+        .join(format!("ama-idx-test-{}-{:?}", std::process::id(), std::thread::current().id()));
+    snapshot::save(&idx, &path).expect("save");
+    let loaded = snapshot::load(&path).expect("load");
+    assert_eq!(snapshot::to_bytes(&loaded), bytes);
+    std::fs::remove_file(&path).ok();
+
+    // A flipped payload byte must fail the FNV-1a trailer check.
+    let mut corrupt = bytes.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x40;
+    assert!(snapshot::from_bytes(&corrupt).is_err(), "corruption must not load");
+    // Truncation must error, not panic.
+    assert!(snapshot::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    assert!(snapshot::from_bytes(&[]).is_err());
+}
+
+/// Empty/oversized/non-Arabic edges: empty index and empty key set
+/// return no hits; the segment stage drops non-Arabic tokens and
+/// re-bases positions; the shared service enforces its caps with typed
+/// errors.
+#[test]
+fn edge_cases_empty_non_arabic_and_caps() {
+    // Empty index / empty query.
+    let empty = CorpusIndex::new();
+    assert!(empty.search(&[1], 10).is_empty());
+    assert!(empty.search(&[], 10).is_empty());
+    let s = empty.stats();
+    assert_eq!((s.docs, s.postings, s.distinct_roots), (0, 0, 0));
+    let empty_bytes = snapshot::to_bytes(&empty);
+    let empty_rt = snapshot::from_bytes(&empty_bytes).expect("empty snapshot round-trips");
+    assert_eq!(snapshot::to_bytes(&empty_rt), empty_bytes);
+
+    // Non-Arabic text: the tokenize+segment stages drop `hello`/`123`
+    // and positions are re-based over the survivors.
+    let roots = Arc::new(RootSet::builtin_mini());
+    let reg = Arc::new(AnalyzerRegistry::new(roots));
+    let cfg = PipelineConfig { workers: 1, opts: voting_opts(), ..Default::default() };
+    let stages = pipeline::build_stages(AnalyzeVia::Registry(reg.clone()), &cfg, None);
+    let units = vec![
+        DocUnit::from_text(0, "mixed", "hello يدرس, world 123 قال!"),
+        DocUnit::from_text(1, "ascii-only", "nothing to see here 42"),
+    ];
+    let run = pipeline::run(stages, units, &cfg);
+    let idx = index_from_run(&run);
+    assert_eq!(run.docs[0].surfaces, vec!["يدرس", "قال"], "punctuation trimmed, ascii dropped");
+    assert!(run.docs[1].surfaces.is_empty(), "all-ascii doc survives as an empty doc");
+    assert_eq!(idx.stats().docs, 2);
+    let a = reg.analyze_batch_packed(&[PackedWord::encode("يدرس")], &voting_opts());
+    let key = root_key(&a[0].result).unwrap();
+    let postings = idx.postings(key).unwrap();
+    assert_eq!((postings[0].doc, postings[0].pos), (0, 0), "position re-based after segment");
+
+    // Service caps: docs cap, then words cap, both typed UNAVAILABLE.
+    let svc = IndexService::new(IndexServiceConfig { max_docs: 1, max_words: 1 << 20 });
+    let packed = [PackedWord::encode("قال")];
+    let surfaces = ["قال".to_string()];
+    let analyses = reg.analyze_batch_packed(&packed, &voting_opts());
+    let (doc, posted) = svc.add_doc("first", &packed, &surfaces, &analyses).expect("under cap");
+    assert_eq!((doc, posted), (0, 1));
+    let err = svc.add_doc("second", &packed, &surfaces, &analyses).unwrap_err();
+    assert_eq!(err.code, ErrorCode::Unavailable, "doc cap → UNAVAILABLE, got {err:?}");
+
+    let svc = IndexService::new(IndexServiceConfig { max_docs: 8, max_words: 1 });
+    svc.add_doc("fits", &packed, &surfaces, &analyses).expect("exactly at cap");
+    let err = svc.add_doc("overflow", &packed, &surfaces, &analyses).unwrap_err();
+    assert_eq!(err.code, ErrorCode::Unavailable, "word cap → UNAVAILABLE, got {err:?}");
+    assert_eq!(svc.doc_count(), 1);
+}
+
+/// AMA/1 wire acceptance: `index` then `search` against a real TCP
+/// replica — hits come back with doc ids, names, scores, and contexts;
+/// non-Arabic query words are rejected with BAD_WORD; a rootless query
+/// returns zero hits.
+#[test]
+fn ama1_wire_index_then_search() {
+    let roots = Arc::new(RootSet::builtin_mini());
+    let coord = Coordinator::start_registry(
+        CoordinatorConfig { workers: 2, max_batch: 64, ..Default::default() },
+        roots,
+        StemmerConfig::default(),
+    );
+    let server = Arc::new(Server::bind("127.0.0.1:0", coord.handle()).unwrap());
+    let addr = server.local_addr().unwrap();
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve_forever());
+
+    let mut client = Client::connect(addr).unwrap();
+    let opts = voting_opts();
+    let (d0, posted0) =
+        client.index_once("study", &["يدرس", "قال", "الدرس", "hello"], &opts).unwrap();
+    let (d1, posted1) = client.index_once("play", &["سيلعبون", "لاعب"], &opts).unwrap();
+    assert_eq!((d0, d1), (0, 1), "replica assigns dense doc ids");
+    assert_eq!(posted0, 3, "3 Arabic words rooted; `hello` dropped before analysis");
+    assert_eq!(posted1, 2);
+
+    // Root-based retrieval: surface form يدرس and الدرس share درس.
+    let hits = client.search_once(&["مدروس"], &opts, None).unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].doc, d0);
+    assert_eq!(hits[0].name, "study");
+    assert_eq!(hits[0].score, 2, "درس occurs twice in the doc");
+    assert_eq!(hits[0].matched, 1);
+    assert!(hits[0].contexts.iter().any(|c| c.form == "يدرس"));
+    assert!(hits[0].contexts.iter().any(|c| c.form == "الدرس"));
+
+    // Strict AND across both docs' roots matches nothing.
+    assert!(client.search_once(&["يدرس", "يلعب"], &opts, None).unwrap().is_empty());
+    // لعب retrieves the second doc.
+    let hits = client.search_once(&["لعب"], &opts, Some(5)).unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].name, "play");
+
+    // Non-Arabic query word → typed BAD_WORD.
+    match client.search_once(&["يدرس", "xyz"], &opts, None) {
+        Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrorCode::BadWord),
+        other => panic!("expected BAD_WORD, got {other:?}"),
+    }
+    // Valid Arabic with no recoverable root → empty key set → no hits.
+    assert!(client.search_once(&["ظظظ"], &opts, None).unwrap().is_empty());
+    // Empty query → BAD_REQUEST.
+    match client.search_once(&[], &opts, None) {
+        Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrorCode::BadRequest),
+        other => panic!("expected BAD_REQUEST, got {other:?}"),
+    }
+
+    drop(client);
+    server.stop();
+    serve_thread.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+/// Gateway acceptance: `index`/`search` envelopes forwarded through the
+/// pool land on the same single-home replica, so a search finds what a
+/// prior index op wrote even with multiple replicas in the ring; replica
+/// errors propagate typed.
+#[test]
+fn gateway_forwards_retrieval_to_single_home() {
+    let fleet = Fleet::start(2, FleetConfig::mini());
+    let gw = Gateway::new(
+        fleet.addrs(),
+        GatewayConfig {
+            probe_interval: Duration::ZERO,
+            request_deadline: Duration::from_secs(2),
+            pool: PoolConfig {
+                connect_timeout: Duration::from_millis(200),
+                ..PoolConfig::default()
+            },
+            ..GatewayConfig::default()
+        },
+    );
+    let bucket = gw.client_bucket();
+    let mut rng = SplitMix64::new(9);
+    let opts = voting_opts();
+
+    let req = Envelope::index(41, "doc-a", vec!["يدرس".into(), "قال".into()], opts).to_json();
+    match Reply::parse(&gw.serve_line(&req, &bucket, &mut rng)).unwrap() {
+        Reply::Indexed { id, name, words, posted, .. } => {
+            assert_eq!(id, 41, "front correlation id preserved through the forward");
+            assert_eq!(name, "doc-a");
+            assert_eq!(words, 2);
+            assert_eq!(posted, 2);
+        }
+        other => panic!("expected indexed ack, got {other:?}"),
+    }
+
+    // The search homes on the same replica as the index op, so the doc
+    // must be visible regardless of which replicas exist in the ring.
+    let req = Envelope::search(42, vec!["الدرس".into()], opts, Some(10)).to_json();
+    match Reply::parse(&gw.serve_line(&req, &bucket, &mut rng)).unwrap() {
+        Reply::Search { id, hits } => {
+            assert_eq!(id, 42);
+            assert_eq!(hits.len(), 1, "single-home: search sees the indexed doc");
+            assert_eq!(hits[0].name, "doc-a");
+            assert_eq!(hits[0].score, 1);
+        }
+        other => panic!("expected hits, got {other:?}"),
+    }
+
+    // Replica-side typed errors propagate through the forward path.
+    let req = Envelope::search(43, vec!["abc".into()], opts, None).to_json();
+    match Reply::parse(&gw.serve_line(&req, &bucket, &mut rng)).unwrap() {
+        Reply::Error { id, error } => {
+            assert_eq!(id, 43);
+            assert_eq!(error.code, ErrorCode::BadWord);
+        }
+        other => panic!("expected BAD_WORD error, got {other:?}"),
+    }
+
+    fleet.shutdown();
+}
+
+/// Pipeline accuracy harness runs end to end and lands in a sane band —
+/// the calibrated corpus is built from the mini dictionary, so the
+/// voting pipeline should recover the large majority of gold roots.
+#[test]
+fn accuracy_harness_reports_against_paper_band() {
+    let roots = Arc::new(RootSet::builtin_mini());
+    let corpus = corpus::generate(&roots, &CorpusConfig::small(300, 3));
+    let reg = Arc::new(AnalyzerRegistry::new(roots.clone()));
+    let cfg = PipelineConfig { workers: 2, opts: voting_opts(), ..Default::default() };
+    let (base, rerank) =
+        index::accuracy_harness(AnalyzeVia::Registry(reg), &roots, &corpus, &cfg, 64);
+    assert_eq!(base.stemmer, "pipeline-voting");
+    assert_eq!(rerank.stemmer, "pipeline-voting+rerank");
+    assert_eq!(base.words_total, corpus.tokens.len());
+    assert_eq!(rerank.words_total, base.words_total);
+    assert!(
+        base.root_accuracy() > 0.3,
+        "voting pipeline should recover a meaningful share of gold roots, got {:.3}",
+        base.root_accuracy()
+    );
+    assert!(
+        rerank.root_accuracy() >= base.root_accuracy() - 0.10,
+        "re-rank must not collapse accuracy: base {:.3} vs rerank {:.3}",
+        base.root_accuracy(),
+        rerank.root_accuracy()
+    );
+}

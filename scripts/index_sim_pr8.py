@@ -1,0 +1,433 @@
+"""PR 8 verification sim (no-cargo container): literal python ports of the
+corpus engine's pure byte formats — the delta-coded postings blocks
+(rust/src/index/postings.rs) and the AMAIDX01 snapshot layout
+(rust/src/index/snapshot.rs, FNV-1a 64 trailer) — plus the strict-AND
+search scoring (rust/src/index/mod.rs), swept against dict-based
+reference models far past what the rust unit tests cover:
+
+* varints: LEB128 round-trip over edge values and a randomized sweep;
+  truncation and >64-bit rejection.
+* postings: encode → decode → encode byte-stability over randomized
+  sorted lists (doc gaps, same-doc position runs, large positions,
+  conf_q extremes), plus rejection of trailing garbage, out-of-range
+  conf_q, and u32 overflow.
+* snapshots: full index → bytes → index round-trips over randomized
+  corpora (including 0-doc, 0-posting, and high-bit u128 key cases)
+  checked field-for-field against the reference dict; checksum detects
+  every single-bit flip position in a small snapshot; truncation at
+  every byte boundary fails.
+* search: strict-AND intersection + (score desc, doc asc) ranking over
+  randomized indexes vs a brute-force reference.
+
+All randomness is a deterministic LCG — no time/os seeds — so a failure
+reproduces exactly. Run: python3 scripts/index_sim_pr8.py
+"""
+import sys
+
+CONF_SCALE = 10_000
+MAGIC = b"AMAIDX01"
+M64 = (1 << 64) - 1
+
+
+class Lcg:
+    """Deterministic PRNG (not random.py, so the sweep is pinned)."""
+
+    def __init__(self, seed):
+        self.s = seed & M64
+
+    def next(self):
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & M64
+        return self.s >> 11
+
+    def below(self, n):
+        return self.next() % n
+
+
+# --- varints + checksum (postings.rs port) --------------------------------
+
+def write_varint(buf, v):
+    assert v >= 0
+    while True:
+        byte = v & 0x7F
+        v >>= 7
+        if v == 0:
+            buf.append(byte)
+            return
+        buf.append(byte | 0x80)
+
+
+def read_varint(buf, off):
+    v = 0
+    shift = 0
+    while True:
+        if off >= len(buf):
+            raise ValueError(f"varint truncated at byte {off}")
+        if shift >= 64:
+            raise ValueError(f"varint wider than 64 bits at byte {off}")
+        byte = buf[off]
+        off += 1
+        v |= (byte & 0x7F) << shift
+        if byte & 0x80 == 0:
+            return v, off
+        shift += 7
+
+
+def fnv1a64(data):
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & M64
+    return h
+
+
+# --- postings delta coding (postings.rs port) -----------------------------
+# A posting is a tuple (doc, pos, form, conf_q).
+
+def encode_postings(postings):
+    buf = bytearray()
+    prev_doc = prev_pos = 0
+    for i, (doc, pos, form, conf_q) in enumerate(postings):
+        doc_delta = doc if i == 0 else doc - prev_doc
+        pos_delta = pos - prev_pos if i > 0 and doc_delta == 0 else pos
+        write_varint(buf, doc_delta)
+        write_varint(buf, pos_delta)
+        write_varint(buf, form)
+        write_varint(buf, conf_q)
+        prev_doc, prev_pos = doc, pos
+    return bytes(buf)
+
+
+def decode_postings(buf, count):
+    out = []
+    off = 0
+    prev_doc = prev_pos = 0
+    for i in range(count):
+        doc_delta, off = read_varint(buf, off)
+        pos_delta, off = read_varint(buf, off)
+        form, off = read_varint(buf, off)
+        conf_q, off = read_varint(buf, off)
+        if form > 0xFFFFFFFF or conf_q > CONF_SCALE:
+            raise ValueError(f"posting {i} out of range (form {form}, conf_q {conf_q})")
+        doc = doc_delta if i == 0 else prev_doc + doc_delta
+        pos = prev_pos + pos_delta if i > 0 and doc_delta == 0 else pos_delta
+        if doc > 0xFFFFFFFF or pos > 0xFFFFFFFF:
+            raise ValueError(f"posting {i} overflows u32 (doc {doc}, pos {pos})")
+        prev_doc, prev_pos = doc, pos
+        out.append((doc, pos, form, conf_q))
+    if off != len(buf):
+        raise ValueError(f"postings block has {len(buf) - off} trailing bytes")
+    return out
+
+
+# --- snapshot layout (snapshot.rs port) -----------------------------------
+# Reference index model: {"docs": [(name, words)], "forms": [str],
+# "map": {key(int) -> [posting]}, "words_seen": int, "words_indexed": int}
+
+def snapshot_to_bytes(index):
+    buf = bytearray(MAGIC)
+    write_varint(buf, len(index["docs"]))
+    for name, words in index["docs"]:
+        raw = name.encode("utf-8")
+        write_varint(buf, len(raw))
+        buf.extend(raw)
+        write_varint(buf, words)
+    write_varint(buf, len(index["forms"]))
+    for form in index["forms"]:
+        raw = form.encode("utf-8")
+        write_varint(buf, len(raw))
+        buf.extend(raw)
+    keys = sorted(index["map"])
+    write_varint(buf, len(keys))
+    for key in keys:
+        buf.extend(key.to_bytes(16, "little"))
+        postings = index["map"][key]
+        write_varint(buf, len(postings))
+        block = encode_postings(postings)
+        write_varint(buf, len(block))
+        buf.extend(block)
+    write_varint(buf, index["words_seen"])
+    write_varint(buf, index["words_indexed"])
+    buf.extend(fnv1a64(buf).to_bytes(8, "little"))
+    return bytes(buf)
+
+
+def snapshot_from_bytes(buf):
+    if len(buf) < len(MAGIC) + 8:
+        raise ValueError(f"snapshot too short ({len(buf)} bytes)")
+    if buf[: len(MAGIC)] != MAGIC:
+        raise ValueError("bad snapshot magic")
+    body = buf[:-8]
+    want = int.from_bytes(buf[-8:], "little")
+    got = fnv1a64(body)
+    if got != want:
+        raise ValueError(f"snapshot checksum mismatch ({want:#x} vs {got:#x})")
+    off = len(MAGIC)
+    index = {"docs": [], "forms": [], "map": {}, "words_seen": 0, "words_indexed": 0}
+    doc_count, off = read_varint(body, off)
+    for _ in range(doc_count):
+        n, off = read_varint(body, off)
+        if len(body) - off < n:
+            raise ValueError("doc name truncated")
+        name = body[off : off + n].decode("utf-8")
+        off += n
+        words, off = read_varint(body, off)
+        if words > 0xFFFFFFFF:
+            raise ValueError("doc word count overflows u32")
+        index["docs"].append((name, words))
+    form_count, off = read_varint(body, off)
+    for _ in range(form_count):
+        n, off = read_varint(body, off)
+        if len(body) - off < n:
+            raise ValueError("form truncated")
+        index["forms"].append(body[off : off + n].decode("utf-8"))
+        off += n
+    root_count, off = read_varint(body, off)
+    prev_key = None
+    for _ in range(root_count):
+        if len(body) - off < 16:
+            raise ValueError("root key truncated")
+        key = int.from_bytes(body[off : off + 16], "little")
+        off += 16
+        if prev_key is not None and key <= prev_key:
+            raise ValueError("root keys out of order")
+        prev_key = key
+        count, off = read_varint(body, off)
+        block_len, off = read_varint(body, off)
+        if len(body) - off < block_len:
+            raise ValueError("postings block truncated")
+        postings = decode_postings(body[off : off + block_len], count)
+        off += block_len
+        for doc, _pos, form, _conf in postings:
+            if doc >= len(index["docs"]):
+                raise ValueError("posting references unknown doc")
+            if form >= len(index["forms"]):
+                raise ValueError("posting references unknown form")
+        index["map"][key] = postings
+    index["words_seen"], off = read_varint(body, off)
+    index["words_indexed"], off = read_varint(body, off)
+    if off != len(body):
+        raise ValueError(f"snapshot has {len(body) - off} trailing bytes")
+    return index
+
+
+# --- search scoring (mod.rs port + brute-force reference) -----------------
+
+def search(index, keys, top):
+    distinct = []
+    for k in keys:
+        if k not in distinct:
+            distinct.append(k)
+    if not distinct:
+        return []
+    per_doc = {}
+    for key in distinct:
+        postings = index["map"].get(key)
+        if postings is None:
+            return []
+        prev = None
+        for doc, _pos, _form, _conf in postings:
+            matched, score = per_doc.get(doc, (0, 0))
+            if prev != doc:
+                matched += 1
+                prev = doc
+            per_doc[doc] = (matched, score + 1)
+    hits = [
+        (doc, score)
+        for doc, (matched, score) in per_doc.items()
+        if matched == len(distinct)
+    ]
+    hits.sort(key=lambda h: (-h[1], h[0]))
+    return hits[:top]
+
+
+def search_reference(index, keys, top):
+    """Brute force: per doc, count each distinct root's occurrences."""
+    distinct = list(dict.fromkeys(keys))
+    if not distinct:
+        return []
+    hits = []
+    for doc in range(len(index["docs"])):
+        counts = [
+            sum(1 for p in index["map"].get(k, []) if p[0] == doc) for k in distinct
+        ]
+        if all(c > 0 for c in counts):
+            hits.append((doc, sum(counts)))
+    hits.sort(key=lambda h: (-h[1], h[0]))
+    return hits[:top]
+
+
+# --- random index generator ------------------------------------------------
+
+def random_index(rng, max_docs=12, max_roots=10, high_bit_keys=False):
+    n_docs = rng.below(max_docs + 1)
+    n_roots = rng.below(max_roots + 1) if n_docs else 0
+    n_forms = 1 + rng.below(6)
+    forms = [f"form-{i}" for i in range(n_forms)]
+    keys = set()
+    while len(keys) < n_roots:
+        k = rng.next() | (rng.next() << 53)
+        if high_bit_keys:
+            k |= 1 << 127  # force the top u128 bit
+        keys.add(k)
+    index = {
+        "docs": [],
+        "forms": forms,
+        "map": {},
+        "words_seen": 0,
+        "words_indexed": 0,
+    }
+    postings_per_key = {k: [] for k in keys}
+    for doc in range(n_docs):
+        words = rng.below(40)
+        index["docs"].append((f"doc-{doc}", words))
+        index["words_seen"] += words
+        pos = 0
+        key_list = sorted(keys)
+        while pos < words:
+            if keys and rng.below(3) != 0:
+                k = key_list[rng.below(len(key_list))]
+                conf = rng.below(CONF_SCALE + 1)
+                postings_per_key[k].append((doc, pos, rng.below(n_forms), conf))
+                index["words_indexed"] += 1
+            # occasionally leave large position gaps (unrooted words)
+            pos += 1 + (rng.below(70_000) if rng.below(20) == 0 else 0)
+    # keys with no postings are absent from the map (matches CorpusIndex)
+    index["map"] = {k: v for k, v in postings_per_key.items() if v}
+    return index
+
+
+# --- sweeps ----------------------------------------------------------------
+
+def sweep_varints():
+    cases = [0, 1, 127, 128, 300, 0xFFFFFFFF, (1 << 64) - 1]
+    rng = Lcg(3)
+    cases += [rng.next() for _ in range(5000)]
+    for v in cases:
+        buf = bytearray()
+        write_varint(buf, v)
+        got, off = read_varint(bytes(buf), 0)
+        assert (got, off) == (v, len(buf)), (v, got)
+    for bad in (b"\x80", b"\x80" * 11):
+        try:
+            read_varint(bad, 0)
+            raise AssertionError(f"accepted bad varint {bad!r}")
+        except ValueError:
+            pass
+    print(f"varints: {len(cases)} round-trips OK, truncation/overwidth rejected")
+
+
+def sweep_postings():
+    rng = Lcg(7)
+    # The pinned vector from postings.rs unit tests must byte-match.
+    pinned = [
+        (0, 0, 3, 10_000),
+        (0, 7, 1, 6_667),
+        (2, 1, 0, 0),
+        (2, 2, 9, 3_333),
+        (900, 70_000, 12, 5_000),
+    ]
+    assert decode_postings(encode_postings(pinned), len(pinned)) == pinned
+    cases = 0
+    for _ in range(2000):
+        ps = []
+        doc = 0
+        for _ in range(rng.below(50)):
+            if rng.below(4) == 0:
+                doc += 1 + rng.below(900)
+            pos = (ps[-1][1] + 1 + rng.below(70_000)) if ps and ps[-1][0] == doc else rng.below(100)
+            ps.append((doc, pos, rng.below(1 << 32), rng.below(CONF_SCALE + 1)))
+        bytes_ = encode_postings(ps)
+        back = decode_postings(bytes_, len(ps))
+        assert back == ps, f"decode mismatch: {ps[:3]}…"
+        assert encode_postings(back) == bytes_, "re-encode not byte-identical"
+        cases += 1
+    # rejections
+    garbage = encode_postings([(1, 2, 3, 4)]) + b"\x00"
+    for bad, count in ((garbage, 1), (encode_postings([(0, 0, 0, CONF_SCALE)]), 2)):
+        try:
+            decode_postings(bad, count)
+            raise AssertionError("accepted malformed postings block")
+        except ValueError:
+            pass
+    try:
+        decode_postings(encode_postings([(0, 0, 0, CONF_SCALE + 1)]), 1)
+        raise AssertionError("accepted conf_q above scale")
+    except ValueError:
+        pass
+    print(f"postings: {cases} randomized round-trips byte-stable, rejections OK")
+
+
+def sweep_snapshots():
+    rng = Lcg(11)
+    cases = 0
+    for i in range(400):
+        index = random_index(rng, high_bit_keys=(i % 3 == 0))
+        blob = snapshot_to_bytes(index)
+        back = snapshot_from_bytes(blob)
+        assert back == index, "snapshot round-trip mismatch"
+        assert snapshot_to_bytes(back) == blob, "snapshot re-encode not byte-identical"
+        cases += 1
+    # empty index
+    empty = {"docs": [], "forms": [], "map": {}, "words_seen": 0, "words_indexed": 0}
+    assert snapshot_from_bytes(snapshot_to_bytes(empty)) == empty
+
+    # every single-bit flip in a small snapshot must be detected
+    small = random_index(Lcg(13), max_docs=3, max_roots=3)
+    blob = bytearray(snapshot_to_bytes(small))
+    flips = 0
+    for byte_i in range(len(blob)):
+        for bit in range(8):
+            blob[byte_i] ^= 1 << bit
+            try:
+                got = snapshot_from_bytes(bytes(blob))
+                # a flip that survives parsing must not equal the original
+                assert got != small, f"undetected flip at byte {byte_i} bit {bit}"
+            except ValueError:
+                pass
+            blob[byte_i] ^= 1 << bit
+            flips += 1
+    # truncation at every boundary
+    full = snapshot_to_bytes(small)
+    for cut in range(len(full)):
+        try:
+            snapshot_from_bytes(full[:cut])
+            raise AssertionError(f"accepted snapshot truncated to {cut} bytes")
+        except ValueError:
+            pass
+    print(
+        f"snapshots: {cases} randomized round-trips byte-stable, "
+        f"{flips} bit-flips detected, {len(full)} truncations rejected"
+    )
+
+
+def sweep_search():
+    rng = Lcg(17)
+    cases = 0
+    for _ in range(1500):
+        index = random_index(rng)
+        all_keys = sorted(index["map"]) or [42]
+        n = 1 + rng.below(min(3, len(all_keys)))
+        keys = [all_keys[rng.below(len(all_keys))] for _ in range(n)]
+        if rng.below(5) == 0:
+            keys.append(rng.next())  # probably-absent key → empty result
+        top = 1 + rng.below(8)
+        assert search(index, keys, top) == search_reference(index, keys, top)
+        cases += 1
+    # degenerate queries
+    index = random_index(Lcg(19))
+    assert search(index, [], 10) == []
+    assert search({"docs": [], "forms": [], "map": {}}, [1], 10) == []
+    print(f"search: {cases} randomized strict-AND queries match brute force")
+
+
+def main():
+    sweep_varints()
+    sweep_postings()
+    sweep_snapshots()
+    sweep_search()
+    print("index_sim_pr8: all checks passed, 0 mismatches")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

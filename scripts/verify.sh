@@ -43,6 +43,12 @@ assert any("cache_warm" in n for n in names), f"no cache row in {names}"
 assert "speedup_simd_vs_packed" in report, "missing simd speedup figure"
 assert "pct_of_hw_model_wps" in report, "missing hw-gap figure"
 assert report["simd_path"] in ("scalar", "avx2", "neon"), report.get("simd_path")
+assert any(n.startswith("index/") for n in names), f"no index rows in {names}"
+assert "index_build_wps" in report, "missing index build throughput figure"
+acc = report["accuracy"]
+for side in ("baseline", "rerank"):
+    assert 0.0 <= acc[side]["root_accuracy"] <= 1.0, acc
+assert acc["reference"] == {"quran_infix": 0.877, "ankabut": 0.907}, acc
 print("bench smoke OK:", len(report["results"]), "rows, simd path", report["simd_path"])
 EOF
 grep -q 'stem_batch_packed' /tmp/ama_bench_smoke.json
@@ -51,6 +57,9 @@ grep -q 'speedup_simd_vs_packed' /tmp/ama_bench_smoke.json
 grep -q 'pct_of_hw_model_wps' /tmp/ama_bench_smoke.json
 grep -q 'registry_cache_warm' /tmp/ama_bench_smoke.json
 grep -q 'runtime/stem_chunk_b' /tmp/ama_bench_smoke.json
+grep -q 'index/pipeline_build' /tmp/ama_bench_smoke.json
+grep -q 'index/search' /tmp/ama_bench_smoke.json
+grep -q '"accuracy"' /tmp/ama_bench_smoke.json
 
 echo "== interpreter conformance smoke (emit → load → stem 1k vs reference) =="
 rm -rf /tmp/ama_smoke_artifacts
@@ -112,6 +121,26 @@ grep -q 'breaker tripped' /tmp/ama_gateway_smoke.txt
 grep -q 'zero-loss OK' /tmp/ama_gateway_smoke.txt
 grep -q '"schema": "ama-gateway-v1"' /tmp/ama_gateway_smoke.json
 echo "gateway chaos smoke OK"
+
+echo "== index + search smoke (synthetic corpus → AMAIDX01 → 3 queries) =="
+rm -f /tmp/ama_smoke.idx
+./target/release/ama index corpus:small:2000 --seed 5 --out /tmp/ama_smoke.idx \
+  | tee /tmp/ama_index_smoke.txt
+grep -q 'AMAIDX01' /tmp/ama_index_smoke.txt
+grep -q 'pipeline throughput:' /tmp/ama_index_smoke.txt
+grep -q 'accuracy pipeline-voting' /tmp/ama_index_smoke.txt
+for q in درس قال لعب; do
+  ./target/release/ama search /tmp/ama_smoke.idx "$q" --top 3 \
+    | tee /tmp/ama_search_smoke.txt
+  grep -q 'exact root hits:' /tmp/ama_search_smoke.txt
+done
+echo "== index oracle (python port of postings + AMAIDX01 coding) =="
+if command -v python3 >/dev/null 2>&1; then
+  python3 scripts/index_sim_pr8.py
+else
+  echo "python3 not installed; skipping index oracle"
+fi
+echo "index/search smoke OK"
 
 echo "== protocol conformance smoke (AMA/1 + legacy line, one server) =="
 if command -v python3 >/dev/null 2>&1; then
