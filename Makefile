@@ -24,8 +24,12 @@
 #                     calibrated synthetic corpus → AMAIDX01 snapshot +
 #                     accuracy harness, three root searches against it,
 #                     and the index rows/accuracy object in BENCH_PR8.json
+#   make loadtest-c10k — C10K readiness run (PR 9): 1024 mostly-idle
+#                     keepalive conns through the event-loop ingest vs a
+#                     32-conn baseline (p99 must stay within 4x, zero
+#                     loss/reorder); writes BENCH_PR9.json
 
-.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check gateway-loadtest index-bench
+.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check gateway-loadtest index-bench loadtest-c10k
 
 data:
 	cd python && python3 -m compile.gen_roots ../data
@@ -74,6 +78,13 @@ gateway-loadtest:
 	./target/release/ama gateway-loadtest --replicas 3 --conns 16 --secs 4 \
 		--depth 8 --chaos --out BENCH_PR7.json
 	grep -q '"schema": "ama-gateway-v1"' BENCH_PR7.json
+
+loadtest-c10k:
+	cargo build --release
+	./target/release/ama loadtest --conns 1024 --idle-frac 0.95 --secs 5 \
+		--depth 64 --out BENCH_PR9.json
+	grep -q '"schema": "ama-loadtest-v1"' BENCH_PR9.json
+	grep -q 'p99_flat_ratio_vs_32' BENCH_PR9.json
 
 index-bench:
 	cargo build --release

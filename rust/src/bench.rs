@@ -2,7 +2,8 @@
 //! warmup, adaptive iteration, mean/stddev/min, and words-per-second
 //! throughput reporting in the paper's units — plus the TCP load
 //! generators behind `ama loadtest`: [`run_tcp_load`] for the legacy
-//! line protocol and [`run_ama1_load`] for typed AMA/1 envelopes.
+//! line protocol, [`run_ama1_load`] for typed AMA/1 envelopes, and
+//! [`run_mostly_idle_load`] for the PR 9 C10K keepalive profile.
 
 use crate::analysis::AnalyzeOptions;
 use crate::metrics::LatencyHistogram;
@@ -421,6 +422,126 @@ fn run_ama1_load_inner(
         rtt_p50_us: hist.percentile_us(0.50),
         rtt_p90_us: hist.percentile_us(0.90),
         rtt_p99_us: hist.percentile_us(0.99),
+    }
+}
+
+/// PR 9 C10K mode: park `conns × idle_frac` keepalive connections (one
+/// warmup word each, then silence) while the remainder run the pipelined
+/// burst loop of [`run_tcp_load`]. After the burst window every parked
+/// connection answers one final word — proving the event loop kept all
+/// of them registered, lost nothing, and never crossed replies between
+/// connections. The reported latency percentiles are the *active*
+/// burst's (that is the "p99 stays flat while 1024 conns are parked"
+/// comparison); idle roundtrips count toward words/errors/reorders only.
+///
+/// `conns` is clamped to the process fd budget (after a best-effort
+/// `RLIMIT_NOFILE` raise) — check [`LoadOutcome::conns`] for the count
+/// actually driven.
+pub fn run_mostly_idle_load(
+    addr: SocketAddr,
+    conns: usize,
+    idle_frac: f64,
+    duration: Duration,
+    depth: usize,
+    words: &[String],
+) -> LoadOutcome {
+    assert!(!words.is_empty(), "need a word list");
+    // Each parked connection costs one client fd and one server fd in
+    // this same process (tests and `ama loadtest --serve` share it).
+    let conns = crate::net::sys::fd_budget_conns(conns, 64).max(1);
+    let idle_frac = idle_frac.clamp(0.0, 0.99);
+    let active = (((conns as f64) * (1.0 - idle_frac)).ceil() as usize).clamp(1, conns);
+    let idle = conns - active;
+    let started = Instant::now();
+    let mut idle_words = 0u64;
+    let mut idle_errors = 0u64;
+    let mut idle_reorders = 0u64;
+    let mut line = String::new();
+
+    // One legacy-protocol roundtrip; Ok(true) means the echo matched.
+    fn roundtrip(
+        writer: &mut TcpStream,
+        reader: &mut BufReader<TcpStream>,
+        word: &str,
+        line: &mut String,
+    ) -> std::io::Result<bool> {
+        writer.write_all(word.as_bytes())?;
+        writer.write_all(b"\n")?;
+        line.clear();
+        if reader.read_line(line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed a parked connection",
+            ));
+        }
+        Ok(line.split('\t').next().unwrap_or("") == word)
+    }
+
+    // Park the idle fleet: no threads, just open sockets in a Vec —
+    // exactly the population the readiness loop is built to carry.
+    let mut parked: Vec<(TcpStream, BufReader<TcpStream>)> = Vec::with_capacity(idle);
+    for i in 0..idle {
+        let open = || -> std::io::Result<(TcpStream, BufReader<TcpStream>)> {
+            let conn = TcpStream::connect(addr)?;
+            conn.set_nodelay(true)?;
+            conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+            let writer = conn.try_clone()?;
+            Ok((writer, BufReader::new(conn)))
+        };
+        match open() {
+            Ok((mut w, mut r)) => match roundtrip(&mut w, &mut r, &words[i % words.len()], &mut line) {
+                Ok(ok) => {
+                    idle_words += 1;
+                    if !ok {
+                        idle_reorders += 1;
+                    }
+                    parked.push((w, r));
+                }
+                Err(e) => {
+                    eprintln!("idle warmup {i}: {e}");
+                    idle_errors += 1;
+                }
+            },
+            Err(e) => {
+                eprintln!("idle connect {i}: {e}");
+                idle_errors += 1;
+            }
+        }
+    }
+
+    // Burst window on the active slice, parked fleet riding along.
+    let burst = run_tcp_load(addr, active, duration, depth, words);
+
+    // Every parked connection must still answer on its own stream.
+    for (i, (w, r)) in parked.iter_mut().enumerate() {
+        match roundtrip(w, r, &words[(i + 1) % words.len()], &mut line) {
+            Ok(ok) => {
+                idle_words += 1;
+                if !ok {
+                    idle_reorders += 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("idle final {i}: {e}");
+                idle_errors += 1;
+            }
+        }
+    }
+    for (mut w, _r) in parked {
+        let _ = w.write_all(b"\n"); // polite close
+    }
+
+    LoadOutcome {
+        conns,
+        depth: burst.depth,
+        words: burst.words + idle_words,
+        errors: burst.errors + idle_errors,
+        reorders: burst.reorders + idle_reorders,
+        typed_shed: 0,
+        elapsed: started.elapsed(),
+        rtt_p50_us: burst.rtt_p50_us,
+        rtt_p90_us: burst.rtt_p90_us,
+        rtt_p99_us: burst.rtt_p99_us,
     }
 }
 

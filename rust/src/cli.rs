@@ -54,6 +54,10 @@ const VALUE_FLAGS: &[&str] = &[
     "--top",
     "--doc-words",
     "--window",
+    "--event-loop",
+    "--loops",
+    "--metrics-port",
+    "--idle-frac",
 ];
 
 impl Args {
@@ -100,6 +104,13 @@ impl Args {
         }
     }
 
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{name}: invalid number {v:?}")),
+        }
+    }
+
     pub fn switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -140,12 +151,21 @@ SUBCOMMANDS:
                           clients may pipeline many lines per write)
                           [--cache-slots K]  (registry backend: memoizing
                           stem-cache size; 0 disables, default 32768)
+                          [--event-loop on|off] [--loops N]  (PR 9 readiness
+                          event-loop ingest, default on; off = blocking pool)
+                          [--metrics-port P]  (Prometheus text endpoint on a
+                          side port: GET /metrics)
     loadtest              drive the real TCP server from M client threads and
                           report p50/p90/p99 + words/sec from the histogram
                           metrics [--conns N] [--secs S] [--depth D]
                           [--mode pipelined|per-word|both] [--backend …]
                           [--proto line|ama1] [--algo …] [--cache-slots K]
                           [--workers N] [--batch B] [--out BENCH_PR2.json]
+                          [--event-loop on|off] [--loops N]
+                          [--idle-frac F]  (C10K profile: park F·conns
+                          keepalive connections, burst the rest, compare p99
+                          against a 32-conn baseline; e.g. --conns 1024
+                          --idle-frac 0.95)
     selftest              cross-validate software / HW-sim / runtime backends
                           (incl. the SIMD kernel vs the scalar packed kernel)
     bench json            benchmark the software + hw-sim + runtime backends
@@ -168,6 +188,7 @@ SUBCOMMANDS:
                           replicas instead) [--handlers H] [--rate R] [--burst B]
                           [--max-in-flight M] [--deadline-ms D]
                           [--cooldown-ms C] [--failure-threshold F] [--probe-ms P]
+                          [--event-loop on|off] [--loops N] [--metrics-port P]
     index <inputs…>       build a root-keyed inverted index (PR 8): run the
                           staged document pipeline (tokenize → segment →
                           batch analyze → optional re-rank) over text files,

@@ -272,6 +272,7 @@ impl Coordinator {
                     match results {
                         Some(results) => {
                             m.record_batch(words.len() as u64);
+                            m.record_algorithm_words(opts.algorithm(), words.len() as u64);
                             for (&i, res) in group_idx.iter().zip(results) {
                                 m.record_latency(batch[i].submitted.elapsed());
                                 s.fill(batch[i].ticket, res);
@@ -334,6 +335,12 @@ impl Coordinator {
 
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.metrics
+    }
+
+    /// Owned handle on the metrics (e.g. for the `/metrics` endpoint's
+    /// render closure, which outlives this borrow).
+    pub fn metrics_arc(&self) -> Arc<ServiceMetrics> {
+        self.metrics.clone()
     }
 
     /// Graceful shutdown: stop intake, drain, join workers.

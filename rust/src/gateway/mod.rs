@@ -42,7 +42,9 @@ use crate::exec::{BoundedQueue, QueueError, WorkerPool};
 use crate::metrics::GatewayMetrics;
 use crate::protocol::{Envelope, Reply, WireResult, MAX_WORDS_PER_ENVELOPE};
 use crate::rng::SplitMix64;
-use crate::server::{read_frame, shutdown_goodbye, ConnMode, Frame};
+use crate::server::{oversized_reply, read_frame, shutdown_goodbye, ConnMode, Frame};
+#[cfg(unix)]
+use crate::net::{CompletionSender, ConnHandler, Flow, LineBatch, WriteBuf};
 use anyhow::Result;
 use coalesce::{Claim, CoalesceMap, LeaderToken, WordOutcome};
 use limits::{InFlightCap, Shed, TokenBucket};
@@ -76,6 +78,11 @@ pub struct GatewayConfig {
     pub burst: f64,
     /// Gateway-wide concurrent-envelope cap (`0` = unlimited).
     pub max_in_flight: usize,
+    /// Use the PR 9 readiness event loop for the TCP front (default).
+    /// `false` pins the original blocking handler pool.
+    pub event_loop: bool,
+    /// Event-loop thread count (`0` = auto, bounded by core count).
+    pub loops: usize,
 }
 
 impl Default for GatewayConfig {
@@ -90,6 +97,8 @@ impl Default for GatewayConfig {
             rate_per_sec: 0.0,
             burst: 0.0,
             max_in_flight: 0,
+            event_loop: true,
+            loops: 0,
         }
     }
 }
@@ -473,18 +482,45 @@ const RETRIEVAL_HOME_KEY: u128 = 0x414D_4149_4458;
 /// or tests — determinism within a connection is a feature).
 static CONN_SEED: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
 
-/// The TCP front: accept loop + fixed handler pool, mirroring
-/// [`crate::server::Server`]'s threading model, speaking AMA/1 only.
+/// The typed reject a legacy bare-line peer receives — shared verbatim
+/// by the blocking and event-loop fronts.
+const AMA1_ONLY_MSG: &str =
+    "gateway speaks AMA/1 only; use `ama serve` ports for the legacy line protocol";
+
+fn ama1_only_reply() -> String {
+    Gateway::error_reply(0, ServeError::new(ErrorCode::BadRequest, AMA1_ONLY_MSG))
+}
+
+/// The TCP front: event-loop ingest by default (PR 9), mirroring
+/// [`crate::server::Server`]'s split, speaking AMA/1 only. The blocking
+/// handler pool stays available behind `event_loop: false`.
 pub struct GatewayServer {
     listener: TcpListener,
     gateway: Arc<Gateway>,
     stop: Arc<AtomicBool>,
+    /// Per-loop counters, populated on the event-loop path (for the
+    /// `/metrics` endpoint).
+    #[cfg(unix)]
+    loop_stats: Arc<std::sync::Mutex<Vec<Arc<crate::net::LoopStats>>>>,
 }
 
 impl GatewayServer {
     pub fn bind(addr: &str, gateway: Arc<Gateway>) -> Result<GatewayServer> {
         let listener = TcpListener::bind(addr)?;
-        Ok(GatewayServer { listener, gateway, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(GatewayServer {
+            listener,
+            gateway,
+            stop: Arc::new(AtomicBool::new(false)),
+            #[cfg(unix)]
+            loop_stats: Arc::new(std::sync::Mutex::new(Vec::new())),
+        })
+    }
+
+    /// Per-loop event-loop counters (empty on the blocking path or
+    /// before `serve_forever` starts).
+    #[cfg(unix)]
+    pub fn loop_stats(&self) -> Vec<Arc<crate::net::LoopStats>> {
+        self.loop_stats.lock().unwrap().clone()
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
@@ -507,8 +543,78 @@ impl GatewayServer {
         }
     }
 
-    /// Accept loop; returns after every handler has been joined.
+    /// Accept loop. On the event-loop path (default), a few loop threads
+    /// own every front socket and offload each request line to a
+    /// `gw-dispatch` worker pool — backend dispatch blocks on replica
+    /// round-trips, so it must never run on a loop thread. On the
+    /// blocking path connections go to the original fixed handler pool.
+    /// Returns only after the ingest is fully drained.
     pub fn serve_forever(&self) -> Result<()> {
+        #[cfg(unix)]
+        if self.gateway.config().event_loop {
+            let cfg = *self.gateway.config();
+            let n = if cfg.loops == 0 {
+                crate::net::EventLoops::default_loops()
+            } else {
+                cfg.loops
+            };
+            let jobs: Arc<BoundedQueue<GwJob>> = BoundedQueue::new(DISPATCH_QUEUE_CAP);
+            let pool = {
+                let jobs = jobs.clone();
+                let gw = self.gateway.clone();
+                WorkerPool::spawn(cfg.handlers.max(1), "gw-dispatch", move |_id, _sd| {
+                    while let Ok(job) = jobs.pop() {
+                        let mut rng = SplitMix64::new(job.rng_seed);
+                        let mut reply = gw.serve_line(&job.line, &job.bucket, &mut rng);
+                        reply.push('\n');
+                        job.done.send(job.token, reply.into_bytes());
+                    }
+                })
+            };
+            let started = {
+                let jobs = jobs.clone();
+                let gw = self.gateway.clone();
+                crate::net::EventLoops::start(n, self.stop.clone(), move |_id, done| {
+                    GwLoopHandler { gw: gw.clone(), jobs: jobs.clone(), done }
+                })
+            };
+            match started {
+                Ok(loops) => {
+                    let r = self.serve_event_loops(loops);
+                    jobs.close();
+                    pool.join();
+                    return r;
+                }
+                Err(e) => {
+                    eprintln!("event loop unavailable ({e}); falling back to blocking pool");
+                    jobs.close();
+                    pool.join();
+                }
+            }
+        }
+        self.serve_blocking()
+    }
+
+    /// Event-loop ingest: accept and hand off; the loops own everything
+    /// after that.
+    #[cfg(unix)]
+    fn serve_event_loops(&self, loops: crate::net::EventLoops) -> Result<()> {
+        *self.loop_stats.lock().unwrap() = loops.loop_stats();
+        let accept_result = (|| -> Result<()> {
+            for stream in self.listener.incoming() {
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                loops.inject(stream?);
+            }
+            Ok(())
+        })();
+        loops.shutdown();
+        accept_result
+    }
+
+    /// Blocking-pool ingest (`--event-loop off`, or no epoll/kqueue).
+    fn serve_blocking(&self) -> Result<()> {
         let cfg = self.gateway.config();
         let conn_q: Arc<BoundedQueue<TcpStream>> = BoundedQueue::new(cfg.accept_backlog.max(1));
         let pool = {
@@ -580,16 +686,7 @@ fn handle_gateway_conn(
             }
             Frame::Eof => return Ok(()),
             Frame::Oversized => {
-                let mut reply = Gateway::error_reply(
-                    0,
-                    ServeError::new(
-                        ErrorCode::BadRequest,
-                        format!(
-                            "frame exceeds {} bytes",
-                            crate::protocol::MAX_FRAME_BYTES
-                        ),
-                    ),
-                );
+                let mut reply = oversized_reply();
                 reply.push('\n');
                 let _ = writer.write_all(reply.as_bytes());
                 return Ok(());
@@ -606,14 +703,7 @@ fn handle_gateway_conn(
                 // The gateway tier is AMA/1-only: answer with one typed
                 // frame (a legacy peer sees one JSON line instead of a
                 // silent drop) and close.
-                let mut reply = Gateway::error_reply(
-                    0,
-                    ServeError::new(
-                        ErrorCode::BadRequest,
-                        "gateway speaks AMA/1 only; use `ama serve` ports for the \
-                         legacy line protocol",
-                    ),
-                );
+                let mut reply = ama1_only_reply();
                 reply.push('\n');
                 let _ = writer.write_all(reply.as_bytes());
                 return Ok(());
@@ -626,6 +716,186 @@ fn handle_gateway_conn(
         if eof {
             return Ok(());
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event-loop front (PR 9)
+// ---------------------------------------------------------------------------
+
+/// Cap on queued dispatch jobs. At-most-one-in-flight per connection
+/// bounds the live population by open connections; overflow sheds a
+/// typed frame instead of ever blocking a loop thread.
+#[cfg(unix)]
+const DISPATCH_QUEUE_CAP: usize = 4096;
+
+/// One offloaded request line, bound for the `gw-dispatch` pool.
+/// [`Gateway::serve_line`] blocks on backend round-trips (retries,
+/// failover, the full request deadline), so it must never run on an
+/// event-loop thread.
+#[cfg(unix)]
+struct GwJob {
+    token: u64,
+    line: String,
+    bucket: Arc<TokenBucket>,
+    /// Per-job jitter seed: connection base + dispatch ordinal, so retry
+    /// backoff stays deterministic per connection like the blocking path.
+    rng_seed: u64,
+    done: CompletionSender,
+}
+
+/// Per-connection state on the event-loop front.
+#[cfg(unix)]
+struct GwConnState {
+    token: u64,
+    mode: ConnMode,
+    bucket: Arc<TokenBucket>,
+    seed: u64,
+    seq: u64,
+    /// A dispatch is outstanding; its reply must come back before the
+    /// next parked line goes out (per-connection reply order).
+    in_flight: bool,
+    /// Lines parked behind the in-flight dispatch (FIFO).
+    pending: std::collections::VecDeque<String>,
+    /// Close once every parked line has been answered (empty line, EOF,
+    /// or the legacy reject).
+    close_after: bool,
+}
+
+/// The gateway's [`ConnHandler`]: sniff + admission bookkeeping on the
+/// loop thread, everything that can block offloaded through `jobs`,
+/// replies returned via the loop's [`CompletionSender`].
+#[cfg(unix)]
+struct GwLoopHandler {
+    gw: Arc<Gateway>,
+    jobs: Arc<BoundedQueue<GwJob>>,
+    done: CompletionSender,
+}
+
+#[cfg(unix)]
+impl GwLoopHandler {
+    /// Dispatch parked lines until one is in flight. Never blocks: a
+    /// full queue becomes a typed shed reply (id 0 — the line was never
+    /// parsed, so there is no correlation id to echo).
+    fn pump(&self, st: &mut GwConnState, out: &mut WriteBuf) {
+        while !st.in_flight {
+            let Some(line) = st.pending.pop_front() else { break };
+            let job = GwJob {
+                token: st.token,
+                line,
+                bucket: st.bucket.clone(),
+                rng_seed: st.seed.wrapping_add(st.seq.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                done: self.done.clone(),
+            };
+            st.seq += 1;
+            match self.jobs.try_push(job) {
+                Ok(()) => st.in_flight = true,
+                Err(_) => {
+                    let mut reply = Gateway::error_reply(
+                        0,
+                        ServeError::new(
+                            ErrorCode::Unavailable,
+                            "gateway dispatch queue is full; retry",
+                        )
+                        .with_meta(ErrorMeta { retry_after_ms: Some(10), remaining: None }),
+                    );
+                    reply.push('\n');
+                    out.push(reply.as_bytes());
+                }
+            }
+        }
+    }
+
+    fn flow_for(st: &GwConnState) -> Flow {
+        if st.close_after && !st.in_flight && st.pending.is_empty() {
+            Flow::Close
+        } else {
+            Flow::Continue
+        }
+    }
+}
+
+#[cfg(unix)]
+impl ConnHandler for GwLoopHandler {
+    type ConnState = GwConnState;
+
+    fn on_accept(&mut self, token: u64) -> GwConnState {
+        GwConnState {
+            token,
+            mode: ConnMode::Unknown,
+            bucket: Arc::new(self.gw.client_bucket()),
+            seed: CONN_SEED.fetch_add(0x9E37_79B9, Ordering::Relaxed),
+            seq: 0,
+            in_flight: false,
+            pending: std::collections::VecDeque::new(),
+            close_after: false,
+        }
+    }
+
+    fn on_lines(
+        &mut self,
+        st: &mut GwConnState,
+        batch: &LineBatch<'_>,
+        eof: bool,
+        out: &mut WriteBuf,
+    ) -> Flow {
+        for raw in batch.lines() {
+            if st.close_after {
+                break; // an empty line or reject already ended the conn
+            }
+            let line_raw = String::from_utf8_lossy(raw);
+            let line = line_raw.trim();
+            if line.is_empty() {
+                st.close_after = true; // empty line closes, like the serve path
+                break;
+            }
+            if st.mode == ConnMode::Unknown {
+                if !line.starts_with('{') {
+                    let mut reply = ama1_only_reply();
+                    reply.push('\n');
+                    out.push(reply.as_bytes());
+                    st.close_after = true;
+                    break;
+                }
+                st.mode = ConnMode::Ama1;
+            }
+            st.pending.push_back(line.to_string());
+        }
+        if eof {
+            st.close_after = true;
+        }
+        self.pump(st, out);
+        Self::flow_for(st)
+    }
+
+    fn on_oversized(&mut self, _st: &mut GwConnState, _first: Option<u8>, out: &mut WriteBuf) {
+        // The blocking front answers oversized frames unconditionally
+        // (no sniff) — mirror it byte-for-byte.
+        let mut reply = oversized_reply();
+        reply.push('\n');
+        out.push(reply.as_bytes());
+    }
+
+    fn on_stop(&mut self, st: &mut GwConnState, out: &mut WriteBuf) {
+        // Same mode gate as `shutdown_goodbye`: only AMA/1 peers get the
+        // typed goodbye.
+        if st.mode == ConnMode::Ama1 {
+            let mut frame = crate::server::goodbye_frame();
+            frame.push('\n');
+            out.push(frame.as_bytes());
+        }
+    }
+
+    fn on_completion(
+        &mut self,
+        st: &mut GwConnState,
+        payload: Vec<u8>,
+        out: &mut WriteBuf,
+    ) -> Flow {
+        out.push(&payload);
+        st.in_flight = false;
+        self.pump(st, out);
+        Self::flow_for(st)
     }
 }
 
@@ -766,6 +1036,72 @@ mod tests {
         line.clear();
         assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must close");
 
+        server.stop();
+        t.join().unwrap().unwrap();
+        fleet.shutdown();
+    }
+
+    /// PR 9: the event-loop front answers pipelined envelopes in request
+    /// order — at-most-one-in-flight serializes a connection's backend
+    /// dispatches while parked lines wait their turn.
+    #[cfg(unix)]
+    #[test]
+    fn event_front_answers_pipelined_envelopes_in_order() {
+        use std::io::{BufRead, BufReader, Write};
+        let fleet = Fleet::start(2, FleetConfig::mini());
+        let gw = Arc::new(Gateway::new(fleet.addrs(), quick_cfg()));
+        let server = Arc::new(GatewayServer::bind("127.0.0.1:0", gw).unwrap());
+        let addr = server.local_addr().unwrap();
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut batch = String::new();
+        for id in 1..=8u64 {
+            let env =
+                Envelope::analyze(id, vec!["سيلعبون".to_string()], Default::default());
+            batch.push_str(&env.to_json());
+            batch.push('\n');
+        }
+        conn.write_all(batch.as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        for id in 1..=8u64 {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            match Reply::parse(line.trim()).unwrap() {
+                Reply::Results { id: got, results } => {
+                    assert_eq!(got, id, "pipelined replies must stay in request order");
+                    assert_eq!(results[0].root, "لعب");
+                }
+                other => panic!("expected results for {id}, got {other:?}"),
+            }
+        }
+        let accepted: u64 = server
+            .loop_stats()
+            .iter()
+            .map(|s| s.accepted.load(Ordering::Relaxed))
+            .sum();
+        assert!(accepted >= 1, "event path must have owned the connection");
+        server.stop();
+        t.join().unwrap().unwrap();
+        fleet.shutdown();
+    }
+
+    /// `event_loop: false` pins the original blocking handler pool.
+    #[test]
+    fn blocking_front_fallback_still_serves() {
+        let fleet = Fleet::start(1, FleetConfig::mini());
+        let cfg = GatewayConfig { event_loop: false, ..quick_cfg() };
+        let gw = Arc::new(Gateway::new(fleet.addrs(), cfg));
+        let server = Arc::new(GatewayServer::bind("127.0.0.1:0", gw).unwrap());
+        let addr = server.local_addr().unwrap();
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+        let mut client = crate::client::Client::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let r = client.analyze(&["قال"], &AnalyzeOptions::default()).unwrap();
+        assert_eq!(r[0].root, "قول");
         server.stop();
         t.join().unwrap().unwrap();
         fleet.shutdown();

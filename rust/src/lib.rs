@@ -281,6 +281,38 @@
 //!   ballots, reporting root-extraction accuracy against the paper's
 //!   87.7% (Quran, infix on) and 90.7% (Ankabut) reference points via
 //!   [`eval`].
+//!
+//! ## Event-loop ingest (PR 9)
+//!
+//! The socket stage sheds its thread-per-connection ceiling: [`net`] is
+//! a hand-rolled readiness event loop over raw fds (epoll on Linux,
+//! kqueue on macOS — declared directly in [`net::sys`], no new crates),
+//! and both `ama serve` and `ama gateway` run their TCP fronts on it by
+//! default (`--event-loop off` pins the original blocking pools):
+//!
+//! * **C10K shape** — a few loop threads ([`net::EventLoops`], default
+//!   ≤ 4) own all socket reads/writes plus per-connection line framing
+//!   ([`net::LineBuffer`]) and watermarked write buffering
+//!   ([`net::WriteBuf`]); 1024 mostly-idle keepalive clients cost 1024
+//!   registered fds, not 1024 blocked threads. A slow reader's backlog
+//!   pauses only *its* reads (backpressure watermarks) — it never
+//!   stalls the loop or its neighbors.
+//! * **Wire-unchanged** — completed lines still flow through the same
+//!   protocol sniffing (`{` ⇒ AMA/1, else legacy), connection-level
+//!   batching into `stem_bulk`, typed oversized/`SHUTDOWN` frames —
+//!   byte-for-byte with the blocking path (`docs/PROTOCOL.md`).
+//! * **Wakeup-driven control** — stop, connection hand-off, and
+//!   offloaded-work completions ring an eventfd/self-pipe
+//!   [`net::poller::Waker`]; shutdown latency is no longer bounded by
+//!   the old 50 ms read-poll tick. The gateway front offloads its
+//!   blocking backend dispatches to a worker pool and serializes
+//!   replies per connection (at most one in flight each).
+//! * **Observability** — [`metrics::MetricsServer`] serves
+//!   `ServiceMetrics`/`GatewayMetrics` (plus cache hit rate, slab/queue
+//!   saturation, per-algorithm counters, per-loop connection/readiness
+//!   stats) in Prometheus text format on a `--metrics-port` side port;
+//!   `ama loadtest --conns 1024 --idle-frac 0.95` drives the C10K
+//!   profile ([`bench::run_mostly_idle_load`]).
 
 pub mod analysis;
 pub mod bench;
@@ -298,6 +330,7 @@ pub mod index;
 pub mod khoja;
 pub mod light;
 pub mod metrics;
+pub mod net;
 pub mod protocol;
 pub mod rng;
 pub mod report;

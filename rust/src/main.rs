@@ -435,16 +435,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let port = args.flag_usize("--port", 7601).map_err(|e| anyhow!(e))?;
     let srv_cfg = ama::server::ServerConfig {
         handlers: args.flag_usize("--handlers", 8).map_err(|e| anyhow!(e))?,
+        event_loop: parse_event_loop(args)?,
+        loops: args.flag_usize("--loops", 0).map_err(|e| anyhow!(e))?,
         ..Default::default()
     };
-    let server =
-        ama::server::Server::bind_with(&format!("127.0.0.1:{port}"), coord.handle(), srv_cfg)?;
+    let event_loop = srv_cfg.event_loop;
+    let handlers = srv_cfg.handlers;
+    let server = Arc::new(ama::server::Server::bind_with(
+        &format!("127.0.0.1:{port}"),
+        coord.handle(),
+        srv_cfg,
+    )?);
     println!(
-        "ama serving on {} ({} handlers, backend {backend}; protocols: AMA/1 JSON-lines + legacy bare-line)",
+        "ama serving on {} ({handlers} handlers, backend {backend}, ingest {}; protocols: AMA/1 JSON-lines + legacy bare-line)",
         server.local_addr()?,
-        srv_cfg.handlers
+        if event_loop { "event-loop" } else { "blocking pool" }
     );
+    let metrics = {
+        let svc = coord.metrics_arc();
+        let srv = server.clone();
+        let render: Arc<dyn Fn() -> String + Send + Sync> = Arc::new(move || {
+            let mut out = ama::metrics::PromText::new();
+            svc.render_prometheus(&mut out);
+            render_conn_stats(&mut out, &srv.stats);
+            #[cfg(unix)]
+            render_loop_stats(&mut out, &srv.loop_stats());
+            out.finish()
+        });
+        start_metrics_endpoint(args, render)?
+    };
     server.serve_forever()?;
+    if let Some(ms) = metrics {
+        ms.stop();
+    }
     coord.shutdown();
     Ok(())
 }
@@ -462,6 +485,21 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         matches!(proto, "line" | "ama1"),
         "unknown proto {proto:?} (line|ama1)"
     );
+    // C10K profile (PR 9): park `idle_frac` of the connections as
+    // keepalive, burst the rest, and demand a flat p99 vs a 32-conn
+    // baseline. `0` (default) keeps the classic all-active modes.
+    let idle_frac = flag_f64(args, "--idle-frac", 0.0)?;
+    anyhow::ensure!(
+        (0.0..1.0).contains(&idle_frac),
+        "--idle-frac must be in [0, 1), got {idle_frac}"
+    );
+    let idle_mode = idle_frac > 0.0;
+    anyhow::ensure!(
+        !idle_mode || proto == "line",
+        "--idle-frac drives the legacy line protocol; drop --proto ama1"
+    );
+    let event_loop = parse_event_loop(args)?;
+    let loops = args.flag_usize("--loops", 0).map_err(|e| anyhow!(e))?;
     // AMA/1 load defaults to the registry backend so the fleet can
     // exercise per-request algorithms; the legacy-line default keeps the
     // BENCH_PR2 comparison backend.
@@ -486,16 +524,29 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let corpus = corpus::generate(&roots, &CorpusConfig::small(n_words, 29));
     let words: Vec<String> = corpus.tokens.iter().map(|t| t.word.to_string_ar()).collect();
 
-    let depths: Vec<(&str, usize)> = match mode {
-        "per-word" => vec![("per-word", 1)],
-        "pipelined" => vec![("pipelined", depth)],
-        "both" => vec![("per-word", 1), ("pipelined", depth)],
-        other => bail!("unknown mode {other:?} (per-word|pipelined|both)"),
+    // Each plan row: (name, connection count, pipeline depth).
+    let plan: Vec<(String, usize, usize)> = if idle_mode {
+        // Baseline first so the flat-p99 ratio reads rows[1]/rows[0].
+        vec![
+            ("mostly-idle-32".to_string(), 32, depth),
+            (format!("mostly-idle-{conns}"), conns, depth),
+        ]
+    } else {
+        match mode {
+            "per-word" => vec![("per-word".to_string(), conns, 1)],
+            "pipelined" => vec![("pipelined".to_string(), conns, depth)],
+            "both" => vec![
+                ("per-word".to_string(), conns, 1),
+                ("pipelined".to_string(), conns, depth),
+            ],
+            other => bail!("unknown mode {other:?} (per-word|pipelined|both)"),
+        }
     };
 
     let mut rows: Vec<(String, ama::bench::LoadOutcome, ama::metrics::MetricsSnapshot)> =
         Vec::new();
-    for (mode_name, depth) in depths {
+    for (mode_name, row_conns, depth) in plan {
+        let mode_name = mode_name.as_str();
         // Fresh stack per mode so metrics and batching state don't bleed.
         let cfg = CoordinatorConfig {
             workers,
@@ -504,8 +555,12 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         };
         let coord = start_coordinator(args, backend, roots.clone(), true, cfg)?;
         let srv_cfg = ama::server::ServerConfig {
-            // one handler per connection: the pool never gates the fleet
-            handlers: conns,
+            // Blocking fallback: one handler per connection so the pool
+            // never gates the fleet. The event-loop path (default) sizes
+            // itself and ignores `handlers`.
+            handlers: row_conns,
+            event_loop,
+            loops,
             ..Default::default()
         };
         let server =
@@ -515,18 +570,31 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         let serve_thread = std::thread::spawn(move || srv.serve_forever());
 
         println!(
-            "loadtest[{mode_name}/{proto}]: {conns} conns × {secs}s against {addr} ({backend})…"
+            "loadtest[{mode_name}/{proto}]: {row_conns} conns × {secs}s against {addr} ({backend})…"
         );
-        let outcome = match proto {
-            "ama1" => ama::bench::run_ama1_load(
+        let outcome = if idle_mode {
+            ama::bench::run_mostly_idle_load(
                 addr,
-                conns,
+                row_conns,
+                idle_frac,
                 Duration::from_secs(secs),
                 depth,
                 &words,
-                &opts_cycle,
-            ),
-            _ => ama::bench::run_tcp_load(addr, conns, Duration::from_secs(secs), depth, &words),
+            )
+        } else {
+            match proto {
+                "ama1" => ama::bench::run_ama1_load(
+                    addr,
+                    conns,
+                    Duration::from_secs(secs),
+                    depth,
+                    &words,
+                    &opts_cycle,
+                ),
+                _ => {
+                    ama::bench::run_tcp_load(addr, conns, Duration::from_secs(secs), depth, &words)
+                }
+            }
         };
         let snap = coord.metrics().snapshot();
         println!("  client: {outcome}");
@@ -547,7 +615,25 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         rows.push((mode_name.to_string(), outcome, snap));
     }
 
-    if rows.len() == 2 {
+    let mut p99_flat_ratio: Option<f64> = None;
+    if idle_mode && rows.len() == 2 {
+        let base = rows[0].1.rtt_p99_us;
+        let big = rows[1].1.rtt_p99_us;
+        if base > 0 && big > 0 {
+            let ratio = big as f64 / base as f64;
+            p99_flat_ratio = Some(ratio);
+            println!(
+                "\np99 flat check: {} conns p99 {}us vs 32-conn baseline {}us ({ratio:.2}x)",
+                rows[1].1.conns, big, base
+            );
+            // "Flat" with histogram-bucket tolerance: the RTT histogram
+            // buckets are powers of two, so allow two bucket steps.
+            anyhow::ensure!(
+                ratio <= 4.0,
+                "p99 not flat under mostly-idle C10K load: {ratio:.2}x vs 32-conn baseline"
+            );
+        }
+    } else if rows.len() == 2 {
         let per_word = rows[0].1.wps();
         let pipelined = rows[1].1.wps();
         if per_word > 0.0 {
@@ -570,7 +656,13 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         json.push_str(&format!("  \"conns\": {conns},\n"));
         json.push_str(&format!("  \"secs\": {secs},\n"));
         json.push_str(&format!("  \"coordinator_workers\": {workers},\n"));
-        if rows.len() == 2 && rows[0].1.wps() > 0.0 {
+        if idle_mode {
+            json.push_str(&format!("  \"idle_frac\": {idle_frac},\n"));
+        }
+        if let Some(ratio) = p99_flat_ratio {
+            json.push_str(&format!("  \"p99_flat_ratio_vs_32\": {ratio:.3},\n"));
+        }
+        if !idle_mode && rows.len() == 2 && rows[0].1.wps() > 0.0 {
             json.push_str(&format!(
                 "  \"speedup_pipelined_vs_per_word\": {:.3},\n",
                 rows[1].1.wps() / rows[0].1.wps()
@@ -579,12 +671,13 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         json.push_str("  \"results\": [\n");
         for (i, (name, o, snap)) in rows.iter().enumerate() {
             json.push_str(&format!(
-                "    {{\"name\": \"{name}\", \"depth\": {}, \"words\": {}, \"wps\": {:.1}, \
+                "    {{\"name\": \"{name}\", \"conns\": {}, \"depth\": {}, \"words\": {}, \"wps\": {:.1}, \
                  \"rtt_p50_us\": {}, \"rtt_p90_us\": {}, \"rtt_p99_us\": {}, \
                  \"server_p50_us\": {}, \"server_p90_us\": {}, \"server_p99_us\": {}, \
                  \"mean_batch\": {:.2}, \"queue_full\": {}, \"slab_waits\": {}, \
                  \"cache_hits\": {}, \"cache_misses\": {}, \"cache_hit_rate\": {:.4}, \
                  \"errors\": {}}}{}\n",
+                o.conns,
                 o.depth,
                 o.words,
                 o.wps(),
@@ -980,6 +1073,98 @@ fn flag_f64(args: &Args, name: &str, default: f64) -> Result<f64> {
     }
 }
 
+/// `--event-loop on|off` (PR 9; default on — unsupported platforms fall
+/// back to the blocking pool by themselves).
+fn parse_event_loop(args: &Args) -> Result<bool> {
+    match args.flag_or("--event-loop", "on") {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => bail!("--event-loop: {other:?} (on|off)"),
+    }
+}
+
+/// Connection-accounting series for the `/metrics` endpoint.
+fn render_conn_stats(out: &mut ama::metrics::PromText, stats: &ama::server::ConnStats) {
+    out.counter(
+        "ama_connections_accepted_total",
+        "Connections accepted by the serve front",
+        stats.accepted(),
+    );
+    out.gauge(
+        "ama_connections_active",
+        "Connections currently owned by a handler (blocking path)",
+        stats.active(),
+    );
+    out.counter(
+        "ama_connections_completed_total",
+        "Connections fully served and closed",
+        stats.completed(),
+    );
+}
+
+/// Per-event-loop series for the `/metrics` endpoint (empty slice —
+/// blocking path — renders nothing).
+#[cfg(unix)]
+fn render_loop_stats(out: &mut ama::metrics::PromText, loops: &[Arc<ama::net::LoopStats>]) {
+    use std::sync::atomic::Ordering::Relaxed;
+    if loops.is_empty() {
+        return;
+    }
+    fn rows(
+        loops: &[Arc<ama::net::LoopStats>],
+        f: impl Fn(&ama::net::LoopStats) -> u64,
+    ) -> Vec<(String, u64)> {
+        loops.iter().enumerate().map(|(i, s)| (format!("loop=\"{i}\""), f(s))).collect()
+    }
+    out.labeled_counter(
+        "ama_loop_connections_accepted_total",
+        "Connections handed to each event loop",
+        &rows(loops, |s| s.accepted.load(Relaxed)),
+    );
+    out.labeled_gauge(
+        "ama_loop_connections_open",
+        "Connections currently registered per event loop",
+        &rows(loops, |s| s.open.load(Relaxed)),
+    );
+    out.labeled_counter(
+        "ama_loop_readiness_events_total",
+        "Readiness events delivered per event loop",
+        &rows(loops, |s| s.readiness_events.load(Relaxed)),
+    );
+    out.labeled_counter(
+        "ama_loop_wakeups_total",
+        "Waker drains per event loop (stop/inject/completion pokes)",
+        &rows(loops, |s| s.wakeups.load(Relaxed)),
+    );
+    out.labeled_counter(
+        "ama_loop_reads_total",
+        "read(2) calls per event loop",
+        &rows(loops, |s| s.reads.load(Relaxed)),
+    );
+    out.labeled_counter(
+        "ama_loop_writes_total",
+        "write(2) calls per event loop",
+        &rows(loops, |s| s.writes.load(Relaxed)),
+    );
+    out.labeled_counter(
+        "ama_loop_read_pauses_total",
+        "Backpressure transitions: reads paused on slow readers, per loop",
+        &rows(loops, |s| s.pauses.load(Relaxed)),
+    );
+}
+
+/// Start the Prometheus side-port endpoint if `--metrics-port` was given.
+fn start_metrics_endpoint(
+    args: &Args,
+    render: Arc<dyn Fn() -> String + Send + Sync>,
+) -> Result<Option<ama::metrics::MetricsServer>> {
+    let Some(p) = args.flag("--metrics-port") else { return Ok(None) };
+    let port: u16 = p.parse().map_err(|_| anyhow!("--metrics-port: invalid port {p:?}"))?;
+    let ms = ama::metrics::MetricsServer::start(&format!("127.0.0.1:{port}"), render)?;
+    println!("metrics endpoint on http://{}/metrics (Prometheus text)", ms.local_addr());
+    Ok(Some(ms))
+}
+
 /// Gateway policy from the shared flag set (used by both `ama gateway`
 /// and `ama gateway-loadtest`).
 fn gateway_config(args: &Args) -> Result<ama::gateway::GatewayConfig> {
@@ -1007,6 +1192,8 @@ fn gateway_config(args: &Args) -> Result<ama::gateway::GatewayConfig> {
         rate_per_sec: flag_f64(args, "--rate", 0.0)?,
         burst: flag_f64(args, "--burst", 0.0)?,
         max_in_flight: args.flag_usize("--max-in-flight", 0).map_err(|e| anyhow!(e))?,
+        event_loop: parse_event_loop(args)?,
+        loops: args.flag_usize("--loops", 0).map_err(|e| anyhow!(e))?,
         ..ama::gateway::GatewayConfig::default()
     })
 }
@@ -1047,18 +1234,36 @@ fn cmd_gateway(args: &Args) -> Result<()> {
 
     let gw = Arc::new(Gateway::new(&endpoints, cfg));
     let port = args.flag_usize("--port", 7610).map_err(|e| anyhow!(e))?;
-    let server = GatewayServer::bind(&format!("127.0.0.1:{port}"), gw)?;
+    let server = Arc::new(GatewayServer::bind(&format!("127.0.0.1:{port}"), gw.clone())?);
     println!(
-        "ama gateway on {} -> {} replicas ({} handlers; AMA/1 only; breaker \
+        "ama gateway on {} -> {} replicas ({} handlers, ingest {}; AMA/1 only; breaker \
          threshold={} cooldown={}ms; probe every {}ms)",
         server.local_addr()?,
         endpoints.len(),
         cfg.handlers,
+        if cfg.event_loop { "event-loop" } else { "blocking pool" },
         cfg.pool.breaker.failure_threshold,
         cfg.pool.breaker.cooldown.as_millis(),
         cfg.probe_interval.as_millis(),
     );
+    let metrics = {
+        let gwm = gw.metrics().clone();
+        let srv = server.clone();
+        let render: Arc<dyn Fn() -> String + Send + Sync> = Arc::new(move || {
+            let mut out = ama::metrics::PromText::new();
+            gwm.render_prometheus(&mut out);
+            #[cfg(unix)]
+            render_loop_stats(&mut out, &srv.loop_stats());
+            #[cfg(not(unix))]
+            let _ = &srv;
+            out.finish()
+        });
+        start_metrics_endpoint(args, render)?
+    };
     server.serve_forever()?;
+    if let Some(ms) = metrics {
+        ms.stop();
+    }
     Ok(())
 }
 

@@ -9,7 +9,11 @@
 //! reused standalone by the `ama loadtest` client fleet for client-side
 //! round-trip latency.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Execution-time / throughput measurement of a finished run.
@@ -130,6 +134,10 @@ pub struct ServiceMetrics {
     /// Stem-cache probes that fell through to kernel dispatch (and then
     /// seeded the cache).
     pub cache_misses: AtomicU64,
+    /// Words analyzed per algorithm (PR 9), indexed by
+    /// [`crate::analysis::Algorithm`] discriminant. Exported as the
+    /// `ama_algorithm_words_total{algorithm=…}` Prometheus series.
+    pub algo_words: [AtomicU64; crate::analysis::Algorithm::ALL.len()],
     /// Histogram of request latency (submit → reply fill).
     latency: LatencyHistogram,
 }
@@ -148,6 +156,12 @@ impl ServiceMetrics {
     pub fn record_latency(&self, d: Duration) {
         self.latency.record(d);
         self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Attribute `words` to the algorithm that analyzed them (per-batch,
+    /// from the coordinator's per-`EngineOpts` dispatch groups).
+    pub fn record_algorithm_words(&self, algo: crate::analysis::Algorithm, words: u64) {
+        self.algo_words[algo as usize].fetch_add(words, Ordering::Relaxed);
     }
 
     /// The request-latency histogram (shared shape with client-side
@@ -197,6 +211,13 @@ impl ServiceMetrics {
             rejected_bad_word: self.rejected_bad_word.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            algo_words: {
+                let mut a = [0u64; crate::analysis::Algorithm::ALL.len()];
+                for (o, c) in a.iter_mut().zip(&self.algo_words) {
+                    *o = c.load(Ordering::Relaxed);
+                }
+                a
+            },
             mean_batch_size: self.mean_batch_size(),
             p50_us: self.latency.percentile_us(0.50),
             p90_us: self.latency.percentile_us(0.90),
@@ -218,6 +239,7 @@ pub struct MetricsSnapshot {
     pub rejected_bad_word: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub algo_words: [u64; crate::analysis::Algorithm::ALL.len()],
     pub mean_batch_size: f64,
     pub p50_us: u64,
     pub p90_us: u64,
@@ -422,6 +444,288 @@ impl std::fmt::Display for GatewaySnapshot {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Prometheus text exposition (PR 9)
+// ---------------------------------------------------------------------------
+
+/// Builder for the Prometheus text exposition format
+/// (`text/plain; version=0.0.4`): `# HELP` / `# TYPE` headers plus one
+/// sample line per series. Hand-rolled like the JSON shim — the format
+/// is line-oriented and needs no escaping for our names/labels.
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        use std::fmt::Write as _;
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        use std::fmt::Write as _;
+        self.header(name, help, "counter");
+        let _ = writeln!(self.out, "{name} {value}");
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, value: u64) {
+        use std::fmt::Write as _;
+        self.header(name, help, "gauge");
+        let _ = writeln!(self.out, "{name} {value}");
+    }
+
+    pub fn gauge_f64(&mut self, name: &str, help: &str, value: f64) {
+        use std::fmt::Write as _;
+        self.header(name, help, "gauge");
+        let _ = writeln!(self.out, "{name} {value:.6}");
+    }
+
+    /// One metric with several label sets; each row is
+    /// (`key="value"` label body, sample value).
+    pub fn labeled_counter(&mut self, name: &str, help: &str, rows: &[(String, u64)]) {
+        use std::fmt::Write as _;
+        self.header(name, help, "counter");
+        for (labels, value) in rows {
+            let _ = writeln!(self.out, "{name}{{{labels}}} {value}");
+        }
+    }
+
+    /// Same, for gauges (e.g. per-loop open-connection counts).
+    pub fn labeled_gauge(&mut self, name: &str, help: &str, rows: &[(String, u64)]) {
+        use std::fmt::Write as _;
+        self.header(name, help, "gauge");
+        for (labels, value) in rows {
+            let _ = writeln!(self.out, "{name}{{{labels}}} {value}");
+        }
+    }
+
+    /// Cumulative histogram from a [`LatencyHistogram`], converted to
+    /// seconds. `_sum` is approximated from bucket upper bounds (the
+    /// log₂ histogram stores no exact sum) — a ≤2× overestimate,
+    /// consistent with the percentile bias.
+    pub fn histogram_seconds(&mut self, name: &str, help: &str, h: &LatencyHistogram) {
+        use std::fmt::Write as _;
+        self.header(name, help, "histogram");
+        let counts = h.counts();
+        let total: u64 = counts.iter().sum();
+        let mut cum = 0u64;
+        let mut sum_us = 0.0f64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            let le_us = 1u64 << (i + 1);
+            let _ = writeln!(self.out, "{name}_bucket{{le=\"{}\"}} {cum}", le_us as f64 / 1e6);
+            sum_us += *c as f64 * le_us as f64;
+        }
+        let _ = writeln!(self.out, "{name}_bucket{{le=\"+Inf\"}} {total}");
+        let _ = writeln!(self.out, "{name}_sum {:.6}", sum_us / 1e6);
+        let _ = writeln!(self.out, "{name}_count {total}");
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl ServiceMetrics {
+    /// Render the full `ama_*` serving-tier series set into `out`.
+    pub fn render_prometheus(&self, out: &mut PromText) {
+        let snap = self.snapshot();
+        out.counter("ama_requests_total", "Requests answered by the coordinator", snap.requests);
+        out.counter("ama_words_total", "Words analyzed", snap.words);
+        out.counter("ama_batches_total", "Kernel dispatch batches", snap.batches);
+        out.counter("ama_errors_total", "Batches failed inside a kernel", snap.errors);
+        out.gauge_f64("ama_mean_batch_size", "Mean words per dispatch batch", snap.mean_batch_size);
+        out.counter(
+            "ama_queue_full_events_total",
+            "Submissions that found the request queue full (saturation)",
+            snap.queue_full_events,
+        );
+        out.counter(
+            "ama_slab_waits_total",
+            "Submissions that waited on an exhausted reply slab (saturation)",
+            snap.slab_waits,
+        );
+        out.labeled_counter(
+            "ama_rejected_total",
+            "Typed protocol rejections by reason",
+            &[
+                ("reason=\"queue_full\"".to_string(), snap.rejected_queue_full),
+                ("reason=\"shutdown\"".to_string(), snap.rejected_shutdown),
+                ("reason=\"bad_word\"".to_string(), snap.rejected_bad_word),
+            ],
+        );
+        out.counter("ama_cache_hits_total", "Stem-cache probes answered from cache", snap.cache_hits);
+        out.counter(
+            "ama_cache_misses_total",
+            "Stem-cache probes that reached a kernel",
+            snap.cache_misses,
+        );
+        out.gauge_f64(
+            "ama_cache_hit_rate",
+            "Fraction of cache probes that hit (0 with no cache)",
+            snap.cache_hit_rate(),
+        );
+        let algo_rows: Vec<(String, u64)> = crate::analysis::Algorithm::ALL
+            .iter()
+            .map(|a| (format!("algorithm=\"{}\"", a.as_str()), snap.algo_words[*a as usize]))
+            .collect();
+        out.labeled_counter(
+            "ama_algorithm_words_total",
+            "Words analyzed per stemming algorithm",
+            &algo_rows,
+        );
+        out.histogram_seconds(
+            "ama_request_latency_seconds",
+            "Request latency, submit to reply fill (log2 buckets)",
+            self.latency(),
+        );
+    }
+}
+
+impl GatewayMetrics {
+    /// Render the full `ama_gateway_*` series set into `out`.
+    pub fn render_prometheus(&self, out: &mut PromText) {
+        let snap = self.snapshot();
+        out.counter("ama_gateway_envelopes_total", "AMA/1 envelopes accepted", snap.envelopes);
+        out.counter("ama_gateway_words_total", "Words carried by accepted envelopes", snap.words);
+        out.counter(
+            "ama_gateway_backend_dispatches_total",
+            "Dispatch groups sent to replicas",
+            snap.backend_dispatches,
+        );
+        out.counter("ama_gateway_backend_words_total", "Words sent to replicas", snap.backend_words);
+        out.counter(
+            "ama_gateway_coalesced_words_total",
+            "Words answered by piggybacking on in-flight dispatches",
+            snap.coalesced_words,
+        );
+        out.counter("ama_gateway_retries_total", "Backend attempts beyond the first", snap.retries);
+        out.counter("ama_gateway_failovers_total", "Dispatch groups rerouted after shard-owner failure", snap.failovers);
+        out.labeled_counter(
+            "ama_gateway_breaker_transitions_total",
+            "Circuit-breaker transitions by kind",
+            &[
+                ("transition=\"opened\"".to_string(), snap.breaker_opened),
+                ("transition=\"half_opened\"".to_string(), snap.breaker_half_opened),
+                ("transition=\"closed\"".to_string(), snap.breaker_closed),
+            ],
+        );
+        out.labeled_counter(
+            "ama_gateway_shed_total",
+            "Front-side requests shed by reason",
+            &[
+                ("reason=\"rate_limited\"".to_string(), snap.shed_rate_limited),
+                ("reason=\"overloaded\"".to_string(), snap.shed_overloaded),
+            ],
+        );
+        out.counter(
+            "ama_gateway_unavailable_total",
+            "Requests answered UNAVAILABLE (no healthy replica)",
+            snap.unavailable,
+        );
+        out.counter(
+            "ama_gateway_probe_failures_total",
+            "Background health-probe failures",
+            snap.probe_failures,
+        );
+        out.histogram_seconds(
+            "ama_gateway_request_latency_seconds",
+            "Front-side request latency, read to reply (log2 buckets)",
+            self.latency(),
+        );
+    }
+}
+
+/// Minimal blocking HTTP endpoint serving `GET /metrics` in Prometheus
+/// text format on a side port (PR 9). One short-lived connection per
+/// scrape — scrape cadence is seconds, so a single blocking thread is
+/// the right amount of machinery; the C10K event loop stays dedicated
+/// to protocol traffic.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 picks a free port) and serve `render()` as
+    /// the `/metrics` body until [`MetricsServer::stop`].
+    pub fn start(
+        addr: &str,
+        render: Arc<dyn Fn() -> String + Send + Sync>,
+    ) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let join = std::thread::Builder::new().name("metrics-http".into()).spawn(move || {
+            for stream in listener.incoming() {
+                if stop_t.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                serve_scrape(stream, render.as_ref());
+            }
+        })?;
+        Ok(MetricsServer { addr: local, stop, join: Mutex::new(Some(join)) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the endpoint: flag + self-poke + join.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Answer one scrape connection: parse the request line, serve
+/// `/metrics` or 404, close.
+fn serve_scrape(mut stream: TcpStream, render: &dyn Fn() -> String) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut req = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                req.extend_from_slice(&buf[..n]);
+                if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let line = req.split(|&b| b == b'\n').next().unwrap_or(&[]);
+    let line = String::from_utf8_lossy(line);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, body) = if method == "GET" && (path == "/metrics" || path.starts_with("/metrics?"))
+    {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", "only /metrics lives here\n".to_string())
+    };
+    let resp = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(resp.as_bytes());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -544,5 +848,87 @@ mod tests {
         let line = format!("{snap}");
         assert!(line.contains("queue_full=3"), "{line}");
         assert!(line.contains("slab_waits=2"), "{line}");
+    }
+
+    #[test]
+    fn per_algorithm_word_counters() {
+        use crate::analysis::Algorithm;
+        let s = ServiceMetrics::new();
+        s.record_algorithm_words(Algorithm::Khoja, 7);
+        s.record_algorithm_words(Algorithm::Khoja, 3);
+        s.record_algorithm_words(Algorithm::Light, 2);
+        let snap = s.snapshot();
+        assert_eq!(snap.algo_words[Algorithm::Khoja as usize], 10);
+        assert_eq!(snap.algo_words[Algorithm::Light as usize], 2);
+        assert_eq!(snap.algo_words[Algorithm::Linguistic as usize], 0);
+    }
+
+    #[test]
+    fn prometheus_text_renders_required_series() {
+        use crate::analysis::Algorithm;
+        let s = ServiceMetrics::new();
+        s.record_batch(12);
+        s.record_latency(Duration::from_micros(100));
+        s.cache_hits.fetch_add(3, Ordering::Relaxed);
+        s.cache_misses.fetch_add(1, Ordering::Relaxed);
+        s.record_algorithm_words(Algorithm::Voting, 12);
+        let g = GatewayMetrics::new();
+        g.record_envelope(5);
+        g.record_latency(Duration::from_micros(50));
+        let mut page = PromText::new();
+        s.render_prometheus(&mut page);
+        g.render_prometheus(&mut page);
+        let text = page.finish();
+        // the series verify.sh greps for
+        assert!(text.contains("ama_requests_total 1"), "{text}");
+        assert!(text.contains("ama_cache_hit_rate 0.750000"), "{text}");
+        // per-algorithm labels
+        assert!(text.contains("ama_algorithm_words_total{algorithm=\"voting\"} 12"), "{text}");
+        assert!(text.contains("ama_algorithm_words_total{algorithm=\"khoja\"} 0"), "{text}");
+        // histogram shape: cumulative buckets, +Inf closes the series
+        assert!(text.contains("ama_request_latency_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("ama_request_latency_seconds_count 1"), "{text}");
+        // gateway series present on the same page
+        assert!(text.contains("ama_gateway_envelopes_total 1"), "{text}");
+        assert!(text.contains("ama_gateway_request_latency_seconds_bucket"), "{text}");
+        // every HELP has a TYPE
+        let helps = text.matches("# HELP").count();
+        let types = text.matches("# TYPE").count();
+        assert_eq!(helps, types, "{text}");
+    }
+
+    #[test]
+    fn metrics_http_endpoint_serves_prometheus_text() {
+        let s = Arc::new(ServiceMetrics::new());
+        s.record_batch(4);
+        s.record_latency(Duration::from_micros(10));
+        let render_src = s.clone();
+        let server = MetricsServer::start(
+            "127.0.0.1:0",
+            Arc::new(move || {
+                let mut page = PromText::new();
+                render_src.render_prometheus(&mut page);
+                page.finish()
+            }),
+        )
+        .unwrap();
+        let addr = server.local_addr();
+
+        let scrape = |path: &str| -> String {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.write_all(format!("GET {path} HTTP/1.0\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+            let mut out = String::new();
+            conn.read_to_string(&mut out).unwrap();
+            out
+        };
+        let resp = scrape("/metrics");
+        assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        assert!(resp.contains("ama_requests_total 1"), "{resp}");
+        assert!(resp.contains("ama_words_total 4"), "{resp}");
+        let missing = scrape("/nope");
+        assert!(missing.starts_with("HTTP/1.0 404"), "{missing}");
+
+        server.stop(); // joins the scrape thread; no panic ⇒ clean drain
     }
 }

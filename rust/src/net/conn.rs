@@ -1,0 +1,306 @@
+//! Per-connection state machines for the event loop (PR 9): incremental
+//! line framing on the read side, watermarked buffering on the write
+//! side. Both are pure (no sockets, no syscalls) so they unit-test
+//! exhaustively here and port literally to python for the PR 9 oracle
+//! sweep (`scripts/server_sim_pr9.py`).
+//!
+//! Framing semantics are byte-for-byte those of the blocking path's
+//! `server::read_frame`:
+//!
+//! * a line is the bytes up to (excluding) `\n`;
+//! * a line whose content exceeds [`crate::protocol::MAX_FRAME_BYTES`]
+//!   is **oversized** — so is an unterminated tail that has already
+//!   grown past the cap (the blocking path's `Read::take` room check);
+//! * on EOF, a non-empty unterminated tail counts as a final line
+//!   (`Frame::Line { eof: true }` in the blocking reader).
+
+use crate::protocol::MAX_FRAME_BYTES;
+
+/// Pause reading from a connection once this many reply bytes are queued
+/// unwritten — the slow-reader backpressure threshold. One stalled
+/// client caps its own memory footprint and never blocks the loop.
+pub const WRITE_HIGH_WATER: usize = 256 * 1024;
+
+/// Resume reading once the queued reply bytes drain below this.
+pub const WRITE_LOW_WATER: usize = 32 * 1024;
+
+/// Largest read the loop performs per connection per readiness cycle.
+/// Level-triggered polling re-reports the fd if more is buffered, so a
+/// firehose client cannot starve its neighbors on the same loop.
+pub const READ_CHUNK_BYTES: usize = 64 * 1024;
+
+/// Outcome of scanning for the next complete line.
+#[derive(Debug, PartialEq, Eq)]
+pub enum NextLine {
+    /// A complete line occupies `bytes[start..end]` (newline excluded).
+    Line { start: usize, end: usize },
+    /// The current line exceeded [`MAX_FRAME_BYTES`] — terminated or not.
+    Oversized,
+    /// Only an (in-budget) unterminated tail remains.
+    Partial,
+}
+
+/// Incremental line framer: bytes in via [`LineBuffer::extend`],
+/// complete lines out via [`LineBuffer::next_line`], partial tails kept
+/// across readiness events, memory reclaimed by [`LineBuffer::compact`].
+#[derive(Default)]
+pub struct LineBuffer {
+    buf: Vec<u8>,
+    /// Start of the next line not yet handed out.
+    consumed: usize,
+    /// Bytes already scanned for `\n` (never rescan on short reads).
+    scan: usize,
+}
+
+impl LineBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a chunk read from the socket.
+    pub fn extend(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Scan forward for the next complete line. Ranges index into
+    /// [`LineBuffer::bytes`] and stay valid until [`LineBuffer::compact`].
+    pub fn next_line(&mut self) -> NextLine {
+        match self.buf[self.scan..].iter().position(|&b| b == b'\n') {
+            Some(off) => {
+                let nl = self.scan + off;
+                let start = self.consumed;
+                if nl - start > MAX_FRAME_BYTES {
+                    // leave `consumed` at the oversized line so
+                    // `current_first_byte` sniffs *its* first byte; the
+                    // connection closes after the typed error anyway
+                    self.scan = nl;
+                    return NextLine::Oversized;
+                }
+                self.consumed = nl + 1;
+                self.scan = nl + 1;
+                NextLine::Line { start, end: nl }
+            }
+            None => {
+                self.scan = self.buf.len();
+                if self.buf.len() - self.consumed > MAX_FRAME_BYTES {
+                    NextLine::Oversized
+                } else {
+                    NextLine::Partial
+                }
+            }
+        }
+    }
+
+    /// The whole buffer (line ranges from [`LineBuffer::next_line`] index
+    /// into this).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// The unterminated tail past every handed-out line.
+    pub fn partial(&self) -> &[u8] {
+        &self.buf[self.consumed..]
+    }
+
+    /// First byte of the line currently being accumulated (used for the
+    /// oversized-frame protocol sniff, mirroring `buf.first()` on the
+    /// blocking path).
+    pub fn current_first_byte(&self) -> Option<u8> {
+        self.buf.get(self.consumed).copied()
+    }
+
+    /// Drop handed-out lines and move the partial tail to the front.
+    /// Invalidates previously returned ranges.
+    pub fn compact(&mut self) {
+        if self.consumed == 0 {
+            return;
+        }
+        self.buf.drain(..self.consumed);
+        self.scan -= self.consumed;
+        self.consumed = 0;
+    }
+
+    /// Hand out the EOF tail as a final line (blocking path:
+    /// `Frame::Line { eof: true }`). Empty when the peer ended cleanly
+    /// on a line boundary.
+    pub fn take_eof_tail(&mut self) -> (usize, usize) {
+        let range = (self.consumed, self.buf.len());
+        self.consumed = self.buf.len();
+        self.scan = self.buf.len();
+        range
+    }
+}
+
+/// Watermarked write buffer: replies are appended here, flushed as the
+/// socket accepts them, and the `over_high_water` signal pauses reads
+/// from the owning connection (slow-reader backpressure).
+#[derive(Default)]
+pub struct WriteBuf {
+    buf: Vec<u8>,
+    sent: usize,
+}
+
+impl WriteBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes queued but not yet accepted by the socket.
+    pub fn pending(&self) -> &[u8] {
+        &self.buf[self.sent..]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sent == self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.sent
+    }
+
+    /// Mark `n` pending bytes as written; reclaims the prefix once the
+    /// sent region dominates (amortized O(1) per byte).
+    pub fn advance(&mut self, n: usize) {
+        self.sent += n;
+        debug_assert!(self.sent <= self.buf.len());
+        if self.sent == self.buf.len() {
+            self.buf.clear();
+            self.sent = 0;
+        } else if self.sent >= 4096 && self.sent * 2 >= self.buf.len() {
+            self.buf.drain(..self.sent);
+            self.sent = 0;
+        }
+    }
+
+    pub fn over_high_water(&self) -> bool {
+        self.len() > WRITE_HIGH_WATER
+    }
+
+    pub fn below_low_water(&self) -> bool {
+        self.len() < WRITE_LOW_WATER
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines_of(lb: &mut LineBuffer) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        loop {
+            match lb.next_line() {
+                NextLine::Line { start, end } => out.push(lb.bytes()[start..end].to_vec()),
+                NextLine::Partial => break,
+                NextLine::Oversized => panic!("unexpected oversized"),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lines_split_across_arbitrary_chunk_boundaries() {
+        let stream = "قال\nfoo\r\nbar\n".as_bytes();
+        // every possible split point of the byte stream into two chunks
+        for cut in 0..=stream.len() {
+            let mut lb = LineBuffer::new();
+            lb.extend(&stream[..cut]);
+            let mut got = lines_of(&mut lb);
+            lb.compact();
+            lb.extend(&stream[cut..]);
+            got.extend(lines_of(&mut lb));
+            assert_eq!(
+                got,
+                vec!["قال".as_bytes().to_vec(), b"foo\r".to_vec(), b"bar".to_vec()],
+                "cut at {cut}"
+            );
+            assert!(lb.partial().is_empty());
+        }
+    }
+
+    #[test]
+    fn partial_tail_survives_compaction() {
+        let mut lb = LineBuffer::new();
+        lb.extend(b"hello\nwor");
+        assert!(matches!(lb.next_line(), NextLine::Line { .. }));
+        assert_eq!(lb.next_line(), NextLine::Partial);
+        lb.compact();
+        assert_eq!(lb.partial(), b"wor");
+        lb.extend(b"ld\n");
+        let got = lines_of(&mut lb);
+        assert_eq!(got, vec![b"world".to_vec()]);
+    }
+
+    #[test]
+    fn eof_tail_is_a_final_line() {
+        let mut lb = LineBuffer::new();
+        lb.extend(b"abc\ndef");
+        assert!(matches!(lb.next_line(), NextLine::Line { .. }));
+        assert_eq!(lb.next_line(), NextLine::Partial);
+        let (s, e) = lb.take_eof_tail();
+        assert_eq!(&lb.bytes()[s..e], b"def");
+        assert!(lb.partial().is_empty());
+        // clean EOF on a boundary: the tail is empty
+        let mut lb = LineBuffer::new();
+        lb.extend(b"abc\n");
+        assert!(matches!(lb.next_line(), NextLine::Line { .. }));
+        assert_eq!(lb.next_line(), NextLine::Partial);
+        let (s, e) = lb.take_eof_tail();
+        assert_eq!(s, e);
+    }
+
+    #[test]
+    fn oversized_matches_blocking_reader_thresholds() {
+        // content of exactly MAX_FRAME_BYTES + newline: still a line
+        let mut lb = LineBuffer::new();
+        lb.extend(&vec![b'x'; MAX_FRAME_BYTES]);
+        assert_eq!(lb.next_line(), NextLine::Partial, "at-cap tail is not oversized yet");
+        lb.extend(b"\n");
+        assert!(matches!(lb.next_line(), NextLine::Line { .. }));
+        // one more content byte: oversized, terminated or not
+        let mut lb = LineBuffer::new();
+        lb.extend(&vec![b'y'; MAX_FRAME_BYTES + 1]);
+        assert_eq!(lb.next_line(), NextLine::Oversized);
+        assert_eq!(lb.current_first_byte(), Some(b'y'));
+        let mut lb = LineBuffer::new();
+        let mut big = vec![b'{'; MAX_FRAME_BYTES + 1];
+        big.push(b'\n');
+        lb.extend(&big);
+        assert_eq!(lb.next_line(), NextLine::Oversized);
+        // terminated oversized still sniffs the offending line's first byte
+        assert_eq!(lb.current_first_byte(), Some(b'{'));
+    }
+
+    #[test]
+    fn write_buf_watermarks_and_partial_drain() {
+        let mut wb = WriteBuf::new();
+        assert!(wb.is_empty() && wb.below_low_water() && !wb.over_high_water());
+        wb.push(&vec![0u8; WRITE_HIGH_WATER + 1]);
+        assert!(wb.over_high_water());
+        // drain in uneven slices, as a slow socket would accept them
+        let mut remaining = wb.len();
+        let mut step = 1usize;
+        while remaining > WRITE_LOW_WATER {
+            let n = step.min(remaining - WRITE_LOW_WATER);
+            let visible = wb.pending().len();
+            assert!(visible >= n);
+            wb.advance(n);
+            remaining -= n;
+            step = step * 7 + 3;
+        }
+        assert!(!wb.over_high_water());
+        assert!(!wb.below_low_water() || wb.len() < WRITE_LOW_WATER);
+        wb.advance(wb.len());
+        assert!(wb.is_empty());
+        // interleaved push/advance keeps pending coherent
+        wb.push(b"abcdef");
+        wb.advance(2);
+        wb.push(b"gh");
+        assert_eq!(wb.pending(), b"cdefgh");
+        wb.advance(6);
+        assert!(wb.is_empty());
+    }
+}

@@ -1,0 +1,38 @@
+//! Minimal nonblocking networking layer for the C10K ingest path
+//! (PR 9) — hand-rolled over raw fds in the same offline/no-deps
+//! spirit as the vendored `anyhow` and the JSON shim in `protocol.rs`.
+//!
+//! Layering, bottom-up:
+//!
+//! * [`sys`] — the few `extern "C"` declarations the loop needs
+//!   (epoll/eventfd on Linux, kqueue/pipe on macOS, rlimit helpers).
+//! * [`conn`] — pure per-connection state machines: incremental line
+//!   framing ([`conn::LineBuffer`]) and watermarked write buffering
+//!   ([`conn::WriteBuf`]). No syscalls; ported literally to python in
+//!   `scripts/server_sim_pr9.py` for the oracle sweep.
+//! * [`poller`] — one readiness-polling surface ([`poller::Poller`])
+//!   plus the cross-thread [`poller::Waker`] doorbell.
+//! * [`loops`] — the event-loop threads themselves
+//!   ([`loops::EventLoops`]) driving a protocol-supplied
+//!   [`loops::ConnHandler`].
+//!
+//! On platforms without epoll/kqueue, [`loops::EventLoops::start`]
+//! fails with `Unsupported` and `server.rs`/`gateway` fall back to
+//! their pinned blocking handler pools.
+
+pub mod conn;
+pub mod sys;
+
+#[cfg(unix)]
+pub mod poller;
+
+#[cfg(unix)]
+pub mod loops;
+
+pub use conn::{LineBuffer, NextLine, WriteBuf, READ_CHUNK_BYTES, WRITE_HIGH_WATER, WRITE_LOW_WATER};
+
+#[cfg(unix)]
+pub use loops::{CompletionSender, ConnHandler, EventLoops, Flow, LineBatch, LoopStats};
+
+#[cfg(unix)]
+pub use poller::{Interest, Poller, Waker};

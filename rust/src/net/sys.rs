@@ -1,0 +1,235 @@
+//! Raw-fd system interface for the readiness event loop (PR 9).
+//!
+//! The offline image ships no `libc`/`mio`/`nix` crates, so — same
+//! discipline as the vendored `anyhow` and the hand-rolled JSON in
+//! `protocol.rs` — the handful of syscall wrappers the poller needs are
+//! declared here directly. `std` already links the platform C library,
+//! so plain `extern "C"` declarations resolve at link time; everything
+//! stays inside the standard symbols (`epoll_*`/`eventfd` on Linux,
+//! `kqueue`/`kevent`/`pipe` on macOS, `getrlimit`/`setrlimit` on both).
+//!
+//! Only the two supported platforms get real bindings. Elsewhere
+//! [`crate::net::Poller::new`] reports `Unsupported` and `server.rs`
+//! falls back to the pinned blocking handler pool, so the crate still
+//! builds and serves (slowly) on exotic targets.
+
+#![allow(dead_code)] // per-platform: each OS uses its half of the surface
+
+// ---------------------------------------------------------------------------
+// Linux: epoll + eventfd
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+pub mod linux {
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+    pub const EFD_CLOEXEC: i32 = 0o2000000;
+    pub const EFD_NONBLOCK: i32 = 0o4000;
+
+    /// Mirror of the kernel's `struct epoll_event`. On x86 the kernel ABI
+    /// packs the 12-byte struct (no padding between `events` and `data`);
+    /// other architectures use natural alignment.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+        pub fn eventfd(initval: u32, flags: i32) -> i32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// macOS: kqueue + self-pipe
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "macos")]
+pub mod macos {
+    pub const EVFILT_READ: i16 = -1;
+    pub const EVFILT_WRITE: i16 = -2;
+
+    pub const EV_ADD: u16 = 0x0001;
+    pub const EV_DELETE: u16 = 0x0002;
+    pub const EV_ERROR: u16 = 0x4000;
+    pub const EV_EOF: u16 = 0x8000;
+
+    pub const F_SETFL: i32 = 4;
+    pub const O_NONBLOCK: i32 = 0x0004;
+
+    /// Mirror of `struct kevent`. `udata` is declared pointer-sized
+    /// integer rather than `*mut c_void` — ABI-identical, and it keeps
+    /// the type `Send` without ceremony (we never store pointers in it).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct Kevent {
+        pub ident: usize,
+        pub filter: i16,
+        pub flags: u16,
+        pub fflags: u32,
+        pub data: isize,
+        pub udata: usize,
+    }
+
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    extern "C" {
+        pub fn kqueue() -> i32;
+        pub fn kevent(
+            kq: i32,
+            changelist: *const Kevent,
+            nchanges: i32,
+            eventlist: *mut Kevent,
+            nevents: i32,
+            timeout: *const Timespec,
+        ) -> i32;
+        pub fn pipe(fds: *mut i32) -> i32;
+        pub fn fcntl(fd: i32, cmd: i32, ...) -> i32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared: read/write/close on raw fds, rlimit
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod unix {
+    extern "C" {
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        pub fn close(fd: i32) -> i32;
+        pub fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        pub fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+
+    #[repr(C)]
+    pub struct RLimit {
+        pub rlim_cur: u64,
+        pub rlim_max: u64,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(target_os = "macos")]
+    pub const RLIMIT_NOFILE: i32 = 8;
+    #[cfg(not(any(target_os = "linux", target_os = "macos")))]
+    pub const RLIMIT_NOFILE: i32 = 7;
+}
+
+/// Raw-fd read, mapped to `io::Result` (used for the waker fds, which
+/// are not `TcpStream`s and have no std wrapper).
+#[cfg(unix)]
+pub fn fd_read(fd: i32, buf: &mut [u8]) -> std::io::Result<usize> {
+    let n = unsafe { unix::read(fd, buf.as_mut_ptr(), buf.len()) };
+    if n < 0 {
+        Err(std::io::Error::last_os_error())
+    } else {
+        Ok(n as usize)
+    }
+}
+
+/// Raw-fd write, mapped to `io::Result`.
+#[cfg(unix)]
+pub fn fd_write(fd: i32, buf: &[u8]) -> std::io::Result<usize> {
+    let n = unsafe { unix::write(fd, buf.as_ptr(), buf.len()) };
+    if n < 0 {
+        Err(std::io::Error::last_os_error())
+    } else {
+        Ok(n as usize)
+    }
+}
+
+/// Close a raw fd (errors ignored — close is advisory on teardown).
+#[cfg(unix)]
+pub fn fd_close(fd: i32) {
+    unsafe {
+        unix::close(fd);
+    }
+}
+
+/// Best-effort raise of the open-file-descriptor soft limit to at least
+/// `want`, capped by the hard limit. Returns the *effective* soft limit
+/// afterwards — callers size fd-hungry work (the C10K loadtest holds
+/// `conns × 2` sockets in one process) to what the OS actually granted
+/// instead of failing at accept time.
+#[cfg(unix)]
+pub fn raise_nofile(want: u64) -> u64 {
+    let mut lim = unix::RLimit { rlim_cur: 0, rlim_max: 0 };
+    if unsafe { unix::getrlimit(unix::RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 1024; // POSIX floor; assume the traditional default
+    }
+    if lim.rlim_cur >= want {
+        return lim.rlim_cur;
+    }
+    let raised = unix::RLimit { rlim_cur: want.min(lim.rlim_max), rlim_max: lim.rlim_max };
+    if unsafe { unix::setrlimit(unix::RLIMIT_NOFILE, &raised) } == 0 {
+        raised.rlim_cur
+    } else {
+        lim.rlim_cur
+    }
+}
+
+/// Non-unix stub: report the conventional default without touching
+/// anything.
+#[cfg(not(unix))]
+pub fn raise_nofile(_want: u64) -> u64 {
+    1024
+}
+
+/// How many two-socket connections fit the current process fd budget
+/// (after a best-effort limit raise), leaving `reserve` fds of headroom
+/// for listeners, wakers, pipes, and stdio.
+pub fn fd_budget_conns(want_conns: usize, reserve: u64) -> usize {
+    let need = (want_conns as u64) * 2 + reserve;
+    let granted = raise_nofile(need);
+    if granted >= need {
+        want_conns
+    } else {
+        (granted.saturating_sub(reserve) / 2) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nofile_raise_reports_a_sane_limit() {
+        let lim = raise_nofile(256);
+        assert!(lim >= 256, "soft nofile limit below the POSIX floor: {lim}");
+        // idempotent: asking again for less never lowers it
+        assert!(raise_nofile(64) >= lim.min(256));
+    }
+
+    #[test]
+    fn fd_budget_scales_down_not_up() {
+        // asking for 4 connections must always fit
+        assert_eq!(fd_budget_conns(4, 64), 4);
+        // a huge ask returns something <= the ask, never more
+        let got = fd_budget_conns(1 << 20, 64);
+        assert!(got <= 1 << 20);
+    }
+}

@@ -29,16 +29,27 @@
 //! may still pipeline envelopes back-to-back. An empty line or EOF closes
 //! the connection, exactly like the legacy mode. See `docs/PROTOCOL.md`.
 //!
-//! ## Threading
+//! ## Ingest models (PR 9)
 //!
-//! Accepted connections are pushed onto a bounded queue and served by a
-//! **fixed handler pool** ([`ServerConfig::handlers`] threads) instead of
-//! thread-per-connection: connection count no longer dictates thread
-//! count, and `serve_forever` joins every handler before returning.
-//! Handler reads poll at [`ServerConfig::poll`] so a stop request is
-//! observed promptly even on idle keep-alive connections. [`ConnStats`]
-//! tracks accepted / active / completed connections (active decrements on
-//! disconnect).
+//! The default ingest is a **readiness event loop**
+//! ([`crate::net::EventLoops`]): a few loop threads own every socket
+//! read/write and per-connection line buffer, so 1024 mostly-idle
+//! keepalive clients cost registered fds, not blocked threads. Wire
+//! behavior — sniffing, pipelined folding, oversized handling, the typed
+//! SHUTDOWN goodbye — is byte-for-byte the blocking path's; only the
+//! scheduling changed. Writes are buffered and writability-driven with
+//! watermarks, so one slow reader never stalls other connections, and
+//! `stop()` is wakeup-driven (eventfd/self-pipe), not poll-bounded.
+//!
+//! The previous **fixed handler pool** ([`ServerConfig::handlers`]
+//! threads fed by a bounded accept queue) is retained behind
+//! [`ServerConfig::event_loop`]` = false` (`--event-loop off`) as the
+//! pinned fallback — the same role the scalar kernel plays for the SIMD
+//! path — and is selected automatically when the platform has no
+//! epoll/kqueue. On the blocking path, [`ServerConfig::poll`] bounds how
+//! long a stop request can go unnoticed; on the event-loop path that
+//! knob is irrelevant by construction. [`ConnStats`] tracks accepted /
+//! active / completed connections identically under both models.
 
 use crate::chars::PackedWord;
 use crate::coordinator::Handle;
@@ -50,20 +61,34 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+#[cfg(unix)]
+use std::sync::Mutex;
+
 /// Serving-path policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
-    /// Fixed handler-pool size: how many connections are served
-    /// concurrently (additional accepted connections queue).
+    /// Fixed handler-pool size on the blocking fallback path: how many
+    /// connections are served concurrently (additional accepted
+    /// connections queue). Unused by the event loop.
     pub handlers: usize,
     /// Maximum words folded into one `stem_bulk` call per read cycle.
     pub max_pipeline: usize,
-    /// Read poll interval — bounds how long a stop request can go
-    /// unnoticed by a handler blocked on an idle connection.
+    /// Read poll interval on the blocking fallback path — bounds how
+    /// long a stop request can go unnoticed by a handler blocked on an
+    /// idle connection. The event-loop path is wakeup-driven and
+    /// ignores this.
     pub poll: Duration,
-    /// Accepted connections waiting for a free handler (accept blocks
-    /// beyond this — backpressure at the socket layer).
+    /// Accepted connections waiting for a free handler on the blocking
+    /// path (accept blocks beyond this — backpressure at the socket
+    /// layer).
     pub accept_backlog: usize,
+    /// Serve with the readiness event loop (default). `false` pins the
+    /// blocking handler pool; platforms without epoll/kqueue fall back
+    /// automatically.
+    pub event_loop: bool,
+    /// Event-loop thread count; 0 picks
+    /// [`crate::net::EventLoops::default_loops`] (≤ 4, core-bounded).
+    pub loops: usize,
 }
 
 impl Default for ServerConfig {
@@ -73,13 +98,15 @@ impl Default for ServerConfig {
             max_pipeline: 1024,
             poll: Duration::from_millis(50),
             accept_backlog: 64,
+            event_loop: true,
+            loops: 0,
         }
     }
 }
 
-/// Connection accounting: `active` is incremented when a handler picks a
-/// connection up and decremented on disconnect, so `accepted` vs
-/// `completed` vs `active` always reconciles.
+/// Connection accounting: `active` is incremented when a handler (or
+/// loop) picks a connection up and decremented on disconnect, so
+/// `accepted` vs `completed` vs `active` always reconciles.
 #[derive(Default)]
 pub struct ConnStats {
     pub accepted: AtomicU64,
@@ -111,6 +138,10 @@ pub struct Server {
     /// ops (PR 8). Always present; capped by
     /// [`crate::index::IndexServiceConfig`] defaults.
     index: Arc<crate::index::IndexService>,
+    /// Per-loop counters, populated when `serve_forever` takes the
+    /// event-loop path (for the `/metrics` endpoint).
+    #[cfg(unix)]
+    loop_stats: Arc<Mutex<Vec<Arc<crate::net::LoopStats>>>>,
 }
 
 impl Server {
@@ -135,6 +166,8 @@ impl Server {
             stop: Arc::new(AtomicBool::new(false)),
             stats: Arc::new(ConnStats::default()),
             index: Arc::new(crate::index::IndexService::new(Default::default())),
+            #[cfg(unix)]
+            loop_stats: Arc::new(Mutex::new(Vec::new())),
         })
     }
 
@@ -154,7 +187,8 @@ impl Server {
     }
 
     /// Request shutdown and poke the accept loop so it observes the flag.
-    /// `serve_forever` then drains the handler pool before returning.
+    /// `serve_forever` then drains its ingest (event loops or handler
+    /// pool) before returning.
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Ok(addr) = self.listener.local_addr() {
@@ -162,11 +196,65 @@ impl Server {
         }
     }
 
-    /// Accept loop: accepted connections are dispatched to the fixed
-    /// handler pool through a bounded queue. Returns only after every
-    /// handler thread has been joined (live connections observe the stop
-    /// within one poll interval).
+    /// Per-loop event-loop counters (empty on the blocking path or
+    /// before `serve_forever` starts).
+    #[cfg(unix)]
+    pub fn loop_stats(&self) -> Vec<Arc<crate::net::LoopStats>> {
+        self.loop_stats.lock().unwrap().clone()
+    }
+
+    /// Accept loop. On the event-loop path (default), accepted
+    /// connections are handed round-robin to the loop threads; on the
+    /// blocking path they are dispatched to the fixed handler pool
+    /// through a bounded queue. Returns only after the ingest is fully
+    /// drained (loops joined / handler threads joined).
     pub fn serve_forever(&self) -> Result<()> {
+        #[cfg(unix)]
+        if self.cfg.event_loop {
+            let n = if self.cfg.loops == 0 {
+                crate::net::EventLoops::default_loops()
+            } else {
+                self.cfg.loops
+            };
+            let handle = self.handle.clone();
+            let index = self.index.clone();
+            let stats = self.stats.clone();
+            let max_pipeline = self.cfg.max_pipeline;
+            match crate::net::EventLoops::start(n, self.stop.clone(), |_id, _done| {
+                ServeLoopHandler::new(handle.clone(), index.clone(), stats.clone(), max_pipeline)
+            }) {
+                Ok(loops) => return self.serve_event_loops(loops),
+                Err(e) => {
+                    eprintln!("event loop unavailable ({e}); falling back to blocking pool");
+                }
+            }
+        }
+        self.serve_blocking()
+    }
+
+    /// Event-loop ingest: accept, count, inject. The loops own
+    /// everything after the hand-off.
+    #[cfg(unix)]
+    fn serve_event_loops(&self, loops: crate::net::EventLoops) -> Result<()> {
+        *self.loop_stats.lock().unwrap() = loops.loop_stats();
+        let accept_result = (|| -> Result<()> {
+            for stream in self.listener.incoming() {
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = stream?;
+                self.stats.accepted.fetch_add(1, Ordering::SeqCst);
+                loops.inject(stream);
+            }
+            Ok(())
+        })();
+        // Drain: goodbye + flush on every connection, then join loops.
+        loops.shutdown();
+        accept_result
+    }
+
+    /// Blocking-pool ingest (`--event-loop off`, or no epoll/kqueue).
+    fn serve_blocking(&self) -> Result<()> {
         let conn_q: Arc<BoundedQueue<TcpStream>> = BoundedQueue::new(self.cfg.accept_backlog);
         let pool = {
             let conn_q = conn_q.clone();
@@ -232,6 +320,44 @@ pub(crate) enum ConnMode {
     Legacy,
     /// JSON-lines envelopes (`crate::protocol`).
     Ama1,
+}
+
+/// Sniff a connection's protocol from its first line: a `{` opener (after
+/// ASCII whitespace) selects AMA/1 for the whole connection; anything
+/// else is the legacy bare-line protocol.
+pub(crate) fn sniff_mode(first_line: &[u8]) -> ConnMode {
+    let first_visible = first_line.iter().copied().find(|b| !b.is_ascii_whitespace());
+    if first_visible == Some(b'{') {
+        ConnMode::Ama1
+    } else {
+        ConnMode::Legacy
+    }
+}
+
+/// The typed `BAD_REQUEST` frame for an oversized line, shared verbatim
+/// by both ingest paths.
+pub(crate) fn oversized_reply() -> String {
+    crate::protocol::Reply::Error {
+        id: 0,
+        error: crate::analysis::ServeError::new(
+            crate::analysis::ErrorCode::BadRequest,
+            format!("frame exceeds {} bytes", crate::protocol::MAX_FRAME_BYTES),
+        ),
+    }
+    .to_json()
+}
+
+/// The typed `SHUTDOWN` goodbye frame (id 0, connection-scoped), shared
+/// verbatim by both ingest paths.
+pub(crate) fn goodbye_frame() -> String {
+    crate::protocol::Reply::Error {
+        id: 0,
+        error: crate::analysis::ServeError::new(
+            crate::analysis::ErrorCode::Shutdown,
+            "server stopping; reconnect and retry",
+        ),
+    }
+    .to_json()
 }
 
 /// Outcome of one framing read on a polled connection.
@@ -304,17 +430,173 @@ pub(crate) fn shutdown_goodbye(writer: &mut TcpStream, mode: ConnMode) {
     if mode != ConnMode::Ama1 {
         return;
     }
-    let mut frame = crate::protocol::Reply::Error {
-        id: 0,
-        error: crate::analysis::ServeError::new(
-            crate::analysis::ErrorCode::Shutdown,
-            "server stopping; reconnect and retry",
-        ),
-    }
-    .to_json();
+    let mut frame = goodbye_frame();
     frame.push('\n');
     let _ = writer.write_all(frame.as_bytes());
 }
+
+// ---------------------------------------------------------------------------
+// Event-loop ingest (PR 9)
+// ---------------------------------------------------------------------------
+
+/// Per-loop protocol handler for [`crate::net::EventLoops`]: the same
+/// sniff / fold / serve semantics as [`handle_conn`], expressed as
+/// callbacks over batches of complete lines. One instance per loop
+/// thread; the batch scratch buffers are reused across every connection
+/// the loop owns.
+#[cfg(unix)]
+struct ServeLoopHandler {
+    handle: Handle,
+    index: Arc<crate::index::IndexService>,
+    stats: Arc<ConnStats>,
+    max_pipeline: usize,
+    // Reused batch state (one connection is processed at a time).
+    batch_text: String,
+    spans: Vec<(usize, usize)>,
+    packed: Vec<PackedWord>,
+    reply: String,
+}
+
+#[cfg(unix)]
+impl ServeLoopHandler {
+    fn new(
+        handle: Handle,
+        index: Arc<crate::index::IndexService>,
+        stats: Arc<ConnStats>,
+        max_pipeline: usize,
+    ) -> Self {
+        ServeLoopHandler {
+            handle,
+            index,
+            stats,
+            max_pipeline,
+            batch_text: String::new(),
+            spans: Vec::new(),
+            packed: Vec::new(),
+            reply: String::new(),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl crate::net::ConnHandler for ServeLoopHandler {
+    type ConnState = ConnMode;
+
+    fn on_accept(&mut self, _token: u64) -> ConnMode {
+        self.stats.active.fetch_add(1, Ordering::SeqCst);
+        ConnMode::Unknown
+    }
+
+    fn on_lines(
+        &mut self,
+        mode: &mut ConnMode,
+        batch: &crate::net::LineBatch<'_>,
+        eof: bool,
+        out: &mut crate::net::WriteBuf,
+    ) -> crate::net::Flow {
+        use crate::net::Flow;
+        let mut i = 0;
+        while i < batch.ranges.len() {
+            let (s, e) = batch.ranges[i];
+            let line = &batch.buf[s..e];
+            if *mode == ConnMode::Unknown {
+                *mode = sniff_mode(line);
+            }
+            if *mode == ConnMode::Ama1 {
+                let text = String::from_utf8_lossy(line);
+                let text = text.trim();
+                if text.is_empty() {
+                    return Flow::Close; // empty line closes, like legacy
+                }
+                let mut reply =
+                    crate::protocol::serve_envelope_indexed(text, &self.handle, Some(&self.index));
+                reply.push('\n');
+                out.push(reply.as_bytes());
+                i += 1;
+                continue;
+            }
+            // Legacy: fold the buffered lines of this read cycle into one
+            // stem_bulk call (connection-level batching, identical to the
+            // blocking path's reader.buffer() fold).
+            self.batch_text.clear();
+            self.spans.clear();
+            self.packed.clear();
+            let mut closing = false;
+            while i < batch.ranges.len() && self.spans.len() < self.max_pipeline && !closing {
+                let (s, e) = batch.ranges[i];
+                closing = push_line(
+                    &mut self.batch_text,
+                    &mut self.spans,
+                    &mut self.packed,
+                    &batch.buf[s..e],
+                );
+                i += 1;
+            }
+            if !self.spans.is_empty() {
+                let results = match self.handle.stem_bulk_packed(&self.packed) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("connection error: {e:#}");
+                        return Flow::Close;
+                    }
+                };
+                self.reply.clear();
+                for (&(s, e), r) in self.spans.iter().zip(&results) {
+                    use std::fmt::Write as _;
+                    let _ = writeln!(
+                        self.reply,
+                        "{}\t{}\t{}\t{}",
+                        &self.batch_text[s..e],
+                        r.root_word().to_string_ar(),
+                        r.kind as u8,
+                        r.cut
+                    );
+                }
+                out.push(self.reply.as_bytes());
+            }
+            if closing {
+                return Flow::Close;
+            }
+        }
+        if eof {
+            Flow::Close
+        } else {
+            Flow::Continue
+        }
+    }
+
+    fn on_oversized(
+        &mut self,
+        mode: &mut ConnMode,
+        first_byte: Option<u8>,
+        out: &mut crate::net::WriteBuf,
+    ) {
+        // Never a valid frame in either protocol. Answer typed when the
+        // peer speaks (or might speak) AMA/1, then hang up.
+        if *mode == ConnMode::Ama1 || (*mode == ConnMode::Unknown && first_byte == Some(b'{')) {
+            let mut reply = oversized_reply();
+            reply.push('\n');
+            out.push(reply.as_bytes());
+        }
+    }
+
+    fn on_stop(&mut self, mode: &mut ConnMode, out: &mut crate::net::WriteBuf) {
+        if *mode == ConnMode::Ama1 {
+            let mut frame = goodbye_frame();
+            frame.push('\n');
+            out.push(frame.as_bytes());
+        }
+    }
+
+    fn on_close(&mut self, _mode: &mut ConnMode) {
+        self.stats.active.fetch_sub(1, Ordering::SeqCst);
+        self.stats.completed.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocking ingest (pinned fallback)
+// ---------------------------------------------------------------------------
 
 /// Serve one connection until EOF, an empty line, or server stop.
 fn handle_conn(
@@ -368,14 +650,7 @@ fn handle_conn(
             if mode == ConnMode::Ama1
                 || (mode == ConnMode::Unknown && buf.first() == Some(&b'{'))
             {
-                let reply = crate::protocol::Reply::Error {
-                    id: 0,
-                    error: crate::analysis::ServeError::new(
-                        crate::analysis::ErrorCode::BadRequest,
-                        format!("frame exceeds {} bytes", crate::protocol::MAX_FRAME_BYTES),
-                    ),
-                }
-                .to_json();
+                let reply = oversized_reply();
                 writer.write_all(reply.as_bytes())?;
                 writer.write_all(b"\n")?;
             }
@@ -384,8 +659,7 @@ fn handle_conn(
         // First-line sniffing: a `{` opener selects AMA/1 for the whole
         // connection; anything else is the legacy bare-line protocol.
         if mode == ConnMode::Unknown {
-            let first_visible = buf.iter().copied().find(|b| !b.is_ascii_whitespace());
-            mode = if first_visible == Some(b'{') { ConnMode::Ama1 } else { ConnMode::Legacy };
+            mode = sniff_mode(&buf);
         }
         if mode == ConnMode::Ama1 {
             let line = String::from_utf8_lossy(&buf);
@@ -711,7 +985,7 @@ mod tests {
     }
 
     /// Connection accounting: active returns to zero on disconnect and
-    /// accepted/completed reconcile; stop drains the handler pool.
+    /// accepted/completed reconcile; stop drains the ingest.
     #[test]
     fn connection_accounting_and_drain() {
         let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
@@ -748,7 +1022,218 @@ mod tests {
         assert_eq!(server.stats.completed(), 3);
 
         server.stop();
-        t.join().unwrap().unwrap(); // serve_forever returns ⇒ handlers joined
+        t.join().unwrap().unwrap(); // serve_forever returns ⇒ ingest drained
+        coord.shutdown();
+    }
+
+    /// PR 9: frames split across arbitrary readiness events reassemble —
+    /// a legacy word and an AMA/1 envelope each dribbled in byte groups.
+    #[cfg(unix)]
+    #[test]
+    fn partial_frames_across_readiness_events() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let server = Server::bind("127.0.0.1:0", coord.handle()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_flag();
+        let t = std::thread::spawn(move || server.serve_forever());
+
+        // Legacy word written one byte at a time with pauses: each write
+        // is its own readiness event on the loop.
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let word = "قال\n".as_bytes();
+        for chunk in word.chunks(1) {
+            conn.write_all(chunk).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("قول"), "{line}");
+        conn.write_all(b"\n").unwrap();
+
+        // AMA/1 envelope dribbled in two chunks: sniffing must wait for
+        // the complete first line.
+        let env = crate::protocol::Envelope::analyze(
+            1,
+            vec!["قال".to_string()],
+            crate::analysis::AnalyzeOptions::default(),
+        )
+        .to_json();
+        let bytes = format!("{env}\n");
+        let bytes = bytes.as_bytes();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let mid = bytes.len() / 2;
+        conn.write_all(&bytes[..mid]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        conn.write_all(&bytes[mid..]).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match crate::protocol::Reply::parse(line.trim()).unwrap() {
+            crate::protocol::Reply::Results { id, results } => {
+                assert_eq!(id, 1);
+                assert_eq!(results.len(), 1);
+                assert_eq!(results[0].root, "قول");
+            }
+            other => panic!("expected results, got {other:?}"),
+        }
+
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr);
+        t.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    /// PR 9: a slow reader accumulates bounded reply bytes and gets its
+    /// reads paused (backpressure), while an interactive connection on
+    /// the same loop keeps getting served. Nothing is lost or reordered
+    /// once the slow reader finally drains.
+    #[cfg(unix)]
+    #[test]
+    fn slow_reader_backpressure_does_not_stall_others() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 2, max_batch: 256, ..Default::default() },
+            sw_factory(),
+        );
+        let server = Arc::new(
+            Server::bind_with(
+                "127.0.0.1:0",
+                coord.handle(),
+                ServerConfig { loops: 1, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let addr = server.local_addr().unwrap();
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+
+        // Slow reader: floods 60k lines (≈1.1 MiB of replies — several
+        // times WRITE_HIGH_WATER) without reading a byte.
+        const N: usize = 60_000;
+        let slow = TcpStream::connect(addr).unwrap();
+        slow.set_nodelay(true).unwrap();
+        let mut slow_w = slow.try_clone().unwrap();
+        let writer = std::thread::spawn(move || {
+            let burst: String = "قال\n".repeat(1000);
+            for _ in 0..(N / 1000) {
+                slow_w.write_all(burst.as_bytes()).unwrap();
+            }
+        });
+
+        // Interactive connection on the same (single) loop: stays snappy
+        // while the slow reader's replies are parked in its WriteBuf.
+        let mut fast = TcpStream::connect(addr).unwrap();
+        fast.set_nodelay(true).unwrap();
+        let mut fast_r = BufReader::new(fast.try_clone().unwrap());
+        for _ in 0..20 {
+            fast.write_all("سيلعبون\n".as_bytes()).unwrap();
+            let mut line = String::new();
+            fast_r.read_line(&mut line).unwrap();
+            assert!(line.contains("لعب"), "{line}");
+        }
+        fast.write_all(b"\n").unwrap();
+
+        // Now drain the slow reader: every reply present, in order.
+        let mut slow_r = BufReader::new(slow.try_clone().unwrap());
+        let mut got = 0usize;
+        let mut line = String::new();
+        while got < N {
+            line.clear();
+            let n = slow_r.read_line(&mut line).unwrap();
+            assert!(n > 0, "connection closed early at reply {got}");
+            assert!(line.starts_with("قال\t"), "reordered or corrupt: {line:?}");
+            got += 1;
+        }
+        writer.join().unwrap();
+        drop(slow);
+
+        // Backpressure engaged at least once on the loop.
+        let pauses: u64 = server
+            .loop_stats()
+            .iter()
+            .map(|s| s.pauses.load(Ordering::Relaxed))
+            .sum();
+        assert!(pauses > 0, "slow reader never tripped the high-water pause");
+
+        server.stop();
+        t.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    /// PR 9 bugfix: stop latency on the event-loop path is wakeup-driven.
+    /// With a 5 s poll interval configured (which bounds the *blocking*
+    /// path), stop + full drain still completes in well under a second.
+    #[cfg(unix)]
+    #[test]
+    fn stop_latency_is_wakeup_driven_not_poll_bounded() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let server = Arc::new(
+            Server::bind_with(
+                "127.0.0.1:0",
+                coord.handle(),
+                ServerConfig { poll: Duration::from_secs(5), ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let addr = server.local_addr().unwrap();
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+
+        // An idle AMA/1 client — the worst case for the old polling stop.
+        let mut client = crate::client::Client::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        client.ping().unwrap();
+
+        let t0 = std::time::Instant::now();
+        server.stop();
+        t.join().unwrap().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "stop took {:?} — poll-bounded, not wakeup-driven",
+            t0.elapsed()
+        );
+        // The idle client still received the typed goodbye.
+        match client.recv() {
+            Ok(crate::protocol::Reply::Error { error, .. }) => {
+                assert_eq!(error.code, crate::analysis::ErrorCode::Shutdown);
+            }
+            other => panic!("expected typed SHUTDOWN frame, got {other:?}"),
+        }
+        coord.shutdown();
+    }
+
+    /// PR 9 fallback: `event_loop: false` pins the blocking handler pool
+    /// and serves both protocols exactly as before.
+    #[test]
+    fn blocking_pool_fallback_still_serves() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), sw_factory());
+        let server = Arc::new(
+            Server::bind_with(
+                "127.0.0.1:0",
+                coord.handle(),
+                ServerConfig { event_loop: false, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let addr = server.local_addr().unwrap();
+        let srv = server.clone();
+        let t = std::thread::spawn(move || srv.serve_forever());
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all("سيلعبون\n".as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("لعب"), "{line}");
+        conn.write_all(b"\n").unwrap();
+
+        let mut client = crate::client::Client::connect(addr).unwrap();
+        client.ping().unwrap();
+
+        server.stop();
+        t.join().unwrap().unwrap();
         coord.shutdown();
     }
 }

@@ -202,6 +202,67 @@ fn pipelined_and_interactive_agree_with_bulk_apis() {
     coord.shutdown();
 }
 
+/// C10K readiness smoke (PR 9): 1024 mostly-idle keepalive connections
+/// against the event-loop ingest. 95% of the fleet parks after a warmup
+/// round-trip while the remainder bursts pipelined load; at the end every
+/// parked connection must still answer — no loss, no reorder, no parked
+/// connection dropped. Connection count degrades gracefully if the
+/// RLIMIT_NOFILE budget cannot cover 1024 sockets.
+#[test]
+fn c10k_mostly_idle_no_loss_no_reorder() {
+    const WANT_CONNS: usize = 1024;
+    let r = roots();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, max_batch: 128, ..Default::default() },
+        sw_factory(r.clone()),
+    );
+    let server = Arc::new(
+        Server::bind_with(
+            "127.0.0.1:0",
+            coord.handle(),
+            // handlers stays small on purpose: the event-loop ingest must
+            // carry the fleet; only a (non-default) blocking fallback
+            // would be gated by it.
+            ServerConfig { handlers: 8, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let addr = server.local_addr().unwrap();
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve_forever());
+
+    let words: Vec<String> =
+        ["يدرس", "قال", "سيلعبون", "فتزحزحت"].iter().map(|s| s.to_string()).collect();
+    let outcome = ama::bench::run_mostly_idle_load(
+        addr,
+        WANT_CONNS,
+        0.95,
+        Duration::from_millis(750),
+        32,
+        &words,
+    );
+    assert_eq!(outcome.errors, 0, "client errors (a parked connection was dropped?)");
+    assert_eq!(outcome.reorders, 0, "reordered replies");
+    assert!(outcome.words > 0, "no traffic flowed");
+    assert!(
+        outcome.conns >= WANT_CONNS / 2,
+        "fd budget collapsed the fleet: only {} conns",
+        outcome.conns
+    );
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.errors, 0, "server-side errors under mostly-idle load");
+    assert!(
+        server.stats.accepted() >= outcome.conns as u64,
+        "accepted {} < fleet size {}",
+        server.stats.accepted(),
+        outcome.conns
+    );
+
+    server.stop();
+    serve_thread.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
 /// The in-crate load generator drives a real server end to end (a
 /// seconds-long smoke of what `ama loadtest` does).
 #[test]

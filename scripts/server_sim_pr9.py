@@ -1,0 +1,577 @@
+"""PR 9 verification sim (no-cargo container): literal python ports of the
+event-loop ingest's pure state machines — the incremental line framer and
+watermarked write buffer (rust/src/net/conn.rs) and the per-connection
+readable/writable lifecycle of the loop core (rust/src/net/loops.rs:
+handle_event/process_lines/maintain, minus the syscalls) — swept far past
+what the rust unit tests cover:
+
+* framer: every stream is replayed under randomized chunk splits (plus an
+  exhaustive 2-chunk split sweep) with compaction at random points; the
+  handed-out lines must equal a dict/split reference exactly — including
+  CRLF preservation, empty lines, the at-cap/over-cap oversized threshold
+  of the blocking reader, the terminated-oversized first-byte sniff, and
+  the non-empty EOF tail counting as a final line;
+* write buffer: randomized push/advance interleavings against a plain
+  byte-string reference, with watermark flags recomputed independently;
+* connection machine: an echo-protocol loop over virtual sockets with
+  bounded acceptance (WouldBlock), randomized event schedules (partial
+  chunks, slow readers, mid-run stop, client EOF), asserting no reply
+  byte is lost or reordered, reads are paused exactly while the pending
+  region sits between the watermarks (slow-reader backpressure), stopped
+  loops deliver the goodbye then drain every connection, and interest
+  flags always match the (eof, closing, paused, pending) state.
+
+Run: python3 scripts/server_sim_pr9.py
+"""
+import random
+import sys
+
+MAX_FRAME_BYTES = 1 << 20  # protocol.rs
+WRITE_HIGH_WATER = 256 * 1024  # conn.rs
+WRITE_LOW_WATER = 32 * 1024
+READ_CHUNK_BYTES = 64 * 1024
+
+
+# --- LineBuffer port (net/conn.rs) ----------------------------------------
+LINE, OVERSIZED, PARTIAL = "line", "oversized", "partial"
+
+
+class LineBuffer:
+    def __init__(self):
+        self.buf = bytearray()
+        self.consumed = 0
+        self.scan = 0
+
+    def extend(self, chunk):
+        self.buf.extend(chunk)
+
+    def next_line(self):
+        off = self.buf.find(b"\n", self.scan)
+        if off >= 0:
+            nl = off
+            start = self.consumed
+            if nl - start > MAX_FRAME_BYTES:
+                # leave `consumed` at the oversized line so
+                # current_first_byte sniffs *its* first byte
+                self.scan = nl
+                return OVERSIZED, None
+            self.consumed = nl + 1
+            self.scan = nl + 1
+            return LINE, (start, nl)
+        self.scan = len(self.buf)
+        if len(self.buf) - self.consumed > MAX_FRAME_BYTES:
+            return OVERSIZED, None
+        return PARTIAL, None
+
+    def bytes_(self):
+        return bytes(self.buf)
+
+    def partial(self):
+        return bytes(self.buf[self.consumed:])
+
+    def current_first_byte(self):
+        if self.consumed < len(self.buf):
+            return self.buf[self.consumed]
+        return None
+
+    def compact(self):
+        if self.consumed == 0:
+            return
+        del self.buf[: self.consumed]
+        self.scan -= self.consumed
+        self.consumed = 0
+
+    def take_eof_tail(self):
+        rng = (self.consumed, len(self.buf))
+        self.consumed = len(self.buf)
+        self.scan = len(self.buf)
+        return rng
+
+
+# --- WriteBuf port (net/conn.rs) ------------------------------------------
+class WriteBuf:
+    def __init__(self):
+        self.buf = bytearray()
+        self.sent = 0
+
+    def push(self, b):
+        self.buf.extend(b)
+
+    def pending(self):
+        return bytes(self.buf[self.sent:])
+
+    def is_empty(self):
+        return self.sent == len(self.buf)
+
+    def len_(self):
+        return len(self.buf) - self.sent
+
+    def advance(self, n):
+        self.sent += n
+        assert self.sent <= len(self.buf)
+        if self.sent == len(self.buf):
+            self.buf.clear()
+            self.sent = 0
+        elif self.sent >= 4096 and self.sent * 2 >= len(self.buf):
+            del self.buf[: self.sent]
+            self.sent = 0
+
+    def over_high_water(self):
+        return self.len_() > WRITE_HIGH_WATER
+
+    def below_low_water(self):
+        return self.len_() < WRITE_LOW_WATER
+
+
+# --- framer reference + sweeps --------------------------------------------
+def reference_frames(stream, eof):
+    """Dict-free reference: what the blocking read_frame loop would hand
+    out for the whole stream — ('line', bytes) until the first oversized
+    line ('oversized', first_byte), plus the non-empty EOF tail."""
+    out = []
+    i = 0
+    while True:
+        j = stream.find(b"\n", i)
+        if j < 0:
+            break
+        content = stream[i:j]
+        if len(content) > MAX_FRAME_BYTES:
+            out.append((OVERSIZED, content[0] if content else None))
+            return out
+        out.append((LINE, content))
+        i = j + 1
+    tail = stream[i:]
+    if len(tail) > MAX_FRAME_BYTES:
+        out.append((OVERSIZED, tail[0] if tail else None))
+    elif eof and tail:
+        out.append((LINE, tail))
+    return out
+
+
+def replay_chunks(chunks, eof, compact_rng=None):
+    """Feed chunks through LineBuffer the way process_lines does:
+    extract-all / (maybe) compact per chunk; EOF tail at the end."""
+    lb = LineBuffer()
+    out = []
+    dead = False
+    for chunk in chunks:
+        lb.extend(chunk)
+        if dead:
+            continue
+        while True:
+            kind, rng = lb.next_line()
+            if kind == LINE:
+                s, e = rng
+                out.append((LINE, lb.bytes_()[s:e]))
+            elif kind == PARTIAL:
+                break
+            else:
+                out.append((OVERSIZED, lb.current_first_byte()))
+                dead = True  # loop closes the connection
+                break
+        if compact_rng is None or compact_rng.random() < 0.5:
+            lb.compact()
+    if eof and not dead:
+        # one more scan (loops.rs: eof delivery), then the tail
+        while True:
+            kind, rng = lb.next_line()
+            if kind == LINE:
+                s, e = rng
+                out.append((LINE, lb.bytes_()[s:e]))
+            elif kind == PARTIAL:
+                break
+            else:
+                out.append((OVERSIZED, lb.current_first_byte()))
+                return out
+        s, e = lb.take_eof_tail()
+        if e > s:
+            out.append((LINE, lb.bytes_()[s:e]))
+    return out
+
+
+def framer_exhaustive_two_chunk():
+    streams = [
+        "قال\nfoo\r\nbar\n".encode(),
+        b"\n\nx\n",
+        b"a" * 37 + b"\ntail",
+        b"no-newline-at-all",
+        b"{json}\nlegacy\n\n",
+    ]
+    cases = 0
+    for stream in streams:
+        for eof in (False, True):
+            want = reference_frames(stream, eof)
+            for cut in range(len(stream) + 1):
+                got = replay_chunks([stream[:cut], stream[cut:]], eof)
+                assert got == want, (
+                    f"2-chunk mismatch cut={cut} eof={eof}: {got} != {want}"
+                )
+                cases += 1
+    print(f"framer exhaustive 2-chunk sweep OK ({cases} cases, 0 mismatches)")
+
+
+def framer_random_sweep(seed, iters=400):
+    rng = random.Random(seed)
+    small_cap = 64  # scaled-down MAX_FRAME_BYTES for oversized coverage
+    global MAX_FRAME_BYTES
+    saved = MAX_FRAME_BYTES
+    MAX_FRAME_BYTES = small_cap
+    try:
+        for it in range(iters):
+            # random stream: words, empties, CRLFs, occasional oversized
+            parts = []
+            for _ in range(rng.randrange(0, 12)):
+                n = rng.choice([0, 1, 3, 8, small_cap - 1, small_cap,
+                                small_cap + 1, small_cap * 2])
+                body = bytes(rng.randrange(ord("a"), ord("z") + 1)
+                             for _ in range(n))
+                if rng.random() < 0.2:
+                    body += b"\r"
+                parts.append(body)
+            stream = b"\n".join(parts)
+            if parts and rng.random() < 0.7:
+                stream += b"\n"
+            eof = rng.random() < 0.7
+            # random chunking, including empty chunks
+            chunks, i = [], 0
+            while i < len(stream):
+                k = min(len(stream) - i, rng.randrange(0, 19))
+                chunks.append(stream[i:i + k])
+                i += k
+            want = reference_frames(stream, eof)
+            got = replay_chunks(chunks, eof, compact_rng=rng)
+            assert got == want, (
+                f"random framer mismatch seed={seed} iter={it}: "
+                f"{got} != {want}"
+            )
+    finally:
+        MAX_FRAME_BYTES = saved
+    print(f"framer randomized sweep seed={seed}: {iters} streams, 0 mismatches")
+
+
+def writebuf_random_sweep(seed, iters=300):
+    rng = random.Random(seed)
+    for it in range(iters):
+        wb = WriteBuf()
+        ref = b""  # reference: the not-yet-accepted suffix
+        for _ in range(rng.randrange(1, 60)):
+            if rng.random() < 0.5:
+                b = bytes([rng.randrange(256)]) * rng.choice(
+                    [1, 7, 100, 5000, WRITE_LOW_WATER, WRITE_HIGH_WATER // 2]
+                )
+                wb.push(b)
+                ref += b
+            elif ref:
+                n = rng.randrange(1, len(ref) + 1)
+                wb.advance(n)
+                ref = ref[n:]
+            assert wb.pending() == ref, f"pending diverged at iter {it}"
+            assert wb.len_() == len(ref)
+            assert wb.is_empty() == (len(ref) == 0)
+            assert wb.over_high_water() == (len(ref) > WRITE_HIGH_WATER)
+            assert wb.below_low_water() == (len(ref) < WRITE_LOW_WATER)
+    print(f"writebuf randomized sweep seed={seed}: {iters} runs, 0 mismatches")
+
+
+# --- connection machine (loops.rs maintain/handle_event, virtualized) -----
+class VConn:
+    """One virtual connection: inbound chunks queue up (readable
+    readiness), outbound bytes are accepted only up to the socket's
+    current capacity (WouldBlock past it)."""
+
+    def __init__(self, token):
+        self.token = token
+        self.inbound = []  # chunks the client has written, undelivered
+        self.client_eof = False
+        self.accepted = b""  # bytes the client has received
+        self.capacity = 0  # socket send-buffer room this step
+        self.rd = LineBuffer()
+        self.wr = WriteBuf()
+        self.eof = False
+        self.closing = False
+        self.paused = False
+        self.closed = False
+        self.interest = (True, False)  # (readable, writable)
+        self.got_goodbye = False
+
+
+class EchoLoopModel:
+    """The loop core's per-connection lifecycle, with the Upper-style echo
+    handler inlined: uppercase each line, TOO-BIG on oversized (then
+    close), BYE on stop, EOF => close after flush."""
+
+    def __init__(self):
+        self.conns = {}
+        self.stopped = False
+        self.pauses = 0
+
+    def accept(self, token):
+        conn = VConn(token)
+        if self.stopped:
+            self._on_stop(conn)
+            conn.closing = True
+        self.conns[token] = conn
+        self.maintain(conn)
+        return conn
+
+    def _on_stop(self, conn):
+        conn.wr.push(b"BYE\n")
+        conn.got_goodbye = True
+
+    def stop(self):
+        self.stopped = True
+        for conn in list(self.conns.values()):
+            if not conn.closing:
+                self._on_stop(conn)
+                conn.closing = True
+            self.maintain(conn)
+
+    def handle_readable(self, conn):
+        if conn.closed or conn.eof or conn.closing or conn.paused:
+            return
+        if not conn.inbound and not conn.client_eof:
+            return
+        # one read(2) of up to READ_CHUNK_BYTES
+        if conn.inbound:
+            chunk = conn.inbound.pop(0)
+            take, rest = chunk[:READ_CHUNK_BYTES], chunk[READ_CHUNK_BYTES:]
+            if rest:
+                conn.inbound.insert(0, rest)
+            conn.rd.extend(take)
+        else:
+            conn.eof = True
+        self.process_lines(conn)
+        self.maintain(conn)
+
+    def process_lines(self, conn):
+        ranges, oversized = [], False
+        while True:
+            kind, rng = conn.rd.next_line()
+            if kind == LINE:
+                ranges.append(rng)
+            elif kind == PARTIAL:
+                break
+            else:
+                oversized = True
+                break
+        if conn.eof and not oversized:
+            s, e = conn.rd.take_eof_tail()
+            if e > s:
+                ranges.append((s, e))
+        deliver_eof = conn.eof and not oversized
+        if ranges or deliver_eof:
+            buf = conn.rd.bytes_()
+            for s, e in ranges:
+                conn.wr.push(buf[s:e].upper() + b"\n")
+            if deliver_eof:
+                conn.closing = True  # handler returned Close
+        if oversized:
+            conn.wr.push(b"TOO-BIG\n")
+            conn.closing = True
+        conn.rd.compact()
+
+    def maintain(self, conn):
+        if conn.closed:
+            return
+        # flush as much as the socket accepts
+        while not conn.wr.is_empty() and conn.capacity > 0:
+            pending = conn.wr.pending()
+            n = min(len(pending), conn.capacity)
+            conn.accepted += pending[:n]
+            conn.capacity -= n
+            conn.wr.advance(n)
+        if not conn.paused and conn.wr.over_high_water():
+            conn.paused = True
+            self.pauses += 1
+        elif conn.paused and conn.wr.below_low_water():
+            conn.paused = False
+        if conn.closing and conn.wr.is_empty():
+            conn.closed = True
+            del self.conns[conn.token]
+            return
+        conn.interest = (
+            not conn.eof and not conn.closing and not conn.paused,
+            not conn.wr.is_empty(),
+        )
+
+    def force_close_all(self):
+        for conn in list(self.conns.values()):
+            conn.closed = True
+            del self.conns[conn.token]
+
+
+def expected_echo_output(stream, eof, goodbye_after):
+    """Reference reply stream for one connection: uppercased lines (and
+    EOF tail), TOO-BIG after the first oversized line, BYE spliced in
+    after `goodbye_after` framed lines (None = never stopped)."""
+    out = b""
+    frames = reference_frames(stream, eof)
+    for i, (kind, val) in enumerate(frames):
+        if goodbye_after is not None and i == goodbye_after:
+            out += b"BYE\n"
+            return out  # closing: later input is never read
+        if kind == LINE:
+            out += val.upper() + b"\n"
+        else:
+            out += b"TOO-BIG\n"
+            return out
+    if goodbye_after is not None:
+        out += b"BYE\n"
+    return out
+
+
+def machine_echo_sweep(seed, iters=200):
+    """Randomized schedules over multiple connections: every reply byte a
+    client receives must be a prefix of (and, once drained, equal to) the
+    reference stream — no loss, no reorder, no cross-connection bleed."""
+    rng = random.Random(seed)
+    for it in range(iters):
+        model = EchoLoopModel()
+        n_conns = rng.randrange(1, 5)
+        conns, scripts, fed = [], [], []
+        for t in range(n_conns):
+            lines = [
+                bytes(rng.randrange(ord("a"), ord("z") + 1)
+                      for _ in range(rng.randrange(0, 30)))
+                for _ in range(rng.randrange(0, 10))
+            ]
+            stream = b"".join(ln + b"\n" for ln in lines)
+            if rng.random() < 0.3:
+                stream += b"tail-" + bytes([ord("a") + t])
+            conns.append(model.accept(t))
+            scripts.append(stream)
+            fed.append(0)
+        eofs = [rng.random() < 0.8 for _ in range(n_conns)]
+        for step in range(rng.randrange(5, 60)):
+            t = rng.randrange(n_conns)
+            conn = conns[t]
+            op = rng.random()
+            if op < 0.45 and fed[t] < len(scripts[t]):
+                k = rng.randrange(1, 9)
+                conn.inbound.append(scripts[t][fed[t]:fed[t] + k])
+                fed[t] += k
+                model.handle_readable(conn)
+            elif op < 0.65:
+                conn.capacity += rng.randrange(0, 40)
+                model.maintain(conn)  # writable readiness
+            elif op < 0.75 and fed[t] == len(scripts[t]) and eofs[t]:
+                if not conn.client_eof:
+                    conn.client_eof = True
+                    model.handle_readable(conn)
+            else:
+                model.handle_readable(conn)
+        # drive everything to quiescence: feed the rest, signal EOF,
+        # grant unlimited socket room
+        for t, conn in enumerate(conns):
+            if fed[t] < len(scripts[t]):
+                conn.inbound.append(scripts[t][fed[t]:])
+                fed[t] = len(scripts[t])
+            model.handle_readable(conn)
+            if eofs[t] and not conn.client_eof:
+                conn.client_eof = True
+                model.handle_readable(conn)
+            conn.capacity = 1 << 30
+            model.maintain(conn)
+            # a second readable pass picks up the EOF after any pause
+            model.handle_readable(conn)
+            model.maintain(conn)
+        for t, conn in enumerate(conns):
+            want = expected_echo_output(scripts[t], eofs[t], None)
+            assert conn.accepted == want, (
+                f"seed={seed} iter={it} conn={t}: echo diverged\n"
+                f"  got  {conn.accepted!r}\n  want {want!r}"
+            )
+            if eofs[t]:
+                assert conn.closed, f"conn {t} never closed after EOF"
+            else:
+                assert not conn.closed and conn.interest[0], (
+                    f"conn {t} should stay open and readable"
+                )
+    print(f"machine echo sweep seed={seed}: {iters} schedules, 0 mismatches")
+
+
+def machine_backpressure():
+    """Slow reader: a burst bigger than the high watermark pauses reads
+    (and only reads); draining past the low watermark resumes them."""
+    model = EchoLoopModel()
+    conn = model.accept(0)
+    line = b"x" * 1000
+    n_lines = (WRITE_HIGH_WATER // (len(line) + 1)) + 10
+    conn.inbound.append((line + b"\n") * n_lines)
+    # socket accepts nothing: every reply queues
+    while conn.inbound:
+        model.handle_readable(conn)
+    assert conn.wr.len_() > WRITE_HIGH_WATER
+    assert conn.paused and model.pauses == 1, "high watermark did not pause"
+    assert conn.interest == (False, True), "paused conn must be write-only"
+    # more input queued while paused is NOT read
+    conn.inbound.append(b"late\n")
+    model.handle_readable(conn)
+    assert conn.wr.len_() > WRITE_HIGH_WATER, "read while paused"
+    # drain to just above the low watermark: still paused
+    total = conn.wr.len_()
+    conn.capacity = total - WRITE_LOW_WATER
+    model.maintain(conn)
+    assert conn.paused, "resumed above the low watermark"
+    # cross the low watermark: resumed, and the late line now flows
+    conn.capacity = WRITE_LOW_WATER
+    model.maintain(conn)
+    assert not conn.paused, "low watermark did not resume"
+    model.handle_readable(conn)
+    conn.capacity = 1 << 30
+    model.maintain(conn)
+    assert conn.accepted == (line.upper() + b"\n") * n_lines + b"LATE\n"
+    assert model.pauses == 1
+    print(
+        f"backpressure OK: {n_lines} replies queued, paused at "
+        f">{WRITE_HIGH_WATER}B, resumed at <{WRITE_LOW_WATER}B, no byte lost"
+    )
+
+
+def machine_stop_drain(seed, iters=150):
+    """stop(): every live connection gets exactly one BYE, flushes, and
+    closes; connections injected after the stop get the goodbye too."""
+    rng = random.Random(seed)
+    for it in range(iters):
+        model = EchoLoopModel()
+        n = rng.randrange(1, 5)
+        conns = [model.accept(t) for t in range(n)]
+        sent_lines = [rng.randrange(0, 4) for _ in range(n)]
+        for t, conn in enumerate(conns):
+            conn.capacity = 1 << 30
+            for i in range(sent_lines[t]):
+                conn.inbound.append(b"w%d\n" % i)
+                model.handle_readable(conn)
+        model.stop()
+        late = model.accept(n)  # accepted mid-drain
+        late.capacity = 1 << 30
+        model.maintain(late)
+        for t, conn in enumerate(conns):
+            want = b"".join(b"W%d\n" % i for i in range(sent_lines[t])) + b"BYE\n"
+            assert conn.accepted == want, (
+                f"seed={seed} iter={it} conn={t}: drain diverged: "
+                f"{conn.accepted!r} != {want!r}"
+            )
+            assert conn.closed and conn.got_goodbye
+        assert late.accepted == b"BYE\n" and late.closed
+        assert not model.conns, "connections survived the drain"
+    print(f"stop/drain sweep seed={seed}: {iters} schedules, all drained with one BYE")
+
+
+def main():
+    framer_exhaustive_two_chunk()
+    for seed in (1, 7, 42, 1234):
+        framer_random_sweep(seed)
+    for seed in (2, 99):
+        writebuf_random_sweep(seed)
+    for seed in (3, 17, 2026):
+        machine_echo_sweep(seed)
+    machine_backpressure()
+    for seed in (5, 55):
+        machine_stop_drain(seed)
+    print("server_sim_pr9: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

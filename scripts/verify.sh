@@ -86,6 +86,51 @@ echo "== loadtest smoke (2 modes × 2s, 8 conns) =="
 grep -q '"schema": "ama-loadtest-v1"' /tmp/ama_loadtest_smoke.json
 echo "loadtest smoke OK"
 
+echo "== event-loop C10K smoke (1024 mostly-idle conns, 2s, p99 flat vs 32) =="
+# The loadtest binary itself enforces the acceptance: zero loss, zero
+# reorders, no parked keepalive connection dropped, and the 1024-conn
+# p99 within 4x (two log2 buckets) of the 32-conn baseline.
+./target/release/ama loadtest --conns 1024 --idle-frac 0.95 --secs 2 \
+  --depth 32 --words 1000 --out /tmp/ama_loadtest_c10k_smoke.json
+grep -q '"idle_frac": 0.95' /tmp/ama_loadtest_c10k_smoke.json
+grep -q '"name": "mostly-idle-32"' /tmp/ama_loadtest_c10k_smoke.json
+grep -q 'p99_flat_ratio_vs_32' /tmp/ama_loadtest_c10k_smoke.json
+echo "event-loop C10K smoke OK"
+
+echo "== /metrics scrape smoke (Prometheus text endpoint, curl-free) =="
+if command -v python3 >/dev/null 2>&1; then
+  ./target/release/ama serve --port 0 --metrics-port 0 \
+    > /tmp/ama_metrics_smoke.log 2>&1 &
+  SRV_PID=$!
+  for _ in $(seq 1 50); do
+    grep -q 'metrics endpoint on' /tmp/ama_metrics_smoke.log && break
+    sleep 0.1
+  done
+  MADDR=$(sed -n 's|.*metrics endpoint on http://\([^/]*\)/metrics.*|\1|p' \
+    /tmp/ama_metrics_smoke.log)
+  python3 - "$MADDR" <<'EOF'
+import sys, urllib.request
+body = urllib.request.urlopen(
+    "http://" + sys.argv[1] + "/metrics", timeout=5).read().decode()
+for series in ("ama_requests_total", "ama_cache_hit_rate",
+               "ama_request_latency_seconds_bucket",
+               "ama_connections_accepted_total"):
+    assert series in body, f"missing {series} in scrape:\n{body[:400]}"
+print("metrics scrape OK:", len(body.splitlines()), "lines")
+EOF
+  kill $SRV_PID 2>/dev/null || true
+  wait $SRV_PID 2>/dev/null || true
+else
+  echo "python3 not installed; skipping /metrics scrape smoke"
+fi
+
+echo "== event-loop oracle (python port of framer/writebuf/conn machine) =="
+if command -v python3 >/dev/null 2>&1; then
+  python3 scripts/server_sim_pr9.py
+else
+  echo "python3 not installed; skipping event-loop oracle"
+fi
+
 echo "== AMA/1 loadtest smoke (2s, 8 conns, all four algorithms) =="
 ./target/release/ama loadtest --conns 8 --secs 2 --depth 32 --mode pipelined \
   --proto ama1 --words 1000 --out /tmp/ama_loadtest_ama1_smoke.json
