@@ -28,8 +28,14 @@
 #                     keepalive conns through the event-loop ingest vs a
 #                     32-conn baseline (p99 must stay within 4x, zero
 #                     loss/reorder); writes BENCH_PR9.json
+#   make chk        — model-check the lock-free core (PR 10): exhaustive
+#                     small-bound interleavings of slab/seqlock/queue/
+#                     breaker/coalescer under the chk feature
+#   make lint-atomics — atomic-ordering lint (PR 10): facade discipline +
+#                     `// ord:` justification on every Ordering site
+#                     (pure python, no toolchain needed)
 
-.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check gateway-loadtest index-bench loadtest-c10k
+.PHONY: data artifacts verify test loadtest bench-packed bench-simd protocol-check gateway-loadtest index-bench loadtest-c10k chk lint-atomics
 
 data:
 	cd python && python3 -m compile.gen_roots ../data
@@ -85,6 +91,13 @@ loadtest-c10k:
 		--depth 64 --out BENCH_PR9.json
 	grep -q '"schema": "ama-loadtest-v1"' BENCH_PR9.json
 	grep -q 'p99_flat_ratio_vs_32' BENCH_PR9.json
+
+chk:
+	cargo test --features chk --test chk_models
+
+lint-atomics:
+	python3 scripts/lint_atomics.py
+	python3 scripts/lint_atomics.py --self-test
 
 index-bench:
 	cargo build --release

@@ -9,7 +9,7 @@ use crate::analysis::AnalyzeOptions;
 use crate::metrics::LatencyHistogram;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::chk::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -259,9 +259,10 @@ pub fn run_tcp_load(
                             }
                             let echoed = line.split('\t').next().unwrap_or("");
                             if echoed != words[wi] {
+                                // ord: Relaxed — stats
                                 total_reorders.fetch_add(1, Ordering::Relaxed);
                             }
-                            total_words.fetch_add(1, Ordering::Relaxed);
+                            total_words.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                         }
                         hist.record(t0.elapsed());
                     }
@@ -270,7 +271,7 @@ pub fn run_tcp_load(
                 };
                 if let Err(e) = run() {
                     eprintln!("loadtest client {id}: {e}");
-                    total_errors.fetch_add(1, Ordering::Relaxed);
+                    total_errors.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 }
             })
         })
@@ -282,9 +283,9 @@ pub fn run_tcp_load(
     LoadOutcome {
         conns,
         depth,
-        words: total_words.load(Ordering::Relaxed),
-        errors: total_errors.load(Ordering::Relaxed),
-        reorders: total_reorders.load(Ordering::Relaxed),
+        words: total_words.load(Ordering::Relaxed), // ord: Relaxed — stats
+        errors: total_errors.load(Ordering::Relaxed), // ord: Relaxed — stats
+        reorders: total_reorders.load(Ordering::Relaxed), // ord: Relaxed — stats
         typed_shed: 0, // the line protocol has no typed shed frames
         elapsed,
         rtt_p50_us: hist.percentile_us(0.50),
@@ -382,7 +383,7 @@ fn run_ama1_load_inner(
                                             | crate::analysis::ErrorCode::RateLimited
                                     ) =>
                             {
-                                total_shed.fetch_add(1, Ordering::Relaxed);
+                                total_shed.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                                 continue;
                             }
                             Err(e) => return Err(e),
@@ -390,19 +391,21 @@ fn run_ama1_load_inner(
                         hist.record(t0.elapsed());
                         for (sent, got) in batch.iter().zip(&results) {
                             if got.word != *sent {
+                                // ord: Relaxed — stats
                                 total_reorders.fetch_add(1, Ordering::Relaxed);
                             }
                         }
                         if results.len() != batch.len() {
-                            total_errors.fetch_add(1, Ordering::Relaxed);
+                            total_errors.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                         }
+                        // ord: Relaxed — stats
                         total_words.fetch_add(results.len() as u64, Ordering::Relaxed);
                     }
                     Ok(())
                 };
                 if let Err(e) = run() {
                     eprintln!("ama1 loadtest client {id}: {e}");
-                    total_errors.fetch_add(1, Ordering::Relaxed);
+                    total_errors.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 }
             })
         })
@@ -414,10 +417,10 @@ fn run_ama1_load_inner(
     LoadOutcome {
         conns,
         depth,
-        words: total_words.load(Ordering::Relaxed),
-        errors: total_errors.load(Ordering::Relaxed),
-        reorders: total_reorders.load(Ordering::Relaxed),
-        typed_shed: total_shed.load(Ordering::Relaxed),
+        words: total_words.load(Ordering::Relaxed), // ord: Relaxed — stats
+        errors: total_errors.load(Ordering::Relaxed), // ord: Relaxed — stats
+        reorders: total_reorders.load(Ordering::Relaxed), // ord: Relaxed — stats
+        typed_shed: total_shed.load(Ordering::Relaxed), // ord: Relaxed — stats
         elapsed,
         rtt_p50_us: hist.percentile_us(0.50),
         rtt_p90_us: hist.percentile_us(0.90),

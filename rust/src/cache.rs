@@ -41,8 +41,11 @@
 use crate::analysis::{Algorithm, Analysis, EngineOpts};
 use crate::chars::PackedWord;
 use crate::stemmer::{MatchKind, StemResult};
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::Arc;
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`. The seqlock
+// orderings below are model-checked by `seqlock_*` in tests/chk_models.rs.
+use crate::chk::sync::atomic::{fence, AtomicU32, AtomicU64, Ordering};
+use crate::chk::sync::Arc;
 
 /// Default slot count for `--cache-slots` (per process, shared by all
 /// coordinator workers): 32 Ki slots ≈ 1 MiB — larger than the distinct
@@ -159,15 +162,25 @@ impl StemCache {
     pub fn lookup(&self, w: PackedWord, opts: EngineOpts) -> Option<Analysis> {
         let (k0, k1) = key_words(w, opts);
         let slot = self.slot_for(k0, k1);
-        let v_before = slot.ver.load(Ordering::SeqCst);
+        // ord: Acquire — seqlock read entry: synchronizes with the
+        // writer's even Release store, so a stable version implies the
+        // matching key/value stores are visible below.
+        let v_before = slot.ver.load(Ordering::Acquire);
         if v_before == 0 || v_before & 1 == 1 {
             return None;
         }
-        let sk0 = slot.k0.load(Ordering::SeqCst);
-        let sk1 = slot.k1.load(Ordering::SeqCst);
-        let sv0 = slot.v0.load(Ordering::SeqCst);
-        let sv1 = slot.v1.load(Ordering::SeqCst);
-        if slot.ver.load(Ordering::SeqCst) != v_before {
+        // ord: Relaxed ×4 — the version re-check below, not these loads,
+        // certifies consistency; any torn/stale mix is discarded there.
+        let sk0 = slot.k0.load(Ordering::Relaxed);
+        let sk1 = slot.k1.load(Ordering::Relaxed); // ord: Relaxed — see above
+        let sv0 = slot.v0.load(Ordering::Relaxed); // ord: Relaxed — see above
+        let sv1 = slot.v1.load(Ordering::Relaxed); // ord: Relaxed — see above
+        // ord: Acquire fence — pairs with the writer's Release fence: if
+        // any load above observed a write from an in-flight writer, the
+        // re-check below is forced to see that writer's odd version.
+        fence(Ordering::Acquire);
+        // ord: Relaxed — ordered after the data loads by the fence above.
+        if slot.ver.load(Ordering::Relaxed) != v_before {
             return None; // raced a writer: treat as a miss
         }
         if (sk0, sk1) != (k0, k1) {
@@ -185,29 +198,43 @@ impl StemCache {
         }
         let (k0, k1) = key_words(w, opts);
         let slot = self.slot_for(k0, k1);
-        let v = slot.ver.load(Ordering::SeqCst);
+        // ord: Relaxed — optimistic probe; the CAS below re-validates.
+        let v = slot.ver.load(Ordering::Relaxed);
         if v & 1 == 1 {
             return; // another writer mid-flight
         }
+        // ord: Acquire (success) — claims the slot and synchronizes with
+        // the previous writer's even Release store, so our overwrites
+        // are ordered after its data stores; Relaxed failure (we drop
+        // the insert). Lost-update safety is model-checked in
+        // `seqlock_cas_loser_drops_insert`.
         if slot
             .ver
-            .compare_exchange(v, v | 1, Ordering::SeqCst, Ordering::SeqCst)
+            .compare_exchange(v, v | 1, Ordering::Acquire, Ordering::Relaxed)
             .is_err()
         {
             return;
         }
+        // ord: Release fence — pairs with the reader's Acquire fence: a
+        // reader that observes any relaxed data store below must also
+        // observe the odd version claimed above on its re-check.
+        fence(Ordering::Release);
         let (v0, v1) = encode_value(a);
-        slot.k0.store(k0, Ordering::SeqCst);
-        slot.k1.store(k1, Ordering::SeqCst);
-        slot.v0.store(v0, Ordering::SeqCst);
-        slot.v1.store(v1, Ordering::SeqCst);
+        // ord: Relaxed ×4 — ordered after the odd claim by the fence
+        // above and published by the even Release store below.
+        slot.k0.store(k0, Ordering::Relaxed);
+        slot.k1.store(k1, Ordering::Relaxed); // ord: Relaxed — see above
+        slot.v0.store(v0, Ordering::Relaxed); // ord: Relaxed — see above
+        slot.v1.store(v1, Ordering::Relaxed); // ord: Relaxed — see above
         // Next stable (even, nonzero) version. Skipping 0 on wraparound
         // keeps "never written" unambiguous.
         let mut next = (v | 1).wrapping_add(1);
         if next == 0 {
             next = 2;
         }
-        slot.ver.store(next, Ordering::SeqCst);
+        // ord: Release — publishes the data stores to readers entering
+        // through an Acquire load of this even version.
+        slot.ver.store(next, Ordering::Release);
     }
 }
 

@@ -1,0 +1,110 @@
+//! # chk — vendored loom-style concurrency model checker (PR 10)
+//!
+//! The lock-free core of this crate (`exec::ReplySlab`, the seqlock
+//! `cache::StemCache`, `exec::BoundedQueue` close races, the gateway
+//! breaker/coalescer drop-guards, the PR 9 event-loop stop/drain) is
+//! hand-rolled on raw atomics. This module gives it an in-repo,
+//! dependency-free checker in the spirit of `loom`, following the repo
+//! tradition of vendored offline shims (see `vendor/anyhow`):
+//!
+//! * **Facade** — [`sync`], [`thread`], [`time`], [`hint`] mirror the
+//!   `std` paths the concurrent modules use. Without the `chk` cargo
+//!   feature every item is a `pub use std::...` re-export: zero cost,
+//!   identical codegen, nothing to audit in release builds.
+//! * **Instrumented build** — with `--features chk` the same paths
+//!   resolve to shadow types that route every atomic load/store/RMW,
+//!   mutex, condvar and park/unpark through a deterministic cooperative
+//!   scheduler ([`sched`]) and a weak-memory shadow model ([`shadow`]).
+//!   Outside an active [`model`] closure the instrumented types fall
+//!   back to their real `std` op, so ordinary tests still pass under
+//!   `--features chk`.
+//!
+//! ## What the checker explores
+//!
+//! [`model`] runs a closure repeatedly, enumerating thread interleavings
+//! by depth-first search over every scheduling decision (bounded by a
+//! preemption budget, Coyote/CHESS-style) and, per *relaxed/acquire*
+//! load, over every store the C11 coherence rules still allow the
+//! reading thread to observe. `Relaxed` vs `Acquire/Release` visibility
+//! is modeled explicitly with per-thread vector clocks, per-location
+//! store histories, release/acquire fences and an SC timestamp for
+//! `SeqCst` ops — so lost updates, torn seqlock reads and
+//! ordering-dependent outcomes surface as failing assertions, deadlocks
+//! or livelocks, each reported with the op trace that produced them.
+//!
+//! When the DFS frontier exceeds the schedule budget the explorer
+//! switches to seeded random walks (`rng::SplitMix64`, the crate's
+//! deterministic RNG), so a bounded run still samples the tail instead
+//! of silently truncating it.
+//!
+//! ## Writing a model
+//!
+//! ```ignore
+//! ama::chk::model(|| {
+//!     let q = std::sync::Arc::new(ama::exec::BoundedQueue::new(2));
+//!     let p = {
+//!         let q = q.clone();
+//!         ama::chk::thread::spawn(move || { q.push(1).unwrap(); q.close(); })
+//!     };
+//!     // ... assertions on pop outcomes ...
+//!     p.join().unwrap();
+//! });
+//! ```
+//!
+//! `rust/tests/chk_models.rs` holds the exhaustive small-bound models
+//! for the five riskiest protocols; `docs/CONCURRENCY.md` catalogues the
+//! structures, their state machines, and the per-atomic ordering
+//! contract (the `// ord:` annotations enforced by
+//! `scripts/lint_atomics.py`). A python port of the scheduler and the
+//! visibility rule is cross-checked against brute force in
+//! `scripts/chk_sim_pr10.py`.
+
+pub mod sync;
+
+#[cfg(feature = "chk")]
+pub mod shadow;
+#[cfg(feature = "chk")]
+pub(crate) mod sched;
+
+#[cfg(feature = "chk")]
+pub mod thread;
+#[cfg(not(feature = "chk"))]
+pub mod thread {
+    //! Scheduler-aware threads under `--features chk`; plain std here.
+    pub use std::thread::{
+        available_parallelism, current, park, park_timeout, sleep, spawn, yield_now, Builder,
+        JoinHandle, Thread,
+    };
+}
+
+#[cfg(feature = "chk")]
+pub mod time;
+#[cfg(not(feature = "chk"))]
+pub mod time {
+    //! Virtual instants under `--features chk`; std time here.
+    pub use std::time::{Duration, Instant};
+}
+
+pub mod hint {
+    //! `spin_loop` that, under the checker, deprioritizes the spinning
+    //! thread instead of burning a schedule on every iteration.
+    #[cfg(not(feature = "chk"))]
+    pub use std::hint::spin_loop;
+
+    #[cfg(feature = "chk")]
+    pub fn spin_loop() {
+        crate::chk::sched::spin_hint();
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(feature = "chk")]
+pub use sched::{model, model_expect_failure, Builder};
+
+/// Without `--features chk` the checker is compiled out; `model` simply
+/// runs the closure once on the current thread so `#[cfg]`-free test
+/// helpers keep working.
+#[cfg(not(feature = "chk"))]
+pub fn model<F: Fn() + Send + Sync + 'static>(f: F) {
+    f();
+}

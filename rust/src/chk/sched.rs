@@ -1,0 +1,965 @@
+//! Deterministic cooperative scheduler + DFS interleaving explorer.
+//!
+//! Only compiled with `--features chk`. One *managed* thread runs at a
+//! time: every instrumented operation (atomic access, mutex, condvar,
+//! park/unpark, spawn/join/finish) is a *scheduling point* where the
+//! running thread makes an explicit `choose()` over the runnable set.
+//! Choices are recorded in a schedule; after each run the explorer
+//! backtracks the last branch with unexplored alternatives and replays
+//! the prefix — classic stateless model checking (CHESS/loom). An
+//! optional preemption bound prunes the tree Coyote-style (voluntary
+//! blocking never counts against the budget), and when the schedule
+//! budget is exhausted the explorer falls back to seeded random walks
+//! through the remaining space using the crate RNG (`rng::SplitMix64`).
+//!
+//! Blocking is *modeled*: `park` without a token, `Condvar::wait`,
+//! contended `Mutex::lock` and `join` mark the thread blocked in shadow
+//! state and hand the baton elsewhere; if no runnable thread remains
+//! and nothing is soft-blocked (timed waits), the state is reported as
+//! a deadlock together with the op trace. Timed waits are woken with
+//! `timed_out = true` only when nothing else can run, advancing the
+//! virtual clock (`chk::time`) by a large epoch so deadline loops
+//! terminate — real wall-clock time never leaks into a model, keeping
+//! replays deterministic.
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+use super::shadow::{LocState, VClock, MAX_THREADS};
+use crate::rng::SplitMix64;
+
+/// Virtual-clock jump applied when a timed wait is force-woken: ~18
+/// minutes, far past any deadline a model can construct, so `now() >=
+/// deadline` holds on the next check.
+pub(crate) const VTIME_EPOCH: u64 = 1 << 40;
+
+/// Panic payload used to unwind managed threads when an execution
+/// aborts (failure found / exploration finished early). Never reported
+/// as a model failure.
+pub(crate) struct ChkAbort;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum BlockKind {
+    Mutex(usize),
+    Cv(usize),
+    Park,
+    Join(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Status {
+    /// Running user code, or waiting to be granted the baton.
+    Runnable,
+    /// Blocked until another thread's action wakes it.
+    Blocked(BlockKind),
+    /// Blocked by a *timed* wait: wakeable by its event, or force-woken
+    /// (as a timeout) when nothing else is runnable.
+    SoftBlocked(BlockKind),
+    Finished,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum WakeKind {
+    Notified,
+    TimedOut,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Choice {
+    pub taken: usize,
+    pub n: usize,
+}
+
+pub(crate) struct ThreadState {
+    pub status: Status,
+    pub clock: VClock,
+    /// Join of release clocks observed by *relaxed* loads since the
+    /// last acquire fence (C11 fence synchronization).
+    pub acq_pending: VClock,
+    /// Clock captured at the last release fence; attached as the
+    /// release clock of subsequent relaxed stores.
+    pub rel_fence: Option<VClock>,
+    pub park_token: bool,
+    /// Release clock carried by an `unpark` token.
+    pub park_rel: VClock,
+    pub wake: WakeKind,
+    /// Set by `spin_loop`/`yield_now`: deprioritized until every other
+    /// runnable thread has had a chance to run.
+    pub yielded: bool,
+}
+
+impl ThreadState {
+    fn new() -> Self {
+        ThreadState {
+            status: Status::Runnable,
+            clock: VClock::default(),
+            acq_pending: VClock::default(),
+            rel_fence: None,
+            park_token: false,
+            park_rel: VClock::default(),
+            wake: WakeKind::Notified,
+            yielded: false,
+        }
+    }
+}
+
+pub(crate) struct MutexState {
+    pub owner: Option<usize>,
+    /// Release clock of the last unlock (lock acquires it).
+    pub rel: VClock,
+}
+
+#[derive(Default)]
+pub(crate) struct CvState {
+    pub waiters: Vec<usize>,
+}
+
+/// Shared state of one execution (one schedule being run).
+pub(crate) struct ExecState {
+    pub threads: Vec<ThreadState>,
+    pub active: usize,
+    pub schedule: Vec<Choice>,
+    pub pos: usize,
+    preemptions: usize,
+    preemption_bound: Option<usize>,
+    random: Option<SplitMix64>,
+    pub steps: usize,
+    max_steps: usize,
+    pub locs: Vec<LocState>,
+    pub mutexes: Vec<MutexState>,
+    pub condvars: Vec<CvState>,
+    pub failure: Option<String>,
+    pub abort: bool,
+    pub finished: usize,
+    pub vtime: u64,
+    trace: Vec<String>,
+}
+
+impl ExecState {
+    /// The single branching primitive: every scheduling and
+    /// value-visibility decision funnels through here so the DFS
+    /// explorer sees one uniform choice tree.
+    pub(crate) fn choose(&mut self, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        if self.pos < self.schedule.len() {
+            let c = self.schedule[self.pos];
+            assert_eq!(
+                c.n, n,
+                "chk internal error: nondeterministic replay (arity {} vs {})",
+                c.n, n
+            );
+            self.pos += 1;
+            return c.taken;
+        }
+        let taken = match &mut self.random {
+            Some(rng) => rng.index(n),
+            None => 0,
+        };
+        self.schedule.push(Choice { taken, n });
+        self.pos += 1;
+        taken
+    }
+
+    pub(crate) fn trace(&mut self, me: usize, msg: String) {
+        self.trace.push(format!("t{me}: {msg}"));
+        if self.trace.len() > 512 {
+            self.trace.drain(..256);
+        }
+    }
+
+    fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            let tail: Vec<&str> = self
+                .trace
+                .iter()
+                .rev()
+                .take(60)
+                .map(String::as_str)
+                .collect();
+            let mut report = format!("{msg}\nlast ops (most recent first):\n");
+            for line in tail {
+                report.push_str("  ");
+                report.push_str(line);
+                report.push('\n');
+            }
+            self.failure = Some(report);
+        }
+        self.abort = true;
+    }
+
+    fn runnable(&self, skip_yielded: bool) -> Vec<usize> {
+        self.threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Runnable && !(skip_yielded && t.yielded))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Wake `t` (status → Runnable) and drop it from any condvar waiter
+    /// list it sits on.
+    fn wake_thread(&mut self, t: usize, kind: WakeKind) {
+        self.threads[t].status = Status::Runnable;
+        self.threads[t].wake = kind;
+        for cv in &mut self.condvars {
+            cv.waiters.retain(|&w| w != t);
+        }
+    }
+}
+
+pub(crate) struct Execution {
+    pub(crate) generation: usize,
+    st: StdMutex<ExecState>,
+    cv: StdCondvar,
+    handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<(Arc<Execution>, usize)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// The managed execution + thread id of the calling thread, if it is a
+/// model thread. `None` ⇒ the facade falls back to real std ops.
+pub(crate) fn ctx() -> Option<(Arc<Execution>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(v: Option<(Arc<Execution>, usize)>) {
+    CTX.with(|c| *c.borrow_mut() = v);
+}
+
+/// Execution generation tags on lazily-registered shadow cells; bumped
+/// once per run so stale registrations from earlier runs are ignored.
+static GENERATION: AtomicUsize = AtomicUsize::new(1);
+
+/// Shadow identity attached to every facade object (atomic, mutex,
+/// condvar): a per-execution id, lazily allocated the first time a
+/// model thread touches the object in a given run.
+pub(crate) struct ShadowCell {
+    gen: AtomicUsize,
+    id: AtomicUsize,
+}
+
+impl ShadowCell {
+    pub(crate) const fn new() -> Self {
+        ShadowCell {
+            gen: AtomicUsize::new(0),
+            id: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Execution {
+    pub(crate) fn aborted(&self) -> bool {
+        self.st.lock().unwrap_or_else(|e| e.into_inner()).abort
+    }
+
+    fn lock_st(&self) -> StdMutexGuard<'_, ExecState> {
+        self.st.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Block until this thread holds the baton (`active == me` — which
+    /// implies Runnable). Panics with [`ChkAbort`] if the execution
+    /// aborts while waiting; op entry points pre-check `aborted()` so
+    /// this can never fire during an unwind.
+    fn wait_turn(&self, me: usize) -> StdMutexGuard<'_, ExecState> {
+        let mut st = self.lock_st();
+        loop {
+            if st.abort {
+                drop(st);
+                std::panic::panic_any(ChkAbort);
+            }
+            if st.active == me {
+                st.threads[me].yielded = false;
+                return st;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Scheduling decision after an op: pick the thread that performs
+    /// the next visible operation. `voluntary` exempts the switch from
+    /// the preemption budget (blocking and yields are free).
+    fn pick_next(&self, st: &mut ExecState, me: usize, voluntary: bool) {
+        st.steps += 1;
+        if st.steps > st.max_steps {
+            st.fail(format!(
+                "livelock: no terminating schedule within {} steps \
+                 (unbounded spin without a blocking wait?)",
+                st.max_steps
+            ));
+            self.cv.notify_all();
+            return;
+        }
+        let mut cands = st.runnable(true);
+        if cands.is_empty() {
+            cands = st.runnable(false);
+            if !cands.is_empty() {
+                for t in &mut st.threads {
+                    t.yielded = false;
+                }
+            }
+        }
+        if cands.is_empty() {
+            // Nothing runnable: fire a timed wait as a timeout, or
+            // report deadlock.
+            let soft: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| matches!(t.status, Status::SoftBlocked(_)))
+                .map(|(i, _)| i)
+                .collect();
+            if !soft.is_empty() {
+                let k = st.choose(soft.len());
+                let t = soft[k];
+                st.vtime += VTIME_EPOCH;
+                st.wake_thread(t, WakeKind::TimedOut);
+                st.trace(t, "timed wait fires (virtual clock advanced)".to_string());
+                st.active = t;
+                self.cv.notify_all();
+                return;
+            }
+            if st.finished == st.threads.len() {
+                self.cv.notify_all();
+                return; // run complete
+            }
+            let blocked: Vec<String> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| matches!(t.status, Status::Blocked(_)))
+                .map(|(i, t)| format!("t{i}@{:?}", t.status))
+                .collect();
+            st.fail(format!(
+                "deadlock: every live thread is blocked [{}]",
+                blocked.join(", ")
+            ));
+            self.cv.notify_all();
+            return;
+        }
+        let me_runnable = st
+            .threads
+            .get(me)
+            .map(|t| t.status == Status::Runnable)
+            .unwrap_or(false);
+        if !voluntary && me_runnable {
+            if let Some(bound) = st.preemption_bound {
+                if st.preemptions >= bound && cands.contains(&me) {
+                    st.active = me;
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+        }
+        let k = st.choose(cands.len());
+        let next = cands[k];
+        if !voluntary && me_runnable && next != me {
+            st.preemptions += 1;
+        }
+        st.active = next;
+        self.cv.notify_all();
+    }
+
+    /// Run `f` as one visible operation of thread `me`, then yield a
+    /// scheduling decision. The closure gets the locked state and may
+    /// branch via [`ExecState::choose`].
+    pub(crate) fn atomic_op<R>(&self, me: usize, f: impl FnOnce(&mut ExecState, usize) -> R) -> R {
+        let mut st = self.wait_turn(me);
+        let r = f(&mut st, me);
+        self.pick_next(&mut st, me, false);
+        r
+    }
+
+    /// Register (or look up) the shadow id for a facade object in this
+    /// execution; `mk` allocates on first touch.
+    pub(crate) fn shadow_id(
+        &self,
+        st: &mut ExecState,
+        cell: &ShadowCell,
+        mk: impl FnOnce(&mut ExecState) -> usize,
+    ) -> usize {
+        // Only the baton holder runs, so the two shadow-cell atomics
+        // need no cross-thread protocol of their own.
+        if cell.gen.load(Ordering::Relaxed) == self.generation {
+            cell.id.load(Ordering::Relaxed)
+        } else {
+            let id = mk(st);
+            cell.id.store(id, Ordering::Relaxed);
+            cell.gen.store(self.generation, Ordering::Relaxed);
+            id
+        }
+    }
+
+    pub(crate) fn loc_id(&self, st: &mut ExecState, cell: &ShadowCell, init: u64) -> usize {
+        self.shadow_id(st, cell, |st| {
+            st.locs.push(LocState::new(init));
+            st.locs.len() - 1
+        })
+    }
+
+    fn mutex_id(&self, st: &mut ExecState, cell: &ShadowCell) -> usize {
+        self.shadow_id(st, cell, |st| {
+            st.mutexes.push(MutexState {
+                owner: None,
+                rel: VClock::default(),
+            });
+            st.mutexes.len() - 1
+        })
+    }
+
+    fn cv_id(&self, st: &mut ExecState, cell: &ShadowCell) -> usize {
+        self.shadow_id(st, cell, |st| {
+            st.condvars.push(CvState::default());
+            st.condvars.len() - 1
+        })
+    }
+
+    /// Block in place until woken *and* granted the baton again.
+    fn wait_woken<'a>(
+        &'a self,
+        mut st: StdMutexGuard<'a, ExecState>,
+        me: usize,
+    ) -> StdMutexGuard<'a, ExecState> {
+        loop {
+            if st.abort {
+                drop(st);
+                std::panic::panic_any(ChkAbort);
+            }
+            if st.active == me && st.threads[me].status == Status::Runnable {
+                return st;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn mutex_acquire_locked<'a>(
+        &'a self,
+        mut st: StdMutexGuard<'a, ExecState>,
+        me: usize,
+        id: usize,
+    ) -> StdMutexGuard<'a, ExecState> {
+        loop {
+            if st.mutexes[id].owner.is_none() {
+                st.mutexes[id].owner = Some(me);
+                let rel = st.mutexes[id].rel.clone();
+                st.threads[me].clock.join(&rel); // lock = acquire of last unlock
+                return st;
+            }
+            st.threads[me].status = Status::Blocked(BlockKind::Mutex(id));
+            self.pick_next(&mut st, me, true);
+            st = self.wait_woken(st, me);
+        }
+    }
+
+    fn mutex_release_locked(&self, st: &mut ExecState, me: usize, id: usize) {
+        st.threads[me].clock.bump(me);
+        st.mutexes[id].rel = st.threads[me].clock.clone(); // unlock = release
+        st.mutexes[id].owner = None;
+        let blocked: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Blocked(BlockKind::Mutex(id)))
+            .map(|(i, _)| i)
+            .collect();
+        for t in blocked {
+            st.wake_thread(t, WakeKind::Notified);
+        }
+    }
+
+    pub(crate) fn mutex_lock(&self, me: usize, cell: &ShadowCell) {
+        let mut st = self.wait_turn(me);
+        let id = self.mutex_id(&mut st, cell);
+        let mut st = self.mutex_acquire_locked(st, me, id);
+        st.trace(me, format!("mutex#{id} lock"));
+        self.pick_next(&mut st, me, false);
+    }
+
+    pub(crate) fn mutex_try_lock(&self, me: usize, cell: &ShadowCell) -> bool {
+        let mut st = self.wait_turn(me);
+        let id = self.mutex_id(&mut st, cell);
+        let got = if st.mutexes[id].owner.is_none() {
+            st.mutexes[id].owner = Some(me);
+            let rel = st.mutexes[id].rel.clone();
+            st.threads[me].clock.join(&rel);
+            true
+        } else {
+            false
+        };
+        st.trace(me, format!("mutex#{id} try_lock -> {got}"));
+        self.pick_next(&mut st, me, false);
+        got
+    }
+
+    pub(crate) fn mutex_unlock(&self, me: usize, cell: &ShadowCell) {
+        let mut st = self.wait_turn(me);
+        let id = self.mutex_id(&mut st, cell);
+        debug_assert_eq!(st.mutexes[id].owner, Some(me), "unlock by non-owner");
+        self.mutex_release_locked(&mut st, me, id);
+        st.trace(me, format!("mutex#{id} unlock"));
+        self.pick_next(&mut st, me, false);
+    }
+
+    /// Condvar wait: atomically release the mutex and enqueue, then
+    /// reacquire once woken. Returns true if the wake was a timeout
+    /// (only possible for `timed = true`). No spurious wakeups are
+    /// modeled — this bounds the state space and matches the
+    /// loop-around-wait discipline all call sites already follow.
+    pub(crate) fn condvar_wait(
+        &self,
+        me: usize,
+        cv_cell: &ShadowCell,
+        mx_cell: &ShadowCell,
+        timed: bool,
+    ) -> bool {
+        let mut st = self.wait_turn(me);
+        let cv = self.cv_id(&mut st, cv_cell);
+        let mx = self.mutex_id(&mut st, mx_cell);
+        debug_assert_eq!(st.mutexes[mx].owner, Some(me), "wait without the lock");
+        self.mutex_release_locked(&mut st, me, mx);
+        st.condvars[cv].waiters.push(me);
+        let kind = BlockKind::Cv(cv);
+        st.threads[me].status = if timed {
+            Status::SoftBlocked(kind)
+        } else {
+            Status::Blocked(kind)
+        };
+        st.trace(me, format!("cv#{cv} wait (timed={timed})"));
+        self.pick_next(&mut st, me, true);
+        let mut st = self.wait_woken(st, me);
+        let timed_out = st.threads[me].wake == WakeKind::TimedOut;
+        let mut st = self.mutex_acquire_locked(st, me, mx);
+        st.trace(
+            me,
+            format!("cv#{cv} woke (timed_out={timed_out}), mutex#{mx} reacquired"),
+        );
+        self.pick_next(&mut st, me, false);
+        timed_out
+    }
+
+    pub(crate) fn condvar_notify(&self, me: usize, cv_cell: &ShadowCell, all: bool) {
+        let mut st = self.wait_turn(me);
+        let cv = self.cv_id(&mut st, cv_cell);
+        let waiters = st.condvars[cv].waiters.clone();
+        let woken: Vec<usize> = if all || waiters.len() <= 1 {
+            waiters
+        } else {
+            // notify_one with several waiters: which one wakes is a
+            // genuine scheduling decision — branch on it.
+            let k = st.choose(waiters.len());
+            vec![waiters[k]]
+        };
+        for t in &woken {
+            st.wake_thread(*t, WakeKind::Notified);
+        }
+        st.trace(me, format!("cv#{cv} notify (all={all}) -> woke {woken:?}"));
+        self.pick_next(&mut st, me, false);
+    }
+
+    /// Strict token semantics: park blocks unless a token is pending;
+    /// no spurious returns. Lost-wakeup bugs therefore surface as
+    /// deadlocks instead of being masked.
+    pub(crate) fn park(&self, me: usize, timed: bool) {
+        let mut st = self.wait_turn(me);
+        if st.threads[me].park_token {
+            st.threads[me].park_token = false;
+            let rel = st.threads[me].park_rel.clone();
+            st.threads[me].clock.join(&rel); // consume = acquire of unpark
+            st.trace(me, "park: token present, returning".to_string());
+            self.pick_next(&mut st, me, false);
+            return;
+        }
+        let kind = BlockKind::Park;
+        st.threads[me].status = if timed {
+            Status::SoftBlocked(kind)
+        } else {
+            Status::Blocked(kind)
+        };
+        st.trace(me, format!("park (timed={timed})"));
+        self.pick_next(&mut st, me, true);
+        let mut st = self.wait_woken(st, me);
+        if st.threads[me].wake == WakeKind::Notified {
+            let rel = st.threads[me].park_rel.clone();
+            st.threads[me].clock.join(&rel);
+        }
+        st.trace(me, "park returned".to_string());
+        self.pick_next(&mut st, me, false);
+    }
+
+    pub(crate) fn unpark(&self, me: usize, target: usize) {
+        let mut st = self.wait_turn(me);
+        st.threads[me].clock.bump(me);
+        let rel = st.threads[me].clock.clone();
+        match st.threads[target].status {
+            Status::Blocked(BlockKind::Park) | Status::SoftBlocked(BlockKind::Park) => {
+                st.threads[target].park_rel = rel;
+                st.wake_thread(target, WakeKind::Notified);
+            }
+            _ => {
+                st.threads[target].park_token = true;
+                st.threads[target].park_rel = rel;
+            }
+        }
+        st.trace(me, format!("unpark t{target}"));
+        self.pick_next(&mut st, me, false);
+    }
+
+    pub(crate) fn yield_now(&self, me: usize) {
+        let mut st = self.wait_turn(me);
+        st.threads[me].yielded = true;
+        st.trace(me, "yield".to_string());
+        self.pick_next(&mut st, me, true);
+    }
+
+    /// Virtual `Instant::now()`: an observation, not a scheduling
+    /// point (adds no branching).
+    pub(crate) fn vnow(&self, me: usize) -> u64 {
+        let st = self.wait_turn(me);
+        st.vtime
+    }
+
+    pub(crate) fn spawn_thread(
+        self: &Arc<Self>,
+        me: usize,
+        name: Option<String>,
+        body: Box<dyn FnOnce() + Send + 'static>,
+    ) -> usize {
+        let mut st = self.wait_turn(me);
+        let child = st.threads.len();
+        assert!(
+            child < MAX_THREADS,
+            "chk models support at most {MAX_THREADS} threads"
+        );
+        let mut ts = ThreadState::new();
+        st.threads[me].clock.bump(me);
+        ts.clock = st.threads[me].clock.clone(); // spawn edge: child sees parent
+        st.threads.push(ts);
+        st.trace(me, format!("spawn t{child}"));
+        let exec = Arc::clone(self);
+        let b = std::thread::Builder::new().name(name.unwrap_or_else(|| format!("chk-t{child}")));
+        let handle = b
+            .spawn(move || {
+                set_ctx(Some((Arc::clone(&exec), child)));
+                let r = catch_unwind(AssertUnwindSafe(body));
+                set_ctx(None);
+                exec.finish_thread(child, r.err());
+            })
+            .expect("chk: real thread spawn failed");
+        self.handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(handle);
+        self.pick_next(&mut st, me, false);
+        child
+    }
+
+    pub(crate) fn join_thread(&self, me: usize, target: usize) {
+        let mut st = self.wait_turn(me);
+        while st.threads[target].status != Status::Finished {
+            st.threads[me].status = Status::Blocked(BlockKind::Join(target));
+            self.pick_next(&mut st, me, true);
+            st = self.wait_woken(st, me);
+        }
+        let tclock = st.threads[target].clock.clone();
+        st.threads[me].clock.join(&tclock); // join edge: parent sees child
+        st.trace(me, format!("joined t{target}"));
+        self.pick_next(&mut st, me, false);
+    }
+
+    fn finish_thread(&self, me: usize, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.lock_st();
+        loop {
+            if st.abort {
+                if st.threads[me].status != Status::Finished {
+                    st.threads[me].status = Status::Finished;
+                    st.finished += 1;
+                }
+                self.cv.notify_all();
+                return;
+            }
+            if st.active == me {
+                break;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if let Some(payload) = panic {
+            if payload.downcast_ref::<ChkAbort>().is_none() {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "<non-string panic payload>".to_string());
+                st.fail(format!("thread t{me} panicked: {msg}"));
+            }
+            if st.threads[me].status != Status::Finished {
+                st.threads[me].status = Status::Finished;
+                st.finished += 1;
+            }
+            self.cv.notify_all();
+            return;
+        }
+        st.threads[me].clock.bump(me);
+        st.threads[me].status = Status::Finished;
+        st.finished += 1;
+        let joiners: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Blocked(BlockKind::Join(me)))
+            .map(|(i, _)| i)
+            .collect();
+        for t in joiners {
+            st.wake_thread(t, WakeKind::Notified);
+        }
+        st.trace(me, "finished".to_string());
+        self.pick_next(&mut st, me, true);
+    }
+}
+
+/// Deprioritize the spinning thread; called by `chk::hint::spin_loop`.
+pub(crate) fn spin_hint() {
+    if let Some((exec, me)) = ctx() {
+        if !exec.aborted() {
+            exec.yield_now(me);
+        }
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Explorer configuration. Defaults are sized for exhaustive
+/// small-bound models (2–3 threads, ≤6 ops each); env knobs
+/// (`CHK_MAX_SCHEDULES`, `CHK_PREEMPTION_BOUND`, `CHK_RANDOM_ITERS`,
+/// `CHK_SEED`, `CHK_MAX_STEPS`) override for bigger sweeps.
+#[derive(Clone)]
+pub struct Builder {
+    preemption_bound: Option<usize>,
+    max_schedules: usize,
+    random_iters: usize,
+    seed: u64,
+    max_steps: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        let bound = env_usize("CHK_PREEMPTION_BOUND", usize::MAX);
+        Builder {
+            preemption_bound: if bound == usize::MAX { None } else { Some(bound) },
+            max_schedules: env_usize("CHK_MAX_SCHEDULES", 100_000),
+            random_iters: env_usize("CHK_RANDOM_ITERS", 10_000),
+            seed: env_u64("CHK_SEED", 0xA14A_0A10_C4EC_4E55),
+            max_steps: env_usize("CHK_MAX_STEPS", 20_000),
+        }
+    }
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cap on involuntary context switches per schedule (CHESS-style).
+    /// `None` (the default) explores the full tree.
+    pub fn preemption_bound(mut self, bound: usize) -> Self {
+        self.preemption_bound = Some(bound);
+        self
+    }
+
+    pub fn max_schedules(mut self, n: usize) -> Self {
+        self.max_schedules = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the model to completion; panics with the failing trace if
+    /// any explored schedule deadlocks, livelocks, or panics.
+    pub fn check<F>(&self, f: F)
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        if let Some(report) = self.run(f) {
+            panic!("{report}");
+        }
+    }
+
+    /// Inverted harness for checker-sensitivity tests: panics unless
+    /// the exploration finds a failing schedule, and returns its
+    /// report when it does.
+    pub fn check_fails<F>(&self, f: F) -> String
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        self.run(f).expect(
+            "chk: model was expected to fail under exploration, \
+             but every explored schedule passed",
+        )
+    }
+
+    fn run<F>(&self, f: F) -> Option<String>
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let mut prefix: Vec<Choice> = Vec::new();
+        let mut schedules = 0usize;
+        loop {
+            let (failure, schedule) = run_once(self, Arc::clone(&f), prefix.clone(), None);
+            schedules += 1;
+            if let Some(msg) = failure {
+                return Some(format!(
+                    "chk: model failed on schedule #{schedules}\n{msg}\
+                     replay prefix: {:?}",
+                    schedule.iter().map(|c| c.taken).collect::<Vec<_>>()
+                ));
+            }
+            // Backtrack to the deepest choice with unexplored branches.
+            let mut next = schedule;
+            while let Some(last) = next.last() {
+                if last.taken + 1 < last.n {
+                    break;
+                }
+                next.pop();
+            }
+            if next.is_empty() {
+                eprintln!("chk: exhaustively explored {schedules} schedules");
+                return None;
+            }
+            if schedules >= self.max_schedules {
+                // Too big for exhaustive DFS under this budget: sample
+                // the rest with seeded random walks (repo RNG).
+                eprintln!(
+                    "chk: schedule budget {} reached; sampling {} random walks (seed {:#x})",
+                    self.max_schedules, self.random_iters, self.seed
+                );
+                for i in 0..self.random_iters {
+                    let rng = SplitMix64::new(self.seed.wrapping_add(i as u64));
+                    let (failure, schedule) =
+                        run_once(self, Arc::clone(&f), Vec::new(), Some(rng));
+                    if let Some(msg) = failure {
+                        return Some(format!(
+                            "chk: model failed on random walk #{i}\n{msg}\
+                             replay prefix: {:?}",
+                            schedule.iter().map(|c| c.taken).collect::<Vec<_>>()
+                        ));
+                    }
+                }
+                eprintln!(
+                    "chk: bounded exploration done ({} DFS + {} random schedules), no failure",
+                    schedules, self.random_iters
+                );
+                return None;
+            }
+            next.last_mut().unwrap().taken += 1;
+            prefix = next;
+        }
+    }
+}
+
+fn run_once<F>(
+    b: &Builder,
+    f: Arc<F>,
+    prefix: Vec<Choice>,
+    random: Option<SplitMix64>,
+) -> (Option<String>, Vec<Choice>)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let generation = GENERATION.fetch_add(1, Ordering::Relaxed) + 1;
+    let exec = Arc::new(Execution {
+        generation,
+        st: StdMutex::new(ExecState {
+            threads: vec![ThreadState::new()],
+            active: 0,
+            schedule: prefix,
+            pos: 0,
+            preemptions: 0,
+            preemption_bound: b.preemption_bound,
+            random,
+            steps: 0,
+            max_steps: b.max_steps,
+            locs: Vec::new(),
+            mutexes: Vec::new(),
+            condvars: Vec::new(),
+            failure: None,
+            abort: false,
+            finished: 0,
+            vtime: 0,
+            trace: Vec::new(),
+        }),
+        cv: StdCondvar::new(),
+        handles: StdMutex::new(Vec::new()),
+    });
+    {
+        let root = Arc::clone(&exec);
+        let body = Arc::clone(&f);
+        let handle = std::thread::Builder::new()
+            .name("chk-t0".to_string())
+            .spawn(move || {
+                set_ctx(Some((Arc::clone(&root), 0)));
+                let r = catch_unwind(AssertUnwindSafe(move || body()));
+                set_ctx(None);
+                root.finish_thread(0, r.err());
+            })
+            .expect("chk: spawn of model root thread failed");
+        exec.handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(handle);
+    }
+    // Wait for the run to complete: every managed thread finished
+    // (abort paths also count down through finish_thread).
+    {
+        let mut st = exec.lock_st();
+        while st.finished < st.threads.len() {
+            st = exec.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+    let handles: Vec<_> = std::mem::take(
+        &mut *exec.handles.lock().unwrap_or_else(|e| e.into_inner()),
+    );
+    for h in handles {
+        let _ = h.join();
+    }
+    let st = exec.lock_st();
+    (st.failure.clone(), st.schedule.clone())
+}
+
+/// Explore every interleaving of `f` under the default bounds; panic
+/// with a trace on the first failing schedule. See module docs.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::new().check(f);
+}
+
+/// Negative harness: assert that exploration *does* find a failure
+/// (used by the weakened-ordering sensitivity tests).
+pub fn model_expect_failure<F>(f: F) -> String
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::new().check_fails(f)
+}

@@ -1,0 +1,265 @@
+//! Shadow weak-memory model: per-location store histories, per-thread
+//! vector clocks, release/acquire/SC semantics and C11-style fences.
+//!
+//! The model is *value-based*: each atomic location keeps the list of
+//! stores executed so far (its modification order). A `Relaxed` or
+//! `Acquire` load branches — via the scheduler's `choose()` — over
+//! every store the C11 coherence rules still permit the reading thread
+//! to observe:
+//!
+//! * **happens-before floor** — a load may not read a store that is
+//!   coherence-older than the newest store that happens-before the
+//!   load (per-thread vector clocks, grown by acquire edges);
+//! * **per-thread coherence floor** — a thread never reads older than
+//!   what it last read or wrote at this location
+//!   (read-read/read-write coherence);
+//! * **SC floor** — a `SeqCst` load additionally never reads older
+//!   than the newest `SeqCst` store to the location (the single total
+//!   order the `// ord:` SeqCst justifications appeal to).
+//!
+//! Reading a `Release`/`SeqCst` store with an `Acquire`/`SeqCst` load
+//! joins the writer's release clock into the reader's clock. A relaxed
+//! load instead parks the release clock in `acq_pending`, which a
+//! later `fence(Acquire)` promotes — and `fence(Release)` snapshots
+//! the thread clock so later relaxed stores carry it — exactly the
+//! crossbeam-`SeqLock` publication pattern `cache.rs` uses.
+//!
+//! RMWs always operate on the *newest* store (C11 guarantees RMWs read
+//! the latest value in modification order). Two deliberate
+//! strengthenings, documented for model authors: `compare_exchange_weak`
+//! never fails spuriously, and store-history pruning keeps at most
+//! [`STORE_HISTORY`] stores per location (older stale reads are simply
+//! not explored). Both shrink the explored space; neither introduces
+//! false alarms. Load-buffering (out-of-thin-air) executions are not
+//! representable at all — a load only ever returns a store that has
+//! already executed in the current interleaving.
+
+use std::sync::atomic::Ordering;
+
+use super::sched::ExecState;
+
+/// Managed-thread cap; sized for small-bound models (2–3 threads plus
+/// room for helper threads) while keeping vector clocks `Copy`-cheap.
+pub(crate) const MAX_THREADS: usize = 8;
+
+/// Per-location store-history cap (see module docs).
+pub(crate) const STORE_HISTORY: usize = 8;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub(crate) struct VClock(pub [u32; MAX_THREADS]);
+
+impl VClock {
+    pub(crate) fn join(&mut self, other: &VClock) {
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a = (*a).max(*b);
+        }
+    }
+
+    pub(crate) fn bump(&mut self, me: usize) {
+        self.0[me] += 1;
+    }
+
+    /// Pointwise ≤ : does every event in `self` precede-or-equal
+    /// `other`'s view?
+    pub(crate) fn leq(&self, other: &VClock) -> bool {
+        self.0.iter().zip(other.0.iter()).all(|(a, b)| a <= b)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub(crate) struct Store {
+    pub val: u64,
+    /// Position in this location's modification order (1-based).
+    pub seq: u32,
+    /// Writer's vector clock at the store (happens-before tests).
+    pub clock: VClock,
+    /// Release clock: set for Release/AcqRel/SeqCst stores, or
+    /// inherited from the writer's last `fence(Release)` for relaxed
+    /// stores after one. `None` ⇒ reading this store synchronizes
+    /// nothing.
+    pub rel: Option<VClock>,
+}
+
+pub(crate) struct LocState {
+    pub stores: Vec<Store>,
+    /// Per-thread coherence floor: seq of the newest store each thread
+    /// has read or written here.
+    pub last_seen: [u32; MAX_THREADS],
+    /// Seq of the newest SeqCst store (0 = none yet).
+    pub last_sc: u32,
+    next_seq: u32,
+}
+
+impl LocState {
+    /// Fresh location, seeded with the value the real atomic holds at
+    /// registration time (an "initial store" visible to everyone).
+    pub(crate) fn new(init: u64) -> Self {
+        LocState {
+            stores: vec![Store {
+                val: init,
+                seq: 1,
+                clock: VClock::default(),
+                rel: Some(VClock::default()),
+            }],
+            last_seen: [0; MAX_THREADS],
+            last_sc: 0,
+            next_seq: 2,
+        }
+    }
+
+    fn newest(&self) -> &Store {
+        self.stores.last().expect("location with no stores")
+    }
+}
+
+fn has_acquire(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn has_release(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// Apply the synchronization side of reading store `s` with order
+/// `ord` to thread `me`.
+fn read_sync(st: &mut ExecState, me: usize, ord: Ordering, rel: &Option<VClock>) {
+    if let Some(rc) = rel {
+        if has_acquire(ord) {
+            st.threads[me].clock.join(rc);
+        } else {
+            // Relaxed read: defer the edge until an acquire fence.
+            st.threads[me].acq_pending.join(rc);
+        }
+    }
+}
+
+/// An atomic load: branch over every store still visible to `me`.
+pub(crate) fn load(st: &mut ExecState, me: usize, loc: usize, ord: Ordering) -> u64 {
+    let mut floor = st.locs[loc].last_seen[me];
+    if ord == Ordering::SeqCst {
+        floor = floor.max(st.locs[loc].last_sc);
+    }
+    // Happens-before floor: newest store whose writer clock is
+    // contained in the reader's clock.
+    let clock = st.threads[me].clock.clone();
+    for s in &st.locs[loc].stores {
+        if s.clock.leq(&clock) {
+            floor = floor.max(s.seq);
+        }
+    }
+    let cands: Vec<usize> = st.locs[loc]
+        .stores
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.seq >= floor)
+        .map(|(i, _)| i)
+        .collect();
+    debug_assert!(!cands.is_empty(), "newest store always readable");
+    let k = if cands.len() > 1 {
+        st.choose(cands.len())
+    } else {
+        0
+    };
+    let (val, seq, rel) = {
+        let s = &st.locs[loc].stores[cands[k]];
+        (s.val, s.seq, s.rel.clone())
+    };
+    st.locs[loc].last_seen[me] = st.locs[loc].last_seen[me].max(seq);
+    read_sync(st, me, ord, &rel);
+    val
+}
+
+/// An atomic store: appended to the modification order.
+pub(crate) fn store(st: &mut ExecState, me: usize, loc: usize, ord: Ordering, val: u64) {
+    st.threads[me].clock.bump(me);
+    let clock = st.threads[me].clock.clone();
+    let rel = if has_release(ord) {
+        Some(clock.clone())
+    } else {
+        st.threads[me].rel_fence.clone()
+    };
+    let seq = st.locs[loc].next_seq;
+    st.locs[loc].next_seq += 1;
+    st.locs[loc].stores.push(Store {
+        val,
+        seq,
+        clock,
+        rel,
+    });
+    st.locs[loc].last_seen[me] = seq;
+    if ord == Ordering::SeqCst {
+        st.locs[loc].last_sc = seq;
+    }
+    prune(st, loc);
+}
+
+/// A read-modify-write: reads the *newest* store (C11: RMWs read the
+/// latest value in modification order), then — if `f` yields a new
+/// value — appends it. Returns the value read. `f` returning `None`
+/// models a failed `compare_exchange`, which acts as a load of the
+/// newest store with `fail_ord`.
+pub(crate) fn rmw(
+    st: &mut ExecState,
+    me: usize,
+    loc: usize,
+    ord: Ordering,
+    fail_ord: Ordering,
+    f: impl FnOnce(u64) -> Option<u64>,
+) -> u64 {
+    let (old, seq, rel) = {
+        let s = st.locs[loc].newest();
+        (s.val, s.seq, s.rel.clone())
+    };
+    st.locs[loc].last_seen[me] = st.locs[loc].last_seen[me].max(seq);
+    match f(old) {
+        Some(new) => {
+            read_sync(st, me, ord, &rel);
+            st.threads[me].clock.bump(me);
+            let clock = st.threads[me].clock.clone();
+            let new_rel = if has_release(ord) {
+                Some(clock.clone())
+            } else {
+                st.threads[me].rel_fence.clone()
+            };
+            let new_seq = st.locs[loc].next_seq;
+            st.locs[loc].next_seq += 1;
+            st.locs[loc].stores.push(Store {
+                val: new,
+                seq: new_seq,
+                clock,
+                rel: new_rel,
+            });
+            st.locs[loc].last_seen[me] = new_seq;
+            if ord == Ordering::SeqCst {
+                st.locs[loc].last_sc = new_seq;
+            }
+            prune(st, loc);
+        }
+        None => read_sync(st, me, fail_ord, &rel),
+    }
+    old
+}
+
+/// C11 fence, modeled at AcqRel strength (`SeqCst` fences get the
+/// AcqRel treatment — strong enough for every fence in this crate,
+/// which uses the crossbeam-SeqLock Acquire/Release pair).
+pub(crate) fn fence(st: &mut ExecState, me: usize, ord: Ordering) {
+    if has_acquire(ord) {
+        let pending = std::mem::take(&mut st.threads[me].acq_pending);
+        st.threads[me].clock.join(&pending);
+    }
+    if has_release(ord) {
+        st.threads[me].rel_fence = Some(st.threads[me].clock.clone());
+    }
+}
+
+/// Bound the history: drop oldest stores beyond [`STORE_HISTORY`].
+/// Never drops the newest; shrinks (never grows) the set of stale
+/// values explored.
+fn prune(st: &mut ExecState, loc: usize) {
+    let stores = &mut st.locs[loc].stores;
+    if stores.len() > STORE_HISTORY {
+        let excess = stores.len() - STORE_HISTORY;
+        stores.drain(..excess);
+    }
+}

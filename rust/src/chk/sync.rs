@@ -1,0 +1,586 @@
+//! Synchronization facade: `std::sync` look-alikes the concurrent core
+//! imports instead of `std`.
+//!
+//! Normal builds (no `chk` feature): every item is a `pub use` of the
+//! corresponding `std` type — zero cost, zero behavior change, and the
+//! compiler sees the exact same types as before the facade existed.
+//!
+//! `--features chk`: the same paths resolve to instrumented types that
+//! keep a *real* std primitive (so code outside a [`crate::chk::model`]
+//! closure behaves normally, and final values stay observable after a
+//! model iteration) plus a [`sched::ShadowCell`] identity that routes
+//! every operation performed by a managed model thread through the
+//! scheduler ([`super::sched`]) and the weak-memory shadow model
+//! ([`super::shadow`]).
+//!
+//! `scripts/lint_atomics.py` enforces that `rust/src/**` (outside this
+//! directory) imports atomics only from here.
+
+/// `Ordering` is always the real `std` enum — the shadow model
+/// interprets it rather than redefining it.
+#[cfg(not(feature = "chk"))]
+pub mod atomic {
+    pub use std::sync::atomic::{
+        fence, AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(not(feature = "chk"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+/// Flat aliases (`chk::sync::AtomicU64`, …) alongside the std-shaped
+/// `chk::sync::atomic::*` paths.
+pub use self::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize};
+
+pub use std::sync::{Arc, LockResult};
+
+#[cfg(feature = "chk")]
+pub use chk_impl::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(feature = "chk")]
+pub mod atomic {
+    pub use super::chk_impl::{
+        fence, AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize,
+    };
+    pub use std::sync::atomic::Ordering;
+}
+
+#[cfg(feature = "chk")]
+mod chk_impl {
+    use std::sync::atomic::Ordering;
+    use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+    use crate::chk::sched::{self, ShadowCell};
+    use crate::chk::shadow;
+
+    /// Instrumented integer/bool atomics. Each op: if the calling
+    /// thread belongs to an active model execution, take the baton,
+    /// run the op against the shadow store history (branching over
+    /// visible values where the ordering allows), write the new value
+    /// through to the real atomic, and yield a scheduling decision.
+    /// Otherwise fall straight through to the real atomic.
+    macro_rules! int_atomic {
+        ($name:ident, $ty:ty) => {
+            pub struct $name {
+                real: std::sync::atomic::$name,
+                cell: ShadowCell,
+            }
+
+            impl $name {
+                pub const fn new(v: $ty) -> Self {
+                    $name {
+                        real: std::sync::atomic::$name::new(v),
+                        cell: ShadowCell::new(),
+                    }
+                }
+
+                fn chk_op<R>(
+                    &self,
+                    model: impl FnOnce(&mut sched::ExecState, usize, usize) -> R,
+                    real: impl FnOnce() -> R,
+                ) -> R {
+                    match sched::ctx() {
+                        Some((exec, me)) if !exec.aborted() => exec.atomic_op(me, |st, me| {
+                            let init = self.real.load(Ordering::Relaxed) as u64;
+                            let loc = exec.loc_id(st, &self.cell, init);
+                            model(st, me, loc)
+                        }),
+                        _ => real(),
+                    }
+                }
+
+                pub fn load(&self, ord: Ordering) -> $ty {
+                    self.chk_op(
+                        |st, me, loc| {
+                            let v = shadow::load(st, me, loc, ord) as $ty;
+                            st.trace(
+                                me,
+                                format!("{}#{loc} load({ord:?}) -> {v:?}", stringify!($name)),
+                            );
+                            v
+                        },
+                        || self.real.load(ord),
+                    )
+                }
+
+                pub fn store(&self, v: $ty, ord: Ordering) {
+                    self.chk_op(
+                        |st, me, loc| {
+                            shadow::store(st, me, loc, ord, v as u64);
+                            self.real.store(v, Ordering::Relaxed);
+                            st.trace(
+                                me,
+                                format!("{}#{loc} store({ord:?}) {v:?}", stringify!($name)),
+                            );
+                        },
+                        || self.real.store(v, ord),
+                    )
+                }
+
+                pub fn swap(&self, v: $ty, ord: Ordering) -> $ty {
+                    self.chk_op(
+                        |st, me, loc| {
+                            let old =
+                                shadow::rmw(st, me, loc, ord, Ordering::Relaxed, |_| {
+                                    Some(v as u64)
+                                }) as $ty;
+                            self.real.store(v, Ordering::Relaxed);
+                            st.trace(
+                                me,
+                                format!(
+                                    "{}#{loc} swap({ord:?}) {v:?} -> old {old:?}",
+                                    stringify!($name)
+                                ),
+                            );
+                            old
+                        },
+                        || self.real.swap(v, ord),
+                    )
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $ty,
+                    new: $ty,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$ty, $ty> {
+                    self.chk_op(
+                        |st, me, loc| {
+                            let old = shadow::rmw(st, me, loc, success, failure, |old| {
+                                if old == current as u64 {
+                                    Some(new as u64)
+                                } else {
+                                    None
+                                }
+                            }) as $ty;
+                            let ok = old == current;
+                            if ok {
+                                self.real.store(new, Ordering::Relaxed);
+                            }
+                            st.trace(
+                                me,
+                                format!(
+                                    "{}#{loc} cas {current:?}->{new:?} read {old:?} ({})",
+                                    stringify!($name),
+                                    if ok { "ok" } else { "fail" }
+                                ),
+                            );
+                            if ok {
+                                Ok(old)
+                            } else {
+                                Err(old)
+                            }
+                        },
+                        || self.real.compare_exchange(current, new, success, failure),
+                    )
+                }
+
+                /// Modeled as strong (no spurious failures): shrinks
+                /// the explored space; every caller loops anyway.
+                pub fn compare_exchange_weak(
+                    &self,
+                    current: $ty,
+                    new: $ty,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$ty, $ty> {
+                    self.compare_exchange(current, new, success, failure)
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> Self {
+                    Self::new(Default::default())
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    self.real.fmt(f)
+                }
+            }
+        };
+    }
+
+    /// Arithmetic RMWs, only meaningful for the integer widths.
+    macro_rules! int_atomic_arith {
+        ($name:ident, $ty:ty) => {
+            impl $name {
+                pub fn fetch_add(&self, v: $ty, ord: Ordering) -> $ty {
+                    self.chk_op(
+                        |st, me, loc| {
+                            let old = shadow::rmw(st, me, loc, ord, Ordering::Relaxed, |old| {
+                                Some((old as $ty).wrapping_add(v) as u64)
+                            }) as $ty;
+                            self.real.store(old.wrapping_add(v), Ordering::Relaxed);
+                            st.trace(
+                                me,
+                                format!(
+                                    "{}#{loc} fetch_add({ord:?}) {v} -> old {old}",
+                                    stringify!($name)
+                                ),
+                            );
+                            old
+                        },
+                        || self.real.fetch_add(v, ord),
+                    )
+                }
+
+                pub fn fetch_sub(&self, v: $ty, ord: Ordering) -> $ty {
+                    self.chk_op(
+                        |st, me, loc| {
+                            let old = shadow::rmw(st, me, loc, ord, Ordering::Relaxed, |old| {
+                                Some((old as $ty).wrapping_sub(v) as u64)
+                            }) as $ty;
+                            self.real.store(old.wrapping_sub(v), Ordering::Relaxed);
+                            st.trace(
+                                me,
+                                format!(
+                                    "{}#{loc} fetch_sub({ord:?}) {v} -> old {old}",
+                                    stringify!($name)
+                                ),
+                            );
+                            old
+                        },
+                        || self.real.fetch_sub(v, ord),
+                    )
+                }
+            }
+        };
+    }
+
+    int_atomic!(AtomicU8, u8);
+    int_atomic!(AtomicU32, u32);
+    int_atomic!(AtomicU64, u64);
+    int_atomic!(AtomicUsize, usize);
+    int_atomic_arith!(AtomicU8, u8);
+    int_atomic_arith!(AtomicU32, u32);
+    int_atomic_arith!(AtomicU64, u64);
+    int_atomic_arith!(AtomicUsize, usize);
+
+    pub struct AtomicBool {
+        real: std::sync::atomic::AtomicBool,
+        cell: ShadowCell,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            AtomicBool {
+                real: std::sync::atomic::AtomicBool::new(v),
+                cell: ShadowCell::new(),
+            }
+        }
+
+        fn chk_op<R>(
+            &self,
+            model: impl FnOnce(&mut sched::ExecState, usize, usize) -> R,
+            real: impl FnOnce() -> R,
+        ) -> R {
+            match sched::ctx() {
+                Some((exec, me)) if !exec.aborted() => exec.atomic_op(me, |st, me| {
+                    let init = self.real.load(Ordering::Relaxed) as u64;
+                    let loc = exec.loc_id(st, &self.cell, init);
+                    model(st, me, loc)
+                }),
+                _ => real(),
+            }
+        }
+
+        pub fn load(&self, ord: Ordering) -> bool {
+            self.chk_op(
+                |st, me, loc| {
+                    let v = shadow::load(st, me, loc, ord) != 0;
+                    st.trace(me, format!("AtomicBool#{loc} load({ord:?}) -> {v}"));
+                    v
+                },
+                || self.real.load(ord),
+            )
+        }
+
+        pub fn store(&self, v: bool, ord: Ordering) {
+            self.chk_op(
+                |st, me, loc| {
+                    shadow::store(st, me, loc, ord, v as u64);
+                    self.real.store(v, Ordering::Relaxed);
+                    st.trace(me, format!("AtomicBool#{loc} store({ord:?}) {v}"));
+                },
+                || self.real.store(v, ord),
+            )
+        }
+
+        pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+            self.chk_op(
+                |st, me, loc| {
+                    let old = shadow::rmw(st, me, loc, ord, Ordering::Relaxed, |_| {
+                        Some(v as u64)
+                    }) != 0;
+                    self.real.store(v, Ordering::Relaxed);
+                    st.trace(
+                        me,
+                        format!("AtomicBool#{loc} swap({ord:?}) {v} -> old {old}"),
+                    );
+                    old
+                },
+                || self.real.swap(v, ord),
+            )
+        }
+    }
+
+    impl Default for AtomicBool {
+        fn default() -> Self {
+            Self::new(false)
+        }
+    }
+
+    impl std::fmt::Debug for AtomicBool {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.real.fmt(f)
+        }
+    }
+
+    /// C11 atomic fence routed through the shadow model inside a model
+    /// run (modeled at AcqRel strength), a real `std` fence otherwise.
+    pub fn fence(ord: Ordering) {
+        match sched::ctx() {
+            Some((exec, me)) if !exec.aborted() => exec.atomic_op(me, |st, me| {
+                shadow::fence(st, me, ord);
+                st.trace(me, format!("fence({ord:?})"));
+            }),
+            _ => std::sync::atomic::fence(ord),
+        }
+    }
+
+    /// Instrumented mutex. Ownership is tracked in shadow state first
+    /// (where contention, blocking and lock/unlock hb edges are
+    /// modeled); the real `std` mutex is then taken uncontended so the
+    /// data it guards stays genuinely protected even if a model has a
+    /// bug. Poisoning is swallowed inside models (a panicking schedule
+    /// aborts the run anyway).
+    pub struct Mutex<T> {
+        real: StdMutex<T>,
+        cell: ShadowCell,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        inner: Option<StdMutexGuard<'a, T>>,
+        owner: &'a Mutex<T>,
+        shadow: bool,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Mutex {
+                real: StdMutex::new(t),
+                cell: ShadowCell::new(),
+            }
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            match sched::ctx() {
+                Some((exec, me)) if !exec.aborted() => {
+                    exec.mutex_lock(me, &self.cell);
+                    let inner = self.real.lock().unwrap_or_else(|e| e.into_inner());
+                    Ok(MutexGuard {
+                        inner: Some(inner),
+                        owner: self,
+                        shadow: true,
+                    })
+                }
+                _ => {
+                    let inner = self.real.lock().unwrap_or_else(|e| e.into_inner());
+                    Ok(MutexGuard {
+                        inner: Some(inner),
+                        owner: self,
+                        shadow: false,
+                    })
+                }
+            }
+        }
+    }
+
+    impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.real.fmt(f)
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard already released")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard already released")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Release the real lock before the shadow one so that when
+            // another managed thread is granted shadow ownership, the
+            // real mutex is already free.
+            self.inner = None;
+            if self.shadow {
+                if let Some((exec, me)) = sched::ctx() {
+                    if !exec.aborted() {
+                        exec.mutex_unlock(me, &self.owner.cell);
+                    }
+                }
+            }
+        }
+    }
+
+    use std::sync::LockResult;
+
+    /// `std::sync::WaitTimeoutResult` has no public constructor, so the
+    /// chk build carries its own.
+    #[derive(Clone, Copy, PartialEq, Eq, Debug)]
+    pub struct WaitTimeoutResult(bool);
+
+    impl WaitTimeoutResult {
+        pub fn timed_out(&self) -> bool {
+            self.0
+        }
+    }
+
+    /// Instrumented condvar: waits and wakeups are modeled (including
+    /// which waiter a `notify_one` wakes — a branch point); timed
+    /// waits time out only when nothing else can run, advancing the
+    /// virtual clock. No spurious wakeups are modeled.
+    pub struct Condvar {
+        real: StdCondvar,
+        cell: ShadowCell,
+    }
+
+    impl Condvar {
+        pub const fn new() -> Self {
+            Condvar {
+                real: StdCondvar::new(),
+                cell: ShadowCell::new(),
+            }
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            match sched::ctx() {
+                // Aborting run: never block for real (no waker is coming).
+                // A spurious return is legal condvar behavior; callers
+                // loop on their predicate and soon hit a scheduling
+                // point that unwinds them.
+                Some((exec, _)) if exec.aborted() => return Ok(guard),
+                Some((exec, me)) if guard.shadow && !exec.aborted() => {
+                    let mut guard = guard;
+                    let owner = guard.owner;
+                    guard.inner = None; // release the real lock across the wait
+                    guard.shadow = false; // shadow release happens in condvar_wait
+                    drop(guard);
+                    exec.condvar_wait(me, &self.cell, &owner.cell, false);
+                    let inner = owner.real.lock().unwrap_or_else(|e| e.into_inner());
+                    Ok(MutexGuard {
+                        inner: Some(inner),
+                        owner,
+                        shadow: true,
+                    })
+                }
+                _ => {
+                    let mut guard = guard;
+                    let owner = guard.owner;
+                    let shadow = guard.shadow;
+                    let inner = guard.inner.take().expect("guard already released");
+                    guard.shadow = false; // neutralize Drop; we hold the lock via `inner`
+                    drop(guard);
+                    let inner = self.real.wait(inner).unwrap_or_else(|e| e.into_inner());
+                    Ok(MutexGuard {
+                        inner: Some(inner),
+                        owner,
+                        shadow,
+                    })
+                }
+            }
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: std::time::Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            match sched::ctx() {
+                // Aborting run: report an immediate timeout instead of
+                // blocking on the real condvar (no waker is coming).
+                Some((exec, _)) if exec.aborted() => {
+                    return Ok((guard, WaitTimeoutResult(true)))
+                }
+                Some((exec, me)) if guard.shadow && !exec.aborted() => {
+                    let mut guard = guard;
+                    let owner = guard.owner;
+                    guard.inner = None;
+                    guard.shadow = false;
+                    drop(guard);
+                    let timed_out = exec.condvar_wait(me, &self.cell, &owner.cell, true);
+                    let inner = owner.real.lock().unwrap_or_else(|e| e.into_inner());
+                    Ok((
+                        MutexGuard {
+                            inner: Some(inner),
+                            owner,
+                            shadow: true,
+                        },
+                        WaitTimeoutResult(timed_out),
+                    ))
+                }
+                _ => {
+                    let mut guard = guard;
+                    let owner = guard.owner;
+                    let shadow = guard.shadow;
+                    let inner = guard.inner.take().expect("guard already released");
+                    guard.shadow = false;
+                    drop(guard);
+                    let (inner, res) = self
+                        .real
+                        .wait_timeout(inner, dur)
+                        .unwrap_or_else(|e| e.into_inner());
+                    Ok((
+                        MutexGuard {
+                            inner: Some(inner),
+                            owner,
+                            shadow,
+                        },
+                        WaitTimeoutResult(res.timed_out()),
+                    ))
+                }
+            }
+        }
+
+        pub fn notify_one(&self) {
+            match sched::ctx() {
+                Some((exec, me)) if !exec.aborted() => {
+                    exec.condvar_notify(me, &self.cell, false);
+                }
+                _ => self.real.notify_one(),
+            }
+        }
+
+        pub fn notify_all(&self) {
+            match sched::ctx() {
+                Some((exec, me)) if !exec.aborted() => {
+                    exec.condvar_notify(me, &self.cell, true);
+                }
+                _ => self.real.notify_all(),
+            }
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl std::fmt::Debug for Condvar {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.pad("Condvar { .. }")
+        }
+    }
+}

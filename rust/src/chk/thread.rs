@@ -1,0 +1,181 @@
+//! Scheduler-aware `std::thread` stand-ins (compiled only with
+//! `--features chk`; normal builds re-export std from `chk/mod.rs`).
+//!
+//! Inside a model: `spawn` registers a managed thread with the
+//! execution (real OS thread, but it only runs while it holds the
+//! scheduler baton), `park`/`unpark` use strict token semantics (no
+//! spurious returns — lost wakeups therefore surface as deadlocks),
+//! `park_timeout` is a *soft* block the scheduler times out only when
+//! nothing else can run, and `yield_now` deprioritizes the caller.
+//! Outside a model everything falls through to real `std::thread`.
+
+use std::sync::{Arc, Mutex as StdMutex};
+use std::time::Duration;
+
+use super::sched;
+
+/// Core-count query — not a scheduling operation; passes straight
+/// through so loop sizing matches the real machine even under `chk`.
+pub use std::thread::available_parallelism;
+
+/// Handle to a thread, mirroring `std::thread::Thread` (the subset the
+/// crate uses: `unpark`).
+#[derive(Clone, Debug)]
+pub struct Thread(Repr);
+
+#[derive(Clone, Debug)]
+enum Repr {
+    /// Managed model thread: execution generation + thread id. The
+    /// generation guards against a handle outliving its model run.
+    Managed(usize, usize),
+    Real(std::thread::Thread),
+}
+
+impl Thread {
+    pub fn unpark(&self) {
+        match &self.0 {
+            Repr::Managed(generation, tid) => match sched::ctx() {
+                Some((exec, me)) if exec.generation == *generation && !exec.aborted() => {
+                    exec.unpark(me, *tid);
+                }
+                // Handle from a dead run, or unpark from outside the
+                // model: nothing to wake (the run is over).
+                _ => {}
+            },
+            Repr::Real(t) => t.unpark(),
+        }
+    }
+}
+
+pub fn current() -> Thread {
+    match sched::ctx() {
+        Some((exec, me)) => Thread(Repr::Managed(exec.generation, me)),
+        None => Thread(Repr::Real(std::thread::current())),
+    }
+}
+
+pub fn park() {
+    match sched::ctx() {
+        Some((exec, me)) if !exec.aborted() => exec.park(me, false),
+        Some(_) => {} // aborting: never block for real
+        None => std::thread::park(),
+    }
+}
+
+pub fn park_timeout(dur: Duration) {
+    match sched::ctx() {
+        Some((exec, me)) if !exec.aborted() => exec.park(me, true),
+        Some(_) => {}
+        None => std::thread::park_timeout(dur),
+    }
+}
+
+pub fn yield_now() {
+    match sched::ctx() {
+        Some((exec, me)) if !exec.aborted() => exec.yield_now(me),
+        Some(_) => {}
+        None => std::thread::yield_now(),
+    }
+}
+
+pub fn sleep(dur: Duration) {
+    // Sleeping inside a model would couple schedules to wall time;
+    // treat it as a yield instead (models should use timed waits).
+    match sched::ctx() {
+        Some((exec, me)) if !exec.aborted() => exec.yield_now(me),
+        Some(_) => {}
+        None => std::thread::sleep(dur),
+    }
+}
+
+type ResultSlot<T> = Arc<StdMutex<Option<std::thread::Result<T>>>>;
+
+/// Join handle mirroring `std::thread::JoinHandle<T>`.
+pub struct JoinHandle<T>(HandleRepr<T>);
+
+enum HandleRepr<T> {
+    /// Managed: shadow join via the scheduler; the payload travels
+    /// through a result slot the wrapper fills before finishing.
+    Managed { tid: usize, slot: ResultSlot<T> },
+    Real(std::thread::JoinHandle<T>),
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.0 {
+            HandleRepr::Managed { tid, slot } => {
+                match sched::ctx() {
+                    Some((exec, me)) if !exec.aborted() => exec.join_thread(me, tid),
+                    _ => {}
+                }
+                // After the shadow join the wrapper has filled the
+                // slot (it writes before reporting itself finished).
+                // On abort the slot may be empty — surface that as a
+                // join error so `.unwrap()` panics normally.
+                match slot.lock().unwrap_or_else(|e| e.into_inner()).take() {
+                    Some(r) => r,
+                    None => Err(Box::new(sched::ChkAbort)),
+                }
+            }
+            HandleRepr::Real(h) => h.join(),
+        }
+    }
+}
+
+/// Thread builder mirroring the `std::thread::Builder` subset the
+/// crate uses (`new().name(..).spawn(..)`).
+#[derive(Default)]
+pub struct Builder {
+    name: Option<String>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Builder { name: None }
+    }
+
+    pub fn name(mut self, name: String) -> Self {
+        self.name = Some(name);
+        self
+    }
+
+    pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match sched::ctx() {
+            Some((exec, me)) if !exec.aborted() => {
+                let slot: ResultSlot<T> = Arc::new(StdMutex::new(None));
+                let slot2 = Arc::clone(&slot);
+                let tid = exec.spawn_thread(
+                    me,
+                    self.name,
+                    Box::new(move || {
+                        // The wrapper (sched::spawn_thread) catches
+                        // panics around this body; store the value on
+                        // success and let panics propagate to it.
+                        let v = f();
+                        *slot2.lock().unwrap_or_else(|e| e.into_inner()) = Some(Ok(v));
+                    }),
+                );
+                Ok(JoinHandle(HandleRepr::Managed { tid, slot }))
+            }
+            _ => {
+                let b = match self.name {
+                    Some(n) => std::thread::Builder::new().name(n),
+                    None => std::thread::Builder::new(),
+                };
+                b.spawn(f).map(|h| JoinHandle(HandleRepr::Real(h)))
+            }
+        }
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    Builder::new().spawn(f).expect("chk thread spawn failed")
+}

@@ -1,0 +1,86 @@
+//! Virtual instants (compiled only with `--features chk`; normal
+//! builds re-export `std::time` from `chk/mod.rs`).
+//!
+//! Real wall-clock time inside a model breaks replay determinism (the
+//! same schedule prefix would take different timeout branches run to
+//! run), so `Instant::now()` on a managed thread reads the execution's
+//! *virtual* clock instead: a counter that only advances — by
+//! [`sched::VTIME_EPOCH`], ~18 minutes — when the scheduler force-wakes
+//! a timed wait. Any deadline computed before the wake is therefore
+//! decisively past after it, and deadline loops (`pop_timeout`,
+//! `wait_timeout` retries) terminate on their first timeout branch.
+//! Outside a model this is a plain `std::time::Instant`.
+
+use std::time::Duration;
+
+use super::sched;
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+pub enum Instant {
+    /// Virtual nanoseconds on the model clock. Listed first so derived
+    /// comparisons order Virt < Real; the two never mix in practice
+    /// (a value is Virt iff it was taken on a managed thread).
+    Virt(u64),
+    Real(std::time::Instant),
+}
+
+impl Instant {
+    pub fn now() -> Instant {
+        match sched::ctx() {
+            Some((exec, me)) if !exec.aborted() => Instant::Virt(exec.vnow(me)),
+            Some(_) => Instant::Virt(u64::MAX), // aborting: every deadline is past
+            None => Instant::Real(std::time::Instant::now()),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        Instant::now().duration_since(*self)
+    }
+
+    /// Saturating like `std` (panics there are a pre-1.60 artifact).
+    pub fn duration_since(&self, earlier: Instant) -> Duration {
+        match (self, earlier) {
+            (Instant::Virt(a), Instant::Virt(b)) => Duration::from_nanos(a.saturating_sub(b)),
+            (Instant::Real(a), Instant::Real(b)) => a.saturating_duration_since(b),
+            // Mixed variants: no meaningful distance; saturate to zero.
+            _ => Duration::ZERO,
+        }
+    }
+
+    pub fn checked_add(&self, d: Duration) -> Option<Instant> {
+        match self {
+            Instant::Virt(a) => a
+                .checked_add(u64::try_from(d.as_nanos()).ok()?)
+                .map(Instant::Virt),
+            Instant::Real(a) => a.checked_add(d).map(Instant::Real),
+        }
+    }
+}
+
+impl std::ops::Add<Duration> for Instant {
+    type Output = Instant;
+    fn add(self, d: Duration) -> Instant {
+        match self {
+            Instant::Virt(a) => Instant::Virt(a.saturating_add(d.as_nanos() as u64)),
+            Instant::Real(a) => Instant::Real(a + d),
+        }
+    }
+}
+
+impl std::ops::Sub<Duration> for Instant {
+    type Output = Instant;
+    fn sub(self, d: Duration) -> Instant {
+        match self {
+            Instant::Virt(a) => Instant::Virt(a.saturating_sub(d.as_nanos() as u64)),
+            Instant::Real(a) => Instant::Real(a - d),
+        }
+    }
+}
+
+impl std::ops::Sub<Instant> for Instant {
+    type Output = Duration;
+    fn sub(self, other: Instant) -> Duration {
+        self.duration_since(other)
+    }
+}
+

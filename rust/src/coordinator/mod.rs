@@ -66,9 +66,12 @@ use crate::roots::RootSet;
 use crate::stemmer::{StemResult, StemmerConfig};
 use anyhow::Result;
 use std::collections::VecDeque;
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`.
+use crate::chk::sync::atomic::Ordering;
+use crate::chk::sync::Arc;
+use crate::chk::time::Instant;
+use std::time::Duration;
 
 /// A batch-oriented root-extraction backend.
 pub trait StemBackend {
@@ -196,21 +199,25 @@ impl Coordinator {
         let s = slab.clone();
         let m = metrics.clone();
         let factory = Arc::new(factory);
-        let failed_inits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let failed_inits = Arc::new(crate::chk::sync::AtomicUsize::new(0));
         let pool = WorkerPool::spawn(cfg.workers, "stem-worker", move |id, _sd| {
             let mut backend = match factory(id) {
                 Ok(b) => b,
                 Err(e) => {
                     eprintln!("worker {id}: backend init failed: {e:#}");
-                    m.errors.fetch_add(1, Ordering::Relaxed);
+                    m.errors.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                     // If EVERY worker failed init, nobody will ever pop the
                     // queue — the last worker to fail runs a reject loop so
                     // a live serve process degrades loudly (NONE replies)
                     // instead of parking every client forever. With any
                     // healthy sibling, just exit and let it serve 100%.
-                    if failed_inits.fetch_add(1, Ordering::SeqCst) + 1 == cfg.workers {
+                    // ord: Relaxed — a pure counter; the RMW's atomicity
+                    // (not its ordering) guarantees exactly one worker
+                    // observes the final count. Was SeqCst.
+                    // ord: Relaxed — statistics counter; no ordering required.
+                    if failed_inits.fetch_add(1, Ordering::Relaxed) + 1 == cfg.workers {
                         while let Ok(req) = q.pop() {
-                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            m.errors.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                             s.fill(req.ticket, Analysis::none(req.opts.algorithm()));
                         }
                     }
@@ -279,7 +286,7 @@ impl Coordinator {
                             }
                         }
                         None => {
-                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            m.errors.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                             for &i in &group_idx {
                                 s.fill(batch[i].ticket, Analysis::none(opts.algorithm()));
                             }
@@ -357,7 +364,7 @@ impl Coordinator {
         // requests may be stranded in the queue with waiters parked on
         // their tickets. Fail them instead of leaving replies in flight.
         while let Ok(req) = self.queue.pop_timeout(Duration::ZERO) {
-            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
             self.slab.fill(req.ticket, Analysis::none(req.opts.algorithm()));
         }
     }
@@ -422,7 +429,7 @@ impl Handle {
         match self.slab.try_acquire() {
             Some(t) => t,
             None => {
-                self.metrics.slab_waits.fetch_add(1, Ordering::Relaxed);
+                self.metrics.slab_waits.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 self.slab.acquire()
             }
         }
@@ -440,7 +447,7 @@ impl Handle {
         match self.queue.try_push(req) {
             Ok(()) => Ok(()),
             Err((req, QueueError::WouldBlock)) => {
-                self.metrics.queue_full_events.fetch_add(1, Ordering::Relaxed);
+                self.metrics.queue_full_events.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 match submit_timeout {
                     None => self.queue.push(req),
                     Some(t) => self.queue.push_timeout(req, t).map_err(|(_, e)| e),
@@ -623,6 +630,7 @@ impl Handle {
                     Some(t) => out.push(self.slab.wait(t)),
                     // Nothing of ours in flight: block on other clients.
                     None => {
+                        // ord: Relaxed — statistics counter; no ordering required.
                         self.metrics.slab_waits.fetch_add(1, Ordering::Relaxed);
                         break self.slab.acquire();
                     }
@@ -812,8 +820,9 @@ impl RegistryBackend {
         }
         if let Some(m) = &self.metrics {
             let misses = miss_idx.len() as u64;
+            // ord: Relaxed — statistics counter; no ordering required.
             m.cache_hits.fetch_add(words.len() as u64 - misses, Ordering::Relaxed);
-            m.cache_misses.fetch_add(misses, Ordering::Relaxed);
+            m.cache_misses.fetch_add(misses, Ordering::Relaxed); // ord: Relaxed — stats
         }
         if !miss_words.is_empty() {
             let computed = self.registry.analyze_batch_packed(&miss_words, &aopts);

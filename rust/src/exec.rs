@@ -10,10 +10,15 @@
 
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::Thread;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
+
+// Concurrency facade (PR 10): std re-exports in normal builds, the
+// chk model-checker instrumentation under `--features chk`.
+use crate::chk::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use crate::chk::sync::{Condvar, Mutex};
+use crate::chk::thread::Thread;
+use crate::chk::time::Instant;
 
 /// Why a queue operation did not complete.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -297,6 +302,9 @@ impl<T> ReplySlab<T> {
     }
 
     fn pop_free(&self) -> Option<u32> {
+        // ord: SeqCst — the freelist head is one side of the cross-variable
+        // freelist/starving Dekker protocol (see push_free); every head op
+        // joins the single total order that protocol relies on.
         let mut head = self.free_head.load(Ordering::SeqCst);
         loop {
             let idx = (head & u64::from(NIL)) as u32;
@@ -305,9 +313,14 @@ impl<T> ReplySlab<T> {
             }
             // A stale `next` read is harmless: the tag CAS below fails if
             // the head moved underneath us.
+            // ord: SeqCst — `next` is validated against the tagged head CAS
+            // (cross-variable with free_head); total order keeps the pair
+            // trivially coherent.
             let next = self.slots[idx as usize].next.load(Ordering::SeqCst);
             let tag = (head >> 32).wrapping_add(1);
             let new = (tag << 32) | u64::from(next);
+            // ord: SeqCst — head CAS participates in the freelist/starving
+            // Dekker pair (cross-variable, store→load); see push_free.
             match self
                 .free_head
                 .compare_exchange_weak(head, new, Ordering::SeqCst, Ordering::SeqCst)
@@ -321,12 +334,22 @@ impl<T> ReplySlab<T> {
     fn push_free(&self, idx: u32) {
         let slot = &self.slots[idx as usize];
         debug_assert!(unsafe { (*slot.value.get()).is_none() }, "freed slot still holds a value");
+        // ord: SeqCst — FREE must be totally ordered before the head CAS
+        // republishes the slot (cross-variable: state vs free_head), so a
+        // popper can never see a stale ARMED/FILLED state.
         slot.state.store(SLOT_FREE, Ordering::SeqCst);
+        // ord: SeqCst — freelist/starving Dekker pair, see comment below.
         let mut head = self.free_head.load(Ordering::SeqCst);
         loop {
+            // ord: SeqCst — cross-variable with free_head (validated by the
+            // tagged CAS); keeps the pop-side `next` read coherent.
             slot.next.store((head & u64::from(NIL)) as u32, Ordering::SeqCst);
             let tag = (head >> 32).wrapping_add(1);
             let new = (tag << 32) | u64::from(idx);
+            // ord: SeqCst — this push is the store half of the store→load
+            // Dekker pair with the `starving` check below (cross-variable);
+            // a single total order is required, Release/Acquire is not
+            // enough for store→load visibility.
             match self
                 .free_head
                 .compare_exchange_weak(head, new, Ordering::SeqCst, Ordering::SeqCst)
@@ -339,6 +362,8 @@ impl<T> ReplySlab<T> {
         // the SeqCst increment in `acquire` guarantee: either we observe
         // `starving > 0` here (and notify under the gate), or the starving
         // producer's retry-pop observes the slot we just pushed.
+        // ord: SeqCst — load half of the cross-variable Dekker pair
+        // (free_head push vs starving increment); see acquire().
         if self.starving.load(Ordering::SeqCst) > 0 {
             let _g = self.gate.lock().unwrap();
             self.gate_cv.notify_all();
@@ -347,7 +372,11 @@ impl<T> ReplySlab<T> {
 
     fn arm(&self, idx: u32) {
         let slot = &self.slots[idx as usize];
+        // ord: SeqCst — slot state machine shares the single total order
+        // with the freelist ops (cross-variable); see ReplySlot::state.
         debug_assert_eq!(slot.state.load(Ordering::SeqCst), SLOT_FREE);
+        // ord: SeqCst — ARMED joins the state/freelist/waiter total order
+        // (cross-variable state machine); see ReplySlot::state.
         slot.state.store(SLOT_ARMED, Ordering::SeqCst);
     }
 
@@ -366,6 +395,9 @@ impl<T> ReplySlab<T> {
             return idx;
         }
         let mut g = self.gate.lock().unwrap();
+        // ord: SeqCst — store half of the cross-variable Dekker pair with
+        // push_free's head-CAS→starving-load sequence: either push_free
+        // sees our increment, or our retry-pop sees its slot.
         self.starving.fetch_add(1, Ordering::SeqCst);
         let idx = loop {
             if let Some(idx) = self.pop_free() {
@@ -373,6 +405,8 @@ impl<T> ReplySlab<T> {
             }
             g = self.gate_cv.wait(g).unwrap();
         };
+        // ord: SeqCst — stays in the Dekker pair's total order (a relaxed
+        // decrement could appear to reorder against the final pop).
         self.starving.fetch_sub(1, Ordering::SeqCst);
         drop(g);
         self.arm(idx);
@@ -383,6 +417,8 @@ impl<T> ReplySlab<T> {
     /// queue rejected the request). Must not be called once the ticket has
     /// been handed to a worker — use [`abandon`](ReplySlab::abandon) then.
     pub fn release_unused(&self, ticket: u32) {
+        // ord: SeqCst — state machine transition in the slab's single total
+        // order (cross-variable with freelist and waiter registration).
         let prev = self.slots[ticket as usize].state.swap(SLOT_ARMED, Ordering::SeqCst);
         debug_assert_eq!(prev, SLOT_ARMED, "release_unused on a live ticket");
         self.push_free(ticket);
@@ -398,6 +434,10 @@ impl<T> ReplySlab<T> {
         unsafe {
             *slot.value.get() = Some(value);
         }
+        // ord: SeqCst — FILLED swap vs the waiter's register→recheck is a
+        // store→load Dekker handshake across `state` and the waiter slot
+        // (cross-variable); total order makes register/park race-free. The
+        // swap also publishes the `value` write above to the consumer.
         match slot.state.swap(SLOT_FILLED, Ordering::SeqCst) {
             SLOT_ARMED => {
                 let waiter = slot.waiter.lock().unwrap().take();
@@ -405,6 +445,9 @@ impl<T> ReplySlab<T> {
                     t.unpark();
                 }
                 // Last touch: hands the slot over to the consumer side.
+                // ord: SeqCst — cross-variable with `state`: consumers spin
+                // on fill_done only after observing FILLED; total order
+                // pins this store after the swap and the unpark.
                 slot.fill_done.store(true, Ordering::SeqCst);
             }
             SLOT_ABANDONED => {
@@ -428,14 +471,20 @@ impl<T> ReplySlab<T> {
         // descheduled inside it — fall back to yielding instead of
         // burning its whole timeslice on spin_loop.
         let mut spins = 0u32;
+        // ord: SeqCst — load half of the state/fill_done cross-variable
+        // handshake; observing `true` means the filler's last touch (incl.
+        // its unpark) is totally ordered before our recycle.
         while !slot.fill_done.load(Ordering::SeqCst) {
             spins += 1;
             if spins < 128 {
-                std::hint::spin_loop();
+                crate::chk::hint::spin_loop();
             } else {
-                std::thread::yield_now();
+                crate::chk::thread::yield_now();
             }
         }
+        // ord: SeqCst — reset stays in the slot's total order so the next
+        // owner's consume can never see this cycle's `true` (cross-variable
+        // with `state` recycling through the freelist).
         slot.fill_done.store(false, Ordering::SeqCst);
         // SAFETY: we observed FILLED and the filler signalled done, so the
         // write happened-before and nobody else touches the cell.
@@ -448,10 +497,15 @@ impl<T> ReplySlab<T> {
     /// Block until the reply for `ticket` arrives, consuming the ticket.
     pub fn wait(&self, ticket: u32) -> T {
         let slot = &self.slots[ticket as usize];
+        // ord: SeqCst — fast-path probe in the state/waiter Dekker pair.
         if slot.state.load(Ordering::SeqCst) != SLOT_FILLED {
-            *slot.waiter.lock().unwrap() = Some(std::thread::current());
+            *slot.waiter.lock().unwrap() = Some(crate::chk::thread::current());
+            // ord: SeqCst — register→recheck: the load must be totally
+            // ordered after our waiter registration so it cannot miss a
+            // FILLED swap that ran between probe and register
+            // (cross-variable store→load with fill's swap).
             while slot.state.load(Ordering::SeqCst) != SLOT_FILLED {
-                std::thread::park();
+                crate::chk::thread::park();
             }
         }
         self.consume_filled(ticket)
@@ -463,9 +517,13 @@ impl<T> ReplySlab<T> {
     pub fn wait_timeout(&self, ticket: u32, timeout: Duration) -> Result<T, QueueError> {
         let slot = &self.slots[ticket as usize];
         let deadline = Instant::now() + timeout;
+        // ord: SeqCst — fast-path probe in the state/waiter Dekker pair.
         if slot.state.load(Ordering::SeqCst) != SLOT_FILLED {
-            *slot.waiter.lock().unwrap() = Some(std::thread::current());
+            *slot.waiter.lock().unwrap() = Some(crate::chk::thread::current());
             loop {
+                // ord: SeqCst — register→recheck (see wait): totally
+                // ordered after the registration, cross-variable with
+                // fill's FILLED swap.
                 if slot.state.load(Ordering::SeqCst) == SLOT_FILLED {
                     break;
                 }
@@ -475,13 +533,16 @@ impl<T> ReplySlab<T> {
                     // a racing fill may recycle the slot and a new owner
                     // may register its waiter — which we must not steal.
                     slot.waiter.lock().unwrap().take();
+                    // ord: SeqCst — decides the fill-vs-abandon race in
+                    // the slot's single total order (cross-variable with
+                    // freelist recycling on the fill side).
                     return match slot.state.swap(SLOT_ABANDONED, Ordering::SeqCst) {
                         // The reply landed on the wire — take it anyway.
                         SLOT_FILLED => Ok(self.consume_filled(ticket)),
                         _ => Err(QueueError::Timeout),
                     };
                 }
-                std::thread::park_timeout(deadline - now);
+                crate::chk::thread::park_timeout(deadline - now);
             }
         }
         Ok(self.consume_filled(ticket))
@@ -494,6 +555,8 @@ impl<T> ReplySlab<T> {
         // Deregister BEFORE renouncing (see wait_timeout): after the swap
         // a racing fill may recycle the slot for a new owner.
         slot.waiter.lock().unwrap().take();
+        // ord: SeqCst — decides the fill-vs-abandon race in the slot's
+        // single total order (cross-variable with freelist recycling).
         match slot.state.swap(SLOT_ABANDONED, Ordering::SeqCst) {
             // Reply already delivered: discard it and recycle ourselves.
             SLOT_FILLED => {
@@ -508,7 +571,7 @@ impl<T> ReplySlab<T> {
 /// A fixed-size worker pool executing a per-worker closure until the work
 /// source signals shutdown. Workers get ids (useful for per-worker state).
 pub struct WorkerPool {
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<crate::chk::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -524,7 +587,7 @@ impl WorkerPool {
             .map(|i| {
                 let f = f.clone();
                 let sd = shutdown.clone();
-                std::thread::Builder::new()
+                crate::chk::thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(move || f(i, &sd))
                     .expect("spawn worker")
@@ -535,12 +598,15 @@ impl WorkerPool {
 
     /// Request shutdown (workers must observe the flag or a closed queue).
     pub fn shutdown(&self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        // ord: Release — single-variable flag publication; workers poll
+        // with Acquire. Was SeqCst; nothing else is sequenced by it.
+        self.shutdown.store(true, Ordering::Release);
     }
 
     /// Wait for all workers to exit.
     pub fn join(self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        // ord: Release — same single-variable flag publication as shutdown.
+        self.shutdown.store(true, Ordering::Release);
         for h in self.handles {
             let _ = h.join();
         }
@@ -558,7 +624,7 @@ impl WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use crate::chk::sync::AtomicUsize;
 
     #[test]
     fn fifo_order() {
@@ -710,6 +776,7 @@ mod tests {
                 let c = count.clone();
                 std::thread::spawn(move || {
                     while q.pop().is_ok() {
+                        // ord: Relaxed — plain counter, read after join.
                         c.fetch_add(1, Ordering::Relaxed);
                     }
                 })
@@ -722,6 +789,7 @@ mod tests {
         for c in consumers {
             c.join().unwrap();
         }
+        // ord: Relaxed — all writers joined; no concurrency left.
         assert_eq!(count.load(Ordering::Relaxed), 1000);
     }
 
@@ -854,14 +922,17 @@ mod tests {
         let hits = Arc::new(AtomicUsize::new(0));
         let h2 = hits.clone();
         let pool = WorkerPool::spawn(3, "test", move |_id, sd| {
-            h2.fetch_add(1, Ordering::SeqCst);
-            while !sd.load(Ordering::SeqCst) {
+            // ord: Relaxed — counter read after join.
+            h2.fetch_add(1, Ordering::Relaxed);
+            // ord: Acquire — pairs with the Release store in shutdown/join.
+            while !sd.load(Ordering::Acquire) {
                 std::thread::sleep(Duration::from_millis(1));
             }
         });
         assert_eq!(pool.len(), 3);
         std::thread::sleep(Duration::from_millis(10));
         pool.join();
-        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        // ord: Relaxed — workers joined; no concurrency left.
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
     }
 }

@@ -22,8 +22,12 @@
 //! [`crate::metrics::GatewayMetrics`] counters and the chaos test
 //! asserts the exact open → half-open → closed sequence through them.
 
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`. The single-trial
+// admission protocol is model-checked in tests/chk_models.rs.
+use crate::chk::sync::Mutex;
+use crate::chk::time::Instant;
+use std::time::Duration;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BreakerState {

@@ -26,8 +26,11 @@
 use crate::analysis::{ErrorCode, ErrorMeta, ServeError};
 use crate::protocol::WireResult;
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`. The leader-drop
+// publication guarantee is model-checked in tests/chk_models.rs.
+use crate::chk::sync::{Arc, Condvar, Mutex};
+use crate::chk::time::Instant;
 
 /// What a dispatch produced for one word.
 pub type WordOutcome = Result<WireResult, ServeError>;

@@ -9,9 +9,11 @@
 //! connection; AMA/1 has no auth layer) and one gateway-wide
 //! [`InFlightCap`] guarding the shared backend dispatch path.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`.
+use crate::chk::sync::atomic::{AtomicUsize, Ordering};
+use crate::chk::sync::{Arc, Mutex};
+use crate::chk::time::Instant;
 
 /// Why a request was shed, with the metadata the typed reply carries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,6 +99,8 @@ impl InFlightCap {
     }
 
     pub fn in_flight(&self) -> usize {
+        // ord: Relaxed — monitoring read; no data is published via this
+        // counter, only an approximate occupancy figure.
         self.current.load(Ordering::Relaxed)
     }
 
@@ -106,11 +110,17 @@ impl InFlightCap {
         if !self.is_limited() {
             return Ok(InFlightGuard { cap: None });
         }
+        // ord: Relaxed — optimistic read; the CAS re-validates.
         let mut cur = self.current.load(Ordering::Relaxed);
         loop {
             if cur >= self.max {
                 return Err(Shed { retry_after_ms: 1, remaining: 0 });
             }
+            // ord: AcqRel — claiming a slot must not reorder with the
+            // request work it admits; pairs with the guard's release
+            // decrement so the cap is never transiently exceeded.
+            // ord: Relaxed on failure — the loop just retries with the
+            // freshly observed count.
             match self.current.compare_exchange_weak(
                 cur,
                 cur + 1,
@@ -131,6 +141,9 @@ pub struct InFlightGuard {
 impl Drop for InFlightGuard {
     fn drop(&mut self) {
         if let Some(cap) = &self.cap {
+            // ord: AcqRel — the release half publishes the completed
+            // request's effects before the slot is visibly free; pairs
+            // with try_acquire's AcqRel claim.
             cap.current.fetch_sub(1, Ordering::AcqRel);
         }
     }

@@ -52,9 +52,12 @@ use pool::{Pool, PoolConfig};
 use std::collections::HashMap;
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`.
+use crate::chk::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::chk::sync::Arc;
+use crate::chk::time::Instant;
+use std::time::Duration;
 
 /// Gateway policy knobs. Everything here maps to a CLI flag on
 /// `ama gateway` (see `cli.rs`).
@@ -128,11 +131,14 @@ impl Gateway {
             std::thread::Builder::new()
                 .name("gw-prober".to_string())
                 .spawn(move || {
-                    while !stop.load(Ordering::SeqCst) {
+                    // ord: Acquire — pairs with the Release store in
+                    // shutdown(); a plain stop flag, nothing cross-variable.
+                    while !stop.load(Ordering::Acquire) {
                         pool.probe_all();
                         // sleep in slices so shutdown is prompt
                         let mut slept = Duration::ZERO;
-                        while slept < interval && !stop.load(Ordering::SeqCst) {
+                        // ord: Acquire — same stop-flag pairing as above.
+                        while slept < interval && !stop.load(Ordering::Acquire) {
                             let slice = (interval - slept).min(Duration::from_millis(20));
                             std::thread::sleep(slice);
                             slept += slice;
@@ -244,11 +250,13 @@ impl Gateway {
         let _guard = match self.in_flight.try_acquire() {
             Ok(g) => g,
             Err(shed) => {
+                // ord: Relaxed — statistics counter, scraped asynchronously.
                 self.metrics.shed_overloaded.fetch_add(1, Ordering::Relaxed);
                 return Self::shed_reply(env.id, shed, "gateway at max in-flight envelopes");
             }
         };
         if let Err(shed) = bucket.try_take(env.words.len().max(1) as u64) {
+            // ord: Relaxed — statistics counter, scraped asynchronously.
             self.metrics.shed_rate_limited.fetch_add(1, Ordering::Relaxed);
             return Self::shed_reply(env.id, shed, "per-client word budget exhausted");
         }
@@ -306,6 +314,7 @@ impl Gateway {
                 }
             }
         }
+        // ord: Relaxed — statistics counter, scraped asynchronously.
         self.metrics.coalesced_words.fetch_add(coalesced, Ordering::Relaxed);
 
         // Group our leads by shard owner and dispatch every group —
@@ -423,11 +432,13 @@ impl Gateway {
         let _guard = match self.in_flight.try_acquire() {
             Ok(g) => g,
             Err(shed) => {
+                // ord: Relaxed — statistics counter, scraped asynchronously.
                 self.metrics.shed_overloaded.fetch_add(1, Ordering::Relaxed);
                 return Self::shed_reply(env.id, shed, "gateway at max in-flight envelopes");
             }
         };
         if let Err(shed) = bucket.try_take(env.words.len().max(1) as u64) {
+            // ord: Relaxed — statistics counter, scraped asynchronously.
             self.metrics.shed_rate_limited.fetch_add(1, Ordering::Relaxed);
             return Self::shed_reply(env.id, shed, "per-client word budget exhausted");
         }
@@ -459,7 +470,9 @@ impl Gateway {
 
     /// Stop the background prober (idempotent; also runs on drop).
     pub fn stop_prober(&mut self) {
-        self.prober_stop.store(true, Ordering::SeqCst);
+        // ord: Release — stop-flag publication; the prober polls with
+        // Acquire. Was SeqCst; nothing cross-variable here.
+        self.prober_stop.store(true, Ordering::Release);
         if let Some(h) = self.prober.take() {
             let _ = h.join();
         }
@@ -537,7 +550,9 @@ impl GatewayServer {
 
     /// Request shutdown and poke the accept loop.
     pub fn stop(&self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // ord: Release — stop-flag publication; accept loops poll with
+        // Acquire. Was SeqCst; nothing cross-variable here.
+        self.stop.store(true, Ordering::Release);
         if let Ok(addr) = self.listener.local_addr() {
             let _ = TcpStream::connect(addr);
         }
@@ -602,7 +617,8 @@ impl GatewayServer {
         *self.loop_stats.lock().unwrap() = loops.loop_stats();
         let accept_result = (|| -> Result<()> {
             for stream in self.listener.incoming() {
-                if self.stop.load(Ordering::SeqCst) {
+                // ord: Acquire — pairs with the Release store in stop().
+                if self.stop.load(Ordering::Acquire) {
                     break;
                 }
                 loops.inject(stream?);
@@ -630,7 +646,8 @@ impl GatewayServer {
         };
         let accept_result = (|| -> Result<()> {
             for stream in self.listener.incoming() {
-                if self.stop.load(Ordering::SeqCst) {
+                // ord: Acquire — pairs with the Release store in stop().
+                if self.stop.load(Ordering::Acquire) {
                     break;
                 }
                 let mut item = stream?;
@@ -638,7 +655,8 @@ impl GatewayServer {
                     match conn_q.try_push(item) {
                         Ok(()) => break,
                         Err((back, QueueError::WouldBlock)) => {
-                            if self.stop.load(Ordering::SeqCst) {
+                            // ord: Acquire — stop-flag poll (see stop()).
+                            if self.stop.load(Ordering::Acquire) {
                                 drop(back);
                                 break;
                             }
@@ -648,7 +666,8 @@ impl GatewayServer {
                         Err(_) => break,
                     }
                 }
-                if self.stop.load(Ordering::SeqCst) {
+                // ord: Acquire — stop-flag poll (see stop()).
+                if self.stop.load(Ordering::Acquire) {
                     break;
                 }
             }
@@ -673,9 +692,11 @@ fn handle_gateway_conn(
     let mut buf: Vec<u8> = Vec::with_capacity(128);
     let mut mode = ConnMode::Unknown;
     let bucket = gw.client_bucket();
+    // ord: Relaxed — seed counter; only uniqueness matters, not order.
     let mut rng = SplitMix64::new(CONN_SEED.fetch_add(0x9E37_79B9, Ordering::Relaxed));
     loop {
-        if shutdown.load(Ordering::SeqCst) {
+        // ord: Acquire — stop-flag poll, pairs with the Release in stop().
+        if shutdown.load(Ordering::Acquire) {
             shutdown_goodbye(&mut writer, mode);
             return Ok(());
         }
@@ -824,6 +845,7 @@ impl ConnHandler for GwLoopHandler {
             token,
             mode: ConnMode::Unknown,
             bucket: Arc::new(self.gw.client_bucket()),
+            // ord: Relaxed — seed counter; only uniqueness matters.
             seed: CONN_SEED.fetch_add(0x9E37_79B9, Ordering::Relaxed),
             seq: 0,
             in_flight: false,
@@ -1080,6 +1102,7 @@ mod tests {
         let accepted: u64 = server
             .loop_stats()
             .iter()
+            // ord: Relaxed — statistics read after the loops quiesced.
             .map(|s| s.accepted.load(Ordering::Relaxed))
             .sum();
         assert!(accepted >= 1, "event path must have owned the connection");

@@ -30,9 +30,12 @@ use crate::metrics::GatewayMetrics;
 use crate::protocol::{Envelope, Reply, WireResult};
 use crate::rng::SplitMix64;
 use std::net::SocketAddr;
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`.
+use crate::chk::sync::atomic::Ordering;
+use crate::chk::sync::{Arc, Mutex};
+use crate::chk::time::Instant;
+use std::time::Duration;
 
 /// Pool policy knobs (a subset of `GatewayConfig`, see `mod.rs`).
 #[derive(Clone, Copy, Debug)]
@@ -171,6 +174,7 @@ impl Pool {
             Some(Transition::Closed) => &self.metrics.breaker_closed,
             None => return,
         };
+        // ord: Relaxed — statistics counter, scraped asynchronously.
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -209,10 +213,12 @@ impl Pool {
                     Admission::Allowed => {}
                 }
                 if failed_over {
+                    // ord: Relaxed — statistics counter, scraped asynchronously.
                     self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
                     failed_over = false; // count once per endpoint actually tried
                 }
                 if attempt > 0 {
+                    // ord: Relaxed — statistics counter, scraped asynchronously.
                     self.metrics.retries.fetch_add(1, Ordering::Relaxed);
                 }
                 match self.attempt(ep, words, opts, deadline) {
@@ -248,7 +254,7 @@ impl Pool {
                                     min_retry_after,
                                 ));
                             }
-                            std::thread::sleep(jittered);
+                            crate::chk::thread::sleep(jittered);
                         }
                     }
                 }
@@ -256,6 +262,7 @@ impl Pool {
         }
         // Every candidate was down, circuit-open, or saturated. A
         // saturated replica is the most actionable story to tell.
+        // ord: Relaxed — statistics counter, scraped asynchronously.
         self.metrics.unavailable.fetch_add(1, Ordering::Relaxed);
         match saturated {
             Some(err) => Err(err),
@@ -310,10 +317,12 @@ impl Pool {
                     Admission::Allowed => {}
                 }
                 if failed_over {
+                    // ord: Relaxed — statistics counter, scraped asynchronously.
                     self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
                     failed_over = false;
                 }
                 if attempt > 0 {
+                    // ord: Relaxed — statistics counter, scraped asynchronously.
                     self.metrics.retries.fetch_add(1, Ordering::Relaxed);
                 }
                 match self.attempt_forward(ep, env, deadline) {
@@ -356,12 +365,13 @@ impl Pool {
                                     min_retry_after,
                                 ));
                             }
-                            std::thread::sleep(jittered);
+                            crate::chk::thread::sleep(jittered);
                         }
                     }
                 }
             }
         }
+        // ord: Relaxed — statistics counter, scraped asynchronously.
         self.metrics.unavailable.fetch_add(1, Ordering::Relaxed);
         Err(self.unavailable(
             if last_err.is_empty() {
@@ -509,6 +519,7 @@ impl Pool {
             if ok {
                 self.note(ep.breaker.record_success());
             } else {
+                // ord: Relaxed — statistics counter, scraped asynchronously.
                 self.metrics.probe_failures.fetch_add(1, Ordering::Relaxed);
                 ep.flush_idle();
                 self.note(ep.breaker.record_failure());

@@ -26,7 +26,7 @@ use crate::exec::{BoundedQueue, WorkerPool};
 use crate::light::VotingAnalyzer;
 use crate::protocol::MAX_WORDS_PER_ENVELOPE;
 use crate::stemmer::MatchKind;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::chk::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -371,8 +371,10 @@ pub fn run(stages: Vec<Box<dyn Stage>>, inputs: Vec<DocUnit>, cfg: &PipelineConf
             while let Ok(unit) = q_in.pop() {
                 let t0 = Instant::now();
                 let unit = stage.run(unit);
+                // ord: Relaxed — stats
                 st.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                st.units.fetch_add(1, Ordering::Relaxed);
+                st.units.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+                // ord: Relaxed — stats
                 st.words_out.fetch_add(unit.words.len() as u64, Ordering::Relaxed);
                 if q_out.push(unit).is_err() {
                     break; // downstream torn down — nothing left to feed
@@ -421,9 +423,9 @@ pub fn run(stages: Vec<Box<dyn Stage>>, inputs: Vec<DocUnit>, cfg: &PipelineConf
         .zip(&stats)
         .map(|(name, st)| StageReport {
             name,
-            units: st.units.load(Ordering::Relaxed),
-            words_out: st.words_out.load(Ordering::Relaxed),
-            busy_nanos: st.busy_nanos.load(Ordering::Relaxed),
+            units: st.units.load(Ordering::Relaxed), // ord: Relaxed — stats
+            words_out: st.words_out.load(Ordering::Relaxed), // ord: Relaxed — stats
+            busy_nanos: st.busy_nanos.load(Ordering::Relaxed), // ord: Relaxed — stats
         })
         .collect();
 

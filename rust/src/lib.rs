@@ -314,10 +314,31 @@
 //!   `ama loadtest --conns 1024 --idle-frac 0.95` drives the C10K
 //!   profile ([`bench::run_mostly_idle_load`]).
 
+//! ## Concurrency checking (PR 10)
+//!
+//! The lock-free core (slab/queue in [`exec`], the seqlock
+//! [`cache::StemCache`], gateway breaker/coalescer, event-loop
+//! stop/drain) is verified by an in-repo, dependency-free loom-style
+//! model checker, [`chk`]. All concurrent modules import their
+//! atomics, mutexes, condvars and thread ops from the `chk::sync` /
+//! `chk::thread` facade: a pure `std` re-export in normal builds
+//! (zero overhead), an instrumented shadow layer under `--features
+//! chk` that explores thread interleavings with a deterministic
+//! DFS/bounded-preemption scheduler and models `Relaxed` vs
+//! `Acquire/Release` vs `SeqCst` visibility explicitly (vector
+//! clocks + store histories + fences). Exhaustive small-bound models
+//! for the riskiest protocols live in `rust/tests/chk_models.rs`
+//! (`make chk`); every `Ordering::` site carries a `// ord:`
+//! justification enforced by `scripts/lint_atomics.py`
+//! (`make lint-atomics`); `docs/CONCURRENCY.md` catalogues the
+//! structures, their state machines and the per-atomic ordering
+//! contracts.
+
 pub mod analysis;
 pub mod bench;
 pub mod cache;
 pub mod chars;
+pub mod chk;
 pub mod cli;
 pub mod client;
 pub mod coordinator;

@@ -1106,7 +1106,7 @@ fn render_conn_stats(out: &mut ama::metrics::PromText, stats: &ama::server::Conn
 /// blocking path — renders nothing).
 #[cfg(unix)]
 fn render_loop_stats(out: &mut ama::metrics::PromText, loops: &[Arc<ama::net::LoopStats>]) {
-    use std::sync::atomic::Ordering::Relaxed;
+    use ama::chk::sync::atomic::Ordering;
     if loops.is_empty() {
         return;
     }
@@ -1119,37 +1119,37 @@ fn render_loop_stats(out: &mut ama::metrics::PromText, loops: &[Arc<ama::net::Lo
     out.labeled_counter(
         "ama_loop_connections_accepted_total",
         "Connections handed to each event loop",
-        &rows(loops, |s| s.accepted.load(Relaxed)),
+        &rows(loops, |s| s.accepted.load(Ordering::Relaxed)), // ord: Relaxed — stats
     );
     out.labeled_gauge(
         "ama_loop_connections_open",
         "Connections currently registered per event loop",
-        &rows(loops, |s| s.open.load(Relaxed)),
+        &rows(loops, |s| s.open.load(Ordering::Relaxed)), // ord: Relaxed — stats
     );
     out.labeled_counter(
         "ama_loop_readiness_events_total",
         "Readiness events delivered per event loop",
-        &rows(loops, |s| s.readiness_events.load(Relaxed)),
+        &rows(loops, |s| s.readiness_events.load(Ordering::Relaxed)), // ord: Relaxed — stats
     );
     out.labeled_counter(
         "ama_loop_wakeups_total",
         "Waker drains per event loop (stop/inject/completion pokes)",
-        &rows(loops, |s| s.wakeups.load(Relaxed)),
+        &rows(loops, |s| s.wakeups.load(Ordering::Relaxed)), // ord: Relaxed — stats
     );
     out.labeled_counter(
         "ama_loop_reads_total",
         "read(2) calls per event loop",
-        &rows(loops, |s| s.reads.load(Relaxed)),
+        &rows(loops, |s| s.reads.load(Ordering::Relaxed)), // ord: Relaxed — stats
     );
     out.labeled_counter(
         "ama_loop_writes_total",
         "write(2) calls per event loop",
-        &rows(loops, |s| s.writes.load(Relaxed)),
+        &rows(loops, |s| s.writes.load(Ordering::Relaxed)), // ord: Relaxed — stats
     );
     out.labeled_counter(
         "ama_loop_read_pauses_total",
         "Backpressure transitions: reads paused on slow readers, per loop",
-        &rows(loops, |s| s.pauses.load(Relaxed)),
+        &rows(loops, |s| s.pauses.load(Ordering::Relaxed)), // ord: Relaxed — stats
     );
 }
 

@@ -11,10 +11,13 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`.
+use crate::chk::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::chk::sync::{Arc, Mutex};
+use crate::chk::thread::JoinHandle;
+use crate::chk::time::Instant;
+use std::time::Duration;
 
 /// Execution-time / throughput measurement of a finished run.
 #[derive(Clone, Copy, Debug)]
@@ -67,14 +70,14 @@ impl LatencyHistogram {
     pub fn record_us(&self, us: u64) {
         let us = us.max(1);
         let bucket = (63 - us.leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
-        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
     }
 
     /// Per-bucket counts (index `i` covers `[2^i, 2^(i+1))` µs).
     pub fn counts(&self) -> [u64; LATENCY_BUCKETS] {
         let mut out = [0u64; LATENCY_BUCKETS];
         for (o, b) in out.iter_mut().zip(&self.buckets) {
-            *o = b.load(Ordering::Relaxed);
+            *o = b.load(Ordering::Relaxed); // ord: Relaxed — stats
         }
         out
     }
@@ -148,20 +151,20 @@ impl ServiceMetrics {
     }
 
     pub fn record_batch(&self, words: u64) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batched_words.fetch_add(words, Ordering::Relaxed);
-        self.words.fetch_add(words, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+        self.batched_words.fetch_add(words, Ordering::Relaxed); // ord: Relaxed — stats
+        self.words.fetch_add(words, Ordering::Relaxed); // ord: Relaxed — stats
     }
 
     pub fn record_latency(&self, d: Duration) {
         self.latency.record(d);
-        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
     }
 
     /// Attribute `words` to the algorithm that analyzed them (per-batch,
     /// from the coordinator's per-`EngineOpts` dispatch groups).
     pub fn record_algorithm_words(&self, algo: crate::analysis::Algorithm, words: u64) {
-        self.algo_words[algo as usize].fetch_add(words, Ordering::Relaxed);
+        self.algo_words[algo as usize].fetch_add(words, Ordering::Relaxed); // ord: Relaxed — stats
     }
 
     /// The request-latency histogram (shared shape with client-side
@@ -171,10 +174,11 @@ impl ServiceMetrics {
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
+        let b = self.batches.load(Ordering::Relaxed); // ord: Relaxed — stats
         if b == 0 {
             return 0.0;
         }
+        // ord: Relaxed — statistics counter; no ordering required.
         self.batched_words.load(Ordering::Relaxed) as f64 / b as f64
     }
 
@@ -195,26 +199,27 @@ impl ServiceMetrics {
             ErrorCode::BadWord => &self.rejected_bad_word,
             _ => return,
         }
-        .fetch_add(1, Ordering::Relaxed);
+        .fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            words: self.words.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            queue_full_events: self.queue_full_events.load(Ordering::Relaxed),
-            slab_waits: self.slab_waits.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed), // ord: Relaxed — stats
+            words: self.words.load(Ordering::Relaxed), // ord: Relaxed — stats
+            batches: self.batches.load(Ordering::Relaxed), // ord: Relaxed — stats
+            errors: self.errors.load(Ordering::Relaxed), // ord: Relaxed — stats
+            queue_full_events: self.queue_full_events.load(Ordering::Relaxed), // ord: Relaxed — stats
+            slab_waits: self.slab_waits.load(Ordering::Relaxed), // ord: Relaxed — stats
+            // ord: Relaxed — statistics counter; no ordering required.
             rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
-            rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
-            rejected_bad_word: self.rejected_bad_word.load(Ordering::Relaxed),
-            cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed), // ord: Relaxed — stats
+            rejected_bad_word: self.rejected_bad_word.load(Ordering::Relaxed), // ord: Relaxed — stats
+            cache_hits: self.cache_hits.load(Ordering::Relaxed), // ord: Relaxed — stats
+            cache_misses: self.cache_misses.load(Ordering::Relaxed), // ord: Relaxed — stats
             algo_words: {
                 let mut a = [0u64; crate::analysis::Algorithm::ALL.len()];
                 for (o, c) in a.iter_mut().zip(&self.algo_words) {
-                    *o = c.load(Ordering::Relaxed);
+                    *o = c.load(Ordering::Relaxed); // ord: Relaxed — stats
                 }
                 a
             },
@@ -341,13 +346,13 @@ impl GatewayMetrics {
     }
 
     pub fn record_envelope(&self, words: u64) {
-        self.envelopes.fetch_add(1, Ordering::Relaxed);
-        self.words.fetch_add(words, Ordering::Relaxed);
+        self.envelopes.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+        self.words.fetch_add(words, Ordering::Relaxed); // ord: Relaxed — stats
     }
 
     pub fn record_dispatch(&self, words: u64) {
-        self.backend_dispatches.fetch_add(1, Ordering::Relaxed);
-        self.backend_words.fetch_add(words, Ordering::Relaxed);
+        self.backend_dispatches.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+        self.backend_words.fetch_add(words, Ordering::Relaxed); // ord: Relaxed — stats
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -360,20 +365,22 @@ impl GatewayMetrics {
 
     pub fn snapshot(&self) -> GatewaySnapshot {
         GatewaySnapshot {
-            envelopes: self.envelopes.load(Ordering::Relaxed),
-            words: self.words.load(Ordering::Relaxed),
+            envelopes: self.envelopes.load(Ordering::Relaxed), // ord: Relaxed — stats
+            words: self.words.load(Ordering::Relaxed), // ord: Relaxed — stats
+            // ord: Relaxed — statistics counter; no ordering required.
             backend_dispatches: self.backend_dispatches.load(Ordering::Relaxed),
-            backend_words: self.backend_words.load(Ordering::Relaxed),
-            coalesced_words: self.coalesced_words.load(Ordering::Relaxed),
-            retries: self.retries.load(Ordering::Relaxed),
-            failovers: self.failovers.load(Ordering::Relaxed),
-            breaker_opened: self.breaker_opened.load(Ordering::Relaxed),
+            backend_words: self.backend_words.load(Ordering::Relaxed), // ord: Relaxed — stats
+            coalesced_words: self.coalesced_words.load(Ordering::Relaxed), // ord: Relaxed — stats
+            retries: self.retries.load(Ordering::Relaxed), // ord: Relaxed — stats
+            failovers: self.failovers.load(Ordering::Relaxed), // ord: Relaxed — stats
+            breaker_opened: self.breaker_opened.load(Ordering::Relaxed), // ord: Relaxed — stats
+            // ord: Relaxed — statistics counter; no ordering required.
             breaker_half_opened: self.breaker_half_opened.load(Ordering::Relaxed),
-            breaker_closed: self.breaker_closed.load(Ordering::Relaxed),
-            shed_rate_limited: self.shed_rate_limited.load(Ordering::Relaxed),
-            shed_overloaded: self.shed_overloaded.load(Ordering::Relaxed),
-            unavailable: self.unavailable.load(Ordering::Relaxed),
-            probe_failures: self.probe_failures.load(Ordering::Relaxed),
+            breaker_closed: self.breaker_closed.load(Ordering::Relaxed), // ord: Relaxed — stats
+            shed_rate_limited: self.shed_rate_limited.load(Ordering::Relaxed), // ord: Relaxed — stats
+            shed_overloaded: self.shed_overloaded.load(Ordering::Relaxed), // ord: Relaxed — stats
+            unavailable: self.unavailable.load(Ordering::Relaxed), // ord: Relaxed — stats
+            probe_failures: self.probe_failures.load(Ordering::Relaxed), // ord: Relaxed — stats
             p50_us: self.latency.percentile_us(0.50),
             p90_us: self.latency.percentile_us(0.90),
             p99_us: self.latency.percentile_us(0.99),
@@ -664,9 +671,11 @@ impl MetricsServer {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop_t = stop.clone();
-        let join = std::thread::Builder::new().name("metrics-http".into()).spawn(move || {
+        let join = crate::chk::thread::Builder::new().name("metrics-http".into()).spawn(move || {
             for stream in listener.incoming() {
-                if stop_t.load(Ordering::SeqCst) {
+                // ord: Acquire — stop-flag poll; pairs with the Release
+                // store in stop().
+                if stop_t.load(Ordering::Acquire) {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
@@ -682,7 +691,9 @@ impl MetricsServer {
 
     /// Stop the endpoint: flag + self-poke + join.
     pub fn stop(&self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // ord: Release — stop-flag publication; the accept loop polls
+        // with Acquire. Was SeqCst; nothing cross-variable here.
+        self.stop.store(true, Ordering::Release);
         let _ = TcpStream::connect(self.addr);
         if let Some(j) = self.join.lock().unwrap().take() {
             let _ = j.join();
@@ -801,8 +812,8 @@ mod tests {
     fn cache_counters_and_hit_rate() {
         let s = ServiceMetrics::new();
         assert_eq!(s.snapshot().cache_hit_rate(), 0.0, "no probes → 0.0");
-        s.cache_hits.fetch_add(3, Ordering::Relaxed);
-        s.cache_misses.fetch_add(1, Ordering::Relaxed);
+        s.cache_hits.fetch_add(3, Ordering::Relaxed); // ord: Relaxed — stats
+        s.cache_misses.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
         let snap = s.snapshot();
         assert_eq!(snap.cache_hits, 3);
         assert_eq!(snap.cache_misses, 1);
@@ -817,12 +828,12 @@ mod tests {
         g.record_envelope(8);
         g.record_envelope(4);
         g.record_dispatch(9);
-        g.coalesced_words.fetch_add(3, Ordering::Relaxed);
-        g.breaker_opened.fetch_add(1, Ordering::Relaxed);
-        g.breaker_half_opened.fetch_add(1, Ordering::Relaxed);
-        g.breaker_closed.fetch_add(1, Ordering::Relaxed);
-        g.shed_rate_limited.fetch_add(2, Ordering::Relaxed);
-        g.unavailable.fetch_add(5, Ordering::Relaxed);
+        g.coalesced_words.fetch_add(3, Ordering::Relaxed); // ord: Relaxed — stats
+        g.breaker_opened.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+        g.breaker_half_opened.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+        g.breaker_closed.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+        g.shed_rate_limited.fetch_add(2, Ordering::Relaxed); // ord: Relaxed — stats
+        g.unavailable.fetch_add(5, Ordering::Relaxed); // ord: Relaxed — stats
         g.record_latency(Duration::from_micros(100));
         let snap = g.snapshot();
         assert_eq!(snap.envelopes, 2);
@@ -840,8 +851,8 @@ mod tests {
     #[test]
     fn snapshot_saturation_counters_roundtrip() {
         let s = ServiceMetrics::new();
-        s.queue_full_events.fetch_add(3, Ordering::Relaxed);
-        s.slab_waits.fetch_add(2, Ordering::Relaxed);
+        s.queue_full_events.fetch_add(3, Ordering::Relaxed); // ord: Relaxed — stats
+        s.slab_waits.fetch_add(2, Ordering::Relaxed); // ord: Relaxed — stats
         let snap = s.snapshot();
         assert_eq!(snap.queue_full_events, 3);
         assert_eq!(snap.slab_waits, 2);
@@ -869,8 +880,8 @@ mod tests {
         let s = ServiceMetrics::new();
         s.record_batch(12);
         s.record_latency(Duration::from_micros(100));
-        s.cache_hits.fetch_add(3, Ordering::Relaxed);
-        s.cache_misses.fetch_add(1, Ordering::Relaxed);
+        s.cache_hits.fetch_add(3, Ordering::Relaxed); // ord: Relaxed — stats
+        s.cache_misses.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
         s.record_algorithm_words(Algorithm::Voting, 12);
         let g = GatewayMetrics::new();
         g.record_envelope(5);

@@ -29,10 +29,14 @@ use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
 use std::os::unix::io::AsRawFd;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::thread::{self, JoinHandle};
-use std::time::{Duration, Instant};
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`. The completion
+// mailbox + waker handshake is model-checked in tests/chk_models.rs.
+use crate::chk::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::chk::sync::{Arc, Mutex};
+use crate::chk::thread::{self, JoinHandle};
+use crate::chk::time::Instant;
+use std::time::Duration;
 
 /// Poll timeout while idle — purely a safety net; every real transition
 /// arrives via the waker.
@@ -196,14 +200,16 @@ impl<H: ConnHandler> LoopCore<H> {
             }
             self.stats
                 .readiness_events
-                .fetch_add(events.len() as u64, Ordering::Relaxed);
+                .fetch_add(events.len() as u64, Ordering::Relaxed); // ord: Relaxed — stats
             touched.clear();
             if events.iter().any(|e| e.token == WAKE_TOKEN) {
                 self.waker.drain();
-                self.stats.wakeups.fetch_add(1, Ordering::Relaxed);
+                self.stats.wakeups.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
             }
             self.drain_injector(draining_since.is_some(), &mut touched);
-            if draining_since.is_none() && self.stop.load(Ordering::SeqCst) {
+            // ord: Acquire — stop-flag poll; pairs with the Release
+            // store in EventLoops::shutdown. Was SeqCst.
+            if draining_since.is_none() && self.stop.load(Ordering::Acquire) {
                 draining_since = Some(Instant::now());
                 self.begin_drain(&mut touched);
             }
@@ -239,8 +245,8 @@ impl<H: ConnHandler> LoopCore<H> {
                 self.handler.on_close(&mut state);
                 continue;
             }
-            self.stats.accepted.fetch_add(1, Ordering::Relaxed);
-            self.stats.open.fetch_add(1, Ordering::Relaxed);
+            self.stats.accepted.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+            self.stats.open.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
             let mut conn = Conn {
                 stream,
                 state,
@@ -293,7 +299,7 @@ impl<H: ConnHandler> LoopCore<H> {
         {
             let conn = self.conns.get_mut(&ev.token).unwrap();
             if (ev.readable || ev.hangup) && !conn.eof && !conn.closing && !conn.paused {
-                self.stats.reads.fetch_add(1, Ordering::Relaxed);
+                self.stats.reads.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 match (&conn.stream).read(&mut self.read_buf) {
                     Ok(0) => {
                         conn.eof = true;
@@ -367,7 +373,7 @@ impl<H: ConnHandler> LoopCore<H> {
         {
             let Some(conn) = self.conns.get_mut(&token) else { return };
             while !conn.wr.is_empty() {
-                self.stats.writes.fetch_add(1, Ordering::Relaxed);
+                self.stats.writes.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 match (&conn.stream).write(conn.wr.pending()) {
                     Ok(0) => {
                         fatal = true;
@@ -396,7 +402,7 @@ impl<H: ConnHandler> LoopCore<H> {
         let conn = self.conns.get_mut(&token).unwrap();
         if !conn.paused && conn.wr.over_high_water() {
             conn.paused = true;
-            self.stats.pauses.fetch_add(1, Ordering::Relaxed);
+            self.stats.pauses.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
         } else if conn.paused && conn.wr.below_low_water() {
             conn.paused = false;
         }
@@ -418,7 +424,7 @@ impl<H: ConnHandler> LoopCore<H> {
         if let Some(mut conn) = self.conns.remove(&token) {
             let _ = self.poller.deregister(conn.stream.as_raw_fd());
             self.handler.on_close(&mut conn.state);
-            self.stats.open.fetch_sub(1, Ordering::Relaxed);
+            self.stats.open.fetch_sub(1, Ordering::Relaxed); // ord: Relaxed — stats
         }
     }
 }
@@ -492,6 +498,8 @@ impl EventLoops {
 
     /// Hand an accepted connection to the next loop (round-robin).
     pub fn inject(&self, stream: TcpStream) {
+        // ord: Relaxed — round-robin counter; only atomicity matters,
+        // the injector mutex orders the handoff itself.
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.handles.len();
         self.handles[i].injector.lock().unwrap().push(stream);
         self.handles[i].waker.wake();
@@ -500,7 +508,8 @@ impl EventLoops {
     /// Stop every loop: set the shared flag, wake them, join. Each loop
     /// queues goodbyes and gets [`STOP_DRAIN_GRACE`] to flush.
     pub fn shutdown(&self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // ord: Release — stop-flag publication; loops poll with Acquire.
+        self.stop.store(true, Ordering::Release);
         for h in &self.handles {
             h.waker.wake();
         }
@@ -597,7 +606,9 @@ mod tests {
         line.clear();
         assert_eq!(r.read_line(&mut line).unwrap(), 0);
         let stats = loops.loop_stats();
+        // ord: Relaxed — statistics counter; no ordering required.
         assert_eq!(stats[0].accepted.load(Ordering::Relaxed), 1);
+        // ord: Relaxed — statistics counter; no ordering required.
         assert_eq!(stats[0].open.load(Ordering::Relaxed), 0);
         loops.shutdown();
     }

@@ -57,12 +57,14 @@ use crate::exec::{BoundedQueue, QueueError};
 use anyhow::Result;
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+// Concurrency facade (PR 10): std re-exports in normal builds, the chk
+// model-checker instrumentation under `--features chk`.
+use crate::chk::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::chk::sync::Arc;
 use std::time::Duration;
 
 #[cfg(unix)]
-use std::sync::Mutex;
+use crate::chk::sync::Mutex;
 
 /// Serving-path policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -116,15 +118,19 @@ pub struct ConnStats {
 
 impl ConnStats {
     pub fn accepted(&self) -> u64 {
-        self.accepted.load(Ordering::SeqCst)
+        // ord: Relaxed — monitoring counters; tests read them after the
+        // server quiesced (joins/`stop` provide the ordering). Was SeqCst.
+        self.accepted.load(Ordering::Relaxed)
     }
 
     pub fn active(&self) -> u64 {
-        self.active.load(Ordering::SeqCst)
+        // ord: Relaxed — see accepted().
+        self.active.load(Ordering::Relaxed)
     }
 
     pub fn completed(&self) -> u64 {
-        self.completed.load(Ordering::SeqCst)
+        // ord: Relaxed — see accepted().
+        self.completed.load(Ordering::Relaxed)
     }
 }
 
@@ -190,7 +196,8 @@ impl Server {
     /// `serve_forever` then drains its ingest (event loops or handler
     /// pool) before returning.
     pub fn stop(&self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // ord: Release — stop-flag publication; pollers use Acquire.
+        self.stop.store(true, Ordering::Release);
         if let Ok(addr) = self.listener.local_addr() {
             let _ = TcpStream::connect(addr);
         }
@@ -239,11 +246,12 @@ impl Server {
         *self.loop_stats.lock().unwrap() = loops.loop_stats();
         let accept_result = (|| -> Result<()> {
             for stream in self.listener.incoming() {
-                if self.stop.load(Ordering::SeqCst) {
+                // ord: Acquire — stop-flag poll; pairs with the Release store.
+                if self.stop.load(Ordering::Acquire) {
                     break;
                 }
                 let stream = stream?;
-                self.stats.accepted.fetch_add(1, Ordering::SeqCst);
+                self.stats.accepted.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 loops.inject(stream);
             }
             Ok(())
@@ -264,22 +272,23 @@ impl Server {
             let index = self.index.clone();
             crate::exec::WorkerPool::spawn(self.cfg.handlers.max(1), "conn-handler", move |_id, sd| {
                 while let Ok(stream) = conn_q.pop() {
-                    stats.active.fetch_add(1, Ordering::SeqCst);
+                    stats.active.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                     if let Err(e) = handle_conn(stream, &handle, sd, &cfg, &index) {
                         eprintln!("connection error: {e:#}");
                     }
-                    stats.active.fetch_sub(1, Ordering::SeqCst);
-                    stats.completed.fetch_add(1, Ordering::SeqCst);
+                    stats.active.fetch_sub(1, Ordering::Relaxed); // ord: Relaxed — stats
+                    stats.completed.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 }
             })
         };
         let accept_result = (|| -> Result<()> {
             for stream in self.listener.incoming() {
-                if self.stop.load(Ordering::SeqCst) {
+                // ord: Acquire — stop-flag poll; pairs with the Release store.
+                if self.stop.load(Ordering::Acquire) {
                     break;
                 }
                 let stream = stream?;
-                self.stats.accepted.fetch_add(1, Ordering::SeqCst);
+                self.stats.accepted.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
                 // Stop-aware hand-off: a plain blocking push could wedge
                 // here with a full backlog while every handler is busy —
                 // and handlers only exit after this loop returns.
@@ -288,7 +297,8 @@ impl Server {
                     match conn_q.try_push(item) {
                         Ok(()) => break,
                         Err((back, QueueError::WouldBlock)) => {
-                            if self.stop.load(Ordering::SeqCst) {
+                            // ord: Acquire — stop-flag poll; pairs with the Release store.
+                            if self.stop.load(Ordering::Acquire) {
                                 drop(back); // shed the connection; stopping
                                 break;
                             }
@@ -298,7 +308,8 @@ impl Server {
                         Err(_) => break,
                     }
                 }
-                if self.stop.load(Ordering::SeqCst) {
+                // ord: Acquire — stop-flag poll; pairs with the Release store.
+                if self.stop.load(Ordering::Acquire) {
                     break;
                 }
             }
@@ -411,7 +422,8 @@ pub(crate) fn read_frame(
                 if e.kind() == io::ErrorKind::WouldBlock
                     || e.kind() == io::ErrorKind::TimedOut =>
             {
-                if shutdown.load(Ordering::SeqCst) {
+                // ord: Acquire — stop-flag poll; pairs with the Release store.
+                if shutdown.load(Ordering::Acquire) {
                     return Ok(Frame::Stopped);
                 }
             }
@@ -483,7 +495,7 @@ impl crate::net::ConnHandler for ServeLoopHandler {
     type ConnState = ConnMode;
 
     fn on_accept(&mut self, _token: u64) -> ConnMode {
-        self.stats.active.fetch_add(1, Ordering::SeqCst);
+        self.stats.active.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
         ConnMode::Unknown
     }
 
@@ -589,8 +601,8 @@ impl crate::net::ConnHandler for ServeLoopHandler {
     }
 
     fn on_close(&mut self, _mode: &mut ConnMode) {
-        self.stats.active.fetch_sub(1, Ordering::SeqCst);
-        self.stats.completed.fetch_add(1, Ordering::SeqCst);
+        self.stats.active.fetch_sub(1, Ordering::Relaxed); // ord: Relaxed — stats
+        self.stats.completed.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
     }
 }
 
@@ -631,7 +643,8 @@ fn handle_conn(
         // A continuously-sending client never hits the timeout branch
         // inside read_frame, so the stop flag must also be polled between
         // batches.
-        if shutdown.load(Ordering::SeqCst) {
+        // ord: Acquire — stop-flag poll; pairs with the Release store.
+        if shutdown.load(Ordering::Acquire) {
             shutdown_goodbye(&mut writer, mode);
             return Ok(());
         }
@@ -794,7 +807,7 @@ mod tests {
         line.clear();
         assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server should close");
 
-        stop.store(true, Ordering::SeqCst);
+        stop.store(true, Ordering::Release); // ord: Release — stop flag
         // poke the accept loop so it observes the flag
         let _ = TcpStream::connect(addr);
         t.join().unwrap().unwrap();
@@ -834,7 +847,7 @@ mod tests {
         }
         conn.write_all(b"\n").unwrap();
 
-        stop.store(true, Ordering::SeqCst);
+        stop.store(true, Ordering::Release); // ord: Release — stop flag
         let _ = TcpStream::connect(addr);
         t.join().unwrap().unwrap();
         coord.shutdown();
@@ -890,7 +903,7 @@ mod tests {
         let res = client.analyze(&["قال"], &AnalyzeOptions::default()).unwrap();
         assert_eq!(res[0].root, "قول");
 
-        stop.store(true, Ordering::SeqCst);
+        stop.store(true, Ordering::Release); // ord: Release — stop flag
         let _ = TcpStream::connect(addr);
         t.join().unwrap().unwrap();
         coord.shutdown();
@@ -923,7 +936,7 @@ mod tests {
         assert!(line.contains("قول"), "{line}");
         conn.write_all(b"\n").unwrap();
 
-        stop.store(true, Ordering::SeqCst);
+        stop.store(true, Ordering::Release); // ord: Release — stop flag
         let _ = TcpStream::connect(addr);
         t.join().unwrap().unwrap();
         coord.shutdown();
@@ -1080,7 +1093,7 @@ mod tests {
             other => panic!("expected results, got {other:?}"),
         }
 
-        stop.store(true, Ordering::SeqCst);
+        stop.store(true, Ordering::Release); // ord: Release — stop flag
         let _ = TcpStream::connect(addr);
         t.join().unwrap().unwrap();
         coord.shutdown();
@@ -1153,6 +1166,7 @@ mod tests {
         let pauses: u64 = server
             .loop_stats()
             .iter()
+            // ord: Relaxed — statistics read after the loops quiesced.
             .map(|s| s.pauses.load(Ordering::Relaxed))
             .sum();
         assert!(pauses > 0, "slow reader never tripped the high-water pause");

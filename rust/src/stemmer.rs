@@ -44,8 +44,8 @@
 use crate::chars::{self, AffixProfile, ArabicWord, PackedWord, MAX_PREFIX, MAX_SUFFIX, MAX_WORD};
 use crate::exec::{BoundedQueue, WorkerPool};
 use crate::roots::RootSet;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use crate::chk::sync::atomic::{AtomicUsize, Ordering};
+use crate::chk::sync::Arc;
 
 /// How a root was found — mirrors `alphabet.py::KIND_*`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -650,6 +650,8 @@ impl Stemmer {
             move |_id, _shutdown| {
                 let stemmer = Stemmer::new(roots.clone(), config);
                 loop {
+                    // ord: Relaxed — work-stealing cursor; only the RMW's
+                    // atomicity matters, chunk results flow through the queue.
                     let start = cursor.fetch_add(chunk, Ordering::Relaxed);
                     if start >= shared.len() {
                         break;

@@ -1,0 +1,505 @@
+//! Exhaustive small-bound concurrency models for the lock-free core
+//! (PR 10), run under the vendored `chk` explorer:
+//!
+//! ```text
+//! cargo test --features chk --test chk_models      # `make chk`
+//! ```
+//!
+//! Each `chk::model(..)` closure is executed once per explored thread
+//! interleaving (DFS over every scheduling decision and every
+//! coherence-allowed load value — see `rust/src/chk/`), so a plain
+//! `assert!` inside the closure is a claim over *all* interleavings at
+//! this bound. The `model_expect_failure` tests are the checker's
+//! sensitivity proof: they deliberately weaken an ordering the
+//! production code relies on and assert that exploration *does* find a
+//! failing schedule — if the checker ever stops catching those, these
+//! tests go red before the production protocols do.
+//!
+//! Models stay tiny (2–3 threads, ≤6 visible ops each) on purpose:
+//! loom-style exploration is exponential in visible ops, and every
+//! protocol bug class we care about (lost update, torn seqlock read,
+//! missed wakeup, double recycle, dropped close) already shows up at
+//! this bound.
+
+#![cfg(feature = "chk")]
+
+use std::time::Duration;
+
+use ama::chk;
+use ama::chk::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, Ordering};
+use ama::chk::sync::{Arc, Mutex};
+use ama::chk::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Checker self-tests: the message-passing litmus pair
+// ---------------------------------------------------------------------------
+
+/// Release/acquire message passing is correct — the checker must agree.
+#[test]
+fn litmus_mp_release_acquire_passes() {
+    chk::model(|| {
+        let data = Arc::new(AtomicU32::new(0));
+        let flag = Arc::new(AtomicBool::new(false));
+        let t = {
+            let (data, flag) = (data.clone(), flag.clone());
+            chk::thread::spawn(move || {
+                data.store(42, Ordering::Relaxed); // ord: Relaxed — published by the Release below
+                flag.store(true, Ordering::Release); // ord: Release — publishes `data`
+            })
+        };
+        // ord: Acquire — synchronizes with the Release store above.
+        if flag.load(Ordering::Acquire) {
+            assert_eq!(data.load(Ordering::Relaxed), 42); // ord: Relaxed — ordered by the flag
+        }
+        t.join().unwrap();
+    });
+}
+
+/// The same handshake with a Relaxed flag is broken: an acquiring-free
+/// reader may see `flag == true` but stale `data == 0`. The explorer
+/// must find that schedule — this is the checker's sensitivity proof
+/// for `Relaxed` vs `Acquire/Release` visibility.
+#[test]
+fn litmus_mp_relaxed_fails() {
+    let report = chk::model_expect_failure(|| {
+        let data = Arc::new(AtomicU32::new(0));
+        let flag = Arc::new(AtomicBool::new(false));
+        let t = {
+            let (data, flag) = (data.clone(), flag.clone());
+            chk::thread::spawn(move || {
+                data.store(42, Ordering::Relaxed); // ord: Relaxed — deliberately unpublished
+                flag.store(true, Ordering::Relaxed); // ord: Relaxed — deliberately weakened
+            })
+        };
+        // ord: Relaxed — deliberately weakened: no sync edge.
+        if flag.load(Ordering::Relaxed) {
+            assert_eq!(data.load(Ordering::Relaxed), 42); // ord: Relaxed — may see stale 0
+        }
+        t.join().unwrap();
+    });
+    assert!(report.contains("assert"), "unexpected failure report: {report}");
+}
+
+// ---------------------------------------------------------------------------
+// Model 1 — ReplySlab: fill vs wait_timeout-abandon race
+// ---------------------------------------------------------------------------
+
+/// The fill-vs-abandon race on one slot: whoever loses the
+/// `state.swap` hands the slot to the other side, and the slot must be
+/// recycled exactly once (a double free would corrupt the Treiber
+/// freelist; a leak would shrink the slab). Explored outcomes:
+/// reply delivered, or timeout with the filler recycling.
+#[test]
+fn slab_fill_vs_abandon_recycles_exactly_once() {
+    chk::model(|| {
+        let slab = ama::exec::ReplySlab::<u32>::new(2);
+        let ticket = slab.try_acquire().expect("fresh slab has a free slot");
+        let filler = {
+            let slab = slab.clone();
+            chk::thread::spawn(move || slab.fill(ticket, 7))
+        };
+        match slab.wait_timeout(ticket, Duration::from_millis(1)) {
+            Ok(v) => assert_eq!(v, 7),
+            Err(ama::exec::QueueError::Timeout) => {} // filler recycles
+            Err(e) => panic!("unexpected slab error: {e:?}"),
+        }
+        filler.join().unwrap();
+        // Exactly-once recycle: both slots acquirable, and no phantom
+        // third slot (a double push of the same index would produce one
+        // or corrupt the freelist into losing one).
+        let a = slab.try_acquire().expect("slot 1 back on the freelist");
+        let b = slab.try_acquire().expect("slot 2 back on the freelist");
+        assert!(slab.try_acquire().is_none(), "freelist grew a phantom slot");
+        slab.release_unused(a);
+        slab.release_unused(b);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Model 2 — StemCache seqlock: reader vs writer vs CAS-loser
+// ---------------------------------------------------------------------------
+
+fn analysis_with_root(r: u16) -> ama::analysis::Analysis {
+    ama::analysis::Analysis::from_result(
+        ama::StemResult { root: [r, r, r, r], kind: ama::MatchKind::Tri, cut: 1 },
+        ama::analysis::Algorithm::Linguistic,
+    )
+}
+
+/// Two writers race the version-CAS for the same slot while a reader
+/// runs the seqlock protocol. The reader must never observe a torn
+/// value (half of writer A's payload, half of writer B's): it sees
+/// `None` or one of the two complete analyses. After both writers
+/// retire, the slot must hold one complete value — the CAS loser drops
+/// its insert (`seqlock_cas_loser` is the eviction-free guarantee).
+#[test]
+fn seqlock_reader_never_tears_and_cas_loser_drops_insert() {
+    chk::model(|| {
+        let cache = ama::StemCache::new(1);
+        let w = ama::PackedWord(0x0641_0042_0043u128);
+        let opts = ama::analysis::EngineOpts::default();
+        let a1 = analysis_with_root(100);
+        let a2 = analysis_with_root(200);
+        let w1 = {
+            let (cache, a1) = (cache.clone(), a1.clone());
+            chk::thread::spawn(move || cache.insert(w, opts, &a1))
+        };
+        let w2 = {
+            let (cache, a2) = (cache.clone(), a2.clone());
+            chk::thread::spawn(move || cache.insert(w, opts, &a2))
+        };
+        // Reader: any result must be one of the two complete payloads.
+        if let Some(got) = cache.lookup(w, opts) {
+            assert!(got == a1 || got == a2, "torn seqlock read: {got:?}");
+        }
+        w1.join().unwrap();
+        w2.join().unwrap();
+        // CAS loser dropped its insert; the winner's payload is intact.
+        let fin = cache.lookup(w, opts).expect("a completed insert is visible");
+        assert!(fin == a1 || fin == a2, "torn value after quiescence: {fin:?}");
+    });
+}
+
+/// Hand-rolled seqlock with the production orderings (the shape
+/// `cache.rs` uses: Acquire entry load, Relaxed data loads certified by
+/// an Acquire fence + Relaxed re-check; writer claims odd, Release
+/// fence, Relaxed data stores, even Release store). TWO write rounds on
+/// purpose: one round alone cannot tear — the Acquire entry / Release
+/// publish pair covers it — the fences earn their keep when a reader
+/// holding a stale round-1 version re-checks against round-2 data
+/// (cross-checked in scripts/chk_sim_pr10.py, "seqlock fence-less").
+fn mini_seqlock_round(weakened: bool) {
+    let ver = Arc::new(AtomicU32::new(0));
+    let d0 = Arc::new(AtomicU64::new(0));
+    let d1 = Arc::new(AtomicU64::new(0));
+    let writer = {
+        let (ver, d0, d1) = (ver.clone(), d0.clone(), d1.clone());
+        chk::thread::spawn(move || {
+            for round in 0u32..2 {
+                let val = 7 + u64::from(round);
+                ver.store(2 * round + 1, Ordering::Relaxed); // ord: Relaxed — odd claim (single writer)
+                if !weakened {
+                    // ord: Release fence — publishes the odd claim before the data
+                    fence(Ordering::Release);
+                }
+                d0.store(val, Ordering::Relaxed); // ord: Relaxed — certified by the version protocol
+                d1.store(val, Ordering::Relaxed); // ord: Relaxed — certified by the version protocol
+                ver.store(2 * round + 2, Ordering::Release); // ord: Release — even store publishes
+            }
+        })
+    };
+    let v = ver.load(Ordering::Acquire); // ord: Acquire — seqlock read entry
+    if v != 0 && v % 2 == 0 {
+        let a = d0.load(Ordering::Relaxed); // ord: Relaxed — re-check certifies
+        let b = d1.load(Ordering::Relaxed); // ord: Relaxed — re-check certifies
+        if !weakened {
+            // ord: Acquire fence — orders the data loads before the re-check
+            fence(Ordering::Acquire);
+        }
+        // ord: Relaxed — the fence pair makes this re-check sound.
+        if ver.load(Ordering::Relaxed) == v {
+            assert!(a == b, "torn seqlock read: {a} vs {b}");
+        }
+    }
+    writer.join().unwrap();
+}
+
+#[test]
+fn seqlock_with_fences_never_tears() {
+    chk::model(|| mini_seqlock_round(false));
+}
+
+/// Sensitivity proof: strip the fence pair and the same protocol tears
+/// — the explorer must find the schedule where a reader validates
+/// round-2 data against a stale round-1 version.
+#[test]
+fn seqlock_without_fences_fails() {
+    let report = chk::model_expect_failure(|| mini_seqlock_round(true));
+    assert!(report.contains("torn seqlock read"), "unexpected report: {report}");
+}
+
+/// Direct demonstration of the weakened seqlock failing: run manually
+/// (`cargo test --features chk -- --ignored demo_`) to see the op trace
+/// the explorer reports for the torn read.
+#[test]
+#[ignore = "sensitivity demo: fails by design to print the torn-read trace"]
+fn demo_weakened_seqlock_trace() {
+    chk::model(|| mini_seqlock_round(true));
+}
+
+// ---------------------------------------------------------------------------
+// Model 3 — BoundedQueue: close racing pop_batch
+// ---------------------------------------------------------------------------
+
+/// A producer pushes two items and closes while the consumer drains
+/// with `pop_batch`. Close must wake the consumer and never lose items:
+/// every explored interleaving drains exactly `[1, 2]` before `Closed`.
+#[test]
+fn queue_close_race_loses_nothing() {
+    chk::model(|| {
+        let q = ama::exec::BoundedQueue::new(2);
+        let producer = {
+            let q = q.clone();
+            chk::thread::spawn(move || {
+                q.push(1u32).unwrap();
+                q.push(2u32).unwrap();
+                q.close();
+            })
+        };
+        let mut got = Vec::new();
+        loop {
+            match q.pop_batch(8, Duration::from_millis(1)) {
+                Ok(batch) => got.extend(batch),
+                Err(ama::exec::QueueError::Timeout) => continue, // producer not done yet
+                Err(ama::exec::QueueError::Closed) => break,
+                Err(e) => panic!("unexpected queue error: {e:?}"),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, vec![1, 2], "close dropped or reordered queued items");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Model 4 — CircuitBreaker: open→half-open single-trial admission
+// ---------------------------------------------------------------------------
+
+/// Once the breaker opens and the cooldown expires, two racing callers
+/// must resolve to exactly one half-open probe (the other is denied):
+/// the probe slot is the mutual exclusion the downstream endpoint's
+/// recovery depends on. The probe's success must close the breaker.
+#[test]
+fn breaker_half_open_admits_exactly_one_probe() {
+    chk::model(|| {
+        use ama::gateway::breaker::{Admission, BreakerConfig, BreakerState, CircuitBreaker};
+        let br = Arc::new(CircuitBreaker::new(BreakerConfig {
+            failure_threshold: 1,
+            cooldown: Duration::ZERO,
+        }));
+        br.record_failure(); // trips closed→open; cooldown 0 arms the trial
+        let t = {
+            let br = br.clone();
+            chk::thread::spawn(move || br.try_admit())
+        };
+        let here = br.try_admit();
+        let there = t.join().unwrap();
+        let probes = [&here, &there]
+            .iter()
+            .filter(|a| matches!(a, Admission::Probe(_)))
+            .count();
+        let denials = [&here, &there]
+            .iter()
+            .filter(|a| matches!(a, Admission::Denied { .. }))
+            .count();
+        assert_eq!((probes, denials), (1, 1), "probe slot not exclusive: {here:?} / {there:?}");
+        br.record_success();
+        assert_eq!(br.state(), BreakerState::Closed);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Model 5 — CoalesceMap: leader-crash drop-guard publication
+// ---------------------------------------------------------------------------
+
+/// A coalescing leader that aborts without completing (panic, early
+/// return) must still publish through its drop-guard: a follower parked
+/// on the slot wakes with the leader-aborted error instead of hanging
+/// until its deadline, and the key is retired from the table.
+#[test]
+fn coalescer_leader_crash_publishes_to_followers() {
+    chk::model(|| {
+        use ama::gateway::coalesce::{Claim, CoalesceMap};
+        let map = Arc::new(CoalesceMap::new());
+        let leader = match map.claim(7) {
+            Claim::Leader(l) => l,
+            Claim::Follower(_) => unreachable!("first claim must lead"),
+        };
+        let follower = {
+            let map = map.clone();
+            chk::thread::spawn(move || match map.claim(7) {
+                Claim::Follower(f) => {
+                    f.wait_deadline(Instant::now() + Duration::from_secs(5))
+                }
+                // The leader's drop already retired the key: this caller
+                // is a fresh leader; its own drop-guard publishes.
+                Claim::Leader(l) => {
+                    drop(l);
+                    None
+                }
+            })
+        };
+        drop(leader); // crash before completing
+        if let Some(outcome) = follower.join().unwrap() {
+            let err = outcome.expect_err("aborted leader cannot publish a success");
+            assert_eq!(err.code, ama::analysis::ErrorCode::Unavailable);
+        }
+        assert!(map.is_empty(), "crashed leader leaked its key");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PR 9 satellites — WriteBuf watermark counters, completion mailbox
+// ---------------------------------------------------------------------------
+
+/// The event loop's backpressure accounting (`loops.rs`): the loop
+/// thread owns the `WriteBuf` and its `paused` bool exclusively, and
+/// publishes only the `pauses` counter (Relaxed) plus a stop flag
+/// (Release). A monitor racing the loop must see a monotone prefix
+/// (never more pauses than transitions so far), and the join edge must
+/// make the final count exact.
+#[test]
+fn writebuf_watermark_pause_counter_is_exact_after_join() {
+    chk::model(|| {
+        let pauses = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let lp = {
+            let (pauses, stop) = (pauses.clone(), stop.clone());
+            chk::thread::spawn(move || {
+                let mut wb = ama::net::WriteBuf::new();
+                let mut paused = false;
+                let chunk = vec![0u8; ama::net::WRITE_HIGH_WATER + 1];
+                for _ in 0..2 {
+                    wb.push(&chunk);
+                    if !paused && wb.over_high_water() {
+                        paused = true;
+                        pauses.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+                    }
+                    let n = wb.len();
+                    wb.advance(n); // socket drained: resume
+                    if paused && wb.below_low_water() {
+                        paused = false;
+                    }
+                }
+                assert!(!paused, "drained buffer must resume reads");
+                stop.store(true, Ordering::Release); // ord: Release — stop flag
+            })
+        };
+        // Racing monitor read: a prefix of the final count, never more.
+        let seen = pauses.load(Ordering::Relaxed); // ord: Relaxed — stats
+        assert!(seen <= 2, "counter overshot: {seen}");
+        lp.join().unwrap();
+        assert!(stop.load(Ordering::Acquire)); // ord: Acquire — pairs with the Release store
+        // ord: Relaxed — the join edge orders this read after the loop.
+        assert_eq!(pauses.load(Ordering::Relaxed), 2, "pause transitions lost");
+    });
+}
+
+/// The completion-mailbox wakeup handshake (`loops.rs`): an offloaded
+/// worker pushes its payload into the mailbox *then* writes the waker
+/// (modeled as a Release flag — the pipe write the poller observes).
+/// A loop thread that consumes the waker byte (Acquire swap) is
+/// guaranteed to see the pushed payload on its next drain — no request
+/// can be stranded in the mailbox with the loop parked.
+#[test]
+fn completion_mailbox_wake_implies_visible_payload() {
+    chk::model(|| {
+        let mailbox: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let wake = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let (mailbox, wake) = (mailbox.clone(), wake.clone());
+            chk::thread::spawn(move || {
+                mailbox.lock().unwrap().push(17); // CompletionSender::send: push…
+                wake.store(true, Ordering::Release); // ord: Release — …then wake (publishes the push)
+            })
+        };
+        let mut got = std::mem::take(&mut *mailbox.lock().unwrap());
+        if got.is_empty() {
+            // About to park: the poller consumes the waker byte first.
+            // ord: AcqRel — the acquire half syncs with the worker's
+            // Release, so the drain below must see the push.
+            if wake.swap(false, Ordering::AcqRel) {
+                got = std::mem::take(&mut *mailbox.lock().unwrap());
+                assert_eq!(got, vec![17], "woken loop found an empty mailbox (lost completion)");
+            }
+        }
+        worker.join().unwrap();
+        let rest = std::mem::take(&mut *mailbox.lock().unwrap());
+        assert_eq!(got.len() + rest.len(), 1, "completion lost or duplicated");
+    });
+}
+
+/// Sensitivity proof for the mailbox protocol: invert the order (wake
+/// first, push after — the bug the `// ord:` comment in `loops.rs`
+/// guards against) and the loop can consume the wake, find the mailbox
+/// empty, and park with the payload stranded. The explorer must find it.
+#[test]
+fn completion_mailbox_wake_before_push_fails() {
+    let report = chk::model_expect_failure(|| {
+        let mailbox: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let wake = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let (mailbox, wake) = (mailbox.clone(), wake.clone());
+            chk::thread::spawn(move || {
+                wake.store(true, Ordering::Release); // ord: Release — deliberately wrong order
+                mailbox.lock().unwrap().push(17); // bug: push lands after the wake
+            })
+        };
+        let got = std::mem::take(&mut *mailbox.lock().unwrap());
+        // ord: AcqRel — consume the waker byte, then drain.
+        if got.is_empty() && wake.swap(false, Ordering::AcqRel) {
+            let drained = std::mem::take(&mut *mailbox.lock().unwrap());
+            assert!(!drained.is_empty(), "woken loop found an empty mailbox (lost completion)");
+        }
+        worker.join().unwrap();
+    });
+    assert!(report.contains("empty mailbox"), "unexpected report: {report}");
+}
+
+// ---------------------------------------------------------------------------
+// Audit regressions — orderings the `// ord:` sweep downgraded/kept
+// ---------------------------------------------------------------------------
+
+/// The stop-flag pattern every server/gateway/metrics thread now uses
+/// (Release store, Acquire poll — downgraded from SeqCst in the PR 10
+/// audit): the flag alone is a full handshake for everything the
+/// stopping thread wrote before it.
+#[test]
+fn stop_flag_release_acquire_handshake() {
+    chk::model(|| {
+        let progress = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let t = {
+            let (progress, stop) = (progress.clone(), stop.clone());
+            chk::thread::spawn(move || {
+                progress.store(9, Ordering::Relaxed); // ord: Relaxed — published by stop below
+                stop.store(true, Ordering::Release); // ord: Release — stop flag
+            })
+        };
+        // ord: Acquire — pairs with the Release store above.
+        if stop.load(Ordering::Acquire) {
+            assert_eq!(progress.load(Ordering::Relaxed), 9); // ord: Relaxed — ordered by stop
+        }
+        t.join().unwrap();
+    });
+}
+
+/// The coordinator's `failed_inits` counter (downgraded SeqCst→Relaxed
+/// in the audit): the RMW's atomicity — not its ordering — is what
+/// guarantees exactly one of N workers observes the final count and
+/// reports the all-failed condition.
+#[test]
+fn relaxed_counter_rmw_still_counts_exactly() {
+    chk::model(|| {
+        let fails = Arc::new(ama::chk::sync::AtomicUsize::new(0));
+        let workers = 2usize;
+        let last = Arc::new(AtomicU32::new(0));
+        let ts: Vec<_> = (0..workers)
+            .map(|_| {
+                let (fails, last) = (fails.clone(), last.clone());
+                chk::thread::spawn(move || {
+                    // ord: Relaxed — pure counter; atomicity does the work
+                    if fails.fetch_add(1, Ordering::Relaxed) + 1 == 2 {
+                        last.fetch_add(1, Ordering::Relaxed); // ord: Relaxed — stats
+                    }
+                })
+            })
+            .collect();
+        for t in ts {
+            t.join().unwrap();
+        }
+        // ord: Relaxed — join edges order these reads after both workers.
+        assert_eq!(fails.load(Ordering::Relaxed), 2, "lost update on Relaxed RMW");
+        // ord: Relaxed — same join-edge argument as the line above.
+        assert_eq!(last.load(Ordering::Relaxed), 1, "all-failed detection not exclusive");
+    });
+}

@@ -24,7 +24,7 @@ use ama::rng::SplitMix64;
 use ama::roots::RootSet;
 use ama::stemmer::Stemmer;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use ama::chk::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -91,7 +91,8 @@ fn chaos_kill_and_restart_replica_under_load_loses_nothing() {
                 client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
                 let mut rng = SplitMix64::new(0xC1A0 + id as u64);
                 let (mut ok, mut unavailable) = (0u64, 0u64);
-                while !stop.load(Ordering::SeqCst) {
+                // ord: Acquire — stop-flag poll pairing with the Release store.
+                while !stop.load(Ordering::Acquire) {
                     // 1–4 words per envelope, rotating through the vocab
                     let n = 1 + rng.index(4);
                     let batch: Vec<&str> =
@@ -141,7 +142,7 @@ fn chaos_kill_and_restart_replica_under_load_loses_nothing() {
     std::thread::sleep(Duration::from_millis(500));
     fleet.restart(0);
     std::thread::sleep(Duration::from_millis(500));
-    stop.store(true, Ordering::SeqCst);
+    stop.store(true, Ordering::Release); // ord: Release — stop flag
 
     let mut total_ok = 0u64;
     let mut total_unavailable = 0u64;

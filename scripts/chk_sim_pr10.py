@@ -1,0 +1,462 @@
+#!/usr/bin/env python3
+"""PR 10 oracle: cross-check the `chk` explorer against brute force.
+
+Two claims from `rust/src/chk/` are re-derived here in plain Python and
+checked exhaustively (repo tradition: `oracle_sweep_*.py`,
+`gateway_sim_pr7.py`, `server_sim_pr9.py` — 0 mismatches required):
+
+1. **Scheduler enumeration** (`sched.rs`): the unified `choose()` DFS
+   with prefix replay and backtracking enumerates *every* maximal
+   thread interleaving exactly once; with a CHESS-style preemption
+   bound k it enumerates exactly the interleavings with ≤ k forced
+   switches. Both are compared against independent brute-force
+   recursive enumeration.
+
+2. **Shadow visibility rule** (`shadow.rs`): the value-based weak
+   memory model (per-location store history; happens-before floor via
+   vector clocks; per-thread coherence floor; SC floor; AcqRel-strength
+   fences; RMWs reading newest) reproduces the textbook C11 litmus
+   outcomes: message passing forbids the stale read only with
+   Release/Acquire, store buffering forbids (0,0) only with SeqCst,
+   same-location reads never go backwards, relaxed RMWs never lose
+   updates, and the crossbeam-SeqLock fence pattern forbids torn reads
+   while the fence-less variant tears (the oracle-side checker
+   sensitivity case, mirroring `seqlock_without_fences_fails` in
+   rust/tests/chk_models.rs).
+
+Run: python3 scripts/chk_sim_pr10.py   (exit 0 = 0 mismatches)
+"""
+
+from __future__ import annotations
+
+import sys
+from itertools import product
+
+MAX_THREADS = 8
+STORE_HISTORY = 8
+
+RELAXED, ACQUIRE, RELEASE, ACQREL, SEQCST = range(5)
+
+
+def has_acquire(ord_):
+    return ord_ in (ACQUIRE, ACQREL, SEQCST)
+
+
+def has_release(ord_):
+    return ord_ in (RELEASE, ACQREL, SEQCST)
+
+
+# ---------------------------------------------------------------------------
+# Part 0 — shared DFS chooser (port of sched.rs ExecState::choose + the
+# Builder::run backtracking loop)
+# ---------------------------------------------------------------------------
+
+
+class Chooser:
+    """Replay a schedule prefix; extend with first-branch (0) beyond."""
+
+    def __init__(self, prefix):
+        self.schedule = [list(c) for c in prefix]
+        self.pos = 0
+
+    def choose(self, n):
+        if n <= 1:
+            return 0
+        if self.pos < len(self.schedule):
+            taken, arity = self.schedule[self.pos]
+            assert arity == n, f"nondeterministic replay: arity {arity} vs {n}"
+            self.pos += 1
+            return taken
+        self.schedule.append([0, n])
+        self.pos += 1
+        return 0
+
+
+def dfs_explore(run_once, max_schedules=500_000):
+    """`Builder::run` without the random-walk tail: exhaustive DFS.
+    `run_once(prefix)` must return (result, schedule). Yields results."""
+    prefix = []
+    results = []
+    while True:
+        result, schedule = run_once(prefix)
+        results.append(result)
+        assert len(results) <= max_schedules, "schedule budget blown"
+        nxt = [list(c) for c in schedule]
+        while nxt and nxt[-1][0] + 1 >= nxt[-1][1]:
+            nxt.pop()
+        if not nxt:
+            return results
+        nxt[-1][0] += 1
+        prefix = nxt
+
+
+# ---------------------------------------------------------------------------
+# Part 1 — scheduler enumeration vs brute force
+# ---------------------------------------------------------------------------
+
+
+def run_interleaving(counts, prefix, preemption_bound=None):
+    """One schedule of `len(counts)` threads with `counts[i]` visible
+    ops each, mirroring pick_next: a choose() after every op (and one
+    before the first), involuntary switches budgeted, the switch after
+    a thread's last op voluntary (finish edge)."""
+    ch = Chooser(prefix)
+    n = len(counts)
+    pcs = [0] * n
+    seq = []
+    preemptions = 0
+    cands = [i for i in range(n) if pcs[i] < counts[i]]
+    active = cands[ch.choose(len(cands))]
+    while True:
+        me = active
+        seq.append(me)
+        pcs[me] += 1
+        finished = pcs[me] >= counts[me]
+        cands = [i for i in range(n) if pcs[i] < counts[i]]
+        if not cands:
+            return tuple(seq), ch.schedule
+        if (
+            not finished
+            and preemption_bound is not None
+            and preemptions >= preemption_bound
+        ):
+            # Budget spent: forced self-continue (no choose consumed).
+            continue
+        nxt = cands[ch.choose(len(cands))]
+        if not finished and nxt != me:
+            preemptions += 1
+        active = nxt
+
+
+def brute_interleavings(counts):
+    out = []
+    remaining = list(counts)
+    acc = []
+
+    def rec():
+        if not any(remaining):
+            out.append(tuple(acc))
+            return
+        for i, r in enumerate(remaining):
+            if r:
+                remaining[i] -= 1
+                acc.append(i)
+                rec()
+                acc.pop()
+                remaining[i] += 1
+
+    rec()
+    return out
+
+
+def count_preemptions(seq, counts):
+    done = [0] * len(counts)
+    p = 0
+    for i, t in enumerate(seq):
+        done[t] += 1
+        if i + 1 < len(seq) and seq[i + 1] != t and done[t] < counts[t]:
+            p += 1
+    return p
+
+
+def check_scheduler():
+    mismatches = 0
+    for counts in [(3, 3), (2, 2, 2), (4, 2), (1, 1, 1, 1)]:
+        explored = dfs_explore(
+            lambda prefix, c=counts: run_interleaving(c, prefix)
+        )
+        brute = brute_interleavings(counts)
+        if sorted(explored) != sorted(brute):
+            print(f"MISMATCH unbounded {counts}: {len(explored)} explored "
+                  f"vs {len(brute)} brute")
+            mismatches += 1
+        if len(set(explored)) != len(explored):
+            print(f"MISMATCH unbounded {counts}: duplicate schedules")
+            mismatches += 1
+        print(f"  scheduler {counts}: {len(explored)} interleavings "
+              f"(brute force agrees)")
+        for bound in (0, 1, 2):
+            bounded = dfs_explore(
+                lambda prefix, c=counts, b=bound: run_interleaving(c, prefix, b)
+            )
+            expect = [s for s in brute if count_preemptions(s, counts) <= bound]
+            if sorted(bounded) != sorted(expect):
+                print(f"MISMATCH bound={bound} {counts}: {len(bounded)} "
+                      f"explored vs {len(expect)} brute")
+                mismatches += 1
+        print(f"  scheduler {counts}: preemption bounds 0/1/2 agree")
+    return mismatches
+
+
+# ---------------------------------------------------------------------------
+# Part 2 — shadow visibility rule (port of shadow.rs) on litmus programs
+# ---------------------------------------------------------------------------
+
+
+def vjoin(a, b):
+    return tuple(max(x, y) for x, y in zip(a, b))
+
+
+def vbump(c, me):
+    return tuple(x + 1 if i == me else x for i, x in enumerate(c))
+
+
+def vleq(a, b):
+    return all(x <= y for x, y in zip(a, b))
+
+
+ZERO = (0,) * MAX_THREADS
+
+
+class Shadow:
+    """Port of shadow.rs: thread clocks + per-location store history."""
+
+    def __init__(self, nthreads, nlocs, ch):
+        self.ch = ch
+        self.clock = [ZERO] * nthreads
+        self.acq_pending = [ZERO] * nthreads
+        self.rel_fence = [None] * nthreads
+        # per-loc: stores [(val, seq, clock, rel)], last_seen, last_sc
+        self.stores = [[(0, 1, ZERO, ZERO)] for _ in range(nlocs)]
+        self.last_seen = [[0] * nthreads for _ in range(nlocs)]
+        self.last_sc = [0] * nlocs
+        self.next_seq = [2] * nlocs
+
+    def _read_sync(self, me, ord_, rel):
+        if rel is not None:
+            if has_acquire(ord_):
+                self.clock[me] = vjoin(self.clock[me], rel)
+            else:
+                self.acq_pending[me] = vjoin(self.acq_pending[me], rel)
+
+    def load(self, me, loc, ord_):
+        floor = self.last_seen[loc][me]
+        if ord_ == SEQCST:
+            floor = max(floor, self.last_sc[loc])
+        for (_, seq, sclock, _) in self.stores[loc]:
+            if vleq(sclock, self.clock[me]):
+                floor = max(floor, seq)
+        cands = [i for i, s in enumerate(self.stores[loc]) if s[1] >= floor]
+        assert cands, "newest store always readable"
+        k = self.ch.choose(len(cands)) if len(cands) > 1 else 0
+        val, seq, _, rel = self.stores[loc][cands[k]]
+        self.last_seen[loc][me] = max(self.last_seen[loc][me], seq)
+        self._read_sync(me, ord_, rel)
+        return val
+
+    def store(self, me, loc, ord_, val):
+        self.clock[me] = vbump(self.clock[me], me)
+        rel = self.clock[me] if has_release(ord_) else self.rel_fence[me]
+        seq = self.next_seq[loc]
+        self.next_seq[loc] += 1
+        self.stores[loc].append((val, seq, self.clock[me], rel))
+        self.last_seen[loc][me] = seq
+        if ord_ == SEQCST:
+            self.last_sc[loc] = seq
+        if len(self.stores[loc]) > STORE_HISTORY:
+            del self.stores[loc][: len(self.stores[loc]) - STORE_HISTORY]
+
+    def rmw(self, me, loc, ord_, f):
+        """f(old) -> new or None (failed CAS). Reads newest. Returns old."""
+        val, seq, _, rel = self.stores[loc][-1]
+        self.last_seen[loc][me] = max(self.last_seen[loc][me], seq)
+        new = f(val)
+        if new is not None:
+            self._read_sync(me, ord_, rel)
+            self.clock[me] = vbump(self.clock[me], me)
+            nrel = self.clock[me] if has_release(ord_) else self.rel_fence[me]
+            nseq = self.next_seq[loc]
+            self.next_seq[loc] += 1
+            self.stores[loc].append((new, nseq, self.clock[me], nrel))
+            self.last_seen[loc][me] = nseq
+            if ord_ == SEQCST:
+                self.last_sc[loc] = nseq
+        else:
+            self._read_sync(me, RELAXED, rel)
+        return val
+
+    def fence(self, me, ord_):
+        if has_acquire(ord_):
+            self.clock[me] = vjoin(self.clock[me], self.acq_pending[me])
+            self.acq_pending[me] = ZERO
+        if has_release(ord_):
+            self.rel_fence[me] = self.clock[me]
+
+
+def run_litmus(threads, nlocs, prefix):
+    """threads: per-thread list of closures op(shadow, me, regs)."""
+    ch = Chooser(prefix)
+    sh = Shadow(len(threads), nlocs, ch)
+    regs = {}
+    pcs = [0] * len(threads)
+    cands = [i for i in range(len(threads)) if pcs[i] < len(threads[i])]
+    active = cands[ch.choose(len(cands))]
+    while True:
+        me = active
+        threads[me][pcs[me]](sh, me, regs)
+        pcs[me] += 1
+        cands = [i for i in range(len(threads)) if pcs[i] < len(threads[i])]
+        if not cands:
+            return (regs, sh), ch.schedule
+        active = cands[ch.choose(len(cands))]
+
+
+def litmus_outcomes(threads, nlocs, project):
+    results = dfs_explore(
+        lambda prefix: run_litmus(threads, nlocs, prefix)
+    )
+    return {project(regs, sh) for regs, sh in results}
+
+
+def check_visibility():
+    mismatches = 0
+
+    def expect(name, got, want):
+        nonlocal mismatches
+        if got != want:
+            print(f"MISMATCH {name}: got {sorted(got)}, want {sorted(want)}")
+            mismatches += 1
+        else:
+            print(f"  litmus {name}: {sorted(got)} (C11 set matches)")
+
+    X, Y = 0, 1
+
+    def mp(store_ord, load_ord):
+        writer = [
+            lambda sh, me, r: sh.store(me, X, RELAXED, 1),
+            lambda sh, me, r: sh.store(me, Y, store_ord, 1),
+        ]
+        reader = [
+            lambda sh, me, r: r.__setitem__("flag", sh.load(me, Y, load_ord)),
+            lambda sh, me, r: r.__setitem__("data", sh.load(me, X, RELAXED)),
+        ]
+        return litmus_outcomes(
+            [writer, reader], 2, lambda r, sh: (r["flag"], r["data"])
+        )
+
+    # Message passing: Release/Acquire forbids the stale (1, 0) read.
+    expect("MP rel/acq", mp(RELEASE, ACQUIRE), {(0, 0), (0, 1), (1, 1)})
+    # All-relaxed allows it — the visibility gap litmus_mp_relaxed_fails
+    # pins on the Rust side.
+    expect("MP relaxed", mp(RELAXED, RELAXED),
+           {(0, 0), (0, 1), (1, 0), (1, 1)})
+
+    def sb(ord_):
+        a = [
+            lambda sh, me, r: sh.store(me, X, ord_, 1),
+            lambda sh, me, r: r.__setitem__("r1", sh.load(me, Y, ord_)),
+        ]
+        b = [
+            lambda sh, me, r: sh.store(me, Y, ord_, 1),
+            lambda sh, me, r: r.__setitem__("r2", sh.load(me, X, ord_)),
+        ]
+        return litmus_outcomes([a, b], 2, lambda r, sh: (r["r1"], r["r2"]))
+
+    # Store buffering: SeqCst forbids (0, 0); weaker orders allow it.
+    expect("SB seqcst", sb(SEQCST), {(0, 1), (1, 0), (1, 1)})
+    expect("SB rel/acq-free", sb(RELAXED),
+           {(0, 0), (0, 1), (1, 0), (1, 1)})
+
+    # Coherence (CoRR): same-location reads never go backwards.
+    writer = [
+        lambda sh, me, r: sh.store(me, X, RELAXED, 1),
+        lambda sh, me, r: sh.store(me, X, RELAXED, 2),
+    ]
+    reader = [
+        lambda sh, me, r: r.__setitem__("r1", sh.load(me, X, RELAXED)),
+        lambda sh, me, r: r.__setitem__("r2", sh.load(me, X, RELAXED)),
+    ]
+    corr = litmus_outcomes([writer, reader], 1, lambda r, sh: (r["r1"], r["r2"]))
+    backwards = {(a, b) for (a, b) in corr if b < a}
+    expect("CoRR no-backwards", backwards, set())
+
+    # Relaxed RMWs read newest: three fetch_adds never lose an update
+    # (checked on the modification order itself — a racing *load* may
+    # legally be stale, the RMW chain may not).
+    def incr(sh, me, r):
+        sh.rmw(me, X, RELAXED, lambda v: v + 1)
+
+    finals = litmus_outcomes(
+        [[incr], [incr], [incr]],
+        1,
+        lambda r, sh: sh.stores[X][-1][0],
+    )
+    expect("RMW lost-update", finals, {3})
+
+    # Crossbeam-SeqLock pattern (cache.rs): writer claims odd, Release
+    # fence, relaxed data stores, even Release store; reader Acquire
+    # entry, relaxed data loads, Acquire fence, relaxed re-check. One
+    # round alone cannot tear (the Acquire entry / Release publish pair
+    # covers it); the fences earn their keep across TWO rounds, where a
+    # fence-less reader can validate round-2 data against a stale
+    # round-1 version — the oracle-side sensitivity case.
+    V, D0, D1 = 0, 1, 2
+
+    def seqlock(fenced):
+        def w_round(val, odd, even):
+            def claim(sh, me, r):
+                sh.store(me, V, RELAXED, odd)
+                if fenced:
+                    sh.fence(me, RELEASE)
+
+            def d0(sh, me, r):
+                sh.store(me, D0, RELAXED, val)
+
+            def d1(sh, me, r):
+                sh.store(me, D1, RELAXED, val)
+
+            def publish(sh, me, r):
+                sh.store(me, V, RELEASE, even)
+
+            return [claim, d0, d1, publish]
+
+        def r_entry(sh, me, r):
+            r["v"] = sh.load(me, V, ACQUIRE)
+
+        def r_data(sh, me, r):
+            if r["v"] % 2 == 0 and r["v"] != 0:
+                r["a"] = sh.load(me, D0, RELAXED)
+                r["b"] = sh.load(me, D1, RELAXED)
+
+        def r_recheck(sh, me, r):
+            if r["v"] % 2 == 0 and r["v"] != 0:
+                if fenced:
+                    sh.fence(me, ACQUIRE)
+                v2 = sh.load(me, V, RELAXED)
+                r["torn"] = v2 == r["v"] and r["a"] != r["b"]
+            else:
+                r["torn"] = False
+
+        writer = w_round(7, 1, 2) + w_round(8, 3, 4)
+        return litmus_outcomes(
+            [writer, [r_entry, r_data, r_recheck]],
+            3,
+            lambda r, sh: r["torn"],
+        )
+
+    expect("seqlock fenced never tears", seqlock(True), {False})
+    torn = seqlock(False)
+    if True not in torn:
+        print("MISMATCH seqlock fence-less: torn read not found "
+              "(checker sensitivity lost)")
+        mismatches += 1
+    else:
+        print("  litmus seqlock fence-less: torn read found "
+              "(sensitivity case holds)")
+    return mismatches
+
+
+def main():
+    print("== chk oracle part 1: DFS scheduler vs brute-force enumeration ==")
+    m = check_scheduler()
+    print("== chk oracle part 2: shadow visibility rule vs C11 litmus sets ==")
+    m += check_visibility()
+    if m:
+        print(f"chk_sim_pr10: FAIL — {m} mismatch(es)")
+        return 1
+    print("chk_sim_pr10: OK — 0 mismatches")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

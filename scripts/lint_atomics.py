@@ -1,0 +1,273 @@
+#!/usr/bin/env python3
+"""Atomic-ordering lint for the lock-free core (PR 10).
+
+Enforces the repo's memory-ordering discipline over ``rust/src/**.rs``
+and ``rust/tests/**.rs`` (the `chk` facade itself — ``rust/src/chk/`` —
+is exempt; it is the one place allowed to touch ``std::sync::atomic``):
+
+  (a) no direct ``std::sync::atomic`` imports/paths outside the facade —
+      concurrent code must go through ``crate::chk::sync`` so the model
+      checker can instrument it under ``--features chk``;
+  (b) every ``Ordering::<Variant>`` site carries a ``// ord:``
+      justification comment, either trailing on the same line or in the
+      comment block immediately above the statement;
+  (c) ``SeqCst`` justifications must actually claim cross-variable
+      ordering (keywords: "cross", "total order", "dekker",
+      "store->load"/"store→load") — single-variable protocols get
+      Release/Acquire or Relaxed, not a silent seq-cst tax;
+  (d) no use-aliased ``Ordering`` variants (``use ...Ordering::Relaxed``
+      or ``Ordering::* as``) — bare ``Relaxed`` in code hides the
+      ordering from review and from this lint.
+
+Usage:
+    python3 scripts/lint_atomics.py              # lint the repo
+    python3 scripts/lint_atomics.py --self-test  # prove the rules fire
+
+Exit status is non-zero on any violation (and on a failed self-test),
+so ``scripts/verify.sh`` can gate on it without a Rust toolchain.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCAN_ROOTS = ["rust/src", "rust/tests"]
+# The facade may (must) use std::sync::atomic directly.
+EXEMPT = re.compile(r"rust/src/chk(/|$)")
+
+ORD_SITE = re.compile(r"\bOrdering::(Relaxed|Acquire|Release|AcqRel|SeqCst)\b")
+ORD_TAG = "// ord:"
+SEQCST_KEYWORDS = re.compile(
+    r"cross|total\s+order|dekker|store\s*(->|→)\s*load", re.IGNORECASE
+)
+DIRECT_ATOMIC = re.compile(r"\bstd::sync::atomic\b")
+ALIASED_ORDERING = re.compile(
+    r"\buse\b[^;]*\bOrdering::(\{|Relaxed|Acquire|Release|AcqRel|SeqCst|\*)"
+)
+# Lines that terminate the previous statement; walking upward past one
+# of these means we've left the current statement.
+STMT_BREAK = (";", "{", "}")
+
+
+def is_comment(line: str) -> bool:
+    s = line.strip()
+    return s.startswith("//")
+
+
+def code_part(line: str) -> str:
+    """Strip a trailing // comment (crude: fine for this codebase,
+    which has no string literals containing `//` on Ordering lines)."""
+    idx = line.find("//")
+    return line if idx < 0 else line[:idx]
+
+
+def statement_start(lines: list[str], i: int) -> int:
+    """Walk upward from line *i* to the first line of its statement:
+    stop when the previous line is blank, a comment, or ends a prior
+    statement (';', '{', '}'). Lines ending in ',', operators, '(' etc.
+    are treated as continuations of the same statement."""
+    start = i
+    while start > 0:
+        prev = lines[start - 1].strip()
+        if not prev or is_comment(prev) or prev.endswith(STMT_BREAK):
+            break
+        start -= 1
+    return start
+
+
+def justification(lines: list[str], i: int) -> str | None:
+    """Return the `// ord:` justification text covering line *i*, or
+    None if the site is unannotated. Accepts a trailing comment on any
+    line of the statement, or a `// ord:` line in the contiguous
+    comment block immediately above the statement."""
+    start = statement_start(lines, i)
+    parts = []
+    # Trailing comments on the statement's own lines.
+    for k in range(start, i + 1):
+        idx = lines[k].find("//")
+        if idx >= 0 and ORD_TAG in lines[k][idx:]:
+            parts.append(lines[k][idx:])
+    # The contiguous comment block directly above the statement — take
+    # the whole block, so a multi-line justification counts in full.
+    j = start - 1
+    block = []
+    while j >= 0 and is_comment(lines[j]):
+        block.append(lines[j].strip())
+        j -= 1
+    block_text = " ".join(reversed(block))
+    if ORD_TAG in block_text:
+        parts.append(block_text)
+    if not parts:
+        return None
+    return " ".join(parts)
+
+
+def lint_text(relpath: str, text: str) -> list[str]:
+    """Lint one file's contents; returns human-readable violations."""
+    out = []
+    exempt = bool(EXEMPT.search(relpath))
+    lines = text.split("\n")
+    for i, line in enumerate(lines):
+        n = i + 1
+        code = code_part(line)
+        if not exempt and DIRECT_ATOMIC.search(code):
+            out.append(
+                f"{relpath}:{n}: [a] direct std::sync::atomic use outside "
+                f"the chk facade (route through crate::chk::sync)"
+            )
+        if ALIASED_ORDERING.search(code):
+            out.append(
+                f"{relpath}:{n}: [d] use-aliased Ordering variant — write "
+                f"Ordering::<Variant> at each site so the lint can see it"
+            )
+        if exempt or is_comment(line):
+            continue
+        m = ORD_SITE.search(code)
+        if not m:
+            continue
+        just = justification(lines, i)
+        if just is None:
+            out.append(
+                f"{relpath}:{n}: [b] Ordering::{m.group(1)} without a "
+                f"same-line-or-above '// ord:' justification"
+            )
+        elif m.group(1) == "SeqCst" and not SEQCST_KEYWORDS.search(just):
+            out.append(
+                f"{relpath}:{n}: [c] SeqCst justification does not claim "
+                f"cross-variable ordering (say why Release/Acquire is not "
+                f"enough: cross/total order/dekker/store->load)"
+            )
+    return out
+
+
+def lint_repo() -> int:
+    violations = []
+    files = 0
+    sites = 0
+    for root in SCAN_ROOTS:
+        for path in sorted((REPO / root).rglob("*.rs")):
+            rel = path.relative_to(REPO).as_posix()
+            text = path.read_text(encoding="utf-8")
+            files += 1
+            if not EXEMPT.search(rel):
+                sites += sum(
+                    1
+                    for ln in text.split("\n")
+                    if not is_comment(ln) and ORD_SITE.search(code_part(ln))
+                )
+            violations.extend(lint_text(rel, text))
+    for v in violations:
+        print(v)
+    status = "FAIL" if violations else "OK"
+    print(
+        f"lint_atomics: {status} — {files} files, {sites} Ordering sites, "
+        f"{len(violations)} violation(s)"
+    )
+    return 1 if violations else 0
+
+
+# ---------------------------------------------------------------- self-test
+
+SELFTEST_CASES = [
+    # (name, expect_rule_or_None, snippet)
+    (
+        "direct-import",
+        "[a]",
+        "use std::sync::atomic::{AtomicU32, Ordering};\n",
+    ),
+    (
+        "inline-path",
+        "[a]",
+        "fn f() { let x = std::sync::atomic::AtomicU32::new(0); }\n",
+    ),
+    (
+        "unannotated",
+        "[b]",
+        "fn f(a: &AtomicU32) { a.load(Ordering::Acquire); }\n",
+    ),
+    (
+        "comment-too-far",
+        "[b]",
+        "// ord: Acquire — stale, detached by a statement boundary.\n"
+        "fn g() {}\n"
+        "fn f(a: &AtomicU32) {\n"
+        "    a.load(Ordering::Acquire);\n"
+        "}\n",
+    ),
+    (
+        "seqcst-weak-justification",
+        "[c]",
+        "fn f(a: &AtomicU32) {\n"
+        "    // ord: SeqCst — to be safe.\n"
+        "    a.load(Ordering::SeqCst);\n"
+        "}\n",
+    ),
+    (
+        "aliased-variant",
+        "[d]",
+        "use crate::chk::sync::atomic::Ordering::Relaxed;\n",
+    ),
+    (
+        "aliased-brace",
+        "[d]",
+        "use crate::chk::sync::atomic::Ordering::{Acquire, Release};\n",
+    ),
+    (
+        "clean-same-line",
+        None,
+        "fn f(a: &AtomicU32) {\n"
+        "    a.load(Ordering::Relaxed); // ord: Relaxed — stats\n"
+        "}\n",
+    ),
+    (
+        "clean-comment-above-multiline-stmt",
+        None,
+        "fn f(a: &AtomicU32) {\n"
+        "    // ord: SeqCst — store->load Dekker pair with `starving`\n"
+        "    // (cross-variable); a total order is required.\n"
+        "    match a\n"
+        "        .compare_exchange(0, 1, Ordering::SeqCst, Ordering::SeqCst)\n"
+        "    {\n"
+        "        _ => {}\n"
+        "    }\n"
+        "}\n",
+    ),
+    (
+        "clean-facade-exempt",
+        None,
+        # Scanned as if it lived inside the facade: rule (a) must not fire.
+        "use std::sync::atomic::{AtomicU32, Ordering};\n",
+    ),
+]
+
+
+def self_test() -> int:
+    failures = []
+    for name, want, snippet in SELFTEST_CASES:
+        rel = (
+            "rust/src/chk/selftest.rs"
+            if name == "clean-facade-exempt"
+            else "rust/src/selftest.rs"
+        )
+        got = lint_text(rel, snippet)
+        if want is None:
+            if got:
+                failures.append(f"{name}: expected clean, got {got}")
+        else:
+            if not any(want in v for v in got):
+                failures.append(f"{name}: expected a {want} violation, got {got}")
+    if failures:
+        for f in failures:
+            print("self-test FAIL:", f)
+        return 1
+    print(f"lint_atomics self-test OK: {len(SELFTEST_CASES)} cases")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--self-test" in sys.argv[1:]:
+        sys.exit(self_test())
+    sys.exit(lint_repo())

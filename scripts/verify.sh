@@ -3,11 +3,30 @@
 #
 #   scripts/verify.sh          # build + tests + clippy + 5s bench smoke
 #   scripts/verify.sh --quick  # build + tests only
+#   scripts/verify.sh --deep   # everything + miri/TSan when nightly exists
 #
 # Referenced from ROADMAP.md; keep it green before merging.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Toolchain-free gates first: the atomic-ordering lint and the
+# scheduler/shadow-memory oracle (PR 10) are pure python and must pass
+# even on hosts without cargo.
+echo "== atomic-ordering lint (facade discipline + // ord: sites) =="
+if command -v python3 >/dev/null 2>&1; then
+  python3 scripts/lint_atomics.py
+  python3 scripts/lint_atomics.py --self-test
+else
+  echo "python3 not installed; skipping atomic-ordering lint"
+fi
+
+echo "== chk oracle (python port of scheduler + shadow memory, litmus) =="
+if command -v python3 >/dev/null 2>&1; then
+  python3 scripts/chk_sim_pr10.py
+else
+  echo "python3 not installed; skipping chk oracle"
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
@@ -23,8 +42,33 @@ fi
 echo "== lint: cargo clippy -- -D warnings =="
 if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings
+  echo "== lint: cargo clippy --features chk -- -D warnings =="
+  cargo clippy --features chk --all-targets -- -D warnings
 else
   echo "clippy not installed; skipping (install with 'rustup component add clippy')"
+fi
+
+echo "== chk models (exhaustive interleavings of the lock-free core) =="
+cargo test --features chk --test chk_models
+
+if [[ "${1:-}" == "--deep" ]]; then
+  echo "== deep: miri + ThreadSanitizer (nightly-only, best effort) =="
+  if command -v rustup >/dev/null 2>&1 \
+      && rustup toolchain list 2>/dev/null | grep -q nightly; then
+    if rustup component list --toolchain nightly 2>/dev/null \
+        | grep -q 'miri.*(installed)'; then
+      echo "-- deep: cargo +nightly miri test --"
+      cargo +nightly miri test -q
+    else
+      echo "deep: miri component not installed on nightly — skipping miri"
+    fi
+    echo "-- deep: ThreadSanitizer test pass --"
+    RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -q \
+      --target "$(rustc -vV | sed -n 's/host: //p')"
+  else
+    echo "deep: no nightly toolchain detected — miri/TSan not available," \
+      "skipping (model checker + lint + oracle above still ran)"
+  fi
 fi
 
 echo "== bench smoke (~5s, AMA_BENCH_FAST; incl. packed kernel + cache rows) =="
